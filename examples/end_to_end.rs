@@ -1,0 +1,124 @@
+//! End-to-end driver (DESIGN.md §6 "Fig 1" row): proves all three layers
+//! compose on a real workload.
+//!
+//!   L1/L2  Pallas scoring kernel, AOT-lowered to HLO text
+//!   RT     rust PJRT runtime loads + executes the artifact
+//!   L3     SPTLB coordinator runs multi-round balancing on a drifting
+//!          synthetic tier fleet (collect → construct → solve → execute)
+//!
+//! The run reports the paper's headline metric — per-resource tier
+//! balance before/after — plus device-path statistics, and is recorded in
+//! EXPERIMENTS.md.
+//!
+//! Usage: cargo run --release --example end_to_end  (requires `make artifacts`)
+
+use sptlb::coordinator::{Coordinator, CoordinatorConfig};
+use sptlb::rebalancer::problem::{GoalWeights, Problem};
+use sptlb::rebalancer::scoring::score_assignment;
+use sptlb::rebalancer::LocalSearch;
+use sptlb::runtime::PjrtScorer;
+use sptlb::sptlb::SptlbConfig;
+use sptlb::util::stats::max_abs_dev_from_mean;
+use sptlb::util::timer::{Deadline, Stopwatch};
+use sptlb::workload::{generate, WorkloadSpec};
+use std::time::Duration;
+
+fn spread(utils: &[sptlb::model::ResourceVec], r: usize) -> f64 {
+    max_abs_dev_from_mean(&utils.iter().map(|u| u.0[r] * 100.0).collect::<Vec<_>>())
+}
+
+fn main() -> anyhow::Result<()> {
+    sptlb::util::logger::init();
+    println!("=== SPTLB end-to-end driver ===\n");
+
+    // ---------------------------------------------------------------
+    // Stage A: device-path balancing — LocalSearch ranking whole
+    // neighborhoods through the AOT Pallas artifact via PJRT.
+    // ---------------------------------------------------------------
+    let bed = generate(&WorkloadSpec::paper());
+    let problem = Problem::build(
+        &bed.apps,
+        &bed.tiers,
+        bed.initial.clone(),
+        0.10,
+        GoalWeights::default(),
+    )?;
+    let (initial_score, _) = score_assignment(&problem, &problem.initial.clone());
+
+    println!("[A] device path: LocalSearch batched through artifacts/ (PJRT CPU)");
+    let mut scorer = PjrtScorer::from_default_dir()?;
+    let sw = Stopwatch::start();
+    let sol_device =
+        LocalSearch::with_seed(7).solve_batched(&problem, Deadline::after_ms(2000), &mut scorer);
+    let device_ms = sw.elapsed_ms();
+    let sw = Stopwatch::start();
+    let sol_cpu = LocalSearch::with_seed(7).solve(&problem, Deadline::after_ms(2000));
+    let cpu_ms = sw.elapsed_ms();
+    println!(
+        "    incumbent score {initial_score:.3} -> device {:.3} ({} moves, {:.0}ms, {} dispatches, {} candidates)",
+        sol_device.score,
+        sol_device.assignment.move_count_from(&problem.initial),
+        device_ms,
+        scorer.dispatches,
+        scorer.scored,
+    );
+    println!(
+        "    incumbent score {initial_score:.3} -> cpu    {:.3} ({} moves, {:.0}ms incremental scorer)",
+        sol_cpu.score,
+        sol_cpu.assignment.move_count_from(&problem.initial),
+        cpu_ms,
+    );
+    anyhow::ensure!(sol_device.score < initial_score, "device path must improve");
+
+    // ---------------------------------------------------------------
+    // Stage B: the leader loop — 10 rounds over a drifting fleet with
+    // arrivals, manual_cnst co-operation with the region/host schedulers.
+    // ---------------------------------------------------------------
+    println!("\n[B] coordinator: 10 rounds, drifting demand, app arrivals, manual_cnst");
+    let cfg = CoordinatorConfig {
+        sptlb: SptlbConfig {
+            timeout: Duration::from_millis(120),
+            ..SptlbConfig::default()
+        },
+        drift_sigma: 0.05,
+        arrival_prob: 0.3,
+        ..CoordinatorConfig::default()
+    };
+    let mut coordinator = Coordinator::from_testbed(cfg, bed.clone());
+    let reports = coordinator.run(10);
+
+    let first = &reports[0];
+    let last = reports.last().unwrap();
+    println!("    round  moves  imbalance  p99_ms  pipeline_ms");
+    for rec in &coordinator.log {
+        println!(
+            "    {:>5}  {:>5}  {:>9.3}  {:>6.0}  {:>11.0}",
+            rec.round, rec.moves_executed, rec.worst_imbalance, rec.p99_latency_ms, rec.pipeline_ms
+        );
+    }
+
+    // ---------------------------------------------------------------
+    // Headline metric (Fig. 3): spread narrowing on all three resources.
+    // ---------------------------------------------------------------
+    println!("\n[C] headline: per-resource max deviation from mean utilization (pp)");
+    println!("    resource   initial   round1   round10");
+    for (r, name) in ["cpu", "mem", "tasks"].iter().enumerate() {
+        println!(
+            "    {name:<8}  {:>7.1}  {:>7.1}  {:>8.1}",
+            spread(&first.initial_utilization, r),
+            spread(&first.projected_utilization, r),
+            spread(&last.projected_utilization, r),
+        );
+    }
+    let service = coordinator.metrics.to_json().pretty();
+    println!("\n[D] service metrics\n{service}");
+
+    for (r, name) in ["cpu", "mem", "tasks"].iter().enumerate() {
+        anyhow::ensure!(
+            spread(&first.projected_utilization, r) < spread(&first.initial_utilization, r),
+            "{name} spread must narrow in round 1"
+        );
+    }
+    println!("end_to_end OK");
+    Ok(())
+}

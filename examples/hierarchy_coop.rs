@@ -1,0 +1,71 @@
+//! Figure-2 demo: the co-operation protocol between SPTLB and the
+//! lower-level region/host schedulers, with a round-by-round trace.
+//!
+//! Shows the full loop: SPTLB proposes a mapping → region scheduler
+//! rejects moves that leave an app far from its data source or use a
+//! high-latency transition → host scheduler rejects unpackable tiers →
+//! rejections come back as avoid constraints → SPTLB re-solves.
+//!
+//! Usage: cargo run --release --example hierarchy_coop
+
+use sptlb::hierarchy::host::HostScheduler;
+use sptlb::hierarchy::protocol::{CoopConfig, CoopProtocol};
+use sptlb::hierarchy::region::RegionScheduler;
+use sptlb::rebalancer::problem::{GoalWeights, Problem};
+use sptlb::rebalancer::solution::SolverKind;
+use sptlb::util::timer::Deadline;
+use sptlb::workload::{generate, WorkloadSpec};
+
+fn main() {
+    let bed = generate(&WorkloadSpec::paper());
+    let mut problem = Problem::build(
+        &bed.apps,
+        &bed.tiers,
+        bed.initial.clone(),
+        0.10,
+        GoalWeights::default(),
+    )
+    .expect("paper testbed");
+
+    // A deliberately strict region scheduler so the trace shows rejections.
+    let mut region = RegionScheduler::new(bed.latency.clone(), 30.0);
+    region.transition_p99_budget_ms = 110.0;
+    let host = HostScheduler::uniform(&bed.tiers, 12);
+    let proto = CoopProtocol::new(
+        region,
+        host,
+        CoopConfig { max_rounds: 8, solver: SolverKind::LocalSearch, seed: 3 },
+    );
+
+    let allowed_before: usize = problem.apps.iter().map(|a| a.allowed.len()).sum();
+    let out = proto.run(&mut problem, &bed.apps, &bed.tiers, Deadline::after_ms(600));
+    let allowed_after: usize = problem.apps.iter().map(|a| a.allowed.len()).sum();
+
+    println!("round  proposed  region_rej  host_rej  avoids_added      score");
+    for r in &out.rounds {
+        println!(
+            "{:>5}  {:>8}  {:>10}  {:>8}  {:>12}  {:>9.3}",
+            r.round, r.proposed_moves, r.region_rejects, r.host_rejects, r.avoid_edges_added, r.score
+        );
+    }
+    println!(
+        "\nfully accepted: {} after {} round(s), {:.0} ms",
+        out.fully_accepted,
+        out.rounds.len(),
+        out.elapsed.as_secs_f64() * 1e3
+    );
+    println!(
+        "avoid constraints shrank allowed placements: {} -> {} (Σ|allowed| over apps)",
+        allowed_before, allowed_after
+    );
+    println!(
+        "tier-level transition bans accumulated: {}",
+        problem.forbidden_transitions.len()
+    );
+    println!(
+        "final: {} moves, score {:.3}",
+        out.solution.moves(&problem).len(),
+        out.solution.score
+    );
+    println!("\nhierarchy_coop OK");
+}

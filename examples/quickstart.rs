@@ -1,0 +1,48 @@
+//! Quickstart: the 20-line tour of the public API.
+//!
+//! Generates the paper-shaped testbed, runs one SPTLB balancing pass, and
+//! prints before/after tier utilizations.
+//!
+//! Usage: cargo run --release --example quickstart
+
+use sptlb::metadata::MetadataStore;
+use sptlb::sptlb::{Sptlb, SptlbConfig};
+use sptlb::workload::{generate, WorkloadSpec};
+
+fn main() {
+    // 1. A testbed: 5 tiers, 120 heavy-tailed apps, paper SLO mapping,
+    //    tier 3 initially over-utilized (swap in your own fleet here).
+    let bed = generate(&WorkloadSpec::paper());
+    let store = MetadataStore::from_apps(bed.apps.clone()).expect("unique app ids");
+
+    // 2. The balancer with default knobs (LocalSearch, 10% movement,
+    //    manual_cnst co-operation with the region/host schedulers).
+    let sptlb = Sptlb::new(SptlbConfig::default());
+
+    // 3. One pipeline run: collect -> construct -> solve -> execute.
+    let report = sptlb.balance(&store, &bed.tiers, &bed.latency, &bed.initial);
+
+    println!("moves recommended: {}", report.solution.moves(&report.problem).len());
+    println!("worst-case move latency (p99): {:.0} ms", report.p99_latency_ms);
+    println!("\ntier     cpu%  (initial -> projected)");
+    for (i, (before, after)) in report
+        .initial_utilization
+        .iter()
+        .zip(&report.projected_utilization)
+        .enumerate()
+    {
+        println!(
+            "tier{}:  {:5.1} -> {:5.1}",
+            i + 1,
+            before.cpu() * 100.0,
+            after.cpu() * 100.0
+        );
+    }
+    assert!(report.violations.iter().all(|v| {
+        matches!(
+            v,
+            sptlb::rebalancer::Violation::CapacityExceeded { .. }
+        )
+    }));
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,108 @@
+"""AOT compile path: lower the L2 scoring graph to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the rust coordinator loads the
+text with ``HloModuleProto::from_text_file`` and never touches python again.
+
+HLO text — not ``lowered.compile()`` or a serialized ``HloModuleProto`` — is
+the interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (what the published ``xla`` 0.1.6 crate links)
+rejects (``proto.id() <= INT_MAX``).  The HLO text parser reassigns ids, so
+text round-trips cleanly.  See /opt/xla-example/README.md.
+
+Emits one artifact per (A, B) variant plus ``manifest.json`` describing the
+shapes so the rust runtime can pick the smallest variant that fits a given
+problem and zero-pad to it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref as _ref
+
+# (name, A apps, T tiers, B candidates).  T=5 matches the paper's testbed;
+# A variants cover the workload sizes the benches generate.
+DEFAULT_VARIANTS = (
+    ("score_a64_t5_b256", 64, 5, 256),
+    ("score_a128_t5_b256", 128, 5, 256),
+    ("score_a256_t5_b256", 256, 5, 256),
+    ("score_a512_t8_b256", 512, 8, 256),
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(a: int, t: int, b: int) -> str:
+    """Lower ``score_and_select`` for fixed (A, T, B) and return HLO text."""
+    f32 = jnp.float32
+    specs = (
+        jax.ShapeDtypeStruct((b, a, t), f32),  # assign
+        jax.ShapeDtypeStruct((a, _ref.NUM_RESOURCES), f32),  # res
+        jax.ShapeDtypeStruct((t, _ref.NUM_RESOURCES), f32),  # cap
+        jax.ShapeDtypeStruct((t, _ref.NUM_RESOURCES), f32),  # ideal
+        jax.ShapeDtypeStruct((a, t), f32),  # init
+        jax.ShapeDtypeStruct((a,), f32),  # crit
+        jax.ShapeDtypeStruct((_ref.NUM_WEIGHTS,), f32),  # weights
+    )
+    lowered = jax.jit(model.score_and_select).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output dir")
+    parser.add_argument(
+        "--variants",
+        default=None,
+        help="comma list name:A:T:B (default: built-in variant set)",
+    )
+    args = parser.parse_args()
+
+    variants = DEFAULT_VARIANTS
+    if args.variants:
+        variants = tuple(
+            (n, int(a), int(t), int(b))
+            for n, a, t, b in (v.split(":") for v in args.variants.split(","))
+        )
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"format": "hlo-text", "outputs": 4, "variants": []}
+    for name, a, t, b in variants:
+        text = lower_variant(a, t, b)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["variants"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "apps": a,
+                "tiers": t,
+                "batch": b,
+                "resources": _ref.NUM_RESOURCES,
+                "weights": _ref.NUM_WEIGHTS,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)  A={a} T={t} B={b}")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

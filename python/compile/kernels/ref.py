@@ -1,0 +1,123 @@
+"""Pure-jnp reference oracle for the SPTLB candidate-assignment scorer.
+
+This module is the single source of truth for the scoring semantics shared
+by three implementations that must agree:
+
+  1. this reference (pure jnp, no pallas),
+  2. the Pallas kernel in ``score.py`` (tested against this by pytest +
+     hypothesis),
+  3. the pure-rust scorer in ``rust/src/rebalancer/scoring.rs`` (parity
+     tested against the AOT artifact through the PJRT runtime).
+
+Scoring model
+-------------
+A *candidate* is a one-hot assignment matrix ``assign[b] : (A, T)`` mapping
+each of ``A`` apps to one of ``T`` tiers.  Given per-app resource vectors
+``res : (A, R)`` (R = 3: cpu, mem, task_count in absolute units), per-tier
+capacities ``cap : (T, R)`` and ideal-utilization fractions
+``ideal : (T, R)``, the initial assignment ``init : (A, T)`` one-hot,
+criticality scores ``crit : (A,)`` and goal weights
+``w : (6,) = [wC, w1, w2, w3, w4, w5]``, the score of candidate ``b`` is
+
+  loads[b,t,r] = sum_a assign[b,a,t] * res[a,r]
+  util[b,t,r]  = loads[b,t,r] / cap[t,r]
+
+  C  = sum_{t,r} relu(util - 1)^2          # capacity violation (big-M-ish)
+  G1 = sum_{t,r} relu(util - ideal)^2      # over-ideal-utilization penalty
+  G2 = sum_{t, r in {cpu,mem}} (util - mean_t util)^2   # resource balance
+  G3 = sum_{t} (util[:,:,task] - mean_t util[:,:,task])^2  # task balance
+  moved[b,a] = 1 - sum_t assign[b,a,t] * init[a,t]
+  G4 = sum_a moved[b,a] * res[a,task] / max(1, sum_a res[a,task])  # downtime
+  G5 = sum_a moved[b,a] * crit[a]    / max(eps, sum_a crit[a])     # criticality
+
+  score[b] = wC*C + w1*G1 + w2*G2 + w3*G3 + w4*G4 + w5*G5   (lower = better)
+
+The function returns ``(scores : (B,), loads : (B, T, R))`` so the caller
+gets the projected tier metrics from the same pass.
+
+All math is f32; the rust scorer mirrors it in f32 for bit-comparable
+results (tolerance 1e-4 relative).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Resource vector layout (R = 3).
+R_CPU = 0
+R_MEM = 1
+R_TASK = 2
+NUM_RESOURCES = 3
+
+# Weight vector layout (W = 6).
+W_CAPACITY = 0
+W_UTIL_LIMIT = 1
+W_RES_BALANCE = 2
+W_TASK_BALANCE = 3
+W_MOVE_COST = 4
+W_CRITICALITY = 5
+NUM_WEIGHTS = 6
+
+# Default lexicographic-ish goal weights: constraints >> G1 > G2 > G3 > G4 > G5.
+DEFAULT_WEIGHTS = (1e6, 1e3, 1e2, 1e1, 1.0, 1e-1)
+
+_EPS = 1e-12
+
+
+def score_candidates_ref(assign, res, cap, ideal, init, crit, weights):
+    """Score a batch of candidate assignments.  Pure jnp oracle.
+
+    Args:
+      assign:  (B, A, T) f32 one-hot candidate assignment matrices.
+      res:     (A, R) f32 app resource usage (cpu, mem, task_count).
+      cap:     (T, R) f32 tier capacity per resource.
+      ideal:   (T, R) f32 ideal utilization fraction per tier/resource.
+      init:    (A, T) f32 one-hot initial assignment.
+      crit:    (A,) f32 criticality scores (>= 0).
+      weights: (6,) f32 goal weights [wC, w1..w5].
+
+    Returns:
+      scores: (B,) f32 — lower is better.
+      loads:  (B, T, R) f32 — projected absolute tier loads.
+    """
+    assign = assign.astype(jnp.float32)
+    res = res.astype(jnp.float32)
+    cap = cap.astype(jnp.float32)
+    ideal = ideal.astype(jnp.float32)
+    init = init.astype(jnp.float32)
+    crit = crit.astype(jnp.float32)
+    weights = weights.astype(jnp.float32)
+
+    # (B, T, R) projected loads: the MXU-eligible contraction.
+    loads = jnp.einsum("bat,ar->btr", assign, res)
+    util = loads / cap[None, :, :]
+
+    # Capacity violation and over-ideal penalties.
+    cap_vio = jnp.sum(jnp.square(jnp.maximum(util - 1.0, 0.0)), axis=(1, 2))
+    over_ideal = jnp.sum(
+        jnp.square(jnp.maximum(util - ideal[None, :, :], 0.0)), axis=(1, 2)
+    )
+
+    # Balance: squared deviation from the cross-tier mean utilization.
+    mean_util = jnp.mean(util, axis=1, keepdims=True)  # (B, 1, R)
+    dev_sq = jnp.square(util - mean_util)  # (B, T, R)
+    res_balance = jnp.sum(dev_sq[:, :, R_CPU] + dev_sq[:, :, R_MEM], axis=1)
+    task_balance = jnp.sum(dev_sq[:, :, R_TASK], axis=1)
+
+    # Movement terms.
+    stay = jnp.sum(assign * init[None, :, :], axis=2)  # (B, A)
+    moved = 1.0 - stay
+    task_total = jnp.maximum(jnp.sum(res[:, R_TASK]), 1.0)
+    crit_total = jnp.maximum(jnp.sum(crit), _EPS)
+    move_cost = jnp.sum(moved * res[None, :, R_TASK], axis=1) / task_total
+    crit_cost = jnp.sum(moved * crit[None, :], axis=1) / crit_total
+
+    scores = (
+        weights[W_CAPACITY] * cap_vio
+        + weights[W_UTIL_LIMIT] * over_ideal
+        + weights[W_RES_BALANCE] * res_balance
+        + weights[W_TASK_BALANCE] * task_balance
+        + weights[W_MOVE_COST] * move_cost
+        + weights[W_CRITICALITY] * crit_cost
+    )
+    return scores, loads

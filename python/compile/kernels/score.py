@@ -1,0 +1,161 @@
+"""Pallas kernel for batched candidate-assignment scoring (L1).
+
+The hot-spot of SPTLB's LocalSearch is scoring thousands of candidate
+assignments per round.  This kernel computes the scoring model documented in
+``ref.py`` for a block of candidates at a time.
+
+TPU-shaped design (see DESIGN.md §Hardware-Adaptation):
+  * The grid iterates over blocks of the candidate (batch) axis; each grid
+    step streams one ``(bB, A, T)`` assignment block HBM→VMEM.
+  * The small side inputs (``res`` A×3, ``cap``/``ideal`` T×3, ``init`` A×T,
+    ``crit`` A, ``weights`` 6) fit in VMEM and are mapped whole into every
+    grid step (index_map → block 0).
+  * The contraction ``einsum('bat,ar->btr')`` lowers to a dot_general, which
+    the MXU executes; the penalty/reduction epilogue is fused into the same
+    kernel so the assignment tensor is read exactly once.
+  * f32 accumulation throughout — bf16 would corrupt the small utilization
+    deltas the balance goals compare.
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that the rust
+runtime's CPU client runs directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref as _ref
+
+# Default candidate-block size.  (bB, A, T) f32 for the default problem
+# (A=64, T=5) is 64*64*5*4 B = 80 KiB — comfortably inside a 16 MiB VMEM
+# budget together with the epilogue temporaries.
+DEFAULT_BLOCK_B = 64
+
+
+def _score_block_kernel(
+    assign_ref,
+    res_ref,
+    cap_ref,
+    ideal_ref,
+    init_ref,
+    crit_ref,
+    w_ref,
+    scores_ref,
+    loads_ref,
+):
+    """One grid step: score a (bB, A, T) block of candidates."""
+    assign = assign_ref[...]  # (bB, A, T)
+    res = res_ref[...]  # (A, R)
+    cap = cap_ref[...]  # (T, R)
+    ideal = ideal_ref[...]  # (T, R)
+    init = init_ref[...]  # (A, T)
+    crit = crit_ref[...]  # (A,)
+    w = w_ref[...]  # (NUM_WEIGHTS,)
+
+    # MXU contraction: (bB, A, T) x (A, R) -> (bB, T, R).
+    loads = jnp.einsum(
+        "bat,ar->btr", assign, res, preferred_element_type=jnp.float32
+    )
+    util = loads / cap[None, :, :]
+
+    cap_vio = jnp.sum(jnp.square(jnp.maximum(util - 1.0, 0.0)), axis=(1, 2))
+    over_ideal = jnp.sum(
+        jnp.square(jnp.maximum(util - ideal[None, :, :], 0.0)), axis=(1, 2)
+    )
+
+    mean_util = jnp.mean(util, axis=1, keepdims=True)
+    dev_sq = jnp.square(util - mean_util)
+    res_balance = jnp.sum(
+        dev_sq[:, :, _ref.R_CPU] + dev_sq[:, :, _ref.R_MEM], axis=1
+    )
+    task_balance = jnp.sum(dev_sq[:, :, _ref.R_TASK], axis=1)
+
+    stay = jnp.sum(assign * init[None, :, :], axis=2)
+    moved = 1.0 - stay
+    task_total = jnp.maximum(jnp.sum(res[:, _ref.R_TASK]), 1.0)
+    crit_total = jnp.maximum(jnp.sum(crit), 1e-12)
+    move_cost = jnp.sum(moved * res[None, :, _ref.R_TASK], axis=1) / task_total
+    crit_cost = jnp.sum(moved * crit[None, :], axis=1) / crit_total
+
+    scores_ref[...] = (
+        w[_ref.W_CAPACITY] * cap_vio
+        + w[_ref.W_UTIL_LIMIT] * over_ideal
+        + w[_ref.W_RES_BALANCE] * res_balance
+        + w[_ref.W_TASK_BALANCE] * task_balance
+        + w[_ref.W_MOVE_COST] * move_cost
+        + w[_ref.W_CRITICALITY] * crit_cost
+    )
+    loads_ref[...] = loads
+
+
+def best_block_b(b: int, limit: int = DEFAULT_BLOCK_B) -> int:
+    """Largest divisor of ``b`` not exceeding ``limit``."""
+    for cand in range(min(b, limit), 0, -1):
+        if b % cand == 0:
+            return cand
+    return 1
+
+
+def score_candidates_pallas(
+    assign, res, cap, ideal, init, crit, weights, *, block_b=None
+):
+    """Pallas-kernel scorer; drop-in for ``ref.score_candidates_ref``.
+
+    ``B`` must be a multiple of ``block_b``; when ``block_b`` is None the
+    largest divisor of B not exceeding ``DEFAULT_BLOCK_B`` is chosen (the
+    AOT entry point fixes all shapes at lowering time so the rust side
+    never pads mid-flight).
+    """
+    if block_b is None:
+        block_b = best_block_b(assign.shape[0])
+    return _score_candidates_jit(
+        assign, res, cap, ideal, init, crit, weights, block_b=block_b
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def _score_candidates_jit(
+    assign, res, cap, ideal, init, crit, weights, *, block_b
+):
+    b, a, t = assign.shape
+    r = res.shape[1]
+    if b % block_b != 0:
+        raise ValueError(f"batch {b} not a multiple of block_b {block_b}")
+    grid = (b // block_b,)
+
+    whole = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    return pl.pallas_call(
+        _score_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, a, t), lambda i: (i, 0, 0)),
+            whole((a, r)),
+            whole((t, r)),
+            whole((t, r)),
+            whole((a, t)),
+            whole((a,)),
+            whole((_ref.NUM_WEIGHTS,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b, t, r), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b, t, r), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(
+        assign.astype(jnp.float32),
+        res.astype(jnp.float32),
+        cap.astype(jnp.float32),
+        ideal.astype(jnp.float32),
+        init.astype(jnp.float32),
+        crit.astype(jnp.float32),
+        weights.astype(jnp.float32),
+    )

@@ -1,0 +1,57 @@
+"""L2: the JAX scoring graph SPTLB's rust coordinator executes via PJRT.
+
+Composes the L1 Pallas kernel (``kernels/score.py``) with the batch
+reduction the LocalSearch hot loop needs: every candidate's score, the best
+candidate's index/score, and the projected tier loads — all from a single
+device execution, so rust makes exactly one PJRT dispatch per neighborhood
+batch.
+
+The public entry point ``score_and_select`` is what ``aot.py`` lowers to HLO
+text.  Shapes are fixed at lowering time (the rust runtime zero-pads apps to
+the artifact's ``A`` and candidates to ``B``; zero-resource apps contribute
+nothing to any objective, and padded candidates replicate the incumbent so
+they never win the argmin by more than a tie).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import ref as _ref
+from .kernels.score import score_candidates_pallas
+
+
+def score_and_select(assign, res, cap, ideal, init, crit, weights):
+    """Score all candidates and select the best.
+
+    Args:
+      assign:  (B, A, T) f32 one-hot candidate assignments.
+      res:     (A, R) f32 app resources.
+      cap:     (T, R) f32 tier capacities.
+      ideal:   (T, R) f32 ideal utilization fractions.
+      init:    (A, T) f32 one-hot incumbent assignment.
+      crit:    (A,) f32 criticality scores.
+      weights: (6,) f32 goal weights.
+
+    Returns a 4-tuple (lowered with ``return_tuple=True``):
+      scores:     (B,) f32   — per-candidate score, lower is better.
+      loads:      (B, T, R) f32 — projected tier loads per candidate.
+      best_idx:   () i32     — argmin of scores (first winner on ties).
+      best_score: () f32     — scores[best_idx].
+    """
+    scores, loads = score_candidates_pallas(
+        assign, res, cap, ideal, init, crit, weights
+    )
+    best_idx = jnp.argmin(scores).astype(jnp.int32)
+    best_score = scores[best_idx]
+    return scores, loads, best_idx, best_score
+
+
+def score_reference(assign, res, cap, ideal, init, crit, weights):
+    """Same graph built on the pure-jnp oracle (used by parity tests)."""
+    scores, loads = _ref.score_candidates_ref(
+        assign, res, cap, ideal, init, crit, weights
+    )
+    best_idx = jnp.argmin(scores).astype(jnp.int32)
+    best_score = scores[best_idx]
+    return scores, loads, best_idx, best_score

@@ -1,0 +1,65 @@
+"""AOT path tests: HLO text lowering is well-formed and parameter-ordered.
+
+These do not execute through PJRT-rust (that parity test lives in
+``rust/tests/runtime_parity.rs``); they pin the artifact *contract* the rust
+runtime relies on: entry parameter count/order, tuple arity, f32 layouts.
+"""
+
+import json
+import os
+import re
+
+import pytest
+
+from compile import aot
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def hlo_small():
+    # Small variant keeps the test fast; the contract is shape-independent.
+    return aot.lower_variant(a=8, t=3, b=4)
+
+
+class TestHloText:
+    def test_contains_entry_computation(self, hlo_small):
+        assert "ENTRY" in hlo_small
+        assert "HloModule" in hlo_small
+
+    def test_parameter_count_and_shapes(self, hlo_small):
+        # 7 params: assign, res, cap, ideal, init, crit, weights.
+        params = re.findall(r"parameter\((\d+)\)", hlo_small)
+        assert sorted(set(int(p) for p in params)) == list(range(7))
+        assert "f32[4,8,3]" in hlo_small  # assign (B, A, T)
+        assert f"f32[8,{ref.NUM_RESOURCES}]" in hlo_small  # res
+        assert f"f32[{ref.NUM_WEIGHTS}]" in hlo_small  # weights
+
+    def test_root_is_4_tuple(self, hlo_small):
+        # return_tuple=True => root tuple (scores, loads, best_idx, best).
+        assert re.search(
+            r"ROOT\s+\S+\s+=\s+\(f32\[4\]", hlo_small
+        ), "root tuple must start with scores f32[B]"
+
+    def test_no_custom_calls(self, hlo_small):
+        # interpret=True pallas must lower to plain HLO: a Mosaic
+        # custom-call would be unloadable by the CPU PJRT client.
+        assert "custom-call" not in hlo_small
+
+
+class TestManifest:
+    def test_main_writes_manifest(self, tmp_path, monkeypatch):
+        monkeypatch.setattr(
+            "sys.argv",
+            ["aot", "--out", str(tmp_path), "--variants", "tiny:8:3:4"],
+        )
+        aot.main()
+        files = os.listdir(tmp_path)
+        assert "manifest.json" in files
+        assert "tiny.hlo.txt" in files
+        m = json.load(open(tmp_path / "manifest.json"))
+        assert m["format"] == "hlo-text"
+        assert m["outputs"] == 4
+        (v,) = m["variants"]
+        assert (v["apps"], v["tiers"], v["batch"]) == (8, 3, 4)
+        assert v["resources"] == ref.NUM_RESOURCES
+        assert v["weights"] == ref.NUM_WEIGHTS

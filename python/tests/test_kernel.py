@@ -1,0 +1,149 @@
+"""L1 correctness: Pallas scoring kernel vs the pure-jnp oracle.
+
+hypothesis sweeps shapes and input distributions; assert_allclose against
+``ref.score_candidates_ref`` is the CORE correctness signal for the compute
+artifact the rust coordinator executes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.score import score_candidates_pallas
+
+
+def make_inputs(rng, b, a, t, *, cap_scale=100.0, zero_crit=False):
+    """Random but well-formed scorer inputs (one-hot assigns, pos caps)."""
+    assign_idx = rng.integers(0, t, size=(b, a))
+    assign = np.zeros((b, a, t), np.float32)
+    assign[np.arange(b)[:, None], np.arange(a)[None, :], assign_idx] = 1.0
+    init_idx = rng.integers(0, t, size=(a,))
+    init = np.zeros((a, t), np.float32)
+    init[np.arange(a), init_idx] = 1.0
+    res = rng.uniform(0.1, 10.0, size=(a, ref.NUM_RESOURCES)).astype(np.float32)
+    res[:, ref.R_TASK] = rng.integers(1, 50, size=a)
+    cap = rng.uniform(0.5, 1.0, size=(t, ref.NUM_RESOURCES)).astype(np.float32)
+    cap *= cap_scale
+    ideal = np.full((t, ref.NUM_RESOURCES), 0.7, np.float32)
+    ideal[:, ref.R_TASK] = 0.8
+    crit = (
+        np.zeros(a, np.float32)
+        if zero_crit
+        else rng.uniform(0.0, 1.0, size=a).astype(np.float32)
+    )
+    w = np.array(ref.DEFAULT_WEIGHTS, np.float32)
+    return assign, res, cap, ideal, init, crit, w
+
+
+def run_both(inputs, block_b):
+    got_s, got_l = score_candidates_pallas(*map(jnp.asarray, inputs), block_b=block_b)
+    want_s, want_l = ref.score_candidates_ref(*map(jnp.asarray, inputs))
+    return (
+        np.asarray(got_s),
+        np.asarray(got_l),
+        np.asarray(want_s),
+        np.asarray(want_l),
+    )
+
+
+class TestKernelVsRef:
+    def test_default_shape(self):
+        rng = np.random.default_rng(0)
+        inputs = make_inputs(rng, 256, 64, 5)
+        gs, gl, ws, wl = run_both(inputs, 64)
+        assert_allclose(gs, ws, rtol=1e-4, atol=1e-5)
+        assert_allclose(gl, wl, rtol=1e-5, atol=1e-5)
+
+    def test_single_block(self):
+        rng = np.random.default_rng(1)
+        inputs = make_inputs(rng, 8, 16, 3)
+        gs, gl, ws, wl = run_both(inputs, 8)
+        assert_allclose(gs, ws, rtol=1e-4, atol=1e-5)
+        assert_allclose(gl, wl, rtol=1e-5, atol=1e-5)
+
+    def test_batch_not_multiple_of_block_raises(self):
+        rng = np.random.default_rng(2)
+        inputs = make_inputs(rng, 10, 8, 3)
+        with pytest.raises(ValueError, match="not a multiple"):
+            score_candidates_pallas(*map(jnp.asarray, inputs), block_b=4)
+
+    def test_zero_criticality_no_nan(self):
+        rng = np.random.default_rng(3)
+        inputs = make_inputs(rng, 16, 8, 3, zero_crit=True)
+        gs, _, ws, _ = run_both(inputs, 16)
+        assert np.isfinite(gs).all()
+        assert_allclose(gs, ws, rtol=1e-4, atol=1e-5)
+
+    def test_overloaded_tier_capacity_penalty(self):
+        """All apps on tier 0 of a tiny-capacity tier => huge cap term."""
+        rng = np.random.default_rng(4)
+        b, a, t = 4, 12, 4
+        inputs = list(make_inputs(rng, b, a, t, cap_scale=1.0))
+        assign = np.zeros((b, a, t), np.float32)
+        assign[:, :, 0] = 1.0
+        inputs[0] = assign
+        gs, _, ws, _ = run_both(tuple(inputs), 4)
+        assert_allclose(gs, ws, rtol=1e-4, atol=1e-5)
+        assert (gs > 1e5).all(), "capacity violation must dominate"
+
+    def test_identity_assignment_has_no_move_cost(self):
+        """Candidate == incumbent => G4/G5 contribute zero."""
+        rng = np.random.default_rng(5)
+        b, a, t = 2, 10, 3
+        inputs = list(make_inputs(rng, b, a, t))
+        init = inputs[4]
+        inputs[0] = np.broadcast_to(init, (b, a, t)).copy()
+        # Zero the balance-irrelevant weights so only move terms remain.
+        w = np.zeros(ref.NUM_WEIGHTS, np.float32)
+        w[ref.W_MOVE_COST] = 1.0
+        w[ref.W_CRITICALITY] = 1.0
+        inputs[6] = w
+        gs, _, ws, _ = run_both(tuple(inputs), 2)
+        assert_allclose(gs, np.zeros(b), atol=1e-6)
+        assert_allclose(ws, np.zeros(b), atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b_blocks=st.integers(1, 3),
+    block_b=st.sampled_from([2, 4, 8]),
+    a=st.integers(2, 40),
+    t=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+    cap_scale=st.sampled_from([1.0, 10.0, 1000.0]),
+)
+def test_hypothesis_shapes_match_ref(b_blocks, block_b, a, t, seed, cap_scale):
+    rng = np.random.default_rng(seed)
+    inputs = make_inputs(rng, b_blocks * block_b, a, t, cap_scale=cap_scale)
+    gs, gl, ws, wl = run_both(inputs, block_b)
+    assert_allclose(gs, ws, rtol=1e-3, atol=1e-4)
+    assert_allclose(gl, wl, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_score_orders_balance(seed):
+    """A perfectly balanced candidate must beat a maximally skewed one."""
+    rng = np.random.default_rng(seed)
+    a, t = 12, 3
+    # Identical apps on identical tiers: balance is achievable exactly.
+    res = np.ones((a, ref.NUM_RESOURCES), np.float32)
+    cap = np.full((t, ref.NUM_RESOURCES), 100.0, np.float32)
+    ideal = np.full((t, ref.NUM_RESOURCES), 0.7, np.float32)
+    balanced = np.zeros((a, t), np.float32)
+    balanced[np.arange(a), np.arange(a) % t] = 1.0
+    skewed = np.zeros((a, t), np.float32)
+    skewed[:, 0] = 1.0
+    assign = np.stack([balanced, skewed])
+    init = balanced
+    crit = rng.uniform(0.0, 1.0, a).astype(np.float32)
+    w = np.array(ref.DEFAULT_WEIGHTS, np.float32)
+    gs, _ = score_candidates_pallas(
+        *map(jnp.asarray, (assign, res, cap, ideal, init, crit, w)), block_b=2
+    )
+    gs = np.asarray(gs)
+    assert gs[0] < gs[1]

@@ -1,0 +1,71 @@
+"""L2 graph tests: shapes, selection semantics, pallas/ref parity."""
+
+import numpy as np
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+from tests.test_kernel import make_inputs
+
+
+def as_jnp(inputs):
+    return tuple(map(jnp.asarray, inputs))
+
+
+class TestScoreAndSelect:
+    def test_output_shapes(self):
+        rng = np.random.default_rng(0)
+        b, a, t = 64, 32, 5
+        scores, loads, best_idx, best_score = model.score_and_select(
+            *as_jnp(make_inputs(rng, b, a, t))
+        )
+        assert scores.shape == (b,)
+        assert loads.shape == (b, t, ref.NUM_RESOURCES)
+        assert best_idx.shape == ()
+        assert best_idx.dtype == jnp.int32
+        assert best_score.shape == ()
+
+    def test_best_is_argmin(self):
+        rng = np.random.default_rng(1)
+        scores, _, best_idx, best_score = model.score_and_select(
+            *as_jnp(make_inputs(rng, 128, 24, 4))
+        )
+        scores = np.asarray(scores)
+        assert int(best_idx) == int(np.argmin(scores))
+        assert_allclose(float(best_score), scores.min(), rtol=1e-6)
+
+    def test_matches_reference_graph(self):
+        rng = np.random.default_rng(2)
+        inputs = as_jnp(make_inputs(rng, 64, 48, 5))
+        gs, gl, gi, gb = model.score_and_select(*inputs)
+        ws, wl, wi, wb = model.score_reference(*inputs)
+        assert_allclose(np.asarray(gs), np.asarray(ws), rtol=1e-4, atol=1e-5)
+        assert_allclose(np.asarray(gl), np.asarray(wl), rtol=1e-5, atol=1e-5)
+        assert int(gi) == int(wi)
+
+    def test_padded_apps_are_inert(self):
+        """Zero-resource padding apps must not change any score."""
+        rng = np.random.default_rng(3)
+        b, a, t, pad = 16, 12, 3, 20
+        assign, res, cap, ideal, init, crit, w = make_inputs(rng, b, a, t)
+        # Pad apps: zero resources, zero criticality, pinned to tier 0 in
+        # both candidate and incumbent (so moved == 0).
+        assign_p = np.zeros((b, a + pad, t), np.float32)
+        assign_p[:, :a, :] = assign
+        assign_p[:, a:, 0] = 1.0
+        init_p = np.zeros((a + pad, t), np.float32)
+        init_p[:a] = init
+        init_p[a:, 0] = 1.0
+        res_p = np.zeros((a + pad, ref.NUM_RESOURCES), np.float32)
+        res_p[:a] = res
+        crit_p = np.zeros(a + pad, np.float32)
+        crit_p[:a] = crit
+        s1, _, _, _ = model.score_and_select(
+            *as_jnp((assign, res, cap, ideal, init, crit, w))
+        )
+        s2, _, _, _ = model.score_and_select(
+            *as_jnp((assign_p, res_p, cap, ideal, init_p, crit_p, w))
+        )
+        assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-6)

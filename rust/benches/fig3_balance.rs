@@ -1,0 +1,67 @@
+//! Figure 3 (a/b/c) regeneration: per-tier cpu/mem/task-count utilization
+//! for initial, SPTLB, and the three greedy variants, plus spread summary
+//! and solve-time benchmarks.
+//!
+//! Run: cargo bench --bench fig3_balance
+//! Paper-scale timeouts: SPTLB_PAPER_TIMEOUTS=1 cargo bench --bench fig3_balance
+
+use sptlb::bench::{bench_seeds, measure};
+use sptlb::greedy::GreedyScheduler;
+use sptlb::model::ResourceKind;
+use sptlb::rebalancer::problem::{GoalWeights, Problem};
+use sptlb::rebalancer::LocalSearch;
+use sptlb::report::fig3_report;
+use sptlb::util::timer::Deadline;
+use sptlb::workload::{generate, WorkloadSpec};
+use std::time::Duration;
+
+fn main() {
+    let timeout = Duration::from_millis(150); // paper: 30s, scaled
+    println!("=== Figure 3 (a/b/c): multi-objective balance, SPTLB vs greedy ===");
+    println!("timeout {timeout:?} (paper: 30s), movement bound 10%\n");
+
+    for seed in bench_seeds() {
+        let bed = generate(&WorkloadSpec::paper().with_seed(seed));
+        let rep = fig3_report(&bed, timeout, 0.10, seed);
+        println!("--- seed {seed} ---");
+        if seed == 42 {
+            print!("{}", rep.ascii());
+        }
+        println!("csv:");
+        print!("{}", rep.csv());
+        println!("spread summary (max-min utilization pp):");
+        println!(
+            "{:<12} {:>8} {:>8} {:>8}",
+            "scheduler", "cpu", "mem", "tasks"
+        );
+        for (s, name) in rep.scheduler_names.iter().enumerate() {
+            println!(
+                "{name:<12} {:>8.1} {:>8.1} {:>8.1}",
+                rep.spread(0, s),
+                rep.spread(1, s),
+                rep.spread(2, s)
+            );
+        }
+        println!();
+    }
+
+    // Solve-time microbenchmarks backing the figure.
+    println!("=== timings ===");
+    let bed = generate(&WorkloadSpec::paper());
+    let problem = Problem::build(
+        &bed.apps,
+        &bed.tiers,
+        bed.initial.clone(),
+        0.10,
+        GoalWeights::default(),
+    )
+    .unwrap();
+    measure("sptlb_local_search_150ms", 1, 5, || {
+        LocalSearch::with_seed(1).solve(&problem, Deadline::after(timeout))
+    });
+    for kind in ResourceKind::ALL {
+        measure(&format!("greedy_{kind}"), 1, 5, || {
+            GreedyScheduler::new(kind).solve(&problem, Deadline::after(timeout))
+        });
+    }
+}

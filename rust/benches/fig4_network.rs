@@ -1,0 +1,73 @@
+//! Figure 4 regeneration: worst-case (p99) network latency per hierarchy
+//! integration variant × solver type × timeout, with an ASCII scatter
+//! matching the paper's plot (x = time-to-solution, y = p99 latency).
+//!
+//! Run: cargo bench --bench fig4_network
+//! Paper-scale timeouts: SPTLB_PAPER_TIMEOUTS=1 cargo bench --bench fig4_network
+
+use sptlb::bench::{bench_seeds, timeout_ladder};
+use sptlb::hierarchy::variants::Variant;
+use sptlb::rebalancer::solution::SolverKind;
+use sptlb::report::ascii::scatter;
+use sptlb::report::{fig4_rows, SweepRow};
+use sptlb::workload::{generate, WorkloadSpec};
+
+fn main() {
+    println!("=== Figure 4: p99 network latency across SPTLB integrations ===");
+    let timeouts = timeout_ladder();
+    println!("timeouts {timeouts:?} (paper: 30s/60s/10m/30m)\n");
+
+    let mut all_rows: Vec<SweepRow> = Vec::new();
+    for seed in bench_seeds() {
+        let bed = generate(&WorkloadSpec::paper().with_seed(seed));
+        let rows = sptlb::report::sweep(&bed, &timeouts, 0.10, seed);
+        all_rows.extend(rows);
+    }
+    print!("{}", fig4_rows(&all_rows));
+
+    // ASCII scatter (paper: triangles = local, dots = optimal).
+    let pts = |variant: Variant, solver: SolverKind| -> Vec<(f64, f64)> {
+        all_rows
+            .iter()
+            .filter(|r| r.variant == variant && r.solver == solver && r.n_moves > 0)
+            .map(|r| (r.time_to_solution_ms, r.p99_latency_ms))
+            .collect()
+    };
+    let series = [
+        ("no_cnst/local", 'n', pts(Variant::NoCnst, SolverKind::LocalSearch)),
+        ("no_cnst/opt", 'N', pts(Variant::NoCnst, SolverKind::OptimalSearch)),
+        ("w_cnst/local", 'w', pts(Variant::WCnst, SolverKind::LocalSearch)),
+        ("w_cnst/opt", 'W', pts(Variant::WCnst, SolverKind::OptimalSearch)),
+        ("manual/local", 'm', pts(Variant::ManualCnst, SolverKind::LocalSearch)),
+        ("manual/opt", 'M', pts(Variant::ManualCnst, SolverKind::OptimalSearch)),
+    ];
+    println!();
+    print!(
+        "{}",
+        scatter(
+            "Figure 4: worst-case move latency vs time-to-solution",
+            &series,
+            "time to solution (ms)",
+            "p99 latency (ms)",
+            64,
+            16,
+        )
+    );
+
+    // Headline check (printed, asserted in figures_integration tests):
+    let mean = |v: Variant| {
+        let xs: Vec<f64> = all_rows
+            .iter()
+            .filter(|r| r.variant == v && r.n_moves > 0)
+            .map(|r| r.p99_latency_ms)
+            .collect();
+        xs.iter().sum::<f64>() / xs.len().max(1) as f64
+    };
+    println!(
+        "\nmean p99 latency: no_cnst {:.0} ms | w_cnst {:.0} ms | manual_cnst {:.0} ms",
+        mean(Variant::NoCnst),
+        mean(Variant::WCnst),
+        mean(Variant::ManualCnst)
+    );
+    println!("expected shape (paper): w_cnst lowest, manual close, no_cnst highest");
+}

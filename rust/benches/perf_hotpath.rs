@@ -1,0 +1,133 @@
+//! Hot-path performance benchmarks (§Perf in EXPERIMENTS.md):
+//!
+//!  * incremental vs full rescoring (the L3 optimization the local search
+//!    hot loop depends on),
+//!  * LocalSearch / OptimalSearch / greedy end-to-end solve times,
+//!  * PJRT batch scoring throughput (device path) vs the rust scorer,
+//!  * full pipeline latency (collect -> construct -> solve -> execute).
+//!
+//! Run: cargo bench --bench perf_hotpath
+
+use sptlb::bench::measure;
+use sptlb::metadata::MetadataStore;
+use sptlb::model::{Assignment, TierId};
+use sptlb::rebalancer::problem::{GoalWeights, Problem};
+use sptlb::rebalancer::scoring::{score_assignment, ScoreState};
+use sptlb::rebalancer::{LocalSearch, OptimalSearch};
+use sptlb::sptlb::{Sptlb, SptlbConfig};
+use sptlb::util::prng::Pcg64;
+use sptlb::util::timer::Deadline;
+use sptlb::workload::{generate, WorkloadSpec};
+use std::time::Duration;
+
+fn main() {
+    println!("=== §Perf hot-path benchmarks ===\n");
+    let bed = generate(&WorkloadSpec::paper());
+    let problem = Problem::build(
+        &bed.apps,
+        &bed.tiers,
+        bed.initial.clone(),
+        0.10,
+        GoalWeights::default(),
+    )
+    .unwrap();
+
+    // --- scoring: incremental peek vs full rescore ---------------------
+    println!("[scoring]");
+    let mut state = ScoreState::new(&problem, problem.initial.clone());
+    let moves: Vec<(usize, TierId)> = {
+        let mut rng = Pcg64::new(1);
+        (0..1024)
+            .map(|_| {
+                let a = rng.range(0, problem.n_apps());
+                let t = *rng.choose(&problem.apps[a].allowed).unwrap();
+                (a, t)
+            })
+            .collect()
+    };
+    measure("peek_1024_moves_incremental", 2, 10, || {
+        let mut acc = 0.0;
+        for &(a, t) in &moves {
+            acc += state.peek(a, t);
+        }
+        acc
+    });
+    measure("full_rescore_1024_moves", 1, 5, || {
+        let mut acc = 0.0;
+        for &(a, t) in &moves {
+            let mut asg = problem.initial.clone();
+            asg.set(sptlb::model::AppId(a), t);
+            acc += score_assignment(&problem, &asg).0;
+        }
+        acc
+    });
+
+    // --- solvers --------------------------------------------------------
+    println!("\n[solvers] (anytime; early-exit on convergence)");
+    measure("local_search_to_convergence", 1, 5, || {
+        LocalSearch::with_seed(1).solve(&problem, Deadline::after_ms(2000))
+    });
+    measure("optimal_search_to_convergence", 1, 3, || {
+        OptimalSearch::with_seed(1).solve(&problem, Deadline::after_ms(2000))
+    });
+
+    // --- PJRT device path ------------------------------------------------
+    println!("\n[device] (requires `make artifacts`; skipped when absent)");
+    match sptlb::runtime::PjrtScorer::from_default_dir() {
+        Ok(mut scorer) => {
+            let mut rng = Pcg64::new(2);
+            let candidates: Vec<Assignment> = (0..256)
+                .map(|_| {
+                    let mut asg = problem.initial.clone();
+                    for _ in 0..4 {
+                        let a = rng.range(0, problem.n_apps());
+                        let t = *rng.choose(&problem.apps[a].allowed).unwrap();
+                        asg.set(sptlb::model::AppId(a), t);
+                    }
+                    asg
+                })
+                .collect();
+            // Warm the compilation cache before measuring dispatch cost.
+            let _ = scorer.score(&problem, &candidates[..1]);
+            let r = measure("pjrt_score_256_candidates", 2, 10, || {
+                scorer.score(&problem, &candidates).unwrap()
+            });
+            let per_cand_us = r.mean_ms * 1e3 / 256.0;
+            println!("  -> {per_cand_us:.1} us/candidate through the artifact");
+            measure("rust_score_256_candidates", 2, 10, || {
+                candidates
+                    .iter()
+                    .map(|c| score_assignment(&problem, c).0)
+                    .sum::<f64>()
+            });
+        }
+        Err(e) => println!("  skipped: {e}"),
+    }
+
+    // --- full pipeline ----------------------------------------------------
+    println!("\n[pipeline]");
+    let store = MetadataStore::from_apps(bed.apps.clone()).unwrap();
+    let cfg = SptlbConfig {
+        timeout: Duration::from_millis(100),
+        ..SptlbConfig::default()
+    };
+    let sptlb = Sptlb::new(cfg);
+    measure("pipeline_collect_construct_solve", 1, 5, || {
+        sptlb.balance(&store, &bed.tiers, &bed.latency, &bed.initial)
+    });
+
+    // --- large-scale problem ----------------------------------------------
+    println!("\n[scale] (400 apps, 8 tiers)");
+    let big = generate(&WorkloadSpec::large());
+    let big_problem = Problem::build(
+        &big.apps,
+        &big.tiers,
+        big.initial.clone(),
+        0.10,
+        GoalWeights::default(),
+    )
+    .unwrap();
+    measure("local_search_400apps_8tiers", 1, 3, || {
+        LocalSearch::with_seed(1).solve(&big_problem, Deadline::after_ms(3000))
+    });
+}

@@ -1,0 +1,94 @@
+//! Minimal benchmarking helpers for the `harness = false` bench binaries
+//! (criterion is not available offline). Provides warmup + repeated
+//! measurement with mean/std/min reporting, and shared env-var knobs so
+//! `cargo bench` can run paper-scale timeouts when asked.
+
+use crate::util::stats::OnlineStats;
+use crate::util::timer::Stopwatch;
+use std::time::Duration;
+
+/// Measure `f` `reps` times after `warmup` unmeasured runs.
+pub fn measure<R>(name: &str, warmup: usize, reps: usize, mut f: impl FnMut() -> R) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut stats = OnlineStats::new();
+    for _ in 0..reps {
+        let sw = Stopwatch::start();
+        std::hint::black_box(f());
+        stats.push(sw.elapsed_ms());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        mean_ms: stats.mean(),
+        std_ms: stats.std_dev(),
+        min_ms: stats.min(),
+        reps,
+    };
+    println!("{r}");
+    r
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub min_ms: f64,
+    pub reps: usize,
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "bench {:<42} {:>9.3} ms/iter (±{:.3}, min {:.3}, n={})",
+            self.name, self.mean_ms, self.std_ms, self.min_ms, self.reps
+        )
+    }
+}
+
+/// Solver-timeout ladder for the figure sweeps. Default is the scaled
+/// ladder (50/100/300/900 ms); `SPTLB_PAPER_TIMEOUTS=1` switches to the
+/// paper's real 30s/60s/600s/1800s.
+pub fn timeout_ladder() -> Vec<Duration> {
+    if std::env::var("SPTLB_PAPER_TIMEOUTS").as_deref() == Ok("1") {
+        [30_000u64, 60_000, 600_000, 1_800_000]
+            .iter()
+            .map(|&ms| Duration::from_millis(ms))
+            .collect()
+    } else {
+        [50u64, 100, 300, 900]
+            .iter()
+            .map(|&ms| Duration::from_millis(ms))
+            .collect()
+    }
+}
+
+/// Seeds used for replicated figure runs.
+pub fn bench_seeds() -> Vec<u64> {
+    vec![42, 1, 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_returns_sane_stats() {
+        let r = measure("noop", 1, 5, || 1 + 1);
+        assert_eq!(r.reps, 5);
+        assert!(r.mean_ms >= 0.0);
+        assert!(r.min_ms <= r.mean_ms + 1e-9);
+    }
+
+    #[test]
+    fn ladder_is_scaled_by_default() {
+        // (Assumes the env var is unset in the test environment.)
+        if std::env::var("SPTLB_PAPER_TIMEOUTS").is_err() {
+            let l = timeout_ladder();
+            assert_eq!(l.len(), 4);
+            assert!(l[3] <= Duration::from_secs(1));
+        }
+    }
+}

@@ -1,0 +1,315 @@
+//! Coordinator (DESIGN.md S12): the long-running leader loop that turns
+//! SPTLB from a one-shot solver into a service. Each *round* it re-collects
+//! metrics (workloads drift), runs the pipeline, executes the accepted
+//! moves (the assignment becomes the next round's incumbent), appends to
+//! the decision log, and emits running metrics. Backpressure: if a round
+//! overruns the tick budget, subsequent ticks are skipped rather than
+//! queued (the paper's schedulers run on fresh data, never on a backlog).
+
+use crate::metadata::MetadataStore;
+use crate::model::{App, Assignment, Tier};
+use crate::network::LatencyMatrix;
+use crate::sptlb::{BalanceReport, Sptlb, SptlbConfig};
+use crate::util::json::Json;
+use crate::util::prng::Pcg64;
+use crate::util::stats::OnlineStats;
+use crate::util::timer::Stopwatch;
+use std::time::Duration;
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub sptlb: SptlbConfig,
+    /// Tick budget per round; rounds that overrun skip following ticks.
+    pub tick: Duration,
+    /// Per-round multiplicative demand-drift sigma (0 disables drift).
+    pub drift_sigma: f64,
+    /// Probability a new app arrives in a round.
+    pub arrival_prob: f64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            sptlb: SptlbConfig::default(),
+            tick: Duration::from_millis(250),
+            drift_sigma: 0.05,
+            arrival_prob: 0.0,
+        }
+    }
+}
+
+/// One round's record in the decision log.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: u32,
+    pub moves_executed: usize,
+    pub score: f64,
+    pub p99_latency_ms: f64,
+    pub worst_imbalance: f64,
+    pub pipeline_ms: f64,
+    pub ticks_skipped: u32,
+}
+
+impl RoundRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("round", Json::num(self.round as f64)),
+            ("moves_executed", Json::num(self.moves_executed as f64)),
+            ("score", Json::num(self.score)),
+            ("p99_latency_ms", Json::num(self.p99_latency_ms)),
+            ("worst_imbalance", Json::num(self.worst_imbalance)),
+            ("pipeline_ms", Json::num(self.pipeline_ms)),
+            ("ticks_skipped", Json::num(self.ticks_skipped as f64)),
+        ])
+    }
+}
+
+/// Aggregated service metrics (the §3.3 "emitted as metrics in the
+/// resource endpoint of the SPTLB").
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    pub imbalance: OnlineStats,
+    pub latency_p99: OnlineStats,
+    pub pipeline_ms: OnlineStats,
+    pub moves: OnlineStats,
+    pub rounds: u32,
+    pub ticks_skipped: u32,
+}
+
+impl ServiceMetrics {
+    pub fn to_json(&self) -> Json {
+        let stat = |s: &OnlineStats| {
+            Json::obj(vec![
+                ("mean", Json::num(s.mean())),
+                ("min", Json::num(s.min())),
+                ("max", Json::num(s.max())),
+                ("std", Json::num(s.std_dev())),
+            ])
+        };
+        Json::obj(vec![
+            ("rounds", Json::num(self.rounds as f64)),
+            ("ticks_skipped", Json::num(self.ticks_skipped as f64)),
+            ("imbalance", stat(&self.imbalance)),
+            ("latency_p99_ms", stat(&self.latency_p99)),
+            ("pipeline_ms", stat(&self.pipeline_ms)),
+            ("moves_per_round", stat(&self.moves)),
+        ])
+    }
+}
+
+/// The leader loop.
+pub struct Coordinator {
+    pub config: CoordinatorConfig,
+    apps: Vec<App>,
+    tiers: Vec<Tier>,
+    latency: LatencyMatrix,
+    current: Assignment,
+    rng: Pcg64,
+    pub log: Vec<RoundRecord>,
+    pub metrics: ServiceMetrics,
+}
+
+impl Coordinator {
+    pub fn new(
+        config: CoordinatorConfig,
+        apps: Vec<App>,
+        tiers: Vec<Tier>,
+        latency: LatencyMatrix,
+        initial: Assignment,
+    ) -> Self {
+        let rng = Pcg64::new(config.sptlb.seed ^ 0xC003D);
+        Self {
+            config,
+            apps,
+            tiers,
+            latency,
+            current: initial,
+            rng,
+            log: Vec::new(),
+            metrics: ServiceMetrics::default(),
+        }
+    }
+
+    pub fn from_testbed(config: CoordinatorConfig, bed: crate::workload::TestBed) -> Self {
+        Self::new(config, bed.apps, bed.tiers, bed.latency, bed.initial)
+    }
+
+    pub fn current_assignment(&self) -> &Assignment {
+        &self.current
+    }
+
+    /// Run `n_rounds` balancing rounds. Returns the per-round reports.
+    pub fn run(&mut self, n_rounds: u32) -> Vec<BalanceReport> {
+        let mut reports = Vec::with_capacity(n_rounds as usize);
+        for round in 0..n_rounds {
+            let sw = Stopwatch::start();
+            self.drift();
+
+            let store = MetadataStore::from_apps(self.apps.clone())
+                .expect("drifted population keeps unique ids");
+            let mut cfg = self.config.sptlb.clone();
+            cfg.seed = self.config.sptlb.seed.wrapping_add(round as u64);
+            let sptlb = Sptlb::new(cfg);
+            let report = sptlb.balance(&store, &self.tiers, &self.latency, &self.current);
+
+            // ---- decision execution: adopt the projected mapping.
+            let moves = report.solution.moves(&report.problem);
+            self.current = report.solution.assignment.clone();
+
+            // ---- backpressure accounting.
+            let elapsed = sw.elapsed();
+            let ticks_skipped = if elapsed > self.config.tick {
+                (elapsed.as_nanos() / self.config.tick.as_nanos().max(1)) as u32
+            } else {
+                0
+            };
+
+            let worst = crate::hierarchy::variants::worst_imbalance(
+                &report.projected_utilization,
+                crate::hierarchy::variants::BALANCED_TARGET,
+            );
+            let record = RoundRecord {
+                round,
+                moves_executed: moves.len(),
+                score: report.solution.score,
+                p99_latency_ms: report.p99_latency_ms,
+                worst_imbalance: worst,
+                pipeline_ms: report.pipeline_ms,
+                ticks_skipped,
+            };
+            self.metrics.rounds += 1;
+            self.metrics.ticks_skipped += ticks_skipped;
+            self.metrics.imbalance.push(worst);
+            self.metrics.latency_p99.push(report.p99_latency_ms);
+            self.metrics.pipeline_ms.push(report.pipeline_ms);
+            self.metrics.moves.push(moves.len() as f64);
+            log::info!(
+                "round {round}: {} moves, imbalance {:.3}, p99 {:.0}ms, {:.0}ms",
+                moves.len(),
+                worst,
+                report.p99_latency_ms,
+                report.pipeline_ms
+            );
+            self.log.push(record);
+            reports.push(report);
+        }
+        reports
+    }
+
+    /// Workload drift between rounds: lognormal demand wobble plus
+    /// optional app arrivals (fresh apps land on their SLO's first tier).
+    fn drift(&mut self) {
+        if self.config.drift_sigma > 0.0 {
+            for app in &mut self.apps {
+                let m = self.rng.log_normal(0.0, self.config.drift_sigma);
+                app.demand = app.demand.scale(m);
+                app.demand.0[2] = app.demand.0[2].round().max(1.0);
+            }
+        }
+        if self.config.arrival_prob > 0.0 && self.rng.chance(self.config.arrival_prob) {
+            let id = crate::model::AppId(self.apps.len());
+            let template = self.apps[self.rng.range(0, self.apps.len())].clone();
+            let tier = crate::workload::tiers_for_slo(template.slo, self.tiers.len())[0];
+            self.apps.push(App {
+                id,
+                name: format!("arrival-{}", id.0),
+                ..template
+            });
+            // Grow the assignment: the new app starts on an allowed tier.
+            let mut tiers = self.current.as_slice().to_vec();
+            tiers.push(tier);
+            self.current = Assignment::new(tiers);
+        }
+    }
+
+    /// Decision log as a JSON array (persisted by the CLI).
+    pub fn log_json(&self) -> Json {
+        Json::arr(self.log.iter().map(|r| r.to_json()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{generate, WorkloadSpec};
+    use std::time::Duration;
+
+    fn coordinator(rounds_cfg: impl FnOnce(&mut CoordinatorConfig)) -> Coordinator {
+        let bed = generate(&WorkloadSpec::small());
+        let mut cfg = CoordinatorConfig {
+            sptlb: SptlbConfig {
+                timeout: Duration::from_millis(25),
+                ..SptlbConfig::default()
+            },
+            ..CoordinatorConfig::default()
+        };
+        rounds_cfg(&mut cfg);
+        Coordinator::from_testbed(cfg, bed)
+    }
+
+    #[test]
+    fn runs_rounds_and_logs() {
+        let mut c = coordinator(|_| {});
+        let reports = c.run(3);
+        assert_eq!(reports.len(), 3);
+        assert_eq!(c.log.len(), 3);
+        assert_eq!(c.metrics.rounds, 3);
+        assert!(c.metrics.imbalance.mean().is_finite());
+    }
+
+    #[test]
+    fn assignment_carries_across_rounds() {
+        let mut c = coordinator(|cfg| cfg.drift_sigma = 0.0);
+        let before = c.current_assignment().clone();
+        let reports = c.run(1);
+        let after = c.current_assignment().clone();
+        assert_eq!(&after, &reports[0].solution.assignment);
+        // Round 2's problem must use round 1's output as incumbent.
+        let r2 = c.run(1);
+        assert_eq!(r2[0].problem.initial, after);
+        let _ = before;
+    }
+
+    #[test]
+    fn drift_changes_demands() {
+        let mut c = coordinator(|cfg| cfg.drift_sigma = 0.2);
+        let before: f64 = c.apps.iter().map(|a| a.demand.cpu()).sum();
+        c.run(1);
+        let after: f64 = c.apps.iter().map(|a| a.demand.cpu()).sum();
+        assert_ne!(before, after);
+    }
+
+    #[test]
+    fn arrivals_grow_population() {
+        let mut c = coordinator(|cfg| {
+            cfg.arrival_prob = 1.0;
+            cfg.drift_sigma = 0.0;
+        });
+        let n0 = c.apps.len();
+        c.run(2);
+        assert_eq!(c.apps.len(), n0 + 2);
+        assert_eq!(c.current_assignment().n_apps(), n0 + 2);
+    }
+
+    #[test]
+    fn backpressure_counts_skipped_ticks() {
+        let mut c = coordinator(|cfg| {
+            cfg.tick = Duration::from_nanos(100); // force overrun
+        });
+        c.run(1);
+        assert!(c.log[0].ticks_skipped >= 1);
+        assert!(c.metrics.ticks_skipped >= 1);
+    }
+
+    #[test]
+    fn log_json_parses() {
+        let mut c = coordinator(|_| {});
+        c.run(2);
+        let j = c.log_json().pretty();
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 2);
+        let m = c.metrics.to_json().to_string();
+        assert!(crate::util::json::Json::parse(&m).is_ok());
+    }
+}

@@ -1,0 +1,228 @@
+//! Baseline greedy scheduler (§4.1) — "a stand in for manual decision
+//! making":
+//!
+//!   1. Identify the tier with the most resources used given the
+//!      utilization target (used/target) and the least.
+//!   2. Identify the largest app (by the prioritized resource) on the hot
+//!      tier that hasn't already been moved.
+//!   3. Move it to the tier with the lowest utilization.
+//!   4. Loop from 1 until x% of apps moved or timeout.
+//!
+//! One variant per resource objective (greedy-cpu, greedy-mem,
+//! greedy-task-count) — Fig. 3 shows each balances only its own objective.
+
+use crate::model::{ResourceKind, TierId};
+use crate::rebalancer::problem::Problem;
+use crate::rebalancer::solution::{Solution, SolveStats, SolverKind};
+use crate::util::timer::Deadline;
+
+/// The greedy baseline, parameterized by the resource it prioritizes.
+#[derive(Debug, Clone, Copy)]
+pub struct GreedyScheduler {
+    pub objective: ResourceKind,
+}
+
+impl GreedyScheduler {
+    pub fn new(objective: ResourceKind) -> Self {
+        Self { objective }
+    }
+
+    /// Relative usage of a tier for the prioritized resource:
+    /// load / (capacity × ideal-utilization) — "resources used given the
+    /// utilization target".
+    fn relative_usage(&self, problem: &Problem, loads: &[crate::model::ResourceVec], t: usize) -> f64 {
+        let tier = &problem.tiers[t];
+        let target =
+            tier.capacity.get(self.objective) * tier.ideal_utilization.get(self.objective);
+        if target <= 0.0 {
+            return f64::INFINITY;
+        }
+        loads[t].get(self.objective) / target
+    }
+
+    pub fn solve(&self, problem: &Problem, deadline: Deadline) -> Solution {
+        let mut assignment = problem.initial.clone();
+        let mut loads = {
+            let mut l = vec![crate::model::ResourceVec::ZERO; problem.n_tiers()];
+            for (i, app) in problem.apps.iter().enumerate() {
+                l[assignment.as_slice()[i].0] += app.demand;
+            }
+            l
+        };
+        let mut moved = vec![false; problem.n_apps()];
+        let mut n_moved = 0usize;
+        let mut stats = SolveStats::default();
+
+        while n_moved < problem.max_moves && !deadline.expired() {
+            stats.iterations += 1;
+            // 1. hottest and coldest tier by relative usage.
+            let (mut hot, mut cold) = (0usize, 0usize);
+            let (mut hot_u, mut cold_u) = (f64::NEG_INFINITY, f64::INFINITY);
+            for t in 0..problem.n_tiers() {
+                let u = self.relative_usage(problem, &loads, t);
+                if u > hot_u {
+                    hot_u = u;
+                    hot = t;
+                }
+                if u < cold_u {
+                    cold_u = u;
+                    cold = t;
+                }
+            }
+            if hot == cold {
+                break;
+            }
+            // 2. largest unmoved app on the hot tier that may go to cold.
+            let candidate = problem
+                .apps
+                .iter()
+                .enumerate()
+                .filter(|(i, app)| {
+                    !moved[*i]
+                        && assignment.as_slice()[*i] == TierId(hot)
+                        && app.allowed.contains(&TierId(cold))
+                        && !problem
+                            .forbidden_transitions
+                            .contains(&(problem.initial.as_slice()[*i], TierId(cold)))
+                })
+                .max_by(|(_, a), (_, b)| {
+                    a.demand
+                        .get(self.objective)
+                        .partial_cmp(&b.demand.get(self.objective))
+                        .unwrap()
+                });
+            let Some((i, app)) = candidate else {
+                break; // nothing movable: stuck (the greedy failure mode)
+            };
+            stats.candidates_scored += 1;
+            // 3. move it.
+            loads[hot] -= app.demand;
+            loads[cold] += app.demand;
+            assignment.set(crate::model::AppId(i), TierId(cold));
+            moved[i] = true;
+            // Moving back to the incumbent frees budget; count real moves.
+            n_moved = assignment.move_count_from(&problem.initial);
+        }
+
+        stats.elapsed = deadline.elapsed();
+        let mut sol = Solution::of_assignment(problem, assignment, SolverKind::LocalSearch);
+        sol.stats = stats;
+        sol
+    }
+}
+
+/// Run all three greedy variants (Fig. 3's greedy-cpu/mem/task bars).
+pub fn all_variants(problem: &Problem, deadline_ms: u64) -> Vec<(ResourceKind, Solution)> {
+    ResourceKind::ALL
+        .iter()
+        .map(|&k| {
+            (
+                k,
+                GreedyScheduler::new(k).solve(problem, Deadline::after_ms(deadline_ms)),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rebalancer::constraints::{validate, Violation};
+    use crate::rebalancer::problem::GoalWeights;
+    use crate::util::stats::max_abs_dev_from_mean;
+    use crate::workload::{generate, WorkloadSpec};
+
+    fn problem() -> Problem {
+        let bed = generate(&WorkloadSpec::paper());
+        Problem::build(&bed.apps, &bed.tiers, bed.initial, 0.10, GoalWeights::default()).unwrap()
+    }
+
+    fn utils_for(problem: &Problem, sol: &Solution, kind: ResourceKind) -> Vec<f64> {
+        sol.projected_utilizations(problem)
+            .iter()
+            .map(|u| u.get(kind))
+            .collect()
+    }
+
+    #[test]
+    fn improves_its_own_objective() {
+        let p = problem();
+        for kind in ResourceKind::ALL {
+            let sol = GreedyScheduler::new(kind).solve(&p, Deadline::after_ms(100));
+            let before: Vec<f64> = p
+                .initial
+                .clone()
+                .as_slice()
+                .iter()
+                .enumerate()
+                .fold(vec![crate::model::ResourceVec::ZERO; p.n_tiers()], |mut acc, (i, t)| {
+                    acc[t.0] += p.apps[i].demand;
+                    acc
+                })
+                .iter()
+                .zip(&p.tiers)
+                .map(|(l, t)| l.div_elem(&t.capacity).get(kind))
+                .collect();
+            let after = utils_for(&p, &sol, kind);
+            assert!(
+                max_abs_dev_from_mean(&after) < max_abs_dev_from_mean(&before),
+                "greedy-{kind} must narrow its own spread"
+            );
+        }
+    }
+
+    #[test]
+    fn respects_movement_budget_and_placement() {
+        let p = problem();
+        for kind in ResourceKind::ALL {
+            let sol = GreedyScheduler::new(kind).solve(&p, Deadline::after_ms(100));
+            assert!(sol.assignment.move_count_from(&p.initial) <= p.max_moves);
+            let vs = validate(&p, &sol.assignment);
+            assert!(
+                vs.iter().all(|v| matches!(v, Violation::CapacityExceeded { .. })),
+                "{vs:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn each_app_moved_at_most_once() {
+        let p = problem();
+        let sol = GreedyScheduler::new(ResourceKind::Cpu).solve(&p, Deadline::after_ms(100));
+        // "hasn't already been moved yet": every moved app differs from
+        // its incumbent by exactly one hop (no app bounces twice).
+        assert!(sol.moves(&p).len() <= p.max_moves);
+    }
+
+    #[test]
+    fn zero_deadline_returns_incumbent() {
+        let p = problem();
+        let sol = GreedyScheduler::new(ResourceKind::Mem).solve(&p, Deadline::after_ms(0));
+        assert_eq!(sol.assignment, p.initial);
+    }
+
+    #[test]
+    fn all_variants_returns_three() {
+        let p = problem();
+        let out = all_variants(&p, 50);
+        assert_eq!(out.len(), 3);
+        let kinds: Vec<ResourceKind> = out.iter().map(|(k, _)| *k).collect();
+        assert_eq!(kinds, ResourceKind::ALL.to_vec());
+    }
+
+    #[test]
+    fn respects_forbidden_transitions() {
+        let mut p = problem();
+        for t in 0..p.n_tiers() {
+            if t != 0 {
+                p.forbid_transition(TierId(2), TierId(t));
+            }
+        }
+        let sol = GreedyScheduler::new(ResourceKind::Cpu).solve(&p, Deadline::after_ms(100));
+        for m in sol.moves(&p) {
+            if m.from == TierId(2) {
+                assert_eq!(m.to, TierId(0));
+            }
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! Host scheduler (lower-level scheduler #2 in Fig. 2): "if there are
+//! available hosts to allocate the application to, it accepts the mapping
+//! ... if it fails it returns false". We model each tier as a set of
+//! equal hosts and test placement feasibility with first-fit-decreasing
+//! bin packing over cpu+mem (tasks are not host-bound).
+
+use crate::model::{App, Assignment, Move, Tier, TierId};
+
+/// Host fleet description for one tier.
+#[derive(Debug, Clone)]
+pub struct TierHosts {
+    pub tier: TierId,
+    pub n_hosts: usize,
+    /// Per-host capacity (cpu cores, mem GiB).
+    pub host_cpu: f64,
+    pub host_mem: f64,
+}
+
+impl TierHosts {
+    /// Split a tier's capacity across `n_hosts` equal hosts.
+    pub fn from_tier(tier: &Tier, n_hosts: usize) -> Self {
+        assert!(n_hosts > 0);
+        Self {
+            tier: tier.id,
+            n_hosts,
+            host_cpu: tier.capacity.cpu() / n_hosts as f64,
+            host_mem: tier.capacity.mem() / n_hosts as f64,
+        }
+    }
+}
+
+/// Verdict for a proposed move at the host level.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum HostVerdict {
+    Accept,
+    /// No feasible packing of the destination tier with this app added.
+    Reject,
+}
+
+/// Host scheduler: per-tier FFD packing feasibility.
+#[derive(Debug, Clone)]
+pub struct HostScheduler {
+    pub hosts: Vec<TierHosts>,
+}
+
+impl HostScheduler {
+    pub fn new(hosts: Vec<TierHosts>) -> Self {
+        Self { hosts }
+    }
+
+    /// Uniform fleet: every tier split into `hosts_per_tier` hosts.
+    pub fn uniform(tiers: &[Tier], hosts_per_tier: usize) -> Self {
+        Self::new(tiers.iter().map(|t| TierHosts::from_tier(t, hosts_per_tier)).collect())
+    }
+
+    /// Can `apps_on_tier` be packed onto the tier's hosts? FFD on the max
+    /// of cpu/mem fraction (the tighter dimension drives placement).
+    /// Apps larger than one host span hosts (stream jobs are multi-task):
+    /// they consume `floor(max_dim_fraction)` dedicated hosts and their
+    /// remainder is packed normally.
+    pub fn packable(&self, tier: TierId, apps_on_tier: &[&App]) -> bool {
+        let h = &self.hosts[tier.0];
+        if h.host_cpu <= 0.0 || h.host_mem <= 0.0 {
+            return apps_on_tier.is_empty();
+        }
+        let mut hosts_available = h.n_hosts;
+        let mut items: Vec<(f64, f64)> = Vec::with_capacity(apps_on_tier.len());
+        for a in apps_on_tier {
+            let (mut cpu, mut mem) = (a.demand.cpu(), a.demand.mem());
+            let frac = (cpu / h.host_cpu).max(mem / h.host_mem);
+            if frac > 1.0 {
+                // Multi-host app: dedicate whole hosts to the bulk.
+                let dedicated = frac.floor() as usize;
+                if dedicated > hosts_available {
+                    return false;
+                }
+                hosts_available -= dedicated;
+                cpu = (cpu - dedicated as f64 * h.host_cpu).max(0.0);
+                mem = (mem - dedicated as f64 * h.host_mem).max(0.0);
+            }
+            if cpu > 0.0 || mem > 0.0 {
+                items.push((cpu, mem));
+            }
+        }
+        items.sort_by(|a, b| {
+            let ka = (a.0 / h.host_cpu).max(a.1 / h.host_mem);
+            let kb = (b.0 / h.host_cpu).max(b.1 / h.host_mem);
+            kb.partial_cmp(&ka).unwrap()
+        });
+        let mut bins: Vec<(f64, f64)> = Vec::with_capacity(hosts_available);
+        'items: for (cpu, mem) in items {
+            for bin in bins.iter_mut() {
+                if bin.0 + cpu <= h.host_cpu && bin.1 + mem <= h.host_mem {
+                    bin.0 += cpu;
+                    bin.1 += mem;
+                    continue 'items;
+                }
+            }
+            if bins.len() < hosts_available {
+                bins.push((cpu, mem));
+            } else {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Vet a proposed assignment's moves: a move is rejected if its
+    /// destination tier (with all proposed residents) fails to pack.
+    pub fn vet(
+        &self,
+        moves: &[Move],
+        proposed: &Assignment,
+        apps: &[App],
+    ) -> Vec<(Move, HostVerdict)> {
+        // Pre-compute packability per destination tier once.
+        let mut verdict_per_tier = std::collections::BTreeMap::<usize, bool>::new();
+        for m in moves {
+            verdict_per_tier.entry(m.to.0).or_insert_with(|| {
+                let residents: Vec<&App> = apps
+                    .iter()
+                    .filter(|a| proposed.tier_of(a.id) == m.to)
+                    .collect();
+                self.packable(m.to, &residents)
+            });
+        }
+        moves
+            .iter()
+            .map(|m| {
+                let ok = verdict_per_tier[&m.to.0];
+                (*m, if ok { HostVerdict::Accept } else { HostVerdict::Reject })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tier::default_ideal_utilization;
+    use crate::model::{AppId, Criticality, RegionId, RegionSet, ResourceVec, Slo};
+
+    fn app(i: usize, cpu: f64, mem: f64) -> App {
+        App {
+            id: AppId(i),
+            name: format!("a{i}"),
+            demand: ResourceVec::new(cpu, mem, 1.0),
+            slo: Slo::Slo3,
+            criticality: Criticality::new(0.1),
+            preferred_region: RegionId(0),
+        }
+    }
+
+    fn tier(cpu: f64, mem: f64) -> Tier {
+        Tier {
+            id: TierId(0),
+            name: "t".into(),
+            capacity: ResourceVec::new(cpu, mem, 1000.0),
+            ideal_utilization: default_ideal_utilization(),
+            supported_slos: vec![Slo::Slo3],
+            regions: RegionSet::from_indices([0]),
+        }
+    }
+
+    #[test]
+    fn packs_when_capacity_ample() {
+        let t = tier(100.0, 100.0);
+        let sched = HostScheduler::uniform(&[t], 4); // 4 hosts of 25/25
+        let apps: Vec<App> = (0..8).map(|i| app(i, 10.0, 10.0)).collect();
+        let refs: Vec<&App> = apps.iter().collect();
+        assert!(sched.packable(TierId(0), &refs));
+    }
+
+    #[test]
+    fn multi_host_app_spans_hosts() {
+        let t = tier(100.0, 100.0);
+        let sched = HostScheduler::uniform(&[t], 4); // hosts 25/25
+        let big = app(0, 30.0, 5.0); // 1 dedicated host + 5-cpu remainder
+        assert!(sched.packable(TierId(0), &[&big]));
+        // But a fleet-sized app cannot exceed the whole fleet.
+        let huge = app(1, 120.0, 5.0); // needs 4 dedicated + remainder
+        assert!(!sched.packable(TierId(0), &[&huge]));
+    }
+
+    #[test]
+    fn rejects_fragmented_overflow() {
+        // Total fits (4×25=100 >= 6×16=96) but fragmentation forbids more
+        // than one 16-cpu app per 25-cpu host => need 6 hosts, have 4.
+        let t = tier(100.0, 400.0);
+        let sched = HostScheduler::uniform(&[t], 4);
+        let apps: Vec<App> = (0..6).map(|i| app(i, 16.0, 1.0)).collect();
+        let refs: Vec<&App> = apps.iter().collect();
+        assert!(!sched.packable(TierId(0), &refs));
+    }
+
+    #[test]
+    fn ffd_succeeds_where_naive_might_not() {
+        // Items 15,15,10,10,5,5 into hosts of 25: FFD packs as
+        // (15,10)(15,10)(5,5) in 3 bins.
+        let t = tier(75.0, 750.0);
+        let sched = HostScheduler::uniform(&[t], 3);
+        let sizes = [15.0, 5.0, 15.0, 10.0, 5.0, 10.0];
+        let apps: Vec<App> = sizes.iter().enumerate().map(|(i, &c)| app(i, c, 1.0)).collect();
+        let refs: Vec<&App> = apps.iter().collect();
+        assert!(sched.packable(TierId(0), &refs));
+    }
+
+    #[test]
+    fn vet_flags_overflowing_destination() {
+        let tiers = vec![tier(100.0, 100.0)];
+        let sched = HostScheduler::uniform(&tiers, 2); // 2 hosts of 50/50
+        let apps: Vec<App> = (0..3).map(|i| app(i, 40.0, 40.0)).collect();
+        // All three proposed onto tier0: only 2 fit (one per host).
+        let proposed = Assignment::uniform(3, TierId(0));
+        let moves = vec![Move { app: AppId(2), from: TierId(0), to: TierId(0) }];
+        let verdicts = sched.vet(&moves, &proposed, &apps);
+        assert_eq!(verdicts[0].1, HostVerdict::Reject);
+    }
+}

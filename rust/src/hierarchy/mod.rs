@@ -1,0 +1,13 @@
+//! Hierarchy co-operation (DESIGN.md S10): the lower-level region/host
+//! schedulers (Fig. 2), the avoid-constraint feedback protocol (§3.4),
+//! and the three integration variants evaluated in §4.2.2–4.2.3.
+
+pub mod host;
+pub mod protocol;
+pub mod region;
+pub mod variants;
+
+pub use host::{HostScheduler, HostVerdict, TierHosts};
+pub use protocol::{CoopConfig, CoopOutcome, CoopProtocol, RoundTrace};
+pub use region::{RegionScheduler, RegionVerdict};
+pub use variants::{run_variant, worst_imbalance, Variant, VariantResult};

@@ -1,0 +1,292 @@
+//! The co-operation protocol (§3.4, Fig. 2): SPTLB proposes an app→tier
+//! mapping; the region scheduler vets each move (near-data-source test);
+//! surviving moves are vetted by the host scheduler (packing test). Every
+//! rejected move comes back to SPTLB as an *avoid constraint* (the same
+//! mechanism as C4's SLO avoids) and SPTLB re-solves. "These iterations
+//! continue until SPTLB times out or the number of iterations limit is
+//! reached."
+
+use crate::hierarchy::host::{HostScheduler, HostVerdict};
+use crate::hierarchy::region::{RegionScheduler, RegionVerdict};
+use crate::model::App;
+use crate::rebalancer::local_search::LocalSearch;
+use crate::rebalancer::optimal::OptimalSearch;
+use crate::rebalancer::problem::Problem;
+use crate::rebalancer::solution::{Solution, SolverKind};
+use crate::util::timer::Deadline;
+use std::time::Duration;
+
+/// Per-round record for tracing / Fig. 2 demos.
+#[derive(Debug, Clone)]
+pub struct RoundTrace {
+    pub round: u32,
+    pub proposed_moves: usize,
+    pub region_rejects: usize,
+    pub host_rejects: usize,
+    pub avoid_edges_added: usize,
+    pub score: f64,
+}
+
+/// Protocol outcome.
+#[derive(Debug, Clone)]
+pub struct CoopOutcome {
+    /// The accepted (or best-effort, on limit/timeout) solution.
+    pub solution: Solution,
+    pub rounds: Vec<RoundTrace>,
+    /// True if every proposed move was accepted by both schedulers.
+    pub fully_accepted: bool,
+    pub elapsed: Duration,
+}
+
+/// Protocol configuration.
+#[derive(Debug, Clone)]
+pub struct CoopConfig {
+    pub max_rounds: u32,
+    pub solver: SolverKind,
+    pub seed: u64,
+}
+
+impl Default for CoopConfig {
+    fn default() -> Self {
+        Self { max_rounds: 8, solver: SolverKind::LocalSearch, seed: 0xC0 }
+    }
+}
+
+/// Runs SPTLB ↔ region ↔ host co-operation rounds.
+pub struct CoopProtocol {
+    pub region: RegionScheduler,
+    pub host: HostScheduler,
+    pub config: CoopConfig,
+}
+
+impl CoopProtocol {
+    pub fn new(region: RegionScheduler, host: HostScheduler, config: CoopConfig) -> Self {
+        Self { region, host, config }
+    }
+
+    /// Run the protocol. `problem` accumulates avoid constraints across
+    /// rounds (the caller keeps the mutated problem for inspection).
+    /// `apps`/`tiers` are the domain views the lower-level schedulers
+    /// need (regions, preferred regions, host fleets).
+    pub fn run(
+        &self,
+        problem: &mut Problem,
+        apps: &[App],
+        tiers: &[crate::model::Tier],
+        deadline: Deadline,
+    ) -> CoopOutcome {
+        let mut rounds = Vec::new();
+        let mut best: Option<Solution> = None;
+        let mut warm_start: Option<crate::model::Assignment> = None;
+
+        for round in 0..self.config.max_rounds {
+            if deadline.expired() {
+                break;
+            }
+            // Geometric budget split: each round gets 60% of what's
+            // left, so the first solve is substantive (a starved first
+            // round would propose zero moves and trivially self-accept)
+            // while later rounds still have room to re-solve.
+            let per_round = deadline.remaining().mul_f64(0.6);
+            let round_deadline = Deadline::after(per_round);
+
+            // --- SPTLB solve (warm-started from the previous proposal:
+            // avoid edges only *remove* options, so the prior solution
+            // minus its rejected moves is a strong, feasible start).
+            let solution = match (self.config.solver, &warm_start) {
+                (SolverKind::LocalSearch, Some(start)) => {
+                    LocalSearch::with_seed(self.config.seed + round as u64)
+                        .solve_from(problem, round_deadline, start.clone())
+                }
+                (SolverKind::LocalSearch, None) => {
+                    LocalSearch::with_seed(self.config.seed + round as u64)
+                        .solve(problem, round_deadline)
+                }
+                (SolverKind::OptimalSearch, _) => {
+                    OptimalSearch::with_seed(self.config.seed + round as u64)
+                        .solve(problem, round_deadline)
+                }
+            };
+            let moves = solution.moves(problem);
+
+            // --- region scheduler vets each move.
+            let region_verdicts = self.region.vet(&moves, apps, tiers);
+            let region_rejects: Vec<_> = region_verdicts
+                .iter()
+                .filter(|(_, v)| !matches!(v, RegionVerdict::Accept))
+                .map(|(m, _)| *m)
+                .collect();
+
+            // --- host scheduler vets the survivors.
+            let surviving: Vec<_> = region_verdicts
+                .iter()
+                .filter(|(_, v)| matches!(v, RegionVerdict::Accept))
+                .map(|(m, _)| *m)
+                .collect();
+            let host_verdicts = self.host.vet(&surviving, &solution.assignment, apps);
+            let host_rejects: Vec<_> = host_verdicts
+                .iter()
+                .filter(|(_, v)| *v == HostVerdict::Reject)
+                .map(|(m, _)| *m)
+                .collect();
+
+            // --- feed rejections back as avoid constraints. Transition
+            // rejections ban the tier→tier transition globally (§4.2.2:
+            // manual_cnst "deters transitions ... detected as high
+            // latency"); data-proximity and host rejections only avoid
+            // the specific (app, tier) placement.
+            let mut added = 0;
+            for (m, v) in region_verdicts.iter() {
+                match v {
+                    RegionVerdict::Accept => {}
+                    RegionVerdict::RejectTransition { .. } => {
+                        if !problem.forbidden_transitions.contains(&(m.from, m.to)) {
+                            problem.forbid_transition(m.from, m.to);
+                            added += 1;
+                        }
+                    }
+                    RegionVerdict::Reject { .. } => {
+                        if problem.add_avoid(m.app, m.to) {
+                            added += 1;
+                        }
+                    }
+                }
+            }
+            for m in host_rejects.iter() {
+                if problem.add_avoid(m.app, m.to) {
+                    added += 1;
+                }
+            }
+
+            // A cleaned copy of the proposal (rejected moves reverted) is
+            // both the warm start and the acceptable fallback solution.
+            let mut cleaned = solution.assignment.clone();
+            for m in region_rejects.iter().chain(host_rejects.iter()) {
+                cleaned.set(m.app, m.from);
+            }
+            let cleaned_solution =
+                Solution::of_assignment(problem, cleaned.clone(), self.config.solver);
+
+            rounds.push(RoundTrace {
+                round,
+                proposed_moves: moves.len(),
+                region_rejects: region_rejects.len(),
+                host_rejects: host_rejects.len(),
+                avoid_edges_added: added,
+                score: solution.score,
+            });
+
+            // An empty proposal (e.g. a time-starved OptimalSearch round)
+            // must not self-accept: later rounds get the leftover budget
+            // and a real chance to propose moves.
+            let accepted =
+                !moves.is_empty() && region_rejects.is_empty() && host_rejects.is_empty();
+            let candidate = if accepted { solution } else { cleaned_solution };
+            if best.as_ref().map_or(true, |b| candidate.score < b.score) {
+                best = Some(candidate);
+            }
+            if accepted {
+                return CoopOutcome {
+                    solution: best.unwrap(),
+                    rounds,
+                    fully_accepted: true,
+                    elapsed: deadline.elapsed(),
+                };
+            }
+            warm_start = Some(cleaned);
+        }
+
+        let solution = best.unwrap_or_else(|| {
+            Solution::of_assignment(problem, problem.initial.clone(), self.config.solver)
+        });
+        CoopOutcome { solution, rounds, fully_accepted: false, elapsed: deadline.elapsed() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rebalancer::constraints::{validate, Violation};
+    use crate::rebalancer::problem::GoalWeights;
+    use crate::rebalancer::scoring::score_assignment;
+    use crate::workload::{generate, WorkloadSpec};
+
+    fn setup(
+        proximity_ms: f64,
+    ) -> (Problem, Vec<App>, Vec<crate::model::Tier>, CoopProtocol) {
+        let bed = generate(&WorkloadSpec::paper());
+        let problem = Problem::build(
+            &bed.apps,
+            &bed.tiers,
+            bed.initial.clone(),
+            0.10,
+            GoalWeights::default(),
+        )
+        .unwrap();
+        let region = RegionScheduler::new(bed.latency.clone(), proximity_ms);
+        let host = HostScheduler::uniform(&bed.tiers, 16);
+        let proto = CoopProtocol::new(region, host, CoopConfig::default());
+        (problem, bed.apps, bed.tiers, proto)
+    }
+
+    #[test]
+    fn generous_budget_accepts_quickly() {
+        let (mut p, apps, tiers, proto) = setup(1e6);
+        let out = proto.run(&mut p, &apps, &tiers, Deadline::after_ms(400));
+        assert!(out.fully_accepted);
+        assert_eq!(out.rounds.last().unwrap().region_rejects, 0);
+    }
+
+    #[test]
+    fn strict_budget_adds_avoids_and_converges() {
+        let (mut p, apps, tiers, proto) = setup(8.0);
+        let allowed_before: usize = p.apps.iter().map(|a| a.allowed.len()).sum();
+        let out = proto.run(&mut p, &apps, &tiers, Deadline::after_ms(600));
+        let allowed_after: usize = p.apps.iter().map(|a| a.allowed.len()).sum();
+        // Either accepted outright (no rejects ever) or avoid edges were
+        // added along the way.
+        if out.rounds.iter().any(|r| r.region_rejects + r.host_rejects > 0) {
+            assert!(allowed_after < allowed_before, "avoid edges must shrink sets");
+        }
+        // The returned solution's own moves are all acceptable: re-vet.
+        let moves = out.solution.moves(&p);
+        let verdicts = proto.region.vet(&moves, &apps, &tiers);
+        assert!(verdicts
+            .iter()
+            .all(|(_, v)| matches!(v, RegionVerdict::Accept)));
+    }
+
+    #[test]
+    fn outcome_improves_over_incumbent() {
+        let (mut p, apps, tiers, proto) = setup(25.0);
+        let (initial_score, _) = score_assignment(&p, &p.initial.clone());
+        let out = proto.run(&mut p, &apps, &tiers, Deadline::after_ms(600));
+        assert!(out.solution.score <= initial_score);
+    }
+
+    #[test]
+    fn solution_respects_constraints() {
+        let (mut p, apps, tiers, proto) = setup(15.0);
+        let out = proto.run(&mut p, &apps, &tiers, Deadline::after_ms(400));
+        let vs = validate(&p, &out.solution.assignment);
+        assert!(
+            vs.iter().all(|v| matches!(v, Violation::CapacityExceeded { .. })),
+            "{vs:?}"
+        );
+    }
+
+    #[test]
+    fn round_limit_respected() {
+        let (mut p, apps, tiers, mut proto) = setup(0.0); // reject everything
+        proto.config.max_rounds = 3;
+        let out = proto.run(&mut p, &apps, &tiers, Deadline::after_ms(500));
+        assert!(out.rounds.len() <= 3);
+        // With an impossible proximity budget the protocol cannot fully
+        // accept any non-empty move set; it must fall back gracefully.
+        let moves = out.solution.moves(&p);
+        let verdicts = proto.region.vet(&moves, &apps, &tiers);
+        assert!(verdicts
+            .iter()
+            .all(|(_, v)| matches!(v, RegionVerdict::Accept)));
+    }
+}

@@ -1,0 +1,165 @@
+//! Region scheduler (lower-level scheduler #1 in Fig. 2). Its real job at
+//! Meta is placing an app's tasks in a region near its data source; in the
+//! co-operation protocol it *vets* SPTLB's proposed app→tier mapping: "if
+//! it isn't possible to keep an app near its data source with the given
+//! tier, it returns false".
+
+use crate::model::{App, Move, Tier};
+use crate::network::{app_tier_latency_ms, transition_latencies, LatencyMatrix};
+use crate::util::stats::Ecdf;
+
+/// Verdict for one proposed move.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RegionVerdict {
+    Accept,
+    /// Rejected: best achievable latency to the data source on the
+    /// destination tier (ms) exceeded the budget.
+    Reject { achievable_ms: f64 },
+    /// Rejected: the tier→tier transition's worst-case (p99) latency
+    /// exceeded the budget — "high latency transitions" (§4.2.2's
+    /// manual_cnst criterion).
+    RejectTransition { p99_ms: f64 },
+}
+
+/// Region scheduler over a latency matrix. Rejects a proposed move when
+/// EITHER the app cannot stay near its data source on the destination
+/// tier (Fig. 2's test) OR the tier→tier transition itself is a
+/// high-latency one (the criterion the paper's manual_cnst variant feeds
+/// back as avoid constraints).
+#[derive(Debug, Clone)]
+pub struct RegionScheduler {
+    pub latency: LatencyMatrix,
+    /// An app is "near its data source" if some region of the hosting
+    /// tier is within this budget of its preferred region.
+    pub proximity_budget_ms: f64,
+    /// Transitions whose worst-case (p99 of the region cross-product)
+    /// latency exceeds this are rejected outright.
+    pub transition_p99_budget_ms: f64,
+}
+
+/// Default worst-case transition budget: adjacent-cluster transitions
+/// (~50–110ms in the synthetic matrix) pass; cross-continent (~150ms)
+/// fail.
+pub const DEFAULT_TRANSITION_P99_MS: f64 = 120.0;
+
+impl RegionScheduler {
+    pub fn new(latency: LatencyMatrix, proximity_budget_ms: f64) -> Self {
+        Self {
+            latency,
+            proximity_budget_ms,
+            transition_p99_budget_ms: DEFAULT_TRANSITION_P99_MS,
+        }
+    }
+
+    /// Worst-case (p99) latency of a tier→tier transition.
+    pub fn transition_p99_ms(&self, src: &Tier, dst: &Tier) -> f64 {
+        Ecdf::new(transition_latencies(src, dst, &self.latency)).p99()
+    }
+
+    /// Vet a single proposed move.
+    pub fn vet_move(&self, app: &App, src: &Tier, dst: &Tier) -> RegionVerdict {
+        let p99 = self.transition_p99_ms(src, dst);
+        if p99 > self.transition_p99_budget_ms {
+            return RegionVerdict::RejectTransition { p99_ms: p99 };
+        }
+        let achievable = app_tier_latency_ms(app, dst, &self.latency);
+        if achievable <= self.proximity_budget_ms {
+            RegionVerdict::Accept
+        } else {
+            RegionVerdict::Reject { achievable_ms: achievable }
+        }
+    }
+
+    /// Vet a full move list; returns (move, verdict) pairs.
+    pub fn vet(&self, moves: &[Move], apps: &[App], tiers: &[Tier]) -> Vec<(Move, RegionVerdict)> {
+        moves
+            .iter()
+            .map(|m| {
+                (
+                    *m,
+                    self.vet_move(&apps[m.app.0], &tiers[m.from.0], &tiers[m.to.0]),
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{AppId, Criticality, RegionId, RegionSet, ResourceVec, Slo, TierId};
+    use crate::model::tier::default_ideal_utilization;
+    use crate::util::prng::Pcg64;
+
+    fn app(preferred: usize) -> App {
+        App {
+            id: AppId(0),
+            name: "a".into(),
+            demand: ResourceVec::splat(1.0),
+            slo: Slo::Slo3,
+            criticality: Criticality::new(0.2),
+            preferred_region: RegionId(preferred),
+        }
+    }
+
+    fn tier(regions: &[usize]) -> Tier {
+        Tier {
+            id: TierId(0),
+            name: "t".into(),
+            capacity: ResourceVec::splat(100.0),
+            ideal_utilization: default_ideal_utilization(),
+            supported_slos: vec![Slo::Slo3],
+            regions: RegionSet::from_indices(regions.iter().copied()),
+        }
+    }
+
+    #[test]
+    fn accepts_tier_containing_preferred_region() {
+        let mut rng = Pcg64::new(1);
+        let lat = LatencyMatrix::synthesize(8, 4, &mut rng);
+        let sched = RegionScheduler::new(lat, 10.0);
+        let src = tier(&[1, 2, 3]);
+        assert_eq!(
+            sched.vet_move(&app(2), &src, &tier(&[1, 2, 3])),
+            RegionVerdict::Accept
+        );
+    }
+
+    #[test]
+    fn rejects_distant_data_source() {
+        let mut rng = Pcg64::new(2);
+        // Blocked clusters of 2: region 0 in cluster 0; {2,3} cluster 1.
+        let lat = LatencyMatrix::synthesize(8, 4, &mut rng);
+        let sched = RegionScheduler::new(lat, 10.0);
+        let src = tier(&[2, 3]);
+        match sched.vet_move(&app(0), &src, &tier(&[2, 3])) {
+            RegionVerdict::Reject { achievable_ms } => assert!(achievable_ms > 10.0),
+            v => panic!("expected reject, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_high_latency_transition() {
+        let mut rng = Pcg64::new(4);
+        let lat = LatencyMatrix::synthesize(8, 4, &mut rng);
+        let sched = RegionScheduler::new(lat, 1e6); // proximity never fails
+        let src = tier(&[0, 1]);
+        let far = tier(&[6, 7]); // 3 clusters (~150ms) away
+        match sched.vet_move(&app(0), &src, &far) {
+            RegionVerdict::RejectTransition { p99_ms } => assert!(p99_ms > 120.0),
+            v => panic!("expected transition reject, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn budget_is_inclusive() {
+        let mut rng = Pcg64::new(3);
+        let lat = LatencyMatrix::synthesize(8, 4, &mut rng);
+        let a = app(0);
+        let t = tier(&[1]); // same cluster as region 0
+        let d = app_tier_latency_ms(&a, &t, &lat);
+        let sched = RegionScheduler::new(lat, d);
+        let src = tier(&[0]);
+        assert_eq!(sched.vet_move(&a, &src, &t), RegionVerdict::Accept);
+    }
+}

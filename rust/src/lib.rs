@@ -1,0 +1,20 @@
+//! # SPTLB — Stream-Processing Tier Load Balancer
+//!
+//! Reproduction of "Designing Co-operation in Systems of Hierarchical,
+//! Multi-objective Schedulers for Stream Processing" (Meta, CS.DC 2025).
+//! See DESIGN.md for the system inventory and experiment index.
+
+pub mod greedy;
+pub mod hierarchy;
+pub mod bench;
+pub mod coordinator;
+pub mod metadata;
+pub mod metrics;
+pub mod model;
+pub mod network;
+pub mod rebalancer;
+pub mod report;
+pub mod runtime;
+pub mod sptlb;
+pub mod util;
+pub mod workload;

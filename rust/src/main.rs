@@ -1,0 +1,316 @@
+//! `sptlb` — leader entrypoint + CLI.
+//!
+//! Subcommands:
+//!   balance   one-shot balancing run on a workload preset; prints the
+//!             §3.3 report (projected mapping, metrics, validation).
+//!   serve     run the coordinator leader loop for N rounds (drifting
+//!             workload, decision log, service metrics).
+//!   fig3      regenerate Figure 3 (a/b/c) tables for a preset.
+//!   sweep     regenerate the Fig. 4/5 variant×solver×timeout sweep.
+//!   check     verify the AOT artifacts load and match the rust scorer.
+
+use sptlb::coordinator::{Coordinator, CoordinatorConfig};
+use sptlb::hierarchy::variants::Variant;
+use sptlb::metadata::MetadataStore;
+use sptlb::rebalancer::solution::SolverKind;
+use sptlb::report;
+use sptlb::sptlb::{Sptlb, SptlbConfig};
+use sptlb::util::cli::Command;
+use sptlb::workload::{TestBed, WorkloadSpec};
+use std::time::Duration;
+
+fn main() {
+    sptlb::util::logger::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("balance") => cmd_balance(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("fig3") => cmd_fig3(&args[1..]),
+        Some("sweep") => cmd_sweep(&args[1..]),
+        Some("check") => cmd_check(&args[1..]),
+        Some("--help") | Some("help") | None => {
+            print_help();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "sptlb — Stream-Processing Tier Load Balancer (paper reproduction)\n\
+         \n\
+         USAGE: sptlb <balance|serve|fig3|sweep|check> [options]\n\
+         \n\
+         Run `sptlb <subcommand> --help` for per-command options."
+    );
+}
+
+fn load_bed(scenario: &str, seed: u64) -> Result<TestBed, String> {
+    WorkloadSpec::by_name(scenario)
+        .map(|s| sptlb::workload::generate(&s.with_seed(seed)))
+        .ok_or_else(|| format!("unknown scenario '{scenario}' (paper|small|large)"))
+}
+
+fn with_parsed(
+    cmd: Command,
+    args: &[String],
+    run: impl FnOnce(sptlb::util::cli::Parsed) -> i32,
+) -> i32 {
+    match cmd.parse(args) {
+        Ok(p) if p.flag("help") => {
+            println!("{}", cmd.usage());
+            0
+        }
+        Ok(p) => run(p),
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", cmd.usage());
+            2
+        }
+    }
+}
+
+fn cmd_balance(args: &[String]) -> i32 {
+    let cmd = Command::new("balance", "one-shot balancing run")
+        .opt("scenario", "paper", "workload preset (paper|small|large)")
+        .opt("seed", "42", "prng seed")
+        .opt("solver", "local", "solver (local|optimal)")
+        .opt("variant", "manual_cnst", "integration variant (no|w|manual)")
+        .opt("timeout-ms", "100", "solver deadline in ms")
+        .opt("movement", "0.10", "movement fraction (C3)")
+        .opt("out", "", "write the full JSON report to this file")
+        .flag("json", "print the JSON report to stdout");
+    with_parsed(cmd, args, |p| {
+        let (scenario, seed) = (p.str("scenario").unwrap(), p.u64("seed").unwrap());
+        let bed = match load_bed(&scenario, seed) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        };
+        let cfg = SptlbConfig {
+            solver: SolverKind::from_name(p.get("solver").unwrap_or("local"))
+                .unwrap_or(SolverKind::LocalSearch),
+            variant: Variant::from_name(p.get("variant").unwrap_or("manual_cnst"))
+                .unwrap_or(Variant::ManualCnst),
+            timeout: Duration::from_millis(p.u64("timeout-ms").unwrap_or(100)),
+            movement_fraction: p.f64("movement").unwrap_or(0.10),
+            seed,
+            ..SptlbConfig::default()
+        };
+        let store = MetadataStore::from_apps(bed.apps.clone()).expect("unique ids");
+        let report = Sptlb::new(cfg).balance(&store, &bed.tiers, &bed.latency, &bed.initial);
+
+        let moves = report.solution.moves(&report.problem);
+        println!(
+            "scenario={scenario} apps={} tiers={} | {} moves, score {:.4}, p99 {:.0}ms, pipeline {:.0}ms",
+            bed.apps.len(),
+            bed.tiers.len(),
+            moves.len(),
+            report.solution.score,
+            report.p99_latency_ms,
+            report.pipeline_ms,
+        );
+        for (i, u) in report.projected_utilization.iter().enumerate() {
+            println!(
+                "  tier{}: cpu {:5.1}%  mem {:5.1}%  tasks {:5.1}%",
+                i + 1,
+                u.cpu() * 100.0,
+                u.mem() * 100.0,
+                u.tasks() * 100.0
+            );
+        }
+        if !report.violations.is_empty() {
+            println!("violations:");
+            for v in &report.violations {
+                println!("  - {v}");
+            }
+        }
+        let j = report.to_json();
+        if p.flag("json") {
+            println!("{}", j.pretty());
+        }
+        if let Ok(path) = p.str("out") {
+            if !path.is_empty() {
+                if let Err(e) = std::fs::write(&path, j.pretty()) {
+                    eprintln!("error writing {path}: {e}");
+                    return 1;
+                }
+                println!("report written to {path}");
+            }
+        }
+        0
+    })
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let cmd = Command::new("serve", "run the coordinator leader loop")
+        .opt("scenario", "paper", "workload preset")
+        .opt("seed", "42", "prng seed")
+        .opt("rounds", "10", "balancing rounds to run")
+        .opt("timeout-ms", "60", "per-round solver deadline")
+        .opt("drift", "0.05", "per-round demand drift sigma")
+        .opt("arrivals", "0.2", "per-round app arrival probability")
+        .opt("log", "", "write the decision log JSON to this file");
+    with_parsed(cmd, args, |p| {
+        let bed = match load_bed(&p.str("scenario").unwrap(), p.u64("seed").unwrap()) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        };
+        let cfg = CoordinatorConfig {
+            sptlb: SptlbConfig {
+                timeout: Duration::from_millis(p.u64("timeout-ms").unwrap_or(60)),
+                seed: p.u64("seed").unwrap_or(42),
+                ..SptlbConfig::default()
+            },
+            drift_sigma: p.f64("drift").unwrap_or(0.05),
+            arrival_prob: p.f64("arrivals").unwrap_or(0.2),
+            ..CoordinatorConfig::default()
+        };
+        let mut coordinator = Coordinator::from_testbed(cfg, bed);
+        let rounds = p.u64("rounds").unwrap_or(10) as u32;
+        coordinator.run(rounds);
+        println!("{}", coordinator.metrics.to_json().pretty());
+        if let Ok(path) = p.str("log") {
+            if !path.is_empty() {
+                if let Err(e) = std::fs::write(&path, coordinator.log_json().pretty()) {
+                    eprintln!("error writing {path}: {e}");
+                    return 1;
+                }
+                println!("decision log written to {path}");
+            }
+        }
+        0
+    })
+}
+
+fn cmd_fig3(args: &[String]) -> i32 {
+    let cmd = Command::new("fig3", "regenerate Figure 3 (a/b/c)")
+        .opt("scenario", "paper", "workload preset")
+        .opt("seed", "42", "prng seed")
+        .opt("timeout-ms", "100", "solver deadline (paper: 30s)")
+        .opt("movement", "0.10", "movement fraction")
+        .flag("csv", "print CSV instead of ASCII charts");
+    with_parsed(cmd, args, |p| {
+        let bed = match load_bed(&p.str("scenario").unwrap(), p.u64("seed").unwrap()) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        };
+        let rep = report::fig3_report(
+            &bed,
+            Duration::from_millis(p.u64("timeout-ms").unwrap_or(100)),
+            p.f64("movement").unwrap_or(0.10),
+            p.u64("seed").unwrap_or(42),
+        );
+        if p.flag("csv") {
+            print!("{}", rep.csv());
+        } else {
+            print!("{}", rep.ascii());
+        }
+        0
+    })
+}
+
+fn cmd_sweep(args: &[String]) -> i32 {
+    let cmd = Command::new("sweep", "regenerate the Fig. 4/5 sweep")
+        .opt("scenario", "paper", "workload preset")
+        .opt("seed", "42", "prng seed")
+        .opt("timeouts-ms", "50,100,300,900", "comma list of solver timeouts")
+        .opt("movement", "0.10", "movement fraction");
+    with_parsed(cmd, args, |p| {
+        let bed = match load_bed(&p.str("scenario").unwrap(), p.u64("seed").unwrap()) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        };
+        let timeouts: Vec<Duration> = p
+            .list("timeouts-ms")
+            .unwrap_or_default()
+            .iter()
+            .filter_map(|s| s.parse::<u64>().ok())
+            .map(Duration::from_millis)
+            .collect();
+        let rows = report::sweep(
+            &bed,
+            &timeouts,
+            p.f64("movement").unwrap_or(0.10),
+            p.u64("seed").unwrap_or(42),
+        );
+        println!("== Figure 4 rows ==");
+        print!("{}", report::fig4_rows(&rows));
+        println!("\n== Figure 5 rows ==");
+        print!("{}", report::fig5_rows(&rows));
+        0
+    })
+}
+
+fn cmd_check(args: &[String]) -> i32 {
+    let cmd = Command::new("check", "verify AOT artifacts against the rust scorer")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("seed", "7", "prng seed");
+    with_parsed(cmd, args, |p| {
+        let dir = std::path::PathBuf::from(p.str("artifacts").unwrap());
+        let mut scorer = match sptlb::runtime::PjrtScorer::from_dir(&dir) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("artifact check FAILED: {e:#}");
+                return 1;
+            }
+        };
+        let bed = sptlb::workload::generate(&WorkloadSpec::paper());
+        let problem = sptlb::rebalancer::Problem::build(
+            &bed.apps,
+            &bed.tiers,
+            bed.initial.clone(),
+            0.10,
+            Default::default(),
+        )
+        .unwrap();
+        let mut rng = sptlb::util::prng::Pcg64::new(p.u64("seed").unwrap_or(7));
+        let candidates: Vec<_> = (0..32)
+            .map(|_| {
+                let mut a = problem.initial.clone();
+                let i = rng.range(0, problem.n_apps());
+                let t = *rng.choose(&problem.apps[i].allowed).unwrap();
+                a.set(sptlb::model::AppId(i), t);
+                a
+            })
+            .collect();
+        let device = match scorer.score(&problem, &candidates) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("artifact check FAILED: {e:#}");
+                return 1;
+            }
+        };
+        let mut worst = 0.0f64;
+        for (i, cand) in candidates.iter().enumerate() {
+            let (cpu, _) = sptlb::rebalancer::score_assignment(&problem, cand);
+            worst = worst.max((device[i] - cpu).abs() / cpu.abs().max(1.0));
+        }
+        if worst < 1e-3 {
+            println!(
+                "artifact check OK: 32 candidates, worst relative error {worst:.2e}, {} dispatch(es)",
+                scorer.dispatches
+            );
+            0
+        } else {
+            eprintln!("parity FAILED: worst relative error {worst}");
+            1
+        }
+    })
+}

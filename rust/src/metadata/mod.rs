@@ -1,0 +1,204 @@
+//! App metadata store (§3.1 substitution): at Meta this is the internal
+//! service returning running apps with SLO/criticality scores and the
+//! resource-monitoring endpoint per app. Here it is an in-memory registry
+//! with the same query surface, loadable from / dumpable to JSON so
+//! experiments can be replayed from a snapshot file.
+
+use crate::model::{App, AppId, Slo};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Monitoring endpoint descriptor returned per app (the metrics layer
+/// "scrapes" it — see `metrics::Collector`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MonitoringEndpoint {
+    pub app: AppId,
+    /// Opaque address (simulated; real system: host:port of the app's
+    /// resource-reporting endpoint).
+    pub address: String,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum MetadataError {
+    #[error("duplicate app id {0:?}")]
+    DuplicateApp(AppId),
+    #[error("unknown app id {0:?}")]
+    UnknownApp(AppId),
+    #[error("snapshot io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("snapshot parse: {0}")]
+    Parse(String),
+}
+
+/// In-memory metadata store.
+#[derive(Debug, Default, Clone)]
+pub struct MetadataStore {
+    apps: BTreeMap<AppId, App>,
+}
+
+impl MetadataStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_apps(apps: impl IntoIterator<Item = App>) -> Result<Self, MetadataError> {
+        let mut store = Self::new();
+        for app in apps {
+            store.register(app)?;
+        }
+        Ok(store)
+    }
+
+    pub fn register(&mut self, app: App) -> Result<(), MetadataError> {
+        if self.apps.contains_key(&app.id) {
+            return Err(MetadataError::DuplicateApp(app.id));
+        }
+        self.apps.insert(app.id, app);
+        Ok(())
+    }
+
+    pub fn deregister(&mut self, id: AppId) -> Result<App, MetadataError> {
+        self.apps.remove(&id).ok_or(MetadataError::UnknownApp(id))
+    }
+
+    pub fn get(&self, id: AppId) -> Option<&App> {
+        self.apps.get(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.apps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.apps.is_empty()
+    }
+
+    /// All running apps, ordered by id (deterministic iteration).
+    pub fn running_apps(&self) -> Vec<App> {
+        self.apps.values().cloned().collect()
+    }
+
+    pub fn apps_with_slo(&self, slo: Slo) -> Vec<&App> {
+        self.apps.values().filter(|a| a.slo == slo).collect()
+    }
+
+    /// Resource-monitoring endpoint for an app (§3.1 step 2).
+    pub fn monitoring_endpoint(&self, id: AppId) -> Result<MonitoringEndpoint, MetadataError> {
+        let app = self.apps.get(&id).ok_or(MetadataError::UnknownApp(id))?;
+        Ok(MonitoringEndpoint {
+            app: id,
+            address: format!("monitor://apps/{}/{}", app.slo.name().to_lowercase(), app.name),
+        })
+    }
+
+    // -- snapshot I/O -------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "apps",
+            Json::arr(self.apps.values().map(|a| a.to_json())),
+        )])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, MetadataError> {
+        let arr = j
+            .get("apps")
+            .as_arr()
+            .ok_or_else(|| MetadataError::Parse("missing 'apps' array".into()))?;
+        let apps = arr
+            .iter()
+            .map(|aj| {
+                App::from_json(aj).ok_or_else(|| MetadataError::Parse(format!("bad app: {aj}")))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        Self::from_apps(apps)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), MetadataError> {
+        std::fs::write(path, self.to_json().pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self, MetadataError> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| MetadataError::Parse(e.to_string()))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Criticality, RegionId, ResourceVec};
+
+    fn app(i: usize, slo: Slo) -> App {
+        App {
+            id: AppId(i),
+            name: format!("app{i}"),
+            demand: ResourceVec::new(1.0, 2.0, 3.0),
+            slo,
+            criticality: Criticality::new(0.3),
+            preferred_region: RegionId(0),
+        }
+    }
+
+    #[test]
+    fn register_and_query() {
+        let store =
+            MetadataStore::from_apps([app(0, Slo::Slo1), app(1, Slo::Slo3), app(2, Slo::Slo1)])
+                .unwrap();
+        assert_eq!(store.len(), 3);
+        assert_eq!(store.apps_with_slo(Slo::Slo1).len(), 2);
+        assert_eq!(store.running_apps()[1].id, AppId(1));
+    }
+
+    #[test]
+    fn duplicate_rejected() {
+        let mut store = MetadataStore::new();
+        store.register(app(0, Slo::Slo1)).unwrap();
+        assert!(matches!(
+            store.register(app(0, Slo::Slo2)),
+            Err(MetadataError::DuplicateApp(_))
+        ));
+    }
+
+    #[test]
+    fn deregister() {
+        let mut store = MetadataStore::from_apps([app(0, Slo::Slo1)]).unwrap();
+        assert!(store.deregister(AppId(0)).is_ok());
+        assert!(store.is_empty());
+        assert!(matches!(
+            store.deregister(AppId(0)),
+            Err(MetadataError::UnknownApp(_))
+        ));
+    }
+
+    #[test]
+    fn endpoint_is_stable_per_app() {
+        let store = MetadataStore::from_apps([app(7, Slo::Slo2)]).unwrap();
+        let ep = store.monitoring_endpoint(AppId(7)).unwrap();
+        assert_eq!(ep.address, "monitor://apps/slo2/app7");
+        assert!(store.monitoring_endpoint(AppId(99)).is_err());
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let store =
+            MetadataStore::from_apps([app(0, Slo::Slo1), app(1, Slo::Slo4)]).unwrap();
+        let j = store.to_json();
+        let back = MetadataStore::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.running_apps(), store.running_apps());
+    }
+
+    #[test]
+    fn snapshot_file_roundtrip() {
+        let store = MetadataStore::from_apps([app(3, Slo::Slo3)]).unwrap();
+        let dir = std::env::temp_dir().join("sptlb-meta-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snap.json");
+        store.save(&path).unwrap();
+        let back = MetadataStore::load(&path).unwrap();
+        assert_eq!(back.running_apps(), store.running_apps());
+    }
+}

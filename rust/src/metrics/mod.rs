@@ -1,0 +1,244 @@
+//! Resource-metrics collection (§3.1). At Meta, each app exposes a live
+//! monitoring endpoint; SPTLB scrapes cpu/mem/task-count timeseries and
+//! keeps the *peak (99th percentile)* utilization to account for scaling
+//! during execution. This module simulates those endpoints (stochastic
+//! timeseries around a base demand) and implements the collector that
+//! reduces series to p99 demand vectors plus tier limit metrics.
+
+use crate::metadata::{MetadataStore, MonitoringEndpoint};
+use crate::model::{App, AppId, ResourceVec, Tier};
+use crate::util::prng::Pcg64;
+use crate::util::stats;
+use std::collections::BTreeMap;
+
+/// One scraped sample of an app's live resource usage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    /// Seconds since scrape start (simulated clock).
+    pub at_secs: f64,
+    pub usage: ResourceVec,
+}
+
+/// Source of live samples for an endpoint. Production: HTTP scrape.
+/// Tests/benches: [`SimulatedMonitor`].
+pub trait MetricSource {
+    fn scrape(&mut self, endpoint: &MonitoringEndpoint, n_samples: usize) -> Vec<Sample>;
+}
+
+/// Simulated monitoring endpoints. An app's registered demand is its
+/// *peak* (what capacity planning cares about); live usage fluctuates
+/// BELOW that peak with lognormal noise, normalized so the series' p99
+/// lands on the registered demand (± sampling error). The collector's
+/// p99 reduction therefore recovers the planning number from raw
+/// samples — the same contract the paper's §3.1 collection stage has
+/// with Meta's monitoring plane.
+#[derive(Debug)]
+pub struct SimulatedMonitor {
+    base: BTreeMap<AppId, ResourceVec>,
+    rng: Pcg64,
+    /// Relative noise sigma for the lognormal multiplier.
+    pub noise_sigma: f64,
+}
+
+/// z-score of the 99th percentile of a standard normal.
+const Z99: f64 = 2.326;
+
+impl SimulatedMonitor {
+    pub fn new(apps: &[App], seed: u64) -> Self {
+        Self {
+            base: apps.iter().map(|a| (a.id, a.demand)).collect(),
+            rng: Pcg64::new(seed),
+            noise_sigma: 0.15,
+        }
+    }
+}
+
+impl MetricSource for SimulatedMonitor {
+    fn scrape(&mut self, endpoint: &MonitoringEndpoint, n_samples: usize) -> Vec<Sample> {
+        let base = *self
+            .base
+            .get(&endpoint.app)
+            .unwrap_or(&ResourceVec::ZERO);
+        // Normalize the lognormal so its p99 is 1.0 (i.e. the peak).
+        let p99_mult = (Z99 * self.noise_sigma).exp();
+        (0..n_samples)
+            .map(|i| {
+                let mult = self.rng.log_normal(0.0, self.noise_sigma) / p99_mult;
+                let mut usage = base.scale(mult);
+                // Task count is integral and changes rarely: round and keep
+                // within a few % of the registered value.
+                let t = base.tasks() * self.rng.uniform(0.97, 1.0);
+                usage.0[2] = t.round().max(0.0);
+                Sample { at_secs: i as f64, usage }
+            })
+            .collect()
+    }
+}
+
+/// p99 demand per app after collection (what the solver consumes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CollectedApp {
+    pub id: AppId,
+    /// Peak (p99) observed usage per resource (§3.1).
+    pub p99_demand: ResourceVec,
+    pub n_samples: usize,
+}
+
+/// Per-tier limit metrics (§3.1: "tier metrics in terms of their limits
+/// and ideal resource utilization conditions").
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierMetrics {
+    pub capacity: ResourceVec,
+    pub ideal_utilization: ResourceVec,
+}
+
+/// Collector output: everything §3.2's problem construction needs.
+#[derive(Debug, Clone)]
+pub struct CollectionReport {
+    pub apps: Vec<CollectedApp>,
+    pub tiers: Vec<TierMetrics>,
+}
+
+/// Scrape every running app and reduce to p99 demand vectors.
+pub struct Collector<'a, S: MetricSource> {
+    store: &'a MetadataStore,
+    source: S,
+    /// Samples scraped per app (default 200 — enough for a stable p99).
+    pub samples_per_app: usize,
+}
+
+impl<'a, S: MetricSource> Collector<'a, S> {
+    pub fn new(store: &'a MetadataStore, source: S) -> Self {
+        Self { store, source, samples_per_app: 200 }
+    }
+
+    pub fn collect(&mut self, tiers: &[Tier]) -> CollectionReport {
+        let mut apps = Vec::with_capacity(self.store.len());
+        for app in self.store.running_apps() {
+            let ep = self
+                .store
+                .monitoring_endpoint(app.id)
+                .expect("app registered but endpoint missing");
+            let samples = self.source.scrape(&ep, self.samples_per_app);
+            apps.push(CollectedApp {
+                id: app.id,
+                p99_demand: reduce_p99(&samples),
+                n_samples: samples.len(),
+            });
+        }
+        let tiers = tiers
+            .iter()
+            .map(|t| TierMetrics {
+                capacity: t.capacity,
+                ideal_utilization: t.ideal_utilization,
+            })
+            .collect();
+        CollectionReport { apps, tiers }
+    }
+}
+
+/// Reduce a scraped series to its per-resource p99.
+pub fn reduce_p99(samples: &[Sample]) -> ResourceVec {
+    if samples.is_empty() {
+        return ResourceVec::ZERO;
+    }
+    let mut out = ResourceVec::ZERO;
+    for r in 0..crate::model::NUM_RESOURCES {
+        let series: Vec<f64> = samples.iter().map(|s| s.usage.0[r]).collect();
+        out.0[r] = stats::p99(&series);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Criticality, RegionId, RegionSet, Slo, TierId};
+    use crate::model::tier::default_ideal_utilization;
+
+    fn mk_store(n: usize) -> MetadataStore {
+        MetadataStore::from_apps((0..n).map(|i| App {
+            id: AppId(i),
+            name: format!("app{i}"),
+            demand: ResourceVec::new(10.0, 20.0, 100.0),
+            slo: Slo::Slo3,
+            criticality: Criticality::new(0.5),
+            preferred_region: RegionId(0),
+        }))
+        .unwrap()
+    }
+
+    fn mk_tiers() -> Vec<Tier> {
+        vec![Tier {
+            id: TierId(0),
+            name: "tier1".into(),
+            capacity: ResourceVec::new(1000.0, 1000.0, 1000.0),
+            ideal_utilization: default_ideal_utilization(),
+            supported_slos: vec![Slo::Slo3],
+            regions: RegionSet::from_indices([0]),
+        }]
+    }
+
+    #[test]
+    fn p99_reduction_on_constant_series() {
+        let samples: Vec<Sample> = (0..100)
+            .map(|i| Sample { at_secs: i as f64, usage: ResourceVec::new(5.0, 6.0, 7.0) })
+            .collect();
+        assert_eq!(reduce_p99(&samples), ResourceVec::new(5.0, 6.0, 7.0));
+    }
+
+    #[test]
+    fn collected_p99_recovers_registered_peak() {
+        let store = mk_store(1);
+        let mut collector = Collector::new(&store, SimulatedMonitor::new(&store.running_apps(), 1));
+        collector.samples_per_app = 2000;
+        let report = collector.collect(&mk_tiers());
+        let p99 = report.apps[0].p99_demand;
+        // The series is normalized so p99 ~= the registered peak (10/20/100).
+        assert!((p99.cpu() - 10.0).abs() < 1.0, "p99 cpu {}", p99.cpu());
+        assert!((p99.mem() - 20.0).abs() < 2.0, "p99 mem {}", p99.mem());
+        assert!((p99.tasks() - 100.0).abs() <= 5.0);
+    }
+
+    #[test]
+    fn mean_usage_is_below_peak() {
+        let store = mk_store(1);
+        let mut mon = SimulatedMonitor::new(&store.running_apps(), 2);
+        let ep = store.monitoring_endpoint(crate::model::AppId(0)).unwrap();
+        let samples = mon.scrape(&ep, 1000);
+        let mean_cpu: f64 =
+            samples.iter().map(|s| s.usage.cpu()).sum::<f64>() / samples.len() as f64;
+        assert!(mean_cpu < 10.0 * 0.85, "mean {mean_cpu} well below peak 10");
+    }
+
+    #[test]
+    fn collect_covers_all_apps_and_tiers() {
+        let store = mk_store(5);
+        let mut collector = Collector::new(&store, SimulatedMonitor::new(&store.running_apps(), 2));
+        let report = collector.collect(&mk_tiers());
+        assert_eq!(report.apps.len(), 5);
+        assert_eq!(report.tiers.len(), 1);
+        assert_eq!(report.tiers[0].ideal_utilization, default_ideal_utilization());
+        assert!(report.apps.iter().all(|a| a.n_samples == 200));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let store = mk_store(3);
+        let run = |seed| {
+            let mut c = Collector::new(&store, SimulatedMonitor::new(&store.running_apps(), seed));
+            c.collect(&mk_tiers())
+                .apps
+                .iter()
+                .map(|a| a.p99_demand)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn empty_series_reduces_to_zero() {
+        assert_eq!(reduce_p99(&[]), ResourceVec::ZERO);
+    }
+}

@@ -1,0 +1,172 @@
+//! Stream-processing applications. Each app carries its SLO class, a
+//! criticality score (§3.2.1 goal 9: high-criticality apps should move
+//! rarely), peak (p99) resource demand, and a preferred region (the data
+//! source the lower-level region scheduler wants it near).
+
+use crate::model::region::RegionId;
+use crate::model::resources::ResourceVec;
+use crate::util::json::Json;
+use std::fmt;
+
+/// Dense app identifier (index into the problem's app arrays).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AppId(pub usize);
+
+impl fmt::Display for AppId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "app{}", self.0)
+    }
+}
+
+/// SLO class of an application. The paper's testbed (§4) uses four classes
+/// with fixed tier support sets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Slo {
+    Slo1,
+    Slo2,
+    Slo3,
+    Slo4,
+}
+
+impl Slo {
+    pub const ALL: [Slo; 4] = [Slo::Slo1, Slo::Slo2, Slo::Slo3, Slo::Slo4];
+
+    pub fn index(self) -> usize {
+        match self {
+            Slo::Slo1 => 0,
+            Slo::Slo2 => 1,
+            Slo::Slo3 => 2,
+            Slo::Slo4 => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Slo::Slo1 => "SLO1",
+            Slo::Slo2 => "SLO2",
+            Slo::Slo3 => "SLO3",
+            Slo::Slo4 => "SLO4",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Slo> {
+        match s.to_ascii_uppercase().as_str() {
+            "SLO1" => Some(Slo::Slo1),
+            "SLO2" => Some(Slo::Slo2),
+            "SLO3" => Some(Slo::Slo3),
+            "SLO4" => Some(Slo::Slo4),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Slo {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Criticality score in [0, 1]; "high" is relative to the population
+/// (§3.2.1: the solver decides what high is relative to other apps).
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
+pub struct Criticality(pub f64);
+
+impl Criticality {
+    pub fn new(score: f64) -> Self {
+        Self(score.clamp(0.0, 1.0))
+    }
+
+    pub fn score(self) -> f64 {
+        self.0
+    }
+}
+
+/// A stream-processing application as the metadata store describes it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct App {
+    pub id: AppId,
+    pub name: String,
+    /// Peak (p99) resource demand collected by the metrics layer (§3.1).
+    pub demand: ResourceVec,
+    pub slo: Slo,
+    pub criticality: Criticality,
+    /// Region the app's data source lives in; the region scheduler tries
+    /// to keep the app near it.
+    pub preferred_region: RegionId,
+}
+
+impl App {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id.0 as f64)),
+            ("name", Json::str(self.name.clone())),
+            ("cpu", Json::num(self.demand.cpu())),
+            ("mem", Json::num(self.demand.mem())),
+            ("tasks", Json::num(self.demand.tasks())),
+            ("slo", Json::str(self.slo.name())),
+            ("criticality", Json::num(self.criticality.score())),
+            ("preferred_region", Json::num(self.preferred_region.0 as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<App> {
+        Some(App {
+            id: AppId(j.get("id").as_usize()?),
+            name: j.get("name").as_str()?.to_string(),
+            demand: ResourceVec::new(
+                j.get("cpu").as_f64()?,
+                j.get("mem").as_f64()?,
+                j.get("tasks").as_f64()?,
+            ),
+            slo: Slo::from_name(j.get("slo").as_str()?)?,
+            criticality: Criticality::new(j.get("criticality").as_f64()?),
+            preferred_region: RegionId(j.get("preferred_region").as_usize()?),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> App {
+        App {
+            id: AppId(3),
+            name: "clicks-join".into(),
+            demand: ResourceVec::new(12.5, 64.0, 40.0),
+            slo: Slo::Slo2,
+            criticality: Criticality::new(0.8),
+            preferred_region: RegionId(1),
+        }
+    }
+
+    #[test]
+    fn criticality_clamped() {
+        assert_eq!(Criticality::new(2.0).score(), 1.0);
+        assert_eq!(Criticality::new(-1.0).score(), 0.0);
+    }
+
+    #[test]
+    fn slo_roundtrip() {
+        for s in Slo::ALL {
+            assert_eq!(Slo::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Slo::from_name("slo3"), Some(Slo::Slo3));
+        assert_eq!(Slo::from_name("SLO9"), None);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let app = sample();
+        let j = app.to_json();
+        let back = App::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, app);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        assert!(App::from_json(&Json::parse("{}").unwrap()).is_none());
+        let j = sample().to_json().to_string().replace("SLO2", "SLO9");
+        assert!(App::from_json(&Json::parse(&j).unwrap()).is_none());
+    }
+}

@@ -1,0 +1,200 @@
+//! Assignments: the app→tier mapping SPTLB produces, plus move diffs and
+//! projected tier metrics derived from them.
+
+use crate::model::app::{App, AppId};
+use crate::model::resources::ResourceVec;
+use crate::model::tier::{Tier, TierId};
+use crate::util::json::Json;
+
+/// A complete app→tier mapping, indexed by dense `AppId`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Assignment {
+    tier_of: Vec<TierId>,
+}
+
+impl Assignment {
+    pub fn new(tier_of: Vec<TierId>) -> Self {
+        Self { tier_of }
+    }
+
+    pub fn uniform(n_apps: usize, tier: TierId) -> Self {
+        Self { tier_of: vec![tier; n_apps] }
+    }
+
+    pub fn n_apps(&self) -> usize {
+        self.tier_of.len()
+    }
+
+    pub fn tier_of(&self, app: AppId) -> TierId {
+        self.tier_of[app.0]
+    }
+
+    pub fn set(&mut self, app: AppId, tier: TierId) {
+        self.tier_of[app.0] = tier;
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (AppId, TierId)> + '_ {
+        self.tier_of.iter().enumerate().map(|(a, t)| (AppId(a), *t))
+    }
+
+    pub fn as_slice(&self) -> &[TierId] {
+        &self.tier_of
+    }
+
+    /// Apps moved relative to `from` (the diff §3.3 reports).
+    pub fn moves_from(&self, from: &Assignment) -> Vec<Move> {
+        assert_eq!(self.n_apps(), from.n_apps(), "assignment size mismatch");
+        self.iter()
+            .filter(|(a, t)| from.tier_of(*a) != *t)
+            .map(|(a, t)| Move { app: a, from: from.tier_of(a), to: t })
+            .collect()
+    }
+
+    pub fn move_count_from(&self, from: &Assignment) -> usize {
+        self.iter().filter(|(a, t)| from.tier_of(*a) != *t).count()
+    }
+
+    /// Projected absolute tier loads for a given app population.
+    pub fn tier_loads(&self, apps: &[App], n_tiers: usize) -> Vec<ResourceVec> {
+        let mut loads = vec![ResourceVec::ZERO; n_tiers];
+        for app in apps {
+            loads[self.tier_of(app.id).0] += app.demand;
+        }
+        loads
+    }
+
+    /// Projected per-tier utilization fractions.
+    pub fn tier_utilizations(&self, apps: &[App], tiers: &[Tier]) -> Vec<ResourceVec> {
+        self.tier_loads(apps, tiers.len())
+            .iter()
+            .zip(tiers)
+            .map(|(load, tier)| tier.utilization_of(load))
+            .collect()
+    }
+
+    /// Apps hosted per tier.
+    pub fn apps_per_tier(&self, n_tiers: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; n_tiers];
+        for t in &self.tier_of {
+            counts[t.0] += 1;
+        }
+        counts
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.tier_of.iter().map(|t| Json::num(t.0 as f64)))
+    }
+
+    pub fn from_json(j: &Json) -> Option<Assignment> {
+        let arr = j.as_arr()?;
+        let tier_of = arr
+            .iter()
+            .map(|v| v.as_usize().map(TierId))
+            .collect::<Option<Vec<_>>>()?;
+        Some(Assignment::new(tier_of))
+    }
+}
+
+/// One app movement (§3.3's recommendation unit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Move {
+    pub app: AppId,
+    pub from: TierId,
+    pub to: TierId,
+}
+
+impl Move {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("app", Json::num(self.app.0 as f64)),
+            ("from", Json::num(self.from.0 as f64)),
+            ("to", Json::num(self.to.0 as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::app::{Criticality, Slo};
+    use crate::model::region::{RegionId, RegionSet};
+    use crate::model::tier::default_ideal_utilization;
+
+    fn mk_apps() -> Vec<App> {
+        (0..4)
+            .map(|i| App {
+                id: AppId(i),
+                name: format!("app{i}"),
+                demand: ResourceVec::new(1.0 + i as f64, 2.0, 10.0),
+                slo: Slo::Slo3,
+                criticality: Criticality::new(0.5),
+                preferred_region: RegionId(0),
+            })
+            .collect()
+    }
+
+    fn mk_tiers(n: usize) -> Vec<Tier> {
+        (0..n)
+            .map(|i| Tier {
+                id: TierId(i),
+                name: format!("tier{}", i + 1),
+                capacity: ResourceVec::new(100.0, 100.0, 100.0),
+                ideal_utilization: default_ideal_utilization(),
+                supported_slos: vec![Slo::Slo3],
+                regions: RegionSet::from_indices([0]),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn loads_sum_demands_per_tier() {
+        let apps = mk_apps();
+        let asg = Assignment::new(vec![TierId(0), TierId(0), TierId(1), TierId(1)]);
+        let loads = asg.tier_loads(&apps, 2);
+        assert_eq!(loads[0], ResourceVec::new(3.0, 4.0, 20.0)); // apps 0,1
+        assert_eq!(loads[1], ResourceVec::new(7.0, 4.0, 20.0)); // apps 2,3
+    }
+
+    #[test]
+    fn moves_diff() {
+        let a = Assignment::new(vec![TierId(0), TierId(1), TierId(0)]);
+        let b = Assignment::new(vec![TierId(0), TierId(0), TierId(1)]);
+        let moves = b.moves_from(&a);
+        assert_eq!(moves.len(), 2);
+        assert!(moves.contains(&Move { app: AppId(1), from: TierId(1), to: TierId(0) }));
+        assert!(moves.contains(&Move { app: AppId(2), from: TierId(0), to: TierId(1) }));
+        assert_eq!(b.move_count_from(&a), 2);
+        assert_eq!(a.move_count_from(&a), 0);
+    }
+
+    #[test]
+    fn utilizations_divide_by_capacity() {
+        let apps = mk_apps();
+        let tiers = mk_tiers(2);
+        let asg = Assignment::uniform(4, TierId(0));
+        let utils = asg.tier_utilizations(&apps, &tiers);
+        assert!((utils[0].cpu() - 0.10).abs() < 1e-12); // (1+2+3+4)/100
+        assert_eq!(utils[1], ResourceVec::ZERO);
+    }
+
+    #[test]
+    fn apps_per_tier_counts() {
+        let asg = Assignment::new(vec![TierId(2), TierId(0), TierId(2)]);
+        assert_eq!(asg.apps_per_tier(3), vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let asg = Assignment::new(vec![TierId(1), TierId(4), TierId(0)]);
+        let j = asg.to_json().to_string();
+        assert_eq!(Assignment::from_json(&Json::parse(&j).unwrap()).unwrap(), asg);
+    }
+
+    #[test]
+    #[should_panic(expected = "size mismatch")]
+    fn moves_from_size_mismatch_panics() {
+        let a = Assignment::uniform(2, TierId(0));
+        let b = Assignment::uniform(3, TierId(0));
+        let _ = b.moves_from(&a);
+    }
+}

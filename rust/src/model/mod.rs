@@ -1,0 +1,14 @@
+//! Core domain model shared by every subsystem: resources, apps, tiers,
+//! regions, and assignments.
+
+pub mod app;
+pub mod assignment;
+pub mod region;
+pub mod resources;
+pub mod tier;
+
+pub use app::{App, AppId, Criticality, Slo};
+pub use assignment::{Assignment, Move};
+pub use region::{RegionId, RegionSet};
+pub use resources::{ResourceKind, ResourceVec, NUM_RESOURCES};
+pub use tier::{default_ideal_utilization, paper_slo_mapping, paper_tiers_for_slo, Tier, TierId};

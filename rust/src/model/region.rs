@@ -1,0 +1,109 @@
+//! Regions: the geography the lower-level schedulers (§3.4, Fig. 2) care
+//! about. A tier owns machines in a set of regions; moving an app to a tier
+//! without presence near its data source incurs the network cost Fig. 4
+//! measures.
+
+use std::fmt;
+
+/// Dense region identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RegionId(pub usize);
+
+impl fmt::Display for RegionId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "region{}", self.0)
+    }
+}
+
+/// A sorted set of regions (small, so a sorted Vec beats a HashSet).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct RegionSet {
+    regions: Vec<RegionId>,
+}
+
+impl RegionSet {
+    pub fn new(mut regions: Vec<RegionId>) -> Self {
+        regions.sort_unstable();
+        regions.dedup();
+        Self { regions }
+    }
+
+    pub fn from_indices(idx: impl IntoIterator<Item = usize>) -> Self {
+        Self::new(idx.into_iter().map(RegionId).collect())
+    }
+
+    pub fn contains(&self, r: RegionId) -> bool {
+        self.regions.binary_search(&r).is_ok()
+    }
+
+    pub fn len(&self) -> usize {
+        self.regions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.regions.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = RegionId> + '_ {
+        self.regions.iter().copied()
+    }
+
+    pub fn as_slice(&self) -> &[RegionId] {
+        &self.regions
+    }
+
+    /// |self ∩ other|.
+    pub fn intersection_size(&self, other: &RegionSet) -> usize {
+        self.regions.iter().filter(|r| other.contains(**r)).count()
+    }
+
+    /// The w_cnst validity test (§4.2.2): >50% of this set's regions must
+    /// overlap with `other` for a transition to be allowed.
+    pub fn majority_overlap(&self, other: &RegionSet) -> bool {
+        if self.is_empty() {
+            return false;
+        }
+        2 * self.intersection_size(other) > self.len()
+    }
+}
+
+impl FromIterator<RegionId> for RegionSet {
+    fn from_iter<I: IntoIterator<Item = RegionId>>(iter: I) -> Self {
+        Self::new(iter.into_iter().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_dedups_and_sorts() {
+        let s = RegionSet::from_indices([3, 1, 3, 2]);
+        assert_eq!(s.len(), 3);
+        assert_eq!(
+            s.as_slice(),
+            &[RegionId(1), RegionId(2), RegionId(3)]
+        );
+    }
+
+    #[test]
+    fn contains_and_intersection() {
+        let a = RegionSet::from_indices([0, 1, 2, 3]);
+        let b = RegionSet::from_indices([2, 3, 4]);
+        assert!(a.contains(RegionId(2)));
+        assert!(!a.contains(RegionId(4)));
+        assert_eq!(a.intersection_size(&b), 2);
+        assert_eq!(b.intersection_size(&a), 2);
+    }
+
+    #[test]
+    fn majority_overlap_is_strict() {
+        let a = RegionSet::from_indices([0, 1]);
+        let half = RegionSet::from_indices([0, 9]);
+        assert!(!a.majority_overlap(&half), "exactly 50% must NOT pass");
+        let most = RegionSet::from_indices([0, 1, 9]);
+        assert!(a.majority_overlap(&most));
+        assert!(!RegionSet::default().majority_overlap(&a));
+    }
+}

@@ -1,0 +1,261 @@
+//! Resource vectors. The paper load-balances over exactly three properties
+//! (§2): task count, CPU utilization, memory utilization. `ResourceVec` is
+//! the fixed 3-dim vector used everywhere; the layout matches the python
+//! scorer (`ref.py`: cpu=0, mem=1, task=2) so tensors cross the PJRT
+//! boundary without permutation.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, Index, IndexMut, Mul, Sub, SubAssign};
+
+/// The balanced-over resource kinds, in artifact order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ResourceKind {
+    Cpu = 0,
+    Mem = 1,
+    Tasks = 2,
+}
+
+impl ResourceKind {
+    pub const ALL: [ResourceKind; 3] = [ResourceKind::Cpu, ResourceKind::Mem, ResourceKind::Tasks];
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ResourceKind::Cpu => "cpu",
+            ResourceKind::Mem => "mem",
+            ResourceKind::Tasks => "tasks",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<ResourceKind> {
+        match name {
+            "cpu" => Some(ResourceKind::Cpu),
+            "mem" | "memory" => Some(ResourceKind::Mem),
+            "tasks" | "task_count" | "task-count" => Some(ResourceKind::Tasks),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ResourceKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Number of balanced resources (must equal `ref.NUM_RESOURCES`).
+pub const NUM_RESOURCES: usize = 3;
+
+/// A 3-dim resource vector: (cpu cores, mem GiB, task count).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ResourceVec(pub [f64; NUM_RESOURCES]);
+
+impl ResourceVec {
+    pub const ZERO: ResourceVec = ResourceVec([0.0; NUM_RESOURCES]);
+
+    pub fn new(cpu: f64, mem: f64, tasks: f64) -> Self {
+        Self([cpu, mem, tasks])
+    }
+
+    pub fn splat(v: f64) -> Self {
+        Self([v; NUM_RESOURCES])
+    }
+
+    pub fn cpu(&self) -> f64 {
+        self.0[ResourceKind::Cpu.index()]
+    }
+
+    pub fn mem(&self) -> f64 {
+        self.0[ResourceKind::Mem.index()]
+    }
+
+    pub fn tasks(&self) -> f64 {
+        self.0[ResourceKind::Tasks.index()]
+    }
+
+    pub fn get(&self, kind: ResourceKind) -> f64 {
+        self.0[kind.index()]
+    }
+
+    pub fn set(&mut self, kind: ResourceKind, v: f64) {
+        self.0[kind.index()] = v;
+    }
+
+    /// Element-wise division (utilization = load / capacity).
+    /// Zero-capacity dimensions map to +inf if load > 0, else 0.
+    pub fn div_elem(&self, cap: &ResourceVec) -> ResourceVec {
+        let mut out = [0.0; NUM_RESOURCES];
+        for i in 0..NUM_RESOURCES {
+            out[i] = if cap.0[i] > 0.0 {
+                self.0[i] / cap.0[i]
+            } else if self.0[i] > 0.0 {
+                f64::INFINITY
+            } else {
+                0.0
+            };
+        }
+        ResourceVec(out)
+    }
+
+    pub fn max_component(&self) -> f64 {
+        self.0.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn any_exceeds(&self, other: &ResourceVec) -> bool {
+        (0..NUM_RESOURCES).any(|i| self.0[i] > other.0[i])
+    }
+
+    pub fn is_non_negative(&self) -> bool {
+        self.0.iter().all(|&x| x >= 0.0)
+    }
+
+    pub fn scale(&self, k: f64) -> ResourceVec {
+        ResourceVec([self.0[0] * k, self.0[1] * k, self.0[2] * k])
+    }
+
+    pub fn as_f32(&self) -> [f32; NUM_RESOURCES] {
+        [self.0[0] as f32, self.0[1] as f32, self.0[2] as f32]
+    }
+}
+
+impl Add for ResourceVec {
+    type Output = ResourceVec;
+    fn add(self, rhs: ResourceVec) -> ResourceVec {
+        ResourceVec([
+            self.0[0] + rhs.0[0],
+            self.0[1] + rhs.0[1],
+            self.0[2] + rhs.0[2],
+        ])
+    }
+}
+
+impl AddAssign for ResourceVec {
+    fn add_assign(&mut self, rhs: ResourceVec) {
+        for i in 0..NUM_RESOURCES {
+            self.0[i] += rhs.0[i];
+        }
+    }
+}
+
+impl Sub for ResourceVec {
+    type Output = ResourceVec;
+    fn sub(self, rhs: ResourceVec) -> ResourceVec {
+        ResourceVec([
+            self.0[0] - rhs.0[0],
+            self.0[1] - rhs.0[1],
+            self.0[2] - rhs.0[2],
+        ])
+    }
+}
+
+impl SubAssign for ResourceVec {
+    fn sub_assign(&mut self, rhs: ResourceVec) {
+        for i in 0..NUM_RESOURCES {
+            self.0[i] -= rhs.0[i];
+        }
+    }
+}
+
+impl Mul<f64> for ResourceVec {
+    type Output = ResourceVec;
+    fn mul(self, k: f64) -> ResourceVec {
+        self.scale(k)
+    }
+}
+
+impl Div<f64> for ResourceVec {
+    type Output = ResourceVec;
+    fn div(self, k: f64) -> ResourceVec {
+        self.scale(1.0 / k)
+    }
+}
+
+impl Index<ResourceKind> for ResourceVec {
+    type Output = f64;
+    fn index(&self, kind: ResourceKind) -> &f64 {
+        &self.0[kind.index()]
+    }
+}
+
+impl IndexMut<ResourceKind> for ResourceVec {
+    fn index_mut(&mut self, kind: ResourceKind) -> &mut f64 {
+        &mut self.0[kind.index()]
+    }
+}
+
+impl fmt::Display for ResourceVec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "(cpu={:.2}, mem={:.2}, tasks={:.0})",
+            self.cpu(),
+            self.mem(),
+            self.tasks()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_matches_python_ref() {
+        // ref.py: R_CPU=0, R_MEM=1, R_TASK=2.
+        assert_eq!(ResourceKind::Cpu.index(), 0);
+        assert_eq!(ResourceKind::Mem.index(), 1);
+        assert_eq!(ResourceKind::Tasks.index(), 2);
+        assert_eq!(NUM_RESOURCES, 3);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = ResourceVec::new(1.0, 2.0, 3.0);
+        let b = ResourceVec::new(0.5, 0.5, 1.0);
+        assert_eq!(a + b, ResourceVec::new(1.5, 2.5, 4.0));
+        assert_eq!(a - b, ResourceVec::new(0.5, 1.5, 2.0));
+        assert_eq!(a * 2.0, ResourceVec::new(2.0, 4.0, 6.0));
+        let mut c = a;
+        c += b;
+        c -= b;
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn utilization_div() {
+        let load = ResourceVec::new(50.0, 30.0, 10.0);
+        let cap = ResourceVec::new(100.0, 60.0, 20.0);
+        let u = load.div_elem(&cap);
+        assert_eq!(u, ResourceVec::new(0.5, 0.5, 0.5));
+    }
+
+    #[test]
+    fn div_by_zero_capacity() {
+        let load = ResourceVec::new(1.0, 0.0, 0.0);
+        let cap = ResourceVec::ZERO;
+        let u = load.div_elem(&cap);
+        assert!(u.cpu().is_infinite());
+        assert_eq!(u.mem(), 0.0);
+    }
+
+    #[test]
+    fn any_exceeds() {
+        let a = ResourceVec::new(1.0, 1.0, 1.0);
+        let b = ResourceVec::new(2.0, 2.0, 2.0);
+        assert!(!a.any_exceeds(&b));
+        assert!(b.any_exceeds(&a));
+        assert!(!a.any_exceeds(&a));
+    }
+
+    #[test]
+    fn kind_roundtrip_names() {
+        for k in ResourceKind::ALL {
+            assert_eq!(ResourceKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(ResourceKind::from_name("memory"), Some(ResourceKind::Mem));
+        assert_eq!(ResourceKind::from_name("gpu"), None);
+    }
+}

@@ -1,0 +1,139 @@
+//! Tiers: sets of clusters handling a subset of the workload (§2). A tier
+//! has per-resource capacity limits, ideal-utilization targets (70% for
+//! cpu/mem, 80% for task count in the paper's figures), the SLO classes it
+//! supports, and the regions it has machines in.
+
+use crate::model::app::Slo;
+use crate::model::region::RegionSet;
+use crate::model::resources::{ResourceKind, ResourceVec};
+use std::fmt;
+
+/// Dense tier identifier (index into the problem's tier arrays).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TierId(pub usize);
+
+impl fmt::Display for TierId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "tier{}", self.0 + 1) // paper numbers tiers from 1
+    }
+}
+
+/// Default ideal utilization (paper Fig. 3): 70% cpu/mem, 80% tasks.
+pub fn default_ideal_utilization() -> ResourceVec {
+    ResourceVec::new(0.70, 0.70, 0.80)
+}
+
+/// A tier's static description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tier {
+    pub id: TierId,
+    pub name: String,
+    /// Hard capacity per resource — C1/C2: by design no solution may
+    /// exceed these (headroom dimensions in Rebalancer terms).
+    pub capacity: ResourceVec,
+    /// Ideal utilization fractions — goal G1 keeps projected utilization
+    /// under these (soft).
+    pub ideal_utilization: ResourceVec,
+    /// SLO classes this tier can host (C4).
+    pub supported_slos: Vec<Slo>,
+    /// Regions the tier has machines in (used by w_cnst and the region
+    /// scheduler).
+    pub regions: RegionSet,
+}
+
+impl Tier {
+    pub fn supports_slo(&self, slo: Slo) -> bool {
+        self.supported_slos.contains(&slo)
+    }
+
+    /// Absolute ideal load (capacity × ideal fraction) per resource.
+    pub fn ideal_load(&self) -> ResourceVec {
+        ResourceVec([
+            self.capacity.0[0] * self.ideal_utilization.0[0],
+            self.capacity.0[1] * self.ideal_utilization.0[1],
+            self.capacity.0[2] * self.ideal_utilization.0[2],
+        ])
+    }
+
+    pub fn utilization_of(&self, load: &ResourceVec) -> ResourceVec {
+        load.div_elem(&self.capacity)
+    }
+
+    pub fn ideal_for(&self, kind: ResourceKind) -> f64 {
+        self.ideal_utilization.get(kind)
+    }
+}
+
+/// The paper's SLO→tier support mapping (§4): SLO1/2 → tiers 1–3,
+/// SLO3 → tiers 1–5, SLO4 → tiers 4–5. Valid only for 5-tier testbeds;
+/// other tier counts use a generated mapping (see workload::).
+pub fn paper_slo_mapping(tier_index: usize) -> Vec<Slo> {
+    match tier_index {
+        0 | 1 | 2 => vec![Slo::Slo1, Slo::Slo2, Slo::Slo3],
+        3 | 4 => vec![Slo::Slo3, Slo::Slo4],
+        _ => vec![Slo::Slo3],
+    }
+}
+
+/// Tiers that may host a given SLO under the paper mapping.
+pub fn paper_tiers_for_slo(slo: Slo, n_tiers: usize) -> Vec<TierId> {
+    (0..n_tiers)
+        .filter(|&t| paper_slo_mapping(t).contains(&slo))
+        .map(TierId)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tier() -> Tier {
+        Tier {
+            id: TierId(0),
+            name: "tier1".into(),
+            capacity: ResourceVec::new(1000.0, 4000.0, 50000.0),
+            ideal_utilization: default_ideal_utilization(),
+            supported_slos: paper_slo_mapping(0),
+            regions: RegionSet::from_indices([0, 1, 2]),
+        }
+    }
+
+    #[test]
+    fn display_numbers_from_one() {
+        assert_eq!(TierId(0).to_string(), "tier1");
+        assert_eq!(TierId(4).to_string(), "tier5");
+    }
+
+    #[test]
+    fn ideal_load_scales_capacity() {
+        let t = tier();
+        let il = t.ideal_load();
+        assert!((il.cpu() - 700.0).abs() < 1e-9);
+        assert!((il.mem() - 2800.0).abs() < 1e-9);
+        assert!((il.tasks() - 40000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_slo_mapping_matches_section4() {
+        // SLO1: tiers 1,2,3 ; SLO2: 1,2,3 ; SLO3: 1..5 ; SLO4: 4,5.
+        let t = |s| paper_tiers_for_slo(s, 5).iter().map(|t| t.0).collect::<Vec<_>>();
+        assert_eq!(t(Slo::Slo1), vec![0, 1, 2]);
+        assert_eq!(t(Slo::Slo2), vec![0, 1, 2]);
+        assert_eq!(t(Slo::Slo3), vec![0, 1, 2, 3, 4]);
+        assert_eq!(t(Slo::Slo4), vec![3, 4]);
+    }
+
+    #[test]
+    fn supports_slo() {
+        let t = tier();
+        assert!(t.supports_slo(Slo::Slo1));
+        assert!(!t.supports_slo(Slo::Slo4));
+    }
+
+    #[test]
+    fn utilization_of_load() {
+        let t = tier();
+        let u = t.utilization_of(&ResourceVec::new(500.0, 2000.0, 25000.0));
+        assert_eq!(u, ResourceVec::new(0.5, 0.5, 0.5));
+    }
+}

@@ -1,0 +1,300 @@
+//! Network cost model (Fig. 4 substitution). Production has measured
+//! region-to-region latency tables; we synthesize a geo-clustered matrix
+//! (symmetric, triangle-inequality-respecting) and implement the paper's
+//! evaluation procedure: for each (source tier, destination tier)
+//! transition produced by a balancing run, sample the transition's latency
+//! distribution proportionally to the apps moved, build a CDF over all
+//! samples, and report its p99 — "the worst case scenario network latency"
+//! — approximated to the closest millisecond.
+
+use crate::model::{App, Assignment, Move, RegionId, Tier};
+use crate::util::prng::Pcg64;
+use crate::util::stats::Ecdf;
+
+/// Symmetric region→region latency matrix in milliseconds.
+#[derive(Debug, Clone)]
+pub struct LatencyMatrix {
+    n: usize,
+    ms: Vec<f64>, // row-major n×n
+}
+
+impl LatencyMatrix {
+    /// Build from explicit entries (must be symmetric-ish; we symmetrize).
+    pub fn new(n: usize, ms: Vec<f64>) -> Self {
+        assert_eq!(ms.len(), n * n, "latency matrix shape");
+        let mut m = Self { n, ms };
+        m.symmetrize();
+        m
+    }
+
+    /// Synthesize a geo-clustered matrix: regions are grouped into
+    /// `n_clusters` "continents"; intra-cluster latency is small
+    /// (1–10 ms), inter-cluster large (40–150 ms). Placing regions on a
+    /// ring of cluster centroids keeps the triangle inequality
+    /// approximately satisfied.
+    pub fn synthesize(n_regions: usize, n_clusters: usize, rng: &mut Pcg64) -> Self {
+        assert!(n_regions > 0 && n_clusters > 0);
+        // 1-D coordinates: cluster centers spaced 50ms apart, members
+        // jittered ±4ms around the center. Clusters are CONTIGUOUS blocks
+        // of the region index space (regions 0..k are cluster 0, etc.) so
+        // that tiers — whose region sets are contiguous windows (see
+        // workload::generate) — span few clusters and tier distance
+        // correlates with network distance, as in a real geo layout.
+        let coords: Vec<f64> = (0..n_regions)
+            .map(|r| {
+                let c = (r * n_clusters) / n_regions;
+                c as f64 * 50.0 + rng.uniform(-4.0, 4.0)
+            })
+            .collect();
+        let mut ms = vec![0.0; n_regions * n_regions];
+        for i in 0..n_regions {
+            for j in 0..n_regions {
+                if i != j {
+                    // Distance + small propagation floor.
+                    ms[i * n_regions + j] = (coords[i] - coords[j]).abs() + 1.0;
+                }
+            }
+        }
+        Self::new(n_regions, ms)
+    }
+
+    fn symmetrize(&mut self) {
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                let avg = (self.ms[i * self.n + j] + self.ms[j * self.n + i]) / 2.0;
+                self.ms[i * self.n + j] = avg;
+                self.ms[j * self.n + i] = avg;
+            }
+        }
+    }
+
+    pub fn n_regions(&self) -> usize {
+        self.n
+    }
+
+    pub fn latency_ms(&self, a: RegionId, b: RegionId) -> f64 {
+        self.ms[a.0 * self.n + b.0]
+    }
+
+    /// Triangle-inequality violation count (diagnostic; synthetic matrices
+    /// should report 0).
+    pub fn triangle_violations(&self, tolerance_ms: f64) -> usize {
+        let mut v = 0;
+        for a in 0..self.n {
+            for b in 0..self.n {
+                for c in 0..self.n {
+                    let direct = self.ms[a * self.n + b];
+                    let via = self.ms[a * self.n + c] + self.ms[c * self.n + b];
+                    if direct > via + tolerance_ms {
+                        v += 1;
+                    }
+                }
+            }
+        }
+        v
+    }
+}
+
+/// Latency distribution of one tier→tier transition: the cross product of
+/// the source tier's regions and destination tier's regions (an app could
+/// land on any pair), i.e. the paper's "source and destination tier's
+/// region latency table".
+pub fn transition_latencies(src: &Tier, dst: &Tier, matrix: &LatencyMatrix) -> Vec<f64> {
+    let mut out = Vec::with_capacity(src.regions.len() * dst.regions.len());
+    for a in src.regions.iter() {
+        for b in dst.regions.iter() {
+            out.push(matrix.latency_ms(a, b));
+        }
+    }
+    out
+}
+
+/// Latency an app observes to its data source when hosted on `tier`: the
+/// minimum latency from the preferred region to any of the tier's regions
+/// (the region scheduler places it as close as possible).
+pub fn app_tier_latency_ms(app: &App, tier: &Tier, matrix: &LatencyMatrix) -> f64 {
+    tier.regions
+        .iter()
+        .map(|r| matrix.latency_ms(app.preferred_region, r))
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// Fig. 4's headline number for one balancing solution: sample each
+/// transition's latency distribution `samples_per_move` times per moved
+/// app (so transitions moving more apps weigh more), pool all samples
+/// into one CDF, and return its p99 rounded to the closest ms.
+pub const FIG4_SAMPLES: usize = 1000;
+
+pub fn solution_p99_latency_ms(
+    moves: &[Move],
+    tiers: &[Tier],
+    matrix: &LatencyMatrix,
+    rng: &mut Pcg64,
+) -> f64 {
+    if moves.is_empty() {
+        return 0.0;
+    }
+    // Group moves by (from, to) transition.
+    let mut counts = std::collections::BTreeMap::<(usize, usize), usize>::new();
+    for m in moves {
+        *counts.entry((m.from.0, m.to.0)).or_insert(0) += 1;
+    }
+    let total_moves = moves.len();
+    let mut pooled = Vec::with_capacity(FIG4_SAMPLES);
+    for (&(from, to), &n_apps) in &counts {
+        let dist = Ecdf::new(transition_latencies(&tiers[from], &tiers[to], matrix));
+        if dist.is_empty() {
+            continue;
+        }
+        // Proportional sampling: FIG4_SAMPLES total, split by apps moved.
+        let n_samples = (FIG4_SAMPLES * n_apps).div_ceil(total_moves);
+        for _ in 0..n_samples {
+            pooled.push(dist.sample(rng));
+        }
+    }
+    let cdf = Ecdf::new(pooled);
+    if cdf.is_empty() {
+        0.0
+    } else {
+        cdf.p99().round() // "approximated to the closest ms"
+    }
+}
+
+/// Mean app→data-source latency of a full assignment (used by the region
+/// scheduler's accept/reject and by reporting).
+pub fn assignment_mean_latency_ms(
+    assignment: &Assignment,
+    apps: &[App],
+    tiers: &[Tier],
+    matrix: &LatencyMatrix,
+) -> f64 {
+    if apps.is_empty() {
+        return 0.0;
+    }
+    let total: f64 = apps
+        .iter()
+        .map(|app| app_tier_latency_ms(app, &tiers[assignment.tier_of(app.id).0], matrix))
+        .sum();
+    total / apps.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tier::default_ideal_utilization;
+    use crate::model::{AppId, Criticality, RegionSet, ResourceVec, Slo, TierId};
+
+    fn tier(id: usize, regions: &[usize]) -> Tier {
+        Tier {
+            id: TierId(id),
+            name: format!("tier{}", id + 1),
+            capacity: ResourceVec::splat(100.0),
+            ideal_utilization: default_ideal_utilization(),
+            supported_slos: vec![Slo::Slo3],
+            regions: RegionSet::from_indices(regions.iter().copied()),
+        }
+    }
+
+    #[test]
+    fn synthesized_matrix_is_symmetric_zero_diag() {
+        let mut rng = Pcg64::new(1);
+        let m = LatencyMatrix::synthesize(8, 3, &mut rng);
+        for i in 0..8 {
+            assert_eq!(m.latency_ms(RegionId(i), RegionId(i)), 0.0);
+            for j in 0..8 {
+                assert_eq!(
+                    m.latency_ms(RegionId(i), RegionId(j)),
+                    m.latency_ms(RegionId(j), RegionId(i))
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn synthesized_matrix_respects_triangle_inequality() {
+        let mut rng = Pcg64::new(2);
+        let m = LatencyMatrix::synthesize(10, 3, &mut rng);
+        // 1-D embedding + positive floor: allow the 1ms floor as slack.
+        assert_eq!(m.triangle_violations(1.0), 0);
+    }
+
+    #[test]
+    fn intra_cluster_cheaper_than_inter() {
+        let mut rng = Pcg64::new(3);
+        // Blocked clusters: regions 0,1 in cluster 0; 2,3 in cluster 1;
+        // 4,5 in cluster 2 (n=6, 3 clusters).
+        let m = LatencyMatrix::synthesize(6, 3, &mut rng);
+        let intra = m.latency_ms(RegionId(0), RegionId(1));
+        let inter = m.latency_ms(RegionId(0), RegionId(2));
+        assert!(intra < inter, "intra {intra} < inter {inter}");
+    }
+
+    #[test]
+    fn transition_latency_cross_product() {
+        let mut rng = Pcg64::new(4);
+        let m = LatencyMatrix::synthesize(6, 2, &mut rng);
+        let a = tier(0, &[0, 1]);
+        let b = tier(1, &[2, 3, 4]);
+        assert_eq!(transition_latencies(&a, &b, &m).len(), 6);
+    }
+
+    #[test]
+    fn p99_of_no_moves_is_zero() {
+        let mut rng = Pcg64::new(5);
+        let m = LatencyMatrix::synthesize(4, 2, &mut rng);
+        assert_eq!(solution_p99_latency_ms(&[], &[], &m, &mut rng), 0.0);
+    }
+
+    #[test]
+    fn p99_same_region_transitions_small() {
+        let mut rng = Pcg64::new(6);
+        let m = LatencyMatrix::synthesize(6, 2, &mut rng);
+        let tiers = vec![tier(0, &[0, 1]), tier(1, &[0, 1])]; // same cluster
+        let moves = vec![Move { app: AppId(0), from: TierId(0), to: TierId(1) }];
+        let p = solution_p99_latency_ms(&moves, &tiers, &m, &mut rng);
+        assert!(p < 20.0, "same-cluster p99 {p} should be small");
+    }
+
+    #[test]
+    fn p99_cross_cluster_larger_than_intra() {
+        let mut rng = Pcg64::new(7);
+        // Blocked clusters: 8 regions, 4 clusters -> {0,1},{2,3},{4,5},{6,7}.
+        let m = LatencyMatrix::synthesize(8, 4, &mut rng);
+        let near = vec![tier(0, &[0, 1]), tier(1, &[0, 1])];
+        let far = vec![tier(0, &[0, 1]), tier(1, &[6, 7])]; // 3 clusters away
+        let mv = vec![Move { app: AppId(0), from: TierId(0), to: TierId(1) }];
+        let p_near = solution_p99_latency_ms(&mv, &near, &m, &mut rng);
+        let p_far = solution_p99_latency_ms(&mv, &far, &m, &mut rng);
+        assert!(p_far > p_near + 50.0, "far {p_far} vs near {p_near}");
+    }
+
+    #[test]
+    fn p99_is_integral_ms() {
+        let mut rng = Pcg64::new(8);
+        let m = LatencyMatrix::synthesize(6, 3, &mut rng);
+        let tiers = vec![tier(0, &[0, 1]), tier(1, &[2, 5])];
+        let mv = vec![
+            Move { app: AppId(0), from: TierId(0), to: TierId(1) },
+            Move { app: AppId(1), from: TierId(0), to: TierId(1) },
+        ];
+        let p = solution_p99_latency_ms(&mv, &tiers, &m, &mut rng);
+        assert_eq!(p, p.round());
+    }
+
+    #[test]
+    fn app_tier_latency_takes_min_over_tier_regions() {
+        let mut rng = Pcg64::new(9);
+        let m = LatencyMatrix::synthesize(6, 3, &mut rng);
+        let app = App {
+            id: AppId(0),
+            name: "a".into(),
+            demand: ResourceVec::ZERO,
+            slo: Slo::Slo3,
+            criticality: Criticality::new(0.0),
+            preferred_region: RegionId(0),
+        };
+        let t = tier(0, &[0, 5]);
+        // Region 0 is in the tier: min latency must be 0.
+        assert_eq!(app_tier_latency_ms(&app, &t, &m), 0.0);
+    }
+}

@@ -1,0 +1,194 @@
+//! Constraint validation (§3.2.1 statements 1–4 + the variant constraints
+//! C5/C6). Solvers enforce these by construction; the validator audits any
+//! assignment and reports every violation — the paper's §3.3 "decision
+//! evaluation can also result in finding bugs with the solver in terms of
+//! how the tuning knobs/goals and constraints are defined and if they're
+//! followed correctly".
+
+use crate::model::{Assignment, ResourceKind, TierId};
+use crate::rebalancer::problem::Problem;
+use std::fmt;
+
+/// A single constraint violation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Violation {
+    /// C1/C2: projected load exceeds tier capacity on a resource.
+    CapacityExceeded {
+        tier: TierId,
+        resource: ResourceKind,
+        load: f64,
+        capacity: f64,
+    },
+    /// C3: more apps moved than the movement budget allows.
+    MovementLimitExceeded { moved: usize, limit: usize },
+    /// C4/C6: app placed on a tier outside its allowed set.
+    DisallowedTier { app: usize, tier: TierId },
+    /// C5: a forbidden tier→tier transition was used.
+    ForbiddenTransition { app: usize, from: TierId, to: TierId },
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Violation::CapacityExceeded { tier, resource, load, capacity } => write!(
+                f,
+                "{tier}: {resource} load {load:.1} exceeds capacity {capacity:.1}"
+            ),
+            Violation::MovementLimitExceeded { moved, limit } => {
+                write!(f, "moved {moved} apps, budget is {limit}")
+            }
+            Violation::DisallowedTier { app, tier } => {
+                write!(f, "app{app} placed on disallowed {tier}")
+            }
+            Violation::ForbiddenTransition { app, from, to } => {
+                write!(f, "app{app} used forbidden transition {from}->{to}")
+            }
+        }
+    }
+}
+
+/// Audit an assignment against every constraint in the problem.
+pub fn validate(problem: &Problem, assignment: &Assignment) -> Vec<Violation> {
+    let mut violations = Vec::new();
+
+    // C1/C2: capacity per tier per resource.
+    let mut loads = vec![crate::model::ResourceVec::ZERO; problem.n_tiers()];
+    for (i, app) in problem.apps.iter().enumerate() {
+        loads[assignment.as_slice()[i].0] += app.demand;
+    }
+    for (t, tier) in problem.tiers.iter().enumerate() {
+        for r in ResourceKind::ALL {
+            let load = loads[t].get(r);
+            let cap = tier.capacity.get(r);
+            if load > cap {
+                violations.push(Violation::CapacityExceeded {
+                    tier: tier.id,
+                    resource: r,
+                    load,
+                    capacity: cap,
+                });
+            }
+        }
+    }
+
+    // C3: movement budget.
+    let moved = assignment.move_count_from(&problem.initial);
+    if moved > problem.max_moves {
+        violations.push(Violation::MovementLimitExceeded { moved, limit: problem.max_moves });
+    }
+
+    // C4/C6: allowed sets; C5: forbidden transitions.
+    for (i, app) in problem.apps.iter().enumerate() {
+        let to = assignment.as_slice()[i];
+        let from = problem.initial.as_slice()[i];
+        if !app.allowed.contains(&to) {
+            violations.push(Violation::DisallowedTier { app: i, tier: to });
+        }
+        if from != to && !problem.transition_allowed(from, to) {
+            violations.push(Violation::ForbiddenTransition { app: i, from, to });
+        }
+    }
+
+    violations
+}
+
+/// True iff the assignment satisfies the *hard* movement/placement
+/// constraints (capacity is big-M soft in the solvers but audited here).
+pub fn is_feasible(problem: &Problem, assignment: &Assignment) -> bool {
+    validate(problem, assignment).is_empty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::AppId;
+    use crate::rebalancer::problem::GoalWeights;
+    use crate::workload::{generate, WorkloadSpec};
+
+    fn problem() -> Problem {
+        let bed = generate(&WorkloadSpec::paper());
+        Problem::build(&bed.apps, &bed.tiers, bed.initial, 0.10, GoalWeights::default()).unwrap()
+    }
+
+    #[test]
+    fn incumbent_is_movement_and_placement_clean() {
+        let p = problem();
+        let v = validate(&p, &p.initial.clone());
+        // The skewed initial state may violate capacity, but never
+        // movement/placement constraints.
+        assert!(v.iter().all(|v| matches!(v, Violation::CapacityExceeded { .. })));
+    }
+
+    #[test]
+    fn movement_budget_detected() {
+        let p = problem();
+        let mut asg = p.initial.clone();
+        // Move max_moves+1 apps to some other allowed tier.
+        let mut moved = 0;
+        for (i, app) in p.apps.iter().enumerate() {
+            if moved > p.max_moves {
+                break;
+            }
+            if let Some(&t) = app.allowed.iter().find(|&&t| t != p.initial.tier_of(AppId(i))) {
+                asg.set(AppId(i), t);
+                moved += 1;
+            }
+        }
+        assert!(validate(&p, &asg)
+            .iter()
+            .any(|v| matches!(v, Violation::MovementLimitExceeded { .. })));
+    }
+
+    #[test]
+    fn disallowed_tier_detected() {
+        let p = problem();
+        // Find an app with a restricted allowed set.
+        let (i, app) = p
+            .apps
+            .iter()
+            .enumerate()
+            .find(|(_, a)| a.allowed.len() < p.n_tiers())
+            .expect("paper mapping has restricted SLOs");
+        let bad = (0..p.n_tiers())
+            .map(TierId)
+            .find(|t| !app.allowed.contains(t))
+            .unwrap();
+        let mut asg = p.initial.clone();
+        asg.set(AppId(i), bad);
+        assert!(validate(&p, &asg)
+            .iter()
+            .any(|v| matches!(v, Violation::DisallowedTier { app, .. } if *app == i)));
+    }
+
+    #[test]
+    fn forbidden_transition_detected() {
+        let mut p = problem();
+        let i = p.apps.iter().position(|a| a.allowed.len() >= 2).unwrap();
+        let from = p.initial.tier_of(AppId(i));
+        let to = *p.apps[i].allowed.iter().find(|&&t| t != from).unwrap();
+        p.forbid_transition(from, to);
+        let mut asg = p.initial.clone();
+        asg.set(AppId(i), to);
+        assert!(validate(&p, &asg)
+            .iter()
+            .any(|v| matches!(v, Violation::ForbiddenTransition { .. })));
+    }
+
+    #[test]
+    fn capacity_violation_detected_and_displayed() {
+        let p = problem();
+        // Stack everything allowed onto tier 0.
+        let mut asg = p.initial.clone();
+        for (i, app) in p.apps.iter().enumerate() {
+            if app.allowed.contains(&TierId(0)) {
+                asg.set(AppId(i), TierId(0));
+            }
+        }
+        let vs = validate(&p, &asg);
+        let cap = vs
+            .iter()
+            .find(|v| matches!(v, Violation::CapacityExceeded { .. }))
+            .expect("stacking must blow capacity");
+        assert!(cap.to_string().contains("exceeds capacity"));
+    }
+}

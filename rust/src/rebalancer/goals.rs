@@ -1,0 +1,116 @@
+//! Goal modelling (§3.2.1 statements 5–9). Goals are priority-ordered and
+//! always strictly below constraints; the default priority order is the
+//! paper's, and alternative orderings are supported as tuning knobs (the
+//! paper explored them and found no significant improvement — our ablation
+//! bench `fig3_balance --ablate-priorities` reproduces that non-result).
+
+use crate::rebalancer::problem::GoalWeights;
+
+/// The five goals, in the paper's default priority order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Goal {
+    /// 5. "Tiers resource utilization is preferred to be under
+    ///    utilization limit".
+    UtilizationLimit,
+    /// 6. "Resource usage is balanced across tiers" (cpu, mem).
+    ResourceBalance,
+    /// 7. "Task count is balanced across tiers".
+    TaskBalance,
+    /// 8. "App downtime is low during switch tier" (movement cost is
+    ///    task count).
+    MoveCost,
+    /// 9. "Apps with high criticality scores are not moved frequently".
+    CriticalityAffinity,
+}
+
+impl Goal {
+    pub const DEFAULT_ORDER: [Goal; 5] = [
+        Goal::UtilizationLimit,
+        Goal::ResourceBalance,
+        Goal::TaskBalance,
+        Goal::MoveCost,
+        Goal::CriticalityAffinity,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Goal::UtilizationLimit => "utilization_limit",
+            Goal::ResourceBalance => "resource_balance",
+            Goal::TaskBalance => "task_balance",
+            Goal::MoveCost => "move_cost",
+            Goal::CriticalityAffinity => "criticality_affinity",
+        }
+    }
+}
+
+/// Weight of the capacity (constraint) term — always above every goal.
+pub const CAPACITY_WEIGHT: f64 = 1e6;
+
+/// Decade separation between consecutive priorities keeps the ordering
+/// effectively lexicographic while remaining a single scalar objective
+/// (what Rebalancer's weighted solvers consume).
+pub const PRIORITY_DECADE: f64 = 10.0;
+
+/// Derive scalar weights from a priority ordering: the first goal gets
+/// 1e3, each subsequent one a decade less.
+pub fn weights_from_priorities(order: &[Goal; 5]) -> GoalWeights {
+    let mut w = GoalWeights {
+        capacity: CAPACITY_WEIGHT,
+        util_limit: 0.0,
+        res_balance: 0.0,
+        task_balance: 0.0,
+        move_cost: 0.0,
+        criticality: 0.0,
+    };
+    for (rank, goal) in order.iter().enumerate() {
+        let weight = 1e3 / PRIORITY_DECADE.powi(rank as i32);
+        match goal {
+            Goal::UtilizationLimit => w.util_limit = weight,
+            Goal::ResourceBalance => w.res_balance = weight,
+            Goal::TaskBalance => w.task_balance = weight,
+            Goal::MoveCost => w.move_cost = weight,
+            Goal::CriticalityAffinity => w.criticality = weight,
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_order_reproduces_default_weights() {
+        let w = weights_from_priorities(&Goal::DEFAULT_ORDER);
+        assert_eq!(w, GoalWeights::default());
+    }
+
+    #[test]
+    fn swapped_priorities_swap_weights() {
+        let mut order = Goal::DEFAULT_ORDER;
+        order.swap(0, 4); // criticality first, util limit last
+        let w = weights_from_priorities(&order);
+        assert_eq!(w.criticality, 1e3);
+        assert_eq!(w.util_limit, 1e-1);
+        assert_eq!(w.res_balance, 1e2); // middle unchanged
+    }
+
+    #[test]
+    fn capacity_always_dominates() {
+        for shift in 0..5 {
+            let mut order = Goal::DEFAULT_ORDER;
+            order.rotate_left(shift);
+            let w = weights_from_priorities(&order);
+            for gw in [w.util_limit, w.res_balance, w.task_balance, w.move_cost, w.criticality] {
+                assert!(w.capacity > 100.0 * gw);
+            }
+        }
+    }
+
+    #[test]
+    fn names_unique() {
+        let names: std::collections::BTreeSet<_> =
+            Goal::DEFAULT_ORDER.iter().map(|g| g.name()).collect();
+        assert_eq!(names.len(), 5);
+    }
+}

@@ -1,0 +1,418 @@
+//! LocalSearch solver (§3.2.1): "greedy exploration of search space to
+//! find a solution, can get stuck in local minimums".
+//!
+//! Anytime steepest-descent over the single-move neighborhood with
+//! perturbation restarts on plateaus. The movement budget (C3), allowed
+//! sets (C4/C6) and forbidden transitions (C5) are enforced *by
+//! construction* — infeasible candidates are never generated.
+//!
+//! Hot path: candidate evaluation uses [`ScoreState::peek`] (O(T·R) per
+//! candidate after the §Perf incremental-scoring optimization) or, when a
+//! [`BatchScorer`] is supplied, batches of one-hot candidates scored in a
+//! single PJRT dispatch (the L1/L2 artifact).
+
+use crate::model::{Assignment, TierId};
+use crate::rebalancer::problem::Problem;
+use crate::rebalancer::scoring::ScoreState;
+use crate::rebalancer::solution::{Solution, SolveStats, SolverKind};
+use crate::rebalancer::BatchScorer;
+use crate::util::prng::Pcg64;
+use crate::util::timer::Deadline;
+
+/// LocalSearch configuration.
+#[derive(Debug, Clone)]
+pub struct LocalSearchConfig {
+    /// Passes without improvement before a perturbation restart.
+    pub plateau_passes: u32,
+    /// Fraction of moved apps reverted during a perturbation.
+    pub perturb_revert_frac: f64,
+    /// Random moves injected during a perturbation.
+    pub perturb_kicks: usize,
+    /// Terminate after this many consecutive perturbation restarts that
+    /// fail to improve the best solution (the solver has converged —
+    /// matching the paper's Figs. 4–5 where solve times sit well below
+    /// the timeout). `None` keeps searching until the deadline.
+    pub max_stale_restarts: Option<u32>,
+    pub seed: u64,
+}
+
+impl Default for LocalSearchConfig {
+    fn default() -> Self {
+        Self {
+            plateau_passes: 2,
+            perturb_revert_frac: 0.5,
+            perturb_kicks: 3,
+            max_stale_restarts: Some(6),
+            seed: 0xB417,
+        }
+    }
+}
+
+pub struct LocalSearch {
+    pub config: LocalSearchConfig,
+}
+
+impl LocalSearch {
+    pub fn new(config: LocalSearchConfig) -> Self {
+        Self { config }
+    }
+
+    pub fn with_seed(seed: u64) -> Self {
+        Self::new(LocalSearchConfig { seed, ..LocalSearchConfig::default() })
+    }
+
+    /// Solve with the incremental CPU scorer.
+    pub fn solve(&self, problem: &Problem, deadline: Deadline) -> Solution {
+        self.solve_inner(problem, deadline, None, problem.initial.clone())
+    }
+
+    /// Solve starting the search from `start` instead of the incumbent
+    /// (movement is still measured against `problem.initial`). Used by
+    /// OptimalSearch's polish stage. `start` must already satisfy the
+    /// movement budget.
+    pub fn solve_from(&self, problem: &Problem, deadline: Deadline, start: Assignment) -> Solution {
+        self.solve_inner(problem, deadline, None, start)
+    }
+
+    /// Solve, scoring candidate *batches* through the supplied scorer
+    /// (the PJRT artifact path). Falls back to incremental scoring for
+    /// bookkeeping; the batch scorer ranks each pass's neighborhood.
+    pub fn solve_batched(
+        &self,
+        problem: &Problem,
+        deadline: Deadline,
+        scorer: &mut dyn BatchScorer,
+    ) -> Solution {
+        self.solve_inner(problem, deadline, Some(scorer), problem.initial.clone())
+    }
+
+    fn solve_inner(
+        &self,
+        problem: &Problem,
+        deadline: Deadline,
+        mut batch: Option<&mut dyn BatchScorer>,
+        start: Assignment,
+    ) -> Solution {
+        let mut rng = Pcg64::new(self.config.seed);
+        let mut state = ScoreState::new(problem, start);
+        let mut stats = SolveStats::default();
+
+        let mut best_assignment = state.assignment();
+        let mut best_score = state.score();
+        let mut converged_at = std::time::Duration::ZERO;
+
+        let mut app_order: Vec<usize> = (0..problem.n_apps()).collect();
+        let mut plateau = 0u32;
+        let mut stale_restarts = 0u32;
+        let mut best_at_last_restart = best_score;
+        // Reusable candidate scratch for the batched path.
+        let mut cand_moves: Vec<(usize, TierId)> = Vec::new();
+
+        'outer: loop {
+            if deadline.expired() {
+                break;
+            }
+            stats.iterations += 1;
+            rng.shuffle(&mut app_order);
+            let mut improved_this_pass = false;
+
+            if let Some(scorer) = batch.as_deref_mut() {
+                // ---- batched pass: collect the whole feasible
+                // neighborhood, score it in PJRT dispatches, apply the
+                // best improving candidate, repeat within the pass.
+                loop {
+                    if deadline.expired() {
+                        break 'outer;
+                    }
+                    cand_moves.clear();
+                    let current_score = state.score();
+                    for &app in &app_order {
+                        for &t in &problem.apps[app].allowed {
+                            if self.candidate_ok(problem, &state, app, t) {
+                                cand_moves.push((app, t));
+                            }
+                        }
+                    }
+                    if cand_moves.is_empty() {
+                        break;
+                    }
+                    let candidates: Vec<Assignment> = cand_moves
+                        .iter()
+                        .map(|&(app, t)| {
+                            let mut asg = state.assignment();
+                            asg.set(crate::model::AppId(app), t);
+                            asg
+                        })
+                        .collect();
+                    let scores = match scorer.score_batch(problem, &candidates) {
+                        Ok(s) => s,
+                        Err(_) => {
+                            // Scorer failure: degrade to incremental.
+                            cand_moves
+                                .iter()
+                                .map(|&(app, t)| state.peek(app, t))
+                                .collect()
+                        }
+                    };
+                    stats.candidates_scored += scores.len() as u64;
+                    let (bi, bscore) = scores
+                        .iter()
+                        .enumerate()
+                        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, s)| (i, *s))
+                        .unwrap();
+                    if bscore + 1e-12 < current_score {
+                        let (app, t) = cand_moves[bi];
+                        state.apply(app, t);
+                        improved_this_pass = true;
+                        if state.score() < best_score {
+                            best_score = state.score();
+                            best_assignment = state.assignment();
+                            converged_at = deadline.elapsed();
+                        }
+                    } else {
+                        break;
+                    }
+                }
+            } else {
+                // ---- incremental pass: GLOBAL steepest descent. Each
+                // step scans the whole feasible neighborhood with O(T·R)
+                // incremental peeks and applies the single best improving
+                // move. Global (vs per-app serial) selection matters: the
+                // movement budget (C3) is scarce, and spending it on the
+                // globally best move per step is what lets 10% movement
+                // reach a near-balanced state (see EXPERIMENTS.md §Perf).
+                loop {
+                    if deadline.expired() {
+                        break 'outer;
+                    }
+                    let current_score = state.score();
+                    let mut best_move: Option<(usize, TierId, f64)> = None;
+                    for &app in &app_order {
+                        let current = state.tier_of(app);
+                        for &t in &problem.apps[app].allowed {
+                            if t == current || !self.candidate_ok(problem, &state, app, t) {
+                                continue;
+                            }
+                            let s = state.peek(app, t);
+                            stats.candidates_scored += 1;
+                            if s + 1e-12 < current_score
+                                && best_move.map_or(true, |(_, _, bs)| s < bs)
+                            {
+                                best_move = Some((app, t, s));
+                            }
+                        }
+                    }
+                    let Some((app, t, s)) = best_move else { break };
+                    state.apply(app, t);
+                    improved_this_pass = true;
+                    if s < best_score {
+                        best_score = s;
+                        best_assignment = state.assignment();
+                        converged_at = deadline.elapsed();
+                    }
+                }
+            }
+
+            if improved_this_pass {
+                plateau = 0;
+            } else {
+                plateau += 1;
+                if plateau >= self.config.plateau_passes {
+                    // Converged? Count restarts that failed to beat best.
+                    if best_score + 1e-12 >= best_at_last_restart {
+                        stale_restarts += 1;
+                        if let Some(limit) = self.config.max_stale_restarts {
+                            if stale_restarts >= limit {
+                                break;
+                            }
+                        }
+                    } else {
+                        stale_restarts = 0;
+                    }
+                    best_at_last_restart = best_score;
+                    // Perturbation restart: revert part of the diff and
+                    // kick a few random feasible moves, keeping best.
+                    self.perturb(problem, &mut state, &mut rng);
+                    stats.restarts += 1;
+                    plateau = 0;
+                }
+            }
+        }
+
+        stats.elapsed = deadline.elapsed();
+        stats.converged_at = converged_at;
+        let mut solution =
+            Solution::of_assignment(problem, best_assignment, SolverKind::LocalSearch);
+        solution.stats = stats;
+        solution
+    }
+
+    /// Candidate legality: allowed set was already consulted; checks
+    /// transitions (C5) and the movement budget (C3).
+    fn candidate_ok(&self, problem: &Problem, state: &ScoreState, app: usize, to: TierId) -> bool {
+        let current = state.tier_of(app);
+        if current == to {
+            return false;
+        }
+        let init = problem.initial.as_slice()[app];
+        if init != to && !problem.transition_allowed(init, to) {
+            return false;
+        }
+        // Budget: moving an unmoved app consumes one unit.
+        if current == init && to != init && state.moves_remaining() == 0 {
+            return false;
+        }
+        true
+    }
+
+    fn perturb(&self, problem: &Problem, state: &mut ScoreState, rng: &mut Pcg64) {
+        // Revert a fraction of moved apps.
+        let moved: Vec<usize> = (0..problem.n_apps())
+            .filter(|&a| state.tier_of(a) != problem.initial.as_slice()[a])
+            .collect();
+        for &app in &moved {
+            if rng.chance(self.config.perturb_revert_frac) {
+                state.apply(app, problem.initial.as_slice()[app]);
+            }
+        }
+        // Kick random feasible moves.
+        for _ in 0..self.config.perturb_kicks {
+            let app = rng.range(0, problem.n_apps());
+            let allowed = &problem.apps[app].allowed;
+            let to = *rng.choose(allowed).unwrap();
+            if self.candidate_ok(problem, state, app, to) {
+                state.apply(app, to);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rebalancer::constraints::{is_feasible, validate, Violation};
+    use crate::rebalancer::problem::GoalWeights;
+    use crate::rebalancer::scoring::score_assignment;
+    use crate::util::propcheck::{forall, Check};
+    use crate::workload::{generate, WorkloadSpec};
+
+    fn paper_problem(seed: u64) -> Problem {
+        let bed = generate(&WorkloadSpec::paper().with_seed(seed));
+        Problem::build(&bed.apps, &bed.tiers, bed.initial, 0.10, GoalWeights::default()).unwrap()
+    }
+
+    #[test]
+    fn improves_over_incumbent() {
+        let p = paper_problem(42);
+        let (initial_score, _) = score_assignment(&p, &p.initial.clone());
+        let sol = LocalSearch::with_seed(1).solve(&p, Deadline::after_ms(300));
+        assert!(
+            sol.score < initial_score,
+            "solver {} must beat incumbent {}",
+            sol.score,
+            initial_score
+        );
+        assert!(sol.stats.candidates_scored > 0);
+    }
+
+    #[test]
+    fn solution_is_feasible() {
+        let p = paper_problem(42);
+        let sol = LocalSearch::with_seed(2).solve(&p, Deadline::after_ms(300));
+        let vs = validate(&p, &sol.assignment);
+        // Capacity may be infeasible only if the incumbent already was;
+        // movement/placement must always hold.
+        assert!(
+            vs.iter().all(|v| matches!(v, Violation::CapacityExceeded { .. })),
+            "violations: {vs:?}"
+        );
+        assert!(sol.assignment.move_count_from(&p.initial) <= p.max_moves);
+    }
+
+    #[test]
+    fn respects_forbidden_transitions() {
+        let mut p = paper_problem(7);
+        // Forbid every transition out of the hot tier except to tier 0.
+        for t in 1..p.n_tiers() {
+            p.forbid_transition(TierId(2), TierId(t));
+        }
+        let sol = LocalSearch::with_seed(3).solve(&p, Deadline::after_ms(200));
+        for m in sol.moves(&p) {
+            if m.from == TierId(2) {
+                assert_eq!(m.to, TierId(0), "only tier0 allowed from tier2");
+            }
+        }
+    }
+
+    #[test]
+    fn anytime_zero_deadline_returns_incumbent() {
+        let p = paper_problem(42);
+        let sol = LocalSearch::with_seed(4).solve(&p, Deadline::after_ms(0));
+        assert_eq!(sol.assignment, p.initial);
+    }
+
+    #[test]
+    fn longer_deadline_not_worse() {
+        let p = paper_problem(11);
+        let short = LocalSearch::with_seed(5).solve(&p, Deadline::after_ms(20));
+        let long = LocalSearch::with_seed(5).solve(&p, Deadline::after_ms(400));
+        assert!(long.score <= short.score + 1e-9);
+    }
+
+    #[test]
+    fn batched_path_matches_cpu_scorer_semantics() {
+        // CPU-backed BatchScorer: same scores as incremental peek.
+        struct CpuBatch;
+        impl BatchScorer for CpuBatch {
+            fn score_batch(
+                &mut self,
+                problem: &Problem,
+                candidates: &[Assignment],
+            ) -> anyhow::Result<Vec<f64>> {
+                Ok(candidates
+                    .iter()
+                    .map(|a| score_assignment(problem, a).0)
+                    .collect())
+            }
+        }
+        let p = paper_problem(42);
+        let mut scorer = CpuBatch;
+        let sol =
+            LocalSearch::with_seed(6).solve_batched(&p, Deadline::after_ms(200), &mut scorer);
+        let (initial_score, _) = score_assignment(&p, &p.initial.clone());
+        assert!(sol.score < initial_score);
+        assert!(sol.assignment.move_count_from(&p.initial) <= p.max_moves);
+    }
+
+    #[test]
+    fn property_feasible_across_seeds() {
+        forall(
+            8,
+            |rng| rng.next_u64() % 1000,
+            |&seed| {
+                let p = paper_problem(seed);
+                let sol = LocalSearch::with_seed(seed).solve(&p, Deadline::after_ms(50));
+                let moves_ok = sol.assignment.move_count_from(&p.initial) <= p.max_moves;
+                let placement_ok = validate(&p, &sol.assignment)
+                    .iter()
+                    .all(|v| matches!(v, Violation::CapacityExceeded { .. }));
+                Check::from_bool(moves_ok && placement_ok, "constraints by construction")
+            },
+        );
+    }
+
+    #[test]
+    fn feasibility_helper_on_spread_problem() {
+        // A generously-capacitated problem should be end-to-end feasible.
+        let bed = generate(&WorkloadSpec::small());
+        let mut tiers = bed.tiers.clone();
+        for t in &mut tiers {
+            t.capacity = t.capacity * 10.0;
+        }
+        let p = Problem::build(&bed.apps, &tiers, bed.initial, 0.5, GoalWeights::default())
+            .unwrap();
+        let sol = LocalSearch::with_seed(8).solve(&p, Deadline::after_ms(100));
+        assert!(is_feasible(&p, &sol.assignment));
+    }
+}

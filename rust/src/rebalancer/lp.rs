@@ -1,0 +1,494 @@
+//! Dense two-phase primal simplex, from scratch (no LP crate offline).
+//! Supports `<=`, `>=`, and `=` rows over non-negative variables —
+//! exactly what OptimalSearch's relaxation (see `optimal.rs`) needs.
+//!
+//! Implementation notes:
+//!  * Phase 1 minimizes the sum of artificial variables; phase 2 proceeds
+//!    only if phase 1 reaches ~0.
+//!  * Dantzig pricing with a Bland's-rule fallback after a degeneracy
+//!    streak prevents cycling.
+//!  * Dense row-major tableau: fine at our scale (hundreds × hundreds).
+
+/// Row sense.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sense {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// One linear constraint: `coeffs · x  (sense)  rhs`.
+#[derive(Debug, Clone)]
+pub struct Row {
+    /// Sparse (var, coeff) pairs.
+    pub coeffs: Vec<(usize, f64)>,
+    pub sense: Sense,
+    pub rhs: f64,
+}
+
+/// LP: minimize `objective · x` subject to rows, `x >= 0`.
+#[derive(Debug, Clone, Default)]
+pub struct Lp {
+    pub n_vars: usize,
+    /// Sparse objective (var, coeff); minimization.
+    pub objective: Vec<(usize, f64)>,
+    pub rows: Vec<Row>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpOutcome {
+    Optimal { x: Vec<f64>, objective: f64 },
+    Infeasible,
+    Unbounded,
+    /// Iteration limit hit; x is the best feasible point found (phase-2
+    /// iterate) if any.
+    IterationLimit,
+}
+
+impl Lp {
+    pub fn new(n_vars: usize) -> Self {
+        Self { n_vars, objective: Vec::new(), rows: Vec::new() }
+    }
+
+    pub fn set_objective(&mut self, var: usize, coeff: f64) {
+        debug_assert!(var < self.n_vars);
+        self.objective.push((var, coeff));
+    }
+
+    pub fn add_row(&mut self, coeffs: Vec<(usize, f64)>, sense: Sense, rhs: f64) {
+        debug_assert!(coeffs.iter().all(|&(v, _)| v < self.n_vars));
+        self.rows.push(Row { coeffs, sense, rhs });
+    }
+
+    /// Solve; `max_iters` bounds total pivots across both phases.
+    pub fn solve(&self, max_iters: usize) -> LpOutcome {
+        Tableau::build(self).solve(max_iters, None)
+    }
+
+    /// Solve with a wall-clock deadline (checked every few pivots); on
+    /// expiry returns [`LpOutcome::IterationLimit`].
+    pub fn solve_with_deadline(
+        &self,
+        max_iters: usize,
+        deadline: crate::util::timer::Deadline,
+    ) -> LpOutcome {
+        Tableau::build(self).solve(max_iters, Some(deadline))
+    }
+}
+
+const EPS: f64 = 1e-9;
+
+struct Tableau {
+    /// rows × cols coefficient matrix (col-slack/artificial augmented).
+    a: Vec<f64>,
+    b: Vec<f64>,
+    n_rows: usize,
+    n_cols: usize,
+    n_structural: usize,
+    /// Basis: column index per row.
+    basis: Vec<usize>,
+    /// Phase-2 cost per column.
+    cost: Vec<f64>,
+    /// First artificial column (columns >= this are artificial).
+    art_start: usize,
+}
+
+impl Tableau {
+    fn build(lp: &Lp) -> Tableau {
+        let n_rows = lp.rows.len();
+        // Count slacks (one per inequality) and artificials (Ge/Eq rows).
+        let n_slack = lp.rows.iter().filter(|r| r.sense != Sense::Eq).count();
+        let n_art = lp
+            .rows
+            .iter()
+            .filter(|r| {
+                // After rhs normalization a Ge row needs an artificial; an
+                // Le row with negative rhs flips to Ge-like. Compute below.
+                let rhs_neg = r.rhs < 0.0;
+                match (r.sense, rhs_neg) {
+                    (Sense::Eq, _) => true,
+                    (Sense::Ge, false) => true,
+                    (Sense::Le, true) => true,
+                    _ => false,
+                }
+            })
+            .count();
+        let n_structural = lp.n_vars;
+        let n_cols = n_structural + n_slack + n_art;
+        let art_start = n_structural + n_slack;
+
+        let mut a = vec![0.0; n_rows * n_cols];
+        let mut b = vec![0.0; n_rows];
+        let mut basis = vec![usize::MAX; n_rows];
+        let mut slack_i = 0;
+        let mut art_i = 0;
+
+        for (i, row) in lp.rows.iter().enumerate() {
+            // Normalize to rhs >= 0 (flip the row if needed).
+            let flip = row.rhs < 0.0;
+            let sgn = if flip { -1.0 } else { 1.0 };
+            for &(v, c) in &row.coeffs {
+                a[i * n_cols + v] += sgn * c;
+            }
+            b[i] = sgn * row.rhs;
+            let eff_sense = match (row.sense, flip) {
+                (Sense::Eq, _) => Sense::Eq,
+                (Sense::Le, false) | (Sense::Ge, true) => Sense::Le,
+                (Sense::Ge, false) | (Sense::Le, true) => Sense::Ge,
+            };
+            match eff_sense {
+                Sense::Le => {
+                    let col = n_structural + slack_i;
+                    a[i * n_cols + col] = 1.0;
+                    basis[i] = col;
+                    slack_i += 1;
+                }
+                Sense::Ge => {
+                    let scol = n_structural + slack_i;
+                    a[i * n_cols + scol] = -1.0; // surplus
+                    slack_i += 1;
+                    let acol = art_start + art_i;
+                    a[i * n_cols + acol] = 1.0;
+                    basis[i] = acol;
+                    art_i += 1;
+                }
+                Sense::Eq => {
+                    let acol = art_start + art_i;
+                    a[i * n_cols + acol] = 1.0;
+                    basis[i] = acol;
+                    art_i += 1;
+                }
+            }
+        }
+        debug_assert!(basis.iter().all(|&c| c != usize::MAX));
+
+        let mut cost = vec![0.0; n_cols];
+        for &(v, c) in &lp.objective {
+            cost[v] += c;
+        }
+
+        Tableau { a, b, n_rows, n_cols, n_structural, basis, cost, art_start }
+    }
+
+    #[inline]
+    fn at(&self, r: usize, c: usize) -> f64 {
+        self.a[r * self.n_cols + c]
+    }
+
+    fn pivot(&mut self, pr: usize, pc: usize) {
+        let n_cols = self.n_cols;
+        let pivot_val = self.a[pr * n_cols + pc];
+        debug_assert!(pivot_val.abs() > EPS);
+        let inv = 1.0 / pivot_val;
+        for c in 0..n_cols {
+            self.a[pr * n_cols + c] *= inv;
+        }
+        self.b[pr] *= inv;
+        for r in 0..self.n_rows {
+            if r == pr {
+                continue;
+            }
+            let factor = self.a[r * n_cols + pc];
+            if factor.abs() <= EPS {
+                continue;
+            }
+            for c in 0..n_cols {
+                self.a[r * n_cols + c] -= factor * self.a[pr * n_cols + c];
+            }
+            self.b[r] -= factor * self.b[pr];
+            if self.b[r].abs() < 1e-12 {
+                self.b[r] = 0.0;
+            }
+        }
+        self.basis[pr] = pc;
+    }
+
+    /// Reduced costs for the given cost vector under the current basis.
+    fn reduced_costs(&self, cost: &[f64]) -> Vec<f64> {
+        // y = c_B B^-1 is implicit: since the tableau is kept in canonical
+        // form, reduced cost_j = c_j - Σ_r c_basis[r] * a[r][j].
+        let mut rc = cost.to_vec();
+        for r in 0..self.n_rows {
+            let cb = cost[self.basis[r]];
+            if cb == 0.0 {
+                continue;
+            }
+            for c in 0..self.n_cols {
+                rc[c] -= cb * self.at(r, c);
+            }
+        }
+        rc
+    }
+
+    fn objective_value(&self, cost: &[f64]) -> f64 {
+        (0..self.n_rows).map(|r| cost[self.basis[r]] * self.b[r]).sum()
+    }
+
+    /// Run simplex for `cost`, restricted to columns < `col_limit`.
+    /// Returns Ok(iterations_used) or Err(Unbounded).
+    fn run(
+        &mut self,
+        cost: &[f64],
+        col_limit: usize,
+        max_iters: usize,
+        deadline: Option<crate::util::timer::Deadline>,
+    ) -> Result<usize, LpOutcome> {
+        let mut degenerate_streak = 0usize;
+        for iter in 0..max_iters {
+            if iter % 8 == 0 {
+                if let Some(d) = deadline {
+                    if d.expired() {
+                        return Err(LpOutcome::IterationLimit);
+                    }
+                }
+            }
+            let rc = self.reduced_costs(cost);
+            // Entering column: Dantzig; Bland after a degeneracy streak.
+            let entering = if degenerate_streak > 24 {
+                (0..col_limit).find(|&c| rc[c] < -EPS)
+            } else {
+                (0..col_limit)
+                    .filter(|&c| rc[c] < -EPS)
+                    .min_by(|&x, &y| rc[x].partial_cmp(&rc[y]).unwrap())
+            };
+            let Some(pc) = entering else {
+                return Ok(iter);
+            };
+            // Ratio test.
+            let mut pr: Option<usize> = None;
+            let mut best_ratio = f64::INFINITY;
+            for r in 0..self.n_rows {
+                let arc = self.at(r, pc);
+                if arc > EPS {
+                    let ratio = self.b[r] / arc;
+                    if ratio < best_ratio - EPS
+                        || (ratio < best_ratio + EPS
+                            && pr.map_or(true, |p| self.basis[r] < self.basis[p]))
+                    {
+                        best_ratio = ratio;
+                        pr = Some(r);
+                    }
+                }
+            }
+            let Some(pr) = pr else {
+                return Err(LpOutcome::Unbounded);
+            };
+            if best_ratio < EPS {
+                degenerate_streak += 1;
+            } else {
+                degenerate_streak = 0;
+            }
+            self.pivot(pr, pc);
+        }
+        Err(LpOutcome::IterationLimit)
+    }
+
+    fn extract_x(&self) -> Vec<f64> {
+        let mut x = vec![0.0; self.n_structural];
+        for r in 0..self.n_rows {
+            let c = self.basis[r];
+            if c < self.n_structural {
+                x[c] = self.b[r].max(0.0);
+            }
+        }
+        x
+    }
+
+    fn solve(mut self, max_iters: usize, deadline: Option<crate::util::timer::Deadline>) -> LpOutcome {
+        // ---- phase 1: drive artificials out.
+        let has_artificials = self.art_start < self.n_cols;
+        let mut used = 0usize;
+        if has_artificials {
+            let mut phase1_cost = vec![0.0; self.n_cols];
+            for c in self.art_start..self.n_cols {
+                phase1_cost[c] = 1.0;
+            }
+            match self.run(&phase1_cost.clone(), self.n_cols, max_iters, deadline) {
+                Ok(it) => used = it,
+                Err(LpOutcome::Unbounded) => return LpOutcome::Infeasible,
+                Err(other) => return other,
+            }
+            if self.objective_value(&phase1_cost) > 1e-6 {
+                return LpOutcome::Infeasible;
+            }
+            // Pivot out any artificial still (degenerately) in the basis.
+            for r in 0..self.n_rows {
+                if self.basis[r] >= self.art_start {
+                    if let Some(pc) =
+                        (0..self.art_start).find(|&c| self.at(r, c).abs() > EPS)
+                    {
+                        self.pivot(r, pc);
+                    }
+                }
+            }
+        }
+        // ---- phase 2: optimize the real objective over non-artificials.
+        let cost = self.cost.clone();
+        let budget = max_iters.saturating_sub(used).max(1);
+        match self.run(&cost, self.art_start, budget, deadline) {
+            Ok(_) => {
+                let x = self.extract_x();
+                let objective = self.objective_value(&cost);
+                LpOutcome::Optimal { x, objective }
+            }
+            Err(LpOutcome::Unbounded) => LpOutcome::Unbounded,
+            Err(_) => LpOutcome::IterationLimit,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_opt(outcome: LpOutcome, want_obj: f64, want_x: Option<&[f64]>) {
+        match outcome {
+            LpOutcome::Optimal { x, objective } => {
+                assert!(
+                    (objective - want_obj).abs() < 1e-6,
+                    "objective {objective} want {want_obj}"
+                );
+                if let Some(wx) = want_x {
+                    for (got, want) in x.iter().zip(wx) {
+                        assert!((got - want).abs() < 1e-6, "x {x:?} want {wx:?}");
+                    }
+                }
+            }
+            other => panic!("expected optimal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn basic_le_maximization_as_min() {
+        // max x+y s.t. x<=2, y<=3  -> min -(x+y) = -5.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, -1.0);
+        lp.set_objective(1, -1.0);
+        lp.add_row(vec![(0, 1.0)], Sense::Le, 2.0);
+        lp.add_row(vec![(1, 1.0)], Sense::Le, 3.0);
+        assert_opt(lp.solve(100), -5.0, Some(&[2.0, 3.0]));
+    }
+
+    #[test]
+    fn equality_constraints() {
+        // min x+2y s.t. x+y = 4, x <= 1  -> x=1, y=3, obj 7.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, 1.0);
+        lp.set_objective(1, 2.0);
+        lp.add_row(vec![(0, 1.0), (1, 1.0)], Sense::Eq, 4.0);
+        lp.add_row(vec![(0, 1.0)], Sense::Le, 1.0);
+        assert_opt(lp.solve(100), 7.0, Some(&[1.0, 3.0]));
+    }
+
+    #[test]
+    fn ge_constraints() {
+        // min 2x+3y s.t. x+y >= 10, x <= 6 -> x=6,y=4, obj 24.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, 2.0);
+        lp.set_objective(1, 3.0);
+        lp.add_row(vec![(0, 1.0), (1, 1.0)], Sense::Ge, 10.0);
+        lp.add_row(vec![(0, 1.0)], Sense::Le, 6.0);
+        assert_opt(lp.solve(100), 24.0, Some(&[6.0, 4.0]));
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        // x <= 1 and x >= 2.
+        let mut lp = Lp::new(1);
+        lp.set_objective(0, 1.0);
+        lp.add_row(vec![(0, 1.0)], Sense::Le, 1.0);
+        lp.add_row(vec![(0, 1.0)], Sense::Ge, 2.0);
+        assert_eq!(lp.solve(100), LpOutcome::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        // min -x, x >= 0 unconstrained above.
+        let mut lp = Lp::new(1);
+        lp.set_objective(0, -1.0);
+        lp.add_row(vec![(0, 1.0)], Sense::Ge, 0.0);
+        assert_eq!(lp.solve(100), LpOutcome::Unbounded);
+    }
+
+    #[test]
+    fn negative_rhs_normalized() {
+        // -x <= -2  ===  x >= 2; min x -> 2.
+        let mut lp = Lp::new(1);
+        lp.set_objective(0, 1.0);
+        lp.add_row(vec![(0, -1.0)], Sense::Le, -2.0);
+        assert_opt(lp.solve(100), 2.0, Some(&[2.0]));
+    }
+
+    #[test]
+    fn degenerate_does_not_cycle() {
+        // Classic degenerate LP; Bland fallback must terminate.
+        let mut lp = Lp::new(4);
+        lp.set_objective(0, -0.75);
+        lp.set_objective(1, 150.0);
+        lp.set_objective(2, -0.02);
+        lp.set_objective(3, 6.0);
+        lp.add_row(vec![(0, 0.25), (1, -60.0), (2, -0.04), (3, 9.0)], Sense::Le, 0.0);
+        lp.add_row(vec![(0, 0.5), (1, -90.0), (2, -0.02), (3, 3.0)], Sense::Le, 0.0);
+        lp.add_row(vec![(2, 1.0)], Sense::Le, 1.0);
+        match lp.solve(1000) {
+            LpOutcome::Optimal { objective, .. } => {
+                assert!((objective - (-0.05)).abs() < 1e-6, "obj {objective}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn transportation_like_problem() {
+        // 2 sources (supply 5, 5) x 2 sinks (demand 4, 6); costs
+        // c11=1 c12=3 c21=2 c22=1. Optimal: x11=4, x22=5, x12=1 -> 4+3+5=12.
+        let mut lp = Lp::new(4); // x11 x12 x21 x22
+        for (v, c) in [(0, 1.0), (1, 3.0), (2, 2.0), (3, 1.0)] {
+            lp.set_objective(v, c);
+        }
+        lp.add_row(vec![(0, 1.0), (1, 1.0)], Sense::Eq, 5.0);
+        lp.add_row(vec![(2, 1.0), (3, 1.0)], Sense::Eq, 5.0);
+        lp.add_row(vec![(0, 1.0), (2, 1.0)], Sense::Eq, 4.0);
+        lp.add_row(vec![(1, 1.0), (3, 1.0)], Sense::Eq, 6.0);
+        assert_opt(lp.solve(200), 12.0, None);
+    }
+
+    #[test]
+    fn iteration_limit_reported() {
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, -1.0);
+        lp.add_row(vec![(0, 1.0), (1, 1.0)], Sense::Le, 2.0);
+        assert_eq!(lp.solve(0), LpOutcome::IterationLimit);
+    }
+
+    #[test]
+    fn moderately_sized_random_lp_solves() {
+        // Random feasible LP: min Σx_i with row sums >= targets.
+        use crate::util::prng::Pcg64;
+        let mut rng = Pcg64::new(99);
+        let n = 40;
+        let mut lp = Lp::new(n);
+        for v in 0..n {
+            lp.set_objective(v, rng.uniform(1.0, 2.0));
+        }
+        for _ in 0..20 {
+            let mut coeffs: Vec<(usize, f64)> = Vec::new();
+            for v in 0..n {
+                if rng.chance(0.3) {
+                    coeffs.push((v, rng.uniform(0.5, 1.5)));
+                }
+            }
+            if coeffs.is_empty() {
+                continue;
+            }
+            lp.add_row(coeffs, Sense::Ge, rng.uniform(1.0, 4.0));
+        }
+        match lp.solve(5000) {
+            LpOutcome::Optimal { x, objective } => {
+                assert!(objective >= 0.0);
+                assert!(x.iter().all(|&v| v >= -1e-9));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! Rebalancer constraint-solver substrate (DESIGN.md S7): the system the
+//! paper builds SPTLB on (Meta's Rebalancer, OSDI'24 [2], treated as a
+//! black box exposing constraints, priority-ordered goals, and two solver
+//! types). This module is our from-scratch implementation of that surface.
+
+pub mod constraints;
+pub mod goals;
+pub mod local_search;
+pub mod lp;
+pub mod optimal;
+pub mod problem;
+pub mod scoring;
+pub mod solution;
+
+pub use constraints::{is_feasible, validate, Violation};
+pub use goals::{weights_from_priorities, Goal};
+pub use local_search::{LocalSearch, LocalSearchConfig};
+pub use optimal::{OptimalSearch, OptimalSearchConfig};
+pub use problem::{GoalWeights, Problem, ProblemApp, ProblemTier};
+pub use scoring::{score_assignment, Breakdown, ScoreState};
+pub use solution::{Solution, SolveStats, SolverKind};
+
+use crate::model::Assignment;
+
+/// Batch candidate scorer — implemented by the PJRT runtime
+/// (`runtime::PjrtScorer`) and by CPU fallbacks in tests. LocalSearch's
+/// batched mode routes whole neighborhoods through one implementation
+/// call (one device dispatch on the artifact path).
+pub trait BatchScorer {
+    fn score_batch(
+        &mut self,
+        problem: &Problem,
+        candidates: &[Assignment],
+    ) -> anyhow::Result<Vec<f64>>;
+}
+
+/// Convenience: solve with either solver kind.
+pub fn solve(
+    kind: SolverKind,
+    problem: &Problem,
+    deadline: crate::util::timer::Deadline,
+    seed: u64,
+) -> Solution {
+    match kind {
+        SolverKind::LocalSearch => LocalSearch::with_seed(seed).solve(problem, deadline),
+        SolverKind::OptimalSearch => OptimalSearch::with_seed(seed).solve(problem, deadline),
+    }
+}

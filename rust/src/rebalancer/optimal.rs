@@ -1,0 +1,429 @@
+//! OptimalSearch solver (§3.2.1): "provides a linear programming solver to
+//! search for optimal/close-to-optimal solutions ... usually both the most
+//! time consuming solver and the best performing solver in terms of
+//! solution quality".
+//!
+//! Pipeline:
+//!  1. **LP relaxation** of the assignment ILP (fractional x[a][t] with
+//!     assignment/ capacity/ movement rows, deviation variables
+//!     linearizing the balance goals, overage variables for G1).
+//!  2. **Rounding**: per app take the argmax fraction among allowed tiers.
+//!  3. **Budget repair**: if rounding used more moves than C3 allows,
+//!     revert the moves with the weakest LP support.
+//!  4. **Polish**: spend the remaining deadline running LocalSearch from
+//!     the rounded point (keeps the solution at least as good as rounding
+//!     left it, and strictly enforces all constraints by construction).
+
+use crate::model::{Assignment, TierId, NUM_RESOURCES};
+use crate::rebalancer::local_search::{LocalSearch, LocalSearchConfig};
+use crate::rebalancer::lp::{Lp, LpOutcome, Sense};
+use crate::rebalancer::problem::Problem;
+use crate::rebalancer::scoring::score_assignment;
+use crate::rebalancer::solution::{Solution, SolverKind};
+use crate::util::timer::Deadline;
+
+/// OptimalSearch configuration.
+#[derive(Debug, Clone)]
+pub struct OptimalSearchConfig {
+    /// Simplex pivot budget.
+    pub max_lp_iters: usize,
+    /// Fraction of the remaining deadline granted to the polish stage.
+    pub polish_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for OptimalSearchConfig {
+    fn default() -> Self {
+        Self { max_lp_iters: 20_000, polish_fraction: 0.9, seed: 0x0471 }
+    }
+}
+
+pub struct OptimalSearch {
+    pub config: OptimalSearchConfig,
+}
+
+/// Variable indexing for the LP relaxation.
+struct VarMap {
+    /// x offset per app (into a flat list of that app's allowed tiers).
+    x_offset: Vec<usize>,
+    /// d[t][r] over-deviation, e[t][r] under-deviation, o[t][r] overage.
+    d_start: usize,
+    e_start: usize,
+    o_start: usize,
+    n_vars: usize,
+}
+
+impl VarMap {
+    fn build(problem: &Problem) -> VarMap {
+        let mut x_offset = Vec::with_capacity(problem.n_apps());
+        let mut acc = 0usize;
+        for app in &problem.apps {
+            x_offset.push(acc);
+            acc += app.allowed.len();
+        }
+        let n_x = acc;
+        let tr = problem.n_tiers() * NUM_RESOURCES;
+        VarMap {
+            x_offset,
+            d_start: n_x,
+            e_start: n_x + tr,
+            o_start: n_x + 2 * tr,
+            n_vars: n_x + 3 * tr,
+        }
+    }
+
+    fn x(&self, problem: &Problem, app: usize, tier: TierId) -> Option<usize> {
+        problem.apps[app]
+            .allowed
+            .iter()
+            .position(|&t| t == tier)
+            .map(|k| self.x_offset[app] + k)
+    }
+
+    fn d(&self, t: usize, r: usize) -> usize {
+        self.d_start + t * NUM_RESOURCES + r
+    }
+
+    fn e(&self, t: usize, r: usize) -> usize {
+        self.e_start + t * NUM_RESOURCES + r
+    }
+
+    fn o(&self, t: usize, r: usize) -> usize {
+        self.o_start + t * NUM_RESOURCES + r
+    }
+}
+
+impl OptimalSearch {
+    pub fn new(config: OptimalSearchConfig) -> Self {
+        Self { config }
+    }
+
+    pub fn with_seed(seed: u64) -> Self {
+        Self::new(OptimalSearchConfig { seed, ..OptimalSearchConfig::default() })
+    }
+
+    pub fn solve(&self, problem: &Problem, deadline: Deadline) -> Solution {
+        let mut stats = crate::rebalancer::solution::SolveStats::default();
+
+        // ---- 1. LP relaxation (bounded by the solver deadline; at tiny
+        // timeouts the LP is cut short and OptimalSearch degrades to the
+        // polish stage — the paper's "could be the result of too small of
+        // a timeout" regime in Fig. 5).
+        let lp_outcome = if deadline.expired() {
+            None
+        } else {
+            let lp_deadline = Deadline::after(
+                deadline.remaining().mul_f64(1.0 - self.config.polish_fraction.min(0.5)),
+            );
+            Some(
+                self.build_lp(problem)
+                    .solve_with_deadline(self.config.max_lp_iters, lp_deadline),
+            )
+        };
+        let rounded = match &lp_outcome {
+            Some(LpOutcome::Optimal { x, .. }) => {
+                stats.iterations += 1;
+                Some(self.round(problem, x))
+            }
+            _ => None,
+        };
+
+        // ---- 2-3. rounded + repaired start (fall back to incumbent) -----
+        let start = rounded.unwrap_or_else(|| problem.initial.clone());
+        debug_assert!(start.move_count_from(&problem.initial) <= problem.max_moves);
+
+        // ---- 4. polish with LocalSearch from the rounded point ----------
+        let pre_polish = deadline.elapsed();
+        let polish_budget = deadline.remaining().mul_f64(self.config.polish_fraction);
+        let polish = PolishSearch { seed: self.config.seed, start: start.clone() };
+        let mut best = polish.run(problem, Deadline::after(polish_budget));
+        // Convergence time includes the LP + rounding prelude.
+        best.stats.converged_at += pre_polish;
+
+        // Keep whichever of {rounded, polished} scores better (polish can
+        // only improve, but guard against pathological perturbation).
+        let (start_score, _) = score_assignment(problem, &start);
+        if start_score < best.score {
+            best = Solution::of_assignment(problem, start, SolverKind::OptimalSearch);
+            best.stats.converged_at = pre_polish;
+        }
+        best.solver = SolverKind::OptimalSearch;
+        best.stats.iterations += stats.iterations;
+        best.stats.elapsed = deadline.elapsed();
+        best
+    }
+
+    /// Build the LP relaxation.
+    fn build_lp(&self, problem: &Problem) -> Lp {
+        let vm = VarMap::build(problem);
+        let mut lp = Lp::new(vm.n_vars);
+        let n_tiers = problem.n_tiers();
+        let w = &problem.weights;
+
+        // Balance target: fleet-wide utilization per resource (the LP
+        // proxy for the cross-tier mean in the quadratic objective).
+        let total_demand = problem.total_demand();
+        let mut total_cap = [0.0f64; NUM_RESOURCES];
+        for t in &problem.tiers {
+            for r in 0..NUM_RESOURCES {
+                total_cap[r] += t.capacity.0[r];
+            }
+        }
+        let target: Vec<f64> = (0..NUM_RESOURCES)
+            .map(|r| if total_cap[r] > 0.0 { total_demand.0[r] / total_cap[r] } else { 0.0 })
+            .collect();
+
+        let task_total = problem.apps.iter().map(|a| a.demand.tasks()).sum::<f64>().max(1.0);
+        let crit_total = problem.apps.iter().map(|a| a.criticality).sum::<f64>().max(1e-12);
+
+        // Objective: balance deviations (d+e) weighted per resource,
+        // overage o with the G1 weight, and movement terms as a bonus on
+        // staying (equivalently a cost on moving).
+        for t in 0..n_tiers {
+            for r in 0..NUM_RESOURCES {
+                let bal_w = if r == 2 { w.task_balance } else { w.res_balance };
+                lp.set_objective(vm.d(t, r), bal_w);
+                lp.set_objective(vm.e(t, r), bal_w);
+                lp.set_objective(vm.o(t, r), w.util_limit);
+            }
+        }
+        for (a, app) in problem.apps.iter().enumerate() {
+            let init = problem.initial.as_slice()[a];
+            let move_cost =
+                w.move_cost * app.demand.tasks() / task_total + w.criticality * app.criticality / crit_total;
+            for (k, &t) in app.allowed.iter().enumerate() {
+                if t != init {
+                    lp.set_objective(vm.x_offset[a] + k, move_cost);
+                }
+            }
+        }
+
+        // Assignment rows: Σ_t x[a][t] = 1.
+        for (a, app) in problem.apps.iter().enumerate() {
+            let coeffs: Vec<(usize, f64)> = (0..app.allowed.len())
+                .map(|k| (vm.x_offset[a] + k, 1.0))
+                .collect();
+            lp.add_row(coeffs, Sense::Eq, 1.0);
+        }
+
+        // Forbidden transitions (explicit bans + the w_cnst policy):
+        // x[a][t] = 0 for banned (init→t).
+        for (a, app) in problem.apps.iter().enumerate() {
+            let init = problem.initial.as_slice()[a];
+            for (k, &t) in app.allowed.iter().enumerate() {
+                if t != init && !problem.transition_allowed(init, t) {
+                    lp.add_row(vec![(vm.x_offset[a] + k, 1.0)], Sense::Eq, 0.0);
+                }
+            }
+        }
+
+        // Capacity + deviation + overage rows per (tier, resource).
+        for (t, tier) in problem.tiers.iter().enumerate() {
+            for r in 0..NUM_RESOURCES {
+                let cap = tier.capacity.0[r];
+                if cap <= 0.0 {
+                    continue;
+                }
+                let mut load_coeffs: Vec<(usize, f64)> = Vec::new();
+                for (a, app) in problem.apps.iter().enumerate() {
+                    if let Some(xv) = vm.x(problem, a, TierId(t)) {
+                        let d = app.demand.0[r];
+                        if d != 0.0 {
+                            load_coeffs.push((xv, d / cap));
+                        }
+                    }
+                }
+                // C1/C2: utilization <= 1.
+                lp.add_row(load_coeffs.clone(), Sense::Le, 1.0);
+                // Balance linearization: util - d + e = target.
+                let mut dev = load_coeffs.clone();
+                dev.push((vm.d(t, r), -1.0));
+                dev.push((vm.e(t, r), 1.0));
+                lp.add_row(dev, Sense::Eq, target[r]);
+                // Overage: util - o <= ideal.
+                let mut over = load_coeffs;
+                over.push((vm.o(t, r), -1.0));
+                lp.add_row(over, Sense::Le, tier.ideal_utilization.0[r]);
+            }
+        }
+
+        // Movement budget: Σ_a x[a][init_a] >= n_apps - max_moves.
+        let mut stay: Vec<(usize, f64)> = Vec::new();
+        for (a, _) in problem.apps.iter().enumerate() {
+            let init = problem.initial.as_slice()[a];
+            if let Some(xv) = vm.x(problem, a, init) {
+                stay.push((xv, 1.0));
+            }
+        }
+        lp.add_row(
+            stay,
+            Sense::Ge,
+            problem.n_apps() as f64 - problem.max_moves as f64,
+        );
+
+        lp
+    }
+
+    /// Round the fractional solution and repair the movement budget.
+    fn round(&self, problem: &Problem, x: &[f64]) -> Assignment {
+        let vm = VarMap::build(problem);
+        let mut tier_of: Vec<TierId> = Vec::with_capacity(problem.n_apps());
+        // (app, margin) for moved apps; margin = x_best - x_init measures
+        // how strongly the LP wants the move.
+        let mut moved: Vec<(usize, f64)> = Vec::new();
+        for (a, app) in problem.apps.iter().enumerate() {
+            let init = problem.initial.as_slice()[a];
+            let mut best_k = 0usize;
+            let mut best_v = f64::NEG_INFINITY;
+            let mut init_v = 0.0;
+            for (k, &t) in app.allowed.iter().enumerate() {
+                let v = x[vm.x_offset[a] + k];
+                if t == init {
+                    init_v = v;
+                }
+                let legal = t == init || problem.transition_allowed(init, t);
+                if legal && v > best_v {
+                    best_v = v;
+                    best_k = k;
+                }
+            }
+            let chosen = app.allowed[best_k];
+            if chosen != init {
+                moved.push((a, best_v - init_v));
+            }
+            tier_of.push(chosen);
+        }
+        // Budget repair: keep the strongest-supported moves only.
+        if moved.len() > problem.max_moves {
+            moved.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            for &(a, _) in &moved[problem.max_moves..] {
+                tier_of[a] = problem.initial.as_slice()[a];
+            }
+        }
+        Assignment::new(tier_of)
+    }
+}
+
+/// LocalSearch wrapper that starts from a given assignment instead of the
+/// incumbent (used by the polish stage).
+struct PolishSearch {
+    seed: u64,
+    start: Assignment,
+}
+
+impl PolishSearch {
+    fn run(&self, problem: &Problem, deadline: Deadline) -> Solution {
+        // Trick: construct a sub-problem whose *search start* is `start`
+        // by running LocalSearch on the original problem but seeding its
+        // state via a pre-applied assignment. LocalSearch always starts
+        // from `problem.initial`; we emulate a custom start by applying
+        // the diff first through a crafted config run.
+        // Simpler and exact: run plain LocalSearch but inject the start
+        // by scoring both and keeping the better.
+        let ls = LocalSearch::new(LocalSearchConfig {
+            seed: self.seed,
+            ..LocalSearchConfig::default()
+        });
+        let mut sol = ls.solve_from(problem, deadline, self.start.clone());
+        sol.solver = SolverKind::OptimalSearch;
+        sol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rebalancer::constraints::{validate, Violation};
+    use crate::rebalancer::problem::GoalWeights;
+    use crate::workload::{generate, WorkloadSpec};
+
+    fn paper_problem(seed: u64) -> Problem {
+        let bed = generate(&WorkloadSpec::paper().with_seed(seed));
+        Problem::build(&bed.apps, &bed.tiers, bed.initial, 0.10, GoalWeights::default()).unwrap()
+    }
+
+    #[test]
+    fn beats_incumbent() {
+        let p = paper_problem(42);
+        let (initial_score, _) = score_assignment(&p, &p.initial.clone());
+        let sol = OptimalSearch::with_seed(1).solve(&p, Deadline::after_ms(500));
+        assert!(sol.score < initial_score, "{} < {}", sol.score, initial_score);
+        assert_eq!(sol.solver, SolverKind::OptimalSearch);
+    }
+
+    #[test]
+    fn respects_movement_budget_and_placement() {
+        let p = paper_problem(7);
+        let sol = OptimalSearch::with_seed(2).solve(&p, Deadline::after_ms(400));
+        assert!(sol.assignment.move_count_from(&p.initial) <= p.max_moves);
+        let vs = validate(&p, &sol.assignment);
+        assert!(
+            vs.iter().all(|v| matches!(v, Violation::CapacityExceeded { .. })),
+            "{vs:?}"
+        );
+    }
+
+    #[test]
+    fn respects_forbidden_transitions() {
+        let mut p = paper_problem(13);
+        for t in 0..p.n_tiers() {
+            if t != 0 {
+                p.forbid_transition(TierId(2), TierId(t));
+            }
+        }
+        let sol = OptimalSearch::with_seed(3).solve(&p, Deadline::after_ms(400));
+        for m in sol.moves(&p) {
+            if m.from == TierId(2) {
+                assert_eq!(m.to, TierId(0));
+            }
+        }
+    }
+
+    #[test]
+    fn lp_relaxation_is_feasible_on_paper_problem() {
+        let p = paper_problem(42);
+        let opt = OptimalSearch::with_seed(4);
+        let lp = opt.build_lp(&p);
+        match lp.solve(20_000) {
+            LpOutcome::Optimal { x, objective } => {
+                assert!(objective.is_finite());
+                // Assignment rows hold: each app's fractions sum to 1.
+                let vm = VarMap::build(&p);
+                for (a, app) in p.apps.iter().enumerate() {
+                    let s: f64 =
+                        (0..app.allowed.len()).map(|k| x[vm.x_offset[a] + k]).sum();
+                    assert!((s - 1.0).abs() < 1e-6, "app {a} fractions sum {s}");
+                }
+            }
+            other => panic!("LP should be solvable: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn zero_deadline_returns_incumbent_quality_or_better() {
+        let p = paper_problem(42);
+        let sol = OptimalSearch::with_seed(5).solve(&p, Deadline::after_ms(0));
+        let (initial_score, _) = score_assignment(&p, &p.initial.clone());
+        assert!(sol.score <= initial_score + 1e-9);
+    }
+
+    #[test]
+    fn competitive_with_local_search() {
+        // Fig. 5's observation: "the optimal searches do not seem to
+        // consistently perform better or worse than the local searches".
+        // Assert competitiveness (within 3x on every seed), not
+        // dominance.
+        for seed in [1u64, 2, 3, 4, 5] {
+            let p = paper_problem(seed);
+            let local = crate::rebalancer::local_search::LocalSearch::with_seed(seed)
+                .solve(&p, Deadline::after_ms(150));
+            let optimal = OptimalSearch::with_seed(seed).solve(&p, Deadline::after_ms(300));
+            assert!(
+                optimal.score <= local.score * 3.0 + 1e-6,
+                "seed {seed}: optimal {} vs local {}",
+                optimal.score,
+                local.score
+            );
+        }
+    }
+}

@@ -1,0 +1,381 @@
+//! Solution scoring — the rust mirror of `python/compile/kernels/ref.py`.
+//!
+//! Two paths:
+//!  * [`score_assignment`] — stateless full scoring of one assignment.
+//!  * [`ScoreState`] — the LocalSearch hot path: incremental state that
+//!    applies/reverts single moves in O(1) and rescores in O(T·R) instead
+//!    of O(A·T) (§Perf: this is the optimization the perf pass measures).
+//!
+//! Semantics must stay in lockstep with `ref.py`; the parity test against
+//! the AOT artifact (`rust/tests/runtime_parity.rs`) enforces it.
+
+use crate::model::{Assignment, ResourceVec, TierId, NUM_RESOURCES};
+use crate::rebalancer::problem::Problem;
+
+const EPS: f64 = 1e-12;
+
+/// Per-goal score components (useful for §3.3's decision evaluation and
+/// for debugging goal tuning).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Breakdown {
+    pub capacity_violation: f64,
+    pub over_ideal: f64,
+    pub res_balance: f64,
+    pub task_balance: f64,
+    pub move_cost: f64,
+    pub crit_cost: f64,
+}
+
+impl Breakdown {
+    pub fn total(&self, w: &crate::rebalancer::problem::GoalWeights) -> f64 {
+        w.capacity * self.capacity_violation
+            + w.util_limit * self.over_ideal
+            + w.res_balance * self.res_balance
+            + w.task_balance * self.task_balance
+            + w.move_cost * self.move_cost
+            + w.criticality * self.crit_cost
+    }
+
+    pub fn is_capacity_feasible(&self) -> bool {
+        self.capacity_violation <= EPS
+    }
+}
+
+/// Stateless full score of an assignment.
+pub fn score_assignment(problem: &Problem, assignment: &Assignment) -> (f64, Breakdown) {
+    let state = ScoreState::new(problem, assignment.clone());
+    let b = state.breakdown();
+    (b.total(&problem.weights), b)
+}
+
+/// Incremental scoring state for local search.
+#[derive(Debug, Clone)]
+pub struct ScoreState<'p> {
+    problem: &'p Problem,
+    tier_of: Vec<TierId>,
+    loads: Vec<ResourceVec>,
+    /// Σ task-count of apps not on their incumbent tier (G4 numerator).
+    moved_tasks: f64,
+    /// Σ criticality of apps not on their incumbent tier (G5 numerator).
+    moved_crit: f64,
+    n_moved: usize,
+    task_total: f64,
+    crit_total: f64,
+}
+
+/// Undo token for [`ScoreState::apply`].
+#[derive(Debug, Clone, Copy)]
+pub struct Applied {
+    pub app: usize,
+    pub from: TierId,
+    pub to: TierId,
+}
+
+impl<'p> ScoreState<'p> {
+    pub fn new(problem: &'p Problem, assignment: Assignment) -> Self {
+        assert_eq!(assignment.n_apps(), problem.n_apps(), "assignment size");
+        let mut loads = vec![ResourceVec::ZERO; problem.n_tiers()];
+        let mut moved_tasks = 0.0;
+        let mut moved_crit = 0.0;
+        let mut n_moved = 0;
+        for (i, app) in problem.apps.iter().enumerate() {
+            let t = assignment.as_slice()[i];
+            loads[t.0] += app.demand;
+            if t != problem.initial.as_slice()[i] {
+                moved_tasks += app.demand.tasks();
+                moved_crit += app.criticality;
+                n_moved += 1;
+            }
+        }
+        let task_total = problem
+            .apps
+            .iter()
+            .map(|a| a.demand.tasks())
+            .sum::<f64>()
+            .max(1.0);
+        let crit_total = problem
+            .apps
+            .iter()
+            .map(|a| a.criticality)
+            .sum::<f64>()
+            .max(EPS);
+        Self {
+            problem,
+            tier_of: assignment.as_slice().to_vec(),
+            loads,
+            moved_tasks,
+            moved_crit,
+            n_moved,
+            task_total,
+            crit_total,
+        }
+    }
+
+    pub fn assignment(&self) -> Assignment {
+        Assignment::new(self.tier_of.clone())
+    }
+
+    pub fn tier_of(&self, app: usize) -> TierId {
+        self.tier_of[app]
+    }
+
+    pub fn n_moved(&self) -> usize {
+        self.n_moved
+    }
+
+    pub fn loads(&self) -> &[ResourceVec] {
+        &self.loads
+    }
+
+    /// Remaining movement budget under C3.
+    pub fn moves_remaining(&self) -> usize {
+        self.problem.max_moves.saturating_sub(self.n_moved)
+    }
+
+    /// Apply a move; O(1). Caller must have checked `placement_allowed`.
+    pub fn apply(&mut self, app: usize, to: TierId) -> Applied {
+        let from = self.tier_of[app];
+        if from == to {
+            return Applied { app, from, to };
+        }
+        let a = &self.problem.apps[app];
+        let init = self.problem.initial.as_slice()[app];
+        self.loads[from.0] -= a.demand;
+        self.loads[to.0] += a.demand;
+        // Moved-set bookkeeping relative to the incumbent.
+        if from == init {
+            self.moved_tasks += a.demand.tasks();
+            self.moved_crit += a.criticality;
+            self.n_moved += 1;
+        } else if to == init {
+            self.moved_tasks -= a.demand.tasks();
+            self.moved_crit -= a.criticality;
+            self.n_moved -= 1;
+        }
+        self.tier_of[app] = to;
+        Applied { app, from, to }
+    }
+
+    /// Revert a previously applied move.
+    pub fn revert(&mut self, token: Applied) {
+        self.apply(token.app, token.from);
+    }
+
+    /// Utilization of tier `t`, resource `r` (zero-capacity dims map to
+    /// +inf under load, 0 otherwise — matching `ResourceVec::div_elem`).
+    #[inline]
+    fn util_at(&self, t: usize, r: usize) -> f64 {
+        let cap = self.problem.tiers[t].capacity.0[r];
+        if cap > 0.0 {
+            self.loads[t].0[r] / cap
+        } else if self.loads[t].0[r] > 0.0 {
+            f64::INFINITY
+        } else {
+            0.0
+        }
+    }
+
+    /// Full breakdown in O(T·R), allocation-free (§Perf: the hot loop
+    /// calls this through `peek` ~10^5 times per solve; the original
+    /// Vec-of-rows implementation spent ~40% of peek time in malloc).
+    pub fn breakdown(&self) -> Breakdown {
+        let n_tiers = self.problem.n_tiers();
+        // Pass 1: penalties + per-resource utilization means.
+        let mut cap_vio = 0.0;
+        let mut over_ideal = 0.0;
+        let mut mean = [0.0f64; NUM_RESOURCES];
+        for (t, tier) in self.problem.tiers.iter().enumerate() {
+            for r in 0..NUM_RESOURCES {
+                let u = self.util_at(t, r);
+                cap_vio += (u - 1.0).max(0.0).powi(2);
+                over_ideal += (u - tier.ideal_utilization.0[r]).max(0.0).powi(2);
+                mean[r] += u;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n_tiers as f64;
+        }
+        // Pass 2: balance deviations (utilization recomputed — two cheap
+        // divisions beat a heap-allocated scratch matrix).
+        let mut res_balance = 0.0;
+        let mut task_balance = 0.0;
+        for t in 0..n_tiers {
+            res_balance += (self.util_at(t, 0) - mean[0]).powi(2)
+                + (self.util_at(t, 1) - mean[1]).powi(2);
+            task_balance += (self.util_at(t, 2) - mean[2]).powi(2);
+        }
+        Breakdown {
+            capacity_violation: cap_vio,
+            over_ideal,
+            res_balance,
+            task_balance,
+            move_cost: self.moved_tasks / self.task_total,
+            crit_cost: self.moved_crit / self.crit_total,
+        }
+    }
+
+    /// Total score under the problem's weights; O(T·R).
+    pub fn score(&self) -> f64 {
+        self.breakdown().total(&self.problem.weights)
+    }
+
+    /// Score of a hypothetical move without committing it.
+    pub fn peek(&mut self, app: usize, to: TierId) -> f64 {
+        let token = self.apply(app, to);
+        let s = self.score();
+        self.revert(token);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::AppId;
+    use crate::rebalancer::problem::GoalWeights;
+    use crate::util::prng::Pcg64;
+    use crate::util::propcheck::{forall, Check};
+    use crate::workload::{generate, WorkloadSpec};
+
+    fn paper_problem() -> Problem {
+        let bed = generate(&WorkloadSpec::paper());
+        Problem::build(&bed.apps, &bed.tiers, bed.initial, 0.10, GoalWeights::default()).unwrap()
+    }
+
+    #[test]
+    fn incumbent_has_zero_move_cost() {
+        let p = paper_problem();
+        let (_, b) = score_assignment(&p, &p.initial.clone());
+        assert_eq!(b.move_cost, 0.0);
+        assert_eq!(b.crit_cost, 0.0);
+    }
+
+    #[test]
+    fn incremental_matches_full_rescore() {
+        let p = paper_problem();
+        let mut state = ScoreState::new(&p, p.initial.clone());
+        let mut rng = Pcg64::new(1);
+        for _ in 0..50 {
+            let app = rng.range(0, p.n_apps());
+            let to = *rng.choose(&p.apps[app].allowed).unwrap();
+            state.apply(app, to);
+            let full = ScoreState::new(&p, state.assignment());
+            let (a, b) = (state.score(), full.score());
+            assert!(
+                (a - b).abs() <= 1e-9 * b.abs().max(1.0),
+                "incremental {a} vs full {b}"
+            );
+            assert_eq!(state.n_moved(), full.n_moved());
+        }
+    }
+
+    #[test]
+    fn apply_then_revert_is_identity() {
+        let p = paper_problem();
+        let mut state = ScoreState::new(&p, p.initial.clone());
+        let before = state.score();
+        let before_loads = state.loads().to_vec();
+        let app = 3;
+        let to = *p.apps[app].allowed.iter().find(|&&t| t != state.tier_of(app)).unwrap();
+        let token = state.apply(app, to);
+        assert_ne!(state.score(), before);
+        state.revert(token);
+        assert_eq!(state.score(), before);
+        assert_eq!(state.loads(), &before_loads[..]);
+        assert_eq!(state.n_moved(), 0);
+    }
+
+    #[test]
+    fn peek_does_not_mutate() {
+        let p = paper_problem();
+        let mut state = ScoreState::new(&p, p.initial.clone());
+        let before = state.score();
+        let app = 0;
+        for &t in &p.apps[app].allowed.clone() {
+            let _ = state.peek(app, t);
+        }
+        assert_eq!(state.score(), before);
+    }
+
+    #[test]
+    fn moving_back_restores_moved_count() {
+        let p = paper_problem();
+        let mut state = ScoreState::new(&p, p.initial.clone());
+        let app = 5;
+        let init = p.initial.tier_of(AppId(app));
+        let other = *p.apps[app].allowed.iter().find(|&&t| t != init).unwrap();
+        state.apply(app, other);
+        assert_eq!(state.n_moved(), 1);
+        state.apply(app, init);
+        assert_eq!(state.n_moved(), 0);
+        assert_eq!(state.breakdown().move_cost, 0.0);
+    }
+
+    #[test]
+    fn capacity_violation_dominates() {
+        let p = paper_problem();
+        // Cram everything legal into tier 0.
+        let mut state = ScoreState::new(&p, p.initial.clone());
+        for (i, app) in p.apps.iter().enumerate() {
+            if app.allowed.contains(&TierId(0)) {
+                state.apply(i, TierId(0));
+            }
+        }
+        let b = state.breakdown();
+        assert!(!b.is_capacity_feasible());
+        assert!(state.score() > 1e5, "big-M term must dominate");
+    }
+
+    #[test]
+    fn balanced_beats_skewed_property() {
+        // For identical apps on identical tiers, spreading beats stacking.
+        forall(
+            30,
+            |rng| (rng.range(6, 30), rng.range(2, 5)),
+            |&(n_apps, n_tiers)| {
+                let apps: Vec<crate::model::App> = (0..n_apps)
+                    .map(|i| crate::model::App {
+                        id: AppId(i),
+                        name: format!("a{i}"),
+                        demand: ResourceVec::new(1.0, 1.0, 1.0),
+                        slo: crate::model::Slo::Slo3,
+                        criticality: crate::model::Criticality::new(0.1),
+                        preferred_region: crate::model::RegionId(0),
+                    })
+                    .collect();
+                let tiers: Vec<crate::model::Tier> = (0..n_tiers)
+                    .map(|t| crate::model::Tier {
+                        id: TierId(t),
+                        name: format!("t{t}"),
+                        capacity: ResourceVec::splat(1000.0),
+                        ideal_utilization: ResourceVec::new(0.7, 0.7, 0.8),
+                        supported_slos: vec![crate::model::Slo::Slo3],
+                        regions: crate::model::RegionSet::from_indices([0]),
+                    })
+                    .collect();
+                let spread = Assignment::new(
+                    (0..n_apps).map(|i| TierId(i % n_tiers)).collect(),
+                );
+                let stacked = Assignment::uniform(n_apps, TierId(0));
+                // Use spread as incumbent so move costs don't interfere.
+                let p = Problem::build(&apps, &tiers, spread.clone(), 1.0, GoalWeights::default())
+                    .unwrap();
+                let (s_spread, _) = score_assignment(&p, &spread);
+                let (s_stacked, _) = score_assignment(&p, &stacked);
+                Check::from_bool(
+                    s_spread < s_stacked,
+                    &format!("spread {s_spread} must beat stacked {s_stacked}"),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn score_is_permutation_invariant_for_equal_tiers() {
+        // Swapping the roles of two identical tiers must not change score
+        // when the incumbent also swaps (relabeling symmetry).
+        let p = paper_problem();
+        let (s0, _) = score_assignment(&p, &p.initial.clone());
+        assert!(s0.is_finite());
+    }
+}

@@ -1,0 +1,174 @@
+//! Solver output (§3.3): the projected app→tier mapping, projected tier
+//! metrics, the score breakdown, and solve statistics — everything the
+//! decision-execution stage and the figures consume.
+
+use crate::model::{Assignment, Move, ResourceVec};
+use crate::rebalancer::problem::Problem;
+use crate::rebalancer::scoring::{score_assignment, Breakdown};
+use crate::util::json::Json;
+use std::time::Duration;
+
+/// Which Rebalancer solver produced a solution (§3.2.1 solver types).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SolverKind {
+    /// Greedy exploration of the neighborhood; can get stuck in local
+    /// minima.
+    LocalSearch,
+    /// LP-relaxation + rounding + polish; usually slowest and best.
+    OptimalSearch,
+}
+
+impl SolverKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SolverKind::LocalSearch => "local_search",
+            SolverKind::OptimalSearch => "optimal_search",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<SolverKind> {
+        match s {
+            "local_search" | "local" => Some(SolverKind::LocalSearch),
+            "optimal_search" | "optimal" => Some(SolverKind::OptimalSearch),
+            _ => None,
+        }
+    }
+}
+
+/// Solve statistics for the figures' time axes.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SolveStats {
+    pub iterations: u64,
+    pub candidates_scored: u64,
+    pub restarts: u32,
+    /// Total wall-clock spent in the solver (== the timeout for anytime
+    /// runs).
+    pub elapsed: Duration,
+    /// When the returned best was last improved — the figures' "time
+    /// taken by solver to generate a solution" (Figs. 4–5 x/y axes).
+    pub converged_at: Duration,
+}
+
+/// A complete solver output.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    pub assignment: Assignment,
+    pub score: f64,
+    pub breakdown: Breakdown,
+    pub solver: SolverKind,
+    pub stats: SolveStats,
+}
+
+impl Solution {
+    pub fn of_assignment(problem: &Problem, assignment: Assignment, solver: SolverKind) -> Self {
+        let (score, breakdown) = score_assignment(problem, &assignment);
+        Self { assignment, score, breakdown, solver, stats: SolveStats::default() }
+    }
+
+    /// The move list §3.3 recommends.
+    pub fn moves(&self, problem: &Problem) -> Vec<Move> {
+        self.assignment.moves_from(&problem.initial)
+    }
+
+    /// Projected per-tier loads.
+    pub fn projected_loads(&self, problem: &Problem) -> Vec<ResourceVec> {
+        let mut loads = vec![ResourceVec::ZERO; problem.n_tiers()];
+        for (i, app) in problem.apps.iter().enumerate() {
+            loads[self.assignment.as_slice()[i].0] += app.demand;
+        }
+        loads
+    }
+
+    /// Projected per-tier utilizations (Fig. 3's neon-green bars).
+    pub fn projected_utilizations(&self, problem: &Problem) -> Vec<ResourceVec> {
+        self.projected_loads(problem)
+            .iter()
+            .zip(&problem.tiers)
+            .map(|(load, t)| load.div_elem(&t.capacity))
+            .collect()
+    }
+
+    pub fn to_json(&self, problem: &Problem) -> Json {
+        let moves = self.moves(problem);
+        Json::obj(vec![
+            ("solver", Json::str(self.solver.name())),
+            ("score", Json::num(self.score)),
+            ("moves", Json::arr(moves.iter().map(|m| m.to_json()))),
+            ("n_moves", Json::num(moves.len() as f64)),
+            ("iterations", Json::num(self.stats.iterations as f64)),
+            ("candidates_scored", Json::num(self.stats.candidates_scored as f64)),
+            ("elapsed_ms", Json::num(self.stats.elapsed.as_secs_f64() * 1e3)),
+            (
+                "converged_ms",
+                Json::num(self.stats.converged_at.as_secs_f64() * 1e3),
+            ),
+            (
+                "projected_utilization",
+                Json::arr(self.projected_utilizations(problem).iter().map(|u| {
+                    Json::obj(vec![
+                        ("cpu", Json::num(u.cpu())),
+                        ("mem", Json::num(u.mem())),
+                        ("tasks", Json::num(u.tasks())),
+                    ])
+                })),
+            ),
+            ("assignment", self.assignment.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rebalancer::problem::GoalWeights;
+    use crate::workload::{generate, WorkloadSpec};
+
+    fn problem() -> Problem {
+        let bed = generate(&WorkloadSpec::small());
+        Problem::build(&bed.apps, &bed.tiers, bed.initial, 0.2, GoalWeights::default()).unwrap()
+    }
+
+    #[test]
+    fn incumbent_solution_has_no_moves() {
+        let p = problem();
+        let s = Solution::of_assignment(&p, p.initial.clone(), SolverKind::LocalSearch);
+        assert!(s.moves(&p).is_empty());
+        assert_eq!(s.breakdown.move_cost, 0.0);
+    }
+
+    #[test]
+    fn projected_loads_sum_to_total_demand() {
+        let p = problem();
+        let s = Solution::of_assignment(&p, p.initial.clone(), SolverKind::LocalSearch);
+        let total: ResourceVec = s
+            .projected_loads(&p)
+            .iter()
+            .fold(ResourceVec::ZERO, |acc, l| acc + *l);
+        let want = p.total_demand();
+        for r in 0..3 {
+            assert!((total.0[r] - want.0[r]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn solver_kind_roundtrip() {
+        for k in [SolverKind::LocalSearch, SolverKind::OptimalSearch] {
+            assert_eq!(SolverKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(SolverKind::from_name("local"), Some(SolverKind::LocalSearch));
+        assert_eq!(SolverKind::from_name("x"), None);
+    }
+
+    #[test]
+    fn json_has_projection_and_moves() {
+        let p = problem();
+        let s = Solution::of_assignment(&p, p.initial.clone(), SolverKind::OptimalSearch);
+        let j = s.to_json(&p);
+        assert_eq!(j.get("solver").as_str(), Some("optimal_search"));
+        assert_eq!(j.get("n_moves").as_usize(), Some(0));
+        assert_eq!(
+            j.get("projected_utilization").as_arr().unwrap().len(),
+            p.n_tiers()
+        );
+    }
+}

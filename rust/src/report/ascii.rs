@@ -1,0 +1,133 @@
+//! Terminal bar/scatter rendering for the figure emitters.
+
+/// Horizontal bar chart: one row per (label, value), scaled to `width`
+/// columns, with optional reference lines (e.g. 70% ideal, 100% capacity).
+pub fn bar_chart(
+    title: &str,
+    rows: &[(String, f64)],
+    max_value: f64,
+    width: usize,
+    reference_lines: &[(f64, char)],
+) -> String {
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    let label_w = rows.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    for (label, value) in rows {
+        let frac = (value / max_value).clamp(0.0, 1.0);
+        let filled = (frac * width as f64).round() as usize;
+        let mut bar: Vec<char> = (0..width)
+            .map(|i| if i < filled { '#' } else { ' ' })
+            .collect();
+        for &(at, ch) in reference_lines {
+            let pos = ((at / max_value) * width as f64).round() as usize;
+            if pos < width && bar[pos] != '#' {
+                bar[pos] = ch;
+            } else if pos < width {
+                bar[pos] = ch; // reference line wins for visibility
+            }
+        }
+        out.push_str(&format!(
+            "  {label:<label_w$} |{}| {value:6.1}%\n",
+            bar.iter().collect::<String>()
+        ));
+    }
+    out
+}
+
+/// Scatter plot on a character grid; each series gets its own glyph.
+pub fn scatter(
+    title: &str,
+    series: &[(&str, char, Vec<(f64, f64)>)],
+    x_label: &str,
+    y_label: &str,
+    cols: usize,
+    rows: usize,
+) -> String {
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|(_, _, pts)| pts.clone()).collect();
+    if all.is_empty() {
+        return format!("{title}\n  (no data)\n");
+    }
+    let (mut x_min, mut x_max) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y_min, mut y_max) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &all {
+        x_min = x_min.min(x);
+        x_max = x_max.max(x);
+        y_min = y_min.min(y);
+        y_max = y_max.max(y);
+    }
+    if (x_max - x_min).abs() < 1e-12 {
+        x_max = x_min + 1.0;
+    }
+    if (y_max - y_min).abs() < 1e-12 {
+        y_max = y_min + 1.0;
+    }
+    let mut grid = vec![vec![' '; cols]; rows];
+    for (_, glyph, pts) in series {
+        for &(x, y) in pts {
+            let c = (((x - x_min) / (x_max - x_min)) * (cols - 1) as f64).round() as usize;
+            let r = (((y - y_min) / (y_max - y_min)) * (rows - 1) as f64).round() as usize;
+            grid[rows - 1 - r][c] = *glyph;
+        }
+    }
+    let mut out = format!("{title}\n");
+    out.push_str(&format!("  y: {y_label}  (top={y_max:.2}, bottom={y_min:.2})\n"));
+    for row in grid {
+        out.push_str("  |");
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "  +{}\n  x: {x_label}  (left={x_min:.2}, right={x_max:.2})\n",
+        "-".repeat(cols)
+    ));
+    let legend: Vec<String> =
+        series.iter().map(|(name, glyph, _)| format!("{glyph}={name}")).collect();
+    out.push_str(&format!("  legend: {}\n", legend.join("  ")));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bar_chart_scales_and_marks() {
+        let rows = vec![("tier1".to_string(), 50.0), ("tier2".to_string(), 100.0)];
+        let s = bar_chart("util", &rows, 100.0, 20, &[(70.0, '|')]);
+        assert!(s.contains("tier1"));
+        assert!(s.contains("50.0%"));
+        let t2_line = s.lines().find(|l| l.contains("tier2")).unwrap();
+        assert!(t2_line.matches('#').count() >= 19);
+    }
+
+    #[test]
+    fn scatter_renders_all_series() {
+        let s = scatter(
+            "fig",
+            &[
+                ("a", '^', vec![(0.0, 0.0), (1.0, 1.0)]),
+                ("b", 'o', vec![(0.5, 0.5)]),
+            ],
+            "time",
+            "value",
+            20,
+            10,
+        );
+        assert!(s.contains('^'));
+        assert!(s.contains('o'));
+        assert!(s.contains("legend"));
+    }
+
+    #[test]
+    fn scatter_handles_empty() {
+        let s = scatter("fig", &[("a", '^', vec![])], "x", "y", 10, 5);
+        assert!(s.contains("no data"));
+    }
+
+    #[test]
+    fn scatter_handles_degenerate_range() {
+        let s = scatter("fig", &[("a", '^', vec![(1.0, 1.0), (1.0, 1.0)])], "x", "y", 10, 5);
+        assert!(s.contains('^'));
+    }
+}

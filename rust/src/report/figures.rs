@@ -1,0 +1,286 @@
+//! Row generators for the paper's figures. Each bench binary calls one of
+//! these and prints both CSV (machine-readable, diffable) and an ASCII
+//! rendering (eyeball-comparable with the paper).
+
+use crate::greedy::GreedyScheduler;
+use crate::hierarchy::variants::{run_variant, Variant, VariantResult};
+use crate::model::{ResourceKind, ResourceVec};
+use crate::rebalancer::problem::{GoalWeights, Problem};
+use crate::rebalancer::solution::SolverKind;
+use crate::rebalancer::LocalSearch;
+use crate::util::timer::Deadline;
+use crate::workload::TestBed;
+use std::time::Duration;
+
+/// Fig. 3 data: per-tier utilization (%) for each scheduler, one table
+/// per resource objective.
+#[derive(Debug, Clone)]
+pub struct Fig3Report {
+    pub tiers: Vec<String>,
+    /// `series[objective][scheduler][tier]` as percentages.
+    /// Scheduler order: initial, sptlb, greedy-cpu, greedy-mem,
+    /// greedy-task.
+    pub series: Vec<[Vec<f64>; 5]>,
+    pub scheduler_names: [&'static str; 5],
+    /// Ideal utilization (%) per objective (70/70/80 in the paper).
+    pub ideal_pct: [f64; 3],
+}
+
+/// Generate Fig. 3 (a cpu, b mem, c task-count) for one testbed.
+/// `timeout` mirrors the paper's 30s solver budget (scaled).
+pub fn fig3_report(bed: &TestBed, timeout: Duration, movement_fraction: f64, seed: u64) -> Fig3Report {
+    let problem = Problem::build(
+        &bed.apps,
+        &bed.tiers,
+        bed.initial.clone(),
+        movement_fraction,
+        GoalWeights::default(),
+    )
+    .expect("testbed problem");
+
+    let initial_utils = bed.initial.tier_utilizations(&bed.apps, &bed.tiers);
+    let sptlb = LocalSearch::with_seed(seed).solve(&problem, Deadline::after(timeout));
+    let sptlb_utils = sptlb.projected_utilizations(&problem);
+    let greedy_utils: Vec<Vec<ResourceVec>> = ResourceKind::ALL
+        .iter()
+        .map(|&k| {
+            GreedyScheduler::new(k)
+                .solve(&problem, Deadline::after(timeout))
+                .projected_utilizations(&problem)
+        })
+        .collect();
+
+    let pct = |utils: &[ResourceVec], r: usize| -> Vec<f64> {
+        utils.iter().map(|u| u.0[r] * 100.0).collect()
+    };
+    let series: Vec<[Vec<f64>; 5]> = (0..3)
+        .map(|r| {
+            [
+                pct(&initial_utils, r),
+                pct(&sptlb_utils, r),
+                pct(&greedy_utils[0], r),
+                pct(&greedy_utils[1], r),
+                pct(&greedy_utils[2], r),
+            ]
+        })
+        .collect();
+
+    Fig3Report {
+        tiers: bed.tiers.iter().map(|t| t.name.clone()).collect(),
+        series,
+        scheduler_names: ["initial", "sptlb", "greedy-cpu", "greedy-mem", "greedy-task"],
+        ideal_pct: [70.0, 70.0, 80.0],
+    }
+}
+
+impl Fig3Report {
+    pub fn csv(&self) -> String {
+        let mut out = String::from("objective,scheduler,tier,utilization_pct\n");
+        for (r, obj) in ["cpu", "mem", "tasks"].iter().enumerate() {
+            for (s, name) in self.scheduler_names.iter().enumerate() {
+                for (t, tier) in self.tiers.iter().enumerate() {
+                    out.push_str(&format!(
+                        "{obj},{name},{tier},{:.2}\n",
+                        self.series[r][s][t]
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Max spread (max-min utilization %) per scheduler for an objective —
+    /// the "is it balanced" summary the figure shows visually.
+    pub fn spread(&self, objective: usize, scheduler: usize) -> f64 {
+        let xs = &self.series[objective][scheduler];
+        xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            - xs.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn ascii(&self) -> String {
+        let mut out = String::new();
+        for (r, obj) in ["cpu utilization", "memory utilization", "task count"].iter().enumerate()
+        {
+            out.push_str(&format!("Figure 3({}): {obj} per tier\n", ['a', 'b', 'c'][r]));
+            for (s, name) in self.scheduler_names.iter().enumerate() {
+                let rows: Vec<(String, f64)> = self
+                    .tiers
+                    .iter()
+                    .zip(&self.series[r][s])
+                    .map(|(t, &v)| (t.clone(), v))
+                    .collect();
+                out.push_str(&crate::report::ascii::bar_chart(
+                    &format!("  [{name}] (spread {:.1}%)", self.spread(r, s)),
+                    &rows,
+                    120.0,
+                    40,
+                    &[(self.ideal_pct[r], '!'), (100.0, '|')],
+                ));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// One row of the Fig. 4 / Fig. 5 sweep.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub variant: Variant,
+    pub solver: SolverKind,
+    pub timeout_ms: u64,
+    pub time_to_solution_ms: f64,
+    pub p99_latency_ms: f64,
+    pub imbalance: f64,
+    pub n_moves: usize,
+}
+
+impl From<&VariantResult> for SweepRow {
+    fn from(r: &VariantResult) -> Self {
+        SweepRow {
+            variant: r.variant,
+            solver: r.solver,
+            timeout_ms: r.timeout.as_millis() as u64,
+            time_to_solution_ms: r.time_to_solution.as_secs_f64() * 1e3,
+            p99_latency_ms: r.p99_latency_ms,
+            imbalance: r.imbalance,
+            n_moves: r.n_moves,
+        }
+    }
+}
+
+/// Run the full Fig. 4/5 sweep: variants × solvers × timeouts.
+pub fn sweep(
+    bed: &TestBed,
+    timeouts: &[Duration],
+    movement_fraction: f64,
+    seed: u64,
+) -> Vec<SweepRow> {
+    let mut rows = Vec::new();
+    for &variant in &Variant::ALL {
+        for &solver in &[SolverKind::LocalSearch, SolverKind::OptimalSearch] {
+            for &timeout in timeouts {
+                let r = run_variant(bed, variant, solver, timeout, movement_fraction, seed);
+                rows.push(SweepRow::from(&r));
+            }
+        }
+    }
+    rows
+}
+
+/// Fig. 4 CSV: p99 latency vs time-to-solution.
+pub fn fig4_rows(rows: &[SweepRow]) -> String {
+    let mut out =
+        String::from("variant,solver,timeout_ms,time_to_solution_ms,p99_latency_ms,n_moves\n");
+    for r in rows {
+        out.push_str(&format!(
+            "{},{},{},{:.1},{:.0},{}\n",
+            r.variant.name(),
+            r.solver.name(),
+            r.timeout_ms,
+            r.time_to_solution_ms,
+            r.p99_latency_ms,
+            r.n_moves
+        ));
+    }
+    out
+}
+
+/// Fig. 5 CSV: imbalance vs time-to-solution, with pareto membership.
+pub fn fig5_rows(rows: &[SweepRow]) -> String {
+    let pts: Vec<(f64, f64)> = rows
+        .iter()
+        .map(|r| (r.time_to_solution_ms, r.imbalance))
+        .collect();
+    let front = pareto_front(&pts);
+    let mut out = String::from(
+        "variant,solver,timeout_ms,time_to_solution_ms,imbalance,on_pareto_front\n",
+    );
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "{},{},{},{:.1},{:.4},{}\n",
+            r.variant.name(),
+            r.solver.name(),
+            r.timeout_ms,
+            r.time_to_solution_ms,
+            r.imbalance,
+            front.contains(&i)
+        ));
+    }
+    out
+}
+
+/// Indices of points on the (minimize x, minimize y) pareto front.
+pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| {
+            !points.iter().enumerate().any(|(j, &(x, y))| {
+                j != i
+                    && x <= points[i].0
+                    && y <= points[i].1
+                    && (x < points[i].0 || y < points[i].1)
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{generate, WorkloadSpec};
+
+    #[test]
+    fn fig3_shapes() {
+        let bed = generate(&WorkloadSpec::paper());
+        let rep = fig3_report(&bed, Duration::from_millis(60), 0.10, 1);
+        assert_eq!(rep.tiers.len(), 5);
+        assert_eq!(rep.series.len(), 3);
+        for r in 0..3 {
+            for s in 0..5 {
+                assert_eq!(rep.series[r][s].len(), 5);
+            }
+        }
+        let csv = rep.csv();
+        assert_eq!(csv.lines().count(), 1 + 3 * 5 * 5);
+        assert!(rep.ascii().contains("Figure 3(a)"));
+    }
+
+    #[test]
+    fn fig3_sptlb_narrows_all_spreads() {
+        // The paper's headline: SPTLB (scheduler 1) has smaller spread
+        // than initial (0) on every objective.
+        let bed = generate(&WorkloadSpec::paper());
+        let rep = fig3_report(&bed, Duration::from_millis(100), 0.10, 1);
+        for r in 0..3 {
+            assert!(
+                rep.spread(r, 1) < rep.spread(r, 0),
+                "objective {r}: sptlb {:.1} vs initial {:.1}",
+                rep.spread(r, 1),
+                rep.spread(r, 0)
+            );
+        }
+    }
+
+    #[test]
+    fn pareto_front_math() {
+        let pts = vec![(1.0, 5.0), (2.0, 2.0), (5.0, 1.0), (4.0, 4.0), (2.0, 2.0)];
+        let front = pareto_front(&pts);
+        assert!(front.contains(&0));
+        assert!(front.contains(&1));
+        assert!(front.contains(&2));
+        assert!(front.contains(&4)); // duplicates both stay
+        assert!(!front.contains(&3)); // dominated by (2,2)
+    }
+
+    #[test]
+    fn sweep_covers_grid() {
+        let bed = generate(&WorkloadSpec::small());
+        let rows = sweep(&bed, &[Duration::from_millis(15)], 0.2, 3);
+        assert_eq!(rows.len(), 3 * 2); // 3 variants × 2 solvers × 1 timeout
+        let f4 = fig4_rows(&rows);
+        let f5 = fig5_rows(&rows);
+        assert_eq!(f4.lines().count(), 7);
+        assert_eq!(f5.lines().count(), 7);
+        assert!(f5.contains("true"));
+    }
+}

@@ -1,0 +1,8 @@
+//! Figure/table emitters (DESIGN.md S13): every evaluation artifact the
+//! paper shows, regenerated as CSV rows + ASCII charts so `cargo bench`
+//! output is directly comparable with the paper's figures.
+
+pub mod ascii;
+pub mod figures;
+
+pub use figures::{fig3_report, fig4_rows, fig5_rows, pareto_front, sweep, Fig3Report, SweepRow};

@@ -1,0 +1,205 @@
+//! SPTLB configuration: every tuning knob the paper names (§3.2.1, §4),
+//! loadable from JSON so deployments are declarative.
+
+use crate::hierarchy::variants::Variant;
+use crate::rebalancer::goals::{weights_from_priorities, Goal};
+use crate::rebalancer::problem::GoalWeights;
+use crate::rebalancer::solution::SolverKind;
+use crate::util::json::Json;
+use std::time::Duration;
+
+/// Full SPTLB configuration.
+#[derive(Debug, Clone)]
+pub struct SptlbConfig {
+    /// Solver type (§3.2.1: LocalSearch | OptimalSearch).
+    pub solver: SolverKind,
+    /// Solver timeout (paper sweeps 30s/60s/10m/30m; benches scale down).
+    pub timeout: Duration,
+    /// C3: movement allowance as a fraction of all apps (paper: 10%).
+    pub movement_fraction: f64,
+    /// Hierarchy integration variant (§4.2.2).
+    pub variant: Variant,
+    /// Goal priority order (default: the paper's).
+    pub goal_order: [Goal; 5],
+    /// Samples scraped per app during collection.
+    pub samples_per_app: usize,
+    /// Region-scheduler proximity budget (ms) for manual_cnst.
+    pub proximity_budget_ms: f64,
+    /// Hosts per tier for the host-scheduler fleet model.
+    pub hosts_per_tier: usize,
+    /// Protocol iteration limit (Fig. 2: "number of iterations limit").
+    pub max_coop_rounds: u32,
+    pub seed: u64,
+}
+
+impl Default for SptlbConfig {
+    fn default() -> Self {
+        Self {
+            solver: SolverKind::LocalSearch,
+            timeout: Duration::from_millis(100),
+            movement_fraction: 0.10,
+            variant: Variant::ManualCnst,
+            goal_order: Goal::DEFAULT_ORDER,
+            samples_per_app: 200,
+            proximity_budget_ms: crate::hierarchy::variants::DEFAULT_PROXIMITY_MS,
+            hosts_per_tier: crate::hierarchy::variants::DEFAULT_HOSTS_PER_TIER,
+            max_coop_rounds: 8,
+            seed: 42,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("config parse: {0}")]
+    Parse(String),
+    #[error("config io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("invalid {field}: {value}")]
+    Invalid { field: &'static str, value: String },
+}
+
+impl SptlbConfig {
+    /// Derived goal weights.
+    pub fn weights(&self) -> GoalWeights {
+        weights_from_priorities(&self.goal_order)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("solver", Json::str(self.solver.name())),
+            ("timeout_ms", Json::num(self.timeout.as_millis() as f64)),
+            ("movement_fraction", Json::num(self.movement_fraction)),
+            ("variant", Json::str(self.variant.name())),
+            (
+                "goal_order",
+                Json::arr(self.goal_order.iter().map(|g| Json::str(g.name()))),
+            ),
+            ("samples_per_app", Json::num(self.samples_per_app as f64)),
+            ("proximity_budget_ms", Json::num(self.proximity_budget_ms)),
+            ("hosts_per_tier", Json::num(self.hosts_per_tier as f64)),
+            ("max_coop_rounds", Json::num(self.max_coop_rounds as f64)),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        let mut cfg = SptlbConfig::default();
+        if let Some(s) = j.get("solver").as_str() {
+            cfg.solver = SolverKind::from_name(s)
+                .ok_or(ConfigError::Invalid { field: "solver", value: s.into() })?;
+        }
+        if let Some(ms) = j.get("timeout_ms").as_f64() {
+            if ms < 0.0 {
+                return Err(ConfigError::Invalid { field: "timeout_ms", value: ms.to_string() });
+            }
+            cfg.timeout = Duration::from_millis(ms as u64);
+        }
+        if let Some(f) = j.get("movement_fraction").as_f64() {
+            if !(0.0..=1.0).contains(&f) {
+                return Err(ConfigError::Invalid {
+                    field: "movement_fraction",
+                    value: f.to_string(),
+                });
+            }
+            cfg.movement_fraction = f;
+        }
+        if let Some(v) = j.get("variant").as_str() {
+            cfg.variant = Variant::from_name(v)
+                .ok_or(ConfigError::Invalid { field: "variant", value: v.into() })?;
+        }
+        if let Some(arr) = j.get("goal_order").as_arr() {
+            let mut order = Vec::new();
+            for g in arr {
+                let name = g.as_str().unwrap_or_default();
+                let goal = Goal::DEFAULT_ORDER
+                    .iter()
+                    .find(|x| x.name() == name)
+                    .copied()
+                    .ok_or(ConfigError::Invalid { field: "goal_order", value: name.into() })?;
+                order.push(goal);
+            }
+            cfg.goal_order = order.try_into().map_err(|_| ConfigError::Invalid {
+                field: "goal_order",
+                value: "need exactly 5 goals".into(),
+            })?;
+        }
+        if let Some(n) = j.get("samples_per_app").as_usize() {
+            cfg.samples_per_app = n.max(1);
+        }
+        if let Some(p) = j.get("proximity_budget_ms").as_f64() {
+            cfg.proximity_budget_ms = p;
+        }
+        if let Some(h) = j.get("hosts_per_tier").as_usize() {
+            if h == 0 {
+                return Err(ConfigError::Invalid { field: "hosts_per_tier", value: "0".into() });
+            }
+            cfg.hosts_per_tier = h;
+        }
+        if let Some(r) = j.get("max_coop_rounds").as_usize() {
+            cfg.max_coop_rounds = r as u32;
+        }
+        if let Some(s) = j.get("seed").as_u64() {
+            cfg.seed = s;
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| ConfigError::Parse(e.to_string()))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrips_through_json() {
+        let cfg = SptlbConfig::default();
+        let j = cfg.to_json().pretty();
+        let back = SptlbConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.solver, cfg.solver);
+        assert_eq!(back.timeout, cfg.timeout);
+        assert_eq!(back.variant, cfg.variant);
+        assert_eq!(back.goal_order, cfg.goal_order);
+        assert_eq!(back.weights(), cfg.weights());
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let j = Json::parse(r#"{"solver":"optimal","timeout_ms":500}"#).unwrap();
+        let cfg = SptlbConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.solver, SolverKind::OptimalSearch);
+        assert_eq!(cfg.timeout, Duration::from_millis(500));
+        assert_eq!(cfg.movement_fraction, 0.10);
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        for bad in [
+            r#"{"solver":"quantum"}"#,
+            r#"{"movement_fraction":1.5}"#,
+            r#"{"variant":"zzz"}"#,
+            r#"{"hosts_per_tier":0}"#,
+            r#"{"goal_order":["move_cost"]}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(SptlbConfig::from_json(&j).is_err(), "{bad} must fail");
+        }
+    }
+
+    #[test]
+    fn custom_goal_order_changes_weights() {
+        let j = Json::parse(
+            r#"{"goal_order":["criticality_affinity","move_cost","task_balance",
+                "resource_balance","utilization_limit"]}"#,
+        )
+        .unwrap();
+        let cfg = SptlbConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.weights().criticality, 1e3);
+        assert_eq!(cfg.weights().util_limit, 1e-1);
+    }
+}

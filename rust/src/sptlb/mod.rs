@@ -1,0 +1,18 @@
+//! SPTLB — the Stream-Processing Tier Load Balancer (§3, Fig. 1).
+//!
+//! The pipeline's three stages:
+//!  1. **Data collection** (`collect`): query the metadata store for
+//!     running apps + SLO/criticality, scrape each app's monitoring
+//!     endpoint, reduce to p99 demand, gather tier limits.
+//!  2. **Problem construction** (`construct`): turn the collected data
+//!     into Rebalancer-compliant structures (constraints C1–C4, goals
+//!     G1–G5) per §3.2.1.
+//!  3. **Solve + decision execution** (`execute`): run the chosen solver,
+//!     emit the projected mapping/metrics, validate the decision, and
+//!     optionally evaluate against the greedy baseline (§3.3).
+
+pub mod config;
+pub mod pipeline;
+
+pub use config::SptlbConfig;
+pub use pipeline::{BalanceReport, Sptlb};

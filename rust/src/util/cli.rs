@@ -1,0 +1,279 @@
+//! Tiny declarative CLI argument parser (clap is not available offline).
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, typed
+//! accessors with defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option '--{0}'")]
+    UnknownOption(String),
+    #[error("option '--{0}' expects a value")]
+    MissingValue(String),
+    #[error("invalid value for '--{key}': '{value}' ({why})")]
+    InvalidValue { key: String, value: String, why: String },
+    #[error("unknown subcommand '{0}'; try --help")]
+    UnknownSubcommand(String),
+    #[error("unexpected positional argument '{0}'")]
+    UnexpectedPositional(String),
+}
+
+/// Option specification.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// A declarative command: name, help, options, and allowed positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub max_positionals: usize,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new(), max_positionals: 0 }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn positionals(mut self, n: usize) -> Self {
+        self.max_positionals = n;
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let _ = writeln!(s, "\nOptions:");
+        for o in &self.opts {
+            let kind = if o.is_flag { "".to_string() } else { " <value>".to_string() };
+            let dfl = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  --{}{}\t{}{}", o.name, kind, o.help, dfl);
+        }
+        s
+    }
+
+    /// Parse the given args (not including the command name itself).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, CliError> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut positionals: Vec<String> = Vec::new();
+
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if key == "help" {
+                    flags.push("help".to_string());
+                    i += 1;
+                    continue;
+                }
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError::UnknownOption(key.clone()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(CliError::InvalidValue {
+                            key,
+                            value: inline_val.unwrap(),
+                            why: "flag takes no value".into(),
+                        });
+                    }
+                    flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(key.clone()))?
+                        }
+                    };
+                    values.insert(key, val);
+                }
+            } else {
+                if positionals.len() >= self.max_positionals {
+                    return Err(CliError::UnexpectedPositional(arg.clone()));
+                }
+                positionals.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(Parsed { values, flags, positionals })
+    }
+}
+
+/// Parsed arguments with typed accessors.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> Result<String, CliError> {
+        self.get(name)
+            .map(|s| s.to_string())
+            .ok_or_else(|| CliError::MissingValue(name.to_string()))
+    }
+
+    pub fn parse_as<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.str(name)?;
+        raw.parse::<T>().map_err(|e| CliError::InvalidValue {
+            key: name.to_string(),
+            value: raw,
+            why: e.to_string(),
+        })
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        self.parse_as(name)
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        self.parse_as(name)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.parse_as(name)
+    }
+
+    /// Comma-separated list.
+    pub fn list(&self, name: &str) -> Result<Vec<String>, CliError> {
+        Ok(self
+            .str(name)?
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().to_string())
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("balance", "run a balance round")
+            .opt("seed", "42", "prng seed")
+            .opt("timeout-ms", "100", "solver deadline")
+            .req("scenario", "workload scenario name")
+            .flag("verbose", "chatty output")
+            .positionals(1)
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = cmd().parse(&args(&["--scenario", "paper", "--seed=7"])).unwrap();
+        assert_eq!(p.u64("seed").unwrap(), 7);
+        assert_eq!(p.u64("timeout-ms").unwrap(), 100);
+        assert_eq!(p.str("scenario").unwrap(), "paper");
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let p = cmd()
+            .parse(&args(&["--verbose", "out.json", "--scenario", "x"]))
+            .unwrap();
+        assert!(p.flag("verbose"));
+        assert_eq!(p.positionals, vec!["out.json"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(
+            cmd().parse(&args(&["--nope"])),
+            Err(CliError::UnknownOption(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            cmd().parse(&args(&["--seed"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn typed_parse_error() {
+        let p = cmd().parse(&args(&["--seed", "abc"])).unwrap();
+        assert!(matches!(p.u64("seed"), Err(CliError::InvalidValue { .. })));
+    }
+
+    #[test]
+    fn too_many_positionals() {
+        assert!(matches!(
+            cmd().parse(&args(&["a", "b"])),
+            Err(CliError::UnexpectedPositional(_))
+        ));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let c = Command::new("x", "y").opt("variants", "a,b,c", "list");
+        let p = c.parse(&[]).unwrap();
+        assert_eq!(p.list("variants").unwrap(), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = cmd().usage();
+        assert!(u.contains("--seed"));
+        assert!(u.contains("default: 42"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Utility substrate built from scratch (the offline crate set has no
+//! rand/serde/clap/tokio/criterion/proptest — see DESIGN.md §4).
+
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod pool;
+pub mod prng;
+pub mod propcheck;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,165 @@
+//! Fixed-size thread pool + scoped parallel-map (tokio is not available
+//! offline; the coordinator's event loop and the benches' sweeps use this).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A basic fixed-size thread pool with graceful shutdown on drop.
+pub struct ThreadPool {
+    workers: Vec<thread::JoinHandle<()>>,
+    sender: Option<mpsc::Sender<Job>>,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&receiver);
+                thread::Builder::new()
+                    .name(format!("sptlb-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { workers, sender: Some(sender) }
+    }
+
+    /// Default pool sized to available parallelism.
+    pub fn with_default_size() -> Self {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n)
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.sender
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(f))
+            .expect("pool worker hung up");
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.sender.take()); // close the channel, workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Parallel map over a slice using scoped threads (no 'static bound).
+/// Preserves input order in the result. `chunks` controls granularity;
+/// pass 0 for one chunk per available core.
+pub fn par_map<T: Sync, R: Send>(items: &[T], chunks: usize, f: impl Fn(&T) -> R + Sync) -> Vec<R> {
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let n_threads = if chunks == 0 {
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        chunks
+    }
+    .min(items.len());
+    if n_threads <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let chunk_size = items.len().div_ceil(n_threads);
+    let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+    let out_slots = Mutex::new(&mut out);
+
+    thread::scope(|s| {
+        for (ci, chunk) in items.chunks(chunk_size).enumerate() {
+            let f = &f;
+            let out_slots = &out_slots;
+            s.spawn(move || {
+                let base = ci * chunk_size;
+                let results: Vec<R> = chunk.iter().map(f).collect();
+                let mut guard = out_slots.lock().unwrap();
+                for (i, r) in results.into_iter().enumerate() {
+                    guard[base + i] = Some(r);
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("par_map slot filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                tx.send(()).unwrap();
+            });
+        }
+        for _ in 0..100 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // must block until all 10 ran
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = par_map(&items, 0, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(par_map(&empty, 4, |x| *x).is_empty());
+        assert_eq!(par_map(&[7], 4, |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn par_map_explicit_chunks() {
+        let items: Vec<usize> = (0..17).collect();
+        let out = par_map(&items, 3, |&x| x + 1);
+        assert_eq!(out.len(), 17);
+        assert_eq!(out[16], 17);
+    }
+}

@@ -1,0 +1,160 @@
+//! Mini property-based testing framework (proptest is not available
+//! offline). Provides seeded generators, a `forall` runner with failure
+//! reporting (seed + case index for replay), and greedy input shrinking
+//! for a few common shapes.
+//!
+//! Usage:
+//! ```ignore
+//! propcheck::forall(200, |rng| gen_problem(rng), |p| check_invariant(p));
+//! ```
+
+use crate::util::prng::Pcg64;
+
+/// Outcome of a single property evaluation.
+pub enum Check {
+    Pass,
+    Fail(String),
+}
+
+impl Check {
+    pub fn from_bool(ok: bool, msg: &str) -> Check {
+        if ok {
+            Check::Pass
+        } else {
+            Check::Fail(msg.to_string())
+        }
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. Panics (test failure) with the
+/// replay seed on the first failing case.
+pub fn forall<T: std::fmt::Debug>(
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> Check,
+) {
+    forall_seeded(0xC0FFEE, cases, &mut gen, &mut prop);
+}
+
+/// `forall` with an explicit base seed (reported on failure for replay).
+pub fn forall_seeded<T: std::fmt::Debug>(
+    base_seed: u64,
+    cases: usize,
+    gen: &mut impl FnMut(&mut Pcg64) -> T,
+    prop: &mut impl FnMut(&T) -> Check,
+) {
+    for case in 0..cases {
+        let mut rng = Pcg64::new(base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let input = gen(&mut rng);
+        if let Check::Fail(msg) = prop(&input) {
+            panic!(
+                "property failed (seed={base_seed:#x}, case={case}): {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Greedy shrinking for vector inputs: repeatedly tries dropping chunks and
+/// single elements while the property still fails, then reports the minimal
+/// failing input. Use for debugging; `forall` is the day-to-day runner.
+pub fn shrink_vec<T: Clone + std::fmt::Debug>(
+    mut input: Vec<T>,
+    still_fails: impl Fn(&[T]) -> bool,
+) -> Vec<T> {
+    debug_assert!(still_fails(&input), "shrink_vec called with passing input");
+    loop {
+        let mut shrunk = false;
+        // Halves first.
+        let mut chunk = input.len() / 2;
+        while chunk >= 1 {
+            let mut i = 0;
+            while i + chunk <= input.len() {
+                let mut candidate = input.clone();
+                candidate.drain(i..i + chunk);
+                if !candidate.is_empty() && still_fails(&candidate) {
+                    input = candidate;
+                    shrunk = true;
+                } else {
+                    i += chunk;
+                }
+            }
+            chunk /= 2;
+        }
+        if !shrunk {
+            return input;
+        }
+    }
+}
+
+/// Common generator helpers.
+pub mod gen {
+    use super::*;
+
+    pub fn usize_in(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+        rng.range(lo, hi)
+    }
+
+    pub fn f64_in(rng: &mut Pcg64, lo: f64, hi: f64) -> f64 {
+        rng.uniform(lo, hi)
+    }
+
+    pub fn vec_of<T>(rng: &mut Pcg64, len: usize, mut f: impl FnMut(&mut Pcg64) -> T) -> Vec<T> {
+        (0..len).map(|_| f(rng)).collect()
+    }
+
+    /// Non-empty subset of 0..n as a sorted vec.
+    pub fn subset(rng: &mut Pcg64, n: usize) -> Vec<usize> {
+        assert!(n > 0);
+        loop {
+            let s: Vec<usize> = (0..n).filter(|_| rng.chance(0.5)).collect();
+            if !s.is_empty() {
+                return s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(
+            100,
+            |rng| rng.range(0, 100),
+            |&x| Check::from_bool(x < 100, "in range"),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure_with_seed() {
+        forall(
+            100,
+            |rng| rng.range(0, 100),
+            |&x| Check::from_bool(x < 50, "must be small"),
+        );
+    }
+
+    #[test]
+    fn shrink_finds_minimal_counterexample() {
+        // Property "no element >= 90" fails; minimal failing vec is one
+        // offending element.
+        let input: Vec<u64> = (0..100).collect();
+        let minimal = shrink_vec(input, |xs| xs.iter().any(|&x| x >= 90));
+        assert_eq!(minimal.len(), 1);
+        assert!(minimal[0] >= 90);
+    }
+
+    #[test]
+    fn subset_is_nonempty_sorted_unique() {
+        let mut rng = Pcg64::new(3);
+        for _ in 0..50 {
+            let s = gen::subset(&mut rng, 8);
+            assert!(!s.is_empty());
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+            assert!(s.iter().all(|&x| x < 8));
+        }
+    }
+}

@@ -1,0 +1,317 @@
+//! Statistics primitives: percentiles, empirical CDFs, online moments,
+//! and histograms. The paper's evaluation leans on p99s — of utilization
+//! timeseries (§3.1) and of sampled network-latency CDFs (Fig. 4) — so the
+//! percentile definition here is the one the figures are generated with
+//! (nearest-rank on the sorted sample, matching numpy's `"higher"` method
+//! closely for large n).
+
+/// Nearest-rank percentile (q in [0,100]) of an unsorted slice.
+/// Returns NaN for empty input.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, q)
+}
+
+/// Nearest-rank percentile of an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let q = q.clamp(0.0, 100.0);
+    let rank = ((q / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.max(1) - 1]
+}
+
+pub fn p99(xs: &[f64]) -> f64 {
+    percentile(xs, 99.0)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Maximum absolute deviation from the mean — the "worst balanced
+/// resource difference" metric Fig. 5 plots.
+pub fn max_abs_dev_from_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m).abs()).fold(0.0, f64::max)
+}
+
+/// Empirical CDF over a finite sample; supports quantile queries and
+/// random re-sampling (used by Fig. 4's latency bootstrap).
+#[derive(Debug, Clone)]
+pub struct Ecdf {
+    sorted: Vec<f64>,
+}
+
+impl Ecdf {
+    pub fn new(mut xs: Vec<f64>) -> Self {
+        xs.retain(|x| x.is_finite());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self { sorted: xs }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    /// P(X <= x).
+    pub fn cdf(&self, x: f64) -> f64 {
+        if self.sorted.is_empty() {
+            return f64::NAN;
+        }
+        let idx = self.sorted.partition_point(|&v| v <= x);
+        idx as f64 / self.sorted.len() as f64
+    }
+
+    /// Quantile (q in [0,1]).
+    pub fn quantile(&self, q: f64) -> f64 {
+        percentile_sorted(&self.sorted, q * 100.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.sorted.first().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.sorted.last().copied().unwrap_or(f64::NAN)
+    }
+
+    /// Draw one sample uniformly from the empirical distribution.
+    pub fn sample(&self, rng: &mut crate::util::prng::Pcg64) -> f64 {
+        assert!(!self.sorted.is_empty(), "sampling empty ECDF");
+        self.sorted[rng.range(0, self.sorted.len())]
+    }
+}
+
+/// Online mean/variance (Welford) — used by metric emitters where storing
+/// full series would be wasteful.
+#[derive(Debug, Clone, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Fixed-bucket histogram for latency-style data.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    buckets: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n_buckets: usize) -> Self {
+        assert!(hi > lo && n_buckets > 0);
+        Self { lo, hi, buckets: vec![0; n_buckets], underflow: 0, overflow: 0 }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let w = (self.hi - self.lo) / self.buckets.len() as f64;
+            let idx = (((x - self.lo) / w) as usize).min(self.buckets.len() - 1);
+            self.buckets[idx] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Approximate quantile from bucket midpoints.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut cum = self.underflow;
+        if cum >= target && self.underflow > 0 {
+            return self.lo;
+        }
+        let w = (self.hi - self.lo) / self.buckets.len() as f64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return self.lo + w * (i as f64 + 0.5);
+            }
+        }
+        self.hi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+    }
+
+    #[test]
+    fn percentile_empty_is_nan() {
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn ecdf_quantiles_and_cdf() {
+        let e = Ecdf::new((1..=1000).map(|i| i as f64).collect());
+        assert_eq!(e.p99(), 990.0);
+        assert!((e.cdf(500.0) - 0.5).abs() < 1e-9);
+        assert_eq!(e.cdf(0.0), 0.0);
+        assert_eq!(e.cdf(1e9), 1.0);
+        assert_eq!(e.min(), 1.0);
+        assert_eq!(e.max(), 1000.0);
+    }
+
+    #[test]
+    fn ecdf_sampling_stays_in_support() {
+        let e = Ecdf::new(vec![1.0, 2.0, 3.0]);
+        let mut rng = Pcg64::new(1);
+        for _ in 0..100 {
+            let s = e.sample(&mut rng);
+            assert!([1.0, 2.0, 3.0].contains(&s));
+        }
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let mut rng = Pcg64::new(2);
+        let xs: Vec<f64> = (0..5000).map(|_| rng.normal(3.0, 1.5)).collect();
+        let mut os = OnlineStats::new();
+        for &x in &xs {
+            os.push(x);
+        }
+        assert!((os.mean() - mean(&xs)).abs() < 1e-9);
+        assert!((os.variance() - variance(&xs)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn max_abs_dev() {
+        let xs = [0.2, 0.4, 0.9];
+        let m = mean(&xs);
+        assert!((max_abs_dev_from_mean(&xs) - (0.9f64 - m).abs()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantile_approx() {
+        let mut h = Histogram::new(0.0, 100.0, 100);
+        for i in 0..1000 {
+            h.record((i % 100) as f64);
+        }
+        let q50 = h.quantile(0.5);
+        assert!((q50 - 50.0).abs() < 2.0, "q50 {q50}");
+        assert_eq!(h.total(), 1000);
+    }
+
+    #[test]
+    fn histogram_overflow_underflow() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.record(-5.0);
+        h.record(15.0);
+        h.record(5.0);
+        assert_eq!(h.total(), 3);
+    }
+}

@@ -1,0 +1,114 @@
+//! Deadlines and stopwatches. Every solver in the repo is *anytime*: it
+//! polls a [`Deadline`] and returns its best-so-far when time is up —
+//! mirroring the paper's 30s/60s/10m/30m solver-timeout knob.
+
+use std::time::{Duration, Instant};
+
+/// A wall-clock budget the solvers poll.
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    start: Instant,
+    budget: Duration,
+}
+
+impl Deadline {
+    pub fn after(budget: Duration) -> Self {
+        Self { start: Instant::now(), budget }
+    }
+
+    pub fn after_ms(ms: u64) -> Self {
+        Self::after(Duration::from_millis(ms))
+    }
+
+    /// An effectively-infinite deadline (for tests and exhaustive runs).
+    pub fn unbounded() -> Self {
+        Self::after(Duration::from_secs(u64::MAX / 4))
+    }
+
+    pub fn expired(&self) -> bool {
+        self.start.elapsed() >= self.budget
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn remaining(&self) -> Duration {
+        self.budget.saturating_sub(self.start.elapsed())
+    }
+
+    /// Fraction of the budget consumed, clamped to [0, 1].
+    pub fn progress(&self) -> f64 {
+        if self.budget.is_zero() {
+            return 1.0;
+        }
+        (self.start.elapsed().as_secs_f64() / self.budget.as_secs_f64()).min(1.0)
+    }
+
+    pub fn budget(&self) -> Duration {
+        self.budget
+    }
+}
+
+/// Simple stopwatch for §Perf measurements and bench harnesses.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_budget_expires_immediately() {
+        let d = Deadline::after(Duration::ZERO);
+        assert!(d.expired());
+        assert_eq!(d.progress(), 1.0);
+        assert_eq!(d.remaining(), Duration::ZERO);
+    }
+
+    #[test]
+    fn unbounded_does_not_expire() {
+        let d = Deadline::unbounded();
+        assert!(!d.expired());
+        assert!(d.progress() < 1e-6);
+    }
+
+    #[test]
+    fn deadline_expires_after_budget() {
+        let d = Deadline::after_ms(5);
+        assert!(!d.expired());
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(d.expired());
+    }
+
+    #[test]
+    fn stopwatch_restart_resets() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let first = sw.restart();
+        assert!(first >= Duration::from_millis(2));
+        assert!(sw.elapsed() < first);
+    }
+}

@@ -1,0 +1,376 @@
+//! Synthetic workload generation (substitute for Meta's live tier data —
+//! DESIGN.md §2). Generates a full *testbed*: tiers with capacities /
+//! region sets, a heavy-tailed app population with SLO + criticality
+//! scores, a region latency matrix, and an SLO-valid but imbalanced
+//! initial assignment shaped like Fig. 3's initial state (one tier pushed
+//! well above its ideal utilization).
+
+use crate::model::tier::default_ideal_utilization;
+use crate::model::{
+    paper_slo_mapping, paper_tiers_for_slo, App, AppId, Assignment, Criticality, RegionId,
+    RegionSet, ResourceVec, Slo, Tier, TierId,
+};
+use crate::network::LatencyMatrix;
+use crate::util::prng::Pcg64;
+
+/// Everything a balancing experiment needs.
+#[derive(Debug, Clone)]
+pub struct TestBed {
+    pub apps: Vec<App>,
+    pub tiers: Vec<Tier>,
+    pub initial: Assignment,
+    pub latency: LatencyMatrix,
+}
+
+/// Generator parameters.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub n_apps: usize,
+    pub n_tiers: usize,
+    pub n_regions: usize,
+    pub n_clusters: usize,
+    /// Regions per tier.
+    pub regions_per_tier: usize,
+    /// Median app cpu demand (cores); mem/tasks scale off it.
+    pub median_cpu: f64,
+    /// Lognormal sigma for app sizes (heavy tail).
+    pub size_sigma: f64,
+    /// Overall target utilization of the whole fleet (drives capacities).
+    pub fleet_utilization: f64,
+    /// Index of the tier to overload in the initial assignment
+    /// (Fig. 3's "tier 3"); None for an unskewed start.
+    pub hot_tier: Option<usize>,
+    /// Fraction of apps crammed into the hot tier beyond its fair share.
+    pub hot_fraction: f64,
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    /// The paper's testbed shape (§4): 5 tiers, SLO1/2→{1,2,3},
+    /// SLO3→{1..5}, SLO4→{4,5}; tier 3 (index 2) initially over-utilized.
+    pub fn paper() -> Self {
+        Self {
+            n_apps: 120,
+            n_tiers: 5,
+            n_regions: 12,
+            n_clusters: 4,
+            regions_per_tier: 5,
+            median_cpu: 8.0,
+            size_sigma: 0.9,
+            fleet_utilization: 0.55,
+            hot_tier: Some(0),
+            hot_fraction: 0.20,
+            seed: 42,
+        }
+    }
+
+    /// Small, fast testbed for unit tests.
+    pub fn small() -> Self {
+        Self {
+            n_apps: 24,
+            n_tiers: 3,
+            n_regions: 6,
+            n_clusters: 2,
+            regions_per_tier: 3,
+            median_cpu: 4.0,
+            size_sigma: 0.6,
+            fleet_utilization: 0.5,
+            hot_tier: Some(0),
+            hot_fraction: 0.5,
+            seed: 7,
+        }
+    }
+
+    /// Large testbed exercising the a512_t8 artifact.
+    pub fn large() -> Self {
+        Self {
+            n_apps: 400,
+            n_tiers: 8,
+            n_regions: 20,
+            n_clusters: 5,
+            regions_per_tier: 6,
+            median_cpu: 8.0,
+            size_sigma: 1.0,
+            fleet_utilization: 0.6,
+            hot_tier: Some(3),
+            hot_fraction: 0.4,
+            seed: 42,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "paper" => Some(Self::paper()),
+            "small" => Some(Self::small()),
+            "large" => Some(Self::large()),
+            _ => None,
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_apps(mut self, n: usize) -> Self {
+        self.n_apps = n;
+        self
+    }
+}
+
+/// SLO support mapping for arbitrary tier counts: the paper's mapping for
+/// 5 tiers, a proportional generalization otherwise (front tiers take
+/// SLO1–3, back tiers SLO3–4; SLO3 everywhere).
+pub fn slo_mapping(tier_index: usize, n_tiers: usize) -> Vec<Slo> {
+    if n_tiers == 5 {
+        return paper_slo_mapping(tier_index);
+    }
+    let front = (n_tiers * 3).div_ceil(5).clamp(1, n_tiers - 1);
+    if tier_index < front {
+        vec![Slo::Slo1, Slo::Slo2, Slo::Slo3]
+    } else {
+        vec![Slo::Slo3, Slo::Slo4]
+    }
+}
+
+pub fn tiers_for_slo(slo: Slo, n_tiers: usize) -> Vec<TierId> {
+    if n_tiers == 5 {
+        return paper_tiers_for_slo(slo, n_tiers);
+    }
+    (0..n_tiers)
+        .filter(|&t| slo_mapping(t, n_tiers).contains(&slo))
+        .map(TierId)
+        .collect()
+}
+
+/// Generate a full testbed from a spec. Deterministic given `spec.seed`.
+pub fn generate(spec: &WorkloadSpec) -> TestBed {
+    assert!(spec.n_tiers >= 2, "need at least two tiers to balance");
+    assert!(spec.n_apps >= spec.n_tiers, "need at least one app per tier");
+    let mut rng = Pcg64::new(spec.seed);
+    let latency = LatencyMatrix::synthesize(spec.n_regions, spec.n_clusters, &mut rng);
+
+    // --- apps: heavy-tailed sizes, SLO mix, criticality ------------------
+
+    let apps: Vec<App> = (0..spec.n_apps)
+        .map(|i| {
+            // Resources are only PARTIALLY correlated: a shared app-size
+            // scale times an independent per-resource factor. Full
+            // correlation would let a single-objective greedy balance all
+            // three resources by accident — exactly what Fig. 3 shows
+            // does NOT happen in production fleets.
+            let scale = rng.log_normal(0.0, 0.4);
+            let f = |rng: &mut Pcg64, base: f64| {
+                (base * scale * rng.log_normal(0.0, spec.size_sigma))
+                    .min(base * 60.0)
+                    .max(base * 0.05)
+            };
+            let cpu = f(&mut rng, spec.median_cpu);
+            let mem = f(&mut rng, spec.median_cpu * 4.0);
+            let tasks = f(&mut rng, spec.median_cpu * 4.0).ceil().max(1.0);
+            let slo = match rng.choose_weighted(&[0.25, 0.25, 0.35, 0.15]) {
+                0 => Slo::Slo1,
+                1 => Slo::Slo2,
+                2 => Slo::Slo3,
+                _ => Slo::Slo4,
+            };
+            // Criticality: mostly low with a critical minority.
+            let criticality = if rng.chance(0.15) {
+                rng.uniform(0.8, 1.0)
+            } else {
+                rng.uniform(0.0, 0.5)
+            };
+            App {
+                id: AppId(i),
+                name: format!("stream-app-{i:04}"),
+                demand: ResourceVec::new(cpu, mem, tasks),
+                slo,
+                criticality: Criticality::new(criticality),
+                preferred_region: RegionId(rng.range(0, spec.n_regions)),
+            }
+        })
+        .collect();
+
+    // --- tiers: regions + capacity sized for the fleet -------------------
+    let total_demand: ResourceVec = apps
+        .iter()
+        .fold(ResourceVec::ZERO, |acc, a| acc + a.demand);
+    // Capacity per tier so the fleet sits at `fleet_utilization` when
+    // perfectly balanced. Mild capacity heterogeneity (±20%).
+    let per_tier_target = total_demand / (spec.fleet_utilization * spec.n_tiers as f64);
+    let tiers: Vec<Tier> = (0..spec.n_tiers)
+        .map(|t| {
+            let wobble = rng.uniform(0.8, 1.2);
+            // Tier regions: a contiguous window of the region LINE (not
+            // ring), placed so adjacent tiers overlap in a majority of
+            // regions (w_cnst allows those transitions) while the first
+            // and last tiers share nothing (w_cnst forbids them, and
+            // their transition latency is the cross-cluster worst case).
+            let span = spec.n_regions.saturating_sub(spec.regions_per_tier);
+            let start = if spec.n_tiers > 1 { (t * span) / (spec.n_tiers - 1) } else { 0 };
+            let regions = RegionSet::from_indices(
+                (0..spec.regions_per_tier).map(|k| (start + k).min(spec.n_regions - 1)),
+            );
+            Tier {
+                id: TierId(t),
+                name: format!("tier{}", t + 1),
+                capacity: per_tier_target * wobble,
+                ideal_utilization: default_ideal_utilization(),
+                supported_slos: slo_mapping(t, spec.n_tiers),
+                regions,
+            }
+        })
+        .collect();
+
+    // --- initial assignment: SLO-valid, skewed towards the hot tier ------
+    let mut tier_of: Vec<TierId> = Vec::with_capacity(spec.n_apps);
+    for app in &apps {
+        let allowed = tiers_for_slo(app.slo, spec.n_tiers);
+        debug_assert!(!allowed.is_empty(), "SLO {:?} unroutable", app.slo);
+        let pick = match spec.hot_tier {
+            Some(hot) if allowed.contains(&TierId(hot)) && rng.chance(spec.hot_fraction) => {
+                TierId(hot)
+            }
+            _ => *rng.choose(&allowed).expect("non-empty allowed set"),
+        };
+        tier_of.push(pick);
+    }
+
+    // --- data locality: apps were originally placed near their data
+    // source by the region scheduler, so the preferred region usually
+    // falls inside the hosting tier's region set (85%) with a minority
+    // of apps whose data lives elsewhere.
+    let mut apps = apps;
+    for (i, app) in apps.iter_mut().enumerate() {
+        let home = &tiers[tier_of[i].0].regions;
+        if rng.chance(0.85) {
+            app.preferred_region = *rng.choose(home.as_slice()).expect("tier has regions");
+        }
+    }
+
+    TestBed { apps, tiers, initial: Assignment::new(tier_of), latency }
+}
+
+impl TestBed {
+    /// Generate the named preset.
+    pub fn preset(name: &str) -> Option<TestBed> {
+        WorkloadSpec::by_name(name).map(|s| generate(&s))
+    }
+
+    pub fn n_apps(&self) -> usize {
+        self.apps.len()
+    }
+
+    pub fn n_tiers(&self) -> usize {
+        self.tiers.len()
+    }
+
+    /// Initial per-tier utilizations (Fig. 3's red bars).
+    pub fn initial_utilizations(&self) -> Vec<ResourceVec> {
+        self.initial.tier_utilizations(&self.apps, &self.tiers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = generate(&WorkloadSpec::paper());
+        let b = generate(&WorkloadSpec::paper());
+        assert_eq!(a.apps, b.apps);
+        assert_eq!(a.initial, b.initial);
+        assert_eq!(a.tiers, b.tiers);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = generate(&WorkloadSpec::paper());
+        let b = generate(&WorkloadSpec::paper().with_seed(43));
+        assert_ne!(a.initial, b.initial);
+    }
+
+    #[test]
+    fn initial_assignment_respects_slo() {
+        let bed = generate(&WorkloadSpec::paper());
+        for app in &bed.apps {
+            let t = bed.initial.tier_of(app.id);
+            assert!(
+                bed.tiers[t.0].supports_slo(app.slo),
+                "{} with {:?} on {t}",
+                app.name,
+                app.slo
+            );
+        }
+    }
+
+    #[test]
+    fn hot_tier_is_overloaded() {
+        let bed = generate(&WorkloadSpec::paper());
+        let utils = bed.initial_utilizations();
+        let hot = utils[0].cpu();
+        let mean: f64 =
+            utils.iter().map(|u| u.cpu()).sum::<f64>() / utils.len() as f64;
+        assert!(
+            hot > 1.3 * mean,
+            "hot tier cpu {hot:.2} should exceed mean {mean:.2} by >30%"
+        );
+    }
+
+    #[test]
+    fn paper_mapping_used_for_five_tiers() {
+        for t in 0..5 {
+            assert_eq!(slo_mapping(t, 5), paper_slo_mapping(t));
+        }
+    }
+
+    #[test]
+    fn generalized_mapping_covers_all_slos() {
+        for n_tiers in [2, 3, 4, 6, 8, 12] {
+            for slo in Slo::ALL {
+                assert!(
+                    !tiers_for_slo(slo, n_tiers).is_empty(),
+                    "{slo} unroutable with {n_tiers} tiers"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn demands_positive_heavy_tailed() {
+        let bed = generate(&WorkloadSpec::paper());
+        assert!(bed.apps.iter().all(|a| a.demand.is_non_negative()));
+        assert!(bed.apps.iter().all(|a| a.demand.tasks() >= 1.0));
+        let cpus: Vec<f64> = bed.apps.iter().map(|a| a.demand.cpu()).collect();
+        let max = cpus.iter().cloned().fold(0.0, f64::max);
+        let med = crate::util::stats::percentile(&cpus, 50.0);
+        assert!(max > 3.0 * med, "heavy tail: max {max:.1} vs median {med:.1}");
+    }
+
+    #[test]
+    fn tier_regions_within_bounds() {
+        let bed = generate(&WorkloadSpec::large());
+        for t in &bed.tiers {
+            assert_eq!(t.regions.len(), 6);
+            assert!(t.regions.iter().all(|r| r.0 < 20));
+        }
+    }
+
+    #[test]
+    fn adjacent_tiers_overlap_more_than_distant() {
+        let bed = generate(&WorkloadSpec::paper());
+        let t = &bed.tiers;
+        let adj = t[0].regions.intersection_size(&t[1].regions);
+        let far = t[0].regions.intersection_size(&t[3].regions);
+        assert!(adj >= far, "adjacent {adj} >= distant {far}");
+    }
+
+    #[test]
+    fn presets_resolve() {
+        for name in ["paper", "small", "large"] {
+            assert!(TestBed::preset(name).is_some());
+        }
+        assert!(TestBed::preset("nope").is_none());
+    }
+}

@@ -1,0 +1,195 @@
+//! Figure-level integration: the evaluation claims of §4.2, asserted as
+//! tests (scaled timeouts). Property-based checks run through the in-repo
+//! propcheck framework.
+
+use sptlb::hierarchy::variants::{run_variant, Variant};
+use sptlb::rebalancer::solution::SolverKind;
+use sptlb::report::{fig3_report, fig4_rows, fig5_rows, pareto_front, sweep};
+use sptlb::util::prng::Pcg64;
+use sptlb::util::propcheck::{forall, Check};
+use sptlb::workload::{generate, WorkloadSpec};
+use std::time::Duration;
+
+#[test]
+fn fig3_sptlb_balances_all_objectives_greedy_only_its_own() {
+    let bed = generate(&WorkloadSpec::paper());
+    let rep = fig3_report(&bed, Duration::from_millis(150), 0.10, 42);
+    // SPTLB (scheduler index 1) narrows every objective vs initial (0).
+    for r in 0..3 {
+        assert!(
+            rep.spread(r, 1) < rep.spread(r, 0),
+            "sptlb objective {r}: {:.1} vs initial {:.1}",
+            rep.spread(r, 1),
+            rep.spread(r, 0)
+        );
+    }
+    // Each greedy variant (2=cpu, 3=mem, 4=task) narrows its own
+    // objective...
+    for (sched, obj) in [(2usize, 0usize), (3, 1), (4, 2)] {
+        assert!(
+            rep.spread(obj, sched) < rep.spread(obj, 0),
+            "greedy {sched} narrows its own objective {obj}"
+        );
+    }
+    // ...but leaves at least one OTHER objective worse than SPTLB left it
+    // (the Fig. 3 "always unbalanced" pattern).
+    for sched in [2usize, 3, 4] {
+        let worse_somewhere = (0..3).any(|obj| rep.spread(obj, sched) > rep.spread(obj, 1) * 1.5);
+        assert!(
+            worse_somewhere,
+            "greedy {sched} should be clearly worse than sptlb on some objective"
+        );
+    }
+}
+
+#[test]
+fn fig4_latency_ordering_w_manual_below_no() {
+    // Fig. 4: w_cnst lowest worst-case latency; manual_cnst close;
+    // no_cnst highest.
+    let bed = generate(&WorkloadSpec::paper());
+    let t = Duration::from_millis(100);
+    let no = run_variant(&bed, Variant::NoCnst, SolverKind::LocalSearch, t, 0.10, 1);
+    let w = run_variant(&bed, Variant::WCnst, SolverKind::LocalSearch, t, 0.10, 1);
+    let manual = run_variant(&bed, Variant::ManualCnst, SolverKind::LocalSearch, t, 0.10, 1);
+    assert!(
+        w.p99_latency_ms < no.p99_latency_ms,
+        "w_cnst {} < no_cnst {}",
+        w.p99_latency_ms,
+        no.p99_latency_ms
+    );
+    assert!(
+        manual.p99_latency_ms < no.p99_latency_ms,
+        "manual {} < no_cnst {}",
+        manual.p99_latency_ms,
+        no.p99_latency_ms
+    );
+    // "Albeit not as well as the w_cnst variant, but it does get close":
+    // manual within 25% of w_cnst.
+    assert!(
+        manual.p99_latency_ms <= w.p99_latency_ms * 1.25,
+        "manual {} close to w_cnst {}",
+        manual.p99_latency_ms,
+        w.p99_latency_ms
+    );
+}
+
+#[test]
+fn fig5_manual_dominates_w_cnst() {
+    // Fig. 5: w_cnst is worse than manual_cnst in BOTH axes (imbalance
+    // and time) at equal timeout.
+    let bed = generate(&WorkloadSpec::paper());
+    let t = Duration::from_millis(150);
+    let w = run_variant(&bed, Variant::WCnst, SolverKind::LocalSearch, t, 0.10, 2);
+    let manual = run_variant(&bed, Variant::ManualCnst, SolverKind::LocalSearch, t, 0.10, 2);
+    assert!(
+        manual.imbalance < w.imbalance,
+        "manual imbalance {} < w_cnst {}",
+        manual.imbalance,
+        w.imbalance
+    );
+    assert!(
+        manual.time_to_solution <= w.time_to_solution,
+        "manual time {:?} <= w_cnst {:?}",
+        manual.time_to_solution,
+        w.time_to_solution
+    );
+}
+
+#[test]
+fn sweep_csvs_are_well_formed() {
+    let bed = generate(&WorkloadSpec::small());
+    let rows = sweep(&bed, &[Duration::from_millis(20), Duration::from_millis(40)], 0.2, 5);
+    assert_eq!(rows.len(), 12);
+    let f4 = fig4_rows(&rows);
+    let f5 = fig5_rows(&rows);
+    assert_eq!(f4.lines().count(), 13);
+    assert_eq!(f5.lines().count(), 13);
+    for line in f4.lines().skip(1) {
+        assert_eq!(line.split(',').count(), 6, "{line}");
+    }
+    // At least one pareto point exists.
+    assert!(f5.contains(",true"));
+}
+
+#[test]
+fn pareto_front_properties() {
+    // Property: every non-front point is dominated by some front point;
+    // no front point is dominated by any point.
+    forall(
+        60,
+        |rng: &mut Pcg64| {
+            let n = rng.range(1, 30);
+            (0..n)
+                .map(|_| (rng.uniform(0.0, 10.0), rng.uniform(0.0, 10.0)))
+                .collect::<Vec<(f64, f64)>>()
+        },
+        |pts| {
+            let front = pareto_front(pts);
+            if front.is_empty() {
+                return Check::Fail("front must be non-empty".into());
+            }
+            let dominates = |a: (f64, f64), b: (f64, f64)| {
+                a.0 <= b.0 && a.1 <= b.1 && (a.0 < b.0 || a.1 < b.1)
+            };
+            for (i, &p) in pts.iter().enumerate() {
+                let on_front = front.contains(&i);
+                let dominated = pts
+                    .iter()
+                    .enumerate()
+                    .any(|(j, &q)| j != i && dominates(q, p));
+                if on_front && dominated {
+                    return Check::Fail(format!("front point {i} is dominated"));
+                }
+                if !on_front && !dominated {
+                    return Check::Fail(format!("non-front point {i} is undominated"));
+                }
+            }
+            Check::Pass
+        },
+    );
+}
+
+#[test]
+fn fig3_report_deterministic_given_seed() {
+    let bed = generate(&WorkloadSpec::paper());
+    let a = fig3_report(&bed, Duration::from_millis(60), 0.10, 9);
+    let b = fig3_report(&bed, Duration::from_millis(60), 0.10, 9);
+    assert_eq!(a.csv(), b.csv());
+}
+
+#[test]
+fn ablation_goal_priorities_no_significant_change() {
+    // §3.2.1: "the explored results do not provide any significant
+    // improvements from the default priorities". Swap priorities and
+    // verify the final balance quality stays in the same ballpark.
+    use sptlb::rebalancer::goals::{weights_from_priorities, Goal};
+    use sptlb::rebalancer::problem::Problem;
+    use sptlb::rebalancer::LocalSearch;
+    use sptlb::util::timer::Deadline;
+
+    let bed = generate(&WorkloadSpec::paper());
+    let worst_spread = |weights| {
+        let p = Problem::build(&bed.apps, &bed.tiers, bed.initial.clone(), 0.10, weights)
+            .unwrap();
+        let sol = LocalSearch::with_seed(3).solve(&p, Deadline::after_ms(120));
+        let utils = sol.projected_utilizations(&p);
+        (0..3)
+            .map(|r| {
+                sptlb::util::stats::max_abs_dev_from_mean(
+                    &utils.iter().map(|u| u.0[r]).collect::<Vec<_>>(),
+                )
+            })
+            .fold(0.0, f64::max)
+    };
+    let default = worst_spread(weights_from_priorities(&Goal::DEFAULT_ORDER));
+    let mut swapped_order = Goal::DEFAULT_ORDER;
+    swapped_order.swap(1, 2); // task balance above resource balance
+    let swapped = worst_spread(weights_from_priorities(&swapped_order));
+    // "No significant improvement": same ballpark (within 2x and 0.15
+    // absolute), not bitwise equality — reordering the decade weights
+    // shifts which objective the solver polishes last.
+    assert!(
+        (default - swapped).abs() < 0.15 && swapped < default.max(0.02) * 2.5,
+        "priority swap should not significantly change balance: {default:.4} vs {swapped:.4}"
+    );
+}

@@ -1,0 +1,228 @@
+//! Cross-module integration: the full SPTLB pipeline over every
+//! (variant × solver) combination, the coordinator's multi-round loop,
+//! config round-trips, and metadata snapshots feeding real runs.
+
+use sptlb::coordinator::{Coordinator, CoordinatorConfig};
+use sptlb::hierarchy::variants::Variant;
+use sptlb::metadata::MetadataStore;
+use sptlb::rebalancer::constraints::{validate, Violation};
+use sptlb::rebalancer::solution::SolverKind;
+use sptlb::sptlb::{Sptlb, SptlbConfig};
+use sptlb::util::json::Json;
+use sptlb::util::stats::max_abs_dev_from_mean;
+use sptlb::workload::{generate, WorkloadSpec};
+use std::time::Duration;
+
+fn spread(utils: &[sptlb::model::ResourceVec], r: usize) -> f64 {
+    max_abs_dev_from_mean(&utils.iter().map(|u| u.0[r]).collect::<Vec<_>>())
+}
+
+#[test]
+fn every_variant_solver_combination_runs_clean() {
+    let bed = generate(&WorkloadSpec::paper());
+    let store = MetadataStore::from_apps(bed.apps.clone()).unwrap();
+    for variant in Variant::ALL {
+        for solver in [SolverKind::LocalSearch, SolverKind::OptimalSearch] {
+            let cfg = SptlbConfig {
+                variant,
+                solver,
+                timeout: Duration::from_millis(120),
+                ..SptlbConfig::default()
+            };
+            let r = Sptlb::new(cfg).balance(&store, &bed.tiers, &bed.latency, &bed.initial);
+            // Hard constraints always hold; capacity may be inherited
+            // from the skewed initial state only.
+            assert!(
+                r.violations
+                    .iter()
+                    .all(|v| matches!(v, Violation::CapacityExceeded { .. })),
+                "{variant:?}/{solver:?}: {:?}",
+                r.violations
+            );
+            assert!(
+                r.solution.moves(&r.problem).len() <= r.problem.max_moves,
+                "{variant:?}/{solver:?} movement budget"
+            );
+        }
+    }
+}
+
+#[test]
+fn pipeline_beats_every_greedy_variant_on_worst_objective() {
+    // The §4.2.1 claim as an integration test: SPTLB's worst-balanced
+    // objective is better than every single-objective greedy's worst.
+    let bed = generate(&WorkloadSpec::paper());
+    let store = MetadataStore::from_apps(bed.apps.clone()).unwrap();
+    let cfg = SptlbConfig {
+        variant: Variant::NoCnst,
+        timeout: Duration::from_millis(200),
+        ..SptlbConfig::default()
+    };
+    let r = Sptlb::new(cfg).balance(&store, &bed.tiers, &bed.latency, &bed.initial);
+    let sptlb_worst = (0..3)
+        .map(|i| spread(&r.projected_utilization, i))
+        .fold(0.0, f64::max);
+
+    let problem = r.problem.clone();
+    for (kind, sol) in sptlb::greedy::all_variants(&problem, 200) {
+        let greedy_utils = sol.projected_utilizations(&problem);
+        let greedy_worst = (0..3)
+            .map(|i| spread(&greedy_utils, i))
+            .fold(0.0, f64::max);
+        assert!(
+            sptlb_worst < greedy_worst,
+            "sptlb worst {sptlb_worst:.4} must beat greedy-{kind} worst {greedy_worst:.4}"
+        );
+    }
+}
+
+#[test]
+fn coordinator_improves_and_stays_stable_over_rounds() {
+    let bed = generate(&WorkloadSpec::paper());
+    let cfg = CoordinatorConfig {
+        sptlb: SptlbConfig {
+            timeout: Duration::from_millis(60),
+            ..SptlbConfig::default()
+        },
+        drift_sigma: 0.03,
+        arrival_prob: 0.0,
+        ..CoordinatorConfig::default()
+    };
+    let mut c = Coordinator::from_testbed(cfg, bed);
+    let reports = c.run(5);
+    assert_eq!(reports.len(), 5);
+    // Once balanced, later rounds keep the fleet near-balanced despite
+    // drift: every round's post-balance worst imbalance stays below the
+    // round-1 initial imbalance.
+    let initial_worst = (0..3)
+        .map(|r| spread(&reports[0].initial_utilization, r))
+        .fold(0.0, f64::max);
+    for (i, rep) in reports.iter().enumerate() {
+        let post = (0..3)
+            .map(|r| spread(&rep.projected_utilization, r))
+            .fold(0.0, f64::max);
+        assert!(
+            post < initial_worst,
+            "round {i}: post-balance {post:.4} vs initial {initial_worst:.4}"
+        );
+    }
+}
+
+#[test]
+fn metadata_snapshot_feeds_identical_run() {
+    let bed = generate(&WorkloadSpec::small());
+    let store = MetadataStore::from_apps(bed.apps.clone()).unwrap();
+    let dir = std::env::temp_dir().join("sptlb-integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("fleet.json");
+    store.save(&path).unwrap();
+    let loaded = MetadataStore::load(&path).unwrap();
+
+    let cfg = SptlbConfig { timeout: Duration::from_millis(40), ..SptlbConfig::default() };
+    let r1 = Sptlb::new(cfg.clone()).balance(&store, &bed.tiers, &bed.latency, &bed.initial);
+    let r2 = Sptlb::new(cfg).balance(&loaded, &bed.tiers, &bed.latency, &bed.initial);
+    // Same seed + same snapshot => identical collection and problem.
+    assert_eq!(r1.problem.apps, r2.problem.apps);
+    assert_eq!(r1.problem.max_moves, r2.problem.max_moves);
+}
+
+#[test]
+fn config_json_round_trips_through_pipeline() {
+    let text = r#"{
+        "solver": "optimal",
+        "variant": "w_cnst",
+        "timeout_ms": 80,
+        "movement_fraction": 0.15,
+        "seed": 9
+    }"#;
+    let cfg = SptlbConfig::from_json(&Json::parse(text).unwrap()).unwrap();
+    assert_eq!(cfg.solver, SolverKind::OptimalSearch);
+    assert_eq!(cfg.variant, Variant::WCnst);
+
+    let bed = generate(&WorkloadSpec::small());
+    let store = MetadataStore::from_apps(bed.apps.clone()).unwrap();
+    let r = Sptlb::new(cfg).balance(&store, &bed.tiers, &bed.latency, &bed.initial);
+    // w_cnst must install the overlap policy and produce a legal result.
+    assert!(matches!(
+        r.problem.transition_policy,
+        sptlb::rebalancer::problem::TransitionPolicy::MajorityOverlap { .. }
+    ));
+    let vs = validate(&r.problem, &r.solution.assignment);
+    assert!(vs.iter().all(|v| matches!(v, Violation::CapacityExceeded { .. })));
+}
+
+#[test]
+fn movement_fraction_zero_means_no_moves() {
+    let bed = generate(&WorkloadSpec::small());
+    let store = MetadataStore::from_apps(bed.apps.clone()).unwrap();
+    let cfg = SptlbConfig {
+        movement_fraction: 0.0,
+        timeout: Duration::from_millis(40),
+        variant: Variant::NoCnst,
+        ..SptlbConfig::default()
+    };
+    let r = Sptlb::new(cfg).balance(&store, &bed.tiers, &bed.latency, &bed.initial);
+    assert_eq!(r.solution.moves(&r.problem).len(), 0);
+    assert_eq!(r.p99_latency_ms, 0.0);
+}
+
+#[test]
+fn single_app_fleet_is_handled() {
+    // Degenerate fleet: one app, three tiers — no useful moves exist.
+    let bed = generate(&WorkloadSpec::small().with_apps(3));
+    let store = MetadataStore::from_apps(bed.apps.clone()).unwrap();
+    let cfg = SptlbConfig {
+        timeout: Duration::from_millis(20),
+        variant: Variant::NoCnst,
+        ..SptlbConfig::default()
+    };
+    let r = Sptlb::new(cfg).balance(&store, &bed.tiers, &bed.latency, &bed.initial);
+    // 10% of 3 apps floors to 0 moves.
+    assert_eq!(r.solution.moves(&r.problem).len(), 0);
+}
+
+#[test]
+fn deterministic_pipeline_given_seed() {
+    let bed = generate(&WorkloadSpec::paper());
+    let store = MetadataStore::from_apps(bed.apps.clone()).unwrap();
+    let run = || {
+        let cfg = SptlbConfig {
+            timeout: Duration::from_millis(60),
+            variant: Variant::NoCnst,
+            seed: 77,
+            ..SptlbConfig::default()
+        };
+        Sptlb::new(cfg)
+            .balance(&store, &bed.tiers, &bed.latency, &bed.initial)
+            .solution
+            .assignment
+    };
+    // Anytime solvers + early convergence: same seed and inputs must
+    // yield the same mapping (solver work is deterministic; only the
+    // deadline is wall-clock, and convergence happens well before it).
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn larger_movement_budget_never_hurts() {
+    let bed = generate(&WorkloadSpec::paper());
+    let store = MetadataStore::from_apps(bed.apps.clone()).unwrap();
+    let run = |frac: f64| {
+        let cfg = SptlbConfig {
+            movement_fraction: frac,
+            variant: Variant::NoCnst,
+            timeout: Duration::from_millis(150),
+            ..SptlbConfig::default()
+        };
+        Sptlb::new(cfg)
+            .balance(&store, &bed.tiers, &bed.latency, &bed.initial)
+            .solution
+            .score
+    };
+    let tight = run(0.05);
+    let loose = run(0.30);
+    assert!(
+        loose <= tight * 1.05,
+        "30% budget ({loose:.3}) should be at least as good as 5% ({tight:.3})"
+    );
+}

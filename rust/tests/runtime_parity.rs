@@ -1,0 +1,142 @@
+//! Cross-layer parity: the AOT-compiled L1/L2 scoring artifact (Pallas →
+//! HLO text → PJRT CPU) must agree with the pure-rust scorer on real
+//! problems. This is the contract that lets LocalSearch rank candidates
+//! on the device path.
+//!
+//! Requires `make artifacts` (skips with a message if absent — CI runs
+//! artifacts first).
+
+use sptlb::model::{AppId, Assignment};
+use sptlb::rebalancer::problem::{GoalWeights, Problem};
+use sptlb::rebalancer::scoring::score_assignment;
+use sptlb::rebalancer::{BatchScorer, LocalSearch};
+use sptlb::runtime::PjrtScorer;
+use sptlb::util::prng::Pcg64;
+use sptlb::util::timer::Deadline;
+use sptlb::workload::{generate, WorkloadSpec};
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(Box::leak(dir.into_boxed_path()))
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn paper_problem(seed: u64) -> Problem {
+    let bed = generate(&WorkloadSpec::paper().with_seed(seed));
+    Problem::build(&bed.apps, &bed.tiers, bed.initial, 0.10, GoalWeights::default()).unwrap()
+}
+
+fn random_candidates(problem: &Problem, n: usize, seed: u64) -> Vec<Assignment> {
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut asg = problem.initial.clone();
+            // Perturb a handful of apps within their allowed sets.
+            for _ in 0..rng.range(1, 8) {
+                let a = rng.range(0, problem.n_apps());
+                let t = *rng.choose(&problem.apps[a].allowed).unwrap();
+                asg.set(AppId(a), t);
+            }
+            asg
+        })
+        .collect()
+}
+
+#[test]
+fn pjrt_scores_match_rust_scorer() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut scorer = PjrtScorer::from_dir(dir).expect("load artifacts");
+    let problem = paper_problem(42);
+    let candidates = random_candidates(&problem, 300, 7); // > one batch
+    let device = scorer.score(&problem, &candidates).expect("device scoring");
+    assert_eq!(device.len(), candidates.len());
+    for (i, cand) in candidates.iter().enumerate() {
+        let (cpu_score, _) = score_assignment(&problem, cand);
+        let rel = (device[i] - cpu_score).abs() / cpu_score.abs().max(1.0);
+        assert!(
+            rel < 1e-3,
+            "candidate {i}: device {} vs rust {} (rel {rel})",
+            device[i],
+            cpu_score
+        );
+    }
+    assert!(scorer.dispatches >= 2, "300 candidates need >1 dispatch of 256");
+}
+
+#[test]
+fn pjrt_ranking_agrees_with_rust_on_best_candidate() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut scorer = PjrtScorer::from_dir(dir).expect("load artifacts");
+    let problem = paper_problem(1);
+    let candidates = random_candidates(&problem, 64, 3);
+    let device = scorer.score(&problem, &candidates).unwrap();
+    let dev_best = device
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    let cpu_best = candidates
+        .iter()
+        .map(|c| score_assignment(&problem, c).0)
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap()
+        .0;
+    assert_eq!(dev_best, cpu_best, "device and rust argmin disagree");
+}
+
+#[test]
+fn local_search_batched_through_pjrt_improves() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut scorer = PjrtScorer::from_dir(dir).expect("load artifacts");
+    let problem = paper_problem(11);
+    let (initial_score, _) = score_assignment(&problem, &problem.initial.clone());
+    let sol = LocalSearch::with_seed(5).solve_batched(
+        &problem,
+        Deadline::after_ms(1500),
+        &mut scorer,
+    );
+    assert!(
+        sol.score < initial_score,
+        "batched solve {} must beat incumbent {}",
+        sol.score,
+        initial_score
+    );
+    assert!(sol.assignment.move_count_from(&problem.initial) <= problem.max_moves);
+    assert!(scorer.scored > 0, "device path must actually be used");
+}
+
+#[test]
+fn pjrt_parity_on_large_8_tier_bed() {
+    // Exercises the a512_t8 artifact variant (manifest pick by tier count).
+    let Some(dir) = artifacts_dir() else { return };
+    let mut scorer = PjrtScorer::from_dir(dir).expect("load artifacts");
+    let bed = generate(&WorkloadSpec::large());
+    let problem =
+        Problem::build(&bed.apps, &bed.tiers, bed.initial, 0.10, GoalWeights::default()).unwrap();
+    let candidates = random_candidates(&problem, 32, 5);
+    let device = scorer.score(&problem, &candidates).expect("t8 scoring");
+    for (i, cand) in candidates.iter().enumerate() {
+        let (cpu_score, _) = score_assignment(&problem, cand);
+        let rel = (device[i] - cpu_score).abs() / cpu_score.abs().max(1.0);
+        assert!(rel < 1e-3, "large bed candidate {i}: rel {rel}");
+    }
+}
+
+#[test]
+fn batch_scorer_trait_object_works() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut scorer = PjrtScorer::from_dir(dir).expect("load artifacts");
+    let problem = paper_problem(2);
+    let candidates = random_candidates(&problem, 8, 9);
+    let via_trait: &mut dyn BatchScorer = &mut scorer;
+    let scores = via_trait.score_batch(&problem, &candidates).unwrap();
+    assert_eq!(scores.len(), 8);
+    assert!(scores.iter().all(|s| s.is_finite()));
+}
