@@ -34,7 +34,12 @@ fn main() {
     let proto = CoopProtocol::new(
         region,
         host,
-        CoopConfig { max_rounds: 8, solver: SolverKind::LocalSearch, seed: 3 },
+        CoopConfig {
+            max_rounds: 8,
+            solver: SolverKind::LocalSearch,
+            seed: 3,
+            ..CoopConfig::default()
+        },
     );
 
     let allowed_before: usize = problem.apps.iter().map(|a| a.allowed.len()).sum();

@@ -8,12 +8,12 @@
 //!
 //! Run: cargo bench --bench perf_hotpath
 
-use sptlb::bench::measure;
+use sptlb::bench::{measure, worker_ladder};
 use sptlb::metadata::MetadataStore;
 use sptlb::model::{Assignment, TierId};
 use sptlb::rebalancer::problem::{GoalWeights, Problem};
 use sptlb::rebalancer::scoring::{score_assignment, ScoreState};
-use sptlb::rebalancer::{LocalSearch, OptimalSearch};
+use sptlb::rebalancer::{LocalSearch, LocalSearchConfig, OptimalSearch, ParallelConfig};
 use sptlb::sptlb::{Sptlb, SptlbConfig};
 use sptlb::util::prng::Pcg64;
 use sptlb::util::timer::Deadline;
@@ -130,4 +130,36 @@ fn main() {
     measure("local_search_400apps_8tiers", 1, 3, || {
         LocalSearch::with_seed(1).solve(&big_problem, Deadline::after_ms(3000))
     });
+
+    // --- sharded local search vs single thread ----------------------------
+    // Same seed must produce the identical solution for every worker
+    // count (the determinism contract in rust/tests/determinism.rs);
+    // workers >= 4 should converge measurably faster on the large
+    // fixture. Override the ladder with SPTLB_BENCH_WORKERS.
+    println!("\n[sharded] parallel local search, large fixture (same-seed scores must match)");
+    let mut scores: Vec<(usize, f64)> = Vec::new();
+    for workers in worker_ladder() {
+        let cfg = LocalSearchConfig {
+            seed: 1,
+            parallel: ParallelConfig::with_workers(workers),
+            ..LocalSearchConfig::default()
+        };
+        measure(&format!("local_search_large_workers_{workers}"), 1, 3, || {
+            LocalSearch::new(cfg.clone()).solve(&big_problem, Deadline::after_ms(3000))
+        });
+        // Convergence-terminated run for the score-identity check (the
+        // timed runs above may be deadline-cut on a loaded machine).
+        let sol = LocalSearch::new(cfg).solve(&big_problem, Deadline::after_ms(20_000));
+        println!(
+            "  workers={workers}: score {:.6}, converged at {:.0} ms",
+            sol.score,
+            sol.stats.converged_at.as_secs_f64() * 1e3
+        );
+        scores.push((workers, sol.score));
+    }
+    let identical = scores.windows(2).all(|w| w[0].1 == w[1].1);
+    println!(
+        "  -> same-seed score identity across worker counts: {}",
+        if identical { "OK" } else { "MISMATCH (see determinism tests)" }
+    );
 }

@@ -70,6 +70,27 @@ pub fn bench_seeds() -> Vec<u64> {
     vec![42, 1, 2]
 }
 
+/// Worker-count ladder for the sharded-vs-single-thread local-search
+/// comparison. Default `[1, 2, 4, 8]`; override with
+/// `SPTLB_BENCH_WORKERS="1,4,16"`.
+pub fn worker_ladder() -> Vec<usize> {
+    match std::env::var("SPTLB_BENCH_WORKERS") {
+        Ok(s) => {
+            let ws: Vec<usize> = s
+                .split(',')
+                .filter_map(|x| x.trim().parse().ok())
+                .filter(|&w| w >= 1)
+                .collect();
+            if ws.is_empty() {
+                vec![1, 2, 4, 8]
+            } else {
+                ws
+            }
+        }
+        Err(_) => vec![1, 2, 4, 8],
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,6 +101,15 @@ mod tests {
         assert_eq!(r.reps, 5);
         assert!(r.mean_ms >= 0.0);
         assert!(r.min_ms <= r.mean_ms + 1e-9);
+    }
+
+    #[test]
+    fn worker_ladder_default_starts_at_single_thread() {
+        if std::env::var("SPTLB_BENCH_WORKERS").is_err() {
+            let l = worker_ladder();
+            assert_eq!(l.first(), Some(&1), "baseline must be single-thread");
+            assert!(l.windows(2).all(|w| w[0] < w[1]), "ascending ladder");
+        }
     }
 
     #[test]

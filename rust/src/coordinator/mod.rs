@@ -98,6 +98,19 @@ impl ServiceMetrics {
     }
 }
 
+/// Skip-not-queue backpressure accounting: a round that overruns its tick
+/// budget causes the next ⌊elapsed / tick⌋ ticks to be *skipped* — never
+/// queued — so every round runs on fresh metrics (the paper's schedulers
+/// "run on fresh data, never on a backlog"). A round that fits its tick
+/// skips nothing.
+pub fn ticks_skipped_for(elapsed: Duration, tick: Duration) -> u32 {
+    if elapsed > tick {
+        (elapsed.as_nanos() / tick.as_nanos().max(1)) as u32
+    } else {
+        0
+    }
+}
+
 /// The leader loop.
 pub struct Coordinator {
     pub config: CoordinatorConfig,
@@ -158,12 +171,7 @@ impl Coordinator {
             self.current = report.solution.assignment.clone();
 
             // ---- backpressure accounting.
-            let elapsed = sw.elapsed();
-            let ticks_skipped = if elapsed > self.config.tick {
-                (elapsed.as_nanos() / self.config.tick.as_nanos().max(1)) as u32
-            } else {
-                0
-            };
+            let ticks_skipped = ticks_skipped_for(sw.elapsed(), self.config.tick);
 
             let worst = crate::hierarchy::variants::worst_imbalance(
                 &report.projected_utilization,
@@ -300,6 +308,40 @@ mod tests {
         c.run(1);
         assert!(c.log[0].ticks_skipped >= 1);
         assert!(c.metrics.ticks_skipped >= 1);
+    }
+
+    #[test]
+    fn ticks_skipped_semantics_pinned() {
+        // Regression pin for the skip-not-queue semantics: within-budget
+        // rounds skip nothing (including the exact-boundary case), and an
+        // overrun skips ⌊elapsed / tick⌋ subsequent ticks.
+        let ms = Duration::from_millis;
+        assert_eq!(ticks_skipped_for(ms(100), ms(250)), 0);
+        assert_eq!(ticks_skipped_for(ms(250), ms(250)), 0, "exact fit is on time");
+        assert_eq!(ticks_skipped_for(ms(251), ms(250)), 1);
+        assert_eq!(ticks_skipped_for(ms(600), ms(250)), 2);
+        assert_eq!(ticks_skipped_for(ms(2500), ms(250)), 10);
+        assert_eq!(ticks_skipped_for(Duration::ZERO, ms(250)), 0);
+    }
+
+    #[test]
+    fn generous_tick_budget_skips_nothing() {
+        let mut c = coordinator(|cfg| cfg.tick = Duration::from_secs(3600));
+        c.run(3);
+        assert_eq!(c.metrics.ticks_skipped, 0);
+        assert!(c.log.iter().all(|r| r.ticks_skipped == 0));
+    }
+
+    #[test]
+    fn skipped_tick_aggregate_matches_decision_log() {
+        // The service metric must be exactly the sum of the per-round
+        // decision-log entries — skipped ticks are accounted, not queued
+        // as extra rounds.
+        let mut c = coordinator(|cfg| cfg.tick = Duration::from_micros(50));
+        let reports = c.run(4);
+        assert_eq!(reports.len(), 4, "skipped ticks never add rounds");
+        let from_log: u32 = c.log.iter().map(|r| r.ticks_skipped).sum();
+        assert_eq!(c.metrics.ticks_skipped, from_log);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 use crate::hierarchy::host::{HostScheduler, HostVerdict};
 use crate::hierarchy::region::{RegionScheduler, RegionVerdict};
 use crate::model::App;
-use crate::rebalancer::local_search::LocalSearch;
+use crate::rebalancer::local_search::{LocalSearch, LocalSearchConfig, ParallelConfig};
 use crate::rebalancer::optimal::OptimalSearch;
 use crate::rebalancer::problem::Problem;
 use crate::rebalancer::solution::{Solution, SolverKind};
@@ -43,12 +43,19 @@ pub struct CoopOutcome {
 pub struct CoopConfig {
     pub max_rounds: u32,
     pub solver: SolverKind,
+    /// Sharded-scan parallelism forwarded to each round's LocalSearch.
+    pub parallel: ParallelConfig,
     pub seed: u64,
 }
 
 impl Default for CoopConfig {
     fn default() -> Self {
-        Self { max_rounds: 8, solver: SolverKind::LocalSearch, seed: 0xC0 }
+        Self {
+            max_rounds: 8,
+            solver: SolverKind::LocalSearch,
+            parallel: ParallelConfig::default(),
+            seed: 0xC0,
+        }
     }
 }
 
@@ -93,14 +100,18 @@ impl CoopProtocol {
             // --- SPTLB solve (warm-started from the previous proposal:
             // avoid edges only *remove* options, so the prior solution
             // minus its rejected moves is a strong, feasible start).
+            let local = |seed: u64| {
+                LocalSearch::new(LocalSearchConfig {
+                    seed,
+                    parallel: self.config.parallel,
+                    ..LocalSearchConfig::default()
+                })
+            };
             let solution = match (self.config.solver, &warm_start) {
-                (SolverKind::LocalSearch, Some(start)) => {
-                    LocalSearch::with_seed(self.config.seed + round as u64)
-                        .solve_from(problem, round_deadline, start.clone())
-                }
+                (SolverKind::LocalSearch, Some(start)) => local(self.config.seed + round as u64)
+                    .solve_from(problem, round_deadline, start.clone()),
                 (SolverKind::LocalSearch, None) => {
-                    LocalSearch::with_seed(self.config.seed + round as u64)
-                        .solve(problem, round_deadline)
+                    local(self.config.seed + round as u64).solve(problem, round_deadline)
                 }
                 (SolverKind::OptimalSearch, _) => {
                     OptimalSearch::with_seed(self.config.seed + round as u64)

@@ -13,6 +13,7 @@ use sptlb::coordinator::{Coordinator, CoordinatorConfig};
 use sptlb::hierarchy::variants::Variant;
 use sptlb::metadata::MetadataStore;
 use sptlb::rebalancer::solution::SolverKind;
+use sptlb::rebalancer::{ParallelConfig, ShardStrategy};
 use sptlb::report;
 use sptlb::sptlb::{Sptlb, SptlbConfig};
 use sptlb::util::cli::Command;
@@ -57,6 +58,28 @@ fn load_bed(scenario: &str, seed: u64) -> Result<TestBed, String> {
         .ok_or_else(|| format!("unknown scenario '{scenario}' (paper|small|large)"))
 }
 
+/// Parse the shared `--workers` / `--shard` options into a
+/// [`ParallelConfig`]; prints the error and returns the exit code on
+/// invalid input.
+fn parse_parallel(p: &sptlb::util::cli::Parsed) -> Result<ParallelConfig, i32> {
+    let workers = match p.usize_at_least("workers", 1) {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return Err(2);
+        }
+    };
+    let shard = p.get("shard").unwrap_or("apps");
+    let shard_strategy = match ShardStrategy::from_name(shard) {
+        Some(s) => s,
+        None => {
+            eprintln!("error: unknown shard strategy '{shard}' (apps|moves)");
+            return Err(2);
+        }
+    };
+    Ok(ParallelConfig { workers, shard_strategy })
+}
+
 fn with_parsed(
     cmd: Command,
     args: &[String],
@@ -83,6 +106,8 @@ fn cmd_balance(args: &[String]) -> i32 {
         .opt("variant", "manual_cnst", "integration variant (no|w|manual)")
         .opt("timeout-ms", "100", "solver deadline in ms")
         .opt("movement", "0.10", "movement fraction (C3)")
+        .opt("workers", "1", "local-search worker threads (sharded scan)")
+        .opt("shard", "apps", "move-space shard strategy (apps|moves)")
         .opt("out", "", "write the full JSON report to this file")
         .flag("json", "print the JSON report to stdout");
     with_parsed(cmd, args, |p| {
@@ -94,6 +119,10 @@ fn cmd_balance(args: &[String]) -> i32 {
                 return 2;
             }
         };
+        let parallel = match parse_parallel(&p) {
+            Ok(x) => x,
+            Err(code) => return code,
+        };
         let cfg = SptlbConfig {
             solver: SolverKind::from_name(p.get("solver").unwrap_or("local"))
                 .unwrap_or(SolverKind::LocalSearch),
@@ -101,6 +130,7 @@ fn cmd_balance(args: &[String]) -> i32 {
                 .unwrap_or(Variant::ManualCnst),
             timeout: Duration::from_millis(p.u64("timeout-ms").unwrap_or(100)),
             movement_fraction: p.f64("movement").unwrap_or(0.10),
+            parallel,
             seed,
             ..SptlbConfig::default()
         };
@@ -157,6 +187,8 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt("timeout-ms", "60", "per-round solver deadline")
         .opt("drift", "0.05", "per-round demand drift sigma")
         .opt("arrivals", "0.2", "per-round app arrival probability")
+        .opt("workers", "1", "local-search worker threads (sharded scan)")
+        .opt("shard", "apps", "move-space shard strategy (apps|moves)")
         .opt("log", "", "write the decision log JSON to this file");
     with_parsed(cmd, args, |p| {
         let bed = match load_bed(&p.str("scenario").unwrap(), p.u64("seed").unwrap()) {
@@ -166,10 +198,15 @@ fn cmd_serve(args: &[String]) -> i32 {
                 return 2;
             }
         };
+        let parallel = match parse_parallel(&p) {
+            Ok(x) => x,
+            Err(code) => return code,
+        };
         let cfg = CoordinatorConfig {
             sptlb: SptlbConfig {
                 timeout: Duration::from_millis(p.u64("timeout-ms").unwrap_or(60)),
                 seed: p.u64("seed").unwrap_or(42),
+                parallel,
                 ..SptlbConfig::default()
             },
             drift_sigma: p.f64("drift").unwrap_or(0.05),

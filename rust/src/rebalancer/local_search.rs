@@ -6,18 +6,113 @@
 //! sets (C4/C6) and forbidden transitions (C5) are enforced *by
 //! construction* — infeasible candidates are never generated.
 //!
+//! # Sharded parallel search
+//!
+//! With [`ParallelConfig::workers`] > 1 the neighborhood scan is
+//! partitioned across N persistent worker threads (`std::thread` +
+//! `mpsc` channels; no external dependencies):
+//!
+//!  * Each worker owns a shard of the move space chosen by
+//!    [`ShardStrategy`] and a full *replica* of the incremental
+//!    [`ScoreState`] (cheap to clone: two flat vectors plus scalars, see
+//!    [`ScoreState::replica`]). Every accepted move is broadcast to all
+//!    replicas over the command channels, so shards never drift from the
+//!    master state.
+//!  * Each generation, every worker scans only its shard with O(T·R)
+//!    incremental peeks and reports its shard-best improving move. The
+//!    master merges the per-shard bests and *re-validates the winner
+//!    against [`crate::rebalancer::constraints`]* before acceptance —
+//!    a defense-in-depth check on top of by-construction legality.
+//!  * Worker randomness comes from deterministic per-worker PRNG streams
+//!    derived from the run seed ([`Pcg64::stream`]`(seed, worker_id)`,
+//!    the seed ⊕ worker-id derivation — never a shared or forked
+//!    generator). Worker streams drive only intra-shard traversal order;
+//!    move *selection* uses the total order (score, app, tier), so the
+//!    solve is reproducible for any worker count: the same seed returns
+//!    an identical [`Solution`] for `workers ∈ {1, 2, 8}` (pinned by
+//!    `rust/tests/determinism.rs`).
+//!  * Perturbation restarts draw from the master stream
+//!    `Pcg64::new(seed)` only, which is likewise independent of the
+//!    worker count and shard strategy.
+//!
 //! Hot path: candidate evaluation uses [`ScoreState::peek`] (O(T·R) per
 //! candidate after the §Perf incremental-scoring optimization) or, when a
-//! [`BatchScorer`] is supplied, batches of one-hot candidates scored in a
-//! single PJRT dispatch (the L1/L2 artifact).
+//! [`BatchScorer`] is supplied, batches of one-hot candidates scored in
+//! one implementation call *per shard per generation* (one PJRT dispatch
+//! per shard on the artifact path).
 
-use crate::model::{Assignment, TierId};
+use crate::model::{AppId, Assignment, TierId};
+use crate::rebalancer::constraints::{validate, Violation};
 use crate::rebalancer::problem::Problem;
 use crate::rebalancer::scoring::ScoreState;
 use crate::rebalancer::solution::{Solution, SolveStats, SolverKind};
 use crate::rebalancer::BatchScorer;
 use crate::util::prng::Pcg64;
 use crate::util::timer::Deadline;
+use std::sync::mpsc;
+
+/// How the neighborhood move space is partitioned across workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardStrategy {
+    /// Worker `w` of `n` owns every move of apps with `app % n == w`.
+    /// Coarse but cache-friendly: a worker revisits the same apps.
+    Apps,
+    /// Worker `w` of `n` owns moves whose flat index
+    /// `app * n_tiers + tier` satisfies `idx % n == w`. Finer-grained
+    /// balance when a few apps have much larger allowed sets.
+    Moves,
+}
+
+impl ShardStrategy {
+    pub const ALL: [ShardStrategy; 2] = [ShardStrategy::Apps, ShardStrategy::Moves];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardStrategy::Apps => "apps",
+            ShardStrategy::Moves => "moves",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ShardStrategy> {
+        match s {
+            "apps" => Some(ShardStrategy::Apps),
+            "moves" => Some(ShardStrategy::Moves),
+            _ => None,
+        }
+    }
+
+    /// Does worker `w` of `n` own the (app, tier) move?
+    #[inline]
+    fn owns(self, w: usize, n: usize, app: usize, tier: TierId, n_tiers: usize) -> bool {
+        match self {
+            ShardStrategy::Apps => app % n == w,
+            ShardStrategy::Moves => (app * n_tiers + tier.0) % n == w,
+        }
+    }
+}
+
+/// Parallelism knobs for the sharded local search. `workers == 1` (the
+/// default) runs the identical generation loop inline with zero thread
+/// overhead; results are independent of `workers` by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelConfig {
+    /// Worker threads scanning the neighborhood (>= 1).
+    pub workers: usize,
+    /// Move-space partitioning across workers.
+    pub shard_strategy: ShardStrategy,
+}
+
+impl Default for ParallelConfig {
+    fn default() -> Self {
+        Self { workers: 1, shard_strategy: ShardStrategy::Apps }
+    }
+}
+
+impl ParallelConfig {
+    pub fn with_workers(workers: usize) -> Self {
+        Self { workers: workers.max(1), ..Self::default() }
+    }
+}
 
 /// LocalSearch configuration.
 #[derive(Debug, Clone)]
@@ -33,6 +128,8 @@ pub struct LocalSearchConfig {
     /// matching the paper's Figs. 4–5 where solve times sit well below
     /// the timeout). `None` keeps searching until the deadline.
     pub max_stale_restarts: Option<u32>,
+    /// Sharded-scan parallelism (see module docs).
+    pub parallel: ParallelConfig,
     pub seed: u64,
 }
 
@@ -43,8 +140,339 @@ impl Default for LocalSearchConfig {
             perturb_revert_frac: 0.5,
             perturb_kicks: 3,
             max_stale_restarts: Some(6),
+            parallel: ParallelConfig::default(),
             seed: 0xB417,
         }
+    }
+}
+
+const IMPROVE_EPS: f64 = 1e-12;
+
+/// Candidate legality under the rebalancer constraint set: C4 allowed
+/// sets are consulted by the caller (candidates are enumerated from
+/// `problem.apps[app].allowed`); this checks transitions (C5) against the
+/// incumbent tier and the movement budget (C3).
+#[inline]
+fn move_is_legal(
+    problem: &Problem,
+    current: TierId,
+    moves_remaining: usize,
+    app: usize,
+    to: TierId,
+) -> bool {
+    if current == to {
+        return false;
+    }
+    let init = problem.initial.as_slice()[app];
+    if init != to && !problem.transition_allowed(init, to) {
+        return false;
+    }
+    // Budget: moving an unmoved app consumes one unit.
+    if current == init && to != init && moves_remaining == 0 {
+        return false;
+    }
+    true
+}
+
+/// Total order over candidate moves: (score, app, tier). Ties on score
+/// resolve to the lowest (app, tier), which is what makes the reduction
+/// independent of shard traversal order and worker count.
+#[inline]
+fn better(cand: (usize, TierId, f64), incumbent: Option<(usize, TierId, f64)>) -> bool {
+    match incumbent {
+        None => true,
+        Some((ba, bt, bs)) => cand.2 < bs || (cand.2 == bs && (cand.0, cand.1) < (ba, bt)),
+    }
+}
+
+/// Scan one shard of the feasible neighborhood: peek-score every owned
+/// legal move in `order` traversal order and return the shard-best
+/// improving candidate under the total order, plus candidates scored.
+/// Shared by the inline backend (w = 0, n = 1: `owns` is always true)
+/// and the worker threads, so the selection logic cannot diverge between
+/// single-thread and sharded runs.
+fn scan_shard(
+    problem: &Problem,
+    state: &mut ScoreState<'_>,
+    order: &[usize],
+    strategy: ShardStrategy,
+    w: usize,
+    n: usize,
+    current_score: f64,
+) -> (Option<(usize, TierId, f64)>, u64) {
+    let n_tiers = problem.n_tiers();
+    let mut best: Option<(usize, TierId, f64)> = None;
+    let mut scanned = 0u64;
+    for &app in order {
+        let current = state.tier_of(app);
+        let remaining = state.moves_remaining();
+        for &t in &problem.apps[app].allowed {
+            if !strategy.owns(w, n, app, t, n_tiers)
+                || !move_is_legal(problem, current, remaining, app, t)
+            {
+                continue;
+            }
+            let s = state.peek(app, t);
+            scanned += 1;
+            if s + IMPROVE_EPS < current_score && better((app, t, s), best) {
+                best = Some((app, t, s));
+            }
+        }
+    }
+    (best, scanned)
+}
+
+/// Enumerate one shard's feasible moves in ascending (app, tier) order.
+fn enumerate_shard(
+    problem: &Problem,
+    state: &ScoreState<'_>,
+    strategy: ShardStrategy,
+    w: usize,
+    n: usize,
+) -> Vec<(usize, TierId)> {
+    let n_tiers = problem.n_tiers();
+    let mut moves = Vec::new();
+    for app in 0..problem.n_apps() {
+        let current = state.tier_of(app);
+        let remaining = state.moves_remaining();
+        for &t in &problem.apps[app].allowed {
+            if strategy.owns(w, n, app, t, n_tiers)
+                && move_is_legal(problem, current, remaining, app, t)
+            {
+                moves.push((app, t));
+            }
+        }
+    }
+    moves
+}
+
+/// Commands broadcast from the master to shard workers.
+enum Cmd {
+    /// Scan the shard and reply with the best improving move.
+    Best { current_score: f64 },
+    /// Reply with every feasible move in the shard (sorted by (app, tier)).
+    Enumerate,
+    /// Mirror an accepted move into the replica state.
+    Apply { app: usize, to: TierId },
+}
+
+/// Worker replies (the reply channel is shared; `Enumerate` replies carry
+/// the worker id so shards keep a deterministic order).
+enum Reply {
+    Best { best: Option<(usize, TierId, f64)>, scanned: u64 },
+    Moves { worker: usize, moves: Vec<(usize, TierId)> },
+}
+
+/// A shard worker: owns a replica `ScoreState` and a private
+/// `Pcg64::stream(seed, wid)` used only for traversal order.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop<'p>(
+    problem: &'p Problem,
+    mut state: ScoreState<'p>,
+    wid: usize,
+    n_workers: usize,
+    strategy: ShardStrategy,
+    seed: u64,
+    rx: mpsc::Receiver<Cmd>,
+    tx: mpsc::Sender<Reply>,
+) {
+    let mut rng = Pcg64::stream(seed, wid as u64);
+    let mut order: Vec<usize> = (0..problem.n_apps()).collect();
+
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Apply { app, to } => {
+                state.apply(app, to);
+            }
+            Cmd::Best { current_score } => {
+                // Traversal order is worker-private randomness; it cannot
+                // change the reply because selection is a total order.
+                rng.shuffle(&mut order);
+                let (best, scanned) = scan_shard(
+                    problem,
+                    &mut state,
+                    &order,
+                    strategy,
+                    wid,
+                    n_workers,
+                    current_score,
+                );
+                if tx.send(Reply::Best { best, scanned }).is_err() {
+                    break;
+                }
+            }
+            Cmd::Enumerate => {
+                let moves = enumerate_shard(problem, &state, strategy, wid, n_workers);
+                if tx.send(Reply::Moves { worker: wid, moves }).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// The neighborhood-scan backend: either inline (workers == 1) or sharded
+/// across worker threads. The search loop in `run_search` is backend-
+/// agnostic; both backends implement the same total-order selection, so
+/// outputs are identical.
+trait Scanner {
+    fn score(&self) -> f64;
+    fn assignment(&self) -> Assignment;
+    fn tier_of(&self, app: usize) -> TierId;
+    fn moves_remaining(&self) -> usize;
+    /// Score a hypothetical move against the authoritative state.
+    fn peek(&mut self, app: usize, to: TierId) -> f64;
+    /// Apply a move to the authoritative state (and any replicas).
+    fn apply(&mut self, app: usize, to: TierId);
+    /// Best improving move over the whole neighborhood under the
+    /// (score, app, tier) total order, plus candidates scanned.
+    fn best_move(&mut self, current_score: f64) -> (Option<(usize, TierId, f64)>, u64);
+    /// Feasible moves grouped per shard, each sorted by (app, tier).
+    fn feasible_shards(&mut self) -> Vec<Vec<(usize, TierId)>>;
+}
+
+/// Single-thread backend operating directly on the master state.
+struct InlineScanner<'p> {
+    problem: &'p Problem,
+    state: ScoreState<'p>,
+    /// Identity traversal order (the shared `scan_shard` takes an order
+    /// slice; inline scans have no worker stream to shuffle it).
+    order: Vec<usize>,
+}
+
+impl Scanner for InlineScanner<'_> {
+    fn score(&self) -> f64 {
+        self.state.score()
+    }
+
+    fn assignment(&self) -> Assignment {
+        self.state.assignment()
+    }
+
+    fn tier_of(&self, app: usize) -> TierId {
+        self.state.tier_of(app)
+    }
+
+    fn moves_remaining(&self) -> usize {
+        self.state.moves_remaining()
+    }
+
+    fn peek(&mut self, app: usize, to: TierId) -> f64 {
+        self.state.peek(app, to)
+    }
+
+    fn apply(&mut self, app: usize, to: TierId) {
+        self.state.apply(app, to);
+    }
+
+    fn best_move(&mut self, current_score: f64) -> (Option<(usize, TierId, f64)>, u64) {
+        scan_shard(
+            self.problem,
+            &mut self.state,
+            &self.order,
+            ShardStrategy::Apps,
+            0,
+            1,
+            current_score,
+        )
+    }
+
+    fn feasible_shards(&mut self) -> Vec<Vec<(usize, TierId)>> {
+        vec![enumerate_shard(self.problem, &self.state, ShardStrategy::Apps, 0, 1)]
+    }
+}
+
+/// Sharded backend: a master replica plus N channel-driven workers.
+struct ShardedScanner<'p> {
+    problem: &'p Problem,
+    master: ScoreState<'p>,
+    cmd_txs: Vec<mpsc::Sender<Cmd>>,
+    reply_rx: mpsc::Receiver<Reply>,
+}
+
+impl ShardedScanner<'_> {
+    fn broadcast(&self, make: impl Fn() -> Cmd) {
+        for tx in &self.cmd_txs {
+            tx.send(make()).expect("shard worker alive");
+        }
+    }
+
+    fn recv(&self) -> Reply {
+        self.reply_rx.recv().expect("shard worker reply")
+    }
+}
+
+impl Scanner for ShardedScanner<'_> {
+    fn score(&self) -> f64 {
+        self.master.score()
+    }
+
+    fn assignment(&self) -> Assignment {
+        self.master.assignment()
+    }
+
+    fn tier_of(&self, app: usize) -> TierId {
+        self.master.tier_of(app)
+    }
+
+    fn moves_remaining(&self) -> usize {
+        self.master.moves_remaining()
+    }
+
+    fn peek(&mut self, app: usize, to: TierId) -> f64 {
+        self.master.peek(app, to)
+    }
+
+    fn apply(&mut self, app: usize, to: TierId) {
+        self.master.apply(app, to);
+        self.broadcast(|| Cmd::Apply { app, to });
+    }
+
+    fn best_move(&mut self, current_score: f64) -> (Option<(usize, TierId, f64)>, u64) {
+        self.broadcast(|| Cmd::Best { current_score });
+        let mut best: Option<(usize, TierId, f64)> = None;
+        let mut scanned = 0u64;
+        for _ in 0..self.cmd_txs.len() {
+            match self.recv() {
+                Reply::Best { best: b, scanned: s } => {
+                    scanned += s;
+                    if let Some(c) = b {
+                        if better(c, best) {
+                            best = Some(c);
+                        }
+                    }
+                }
+                Reply::Moves { .. } => unreachable!("protocol: Best replies expected"),
+            }
+        }
+        // Reduction safety net: re-validate the merged winner against the
+        // full rebalancer constraint set on the authoritative state
+        // before acceptance (guards against replica drift; moves are
+        // legal by construction, so rejection here is a bug).
+        if let Some((app, t, _)) = best {
+            let mut cand = self.master.assignment();
+            cand.set(AppId(app), t);
+            let hard_violation = validate(self.problem, &cand)
+                .iter()
+                .any(|v| !matches!(v, Violation::CapacityExceeded { .. }));
+            if hard_violation {
+                debug_assert!(false, "shard winner failed constraint re-validation");
+                best = None;
+            }
+        }
+        (best, scanned)
+    }
+
+    fn feasible_shards(&mut self) -> Vec<Vec<(usize, TierId)>> {
+        self.broadcast(|| Cmd::Enumerate);
+        let mut shards: Vec<Vec<(usize, TierId)>> = vec![Vec::new(); self.cmd_txs.len()];
+        for _ in 0..self.cmd_txs.len() {
+            match self.recv() {
+                Reply::Moves { worker, moves } => shards[worker] = moves,
+                Reply::Best { .. } => unreachable!("protocol: Enumerate replies expected"),
+            }
+        }
+        shards
     }
 }
 
@@ -59,6 +487,15 @@ impl LocalSearch {
 
     pub fn with_seed(seed: u64) -> Self {
         Self::new(LocalSearchConfig { seed, ..LocalSearchConfig::default() })
+    }
+
+    /// Sharded solver with `workers` threads (see module docs).
+    pub fn sharded(seed: u64, workers: usize) -> Self {
+        Self::new(LocalSearchConfig {
+            seed,
+            parallel: ParallelConfig::with_workers(workers),
+            ..LocalSearchConfig::default()
+        })
     }
 
     /// Solve with the incremental CPU scorer.
@@ -76,7 +513,8 @@ impl LocalSearch {
 
     /// Solve, scoring candidate *batches* through the supplied scorer
     /// (the PJRT artifact path). Falls back to incremental scoring for
-    /// bookkeeping; the batch scorer ranks each pass's neighborhood.
+    /// bookkeeping; the batch scorer ranks each generation's
+    /// neighborhood, one call per shard.
     pub fn solve_batched(
         &self,
         problem: &Problem,
@@ -90,95 +528,137 @@ impl LocalSearch {
         &self,
         problem: &Problem,
         deadline: Deadline,
-        mut batch: Option<&mut dyn BatchScorer>,
+        batch: Option<&mut dyn BatchScorer>,
         start: Assignment,
     ) -> Solution {
+        let workers = self.config.parallel.workers.max(1).min(problem.n_apps().max(1));
+        if workers <= 1 {
+            let mut scanner = InlineScanner {
+                problem,
+                state: ScoreState::new(problem, start),
+                order: (0..problem.n_apps()).collect(),
+            };
+            return self.run_search(problem, deadline, batch, &mut scanner);
+        }
+        let strategy = self.config.parallel.shard_strategy;
+        let seed = self.config.seed;
+        let master = ScoreState::new(problem, start);
+        std::thread::scope(|scope| {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            let mut cmd_txs = Vec::with_capacity(workers);
+            for wid in 0..workers {
+                let (tx, rx) = mpsc::channel::<Cmd>();
+                cmd_txs.push(tx);
+                let reply_tx = reply_tx.clone();
+                let state = master.replica();
+                scope.spawn(move || {
+                    worker_loop(problem, state, wid, workers, strategy, seed, rx, reply_tx)
+                });
+            }
+            drop(reply_tx);
+            let mut scanner = ShardedScanner { problem, master, cmd_txs, reply_rx };
+            self.run_search(problem, deadline, batch, &mut scanner)
+            // scanner drops here: command channels close, workers exit,
+            // and the scope joins them before returning.
+        })
+    }
+
+    /// The backend-agnostic search loop: steepest-descent generations
+    /// with plateau-triggered perturbation restarts. All randomness that
+    /// can influence the output flows through the master stream
+    /// `Pcg64::new(seed)`; scanner-internal randomness only reorders
+    /// traversal.
+    fn run_search<S: Scanner>(
+        &self,
+        problem: &Problem,
+        deadline: Deadline,
+        mut batch: Option<&mut dyn BatchScorer>,
+        scanner: &mut S,
+    ) -> Solution {
         let mut rng = Pcg64::new(self.config.seed);
-        let mut state = ScoreState::new(problem, start);
         let mut stats = SolveStats::default();
 
-        let mut best_assignment = state.assignment();
-        let mut best_score = state.score();
+        let mut best_assignment = scanner.assignment();
+        let mut best_score = scanner.score();
         let mut converged_at = std::time::Duration::ZERO;
 
-        let mut app_order: Vec<usize> = (0..problem.n_apps()).collect();
         let mut plateau = 0u32;
         let mut stale_restarts = 0u32;
         let mut best_at_last_restart = best_score;
-        // Reusable candidate scratch for the batched path.
-        let mut cand_moves: Vec<(usize, TierId)> = Vec::new();
 
         'outer: loop {
             if deadline.expired() {
                 break;
             }
             stats.iterations += 1;
-            rng.shuffle(&mut app_order);
             let mut improved_this_pass = false;
 
             if let Some(scorer) = batch.as_deref_mut() {
-                // ---- batched pass: collect the whole feasible
-                // neighborhood, score it in PJRT dispatches, apply the
-                // best improving candidate, repeat within the pass.
+                // ---- batched pass: collect the feasible neighborhood
+                // shard by shard, score each shard in one BatchScorer
+                // call, merge, apply the best improving candidate, and
+                // repeat within the pass.
                 loop {
                     if deadline.expired() {
                         break 'outer;
                     }
-                    cand_moves.clear();
-                    let current_score = state.score();
-                    for &app in &app_order {
-                        for &t in &problem.apps[app].allowed {
-                            if self.candidate_ok(problem, &state, app, t) {
-                                cand_moves.push((app, t));
+                    let current_score = scanner.score();
+                    let shards = scanner.feasible_shards();
+                    if shards.iter().all(|s| s.is_empty()) {
+                        break;
+                    }
+                    let base = scanner.assignment();
+                    let mut winner: Option<(usize, TierId, f64)> = None;
+                    for shard in &shards {
+                        if shard.is_empty() {
+                            continue;
+                        }
+                        let candidates: Vec<Assignment> = shard
+                            .iter()
+                            .map(|&(app, t)| {
+                                let mut asg = base.clone();
+                                asg.set(AppId(app), t);
+                                asg
+                            })
+                            .collect();
+                        let scores = match scorer.score_batch(problem, &candidates) {
+                            Ok(s) => s,
+                            Err(_) => {
+                                // Scorer failure: degrade to incremental.
+                                shard.iter().map(|&(app, t)| scanner.peek(app, t)).collect()
+                            }
+                        };
+                        stats.candidates_scored += scores.len() as u64;
+                        for (&(app, t), &s) in shard.iter().zip(&scores) {
+                            // Device scorers can emit non-finite scores
+                            // (f32 overflow → inf, inf − inf → NaN); a NaN
+                            // accepted into `winner` would poison every
+                            // later comparison and end the pass early.
+                            if s.is_finite() && better((app, t, s), winner) {
+                                winner = Some((app, t, s));
                             }
                         }
                     }
-                    if cand_moves.is_empty() {
-                        break;
-                    }
-                    let candidates: Vec<Assignment> = cand_moves
-                        .iter()
-                        .map(|&(app, t)| {
-                            let mut asg = state.assignment();
-                            asg.set(crate::model::AppId(app), t);
-                            asg
-                        })
-                        .collect();
-                    let scores = match scorer.score_batch(problem, &candidates) {
-                        Ok(s) => s,
-                        Err(_) => {
-                            // Scorer failure: degrade to incremental.
-                            cand_moves
-                                .iter()
-                                .map(|&(app, t)| state.peek(app, t))
-                                .collect()
+                    match winner {
+                        Some((app, t, s)) if s + IMPROVE_EPS < current_score => {
+                            scanner.apply(app, t);
+                            improved_this_pass = true;
+                            let new_score = scanner.score();
+                            if new_score < best_score {
+                                best_score = new_score;
+                                best_assignment = scanner.assignment();
+                                converged_at = deadline.elapsed();
+                            }
                         }
-                    };
-                    stats.candidates_scored += scores.len() as u64;
-                    let (bi, bscore) = scores
-                        .iter()
-                        .enumerate()
-                        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .map(|(i, s)| (i, *s))
-                        .unwrap();
-                    if bscore + 1e-12 < current_score {
-                        let (app, t) = cand_moves[bi];
-                        state.apply(app, t);
-                        improved_this_pass = true;
-                        if state.score() < best_score {
-                            best_score = state.score();
-                            best_assignment = state.assignment();
-                            converged_at = deadline.elapsed();
-                        }
-                    } else {
-                        break;
+                        _ => break,
                     }
                 }
             } else {
                 // ---- incremental pass: GLOBAL steepest descent. Each
-                // step scans the whole feasible neighborhood with O(T·R)
-                // incremental peeks and applies the single best improving
-                // move. Global (vs per-app serial) selection matters: the
+                // step scans the whole feasible neighborhood (sharded
+                // across workers when configured) with O(T·R) incremental
+                // peeks and applies the single best improving move.
+                // Global (vs per-app serial) selection matters: the
                 // movement budget (C3) is scarce, and spending it on the
                 // globally best move per step is what lets 10% movement
                 // reach a near-balanced state (see EXPERIMENTS.md §Perf).
@@ -186,29 +666,15 @@ impl LocalSearch {
                     if deadline.expired() {
                         break 'outer;
                     }
-                    let current_score = state.score();
-                    let mut best_move: Option<(usize, TierId, f64)> = None;
-                    for &app in &app_order {
-                        let current = state.tier_of(app);
-                        for &t in &problem.apps[app].allowed {
-                            if t == current || !self.candidate_ok(problem, &state, app, t) {
-                                continue;
-                            }
-                            let s = state.peek(app, t);
-                            stats.candidates_scored += 1;
-                            if s + 1e-12 < current_score
-                                && best_move.map_or(true, |(_, _, bs)| s < bs)
-                            {
-                                best_move = Some((app, t, s));
-                            }
-                        }
-                    }
-                    let Some((app, t, s)) = best_move else { break };
-                    state.apply(app, t);
+                    let current_score = scanner.score();
+                    let (best, scanned) = scanner.best_move(current_score);
+                    stats.candidates_scored += scanned;
+                    let Some((app, t, s)) = best else { break };
+                    scanner.apply(app, t);
                     improved_this_pass = true;
                     if s < best_score {
                         best_score = s;
-                        best_assignment = state.assignment();
+                        best_assignment = scanner.assignment();
                         converged_at = deadline.elapsed();
                     }
                 }
@@ -220,7 +686,7 @@ impl LocalSearch {
                 plateau += 1;
                 if plateau >= self.config.plateau_passes {
                     // Converged? Count restarts that failed to beat best.
-                    if best_score + 1e-12 >= best_at_last_restart {
+                    if best_score + IMPROVE_EPS >= best_at_last_restart {
                         stale_restarts += 1;
                         if let Some(limit) = self.config.max_stale_restarts {
                             if stale_restarts >= limit {
@@ -233,7 +699,7 @@ impl LocalSearch {
                     best_at_last_restart = best_score;
                     // Perturbation restart: revert part of the diff and
                     // kick a few random feasible moves, keeping best.
-                    self.perturb(problem, &mut state, &mut rng);
+                    self.perturb(problem, scanner, &mut rng);
                     stats.restarts += 1;
                     plateau = 0;
                 }
@@ -248,32 +714,14 @@ impl LocalSearch {
         solution
     }
 
-    /// Candidate legality: allowed set was already consulted; checks
-    /// transitions (C5) and the movement budget (C3).
-    fn candidate_ok(&self, problem: &Problem, state: &ScoreState, app: usize, to: TierId) -> bool {
-        let current = state.tier_of(app);
-        if current == to {
-            return false;
-        }
-        let init = problem.initial.as_slice()[app];
-        if init != to && !problem.transition_allowed(init, to) {
-            return false;
-        }
-        // Budget: moving an unmoved app consumes one unit.
-        if current == init && to != init && state.moves_remaining() == 0 {
-            return false;
-        }
-        true
-    }
-
-    fn perturb(&self, problem: &Problem, state: &mut ScoreState, rng: &mut Pcg64) {
+    fn perturb<S: Scanner>(&self, problem: &Problem, scanner: &mut S, rng: &mut Pcg64) {
         // Revert a fraction of moved apps.
         let moved: Vec<usize> = (0..problem.n_apps())
-            .filter(|&a| state.tier_of(a) != problem.initial.as_slice()[a])
+            .filter(|&a| scanner.tier_of(a) != problem.initial.as_slice()[a])
             .collect();
         for &app in &moved {
             if rng.chance(self.config.perturb_revert_frac) {
-                state.apply(app, problem.initial.as_slice()[app]);
+                scanner.apply(app, problem.initial.as_slice()[app]);
             }
         }
         // Kick random feasible moves.
@@ -281,8 +729,8 @@ impl LocalSearch {
             let app = rng.range(0, problem.n_apps());
             let allowed = &problem.apps[app].allowed;
             let to = *rng.choose(allowed).unwrap();
-            if self.candidate_ok(problem, state, app, to) {
-                state.apply(app, to);
+            if move_is_legal(problem, scanner.tier_of(app), scanner.moves_remaining(), app, to) {
+                scanner.apply(app, to);
             }
         }
     }
@@ -317,6 +765,15 @@ mod tests {
     }
 
     #[test]
+    fn sharded_improves_over_incumbent() {
+        let p = paper_problem(42);
+        let (initial_score, _) = score_assignment(&p, &p.initial.clone());
+        let sol = LocalSearch::sharded(1, 4).solve(&p, Deadline::after_ms(300));
+        assert!(sol.score < initial_score);
+        assert!(sol.stats.candidates_scored > 0);
+    }
+
+    #[test]
     fn solution_is_feasible() {
         let p = paper_problem(42);
         let sol = LocalSearch::with_seed(2).solve(&p, Deadline::after_ms(300));
@@ -328,6 +785,25 @@ mod tests {
             "violations: {vs:?}"
         );
         assert!(sol.assignment.move_count_from(&p.initial) <= p.max_moves);
+    }
+
+    #[test]
+    fn sharded_solution_is_feasible() {
+        let p = paper_problem(42);
+        for strategy in ShardStrategy::ALL {
+            let cfg = LocalSearchConfig {
+                seed: 2,
+                parallel: ParallelConfig { workers: 3, shard_strategy: strategy },
+                ..LocalSearchConfig::default()
+            };
+            let sol = LocalSearch::new(cfg).solve(&p, Deadline::after_ms(200));
+            let vs = validate(&p, &sol.assignment);
+            assert!(
+                vs.iter().all(|v| matches!(v, Violation::CapacityExceeded { .. })),
+                "{strategy:?}: {vs:?}"
+            );
+            assert!(sol.assignment.move_count_from(&p.initial) <= p.max_moves);
+        }
     }
 
     #[test]
@@ -349,6 +825,9 @@ mod tests {
     fn anytime_zero_deadline_returns_incumbent() {
         let p = paper_problem(42);
         let sol = LocalSearch::with_seed(4).solve(&p, Deadline::after_ms(0));
+        assert_eq!(sol.assignment, p.initial);
+        // Sharded path honors the deadline identically.
+        let sol = LocalSearch::sharded(4, 4).solve(&p, Deadline::after_ms(0));
         assert_eq!(sol.assignment, p.initial);
     }
 
@@ -414,5 +893,31 @@ mod tests {
             .unwrap();
         let sol = LocalSearch::with_seed(8).solve(&p, Deadline::after_ms(100));
         assert!(is_feasible(&p, &sol.assignment));
+    }
+
+    #[test]
+    fn shard_strategy_names_roundtrip() {
+        for s in ShardStrategy::ALL {
+            assert_eq!(ShardStrategy::from_name(s.name()), Some(s));
+        }
+        assert_eq!(ShardStrategy::from_name("zzz"), None);
+    }
+
+    #[test]
+    fn shard_ownership_partitions_move_space() {
+        // Every (app, tier) move is owned by exactly one worker.
+        let (n_apps, n_tiers) = (37, 5);
+        for strategy in ShardStrategy::ALL {
+            for n in [1usize, 2, 3, 8] {
+                for app in 0..n_apps {
+                    for t in 0..n_tiers {
+                        let owners = (0..n)
+                            .filter(|&w| strategy.owns(w, n, app, TierId(t), n_tiers))
+                            .count();
+                        assert_eq!(owners, 1, "{strategy:?} n={n} app={app} t={t}");
+                    }
+                }
+            }
+        }
     }
 }

@@ -14,7 +14,7 @@ pub mod solution;
 
 pub use constraints::{is_feasible, validate, Violation};
 pub use goals::{weights_from_priorities, Goal};
-pub use local_search::{LocalSearch, LocalSearchConfig};
+pub use local_search::{LocalSearch, LocalSearchConfig, ParallelConfig, ShardStrategy};
 pub use optimal::{OptimalSearch, OptimalSearchConfig};
 pub use problem::{GoalWeights, Problem, ProblemApp, ProblemTier};
 pub use scoring::{score_assignment, Breakdown, ScoreState};

@@ -63,12 +63,23 @@ pub struct ScoreState<'p> {
     crit_total: f64,
 }
 
-/// Undo token for [`ScoreState::apply`].
+/// Undo token for [`ScoreState::apply`]: carries the exact pre-move
+/// scalars so [`ScoreState::revert`] restores the state *bitwise*.
+/// Recomputing the inverse arithmetically (`(x - d) + d`) is not exactly
+/// invertible under IEEE-754; snapshot-restore is what keeps
+/// [`ScoreState::peek`] side-effect-free at the bit level — the property
+/// the sharded LocalSearch's per-worker replicas rely on to stay in
+/// lockstep with the master regardless of which shard peeks what.
 #[derive(Debug, Clone, Copy)]
 pub struct Applied {
     pub app: usize,
     pub from: TierId,
     pub to: TierId,
+    prev_load_from: ResourceVec,
+    prev_load_to: ResourceVec,
+    prev_moved_tasks: f64,
+    prev_moved_crit: f64,
+    prev_n_moved: usize,
 }
 
 impl<'p> ScoreState<'p> {
@@ -115,6 +126,15 @@ impl<'p> ScoreState<'p> {
         Assignment::new(self.tier_of.clone())
     }
 
+    /// A per-shard replica of this state for the sharded LocalSearch
+    /// workers. Cloning is cheap by design — two flat vectors (`tier_of`:
+    /// A×8 bytes, `loads`: T×24 bytes) plus a handful of scalars; no
+    /// nested allocations — so every worker can own one and mirror the
+    /// master's `apply` calls in O(1) per move.
+    pub fn replica(&self) -> ScoreState<'p> {
+        self.clone()
+    }
+
     pub fn tier_of(&self, app: usize) -> TierId {
         self.tier_of[app]
     }
@@ -135,8 +155,18 @@ impl<'p> ScoreState<'p> {
     /// Apply a move; O(1). Caller must have checked `placement_allowed`.
     pub fn apply(&mut self, app: usize, to: TierId) -> Applied {
         let from = self.tier_of[app];
+        let token = Applied {
+            app,
+            from,
+            to,
+            prev_load_from: self.loads[from.0],
+            prev_load_to: self.loads[to.0],
+            prev_moved_tasks: self.moved_tasks,
+            prev_moved_crit: self.moved_crit,
+            prev_n_moved: self.n_moved,
+        };
         if from == to {
-            return Applied { app, from, to };
+            return token;
         }
         let a = &self.problem.apps[app];
         let init = self.problem.initial.as_slice()[app];
@@ -153,12 +183,19 @@ impl<'p> ScoreState<'p> {
             self.n_moved -= 1;
         }
         self.tier_of[app] = to;
-        Applied { app, from, to }
+        token
     }
 
-    /// Revert a previously applied move.
+    /// Revert a previously applied move, restoring the exact pre-move
+    /// state from the token's snapshots. Only valid for the most recent
+    /// un-reverted `apply` (the peek discipline).
     pub fn revert(&mut self, token: Applied) {
-        self.apply(token.app, token.from);
+        self.tier_of[token.app] = token.from;
+        self.loads[token.from.0] = token.prev_load_from;
+        self.loads[token.to.0] = token.prev_load_to;
+        self.moved_tasks = token.prev_moved_tasks;
+        self.moved_crit = token.prev_moved_crit;
+        self.n_moved = token.prev_n_moved;
     }
 
     /// Utilization of tier `t`, resource `r` (zero-capacity dims map to
@@ -295,6 +332,29 @@ mod tests {
             let _ = state.peek(app, t);
         }
         assert_eq!(state.score(), before);
+    }
+
+    #[test]
+    fn peek_is_bitwise_pure() {
+        // Snapshot-restore reverts must leave every float bit-identical —
+        // arithmetic undo ((x - d) + d) would not. This is the property
+        // the sharded LocalSearch's determinism contract stands on.
+        let p = paper_problem();
+        let mut state = ScoreState::new(&p, p.initial.clone());
+        let mut rng = Pcg64::new(9);
+        for _ in 0..200 {
+            let app = rng.range(0, p.n_apps());
+            let to = *rng.choose(&p.apps[app].allowed).unwrap();
+            if rng.chance(0.3) {
+                state.apply(app, to);
+            } else {
+                let before_loads = state.loads().to_vec();
+                let before_score = state.score();
+                let _ = state.peek(app, to);
+                assert_eq!(state.loads(), &before_loads[..], "bitwise loads");
+                assert_eq!(state.score(), before_score, "bitwise score");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,230 @@
+//! The real PJRT-backed scorer (requires the vendored `xla` bindings;
+//! enabled by the `pjrt` cargo feature). See the module docs on
+//! [`crate::runtime`] for the artifact contract.
+
+use super::{problem_fingerprint, ArtifactVariant, Manifest};
+use crate::model::{Assignment, NUM_RESOURCES};
+use crate::rebalancer::problem::Problem;
+use crate::rebalancer::BatchScorer;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// A compiled scoring executable for one artifact variant.
+struct CompiledVariant {
+    spec: ArtifactVariant,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Problem-side input literals, cached across `score` calls (§Perf: the
+/// LocalSearch hot loop scores hundreds of neighborhoods against the SAME
+/// problem; rebuilding six literals per dispatch wasted ~20% of the
+/// device-path time).
+struct CachedProblem {
+    fingerprint: u64,
+    a_pad: usize,
+    res: xla::Literal,
+    cap: xla::Literal,
+    ideal: xla::Literal,
+    init: xla::Literal,
+    crit: xla::Literal,
+    weights: xla::Literal,
+}
+
+/// PJRT-backed batch scorer. Compiles lazily per (tiers, apps) shape and
+/// caches the executable for the process lifetime.
+pub struct PjrtScorer {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: Vec<CompiledVariant>,
+    cached: Option<CachedProblem>,
+    /// Total PJRT dispatches (perf accounting).
+    pub dispatches: u64,
+    /// Total candidates scored through the device path.
+    pub scored: u64,
+}
+
+impl PjrtScorer {
+    /// Create from an artifact directory (default: `artifacts/`).
+    pub fn from_dir(dir: &Path) -> Result<PjrtScorer> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(PjrtScorer {
+            client,
+            manifest,
+            compiled: Vec::new(),
+            cached: None,
+            dispatches: 0,
+            scored: 0,
+        })
+    }
+
+    pub fn from_default_dir() -> Result<PjrtScorer> {
+        Self::from_dir(Path::new("artifacts"))
+    }
+
+    fn ensure_compiled(&mut self, n_apps: usize, n_tiers: usize) -> Result<usize> {
+        if let Some(i) = self
+            .compiled
+            .iter()
+            .position(|c| c.spec.tiers == n_tiers && c.spec.apps >= n_apps)
+        {
+            return Ok(i);
+        }
+        let spec = self
+            .manifest
+            .pick(n_apps, n_tiers)
+            .ok_or_else(|| {
+                anyhow!("no artifact variant fits A={n_apps} T={n_tiers}; re-run aot.py with --variants")
+            })?
+            .clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("loading {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("XLA compile")?;
+        log::info!(
+            "compiled artifact {} (A={} T={} B={})",
+            spec.name,
+            spec.apps,
+            spec.tiers,
+            spec.batch
+        );
+        self.compiled.push(CompiledVariant { spec, exe });
+        Ok(self.compiled.len() - 1)
+    }
+
+    /// Score candidates through the device artifact. Returns one f64
+    /// score per candidate (f32 on device; semantics of `ref.py`).
+    pub fn score(&mut self, problem: &Problem, candidates: &[Assignment]) -> Result<Vec<f64>> {
+        if candidates.is_empty() {
+            return Ok(Vec::new());
+        }
+        let n_apps = problem.n_apps();
+        let n_tiers = problem.n_tiers();
+        let ci = self.ensure_compiled(n_apps, n_tiers)?;
+        let (a_pad, b_cap) = {
+            let spec = &self.compiled[ci].spec;
+            (spec.apps, spec.batch)
+        };
+
+        // Problem-side tensors: cached across calls for the same problem.
+        let fp = problem_fingerprint(problem);
+        let cache_ok = matches!(&self.cached, Some(c) if c.fingerprint == fp && c.a_pad == a_pad);
+        if !cache_ok {
+            let res = self.res_literal(problem, a_pad)?;
+            let cap = self.tier_matrix_literal(problem, n_tiers, |t| t.capacity.as_f32())?;
+            let ideal =
+                self.tier_matrix_literal(problem, n_tiers, |t| t.ideal_utilization.as_f32())?;
+            let init = self.onehot_literal(problem.initial.as_slice(), a_pad, n_tiers)?;
+            let crit = {
+                let mut v = vec![0f32; a_pad];
+                for (i, app) in problem.apps.iter().enumerate() {
+                    v[i] = app.criticality as f32;
+                }
+                xla::Literal::vec1(&v).reshape(&[a_pad as i64])?
+            };
+            let weights = {
+                let w64 = problem.weights.as_array();
+                let w: Vec<f32> = w64.iter().map(|&x| x as f32).collect();
+                xla::Literal::vec1(&w).reshape(&[w.len() as i64])?
+            };
+            self.cached =
+                Some(CachedProblem { fingerprint: fp, a_pad, res, cap, ideal, init, crit, weights });
+        }
+
+        let mut out = Vec::with_capacity(candidates.len());
+        for chunk in candidates.chunks(b_cap) {
+            // Pad the chunk to B by replicating the last candidate
+            // (padding rows are discarded below).
+            let mut assign = vec![0f32; b_cap * a_pad * n_tiers];
+            for b in 0..b_cap {
+                let cand = chunk.get(b).unwrap_or(chunk.last().unwrap());
+                debug_assert_eq!(cand.n_apps(), n_apps);
+                let base = b * a_pad * n_tiers;
+                for (i, t) in cand.as_slice().iter().enumerate() {
+                    assign[base + i * n_tiers + t.0] = 1.0;
+                }
+                // Padding apps: pinned to tier 0 in both init and cand.
+                for i in n_apps..a_pad {
+                    assign[base + i * n_tiers] = 1.0;
+                }
+            }
+            let assign = xla::Literal::vec1(&assign).reshape(&[
+                b_cap as i64,
+                a_pad as i64,
+                n_tiers as i64,
+            ])?;
+
+            let c = self.cached.as_ref().expect("cache populated above");
+            let result = self.compiled[ci]
+                .exe
+                .execute::<xla::Literal>(&[
+                    assign,
+                    c.res.clone(),
+                    c.cap.clone(),
+                    c.ideal.clone(),
+                    c.init.clone(),
+                    c.crit.clone(),
+                    c.weights.clone(),
+                ])
+                .context("PJRT execute")?[0][0]
+                .to_literal_sync()?;
+            let outputs = result.to_tuple()?;
+            let scores = outputs[0].to_vec::<f32>()?;
+            self.dispatches += 1;
+            self.scored += chunk.len() as u64;
+            out.extend(scores[..chunk.len()].iter().map(|&s| s as f64));
+        }
+        Ok(out)
+    }
+
+    fn res_literal(&self, problem: &Problem, a_pad: usize) -> Result<xla::Literal> {
+        let mut v = vec![0f32; a_pad * NUM_RESOURCES];
+        for (i, app) in problem.apps.iter().enumerate() {
+            let d = app.demand.as_f32();
+            v[i * NUM_RESOURCES..(i + 1) * NUM_RESOURCES].copy_from_slice(&d);
+        }
+        Ok(xla::Literal::vec1(&v).reshape(&[a_pad as i64, NUM_RESOURCES as i64])?)
+    }
+
+    fn tier_matrix_literal(
+        &self,
+        problem: &Problem,
+        n_tiers: usize,
+        f: impl Fn(&crate::rebalancer::problem::ProblemTier) -> [f32; NUM_RESOURCES],
+    ) -> Result<xla::Literal> {
+        let mut v = vec![0f32; n_tiers * NUM_RESOURCES];
+        for (t, tier) in problem.tiers.iter().enumerate() {
+            v[t * NUM_RESOURCES..(t + 1) * NUM_RESOURCES].copy_from_slice(&f(tier));
+        }
+        Ok(xla::Literal::vec1(&v).reshape(&[n_tiers as i64, NUM_RESOURCES as i64])?)
+    }
+
+    fn onehot_literal(
+        &self,
+        tiers: &[crate::model::TierId],
+        a_pad: usize,
+        n_tiers: usize,
+    ) -> Result<xla::Literal> {
+        let mut v = vec![0f32; a_pad * n_tiers];
+        for (i, t) in tiers.iter().enumerate() {
+            v[i * n_tiers + t.0] = 1.0;
+        }
+        for i in tiers.len()..a_pad {
+            v[i * n_tiers] = 1.0; // padding apps on tier 0
+        }
+        Ok(xla::Literal::vec1(&v).reshape(&[a_pad as i64, n_tiers as i64])?)
+    }
+}
+
+impl BatchScorer for PjrtScorer {
+    fn score_batch(
+        &mut self,
+        problem: &Problem,
+        candidates: &[Assignment],
+    ) -> Result<Vec<f64>> {
+        self.score(problem, candidates)
+    }
+}

@@ -3,6 +3,7 @@
 
 use crate::hierarchy::variants::Variant;
 use crate::rebalancer::goals::{weights_from_priorities, Goal};
+use crate::rebalancer::local_search::{ParallelConfig, ShardStrategy};
 use crate::rebalancer::problem::GoalWeights;
 use crate::rebalancer::solution::SolverKind;
 use crate::util::json::Json;
@@ -29,6 +30,8 @@ pub struct SptlbConfig {
     pub hosts_per_tier: usize,
     /// Protocol iteration limit (Fig. 2: "number of iterations limit").
     pub max_coop_rounds: u32,
+    /// Sharded local-search parallelism (workers + shard strategy).
+    pub parallel: ParallelConfig,
     pub seed: u64,
 }
 
@@ -44,6 +47,7 @@ impl Default for SptlbConfig {
             proximity_budget_ms: crate::hierarchy::variants::DEFAULT_PROXIMITY_MS,
             hosts_per_tier: crate::hierarchy::variants::DEFAULT_HOSTS_PER_TIER,
             max_coop_rounds: 8,
+            parallel: ParallelConfig::default(),
             seed: 42,
         }
     }
@@ -79,6 +83,8 @@ impl SptlbConfig {
             ("proximity_budget_ms", Json::num(self.proximity_budget_ms)),
             ("hosts_per_tier", Json::num(self.hosts_per_tier as f64)),
             ("max_coop_rounds", Json::num(self.max_coop_rounds as f64)),
+            ("workers", Json::num(self.parallel.workers as f64)),
+            ("shard_strategy", Json::str(self.parallel.shard_strategy.name())),
             ("seed", Json::num(self.seed as f64)),
         ])
     }
@@ -139,6 +145,16 @@ impl SptlbConfig {
         if let Some(r) = j.get("max_coop_rounds").as_usize() {
             cfg.max_coop_rounds = r as u32;
         }
+        if let Some(w) = j.get("workers").as_usize() {
+            if w == 0 {
+                return Err(ConfigError::Invalid { field: "workers", value: "0".into() });
+            }
+            cfg.parallel.workers = w;
+        }
+        if let Some(s) = j.get("shard_strategy").as_str() {
+            cfg.parallel.shard_strategy = ShardStrategy::from_name(s)
+                .ok_or(ConfigError::Invalid { field: "shard_strategy", value: s.into() })?;
+        }
         if let Some(s) = j.get("seed").as_u64() {
             cfg.seed = s;
         }
@@ -166,6 +182,7 @@ mod tests {
         assert_eq!(back.variant, cfg.variant);
         assert_eq!(back.goal_order, cfg.goal_order);
         assert_eq!(back.weights(), cfg.weights());
+        assert_eq!(back.parallel, cfg.parallel);
     }
 
     #[test]
@@ -185,10 +202,20 @@ mod tests {
             r#"{"variant":"zzz"}"#,
             r#"{"hosts_per_tier":0}"#,
             r#"{"goal_order":["move_cost"]}"#,
+            r#"{"workers":0}"#,
+            r#"{"shard_strategy":"diagonal"}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(SptlbConfig::from_json(&j).is_err(), "{bad} must fail");
         }
+    }
+
+    #[test]
+    fn parallel_knobs_parse() {
+        let j = Json::parse(r#"{"workers":8,"shard_strategy":"moves"}"#).unwrap();
+        let cfg = SptlbConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.parallel.workers, 8);
+        assert_eq!(cfg.parallel.shard_strategy, ShardStrategy::Moves);
     }
 
     #[test]

@@ -11,7 +11,7 @@ use crate::network::{solution_p99_latency_ms, LatencyMatrix};
 use crate::rebalancer::constraints::{validate, Violation};
 use crate::rebalancer::problem::{Problem, TransitionPolicy};
 use crate::rebalancer::solution::Solution;
-use crate::rebalancer::{LocalSearch, OptimalSearch, SolverKind};
+use crate::rebalancer::{LocalSearch, LocalSearchConfig, OptimalSearch, SolverKind};
 use crate::sptlb::config::SptlbConfig;
 use crate::util::json::Json;
 use crate::util::prng::Pcg64;
@@ -157,6 +157,7 @@ impl Sptlb {
                     CoopConfig {
                         max_rounds: self.config.max_coop_rounds,
                         solver: self.config.solver,
+                        parallel: self.config.parallel,
                         seed: self.config.seed,
                     },
                 );
@@ -187,9 +188,12 @@ impl Sptlb {
 
     fn solve_plain(&self, problem: &Problem, deadline: Deadline) -> Solution {
         match self.config.solver {
-            SolverKind::LocalSearch => {
-                LocalSearch::with_seed(self.config.seed).solve(problem, deadline)
-            }
+            SolverKind::LocalSearch => LocalSearch::new(LocalSearchConfig {
+                seed: self.config.seed,
+                parallel: self.config.parallel,
+                ..LocalSearchConfig::default()
+            })
+            .solve(problem, deadline),
             SolverKind::OptimalSearch => {
                 OptimalSearch::with_seed(self.config.seed).solve(problem, deadline)
             }
@@ -242,6 +246,23 @@ mod tests {
                 "{name} must not get worse"
             );
         }
+    }
+
+    #[test]
+    fn sharded_pipeline_runs_clean() {
+        use crate::rebalancer::{ParallelConfig, ShardStrategy};
+        let bed = generate(&WorkloadSpec::paper());
+        let store = MetadataStore::from_apps(bed.apps.clone()).unwrap();
+        let cfg = SptlbConfig {
+            variant: Variant::ManualCnst,
+            timeout: Duration::from_millis(120),
+            parallel: ParallelConfig { workers: 4, shard_strategy: ShardStrategy::Moves },
+            ..SptlbConfig::default()
+        };
+        let r = Sptlb::new(cfg).balance(&store, &bed.tiers, &bed.latency, &bed.initial);
+        assert!(r.coop.is_some(), "manual_cnst must run the protocol");
+        assert!(r.violations.iter().all(|v| matches!(v, Violation::CapacityExceeded { .. })));
+        assert!(r.solution.moves(&r.problem).len() <= r.problem.max_moves);
     }
 
     #[test]

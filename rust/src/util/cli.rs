@@ -183,6 +183,20 @@ impl Parsed {
         self.parse_as(name)
     }
 
+    /// Typed accessor with an inclusive lower bound — for counts that
+    /// must be positive (e.g. `--workers`).
+    pub fn usize_at_least(&self, name: &str, min: usize) -> Result<usize, CliError> {
+        let v = self.usize(name)?;
+        if v < min {
+            return Err(CliError::InvalidValue {
+                key: name.to_string(),
+                value: v.to_string(),
+                why: format!("must be >= {min}"),
+            });
+        }
+        Ok(v)
+    }
+
     pub fn f64(&self, name: &str) -> Result<f64, CliError> {
         self.parse_as(name)
     }
@@ -253,6 +267,18 @@ mod tests {
     fn typed_parse_error() {
         let p = cmd().parse(&args(&["--seed", "abc"])).unwrap();
         assert!(matches!(p.u64("seed"), Err(CliError::InvalidValue { .. })));
+    }
+
+    #[test]
+    fn usize_at_least_enforces_bound() {
+        let c = Command::new("x", "y").opt("workers", "1", "worker threads");
+        let p = c.parse(&args(&["--workers", "4"])).unwrap();
+        assert_eq!(p.usize_at_least("workers", 1).unwrap(), 4);
+        let p = c.parse(&args(&["--workers", "0"])).unwrap();
+        assert!(matches!(
+            p.usize_at_least("workers", 1),
+            Err(CliError::InvalidValue { .. })
+        ));
     }
 
     #[test]

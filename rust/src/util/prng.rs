@@ -49,6 +49,21 @@ impl Pcg64 {
         Pcg64::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
     }
 
+    /// The `stream_id`-th deterministic substream of `seed` — the
+    /// seed ⊕ worker-id derivation used by the sharded LocalSearch.
+    ///
+    /// Unlike [`Pcg64::fork`], this never advances a parent generator:
+    /// `stream(seed, w)` yields the same sequence no matter how many
+    /// other streams exist or in which order (or on which thread) they
+    /// are created. That is the property that makes per-worker
+    /// randomness reproducible regardless of the worker count. The id is
+    /// golden-ratio spread before the SplitMix expansion so nearby ids
+    /// produce unrelated streams, and offset by one so `stream(seed, 0)`
+    /// does not collide with the master stream `Pcg64::new(seed)`.
+    pub fn stream(seed: u64, stream_id: u64) -> Pcg64 {
+        Pcg64::new(seed ^ stream_id.wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
         let rot = (self.state >> 122) as u32;
@@ -216,6 +231,38 @@ mod tests {
         assert_eq!(counts[0], 0);
         let ratio = counts[2] as f64 / counts[1] as f64;
         assert!((ratio - 3.0).abs() < 0.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn stream_is_deterministic_and_order_free() {
+        // The same (seed, id) pair always yields the same sequence …
+        let a: Vec<u64> = {
+            let mut s = Pcg64::stream(99, 3);
+            (0..32).map(|_| s.next_u64()).collect()
+        };
+        // … regardless of how many sibling streams were created first.
+        for _ in 0..5 {
+            let _ = Pcg64::stream(99, 0);
+            let _ = Pcg64::stream(99, 7);
+        }
+        let b: Vec<u64> = {
+            let mut s = Pcg64::stream(99, 3);
+            (0..32).map(|_| s.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stream_ids_are_decorrelated() {
+        let mut a = Pcg64::stream(5, 0);
+        let mut b = Pcg64::stream(5, 1);
+        let mut master = Pcg64::new(5);
+        let same_ab = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same_ab, 0);
+        // stream 0 must not shadow the master stream for the same seed.
+        let mut a = Pcg64::stream(5, 0);
+        let same_am = (0..64).filter(|_| a.next_u64() == master.next_u64()).count();
+        assert_eq!(same_am, 0);
     }
 
     #[test]

@@ -1,0 +1,166 @@
+//! Integration suite for the §3.4 co-operation protocol (Fig. 2):
+//! SPTLB proposes, the region/host schedulers vet, rejections come back
+//! as avoid constraints, and the loop converges.
+//!
+//! What is pinned here:
+//!  * rejected moves become avoid constraints — the constraint store
+//!    only ever *grows* (allowed sets shrink, forbidden transitions
+//!    accumulate), and `RoundTrace.avoid_edges_added` accounts for every
+//!    addition exactly;
+//!  * the cumulative avoid-edge count is monotone over rounds;
+//!  * `fully_accepted` holds on an unconstrained fixture;
+//!  * the protocol converges within the round limit and returns a
+//!    solution whose own moves re-vet clean.
+
+use sptlb::hierarchy::host::HostScheduler;
+use sptlb::hierarchy::protocol::{CoopConfig, CoopOutcome, CoopProtocol};
+use sptlb::hierarchy::region::{RegionScheduler, RegionVerdict};
+use sptlb::model::{App, Tier};
+use sptlb::rebalancer::constraints::{validate, Violation};
+use sptlb::rebalancer::problem::{GoalWeights, Problem};
+use sptlb::rebalancer::scoring::score_assignment;
+use sptlb::rebalancer::ParallelConfig;
+use sptlb::util::timer::Deadline;
+use sptlb::workload::{generate, WorkloadSpec};
+
+fn setup(proximity_ms: f64) -> (Problem, Vec<App>, Vec<Tier>, CoopProtocol) {
+    let bed = generate(&WorkloadSpec::paper());
+    let problem = Problem::build(
+        &bed.apps,
+        &bed.tiers,
+        bed.initial.clone(),
+        0.10,
+        GoalWeights::default(),
+    )
+    .unwrap();
+    let region = RegionScheduler::new(bed.latency.clone(), proximity_ms);
+    let host = HostScheduler::uniform(&bed.tiers, 16);
+    let proto = CoopProtocol::new(region, host, CoopConfig::default());
+    (problem, bed.apps, bed.tiers, proto)
+}
+
+fn total_allowed(p: &Problem) -> usize {
+    p.apps.iter().map(|a| a.allowed.len()).sum()
+}
+
+fn assert_revets_clean(
+    out: &CoopOutcome,
+    p: &Problem,
+    apps: &[App],
+    tiers: &[Tier],
+    proto: &CoopProtocol,
+) {
+    let moves = out.solution.moves(p);
+    let verdicts = proto.region.vet(&moves, apps, tiers);
+    assert!(
+        verdicts.iter().all(|(_, v)| matches!(v, RegionVerdict::Accept)),
+        "returned solution must re-vet clean: {verdicts:?}"
+    );
+}
+
+#[test]
+fn unconstrained_fixture_fully_accepts() {
+    // A proximity budget no move can violate: the first substantive
+    // proposal must be accepted by both lower-level schedulers.
+    let (mut p, apps, tiers, proto) = setup(1e6);
+    let (initial_score, _) = score_assignment(&p, &p.initial.clone());
+    let out = proto.run(&mut p, &apps, &tiers, Deadline::after_ms(500));
+    assert!(out.fully_accepted, "unconstrained fixture must fully accept");
+    let last = out.rounds.last().unwrap();
+    assert_eq!(last.region_rejects, 0);
+    assert_eq!(last.host_rejects, 0);
+    assert!(last.proposed_moves > 0, "acceptance must not be vacuous");
+    assert!(out.solution.score <= initial_score);
+    assert_revets_clean(&out, &p, &apps, &tiers, &proto);
+}
+
+#[test]
+fn rejected_moves_become_avoid_constraints() {
+    // An unsatisfiable proximity budget (< 0, while latencies are >= 0)
+    // rejects every transition-passing move, so rejections are guaranteed
+    // for any non-empty proposal. Every rejection must land in the
+    // problem's constraint store, and the per-round trace must account
+    // for each addition exactly: Σ avoid_edges_added == (allowed-set
+    // shrinkage) + (forbidden transitions added).
+    let (mut p, apps, tiers, proto) = setup(-1.0);
+    let allowed_before = total_allowed(&p);
+    assert!(p.forbidden_transitions.is_empty(), "fixture starts unconstrained");
+    let out = proto.run(&mut p, &apps, &tiers, Deadline::after_ms(800));
+    let rejects: usize = out
+        .rounds
+        .iter()
+        .map(|r| r.region_rejects + r.host_rejects)
+        .sum();
+    assert!(rejects > 0, "an unsatisfiable proximity budget must reject something");
+
+    let added: usize = out.rounds.iter().map(|r| r.avoid_edges_added).sum();
+    let shrink = allowed_before - total_allowed(&p);
+    assert_eq!(
+        added,
+        shrink + p.forbidden_transitions.len(),
+        "every traced avoid edge must exist in the constraint store"
+    );
+    assert!(added > 0, "rejections must materialize as constraints");
+}
+
+#[test]
+fn avoid_edge_count_is_monotone_over_rounds() {
+    let (mut p, apps, tiers, proto) = setup(8.0);
+    let allowed_before = total_allowed(&p);
+    let out = proto.run(&mut p, &apps, &tiers, Deadline::after_ms(800));
+    for (i, r) in out.rounds.iter().enumerate() {
+        assert_eq!(r.round as usize, i, "rounds are traced in order");
+    }
+    // Constraints are only ever added, never retracted (§3.4's one-way
+    // feedback): the final store growth must account for every traced
+    // addition. A round that retracted edges would leave the store
+    // smaller than the trace claims.
+    let traced: usize = out.rounds.iter().map(|r| r.avoid_edges_added).sum();
+    let shrink = allowed_before - total_allowed(&p);
+    assert_eq!(
+        traced,
+        shrink + p.forbidden_transitions.len(),
+        "traced avoid edges must all persist in the constraint store"
+    );
+    // And the solver never places an app on an avoided tier: the final
+    // solution is clean against the (shrunken) allowed sets.
+    let vs = validate(&p, &out.solution.assignment);
+    assert!(
+        vs.iter().all(|v| matches!(v, Violation::CapacityExceeded { .. })),
+        "{vs:?}"
+    );
+}
+
+#[test]
+fn converges_within_round_limit_and_falls_back() {
+    // A negative transition budget rejects every move outright, so the
+    // protocol can never fully accept a non-empty proposal — it must
+    // stop at the round limit and fall back to a vetted
+    // (rejects-reverted) solution.
+    let (mut p, apps, tiers, mut proto) = setup(0.0);
+    proto.region.transition_p99_budget_ms = -1.0;
+    proto.config.max_rounds = 4;
+    let out = proto.run(&mut p, &apps, &tiers, Deadline::after_ms(600));
+    assert!(out.rounds.len() <= 4, "round limit respected");
+    assert!(!out.fully_accepted);
+    assert_revets_clean(&out, &p, &apps, &tiers, &proto);
+    // Movement budget holds on the fallback path too.
+    assert!(out.solution.moves(&p).len() <= p.max_moves);
+}
+
+#[test]
+fn protocol_with_sharded_solver_matches_constraint_discipline() {
+    // The sharded LocalSearch slots into the protocol unchanged: the
+    // outcome obeys the same constraint rules.
+    let (mut p, apps, tiers, mut proto) = setup(25.0);
+    proto.config.parallel = ParallelConfig::with_workers(4);
+    let (initial_score, _) = score_assignment(&p, &p.initial.clone());
+    let out = proto.run(&mut p, &apps, &tiers, Deadline::after_ms(600));
+    assert!(out.solution.score <= initial_score);
+    let vs = validate(&p, &out.solution.assignment);
+    assert!(
+        vs.iter().all(|v| matches!(v, Violation::CapacityExceeded { .. })),
+        "{vs:?}"
+    );
+    assert_revets_clean(&out, &p, &apps, &tiers, &proto);
+}

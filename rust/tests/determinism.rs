@@ -1,0 +1,141 @@
+//! Determinism contract of the sharded LocalSearch (see the module docs
+//! in `rebalancer/local_search.rs`): the same seed must produce the
+//! identical `Solution` regardless of the worker count or shard
+//! strategy, because
+//!
+//!  * each worker's PRNG is an order-free stream of the run seed
+//!    (`Pcg64::stream(seed, worker_id)`) and only reorders traversal,
+//!  * move selection uses the total order (score, app, tier), and
+//!  * all outcome-affecting randomness (perturbation restarts) flows
+//!    through the master stream `Pcg64::new(seed)`.
+//!
+//! Runs use an unbounded deadline and terminate via `max_stale_restarts`
+//! so wall-clock never cuts a trajectory short.
+
+use sptlb::model::Assignment;
+use sptlb::rebalancer::constraints::{validate, Violation};
+use sptlb::rebalancer::problem::{GoalWeights, Problem};
+use sptlb::rebalancer::scoring::score_assignment;
+use sptlb::rebalancer::{
+    BatchScorer, LocalSearch, LocalSearchConfig, ParallelConfig, ShardStrategy,
+};
+use sptlb::util::propcheck::{forall, Check};
+use sptlb::util::timer::Deadline;
+use sptlb::workload::{generate, WorkloadSpec};
+
+fn paper_problem(seed: u64) -> Problem {
+    let bed = generate(&WorkloadSpec::paper().with_seed(seed));
+    Problem::build(&bed.apps, &bed.tiers, bed.initial, 0.10, GoalWeights::default()).unwrap()
+}
+
+fn converging_config(seed: u64, workers: usize, strategy: ShardStrategy) -> LocalSearchConfig {
+    LocalSearchConfig {
+        seed,
+        // Convergence-terminated: the deadline never decides the outcome.
+        max_stale_restarts: Some(2),
+        parallel: ParallelConfig { workers, shard_strategy: strategy },
+        ..LocalSearchConfig::default()
+    }
+}
+
+fn solve_with(seed: u64, workers: usize, strategy: ShardStrategy) -> sptlb::rebalancer::Solution {
+    let p = paper_problem(42);
+    LocalSearch::new(converging_config(seed, workers, strategy)).solve(&p, Deadline::unbounded())
+}
+
+#[test]
+fn same_seed_identical_solution_across_worker_counts() {
+    let base = solve_with(7, 1, ShardStrategy::Apps);
+    for workers in [2usize, 8] {
+        let sol = solve_with(7, workers, ShardStrategy::Apps);
+        assert_eq!(
+            sol.assignment, base.assignment,
+            "workers={workers} diverged from single-thread"
+        );
+        assert_eq!(sol.score, base.score, "score must be bit-identical");
+    }
+}
+
+#[test]
+fn shard_strategies_agree() {
+    // Both strategies partition the same move space; with total-order
+    // selection the partitioning cannot influence the outcome.
+    let by_apps = solve_with(11, 4, ShardStrategy::Apps);
+    let by_moves = solve_with(11, 4, ShardStrategy::Moves);
+    assert_eq!(by_apps.assignment, by_moves.assignment);
+    assert_eq!(by_apps.score, by_moves.score);
+}
+
+#[test]
+fn different_seeds_may_differ_but_all_beat_incumbent() {
+    let p = paper_problem(42);
+    let (initial_score, _) = score_assignment(&p, &p.initial.clone());
+    for seed in [1u64, 2, 3] {
+        let sol = LocalSearch::new(converging_config(seed, 4, ShardStrategy::Apps))
+            .solve(&p, Deadline::unbounded());
+        assert!(sol.score < initial_score, "seed {seed}");
+    }
+}
+
+#[test]
+fn batched_path_is_worker_count_invariant() {
+    // With a BatchScorer every candidate is scored statelessly, so the
+    // sharded batched path must also be invariant to the worker count.
+    struct CpuBatch;
+    impl BatchScorer for CpuBatch {
+        fn score_batch(
+            &mut self,
+            problem: &Problem,
+            candidates: &[Assignment],
+        ) -> anyhow::Result<Vec<f64>> {
+            Ok(candidates
+                .iter()
+                .map(|a| score_assignment(problem, a).0)
+                .collect())
+        }
+    }
+    let p = paper_problem(42);
+    let mut solutions = Vec::new();
+    for workers in [1usize, 4] {
+        let mut scorer = CpuBatch;
+        let sol = LocalSearch::new(converging_config(5, workers, ShardStrategy::Moves))
+            .solve_batched(&p, Deadline::unbounded(), &mut scorer);
+        solutions.push(sol);
+    }
+    assert_eq!(solutions[0].assignment, solutions[1].assignment);
+    assert_eq!(solutions[0].score, solutions[1].score);
+}
+
+#[test]
+fn property_sharded_solutions_respect_constraints() {
+    // Across random (seed, workers, strategy) draws, the sharded solver
+    // never violates the hard movement/placement constraints (capacity
+    // may only be inherited from the skewed incumbent).
+    forall(
+        6,
+        |rng| {
+            (
+                rng.next_u64() % 500,
+                rng.range(2, 7),
+                *rng.choose(&ShardStrategy::ALL).unwrap(),
+            )
+        },
+        |&(seed, workers, strategy)| {
+            let p = paper_problem(seed);
+            let sol = LocalSearch::new(LocalSearchConfig {
+                seed,
+                parallel: ParallelConfig { workers, shard_strategy: strategy },
+                ..LocalSearchConfig::default()
+            })
+            .solve(&p, Deadline::after_ms(60));
+            let budget_ok = sol.assignment.move_count_from(&p.initial) <= p.max_moves;
+            let placement_ok = validate(&p, &sol.assignment)
+                .iter()
+                .all(|v| matches!(v, Violation::CapacityExceeded { .. }));
+            Check::from_bool(
+                budget_ok && placement_ok,
+                &format!("workers={workers} {strategy:?} violated hard constraints"),
+            )
+        },
+    );
+}
