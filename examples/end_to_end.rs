@@ -20,7 +20,7 @@ use sptlb::runtime::PjrtScorer;
 use sptlb::sptlb::SptlbConfig;
 use sptlb::util::stats::max_abs_dev_from_mean;
 use sptlb::util::timer::{Deadline, Stopwatch};
-use sptlb::workload::{generate, WorkloadSpec};
+use sptlb::workload::{generate, ScenarioConfig, WorkloadSpec};
 use std::time::Duration;
 
 fn spread(utils: &[sptlb::model::ResourceVec], r: usize) -> f64 {
@@ -80,8 +80,12 @@ fn main() -> anyhow::Result<()> {
             timeout: Duration::from_millis(120),
             ..SptlbConfig::default()
         },
-        drift_sigma: 0.05,
-        arrival_prob: 0.3,
+        scenario: ScenarioConfig {
+            drift_sigma: 0.05,
+            arrival_prob: 0.3,
+            departure_prob: 0.0,
+            ..ScenarioConfig::churn()
+        },
         ..CoordinatorConfig::default()
     };
     let mut coordinator = Coordinator::from_testbed(cfg, bed.clone());

@@ -8,16 +8,19 @@
 //!
 //! Run: cargo bench --bench perf_hotpath
 
-use sptlb::bench::{measure, worker_ladder};
+use sptlb::bench::{measure, worker_ladder, write_bench_json};
+use sptlb::coordinator::{Coordinator, CoordinatorConfig, EngineMode};
+use sptlb::hierarchy::variants::Variant;
 use sptlb::metadata::MetadataStore;
 use sptlb::model::{Assignment, TierId};
 use sptlb::rebalancer::problem::{GoalWeights, Problem};
 use sptlb::rebalancer::scoring::{score_assignment, ScoreState};
 use sptlb::rebalancer::{LocalSearch, LocalSearchConfig, OptimalSearch, ParallelConfig};
 use sptlb::sptlb::{Sptlb, SptlbConfig};
+use sptlb::util::json::Json;
 use sptlb::util::prng::Pcg64;
 use sptlb::util::timer::Deadline;
-use sptlb::workload::{generate, WorkloadSpec};
+use sptlb::workload::{generate, ScenarioConfig, WorkloadSpec};
 use std::time::Duration;
 
 fn main() {
@@ -161,5 +164,69 @@ fn main() {
     println!(
         "  -> same-seed score identity across worker counts: {}",
         if identical { "OK" } else { "MISMATCH (see determinism tests)" }
+    );
+
+    // --- coordinator: incremental vs rebuild rounds/sec --------------------
+    // Drift-only 1k-app scenario (5% of apps drift per round): the rebuild
+    // engine re-scrapes every app and reconstructs the problem each round;
+    // the incremental engine re-samples only event-touched apps and patches
+    // problem + solver aggregates in place. Same seeds => both engines make
+    // identical decisions (see rust/tests/fleet_equivalence.rs); only the
+    // round cost differs.
+    println!("\n[coordinator] event-driven rounds, 1k apps, drift-only (5%/round)");
+    const COORD_ROUNDS: u32 = 15;
+    let coord_spec = WorkloadSpec::paper().with_apps(1000);
+    let run_engine = |mode: EngineMode| {
+        let bed = generate(&coord_spec);
+        let cfg = CoordinatorConfig {
+            sptlb: SptlbConfig {
+                timeout: Duration::from_millis(5),
+                samples_per_app: 400,
+                variant: Variant::NoCnst,
+                ..SptlbConfig::default()
+            },
+            scenario: ScenarioConfig {
+                drift_fraction: 0.05,
+                ..ScenarioConfig::drift()
+            },
+            engine: mode,
+            ..CoordinatorConfig::default()
+        };
+        let mut c = Coordinator::from_testbed(cfg, bed);
+        c.run(COORD_ROUNDS);
+        c
+    };
+    let rebuild = measure("coordinator_rebuild_15_rounds", 1, 3, || {
+        run_engine(EngineMode::Rebuild)
+    });
+    // Keep the last measured incremental run for the collect_ms printout
+    // instead of paying for an extra unmeasured simulation.
+    let mut sample = None;
+    let incremental = measure("coordinator_incremental_15_rounds", 1, 3, || {
+        sample = Some(run_engine(EngineMode::Incremental));
+    });
+    let rps = |mean_ms: f64| COORD_ROUNDS as f64 / (mean_ms / 1e3);
+    let (rebuild_rps, incremental_rps) = (rps(rebuild.mean_ms), rps(incremental.mean_ms));
+    let speedup = incremental_rps / rebuild_rps;
+    let sample = sample.expect("at least one measured incremental run");
+    println!(
+        "  rebuild {rebuild_rps:.1} rounds/s | incremental {incremental_rps:.1} rounds/s \
+         | speedup {speedup:.2}x (target >= 2x)"
+    );
+    println!(
+        "  incremental collect {:.2} ms/round mean vs rebuild-mode full scrape of {} apps",
+        sample.metrics.collect_ms.mean(),
+        sample.fleet().n_apps(),
+    );
+    write_bench_json(
+        "BENCH_coordinator.json",
+        &Json::obj(vec![
+            ("bench", Json::str("coordinator_rounds_per_sec")),
+            ("scenario", Json::str("drift_1k_apps_5pct")),
+            ("rounds", Json::num(COORD_ROUNDS as f64)),
+            ("rebuild_rounds_per_sec", Json::num(rebuild_rps)),
+            ("incremental_rounds_per_sec", Json::num(incremental_rps)),
+            ("speedup", Json::num(speedup)),
+        ]),
     );
 }

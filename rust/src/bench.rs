@@ -48,6 +48,15 @@ impl std::fmt::Display for BenchResult {
     }
 }
 
+/// Write a bench-trajectory JSON file (e.g. `BENCH_coordinator.json` in
+/// the working directory) so perf runs leave a machine-readable trail.
+pub fn write_bench_json(file: &str, json: &crate::util::json::Json) {
+    match std::fs::write(file, json.pretty()) {
+        Ok(()) => println!("  -> wrote {file}"),
+        Err(e) => eprintln!("  -> could not write {file}: {e}"),
+    }
+}
+
 /// Solver-timeout ladder for the figure sweeps. Default is the scaled
 /// ladder (50/100/300/900 ms); `SPTLB_PAPER_TIMEOUTS=1` switches to the
 /// paper's real 30s/60s/600s/1800s.

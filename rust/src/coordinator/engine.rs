@@ -1,0 +1,449 @@
+//! The round engine: turns a fleet state + one round's events into a
+//! [`BalanceReport`], either **incrementally** (the default — collection,
+//! problem construction and solver aggregates are patched in place from
+//! the event dirty-set) or by **rebuilding** everything from scratch each
+//! round (the legacy batch path, kept as the equivalence oracle and bench
+//! baseline).
+//!
+//! # Equivalence contract
+//!
+//! For any event stream, the incremental engine's per-round reports are
+//! **bit-identical** to the rebuild engine's (scores, assignments,
+//! utilizations — everything except wall-clock timings). The contract
+//! holds because every incremental shortcut preserves exact values:
+//!
+//!  * collection: a [`SimulatedMonitor`] scrape is a pure function of
+//!    (seed, app id, registered demand), so cached results for untouched
+//!    apps equal a re-scrape;
+//!  * problem: [`Problem::apply_events`] leaves the problem equal to a
+//!    from-scratch [`Problem::build`] on the post-event fleet;
+//!  * solver aggregates: dirty tiers are re-accumulated in the canonical
+//!    ascending-app order ([`crate::rebalancer::scoring::refresh_tier_loads`]),
+//!    so warm-started [`ScoreState`](crate::rebalancer::ScoreState)s are
+//!    bitwise equal to cold ones.
+//!
+//! `rust/tests/fleet_equivalence.rs` pins the contract end-to-end.
+//!
+//! # Avoid-constraint decay
+//!
+//! The co-operation protocol's avoid edges used to die with the round's
+//! throwaway problem. The engine now keeps them in a registry: an edge
+//! added in round r stays in force for the next `avoid_decay` rounds
+//! (`SptlbConfig::avoid_decay`; 0 = legacy, die immediately) and then
+//! expires, returning the tier to the app's allowed set. Both engine
+//! modes share the registry code, so decay does not break equivalence.
+
+use crate::coordinator::fleet::{FleetDelta, FleetState};
+use crate::metadata::MetadataStore;
+use crate::metrics::{Collector, IncrementalCollector, SimulatedMonitor};
+use crate::model::{App, AppId, FleetEvent, Move, ResourceVec, TierId};
+use crate::network::LatencyMatrix;
+use crate::rebalancer::problem::Problem;
+use crate::rebalancer::scoring;
+use crate::sptlb::{BalanceReport, Sptlb, SptlbConfig};
+use crate::util::timer::Stopwatch;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Which round engine the coordinator runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineMode {
+    /// Event-driven: patch collection, problem, and solver aggregates in
+    /// place; round cost scales with how much changed.
+    Incremental,
+    /// Legacy batch path: rebuild the store, re-collect every app, and
+    /// reconstruct the problem from scratch every round.
+    Rebuild,
+}
+
+impl EngineMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineMode::Incremental => "incremental",
+            EngineMode::Rebuild => "rebuild",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<EngineMode> {
+        match s {
+            "incremental" => Some(EngineMode::Incremental),
+            "rebuild" => Some(EngineMode::Rebuild),
+            _ => None,
+        }
+    }
+}
+
+/// Long-lived engine state (see module docs).
+pub struct FleetEngine {
+    pub mode: EngineMode,
+    decay: u32,
+    collect_seed: u64,
+    // ---- incremental-mode caches (unused by Rebuild) ----
+    store: MetadataStore,
+    collector: IncrementalCollector<SimulatedMonitor>,
+    problem: Option<Problem>,
+    collected_apps: Vec<App>,
+    loads: Vec<ResourceVec>,
+    adoption_dirty: BTreeSet<TierId>,
+    /// Endpoints scraped in the last round (observability: the
+    /// incrementality win, vs fleet size for the rebuild engine).
+    pub last_scraped: usize,
+    // ---- avoid-constraint registry (shared by both modes) ----
+    avoids: BTreeMap<(AppId, TierId), u32>,
+    forbidden: BTreeMap<(TierId, TierId), u32>,
+}
+
+impl FleetEngine {
+    pub fn new(mode: EngineMode, base: &SptlbConfig) -> Self {
+        let collect_seed = base.seed ^ 0x5EED;
+        Self {
+            mode,
+            decay: base.avoid_decay,
+            collect_seed,
+            store: MetadataStore::new(),
+            collector: IncrementalCollector::new(
+                SimulatedMonitor::empty(collect_seed),
+                base.samples_per_app,
+            ),
+            problem: None,
+            collected_apps: Vec::new(),
+            loads: Vec::new(),
+            adoption_dirty: BTreeSet::new(),
+            last_scraped: 0,
+            avoids: BTreeMap::new(),
+            forbidden: BTreeMap::new(),
+        }
+    }
+
+    /// Active avoid edges (app, tier) — exposed for tests/observability.
+    pub fn active_avoids(&self) -> Vec<(AppId, TierId)> {
+        self.avoids.keys().copied().collect()
+    }
+
+    /// Active forbidden tier→tier transitions (same decay registry).
+    pub fn active_forbidden(&self) -> Vec<(TierId, TierId)> {
+        self.forbidden.keys().copied().collect()
+    }
+
+    /// Run one balancing round against the (already event-advanced) fleet
+    /// state: collect → construct → solve → execute. Returns the report
+    /// plus the executed moves; the incumbent is adopted move-by-move.
+    pub fn round(
+        &mut self,
+        state: &mut FleetState,
+        events: &[FleetEvent],
+        delta: &FleetDelta,
+        base: &SptlbConfig,
+        latency: &LatencyMatrix,
+        round: u32,
+    ) -> (BalanceReport, Vec<Move>) {
+        // Registry upkeep: drop departed apps' edges, age the rest.
+        for id in &delta.departed {
+            self.avoids.retain(|(a, _), _| a != id);
+        }
+        let expired = self.age_registry();
+
+        let mut cfg = base.clone();
+        cfg.seed = base.seed.wrapping_add(round as u64);
+        let sptlb = Sptlb::new(cfg);
+
+        let report = match self.mode {
+            EngineMode::Rebuild => self.round_rebuild(state, &sptlb, latency),
+            EngineMode::Incremental => {
+                self.round_incremental(state, events, delta, &sptlb, latency, &expired)
+            }
+        };
+
+        harvest_registry(&mut self.avoids, &mut self.forbidden, &report.problem, state);
+
+        // ---- decision execution: adopt by move, never by clone. ------
+        let moves = report.solution.moves(&report.problem);
+        state.adopt(&moves);
+        for m in &moves {
+            self.adoption_dirty.insert(m.from);
+            self.adoption_dirty.insert(m.to);
+        }
+        (report, moves)
+    }
+
+    /// Legacy batch round: everything rebuilt from scratch.
+    fn round_rebuild(
+        &mut self,
+        state: &FleetState,
+        sptlb: &Sptlb,
+        latency: &LatencyMatrix,
+    ) -> BalanceReport {
+        let pipeline_sw = Stopwatch::start();
+        let collect_sw = Stopwatch::start();
+        let store = MetadataStore::from_apps(state.apps().to_vec()).expect("unique fleet ids");
+        let mut collector =
+            Collector::new(&store, SimulatedMonitor::new(state.apps(), self.collect_seed));
+        collector.samples_per_app = sptlb.config.samples_per_app;
+        let col = collector.collect(state.tiers());
+        let collect_ms = collect_sw.elapsed_ms();
+        self.last_scraped = state.n_apps();
+
+        let apps: Vec<App> = state
+            .apps()
+            .iter()
+            .cloned()
+            .zip(&col.apps)
+            .map(|(mut a, c)| {
+                debug_assert_eq!(a.id, c.id);
+                a.demand = c.p99_demand;
+                a
+            })
+            .collect();
+        let mut problem = Problem::build(
+            &apps,
+            state.tiers(),
+            state.assignment().clone(),
+            sptlb.config.movement_fraction,
+            sptlb.config.weights(),
+        )
+        .expect("fleet state is structurally valid");
+        apply_avoid_registry(&self.avoids, &self.forbidden, &mut problem, state, &BTreeSet::new());
+        sptlb.solve_collected(
+            &mut problem,
+            &apps,
+            state.tiers(),
+            latency,
+            None,
+            collect_ms,
+            pipeline_sw,
+        )
+    }
+
+    /// Event-driven round: patch everything in place from the dirty set.
+    fn round_incremental(
+        &mut self,
+        state: &FleetState,
+        events: &[FleetEvent],
+        delta: &FleetDelta,
+        sptlb: &Sptlb,
+        latency: &LatencyMatrix,
+        expired: &BTreeSet<AppId>,
+    ) -> BalanceReport {
+        let pipeline_sw = Stopwatch::start();
+        let first = self.problem.is_none();
+
+        // ---- metadata registry sync (arrivals/departures/drift) ------
+        if first {
+            self.store = MetadataStore::from_apps(state.apps().to_vec()).expect("unique fleet ids");
+        } else {
+            for id in &delta.departed {
+                self.store.deregister(*id).expect("departed app was registered");
+            }
+            for id in &delta.arrived {
+                let idx = state.index_of(*id).expect("arrived app present in state");
+                self.store
+                    .register(state.apps()[idx].clone())
+                    .expect("monotonic ids never collide");
+            }
+            for id in &delta.drifted {
+                let idx = state.index_of(*id).expect("drifted ids are filtered to live apps");
+                self.store
+                    .update_demand(*id, state.apps()[idx].demand)
+                    .expect("drifted app is registered");
+            }
+        }
+
+        // ---- stage 1: collection, dirty apps only --------------------
+        let collect_sw = Stopwatch::start();
+        let (collected, scraped) = self.collector.collect(&self.store, state.apps());
+        let collect_ms = collect_sw.elapsed_ms();
+        self.last_scraped = scraped;
+
+        // ---- stage 2: problem construction (in place) ----------------
+        if first || delta.structural {
+            self.collected_apps = state.apps().to_vec();
+        }
+        for (a, c) in self.collected_apps.iter_mut().zip(&collected) {
+            a.demand = c.p99_demand;
+        }
+        if first {
+            self.problem = Some(
+                Problem::build(
+                    &self.collected_apps,
+                    state.tiers(),
+                    state.assignment().clone(),
+                    sptlb.config.movement_fraction,
+                    sptlb.config.weights(),
+                )
+                .expect("fleet state is structurally valid"),
+            );
+        } else {
+            let p = self.problem.as_mut().expect("problem exists after first round");
+            let fraction = sptlb.config.movement_fraction;
+            p.apply_events(events, state.tiers(), state.assignment(), fraction)
+                .expect("fleet events keep the problem well-formed");
+            // Substitute collected (p99) demands; untouched apps get the
+            // same bits back, so only event-dirty tiers change.
+            for (i, c) in collected.iter().enumerate() {
+                p.apps[i].demand = c.p99_demand;
+            }
+        }
+        let problem = self.problem.as_mut().expect("just built");
+        apply_avoid_registry(&self.avoids, &self.forbidden, problem, state, expired);
+
+        // ---- per-tier aggregates: refresh only what went stale -------
+        if first || delta.structural || self.loads.len() != problem.n_tiers() {
+            self.loads = scoring::tier_loads(problem, &problem.initial);
+            self.adoption_dirty.clear();
+        } else {
+            let mut dirty = delta.dirty_tiers.clone();
+            dirty.append(&mut self.adoption_dirty);
+            scoring::refresh_tier_loads(problem, &problem.initial, &mut self.loads, &dirty);
+        }
+
+        // ---- stages 3-4: warm-started solve + evaluation -------------
+        sptlb.solve_collected(
+            problem,
+            &self.collected_apps,
+            state.tiers(),
+            latency,
+            Some(&self.loads),
+            collect_ms,
+            pipeline_sw,
+        )
+    }
+
+    /// Age the registry by one round and drop expired edges. Returns the
+    /// apps whose allowed sets must be restored (some edge expired).
+    fn age_registry(&mut self) -> BTreeSet<AppId> {
+        let decay = self.decay;
+        let mut expired_apps = BTreeSet::new();
+        for ((app, tier), age) in std::mem::take(&mut self.avoids) {
+            let age = age.saturating_add(1);
+            if age <= decay {
+                self.avoids.insert((app, tier), age);
+            } else {
+                expired_apps.insert(app);
+            }
+        }
+        for (edge, age) in std::mem::take(&mut self.forbidden) {
+            let age = age.saturating_add(1);
+            if age <= decay {
+                self.forbidden.insert(edge, age);
+            }
+        }
+        expired_apps
+    }
+}
+
+/// Re-derive allowed sets for every app with active or just-expired avoid
+/// edges, and install the active forbidden transitions. Shared verbatim
+/// by both engine modes so decayed constraints cannot break equivalence.
+fn apply_avoid_registry(
+    avoids: &BTreeMap<(AppId, TierId), u32>,
+    forbidden: &BTreeMap<(TierId, TierId), u32>,
+    problem: &mut Problem,
+    state: &FleetState,
+    extra_reset: &BTreeSet<AppId>,
+) {
+    let mut affected: BTreeSet<AppId> = avoids.keys().map(|(a, _)| *a).collect();
+    affected.extend(extra_reset.iter().copied());
+    for id in affected {
+        let Some(idx) = problem.index_of_stable(id) else { continue };
+        let slo = state.apps()[idx].slo;
+        let base = Problem::allowed_for(state.tiers(), slo);
+        let avoided: Vec<TierId> = avoids
+            .keys()
+            .filter(|(a, _)| *a == id)
+            .map(|(_, t)| *t)
+            .collect();
+        problem.set_allowed(idx, effective_allowed(base, &avoided));
+    }
+    problem.forbidden_transitions = forbidden.keys().copied().collect();
+}
+
+/// Base allowed set minus avoided tiers, refusing (like
+/// `Problem::add_avoid`) to strand an app on an empty set. `avoided` must
+/// be ascending so both engine modes drop the same edges when the floor
+/// is hit.
+fn effective_allowed(mut base: Vec<TierId>, avoided: &[TierId]) -> Vec<TierId> {
+    for t in avoided {
+        if base.len() <= 1 {
+            break;
+        }
+        base.retain(|x| x != t);
+    }
+    base
+}
+
+/// Record every avoid edge / forbidden transition present in the solved
+/// problem that the registry does not know yet (age 0: in force for the
+/// next `avoid_decay` rounds).
+fn harvest_registry(
+    avoids: &mut BTreeMap<(AppId, TierId), u32>,
+    forbidden: &mut BTreeMap<(TierId, TierId), u32>,
+    problem: &Problem,
+    state: &FleetState,
+) {
+    for (idx, papp) in problem.apps.iter().enumerate() {
+        let id = problem.stable_ids[idx];
+        let slo = state.apps()[idx].slo;
+        let base = Problem::allowed_for(state.tiers(), slo);
+        if papp.allowed.len() == base.len() {
+            continue;
+        }
+        for t in &base {
+            if !papp.allowed.contains(t) {
+                avoids.entry((id, *t)).or_insert(0);
+            }
+        }
+    }
+    for edge in &problem.forbidden_transitions {
+        forbidden.entry(*edge).or_insert(0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_names_roundtrip() {
+        for m in [EngineMode::Incremental, EngineMode::Rebuild] {
+            assert_eq!(EngineMode::from_name(m.name()), Some(m));
+        }
+        assert_eq!(EngineMode::from_name("zzz"), None);
+    }
+
+    #[test]
+    fn effective_allowed_never_strands() {
+        let base = vec![TierId(0), TierId(1), TierId(2)];
+        assert_eq!(
+            effective_allowed(base.clone(), &[TierId(1)]),
+            vec![TierId(0), TierId(2)]
+        );
+        // Removing everything stops at the last routable tier.
+        assert_eq!(
+            effective_allowed(base, &[TierId(0), TierId(1), TierId(2)]),
+            vec![TierId(2)]
+        );
+    }
+
+    #[test]
+    fn registry_ages_and_expires() {
+        let base = SptlbConfig { avoid_decay: 2, ..SptlbConfig::default() };
+        let mut engine = FleetEngine::new(EngineMode::Incremental, &base);
+        engine.avoids.insert((AppId(1), TierId(0)), 0);
+        assert!(engine.age_registry().is_empty(), "age 1 <= decay 2");
+        assert!(engine.age_registry().is_empty(), "age 2 <= decay 2");
+        let expired = engine.age_registry();
+        assert_eq!(expired.into_iter().collect::<Vec<_>>(), vec![AppId(1)]);
+        assert!(engine.avoids.is_empty());
+    }
+
+    #[test]
+    fn decay_zero_expires_immediately() {
+        let base = SptlbConfig::default();
+        let mut engine = FleetEngine::new(EngineMode::Incremental, &base);
+        engine.avoids.insert((AppId(3), TierId(2)), 0);
+        engine.forbidden.insert((TierId(0), TierId(1)), 0);
+        let expired = engine.age_registry();
+        assert!(expired.contains(&AppId(3)));
+        assert!(engine.avoids.is_empty());
+        assert!(engine.forbidden.is_empty());
+    }
+}

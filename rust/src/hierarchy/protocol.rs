@@ -82,6 +82,22 @@ impl CoopProtocol {
         tiers: &[crate::model::Tier],
         deadline: Deadline,
     ) -> CoopOutcome {
+        self.run_warm(problem, apps, tiers, deadline, None)
+    }
+
+    /// [`CoopProtocol::run`] with optionally warm-started incumbent
+    /// loads: any round that solves from `problem.initial` (in practice
+    /// the first) reuses the caller's cached per-tier aggregates instead
+    /// of re-accumulating them. Loads must be bit-identical to a fresh
+    /// accumulation, so the outcome equals the cold path exactly.
+    pub fn run_warm(
+        &self,
+        problem: &mut Problem,
+        apps: &[App],
+        tiers: &[crate::model::Tier],
+        deadline: Deadline,
+        warm_loads: Option<&[crate::model::ResourceVec]>,
+    ) -> CoopOutcome {
         let mut rounds = Vec::new();
         let mut best: Option<Solution> = None;
         let mut warm_start: Option<crate::model::Assignment> = None;
@@ -110,9 +126,13 @@ impl CoopProtocol {
             let solution = match (self.config.solver, &warm_start) {
                 (SolverKind::LocalSearch, Some(start)) => local(self.config.seed + round as u64)
                     .solve_from(problem, round_deadline, start.clone()),
-                (SolverKind::LocalSearch, None) => {
-                    local(self.config.seed + round as u64).solve(problem, round_deadline)
-                }
+                (SolverKind::LocalSearch, None) => match warm_loads {
+                    // Solving from the incumbent: the caller's cached
+                    // aggregates apply verbatim.
+                    Some(loads) => local(self.config.seed + round as u64)
+                        .solve_warm(problem, round_deadline, loads),
+                    None => local(self.config.seed + round as u64).solve(problem, round_deadline),
+                },
                 (SolverKind::OptimalSearch, _) => {
                     OptimalSearch::with_seed(self.config.seed + round as u64)
                         .solve(problem, round_deadline)

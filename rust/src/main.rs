@@ -9,7 +9,7 @@
 //!   sweep     regenerate the Fig. 4/5 variant×solver×timeout sweep.
 //!   check     verify the AOT artifacts load and match the rust scorer.
 
-use sptlb::coordinator::{Coordinator, CoordinatorConfig};
+use sptlb::coordinator::{Coordinator, CoordinatorConfig, EngineMode};
 use sptlb::hierarchy::variants::Variant;
 use sptlb::metadata::MetadataStore;
 use sptlb::rebalancer::solution::SolverKind;
@@ -17,7 +17,7 @@ use sptlb::rebalancer::{ParallelConfig, ShardStrategy};
 use sptlb::report;
 use sptlb::sptlb::{Sptlb, SptlbConfig};
 use sptlb::util::cli::Command;
-use sptlb::workload::{TestBed, WorkloadSpec};
+use sptlb::workload::{ScenarioConfig, TestBed, WorkloadSpec};
 use std::time::Duration;
 
 fn main() {
@@ -181,17 +181,24 @@ fn cmd_balance(args: &[String]) -> i32 {
 
 fn cmd_serve(args: &[String]) -> i32 {
     let cmd = Command::new("serve", "run the coordinator leader loop")
-        .opt("scenario", "paper", "workload preset")
+        .opt("scenario", "paper", "workload preset (paper|small|large)")
+        .opt("events", "drift", "event scenario (steady|drift|churn|spike|outage|mixed)")
         .opt("seed", "42", "prng seed")
         .opt("rounds", "10", "balancing rounds to run")
         .opt("timeout-ms", "60", "per-round solver deadline")
-        .opt("drift", "0.05", "per-round demand drift sigma")
-        .opt("arrivals", "0.2", "per-round app arrival probability")
+        .opt("engine", "incremental", "round engine (incremental|rebuild)")
+        .opt("decay", "0", "rounds a protocol avoid-constraint persists")
+        .opt("drift", "", "override: demand drift sigma")
+        .opt("drift-frac", "", "override: fraction of apps drifting per round")
+        .opt("arrivals", "", "override: per-round app arrival probability")
+        .opt("departures", "", "override: per-round app departure probability")
         .opt("workers", "1", "local-search worker threads (sharded scan)")
         .opt("shard", "apps", "move-space shard strategy (apps|moves)")
-        .opt("log", "", "write the decision log JSON to this file");
+        .opt("log", "", "write the decision log JSON to this file")
+        .opt("event-log", "", "write the applied-events journal JSON to this file");
     with_parsed(cmd, args, |p| {
-        let bed = match load_bed(&p.str("scenario").unwrap(), p.u64("seed").unwrap()) {
+        let seed = p.u64("seed").unwrap_or(42);
+        let bed = match load_bed(&p.str("scenario").unwrap(), seed) {
             Ok(b) => b,
             Err(e) => {
                 eprintln!("error: {e}");
@@ -202,28 +209,77 @@ fn cmd_serve(args: &[String]) -> i32 {
             Ok(x) => x,
             Err(code) => return code,
         };
+        let events = p.str("events").unwrap_or_else(|_| "drift".into());
+        let mut scenario = match ScenarioConfig::by_name(&events) {
+            Some(s) => s.with_seed(seed),
+            None => {
+                eprintln!(
+                    "error: unknown event scenario '{events}' \
+                     (steady|drift|churn|spike|outage|mixed)"
+                );
+                return 2;
+            }
+        };
+        // Optional per-knob overrides on top of the preset.
+        let overrides: [(&str, f64, &mut f64); 4] = [
+            ("drift", f64::MAX, &mut scenario.drift_sigma),
+            ("drift-frac", 1.0, &mut scenario.drift_fraction),
+            ("arrivals", 1.0, &mut scenario.arrival_prob),
+            ("departures", 1.0, &mut scenario.departure_prob),
+        ];
+        for (flag, hi, slot) in overrides {
+            if p.get(flag).is_some_and(|v| !v.is_empty()) {
+                match p.f64_in_range(flag, 0.0, hi) {
+                    Ok(v) => *slot = v,
+                    Err(e) => {
+                        eprintln!("error: {e}");
+                        return 2;
+                    }
+                }
+            }
+        }
+        let engine = match EngineMode::from_name(p.get("engine").unwrap_or("incremental")) {
+            Some(m) => m,
+            None => {
+                eprintln!("error: unknown engine (incremental|rebuild)");
+                return 2;
+            }
+        };
+        let decay = match p.u64("decay") {
+            Ok(d) => d as u32,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        };
         let cfg = CoordinatorConfig {
             sptlb: SptlbConfig {
                 timeout: Duration::from_millis(p.u64("timeout-ms").unwrap_or(60)),
-                seed: p.u64("seed").unwrap_or(42),
+                seed,
                 parallel,
+                avoid_decay: decay,
                 ..SptlbConfig::default()
             },
-            drift_sigma: p.f64("drift").unwrap_or(0.05),
-            arrival_prob: p.f64("arrivals").unwrap_or(0.2),
+            scenario,
+            engine,
             ..CoordinatorConfig::default()
         };
         let mut coordinator = Coordinator::from_testbed(cfg, bed);
         let rounds = p.u64("rounds").unwrap_or(10) as u32;
         coordinator.run(rounds);
         println!("{}", coordinator.metrics.to_json().pretty());
-        if let Ok(path) = p.str("log") {
-            if !path.is_empty() {
-                if let Err(e) = std::fs::write(&path, coordinator.log_json().pretty()) {
-                    eprintln!("error writing {path}: {e}");
-                    return 1;
+        for (flag, json) in [
+            ("log", coordinator.log_json()),
+            ("event-log", coordinator.event_log_json()),
+        ] {
+            if let Ok(path) = p.str(flag) {
+                if !path.is_empty() {
+                    if let Err(e) = std::fs::write(&path, json.pretty()) {
+                        eprintln!("error writing {path}: {e}");
+                        return 1;
+                    }
+                    println!("{flag} written to {path}");
                 }
-                println!("decision log written to {path}");
             }
         }
         0

@@ -79,6 +79,24 @@ impl MetadataStore {
         self.apps.values().cloned().collect()
     }
 
+    /// Borrowing iteration in ascending-id order (the clone-free path the
+    /// event-driven coordinator uses every round).
+    pub fn iter(&self) -> impl Iterator<Item = &App> {
+        self.apps.values()
+    }
+
+    /// Update a running app's registered (peak) demand in place — the
+    /// metadata half of a `DemandDrift` fleet event.
+    pub fn update_demand(
+        &mut self,
+        id: AppId,
+        demand: crate::model::ResourceVec,
+    ) -> Result<(), MetadataError> {
+        let app = self.apps.get_mut(&id).ok_or(MetadataError::UnknownApp(id))?;
+        app.demand = demand;
+        Ok(())
+    }
+
     pub fn apps_with_slo(&self, slo: Slo) -> Vec<&App> {
         self.apps.values().filter(|a| a.slo == slo).collect()
     }
@@ -180,6 +198,16 @@ mod tests {
         let ep = store.monitoring_endpoint(AppId(7)).unwrap();
         assert_eq!(ep.address, "monitor://apps/slo2/app7");
         assert!(store.monitoring_endpoint(AppId(99)).is_err());
+    }
+
+    #[test]
+    fn update_demand_in_place() {
+        let mut store = MetadataStore::from_apps([app(0, Slo::Slo1)]).unwrap();
+        store.update_demand(AppId(0), ResourceVec::new(9.0, 9.0, 9.0)).unwrap();
+        assert_eq!(store.get(AppId(0)).unwrap().demand, ResourceVec::new(9.0, 9.0, 9.0));
+        assert!(store.update_demand(AppId(5), ResourceVec::ZERO).is_err());
+        let ids: Vec<usize> = store.iter().map(|a| a.id.0).collect();
+        assert_eq!(ids, vec![0]);
     }
 
     #[test]

@@ -23,6 +23,15 @@ pub struct Sample {
 /// Tests/benches: [`SimulatedMonitor`].
 pub trait MetricSource {
     fn scrape(&mut self, endpoint: &MonitoringEndpoint, n_samples: usize) -> Vec<Sample>;
+
+    /// Registration hook for simulated sources: called by the
+    /// incremental collector when an app is new or its registered demand
+    /// changed, before re-scraping it. Real scrape sources need no state
+    /// and ignore it.
+    fn observe_registration(&mut self, _app: &App) {}
+
+    /// Forget a departed app (simulated sources drop its series base).
+    fn forget(&mut self, _app: AppId) {}
 }
 
 /// Simulated monitoring endpoints. An app's registered demand is its
@@ -32,10 +41,17 @@ pub trait MetricSource {
 /// p99 reduction therefore recovers the planning number from raw
 /// samples — the same contract the paper's §3.1 collection stage has
 /// with Meta's monitoring plane.
+///
+/// Each app's sample series is drawn from its own deterministic PRNG
+/// stream (`Pcg64::stream(seed, app_id)`), so a scrape is a pure
+/// function of (seed, app id, registered demand) — independent of which
+/// *other* apps were scraped, or in what order. That independence is
+/// what lets the incremental collector re-sample only event-touched apps
+/// while staying bit-identical to a full re-collection.
 #[derive(Debug)]
 pub struct SimulatedMonitor {
     base: BTreeMap<AppId, ResourceVec>,
-    rng: Pcg64,
+    seed: u64,
     /// Relative noise sigma for the lognormal multiplier.
     pub noise_sigma: f64,
 }
@@ -47,9 +63,15 @@ impl SimulatedMonitor {
     pub fn new(apps: &[App], seed: u64) -> Self {
         Self {
             base: apps.iter().map(|a| (a.id, a.demand)).collect(),
-            rng: Pcg64::new(seed),
+            seed,
             noise_sigma: 0.15,
         }
+    }
+
+    /// A monitor with no registered apps yet; the incremental collector
+    /// registers them through [`MetricSource::observe_registration`].
+    pub fn empty(seed: u64) -> Self {
+        Self { base: BTreeMap::new(), seed, noise_sigma: 0.15 }
     }
 }
 
@@ -59,19 +81,28 @@ impl MetricSource for SimulatedMonitor {
             .base
             .get(&endpoint.app)
             .unwrap_or(&ResourceVec::ZERO);
+        let mut rng = Pcg64::stream(self.seed, endpoint.app.0 as u64);
         // Normalize the lognormal so its p99 is 1.0 (i.e. the peak).
         let p99_mult = (Z99 * self.noise_sigma).exp();
         (0..n_samples)
             .map(|i| {
-                let mult = self.rng.log_normal(0.0, self.noise_sigma) / p99_mult;
+                let mult = rng.log_normal(0.0, self.noise_sigma) / p99_mult;
                 let mut usage = base.scale(mult);
                 // Task count is integral and changes rarely: round and keep
                 // within a few % of the registered value.
-                let t = base.tasks() * self.rng.uniform(0.97, 1.0);
+                let t = base.tasks() * rng.uniform(0.97, 1.0);
                 usage.0[2] = t.round().max(0.0);
                 Sample { at_secs: i as f64, usage }
             })
             .collect()
+    }
+
+    fn observe_registration(&mut self, app: &App) {
+        self.base.insert(app.id, app.demand);
+    }
+
+    fn forget(&mut self, app: AppId) {
+        self.base.remove(&app);
     }
 }
 
@@ -134,6 +165,92 @@ impl<'a, S: MetricSource> Collector<'a, S> {
             })
             .collect();
         CollectionReport { apps, tiers }
+    }
+}
+
+/// One cached collection result, keyed by the registered demand it was
+/// scraped under.
+#[derive(Debug, Clone)]
+struct CachedCollection {
+    registered: ResourceVec,
+    collected: CollectedApp,
+}
+
+/// Event-driven collector: re-scrapes *only* apps whose registered
+/// demand changed since the last round (drift events) or that are new
+/// (arrivals), serving everything else from cache; departed apps are
+/// evicted. Because a [`SimulatedMonitor`] scrape is a pure function of
+/// (seed, app id, registered demand), the cached values are bit-identical
+/// to what a full re-collection would produce — the engine's
+/// incremental-vs-rebuild equivalence depends on exactly that.
+pub struct IncrementalCollector<S: MetricSource> {
+    source: S,
+    /// Samples scraped per (dirty) app.
+    pub samples_per_app: usize,
+    cache: BTreeMap<AppId, CachedCollection>,
+}
+
+impl<S: MetricSource> IncrementalCollector<S> {
+    pub fn new(source: S, samples_per_app: usize) -> Self {
+        // No clamping: the count must match `Collector` exactly, or the
+        // incremental and rebuild engines diverge on degenerate configs.
+        Self { source, samples_per_app, cache: BTreeMap::new() }
+    }
+
+    pub fn source_mut(&mut self) -> &mut S {
+        &mut self.source
+    }
+
+    /// Collect p99 demands for `apps` (the fleet in ascending-id order),
+    /// scraping only dirty apps. Returns the collected apps positionally
+    /// parallel to `apps`, plus how many endpoints were actually scraped
+    /// (the incrementality win the coordinator bench measures).
+    pub fn collect(&mut self, store: &MetadataStore, apps: &[App]) -> (Vec<CollectedApp>, usize) {
+        // Evict departed apps first so the cache never outlives the fleet.
+        let departed: Vec<AppId> = {
+            let mut live = apps.iter().map(|a| a.id).peekable();
+            let mut gone = Vec::new();
+            for &id in self.cache.keys() {
+                while live.peek().is_some_and(|l| *l < id) {
+                    live.next();
+                }
+                if live.peek() != Some(&id) {
+                    gone.push(id);
+                }
+            }
+            gone
+        };
+        for id in departed {
+            self.cache.remove(&id);
+            self.source.forget(id);
+        }
+
+        let mut out = Vec::with_capacity(apps.len());
+        let mut scraped = 0usize;
+        for app in apps {
+            match self.cache.get(&app.id) {
+                Some(c) if c.registered == app.demand => out.push(c.collected.clone()),
+                _ => {
+                    self.source.observe_registration(app);
+                    let ep = store
+                        .monitoring_endpoint(app.id)
+                        .expect("fleet app registered but endpoint missing");
+                    let samples = self.source.scrape(&ep, self.samples_per_app);
+                    scraped += 1;
+                    let collected = CollectedApp {
+                        id: app.id,
+                        p99_demand: reduce_p99(&samples),
+                        n_samples: samples.len(),
+                    };
+                    self.cache.insert(
+                        app.id,
+                        CachedCollection { registered: app.demand, collected: collected.clone() },
+                    );
+                    out.push(collected);
+                }
+            }
+        }
+        (out, scraped)
     }
 }
 
@@ -240,5 +357,83 @@ mod tests {
     #[test]
     fn empty_series_reduces_to_zero() {
         assert_eq!(reduce_p99(&[]), ResourceVec::ZERO);
+    }
+
+    #[test]
+    fn scrape_is_independent_of_other_apps() {
+        // Per-app PRNG streams: app 1's series must not depend on whether
+        // (or how often) other apps were scraped — the property that
+        // makes cached collection bit-identical to full re-collection.
+        let store = mk_store(3);
+        let apps = store.running_apps();
+        let ep1 = store.monitoring_endpoint(AppId(1)).unwrap();
+        let mut a = SimulatedMonitor::new(&apps, 5);
+        let solo = a.scrape(&ep1, 50);
+        let mut b = SimulatedMonitor::new(&apps, 5);
+        for id in [0usize, 2, 0] {
+            let ep = store.monitoring_endpoint(AppId(id)).unwrap();
+            let _ = b.scrape(&ep, 50);
+        }
+        assert_eq!(b.scrape(&ep1, 50), solo);
+    }
+
+    #[test]
+    fn incremental_collection_matches_full_collection() {
+        let store = mk_store(4);
+        let apps = store.running_apps();
+        let seed = 11;
+        let full = {
+            let mut c = Collector::new(&store, SimulatedMonitor::new(&apps, seed));
+            c.collect(&mk_tiers()).apps
+        };
+        let mut inc = IncrementalCollector::new(SimulatedMonitor::empty(seed), 200);
+        let (first, scraped_first) = inc.collect(&store, &apps);
+        assert_eq!(scraped_first, 4, "everything is dirty on first contact");
+        assert_eq!(first, full, "incremental must equal full collection");
+        // Second round, nothing drifted: all served from cache.
+        let (second, scraped_second) = inc.collect(&store, &apps);
+        assert_eq!(scraped_second, 0);
+        assert_eq!(second, full);
+    }
+
+    #[test]
+    fn incremental_collection_rescrapes_only_drifted_apps() {
+        let store = mk_store(4);
+        let mut apps = store.running_apps();
+        let seed = 11;
+        let mut inc = IncrementalCollector::new(SimulatedMonitor::empty(seed), 200);
+        let _ = inc.collect(&store, &apps);
+        // Drift one app's registered demand; only it gets re-scraped,
+        // and the result equals a from-scratch full collection over the
+        // drifted fleet.
+        apps[2].demand = apps[2].demand.scale(1.7);
+        let drifted_store = MetadataStore::from_apps(apps.clone()).unwrap();
+        let (inc_result, scraped) = inc.collect(&drifted_store, &apps);
+        assert_eq!(scraped, 1, "only the drifted app is re-scraped");
+        let full = {
+            let mut c = Collector::new(&drifted_store, SimulatedMonitor::new(&apps, seed));
+            c.collect(&mk_tiers()).apps
+        };
+        assert_eq!(inc_result, full);
+    }
+
+    #[test]
+    fn incremental_collection_evicts_departed_and_adds_arrivals() {
+        let store = mk_store(4);
+        let apps = store.running_apps();
+        let seed = 3;
+        let mut inc = IncrementalCollector::new(SimulatedMonitor::empty(seed), 100);
+        let _ = inc.collect(&store, &apps);
+        // App 1 departs; app 7 arrives.
+        let mut next: Vec<App> = apps.iter().filter(|a| a.id != AppId(1)).cloned().collect();
+        next.push(App { id: AppId(7), name: "app7".into(), ..apps[0].clone() });
+        let next_store = MetadataStore::from_apps(next.clone()).unwrap();
+        let (got, scraped) = inc.collect(&next_store, &next);
+        assert_eq!(scraped, 1, "only the arrival is scraped");
+        let full = {
+            let mut c = Collector::new(&next_store, SimulatedMonitor::new(&next, seed));
+            c.collect(&mk_tiers()).apps
+        };
+        assert_eq!(got, full);
     }
 }

@@ -33,6 +33,18 @@ impl Assignment {
         self.tier_of[app.0] = tier;
     }
 
+    /// Grow the mapping by one app placed on `tier` (fleet arrival; the
+    /// new app occupies the last position).
+    pub fn push(&mut self, tier: TierId) {
+        self.tier_of.push(tier);
+    }
+
+    /// Remove the app at `index`, shifting later positions down (fleet
+    /// departure — positions stay parallel to the id-ordered app list).
+    pub fn remove(&mut self, index: usize) -> TierId {
+        self.tier_of.remove(index)
+    }
+
     pub fn iter(&self) -> impl Iterator<Item = (AppId, TierId)> + '_ {
         self.tier_of.iter().enumerate().map(|(a, t)| (AppId(a), *t))
     }
@@ -54,11 +66,14 @@ impl Assignment {
         self.iter().filter(|(a, t)| from.tier_of(*a) != *t).count()
     }
 
-    /// Projected absolute tier loads for a given app population.
+    /// Projected absolute tier loads for a given app population. `apps`
+    /// is positional-parallel to the mapping (apps in ascending-id order;
+    /// ids themselves may be sparse once departures exist).
     pub fn tier_loads(&self, apps: &[App], n_tiers: usize) -> Vec<ResourceVec> {
+        assert_eq!(apps.len(), self.n_apps(), "assignment size mismatch");
         let mut loads = vec![ResourceVec::ZERO; n_tiers];
-        for app in apps {
-            loads[self.tier_of(app.id).0] += app.demand;
+        for (t, app) in self.tier_of.iter().zip(apps) {
+            loads[t.0] += app.demand;
         }
         loads
     }

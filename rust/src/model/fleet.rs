@@ -1,0 +1,172 @@
+//! Fleet events: the typed change log that drives service-mode balancing.
+//!
+//! The paper's schedulers are long-lived services reacting to drifting
+//! application load. Instead of regenerating the whole fleet snapshot
+//! every round, the coordinator consumes a stream of [`FleetEvent`]s —
+//! demand drift, app arrivals/departures, tier capacity changes, region
+//! outages — and both the fleet state and the solver's [`Problem`]
+//! (`rebalancer::problem`) apply them *in place*. Round cost then scales
+//! with how much actually changed, not with fleet size.
+//!
+//! Events are plain data: applying the same event log to the same initial
+//! state is deterministic, which is what the incremental-vs-rebuild
+//! equivalence contract (see `coordinator::engine`) and the replay
+//! determinism tests stand on.
+
+use crate::model::app::{App, AppId};
+use crate::model::region::RegionId;
+use crate::model::resources::ResourceVec;
+use crate::model::tier::TierId;
+use crate::util::json::Json;
+
+/// One observed change to the fleet. Carried values are *absolute* (the
+/// new demand, the complete arriving app), never deltas relative to
+/// unstated prior state, so a recorded log replays bit-identically.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FleetEvent {
+    /// An app's registered (peak) demand changed to this absolute value.
+    DemandDrift { app: AppId, demand: ResourceVec },
+    /// A new app joins the fleet. `app.id` must be the fleet's next
+    /// monotonic id (see `FleetState::next_app_id`); the app lands on the
+    /// first tier supporting its SLO.
+    Arrival { app: App },
+    /// An app leaves the fleet. Its id is never reused.
+    Departure { app: AppId },
+    /// A tier's capacity is rescaled (hosts added or drained).
+    TierCapacityChange { tier: TierId, factor: f64 },
+    /// A region goes dark: every tier loses the region from its region
+    /// set along with a proportional share of its capacity. A tier whose
+    /// ONLY region is the outaged one is kept whole (with a warning) —
+    /// an empty region set would make it unschedulable.
+    RegionOutage { region: RegionId },
+}
+
+impl FleetEvent {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetEvent::DemandDrift { .. } => "demand_drift",
+            FleetEvent::Arrival { .. } => "arrival",
+            FleetEvent::Departure { .. } => "departure",
+            FleetEvent::TierCapacityChange { .. } => "tier_capacity_change",
+            FleetEvent::RegionOutage { .. } => "region_outage",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("event", Json::str(self.name()))];
+        match self {
+            FleetEvent::DemandDrift { app, demand } => {
+                fields.push(("app", Json::num(app.0 as f64)));
+                fields.push(("cpu", Json::num(demand.cpu())));
+                fields.push(("mem", Json::num(demand.mem())));
+                fields.push(("tasks", Json::num(demand.tasks())));
+            }
+            FleetEvent::Arrival { app } => {
+                fields.push(("app", Json::num(app.id.0 as f64)));
+                fields.push(("spec", app.to_json()));
+            }
+            FleetEvent::Departure { app } => {
+                fields.push(("app", Json::num(app.0 as f64)));
+            }
+            FleetEvent::TierCapacityChange { tier, factor } => {
+                fields.push(("tier", Json::num(tier.0 as f64)));
+                fields.push(("factor", Json::num(*factor)));
+            }
+            FleetEvent::RegionOutage { region } => {
+                fields.push(("region", Json::num(region.0 as f64)));
+            }
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse an event back from its [`FleetEvent::to_json`] form. Float
+    /// fields survive exactly (`Json` prints shortest-roundtrip f64), so
+    /// a journal written by `sptlb serve --event-log` replays the
+    /// recorded run bit-for-bit via `Coordinator::run_events`.
+    pub fn from_json(j: &Json) -> Option<FleetEvent> {
+        match j.get("event").as_str()? {
+            "demand_drift" => Some(FleetEvent::DemandDrift {
+                app: AppId(j.get("app").as_usize()?),
+                demand: ResourceVec::new(
+                    j.get("cpu").as_f64()?,
+                    j.get("mem").as_f64()?,
+                    j.get("tasks").as_f64()?,
+                ),
+            }),
+            "arrival" => Some(FleetEvent::Arrival { app: App::from_json(j.get("spec"))? }),
+            "departure" => Some(FleetEvent::Departure { app: AppId(j.get("app").as_usize()?) }),
+            "tier_capacity_change" => Some(FleetEvent::TierCapacityChange {
+                tier: TierId(j.get("tier").as_usize()?),
+                factor: j.get("factor").as_f64()?,
+            }),
+            "region_outage" => Some(FleetEvent::RegionOutage {
+                region: RegionId(j.get("region").as_usize()?),
+            }),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Criticality, Slo};
+
+    fn sample_app() -> App {
+        App {
+            id: AppId(7),
+            name: "arrival-7".into(),
+            demand: ResourceVec::new(1.0, 2.0, 3.0),
+            slo: Slo::Slo3,
+            criticality: Criticality::new(0.4),
+            preferred_region: RegionId(0),
+        }
+    }
+
+    #[test]
+    fn event_json_names_and_parses() {
+        let events = [
+            FleetEvent::DemandDrift { app: AppId(3), demand: ResourceVec::new(1.0, 2.0, 3.0) },
+            FleetEvent::Arrival { app: sample_app() },
+            FleetEvent::Departure { app: AppId(3) },
+            FleetEvent::TierCapacityChange { tier: TierId(1), factor: 0.5 },
+            FleetEvent::RegionOutage { region: RegionId(2) },
+        ];
+        for ev in &events {
+            let j = ev.to_json().to_string();
+            let parsed = Json::parse(&j).unwrap();
+            assert_eq!(parsed.get("event").as_str(), Some(ev.name()));
+        }
+    }
+
+    #[test]
+    fn event_json_roundtrips_exactly() {
+        // The journal contract: text → parse → same event, bit-for-bit
+        // (demand floats use shortest-roundtrip printing).
+        let events = [
+            FleetEvent::DemandDrift {
+                app: AppId(3),
+                demand: ResourceVec::new(1.0625, 2.333_333_333_333_333, 3.0),
+            },
+            FleetEvent::Arrival { app: sample_app() },
+            FleetEvent::Departure { app: AppId(3) },
+            FleetEvent::TierCapacityChange { tier: TierId(1), factor: 0.4875 },
+            FleetEvent::RegionOutage { region: RegionId(2) },
+        ];
+        for ev in &events {
+            let text = ev.to_json().to_string();
+            let back = FleetEvent::from_json(&Json::parse(&text).unwrap());
+            assert_eq!(back.as_ref(), Some(ev), "{text}");
+        }
+        assert!(FleetEvent::from_json(&Json::parse(r#"{"event":"zzz"}"#).unwrap()).is_none());
+    }
+
+    #[test]
+    fn events_compare_structurally() {
+        let a = FleetEvent::Departure { app: AppId(1) };
+        let b = FleetEvent::Departure { app: AppId(1) };
+        let c = FleetEvent::Departure { app: AppId(2) };
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

@@ -3,12 +3,14 @@
 
 pub mod app;
 pub mod assignment;
+pub mod fleet;
 pub mod region;
 pub mod resources;
 pub mod tier;
 
 pub use app::{App, AppId, Criticality, Slo};
 pub use assignment::{Assignment, Move};
+pub use fleet::FleetEvent;
 pub use region::{RegionId, RegionSet};
 pub use resources::{ResourceKind, ResourceVec, NUM_RESOURCES};
 pub use tier::{default_ideal_utilization, paper_slo_mapping, paper_tiers_for_slo, Tier, TierId};

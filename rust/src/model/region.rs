@@ -52,6 +52,18 @@ impl RegionSet {
         &self.regions
     }
 
+    /// Remove a region (fleet `RegionOutage` event). Returns true if the
+    /// region was present.
+    pub fn remove(&mut self, r: RegionId) -> bool {
+        match self.regions.binary_search(&r) {
+            Ok(i) => {
+                self.regions.remove(i);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
     /// |self ∩ other|.
     pub fn intersection_size(&self, other: &RegionSet) -> usize {
         self.regions.iter().filter(|r| other.contains(**r)).count()

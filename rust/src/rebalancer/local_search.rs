@@ -41,7 +41,7 @@
 //! one implementation call *per shard per generation* (one PJRT dispatch
 //! per shard on the artifact path).
 
-use crate::model::{AppId, Assignment, TierId};
+use crate::model::{AppId, Assignment, ResourceVec, TierId};
 use crate::rebalancer::constraints::{validate, Violation};
 use crate::rebalancer::problem::Problem;
 use crate::rebalancer::scoring::ScoreState;
@@ -500,7 +500,22 @@ impl LocalSearch {
 
     /// Solve with the incremental CPU scorer.
     pub fn solve(&self, problem: &Problem, deadline: Deadline) -> Solution {
-        self.solve_inner(problem, deadline, None, problem.initial.clone())
+        self.solve_inner(problem, deadline, None, problem.initial.clone(), None)
+    }
+
+    /// Solve from the incumbent, warm-starting the score state from
+    /// externally cached per-tier loads (the event-driven engine's
+    /// incrementally patched aggregates) instead of re-accumulating them.
+    /// `loads` must be bit-identical to a fresh accumulation (see
+    /// [`ScoreState::with_loads`]); the returned solution is then
+    /// bit-identical to a cold [`LocalSearch::solve`].
+    pub fn solve_warm(
+        &self,
+        problem: &Problem,
+        deadline: Deadline,
+        loads: &[ResourceVec],
+    ) -> Solution {
+        self.solve_inner(problem, deadline, None, problem.initial.clone(), Some(loads))
     }
 
     /// Solve starting the search from `start` instead of the incumbent
@@ -508,7 +523,7 @@ impl LocalSearch {
     /// OptimalSearch's polish stage. `start` must already satisfy the
     /// movement budget.
     pub fn solve_from(&self, problem: &Problem, deadline: Deadline, start: Assignment) -> Solution {
-        self.solve_inner(problem, deadline, None, start)
+        self.solve_inner(problem, deadline, None, start, None)
     }
 
     /// Solve, scoring candidate *batches* through the supplied scorer
@@ -521,7 +536,7 @@ impl LocalSearch {
         deadline: Deadline,
         scorer: &mut dyn BatchScorer,
     ) -> Solution {
-        self.solve_inner(problem, deadline, Some(scorer), problem.initial.clone())
+        self.solve_inner(problem, deadline, Some(scorer), problem.initial.clone(), None)
     }
 
     fn solve_inner(
@@ -530,19 +545,24 @@ impl LocalSearch {
         deadline: Deadline,
         batch: Option<&mut dyn BatchScorer>,
         start: Assignment,
+        warm_loads: Option<&[ResourceVec]>,
     ) -> Solution {
+        let make_state = |start: Assignment| match warm_loads {
+            Some(l) => ScoreState::with_loads(problem, start, l.to_vec()),
+            None => ScoreState::new(problem, start),
+        };
         let workers = self.config.parallel.workers.max(1).min(problem.n_apps().max(1));
         if workers <= 1 {
             let mut scanner = InlineScanner {
                 problem,
-                state: ScoreState::new(problem, start),
+                state: make_state(start),
                 order: (0..problem.n_apps()).collect(),
             };
             return self.run_search(problem, deadline, batch, &mut scanner);
         }
         let strategy = self.config.parallel.shard_strategy;
         let seed = self.config.seed;
-        let master = ScoreState::new(problem, start);
+        let master = make_state(start);
         std::thread::scope(|scope| {
             let (reply_tx, reply_rx) = mpsc::channel();
             let mut cmd_txs = Vec::with_capacity(workers);
@@ -893,6 +913,22 @@ mod tests {
             .unwrap();
         let sol = LocalSearch::with_seed(8).solve(&p, Deadline::after_ms(100));
         assert!(is_feasible(&p, &sol.assignment));
+    }
+
+    #[test]
+    fn warm_start_is_bit_identical_to_cold_start() {
+        // Warm loads carry the exact aggregates a cold construction would
+        // compute, so the entire search trajectory — and therefore the
+        // returned solution and score — must match bitwise.
+        let p = paper_problem(42);
+        let loads = crate::rebalancer::scoring::tier_loads(&p, &p.initial);
+        for workers in [1usize, 3] {
+            let cold = LocalSearch::sharded(9, workers).solve(&p, Deadline::unbounded());
+            let warm =
+                LocalSearch::sharded(9, workers).solve_warm(&p, Deadline::unbounded(), &loads);
+            assert_eq!(cold.assignment, warm.assignment, "workers={workers}");
+            assert_eq!(cold.score, warm.score, "bitwise score, workers={workers}");
+        }
     }
 
     #[test]

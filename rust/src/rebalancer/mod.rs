@@ -16,8 +16,8 @@ pub use constraints::{is_feasible, validate, Violation};
 pub use goals::{weights_from_priorities, Goal};
 pub use local_search::{LocalSearch, LocalSearchConfig, ParallelConfig, ShardStrategy};
 pub use optimal::{OptimalSearch, OptimalSearchConfig};
-pub use problem::{GoalWeights, Problem, ProblemApp, ProblemTier};
-pub use scoring::{score_assignment, Breakdown, ScoreState};
+pub use problem::{EventDirty, GoalWeights, Problem, ProblemApp, ProblemTier};
+pub use scoring::{refresh_tier_loads, score_assignment, tier_loads, Breakdown, ScoreState};
 pub use solution::{Solution, SolveStats, SolverKind};
 
 use crate::model::Assignment;

@@ -7,7 +7,7 @@
 //! dynamically added constraints), and tier-level forbidden transitions
 //! (the w_cnst region-overlap constraint, C5).
 
-use crate::model::{App, AppId, Assignment, RegionSet, ResourceVec, Tier, TierId};
+use crate::model::{App, AppId, Assignment, FleetEvent, RegionSet, ResourceVec, Slo, Tier, TierId};
 use std::collections::BTreeSet;
 
 /// Tier-transition policy (C5). `All` is the default; `MajorityOverlap`
@@ -120,6 +120,11 @@ impl GoalWeights {
 }
 
 /// The full problem handed to a solver.
+///
+/// Solver-space app ids are always *dense* (`apps[i].id == AppId(i)`);
+/// [`Problem::stable_ids`] maps each dense index back to the fleet's
+/// stable (monotonic, never-reused) app id so the incremental engine can
+/// address apps across arrivals and departures.
 #[derive(Debug, Clone)]
 pub struct Problem {
     pub apps: Vec<ProblemApp>,
@@ -135,6 +140,23 @@ pub struct Problem {
     /// C5 (w_cnst): in-solve transition predicate.
     pub transition_policy: TransitionPolicy,
     pub weights: GoalWeights,
+    /// Fleet-stable app id per dense index (ascending; identity for a
+    /// dense population). Parallel to `apps` and `initial`.
+    pub stable_ids: Vec<AppId>,
+}
+
+/// What a batch of fleet events touched in a [`Problem`] — the dirty set
+/// the incremental engine uses to decide what to re-collect and which
+/// per-tier aggregates to refresh.
+#[derive(Debug, Clone, Default)]
+pub struct EventDirty {
+    /// Dense indices (post-event) of apps whose demand must be
+    /// re-collected: drifted + arrived apps still present.
+    pub apps: Vec<usize>,
+    /// True when arrivals/departures changed the population shape.
+    pub structural: bool,
+    /// True when tier capacities or region sets changed.
+    pub tiers_changed: bool,
 }
 
 #[derive(Debug, thiserror::Error, PartialEq)]
@@ -147,6 +169,8 @@ pub enum ProblemError {
     NoTiers,
     #[error("initial assignment covers {got} apps, expected {want}")]
     SizeMismatch { got: usize, want: usize },
+    #[error("no app with stable id {0:?}")]
+    UnknownApp(AppId),
 }
 
 impl Problem {
@@ -167,19 +191,14 @@ impl Problem {
         }
         let p_apps = apps
             .iter()
-            .map(|a| {
-                let mut allowed: Vec<TierId> = tiers
-                    .iter()
-                    .filter(|t| t.supports_slo(a.slo))
-                    .map(|t| t.id)
-                    .collect();
-                allowed.sort_unstable();
-                allowed.dedup();
+            .enumerate()
+            .map(|(i, a)| {
+                let allowed = Self::allowed_for(tiers, a.slo);
                 if allowed.is_empty() {
                     return Err(ProblemError::Unroutable(a.id));
                 }
                 Ok(ProblemApp {
-                    id: a.id,
+                    id: AppId(i),
                     demand: a.demand,
                     criticality: a.criticality.score(),
                     allowed,
@@ -194,8 +213,7 @@ impl Problem {
                 ideal_utilization: t.ideal_utilization,
             })
             .collect();
-        let max_moves =
-            ((apps.len() as f64) * movement_fraction.clamp(0.0, 1.0)).floor() as usize;
+        let max_moves = Self::movement_budget(apps.len(), movement_fraction);
         let problem = Problem {
             apps: p_apps,
             tiers: p_tiers,
@@ -204,9 +222,135 @@ impl Problem {
             forbidden_transitions: BTreeSet::new(),
             transition_policy: TransitionPolicy::All,
             weights,
+            stable_ids: apps.iter().map(|a| a.id).collect(),
         };
         problem.check()?;
         Ok(problem)
+    }
+
+    /// C3 budget formula shared by [`Problem::build`] and the incremental
+    /// [`Problem::apply_events`] path (the two must agree bit-for-bit).
+    pub fn movement_budget(n_apps: usize, movement_fraction: f64) -> usize {
+        ((n_apps as f64) * movement_fraction.clamp(0.0, 1.0)).floor() as usize
+    }
+
+    /// The base (C4) allowed-tier set for an SLO class: every supporting
+    /// tier, ascending. Shared by [`Problem::build`], arrivals in
+    /// [`Problem::apply_events`], and the engine's avoid-edge decay
+    /// restoration, so all three produce identical vectors.
+    pub fn allowed_for(tiers: &[Tier], slo: Slo) -> Vec<TierId> {
+        let mut allowed: Vec<TierId> = tiers
+            .iter()
+            .filter(|t| t.supports_slo(slo))
+            .map(|t| t.id)
+            .collect();
+        allowed.sort_unstable();
+        allowed.dedup();
+        allowed
+    }
+
+    /// Dense index of a fleet-stable app id, if present.
+    pub fn index_of_stable(&self, id: AppId) -> Option<usize> {
+        self.stable_ids.binary_search(&id).ok()
+    }
+
+    /// Replace an app's allowed set (C4/C6) wholesale — the engine's
+    /// avoid-constraint decay path. `allowed` must be sorted, deduped and
+    /// non-empty.
+    pub fn set_allowed(&mut self, idx: usize, allowed: Vec<TierId>) {
+        debug_assert!(!allowed.is_empty(), "allowed set must stay routable");
+        debug_assert!(allowed.windows(2).all(|w| w[0] < w[1]), "sorted + deduped");
+        self.apps[idx].allowed = allowed;
+    }
+
+    /// Incremental §3.2 construction: apply a round's fleet events to
+    /// this problem *in place* instead of rebuilding it from scratch.
+    ///
+    /// `tiers` is the post-event tier truth, `new_initial` the post-event
+    /// incumbent (positional, parallel to the post-event population), and
+    /// `movement_fraction` the C3 knob (the budget is recomputed because
+    /// arrivals/departures change the population size). Demands are set
+    /// to the events' *registered* values; the caller substitutes
+    /// collected (p99) demands for the returned dirty apps afterwards.
+    ///
+    /// Equivalence contract: after this call the problem must be
+    /// indistinguishable from `Problem::build` on the post-event fleet
+    /// (modulo avoid edges, which the engine owns) — the incremental
+    /// engine's bit-identical-reports guarantee rests on it.
+    pub fn apply_events(
+        &mut self,
+        events: &[FleetEvent],
+        tiers: &[Tier],
+        new_initial: &Assignment,
+        movement_fraction: f64,
+    ) -> Result<EventDirty, ProblemError> {
+        let mut dirty_stable: BTreeSet<AppId> = BTreeSet::new();
+        let mut structural = false;
+        let mut tiers_changed = false;
+        for ev in events {
+            match ev {
+                FleetEvent::DemandDrift { app, demand } => {
+                    let idx = self
+                        .index_of_stable(*app)
+                        .ok_or(ProblemError::UnknownApp(*app))?;
+                    self.apps[idx].demand = *demand;
+                    dirty_stable.insert(*app);
+                }
+                FleetEvent::Arrival { app } => {
+                    let allowed = Self::allowed_for(tiers, app.slo);
+                    if allowed.is_empty() {
+                        return Err(ProblemError::Unroutable(app.id));
+                    }
+                    self.apps.push(ProblemApp {
+                        id: AppId(self.apps.len()),
+                        demand: app.demand,
+                        criticality: app.criticality.score(),
+                        allowed,
+                    });
+                    self.stable_ids.push(app.id);
+                    dirty_stable.insert(app.id);
+                    structural = true;
+                }
+                FleetEvent::Departure { app } => {
+                    let idx = self
+                        .index_of_stable(*app)
+                        .ok_or(ProblemError::UnknownApp(*app))?;
+                    self.apps.remove(idx);
+                    self.stable_ids.remove(idx);
+                    // Re-densify solver-space ids after the removed slot.
+                    for j in idx..self.apps.len() {
+                        self.apps[j].id = AppId(j);
+                    }
+                    dirty_stable.remove(app);
+                    structural = true;
+                }
+                FleetEvent::TierCapacityChange { .. } | FleetEvent::RegionOutage { .. } => {
+                    tiers_changed = true;
+                }
+            }
+        }
+        if tiers_changed {
+            for (pt, t) in self.tiers.iter_mut().zip(tiers) {
+                pt.capacity = t.capacity;
+                pt.ideal_utilization = t.ideal_utilization;
+            }
+            if let TransitionPolicy::MajorityOverlap { regions } = &mut self.transition_policy {
+                *regions = tiers.iter().map(|t| t.regions.clone()).collect();
+            }
+        }
+        if new_initial.n_apps() != self.apps.len() {
+            return Err(ProblemError::SizeMismatch {
+                got: new_initial.n_apps(),
+                want: self.apps.len(),
+            });
+        }
+        self.initial = new_initial.clone();
+        self.max_moves = Self::movement_budget(self.apps.len(), movement_fraction);
+        let apps = dirty_stable
+            .iter()
+            .filter_map(|id| self.index_of_stable(*id))
+            .collect();
+        Ok(EventDirty { apps, structural, tiers_changed })
     }
 
     /// Structural sanity (initial tiers in range, allowed sets non-empty).
@@ -217,6 +361,12 @@ impl Problem {
         if self.initial.n_apps() != self.apps.len() {
             return Err(ProblemError::SizeMismatch {
                 got: self.initial.n_apps(),
+                want: self.apps.len(),
+            });
+        }
+        if self.stable_ids.len() != self.apps.len() {
+            return Err(ProblemError::SizeMismatch {
+                got: self.stable_ids.len(),
                 want: self.apps.len(),
             });
         }
@@ -380,6 +530,89 @@ mod tests {
         )
         .unwrap();
         assert_eq!(p.max_moves, 2); // floor(2.4)
+    }
+
+    #[test]
+    fn build_produces_dense_ids_and_identity_stable_map() {
+        let p = paper_problem();
+        for (i, app) in p.apps.iter().enumerate() {
+            assert_eq!(app.id, AppId(i));
+            assert_eq!(p.stable_ids[i], AppId(i));
+        }
+        assert_eq!(p.index_of_stable(AppId(5)), Some(5));
+        assert_eq!(p.index_of_stable(AppId(10_000)), None);
+    }
+
+    #[test]
+    fn apply_events_matches_rebuild_from_scratch() {
+        use crate::model::FleetEvent;
+        let bed = generate(&WorkloadSpec::small());
+        let mut p = Problem::build(
+            &bed.apps,
+            &bed.tiers,
+            bed.initial.clone(),
+            0.10,
+            GoalWeights::default(),
+        )
+        .unwrap();
+
+        // Post-event fleet built by hand, in the same event order.
+        let mut apps = bed.apps.clone();
+        let mut tiers = bed.tiers.clone();
+        let mut initial = bed.initial.clone();
+        let drifted = apps[0].demand.scale(1.5);
+        let arrival = crate::model::App {
+            id: AppId(apps.len()),
+            name: "arrival-extra".into(),
+            ..apps[1].clone()
+        };
+        let arrival_tier = tiers.iter().find(|t| t.supports_slo(arrival.slo)).unwrap().id;
+        let events = vec![
+            FleetEvent::DemandDrift { app: AppId(0), demand: drifted },
+            FleetEvent::Departure { app: AppId(3) },
+            FleetEvent::Arrival { app: arrival.clone() },
+            FleetEvent::TierCapacityChange { tier: TierId(0), factor: 0.9 },
+        ];
+        apps[0].demand = drifted;
+        apps.remove(3);
+        initial.remove(3);
+        apps.push(arrival);
+        initial.push(arrival_tier);
+        tiers[0].capacity = tiers[0].capacity.scale(0.9);
+
+        let dirty = p.apply_events(&events, &tiers, &initial, 0.10).unwrap();
+        let rebuilt =
+            Problem::build(&apps, &tiers, initial.clone(), 0.10, GoalWeights::default()).unwrap();
+        assert_eq!(p.apps, rebuilt.apps);
+        assert_eq!(p.stable_ids, rebuilt.stable_ids);
+        assert_eq!(p.initial, rebuilt.initial);
+        assert_eq!(p.max_moves, rebuilt.max_moves);
+        assert_eq!(p.tiers, rebuilt.tiers);
+        assert!(p.check().is_ok());
+        assert!(dirty.structural);
+        assert!(dirty.tiers_changed);
+        // Dirty apps: the drifted app (index 0) and the arrival (last).
+        assert!(dirty.apps.contains(&0));
+        assert!(dirty.apps.contains(&(p.n_apps() - 1)));
+    }
+
+    #[test]
+    fn apply_events_rejects_unknown_apps() {
+        use crate::model::FleetEvent;
+        let bed = generate(&WorkloadSpec::small());
+        let mut p = Problem::build(
+            &bed.apps,
+            &bed.tiers,
+            bed.initial.clone(),
+            0.10,
+            GoalWeights::default(),
+        )
+        .unwrap();
+        let ev = vec![FleetEvent::Departure { app: AppId(999) }];
+        assert!(matches!(
+            p.apply_events(&ev, &bed.tiers, &bed.initial, 0.10),
+            Err(ProblemError::UnknownApp(_))
+        ));
     }
 
     #[test]

@@ -11,8 +11,50 @@
 
 use crate::model::{Assignment, ResourceVec, TierId, NUM_RESOURCES};
 use crate::rebalancer::problem::Problem;
+use std::collections::BTreeSet;
 
 const EPS: f64 = 1e-12;
+
+/// Per-tier loads of `assignment` over the problem's demands, accumulated
+/// in ascending app order. This is THE canonical accumulation order:
+/// [`ScoreState::new`], the incremental engine's cached aggregates, and
+/// [`refresh_tier_loads`] all add contributions in this exact sequence,
+/// which is what makes warm-started loads *bit-identical* to a fresh
+/// rebuild (float addition is order-sensitive).
+pub fn tier_loads(problem: &Problem, assignment: &Assignment) -> Vec<ResourceVec> {
+    assert_eq!(assignment.n_apps(), problem.n_apps(), "assignment size");
+    let mut loads = vec![ResourceVec::ZERO; problem.n_tiers()];
+    for (i, app) in problem.apps.iter().enumerate() {
+        loads[assignment.as_slice()[i].0] += app.demand;
+    }
+    loads
+}
+
+/// Recompute only the `dirty` tiers' loads in place, leaving the rest
+/// untouched. Uses the same ascending-app accumulation as [`tier_loads`],
+/// so every refreshed entry is bit-identical to a full rebuild — the
+/// incremental engine's equivalence contract depends on it.
+pub fn refresh_tier_loads(
+    problem: &Problem,
+    assignment: &Assignment,
+    loads: &mut [ResourceVec],
+    dirty: &BTreeSet<TierId>,
+) {
+    assert_eq!(loads.len(), problem.n_tiers(), "loads cache size");
+    assert_eq!(assignment.n_apps(), problem.n_apps(), "assignment size");
+    if dirty.is_empty() {
+        return;
+    }
+    for t in dirty {
+        loads[t.0] = ResourceVec::ZERO;
+    }
+    for (i, app) in problem.apps.iter().enumerate() {
+        let t = assignment.as_slice()[i];
+        if dirty.contains(&t) {
+            loads[t.0] += app.demand;
+        }
+    }
+}
 
 /// Per-goal score components (useful for §3.3's decision evaluation and
 /// for debugging goal tuning).
@@ -84,15 +126,33 @@ pub struct Applied {
 
 impl<'p> ScoreState<'p> {
     pub fn new(problem: &'p Problem, assignment: Assignment) -> Self {
+        let loads = tier_loads(problem, &assignment);
+        Self::with_loads(problem, assignment, loads)
+    }
+
+    /// Warm-start construction from externally maintained per-tier loads
+    /// (the incremental engine's cached aggregates). `loads` MUST equal
+    /// what [`tier_loads`] would compute — bit-for-bit, not just within
+    /// epsilon — or incremental solves diverge from cold ones; a debug
+    /// assertion enforces it. Skipping the O(A) load accumulation is what
+    /// the solver's event-driven warm start buys.
+    pub fn with_loads(
+        problem: &'p Problem,
+        assignment: Assignment,
+        loads: Vec<ResourceVec>,
+    ) -> Self {
         assert_eq!(assignment.n_apps(), problem.n_apps(), "assignment size");
-        let mut loads = vec![ResourceVec::ZERO; problem.n_tiers()];
+        assert_eq!(loads.len(), problem.n_tiers(), "loads size");
+        debug_assert_eq!(
+            loads,
+            tier_loads(problem, &assignment),
+            "warm loads must be bit-identical to a fresh accumulation"
+        );
         let mut moved_tasks = 0.0;
         let mut moved_crit = 0.0;
         let mut n_moved = 0;
         for (i, app) in problem.apps.iter().enumerate() {
-            let t = assignment.as_slice()[i];
-            loads[t.0] += app.demand;
-            if t != problem.initial.as_slice()[i] {
+            if assignment.as_slice()[i] != problem.initial.as_slice()[i] {
                 moved_tasks += app.demand.tasks();
                 moved_crit += app.criticality;
                 n_moved += 1;
@@ -428,6 +488,40 @@ mod tests {
                 )
             },
         );
+    }
+
+    #[test]
+    fn refreshed_dirty_tiers_are_bit_identical_to_full_rebuild() {
+        // Patch a few demands, refresh only the touched tiers, and the
+        // cache must equal a from-scratch accumulation EXACTLY (==, not
+        // within epsilon) — the warm-start equivalence contract.
+        let mut p = paper_problem();
+        let assignment = p.initial.clone();
+        let mut loads = tier_loads(&p, &assignment);
+        let mut rng = Pcg64::new(4);
+        for _ in 0..20 {
+            let mut dirty = std::collections::BTreeSet::new();
+            for _ in 0..3 {
+                let i = rng.range(0, p.n_apps());
+                p.apps[i].demand = p.apps[i].demand.scale(rng.uniform(0.5, 2.0));
+                dirty.insert(assignment.as_slice()[i]);
+            }
+            refresh_tier_loads(&p, &assignment, &mut loads, &dirty);
+            assert_eq!(loads, tier_loads(&p, &assignment), "bitwise cache equality");
+        }
+    }
+
+    #[test]
+    fn with_loads_equals_cold_construction() {
+        let p = paper_problem();
+        let mut asg = p.initial.clone();
+        asg.set(AppId(0), *p.apps[0].allowed.last().unwrap());
+        let loads = tier_loads(&p, &asg);
+        let warm = ScoreState::with_loads(&p, asg.clone(), loads);
+        let cold = ScoreState::new(&p, asg);
+        assert_eq!(warm.score(), cold.score(), "bitwise score equality");
+        assert_eq!(warm.loads(), cold.loads());
+        assert_eq!(warm.n_moved(), cold.n_moved());
     }
 
     #[test]

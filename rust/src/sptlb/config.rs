@@ -30,6 +30,13 @@ pub struct SptlbConfig {
     pub hosts_per_tier: usize,
     /// Protocol iteration limit (Fig. 2: "number of iterations limit").
     pub max_coop_rounds: u32,
+    /// Service-mode decay for protocol-added avoid constraints: an avoid
+    /// edge (or forbidden transition) added in round r stays in force for
+    /// the next `avoid_decay` rounds, then expires and the tier returns
+    /// to the app's allowed set. 0 (the default) reproduces the legacy
+    /// rebuild-every-round behaviour where edges live only within the
+    /// round that added them.
+    pub avoid_decay: u32,
     /// Sharded local-search parallelism (workers + shard strategy).
     pub parallel: ParallelConfig,
     pub seed: u64,
@@ -47,6 +54,7 @@ impl Default for SptlbConfig {
             proximity_budget_ms: crate::hierarchy::variants::DEFAULT_PROXIMITY_MS,
             hosts_per_tier: crate::hierarchy::variants::DEFAULT_HOSTS_PER_TIER,
             max_coop_rounds: 8,
+            avoid_decay: 0,
             parallel: ParallelConfig::default(),
             seed: 42,
         }
@@ -83,6 +91,7 @@ impl SptlbConfig {
             ("proximity_budget_ms", Json::num(self.proximity_budget_ms)),
             ("hosts_per_tier", Json::num(self.hosts_per_tier as f64)),
             ("max_coop_rounds", Json::num(self.max_coop_rounds as f64)),
+            ("avoid_decay", Json::num(self.avoid_decay as f64)),
             ("workers", Json::num(self.parallel.workers as f64)),
             ("shard_strategy", Json::str(self.parallel.shard_strategy.name())),
             ("seed", Json::num(self.seed as f64)),
@@ -145,6 +154,9 @@ impl SptlbConfig {
         if let Some(r) = j.get("max_coop_rounds").as_usize() {
             cfg.max_coop_rounds = r as u32;
         }
+        if let Some(d) = j.get("avoid_decay").as_usize() {
+            cfg.avoid_decay = d as u32;
+        }
         if let Some(w) = j.get("workers").as_usize() {
             if w == 0 {
                 return Err(ConfigError::Invalid { field: "workers", value: "0".into() });
@@ -183,6 +195,13 @@ mod tests {
         assert_eq!(back.goal_order, cfg.goal_order);
         assert_eq!(back.weights(), cfg.weights());
         assert_eq!(back.parallel, cfg.parallel);
+        assert_eq!(back.avoid_decay, cfg.avoid_decay);
+    }
+
+    #[test]
+    fn avoid_decay_parses() {
+        let j = Json::parse(r#"{"avoid_decay":3}"#).unwrap();
+        assert_eq!(SptlbConfig::from_json(&j).unwrap().avoid_decay, 3);
     }
 
     #[test]

@@ -135,17 +135,40 @@ impl Sptlb {
             self.config.weights(),
         )
         .expect("collected inputs are structurally valid");
-        let initial_utilization = initial.tier_utilizations(&apps, tiers);
+
+        self.solve_collected(&mut problem, &apps, tiers, latency, None, collect_ms, pipeline_sw)
+    }
+
+    /// Stages 3–4 on an already-constructed problem: solve under the
+    /// configured integration variant, then evaluate the decision. The
+    /// problem is mutated in place (the co-operation protocol adds avoid
+    /// edges to it) and *cloned* into the report, so long-lived callers —
+    /// the event-driven coordinator engine — keep their problem across
+    /// rounds instead of rebuilding it. `apps` is the collected-demand
+    /// population, positionally parallel to the problem; `warm_loads`
+    /// optionally carries the engine's cached incumbent per-tier
+    /// aggregates (must be bit-identical to a fresh accumulation).
+    pub fn solve_collected(
+        &self,
+        problem: &mut Problem,
+        apps: &[App],
+        tiers: &[Tier],
+        latency: &LatencyMatrix,
+        warm_loads: Option<&[ResourceVec]>,
+        collect_ms: f64,
+        pipeline_sw: Stopwatch,
+    ) -> BalanceReport {
+        let initial_utilization = problem.initial.tier_utilizations(apps, tiers);
 
         // ---- stage 3: solve (per integration variant) + execute ------
         let deadline = Deadline::after(self.config.timeout);
         let (solution, coop) = match self.config.variant {
-            Variant::NoCnst => (self.solve_plain(&problem, deadline), None),
+            Variant::NoCnst => (self.solve_plain(problem, deadline, warm_loads), None),
             Variant::WCnst => {
                 problem.transition_policy = TransitionPolicy::MajorityOverlap {
                     regions: tiers.iter().map(|t| t.regions.clone()).collect(),
                 };
-                (self.solve_plain(&problem, deadline), None)
+                (self.solve_plain(problem, deadline, warm_loads), None)
             }
             Variant::ManualCnst => {
                 let region =
@@ -161,21 +184,21 @@ impl Sptlb {
                         seed: self.config.seed,
                     },
                 );
-                let out = proto.run(&mut problem, &apps, tiers, deadline);
+                let out = proto.run_warm(problem, apps, tiers, deadline, warm_loads);
                 (out.solution.clone(), Some(out))
             }
         };
 
         // ---- decision evaluation / metric emission --------------------
-        let violations = validate(&problem, &solution.assignment);
-        let moves = solution.moves(&problem);
+        let violations = validate(problem, &solution.assignment);
+        let moves = solution.moves(problem);
         let mut rng = Pcg64::new(self.config.seed ^ 0x4E7);
         let p99_latency_ms = solution_p99_latency_ms(&moves, tiers, latency, &mut rng);
-        let projected_utilization = solution.projected_utilizations(&problem);
+        let projected_utilization = solution.projected_utilizations(problem);
 
         BalanceReport {
             solution,
-            problem,
+            problem: problem.clone(),
             initial_utilization,
             projected_utilization,
             violations,
@@ -186,14 +209,24 @@ impl Sptlb {
         }
     }
 
-    fn solve_plain(&self, problem: &Problem, deadline: Deadline) -> Solution {
+    fn solve_plain(
+        &self,
+        problem: &Problem,
+        deadline: Deadline,
+        warm_loads: Option<&[ResourceVec]>,
+    ) -> Solution {
         match self.config.solver {
-            SolverKind::LocalSearch => LocalSearch::new(LocalSearchConfig {
-                seed: self.config.seed,
-                parallel: self.config.parallel,
-                ..LocalSearchConfig::default()
-            })
-            .solve(problem, deadline),
+            SolverKind::LocalSearch => {
+                let solver = LocalSearch::new(LocalSearchConfig {
+                    seed: self.config.seed,
+                    parallel: self.config.parallel,
+                    ..LocalSearchConfig::default()
+                });
+                match warm_loads {
+                    Some(loads) => solver.solve_warm(problem, deadline, loads),
+                    None => solver.solve(problem, deadline),
+                }
+            }
             SolverKind::OptimalSearch => {
                 OptimalSearch::with_seed(self.config.seed).solve(problem, deadline)
             }

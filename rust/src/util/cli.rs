@@ -201,6 +201,20 @@ impl Parsed {
         self.parse_as(name)
     }
 
+    /// Typed accessor with an inclusive range — for probabilities and
+    /// fractions (e.g. `--drift-frac`, `--arrivals`).
+    pub fn f64_in_range(&self, name: &str, lo: f64, hi: f64) -> Result<f64, CliError> {
+        let v = self.f64(name)?;
+        if !(lo..=hi).contains(&v) {
+            return Err(CliError::InvalidValue {
+                key: name.to_string(),
+                value: v.to_string(),
+                why: format!("must be in [{lo}, {hi}]"),
+            });
+        }
+        Ok(v)
+    }
+
     /// Comma-separated list.
     pub fn list(&self, name: &str) -> Result<Vec<String>, CliError> {
         Ok(self
@@ -277,6 +291,18 @@ mod tests {
         let p = c.parse(&args(&["--workers", "0"])).unwrap();
         assert!(matches!(
             p.usize_at_least("workers", 1),
+            Err(CliError::InvalidValue { .. })
+        ));
+    }
+
+    #[test]
+    fn f64_in_range_enforces_bounds() {
+        let c = Command::new("x", "y").opt("frac", "0.5", "a fraction");
+        let p = c.parse(&args(&["--frac", "0.25"])).unwrap();
+        assert_eq!(p.f64_in_range("frac", 0.0, 1.0).unwrap(), 0.25);
+        let p = c.parse(&args(&["--frac", "1.5"])).unwrap();
+        assert!(matches!(
+            p.f64_in_range("frac", 0.0, 1.0),
             Err(CliError::InvalidValue { .. })
         ));
     }

@@ -24,6 +24,14 @@ impl Check {
             Check::Fail(msg.to_string())
         }
     }
+
+    pub fn pass() -> Check {
+        Check::Pass
+    }
+
+    pub fn fail(msg: &str) -> Check {
+        Check::Fail(msg.to_string())
+    }
 }
 
 /// Run `prop` over `cases` generated inputs. Panics (test failure) with the

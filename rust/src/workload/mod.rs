@@ -5,6 +5,10 @@
 //! initial assignment shaped like Fig. 3's initial state (one tier pushed
 //! well above its ideal utilization).
 
+pub mod scenario;
+
+pub use scenario::{ScenarioConfig, ScenarioGen};
+
 use crate::model::tier::default_ideal_utilization;
 use crate::model::{
     paper_slo_mapping, paper_tiers_for_slo, App, AppId, Assignment, Criticality, RegionId,

@@ -1,0 +1,323 @@
+//! Event-stream scenario generators for service mode. Where `generate`
+//! produces the *initial* testbed snapshot, a [`ScenarioGen`] produces
+//! the per-round [`FleetEvent`] stream the coordinator reacts to:
+//! demand drift on a configurable fraction of the fleet, app
+//! arrivals/departures (churn), periodic load spikes, and a one-shot
+//! region outage. Generation is deterministic given the scenario seed
+//! and the fleet state it observes, so recorded logs replay exactly.
+
+use crate::model::{App, AppId, FleetEvent, RegionId, Tier};
+use crate::util::prng::Pcg64;
+
+/// Scenario knobs. Presets ([`ScenarioConfig::drift`] etc.) configure
+/// the common shapes; every knob can be overridden afterwards.
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    /// Lognormal sigma of per-app multiplicative demand drift (0 = none).
+    pub drift_sigma: f64,
+    /// Fraction of apps that drift each round (1.0 = whole fleet).
+    pub drift_fraction: f64,
+    /// Probability a new app arrives in a round.
+    pub arrival_prob: f64,
+    /// Probability an app departs in a round.
+    pub departure_prob: f64,
+    /// Every `spike_period` rounds a random subset spikes (None = never).
+    pub spike_period: Option<u32>,
+    /// Fraction of apps hit by a spike.
+    pub spike_fraction: f64,
+    /// Demand multiplier during a spike.
+    pub spike_factor: f64,
+    /// Round at which one region goes dark (None = never).
+    pub outage_round: Option<u32>,
+    pub seed: u64,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig::drift()
+    }
+}
+
+impl ScenarioConfig {
+    fn base() -> Self {
+        Self {
+            drift_sigma: 0.05,
+            drift_fraction: 1.0,
+            arrival_prob: 0.0,
+            departure_prob: 0.0,
+            spike_period: None,
+            spike_fraction: 0.2,
+            spike_factor: 2.0,
+            outage_round: None,
+            seed: 42,
+        }
+    }
+
+    /// No events at all (regression baseline).
+    pub fn steady() -> Self {
+        Self { drift_sigma: 0.0, drift_fraction: 0.0, ..Self::base() }
+    }
+
+    /// Whole-fleet demand wobble — the legacy coordinator behaviour.
+    pub fn drift() -> Self {
+        Self::base()
+    }
+
+    /// Drift plus app arrivals and departures.
+    pub fn churn() -> Self {
+        Self { arrival_prob: 0.5, departure_prob: 0.3, ..Self::base() }
+    }
+
+    /// Drift plus a periodic load spike on a random subset.
+    pub fn spike() -> Self {
+        Self { spike_period: Some(5), ..Self::base() }
+    }
+
+    /// Drift plus a one-shot region outage.
+    pub fn outage() -> Self {
+        Self { outage_round: Some(3), ..Self::base() }
+    }
+
+    /// Everything at once: drift, churn, spikes, and an outage.
+    pub fn mixed() -> Self {
+        Self {
+            drift_fraction: 0.3,
+            arrival_prob: 0.5,
+            departure_prob: 0.3,
+            spike_period: Some(7),
+            outage_round: Some(5),
+            ..Self::base()
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "steady" => Some(Self::steady()),
+            "drift" => Some(Self::drift()),
+            "churn" => Some(Self::churn()),
+            "spike" => Some(Self::spike()),
+            "outage" => Some(Self::outage()),
+            "mixed" => Some(Self::mixed()),
+            _ => None,
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Stateful event-stream generator. Events are emitted in a fixed order
+/// (drift, spike, outage, departure, arrival) and every random draw
+/// comes from one PRNG stream, so the same config over the same observed
+/// fleet states yields the same log.
+pub struct ScenarioGen {
+    pub config: ScenarioConfig,
+    rng: Pcg64,
+}
+
+/// Fleet size floor below which departures stop firing (keeps degenerate
+/// populations out of the solver).
+const MIN_FLEET_FOR_DEPARTURE: usize = 8;
+
+impl ScenarioGen {
+    pub fn new(config: ScenarioConfig) -> Self {
+        let rng = Pcg64::new(config.seed ^ 0xE7E27);
+        Self { config, rng }
+    }
+
+    /// Events for one round, given the current fleet view. `next_app_id`
+    /// is the fleet's monotonic id counter; arrivals are emitted with the
+    /// ids they will be allocated, so a recorded log replays exactly.
+    pub fn events_for_round(
+        &mut self,
+        round: u32,
+        apps: &[App],
+        tiers: &[Tier],
+        next_app_id: usize,
+    ) -> Vec<FleetEvent> {
+        let cfg = self.config.clone();
+        let mut events = Vec::new();
+
+        // -- demand drift over a fraction of the fleet ------------------
+        if cfg.drift_sigma > 0.0 && cfg.drift_fraction > 0.0 {
+            for app in apps {
+                if !self.rng.chance(cfg.drift_fraction) {
+                    continue;
+                }
+                let m = self.rng.log_normal(0.0, cfg.drift_sigma);
+                let mut demand = app.demand.scale(m);
+                demand.0[2] = demand.0[2].round().max(1.0);
+                events.push(FleetEvent::DemandDrift { app: app.id, demand });
+            }
+        }
+
+        // -- periodic load spike ---------------------------------------
+        if let Some(period) = cfg.spike_period {
+            if period > 0 && round > 0 && round % period == 0 {
+                for app in apps {
+                    if !self.rng.chance(cfg.spike_fraction) {
+                        continue;
+                    }
+                    let mut demand = app.demand.scale(cfg.spike_factor);
+                    demand.0[2] = demand.0[2].round().max(1.0);
+                    events.push(FleetEvent::DemandDrift { app: app.id, demand });
+                }
+            }
+        }
+
+        // -- one-shot region outage ------------------------------------
+        if cfg.outage_round == Some(round) {
+            if let Some(region) = self.pick_outage_region(tiers) {
+                events.push(FleetEvent::RegionOutage { region });
+            }
+        }
+
+        // -- churn: departure then arrival -----------------------------
+        if cfg.departure_prob > 0.0
+            && apps.len() > MIN_FLEET_FOR_DEPARTURE
+            && self.rng.chance(cfg.departure_prob)
+        {
+            let victim = apps[self.rng.range(0, apps.len())].id;
+            events.push(FleetEvent::Departure { app: victim });
+        }
+        if cfg.arrival_prob > 0.0 && !apps.is_empty() && self.rng.chance(cfg.arrival_prob) {
+            let template = &apps[self.rng.range(0, apps.len())];
+            let id = AppId(next_app_id);
+            events.push(FleetEvent::Arrival {
+                app: App {
+                    id,
+                    name: format!("arrival-{}", id.0),
+                    ..template.clone()
+                },
+            });
+        }
+
+        events
+    }
+
+    /// A region every containing tier can survive losing (i.e. no tier
+    /// would end up with an empty region set), chosen uniformly.
+    fn pick_outage_region(&mut self, tiers: &[Tier]) -> Option<RegionId> {
+        let mut candidates: Vec<RegionId> = Vec::new();
+        for t in tiers {
+            for r in t.regions.iter() {
+                if !candidates.contains(&r) {
+                    candidates.push(r);
+                }
+            }
+        }
+        candidates.sort_unstable();
+        candidates.retain(|r| {
+            tiers
+                .iter()
+                .all(|t| !t.regions.contains(*r) || t.regions.len() > 1)
+        });
+        if candidates.is_empty() {
+            return None;
+        }
+        Some(candidates[self.rng.range(0, candidates.len())])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{generate, WorkloadSpec};
+
+    fn bed() -> crate::workload::TestBed {
+        generate(&WorkloadSpec::small())
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let bed = bed();
+        let run = || {
+            let mut g = ScenarioGen::new(ScenarioConfig::mixed().with_seed(9));
+            (0..8)
+                .map(|r| g.events_for_round(r, &bed.apps, &bed.tiers, bed.apps.len()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn steady_emits_nothing() {
+        let bed = bed();
+        let mut g = ScenarioGen::new(ScenarioConfig::steady());
+        for r in 0..5 {
+            assert!(g.events_for_round(r, &bed.apps, &bed.tiers, bed.apps.len()).is_empty());
+        }
+    }
+
+    #[test]
+    fn drift_touches_roughly_the_configured_fraction() {
+        let bed = generate(&WorkloadSpec::paper());
+        let cfg = ScenarioConfig { drift_fraction: 0.25, ..ScenarioConfig::drift() };
+        let mut g = ScenarioGen::new(cfg);
+        let mut total = 0usize;
+        let rounds = 40;
+        for r in 0..rounds {
+            total += g
+                .events_for_round(r, &bed.apps, &bed.tiers, bed.apps.len())
+                .len();
+        }
+        let mean = total as f64 / rounds as f64;
+        let expect = bed.apps.len() as f64 * 0.25;
+        assert!(
+            (mean - expect).abs() < expect * 0.35,
+            "mean {mean:.1} events/round vs expected ~{expect:.1}"
+        );
+    }
+
+    #[test]
+    fn outage_fires_once_and_is_survivable() {
+        let bed = bed();
+        let cfg = ScenarioConfig { drift_sigma: 0.0, ..ScenarioConfig::outage() };
+        let mut g = ScenarioGen::new(cfg.clone());
+        let mut outages = Vec::new();
+        for r in 0..8 {
+            for ev in g.events_for_round(r, &bed.apps, &bed.tiers, bed.apps.len()) {
+                if let FleetEvent::RegionOutage { region } = ev {
+                    outages.push((r, region));
+                }
+            }
+        }
+        assert_eq!(outages.len(), 1);
+        assert_eq!(outages[0].0, cfg.outage_round.unwrap());
+        let region = outages[0].1;
+        for t in &bed.tiers {
+            assert!(!t.regions.contains(region) || t.regions.len() > 1);
+        }
+    }
+
+    #[test]
+    fn arrivals_carry_the_fleet_next_id() {
+        let bed = bed();
+        let cfg = ScenarioConfig {
+            drift_sigma: 0.0,
+            arrival_prob: 1.0,
+            departure_prob: 0.0,
+            ..ScenarioConfig::churn()
+        };
+        let mut g = ScenarioGen::new(cfg);
+        let events = g.events_for_round(0, &bed.apps, &bed.tiers, 1234);
+        assert_eq!(events.len(), 1);
+        match &events[0] {
+            FleetEvent::Arrival { app } => {
+                assert_eq!(app.id, AppId(1234));
+                assert_eq!(app.name, "arrival-1234");
+            }
+            other => panic!("expected arrival, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn presets_resolve_by_name() {
+        for name in ["steady", "drift", "churn", "spike", "outage", "mixed"] {
+            assert!(ScenarioConfig::by_name(name).is_some(), "{name}");
+        }
+        assert!(ScenarioConfig::by_name("zzz").is_none());
+    }
+}

@@ -1,0 +1,273 @@
+//! The incremental engine's equivalence contract (ISSUE 2 acceptance):
+//! for any event stream, the event-driven engine must produce per-round
+//! `BalanceReport`s **bit-identical** to the rebuild-from-scratch path —
+//! same scores (to the bit), same assignments, same utilizations — across
+//! arrivals, departures, demand drift, and a region outage. Plus the
+//! replay-determinism property: re-running a recorded event log yields
+//! the identical decision log for any local-search worker count.
+//!
+//! All runs use generous solver deadlines so termination comes from
+//! convergence (`max_stale_restarts`), never from wall clock.
+
+use sptlb::coordinator::{
+    Coordinator, CoordinatorConfig, EngineMode, FleetDelta, FleetEngine, FleetState,
+};
+use sptlb::hierarchy::variants::Variant;
+use sptlb::model::FleetEvent;
+use sptlb::rebalancer::ParallelConfig;
+use sptlb::sptlb::{BalanceReport, SptlbConfig};
+use sptlb::util::propcheck::{forall, Check};
+use sptlb::workload::{generate, ScenarioConfig, WorkloadSpec};
+use std::time::Duration;
+
+fn config(
+    variant: Variant,
+    scenario: ScenarioConfig,
+    decay: u32,
+    engine: EngineMode,
+    workers: usize,
+) -> CoordinatorConfig {
+    CoordinatorConfig {
+        sptlb: SptlbConfig {
+            variant,
+            timeout: Duration::from_secs(20),
+            avoid_decay: decay,
+            max_coop_rounds: 2,
+            samples_per_app: 60,
+            parallel: ParallelConfig::with_workers(workers),
+            ..SptlbConfig::default()
+        },
+        scenario,
+        engine,
+        ..CoordinatorConfig::default()
+    }
+}
+
+fn assert_reports_bit_identical(a: &[BalanceReport], b: &[BalanceReport]) {
+    assert_eq!(a.len(), b.len());
+    for (round, (ra, rb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            ra.solution.assignment, rb.solution.assignment,
+            "round {round}: assignments diverged"
+        );
+        assert_eq!(
+            ra.solution.score.to_bits(),
+            rb.solution.score.to_bits(),
+            "round {round}: score {} vs {}",
+            ra.solution.score,
+            rb.solution.score
+        );
+        assert_eq!(ra.problem.apps, rb.problem.apps, "round {round}: problem apps");
+        assert_eq!(ra.problem.stable_ids, rb.problem.stable_ids, "round {round}");
+        assert_eq!(ra.problem.initial, rb.problem.initial, "round {round}: incumbent");
+        assert_eq!(ra.problem.max_moves, rb.problem.max_moves, "round {round}");
+        assert_eq!(
+            ra.problem.forbidden_transitions, rb.problem.forbidden_transitions,
+            "round {round}: forbidden transitions"
+        );
+        assert_eq!(ra.problem.tiers, rb.problem.tiers, "round {round}: tiers");
+        assert_eq!(
+            ra.initial_utilization, rb.initial_utilization,
+            "round {round}: initial utilization"
+        );
+        assert_eq!(
+            ra.projected_utilization, rb.projected_utilization,
+            "round {round}: projected utilization"
+        );
+        assert_eq!(
+            ra.p99_latency_ms.to_bits(),
+            rb.p99_latency_ms.to_bits(),
+            "round {round}: p99 latency"
+        );
+        assert_eq!(ra.violations.len(), rb.violations.len(), "round {round}");
+    }
+}
+
+#[test]
+fn incremental_matches_rebuild_bit_for_bit_on_mixed_paper_scenario() {
+    // >= 20 rounds on the paper testbed with arrivals, departures, drift,
+    // a spike wave and a region outage — the acceptance-criteria run.
+    let scenario = ScenarioConfig {
+        drift_fraction: 0.3,
+        arrival_prob: 0.5,
+        departure_prob: 0.3,
+        spike_period: Some(7),
+        outage_round: Some(5),
+        ..ScenarioConfig::mixed()
+    };
+    let run = |mode| {
+        let bed = generate(&WorkloadSpec::paper());
+        let mut c = Coordinator::from_testbed(
+            config(Variant::NoCnst, scenario.clone(), 0, mode, 1),
+            bed,
+        );
+        let reports = c.run(22);
+        (reports, c)
+    };
+    let (inc_reports, inc) = run(EngineMode::Incremental);
+    let (reb_reports, reb) = run(EngineMode::Rebuild);
+
+    // Both coordinators drew identical event streams...
+    assert_eq!(inc.event_log, reb.event_log);
+    // ...which actually exercised every event type the contract names.
+    let count = |pred: fn(&FleetEvent) -> bool| -> usize {
+        inc.event_log.iter().flatten().filter(|e| pred(*e)).count()
+    };
+    assert!(count(|e| matches!(e, FleetEvent::Arrival { .. })) > 0, "no arrivals fired");
+    assert!(count(|e| matches!(e, FleetEvent::Departure { .. })) > 0, "no departures fired");
+    assert_eq!(count(|e| matches!(e, FleetEvent::RegionOutage { .. })), 1, "one outage");
+    assert!(count(|e| matches!(e, FleetEvent::DemandDrift { .. })) > 0, "no drift fired");
+
+    assert_reports_bit_identical(&inc_reports, &reb_reports);
+    assert_eq!(inc.current_assignment(), reb.current_assignment());
+    for (ra, rb) in inc.log.iter().zip(&reb.log) {
+        assert_eq!(ra.score.to_bits(), rb.score.to_bits());
+        assert_eq!(ra.moves_executed, rb.moves_executed);
+        assert_eq!(ra.worst_imbalance.to_bits(), rb.worst_imbalance.to_bits());
+    }
+}
+
+#[test]
+fn incremental_matches_rebuild_with_coop_protocol_and_decay() {
+    // ManualCnst runs the full co-operation protocol each round, whose
+    // avoid constraints now persist across rounds (decay = 2). Both
+    // engines share the registry semantics, so reports stay identical.
+    let scenario = ScenarioConfig {
+        drift_fraction: 0.5,
+        arrival_prob: 0.5,
+        departure_prob: 0.3,
+        ..ScenarioConfig::churn()
+    };
+    let run = |mode| {
+        let bed = generate(&WorkloadSpec::small());
+        let mut c = Coordinator::from_testbed(
+            config(Variant::ManualCnst, scenario.clone(), 2, mode, 1),
+            bed,
+        );
+        let reports = c.run(12);
+        (reports, c)
+    };
+    let (inc_reports, inc) = run(EngineMode::Incremental);
+    let (reb_reports, reb) = run(EngineMode::Rebuild);
+    assert_eq!(inc.event_log, reb.event_log);
+    assert_reports_bit_identical(&inc_reports, &reb_reports);
+}
+
+#[test]
+fn incremental_matches_rebuild_under_w_cnst_transition_policy() {
+    // WCnst keeps the region-overlap transition predicate inside the
+    // persistent problem; a region outage mid-run changes the overlap
+    // structure and both engines must track it identically.
+    let scenario = ScenarioConfig {
+        drift_fraction: 0.4,
+        outage_round: Some(2),
+        ..ScenarioConfig::outage()
+    };
+    let run = |mode| {
+        let bed = generate(&WorkloadSpec::small());
+        let mut c = Coordinator::from_testbed(
+            config(Variant::WCnst, scenario.clone(), 0, mode, 1),
+            bed,
+        );
+        c.run(6)
+    };
+    assert_reports_bit_identical(&run(EngineMode::Incremental), &run(EngineMode::Rebuild));
+}
+
+#[test]
+fn decay_expires_protocol_avoid_constraints_on_schedule() {
+    // Drive the engine directly. Round 0 runs the protocol with a
+    // negative proximity budget, so every proposed move is rejected and
+    // fed back as an avoid constraint (or forbidden transition). Rounds
+    // 1–2 run with a zero movement budget — the solver proposes nothing,
+    // so no NEW edges appear and only decay is observable. With
+    // decay = 1 an edge added in round r is active through round r+1 and
+    // gone in round r+2.
+    let bed = generate(&WorkloadSpec::small());
+    let latency = bed.latency.clone();
+    let mut state = FleetState::from_testbed(bed);
+    let base = SptlbConfig {
+        variant: Variant::ManualCnst,
+        proximity_budget_ms: -1.0, // reject every proposed move
+        avoid_decay: 1,
+        timeout: Duration::from_secs(20),
+        max_coop_rounds: 2,
+        samples_per_app: 40,
+        ..SptlbConfig::default()
+    };
+    let frozen = SptlbConfig { movement_fraction: 0.0, ..base.clone() };
+    let mut engine = FleetEngine::new(EngineMode::Incremental, &base);
+    let no_events: Vec<FleetEvent> = Vec::new();
+    let delta = FleetDelta::default();
+    let edges = |e: &FleetEngine| e.active_avoids().len() + e.active_forbidden().len();
+
+    engine.round(&mut state, &no_events, &delta, &base, &latency, 0);
+    let s0 = edges(&engine);
+    assert!(s0 > 0, "reject-everything round must add avoid constraints");
+
+    engine.round(&mut state, &no_events, &delta, &frozen, &latency, 1);
+    assert_eq!(edges(&engine), s0, "decay 1: edges stay active one more round");
+
+    engine.round(&mut state, &no_events, &delta, &frozen, &latency, 2);
+    assert_eq!(edges(&engine), 0, "decay 1: edges expire after their grace round");
+}
+
+#[test]
+fn replaying_an_event_log_is_worker_count_invariant() {
+    // Satellite property: replaying the same recorded event log with
+    // workers in {1, 2, 8} yields the identical decision log — sharded
+    // scanning must not leak into decisions, even across rounds with
+    // churn and warm-started solves.
+    forall(
+        2,
+        |rng| rng.next_u64() % 1000,
+        |&seed| {
+            let scenario = ScenarioConfig {
+                drift_fraction: 0.5,
+                arrival_prob: 0.6,
+                departure_prob: 0.4,
+                ..ScenarioConfig::churn()
+            }
+            .with_seed(seed);
+            let run_with = |workers: usize, events: Option<&[Vec<FleetEvent>]>| {
+                let bed = generate(&WorkloadSpec::small().with_seed(seed));
+                let mut c = Coordinator::from_testbed(
+                    config(Variant::NoCnst, scenario.clone(), 0, EngineMode::Incremental, workers),
+                    bed,
+                );
+                match events {
+                    None => {
+                        c.run(6);
+                    }
+                    Some(ev) => {
+                        c.run_events(ev);
+                    }
+                }
+                c
+            };
+            let base = run_with(1, None);
+            for workers in [2usize, 8] {
+                let replay = run_with(workers, Some(&base.event_log));
+                if replay.event_log != base.event_log {
+                    return Check::fail(&format!("workers={workers}: event log diverged"));
+                }
+                for (ra, rb) in base.log.iter().zip(&replay.log) {
+                    let same = ra.score.to_bits() == rb.score.to_bits()
+                        && ra.moves_executed == rb.moves_executed
+                        && ra.worst_imbalance.to_bits() == rb.worst_imbalance.to_bits()
+                        && ra.n_events == rb.n_events;
+                    if !same {
+                        return Check::fail(&format!(
+                            "workers={workers} round {}: decision log diverged",
+                            ra.round
+                        ));
+                    }
+                }
+                if base.current_assignment() != replay.current_assignment() {
+                    return Check::fail(&format!("workers={workers}: final assignment diverged"));
+                }
+            }
+            Check::pass()
+        },
+    );
+}

@@ -10,7 +10,7 @@ use sptlb::rebalancer::solution::SolverKind;
 use sptlb::sptlb::{Sptlb, SptlbConfig};
 use sptlb::util::json::Json;
 use sptlb::util::stats::max_abs_dev_from_mean;
-use sptlb::workload::{generate, WorkloadSpec};
+use sptlb::workload::{generate, ScenarioConfig, WorkloadSpec};
 use std::time::Duration;
 
 fn spread(utils: &[sptlb::model::ResourceVec], r: usize) -> f64 {
@@ -84,8 +84,7 @@ fn coordinator_improves_and_stays_stable_over_rounds() {
             timeout: Duration::from_millis(60),
             ..SptlbConfig::default()
         },
-        drift_sigma: 0.03,
-        arrival_prob: 0.0,
+        scenario: ScenarioConfig { drift_sigma: 0.03, ..ScenarioConfig::drift() },
         ..CoordinatorConfig::default()
     };
     let mut c = Coordinator::from_testbed(cfg, bed);
