@@ -4,12 +4,20 @@
 //!    hot loop depends on),
 //!  * LocalSearch / OptimalSearch / greedy end-to-end solve times,
 //!  * PJRT batch scoring throughput (device path) vs the rust scorer,
-//!  * full pipeline latency (collect -> construct -> solve -> execute).
+//!  * full pipeline latency (collect -> construct -> solve -> execute),
+//!  * coordinator rounds/sec (incremental vs rebuild),
+//!  * multi-region rounds/sec vs region count at fixed fleet size.
 //!
 //! Run: cargo bench --bench perf_hotpath
+//! CI smoke: cargo bench --bench perf_hotpath -- --smoke --out-dir bench-out
+//! (single reps, scaled fixtures; every BENCH_*.json is still emitted)
 
-use sptlb::bench::{measure, worker_ladder, write_bench_json};
-use sptlb::coordinator::{Coordinator, CoordinatorConfig, EngineMode};
+use sptlb::bench::{measure, smoke_mode, worker_ladder, write_bench_json};
+use sptlb::coordinator::{
+    Coordinator, CoordinatorConfig, EngineMode, MultiRegionConfig, MultiRegionCoordinator,
+    RegionExecution,
+};
+use sptlb::hierarchy::global::GlobalPolicy;
 use sptlb::hierarchy::variants::Variant;
 use sptlb::metadata::MetadataStore;
 use sptlb::model::{Assignment, TierId};
@@ -20,11 +28,24 @@ use sptlb::sptlb::{Sptlb, SptlbConfig};
 use sptlb::util::json::Json;
 use sptlb::util::prng::Pcg64;
 use sptlb::util::timer::Deadline;
-use sptlb::workload::{generate, ScenarioConfig, WorkloadSpec};
+use sptlb::workload::{
+    generate, generate_multiregion, MultiRegionScenario, MultiRegionSpec, ScenarioConfig,
+    WorkloadSpec,
+};
 use std::time::Duration;
 
 fn main() {
-    println!("=== §Perf hot-path benchmarks ===\n");
+    let smoke = smoke_mode();
+    // Smoke knobs: no warmup, single rep, deadlines cut ~10x. Full-mode
+    // values are unchanged from the historical bench so trajectories
+    // stay comparable.
+    let warm = if smoke { 0 } else { 1 };
+    let reps = |full: usize| if smoke { 1 } else { full };
+    let ms = |full: u64| if smoke { (full / 10).max(20) } else { full };
+    println!(
+        "=== §Perf hot-path benchmarks{} ===\n",
+        if smoke { " (smoke mode)" } else { "" }
+    );
     let bed = generate(&WorkloadSpec::paper());
     let problem = Problem::build(
         &bed.apps,
@@ -48,14 +69,14 @@ fn main() {
             })
             .collect()
     };
-    measure("peek_1024_moves_incremental", 2, 10, || {
+    measure("peek_1024_moves_incremental", if smoke { 0 } else { 2 }, reps(10), || {
         let mut acc = 0.0;
         for &(a, t) in &moves {
             acc += state.peek(a, t);
         }
         acc
     });
-    measure("full_rescore_1024_moves", 1, 5, || {
+    measure("full_rescore_1024_moves", warm, reps(5), || {
         let mut acc = 0.0;
         for &(a, t) in &moves {
             let mut asg = problem.initial.clone();
@@ -67,11 +88,11 @@ fn main() {
 
     // --- solvers --------------------------------------------------------
     println!("\n[solvers] (anytime; early-exit on convergence)");
-    measure("local_search_to_convergence", 1, 5, || {
-        LocalSearch::with_seed(1).solve(&problem, Deadline::after_ms(2000))
+    measure("local_search_to_convergence", warm, reps(5), || {
+        LocalSearch::with_seed(1).solve(&problem, Deadline::after_ms(ms(2000)))
     });
-    measure("optimal_search_to_convergence", 1, 3, || {
-        OptimalSearch::with_seed(1).solve(&problem, Deadline::after_ms(2000))
+    measure("optimal_search_to_convergence", warm, reps(3), || {
+        OptimalSearch::with_seed(1).solve(&problem, Deadline::after_ms(ms(2000)))
     });
 
     // --- PJRT device path ------------------------------------------------
@@ -92,12 +113,12 @@ fn main() {
                 .collect();
             // Warm the compilation cache before measuring dispatch cost.
             let _ = scorer.score(&problem, &candidates[..1]);
-            let r = measure("pjrt_score_256_candidates", 2, 10, || {
+            let r = measure("pjrt_score_256_candidates", if smoke { 0 } else { 2 }, reps(10), || {
                 scorer.score(&problem, &candidates).unwrap()
             });
             let per_cand_us = r.mean_ms * 1e3 / 256.0;
             println!("  -> {per_cand_us:.1} us/candidate through the artifact");
-            measure("rust_score_256_candidates", 2, 10, || {
+            measure("rust_score_256_candidates", if smoke { 0 } else { 2 }, reps(10), || {
                 candidates
                     .iter()
                     .map(|c| score_assignment(&problem, c).0)
@@ -111,11 +132,11 @@ fn main() {
     println!("\n[pipeline]");
     let store = MetadataStore::from_apps(bed.apps.clone()).unwrap();
     let cfg = SptlbConfig {
-        timeout: Duration::from_millis(100),
+        timeout: Duration::from_millis(ms(100)),
         ..SptlbConfig::default()
     };
     let sptlb = Sptlb::new(cfg);
-    measure("pipeline_collect_construct_solve", 1, 5, || {
+    measure("pipeline_collect_construct_solve", warm, reps(5), || {
         sptlb.balance(&store, &bed.tiers, &bed.latency, &bed.initial)
     });
 
@@ -130,8 +151,8 @@ fn main() {
         GoalWeights::default(),
     )
     .unwrap();
-    measure("local_search_400apps_8tiers", 1, 3, || {
-        LocalSearch::with_seed(1).solve(&big_problem, Deadline::after_ms(3000))
+    measure("local_search_400apps_8tiers", warm, reps(3), || {
+        LocalSearch::with_seed(1).solve(&big_problem, Deadline::after_ms(ms(3000)))
     });
 
     // --- sharded local search vs single thread ----------------------------
@@ -141,18 +162,19 @@ fn main() {
     // fixture. Override the ladder with SPTLB_BENCH_WORKERS.
     println!("\n[sharded] parallel local search, large fixture (same-seed scores must match)");
     let mut scores: Vec<(usize, f64)> = Vec::new();
-    for workers in worker_ladder() {
+    let ladder = if smoke { vec![1, 4] } else { worker_ladder() };
+    for workers in ladder {
         let cfg = LocalSearchConfig {
             seed: 1,
             parallel: ParallelConfig::with_workers(workers),
             ..LocalSearchConfig::default()
         };
-        measure(&format!("local_search_large_workers_{workers}"), 1, 3, || {
-            LocalSearch::new(cfg.clone()).solve(&big_problem, Deadline::after_ms(3000))
+        measure(&format!("local_search_large_workers_{workers}"), warm, reps(3), || {
+            LocalSearch::new(cfg.clone()).solve(&big_problem, Deadline::after_ms(ms(3000)))
         });
         // Convergence-terminated run for the score-identity check (the
         // timed runs above may be deadline-cut on a loaded machine).
-        let sol = LocalSearch::new(cfg).solve(&big_problem, Deadline::after_ms(20_000));
+        let sol = LocalSearch::new(cfg).solve(&big_problem, Deadline::after_ms(ms(20_000)));
         println!(
             "  workers={workers}: score {:.6}, converged at {:.0} ms",
             sol.score,
@@ -174,10 +196,13 @@ fn main() {
     // identical decisions (see rust/tests/fleet_equivalence.rs); only the
     // round cost differs.
     println!("\n[coordinator] event-driven rounds, 1k apps, drift-only (5%/round)");
-    const COORD_ROUNDS: u32 = 15;
-    let coord_spec = WorkloadSpec::paper().with_apps(1000);
+    let coord_rounds: u32 = if smoke { 5 } else { 15 };
+    let coord_spec = WorkloadSpec::paper().with_apps(if smoke { 200 } else { 1000 });
+    // Generate once, clone per rep: the measured closure must time
+    // rounds, not fixture generation.
+    let coord_bed = generate(&coord_spec);
     let run_engine = |mode: EngineMode| {
-        let bed = generate(&coord_spec);
+        let bed = coord_bed.clone();
         let cfg = CoordinatorConfig {
             sptlb: SptlbConfig {
                 timeout: Duration::from_millis(5),
@@ -193,19 +218,19 @@ fn main() {
             ..CoordinatorConfig::default()
         };
         let mut c = Coordinator::from_testbed(cfg, bed);
-        c.run(COORD_ROUNDS);
+        c.run(coord_rounds);
         c
     };
-    let rebuild = measure("coordinator_rebuild_15_rounds", 1, 3, || {
+    let rebuild = measure("coordinator_rebuild_rounds", warm, reps(3), || {
         run_engine(EngineMode::Rebuild)
     });
     // Keep the last measured incremental run for the collect_ms printout
     // instead of paying for an extra unmeasured simulation.
     let mut sample = None;
-    let incremental = measure("coordinator_incremental_15_rounds", 1, 3, || {
+    let incremental = measure("coordinator_incremental_rounds", warm, reps(3), || {
         sample = Some(run_engine(EngineMode::Incremental));
     });
-    let rps = |mean_ms: f64| COORD_ROUNDS as f64 / (mean_ms / 1e3);
+    let rps = |mean_ms: f64| coord_rounds as f64 / (mean_ms / 1e3);
     let (rebuild_rps, incremental_rps) = (rps(rebuild.mean_ms), rps(incremental.mean_ms));
     let speedup = incremental_rps / rebuild_rps;
     let sample = sample.expect("at least one measured incremental run");
@@ -223,10 +248,88 @@ fn main() {
         &Json::obj(vec![
             ("bench", Json::str("coordinator_rounds_per_sec")),
             ("scenario", Json::str("drift_1k_apps_5pct")),
-            ("rounds", Json::num(COORD_ROUNDS as f64)),
+            ("smoke", Json::num(smoke as u8 as f64)),
+            ("rounds", Json::num(coord_rounds as f64)),
             ("rebuild_rounds_per_sec", Json::num(rebuild_rps)),
             ("incremental_rounds_per_sec", Json::num(incremental_rps)),
             ("speedup", Json::num(speedup)),
+        ]),
+    );
+
+    // --- multi-region: global layer over parallel per-region solves --------
+    // Fixed TOTAL fleet size split across 1/2/4 regions. Every region's
+    // round is an independent solve, so rounds/sec should climb with the
+    // region count until cores run out — the aggregate-throughput claim
+    // of the cross-region layer. The same seed drives every region count
+    // (per-region Pcg64 substreams), so the numbers are comparable
+    // across the ladder and across runs.
+    println!("\n[multiregion] global scheduler over parallel per-region SPTLBs (fixed fleet)");
+    let total_apps = if smoke { 180 } else { 720 };
+    let mr_rounds: u32 = if smoke { 4 } else { 10 };
+    let mut entries: Vec<Json> = Vec::new();
+    for n_regions in [1usize, 2, 4] {
+        let spec = MultiRegionSpec::fixed_fleet(total_apps, n_regions, WorkloadSpec::paper());
+        let mr_bed = generate_multiregion(&spec);
+        let run_regions = |execution: RegionExecution| {
+            let bed = mr_bed.clone();
+            let cfg = MultiRegionConfig {
+                sptlb: SptlbConfig {
+                    timeout: Duration::from_millis(5),
+                    variant: Variant::NoCnst,
+                    samples_per_app: 200,
+                    ..SptlbConfig::default()
+                },
+                scenario: MultiRegionScenario::multiregion(n_regions, 42),
+                policy: GlobalPolicy::spillover(),
+                execution,
+                ..MultiRegionConfig::new(n_regions)
+            };
+            let mut c = MultiRegionCoordinator::new(cfg, bed);
+            c.run(mr_rounds);
+            c
+        };
+        // Keep the last measured parallel run for the migrations count
+        // instead of paying for an extra unmeasured simulation.
+        let mut sample = None;
+        let timed = measure(
+            &format!("multiregion_{n_regions}_regions_{total_apps}_apps"),
+            warm,
+            reps(3),
+            || sample = Some(run_regions(RegionExecution::Parallel)),
+        );
+        let seq = measure(
+            &format!("multiregion_{n_regions}_regions_sequential"),
+            warm,
+            reps(3),
+            || run_regions(RegionExecution::Sequential),
+        );
+        let region_rps = mr_rounds as f64 / (timed.mean_ms / 1e3);
+        let sample = sample.expect("at least one measured parallel run");
+        println!(
+            "  regions={n_regions}: {region_rps:.1} rounds/s parallel \
+             (sequential {:.1}), {} migrations over {mr_rounds} rounds",
+            mr_rounds as f64 / (seq.mean_ms / 1e3),
+            sample.metrics.migrations,
+        );
+        entries.push(Json::obj(vec![
+            ("regions", Json::num(n_regions as f64)),
+            ("rounds_per_sec", Json::num(region_rps)),
+            (
+                "sequential_rounds_per_sec",
+                Json::num(mr_rounds as f64 / (seq.mean_ms / 1e3)),
+            ),
+            ("migrations", Json::num(sample.metrics.migrations as f64)),
+        ]));
+    }
+    write_bench_json(
+        "BENCH_multiregion.json",
+        &Json::obj(vec![
+            ("bench", Json::str("multiregion_rounds_per_sec")),
+            ("scenario", Json::str("multiregion_fixed_fleet")),
+            ("smoke", Json::num(smoke as u8 as f64)),
+            ("fleet_apps", Json::num(total_apps as f64)),
+            ("rounds", Json::num(mr_rounds as f64)),
+            ("by_region_count", Json::arr(entries)),
         ]),
     );
 }

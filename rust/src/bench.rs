@@ -48,12 +48,47 @@ impl std::fmt::Display for BenchResult {
     }
 }
 
-/// Write a bench-trajectory JSON file (e.g. `BENCH_coordinator.json` in
-/// the working directory) so perf runs leave a machine-readable trail.
+/// Where bench JSON artifacts land: `--out-dir <path>` from the bench
+/// binary's argv (`cargo bench --bench perf_hotpath -- --out-dir d`),
+/// then `SPTLB_BENCH_OUT_DIR`, then the working directory. A fixed flag
+/// gives CI a deterministic path to upload from.
+pub fn bench_out_dir() -> std::path::PathBuf {
+    let args: Vec<String> = std::env::args().collect();
+    let from_args = args
+        .iter()
+        .position(|a| a == "--out-dir")
+        .and_then(|i| args.get(i + 1).cloned())
+        .or_else(|| {
+            args.iter()
+                .find_map(|a| a.strip_prefix("--out-dir=").map(String::from))
+        });
+    let dir = from_args
+        .or_else(|| std::env::var("SPTLB_BENCH_OUT_DIR").ok())
+        .unwrap_or_else(|| ".".into());
+    std::path::PathBuf::from(dir)
+}
+
+/// Smoke mode (`--smoke` in argv or `SPTLB_BENCH_SMOKE=1`): the CI
+/// bench job's short configuration — single reps, no warmup, scaled
+/// fixtures — so every section still runs and every `BENCH_*.json`
+/// artifact is still written, in minutes not hours.
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+        || std::env::var("SPTLB_BENCH_SMOKE").as_deref() == Ok("1")
+}
+
+/// Write a bench-trajectory JSON file (e.g. `BENCH_coordinator.json`)
+/// into [`bench_out_dir`] so perf runs leave a machine-readable trail.
 pub fn write_bench_json(file: &str, json: &crate::util::json::Json) {
-    match std::fs::write(file, json.pretty()) {
-        Ok(()) => println!("  -> wrote {file}"),
-        Err(e) => eprintln!("  -> could not write {file}: {e}"),
+    let dir = bench_out_dir();
+    if let Err(e) = std::fs::create_dir_all(&dir) {
+        eprintln!("  -> could not create {}: {e}", dir.display());
+        return;
+    }
+    let path = dir.join(file);
+    match std::fs::write(&path, json.pretty()) {
+        Ok(()) => println!("  -> wrote {}", path.display()),
+        Err(e) => eprintln!("  -> could not write {}: {e}", path.display()),
     }
 }
 
@@ -129,5 +164,20 @@ mod tests {
             assert_eq!(l.len(), 4);
             assert!(l[3] <= Duration::from_secs(1));
         }
+    }
+
+    #[test]
+    fn out_dir_defaults_to_cwd_and_honors_env() {
+        // The test binary's argv has no --out-dir, so the env var (or
+        // the CWD fallback) decides.
+        if std::env::var("SPTLB_BENCH_OUT_DIR").is_err() {
+            assert_eq!(bench_out_dir(), std::path::PathBuf::from("."));
+        }
+        std::env::set_var("SPTLB_BENCH_OUT_DIR", "/tmp/sptlb-bench-test");
+        assert_eq!(
+            bench_out_dir(),
+            std::path::PathBuf::from("/tmp/sptlb-bench-test")
+        );
+        std::env::remove_var("SPTLB_BENCH_OUT_DIR");
     }
 }

@@ -127,6 +127,12 @@ impl FleetEngine {
     /// Run one balancing round against the (already event-advanced) fleet
     /// state: collect → construct → solve → execute. Returns the report
     /// plus the executed moves; the incumbent is adopted move-by-move.
+    ///
+    /// Collection knobs (`samples_per_app`, the collect seed) are frozen
+    /// at [`FleetEngine::new`]: the incremental collector's cache was
+    /// built with them, so a per-round `base` that varies them would
+    /// desynchronize the two engine modes. Vary solver knobs (seed,
+    /// movement, decay, proximity) freely; keep collection fixed.
     pub fn round(
         &mut self,
         state: &mut FleetState,

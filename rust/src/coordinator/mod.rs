@@ -14,9 +14,14 @@
 
 pub mod engine;
 pub mod fleet;
+pub mod multiregion;
 
 pub use engine::{EngineMode, FleetEngine};
 pub use fleet::{FleetDelta, FleetState};
+pub use multiregion::{
+    parse_multiregion_event_log, MigrationRecord, MultiRegionConfig, MultiRegionCoordinator,
+    MultiRegionMetrics, MultiRegionRound, RegionExecution,
+};
 
 use crate::model::{App, Assignment, FleetEvent, Tier};
 use crate::network::LatencyMatrix;

@@ -1,0 +1,433 @@
+//! The global scheduler — the level *above* the per-region SPTLBs. The
+//! paper's schedulers "work together in hierarchies across various parts
+//! of the infrastructure"; this module completes the hierarchy upward:
+//!
+//! ```text
+//!   GlobalScheduler            (cross-region app migrations)
+//!     └── per-region SPTLB     (app → tier mapping, one per region)
+//!           └── RegionScheduler  (near-data-source vetting)
+//!                 └── HostScheduler (packing vetting)
+//! ```
+//!
+//! Each round the global layer reads every region's post-solve pressure
+//! (aggregate demand over aggregate capacity, worst resource) and
+//! proposes cross-region migrations: **spillover** when a region runs
+//! hotter than the policy threshold, **evacuation** when a
+//! `RegionOutage` event struck a region this round. Proposals are vetted
+//! by the destination region's own co-operation machinery (SLO
+//! routability, per-tier capacity headroom, the region scheduler's
+//! proximity test); a rejected migration comes back to this layer as an
+//! *avoid constraint* — the same §3.4 feedback mechanism the SPTLB uses
+//! with its region/host schedulers, one level up — and decays after
+//! `avoid_decay` rounds just like the engine's registry.
+//!
+//! Everything here is deterministic: donors and receivers are ordered by
+//! (pressure, region id), candidates by (normalized demand, app id), so
+//! the plan is a pure function of the observed fleet — the property the
+//! sequential-vs-parallel equivalence contract in
+//! `rust/tests/multiregion_equivalence.rs` stands on.
+
+use crate::model::{App, AppId, InterRegionMatrix, RegionId, ResourceVec, Tier};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Global-layer balancing policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GlobalPolicy {
+    pub name: &'static str,
+    /// Worst-resource fleet pressure above which a region spills load.
+    pub spill_threshold: f64,
+    /// A receiver must stay below this pressure after accepting.
+    pub accept_ceiling: f64,
+    /// Cross-region migrations proposed per round, fleet-wide
+    /// (0 disables the layer entirely).
+    pub max_migrations_per_round: usize,
+    /// Inter-region latency budget for a migration (ms).
+    pub latency_budget_ms: f64,
+    /// Egress budget per unit of migrated demand (cost units).
+    pub egress_budget: f64,
+    /// Evacuate a region struck by a `RegionOutage` even if it has not
+    /// crossed the spill threshold.
+    pub evacuate_on_outage: bool,
+    /// Pressure an outage evacuation drains the struck region towards
+    /// (typically below `spill_threshold`: after losing capacity the
+    /// region should come back with headroom, not at the brink).
+    pub outage_drain_target: f64,
+    /// Rounds a rejected (app, from, to) pairing stays avoided.
+    pub avoid_decay: u32,
+}
+
+impl GlobalPolicy {
+    /// Global layer off: regions balance themselves, nothing migrates.
+    pub fn none() -> Self {
+        Self {
+            name: "none",
+            spill_threshold: f64::INFINITY,
+            accept_ceiling: 0.0,
+            max_migrations_per_round: 0,
+            latency_budget_ms: 0.0,
+            egress_budget: 0.0,
+            evacuate_on_outage: false,
+            outage_drain_target: f64::INFINITY,
+            avoid_decay: 0,
+        }
+    }
+
+    /// Default: spill on sustained pressure, evacuate on outage.
+    pub fn spillover() -> Self {
+        Self {
+            name: "spillover",
+            spill_threshold: 0.75,
+            accept_ceiling: 0.70,
+            max_migrations_per_round: 4,
+            latency_budget_ms: 150.0,
+            egress_budget: 0.05,
+            evacuate_on_outage: true,
+            outage_drain_target: 0.60,
+            avoid_decay: 4,
+        }
+    }
+
+    /// Rebalance early and often; tolerate pricier links.
+    pub fn aggressive() -> Self {
+        Self {
+            name: "aggressive",
+            spill_threshold: 0.60,
+            accept_ceiling: 0.80,
+            max_migrations_per_round: 16,
+            latency_budget_ms: 300.0,
+            egress_budget: 0.25,
+            evacuate_on_outage: true,
+            outage_drain_target: 0.50,
+            avoid_decay: 2,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<GlobalPolicy> {
+        match name {
+            "none" => Some(Self::none()),
+            "spillover" => Some(Self::spillover()),
+            "aggressive" => Some(Self::aggressive()),
+            _ => None,
+        }
+    }
+}
+
+/// What the global scheduler sees of one region each round.
+pub struct RegionView<'a> {
+    pub region: RegionId,
+    pub apps: &'a [App],
+    pub tiers: &'a [Tier],
+    /// True when a `RegionOutage` event struck this region this round.
+    pub outage: bool,
+}
+
+/// Worst-resource pressure of an aggregate (demand, capacity) pair.
+/// Zero capacity with demand left is INFINITY — a dead region must rank
+/// as the hottest donor, not a cold one. Single source of truth for
+/// both [`region_pressure`] and the planner's running projections.
+pub fn pressure_of(demand: &ResourceVec, capacity: &ResourceVec) -> f64 {
+    (0..crate::model::NUM_RESOURCES)
+        .map(|k| {
+            if capacity.0[k] > 0.0 {
+                demand.0[k] / capacity.0[k]
+            } else if demand.0[k] > 0.0 {
+                f64::INFINITY
+            } else {
+                0.0
+            }
+        })
+        .fold(0.0, f64::max)
+}
+
+/// Aggregate pressure of a region: total demand over total capacity,
+/// worst resource. The global analogue of a tier's utilization.
+pub fn region_pressure(apps: &[App], tiers: &[Tier]) -> f64 {
+    let demand = apps.iter().fold(ResourceVec::ZERO, |acc, a| acc + a.demand);
+    let capacity = tiers.iter().fold(ResourceVec::ZERO, |acc, t| acc + t.capacity);
+    pressure_of(&demand, &capacity)
+}
+
+/// One proposed cross-region migration (app ids are source-region-local).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MigrationProposal {
+    pub app: AppId,
+    pub from: RegionId,
+    pub to: RegionId,
+}
+
+/// The global layer's round output.
+#[derive(Debug, Clone)]
+pub struct GlobalPlan {
+    pub proposals: Vec<MigrationProposal>,
+    /// Post-solve pressure per region (ascending region id).
+    pub pressures: Vec<f64>,
+}
+
+/// The global scheduler: plans migrations, remembers rejections.
+pub struct GlobalScheduler {
+    pub policy: GlobalPolicy,
+    pub inter: InterRegionMatrix,
+    /// Avoid registry, §3.4 one level up: (app, from, to) → age in
+    /// rounds. An edge added in round r blocks re-proposing that pairing
+    /// for the next `avoid_decay` rounds, then expires.
+    avoids: BTreeMap<(AppId, RegionId, RegionId), u32>,
+}
+
+impl GlobalScheduler {
+    pub fn new(policy: GlobalPolicy, inter: InterRegionMatrix) -> Self {
+        Self { policy, inter, avoids: BTreeMap::new() }
+    }
+
+    /// Age the avoid registry by one round, dropping expired edges.
+    /// Mirrors `FleetEngine::age_registry` one level up.
+    pub fn begin_round(&mut self) {
+        let decay = self.policy.avoid_decay;
+        self.avoids.retain(|_, age| {
+            *age = age.saturating_add(1);
+            *age <= decay
+        });
+    }
+
+    /// Active avoid edges (observability + tests).
+    pub fn active_avoids(&self) -> usize {
+        self.avoids.len()
+    }
+
+    /// Record a destination rejection as an avoid constraint (age 0: in
+    /// force for the next `avoid_decay` rounds).
+    pub fn reject(&mut self, p: &MigrationProposal) {
+        self.avoids.insert((p.app, p.from, p.to), 0);
+    }
+
+    fn avoided(&self, app: AppId, from: RegionId, to: RegionId) -> bool {
+        self.avoids.contains_key(&(app, from, to))
+    }
+
+    /// Plan this round's migrations. Pure given the views and registry:
+    /// donors are outage-struck regions first (evacuation), then regions
+    /// over the spill threshold, hottest first; candidates leave in
+    /// descending normalized-demand order; each goes to the coolest
+    /// admissible receiver within the latency/egress budgets.
+    pub fn propose(&self, views: &[RegionView]) -> GlobalPlan {
+        let n = views.len();
+        let pressures: Vec<f64> =
+            views.iter().map(|v| region_pressure(v.apps, v.tiers)).collect();
+        let mut proposals = Vec::new();
+        if self.policy.max_migrations_per_round == 0 || n < 2 {
+            return GlobalPlan { proposals, pressures };
+        }
+
+        // Running totals so one round's plan does not oversubscribe a
+        // receiver or over-drain a donor.
+        let mut demand: Vec<ResourceVec> = views
+            .iter()
+            .map(|v| v.apps.iter().fold(ResourceVec::ZERO, |acc, a| acc + a.demand))
+            .collect();
+        let capacity: Vec<ResourceVec> = views
+            .iter()
+            .map(|v| v.tiers.iter().fold(ResourceVec::ZERO, |acc, t| acc + t.capacity))
+            .collect();
+        let pressure = pressure_of;
+
+        // Donors: evacuations first, then by descending pressure; ties by
+        // ascending region id (a total order — determinism).
+        let mut donors: Vec<usize> = (0..n)
+            .filter(|&r| {
+                (views[r].outage && self.policy.evacuate_on_outage)
+                    || pressures[r] > self.policy.spill_threshold
+            })
+            .collect();
+        donors.sort_by(|&a, &b| {
+            let evac = |r: usize| views[r].outage && self.policy.evacuate_on_outage;
+            evac(b)
+                .cmp(&evac(a))
+                .then(pressures[b].partial_cmp(&pressures[a]).unwrap())
+                .then(a.cmp(&b))
+        });
+
+        for d in donors {
+            if proposals.len() >= self.policy.max_migrations_per_round {
+                break;
+            }
+            // Candidates: biggest normalized footprint leaves first; app
+            // id breaks ties (total order).
+            let mut candidates: Vec<&App> = views[d].apps.iter().collect();
+            candidates.sort_by(|a, b| {
+                let norm = |x: &App| pressure(&x.demand, &capacity[d]);
+                norm(b)
+                    .partial_cmp(&norm(a))
+                    .unwrap()
+                    .then(a.id.cmp(&b.id))
+            });
+
+            let drain_target = if views[d].outage && self.policy.evacuate_on_outage {
+                self.policy.outage_drain_target.min(self.policy.spill_threshold)
+            } else {
+                self.policy.spill_threshold
+            };
+            for app in candidates {
+                if proposals.len() >= self.policy.max_migrations_per_round {
+                    break;
+                }
+                if pressure(&demand[d], &capacity[d]) <= drain_target {
+                    break; // donor is cool enough, stop draining
+                }
+                // Receivers: coolest admissible first; region id ties.
+                let mut receivers: Vec<usize> = (0..n)
+                    .filter(|&r| r != d && !views[r].outage)
+                    .collect();
+                receivers.sort_by(|&a, &b| {
+                    pressure(&demand[a], &capacity[a])
+                        .partial_cmp(&pressure(&demand[b], &capacity[b]))
+                        .unwrap()
+                        .then(a.cmp(&b))
+                });
+                for r in receivers {
+                    let (from, to) = (views[d].region, views[r].region);
+                    if self.avoided(app.id, from, to)
+                        || self.inter.latency_ms(from, to) > self.policy.latency_budget_ms
+                        || self.inter.egress_cost(from, to) > self.policy.egress_budget
+                        || !views[r].tiers.iter().any(|t| t.supports_slo(app.slo))
+                    {
+                        continue;
+                    }
+                    let after = demand[r] + app.demand;
+                    if pressure(&after, &capacity[r]) > self.policy.accept_ceiling {
+                        continue;
+                    }
+                    demand[r] = after;
+                    demand[d] = demand[d] - app.demand;
+                    proposals.push(MigrationProposal { app: app.id, from, to });
+                    break;
+                }
+            }
+        }
+        GlobalPlan { proposals, pressures }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("policy", Json::str(self.policy.name)),
+            ("active_avoids", Json::num(self.avoids.len() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+    use crate::workload::{generate, WorkloadSpec};
+
+    fn beds(n: usize) -> Vec<crate::workload::TestBed> {
+        (0..n)
+            .map(|r| generate(&WorkloadSpec::small().with_seed(100 + r as u64)))
+            .collect()
+    }
+
+    fn views(beds: &[crate::workload::TestBed], outage: &[bool]) -> Vec<RegionView<'_>> {
+        beds.iter()
+            .enumerate()
+            .map(|(r, b)| RegionView {
+                region: RegionId(r),
+                apps: &b.apps,
+                tiers: &b.tiers,
+                outage: outage[r],
+            })
+            .collect()
+    }
+
+    fn scheduler(policy: GlobalPolicy, n: usize) -> GlobalScheduler {
+        GlobalScheduler::new(policy, InterRegionMatrix::synthesize(n, &mut Pcg64::new(5)))
+    }
+
+    #[test]
+    fn policy_presets_resolve() {
+        for name in ["none", "spillover", "aggressive"] {
+            assert_eq!(GlobalPolicy::by_name(name).unwrap().name, name);
+        }
+        assert!(GlobalPolicy::by_name("zzz").is_none());
+    }
+
+    #[test]
+    fn none_policy_never_proposes() {
+        let beds = beds(3);
+        let sched = scheduler(GlobalPolicy::none(), 3);
+        let plan = sched.propose(&views(&beds, &[true, false, false]));
+        assert!(plan.proposals.is_empty());
+        assert_eq!(plan.pressures.len(), 3);
+    }
+
+    #[test]
+    fn outage_region_evacuates_to_cooler_regions() {
+        let mut beds = beds(3);
+        // Simulate an outage having shrunk region 0's capacity by 60%.
+        for t in &mut beds[0].tiers {
+            t.capacity = t.capacity.scale(0.4);
+        }
+        let policy = GlobalPolicy { latency_budget_ms: 1e9, egress_budget: 1e9, ..GlobalPolicy::spillover() };
+        let sched = scheduler(policy, 3);
+        let plan = sched.propose(&views(&beds, &[true, false, false]));
+        assert!(!plan.proposals.is_empty(), "evacuation must fire");
+        assert!(plan.proposals.iter().all(|p| p.from == RegionId(0)));
+        assert!(plan.proposals.iter().all(|p| p.to != RegionId(0)));
+    }
+
+    #[test]
+    fn avoided_pairings_are_skipped_until_decay() {
+        let mut beds = beds(2);
+        for t in &mut beds[0].tiers {
+            t.capacity = t.capacity.scale(0.4);
+        }
+        let policy = GlobalPolicy {
+            latency_budget_ms: 1e9,
+            egress_budget: 1e9,
+            avoid_decay: 1,
+            ..GlobalPolicy::spillover()
+        };
+        let mut sched = scheduler(policy, 2);
+        let v = views(&beds, &[true, false]);
+        let first = sched.propose(&v);
+        assert!(!first.proposals.is_empty());
+        for p in &first.proposals {
+            sched.reject(p);
+        }
+        let n_avoided = sched.active_avoids();
+        assert_eq!(n_avoided, first.proposals.len());
+        // With only one possible destination, every rejected app is now
+        // unroutable; the re-plan must not repeat any rejected pairing.
+        let second = sched.propose(&v);
+        for p in &second.proposals {
+            assert!(!first.proposals.contains(p), "avoided pairing re-proposed");
+        }
+        // decay = 1: edges survive one aging round, die on the second.
+        sched.begin_round();
+        assert_eq!(sched.active_avoids(), n_avoided);
+        sched.begin_round();
+        assert_eq!(sched.active_avoids(), 0);
+    }
+
+    #[test]
+    fn plan_is_deterministic() {
+        let mut beds = beds(4);
+        for t in &mut beds[1].tiers {
+            t.capacity = t.capacity.scale(0.5);
+        }
+        let policy = GlobalPolicy { spill_threshold: 0.4, ..GlobalPolicy::aggressive() };
+        let sched = scheduler(policy, 4);
+        let outage = [false, true, false, false];
+        let a = sched.propose(&views(&beds, &outage));
+        let b = sched.propose(&views(&beds, &outage));
+        assert_eq!(a.proposals, b.proposals);
+        assert_eq!(a.pressures, b.pressures);
+    }
+
+    #[test]
+    fn pressure_is_worst_resource() {
+        let beds = beds(1);
+        let p = region_pressure(&beds[0].apps, &beds[0].tiers);
+        assert!(p > 0.0 && p.is_finite());
+        assert!(region_pressure(&[], &beds[0].tiers) == 0.0);
+    }
+}

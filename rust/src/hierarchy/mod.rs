@@ -1,12 +1,16 @@
 //! Hierarchy co-operation (DESIGN.md S10): the lower-level region/host
 //! schedulers (Fig. 2), the avoid-constraint feedback protocol (§3.4),
-//! and the three integration variants evaluated in §4.2.2–4.2.3.
+//! the three integration variants evaluated in §4.2.2–4.2.3, and the
+//! global layer above the per-region SPTLBs (`global`) that completes
+//! the hierarchy upward with the same feedback mechanism.
 
+pub mod global;
 pub mod host;
 pub mod protocol;
 pub mod region;
 pub mod variants;
 
+pub use global::{GlobalPlan, GlobalPolicy, GlobalScheduler, MigrationProposal, RegionView};
 pub use host::{HostScheduler, HostVerdict, TierHosts};
 pub use protocol::{CoopConfig, CoopOutcome, CoopProtocol, RoundTrace};
 pub use region::{RegionScheduler, RegionVerdict};

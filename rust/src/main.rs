@@ -9,7 +9,11 @@
 //!   sweep     regenerate the Fig. 4/5 variant×solver×timeout sweep.
 //!   check     verify the AOT artifacts load and match the rust scorer.
 
-use sptlb::coordinator::{Coordinator, CoordinatorConfig, EngineMode};
+use sptlb::coordinator::{
+    Coordinator, CoordinatorConfig, EngineMode, MultiRegionConfig, MultiRegionCoordinator,
+    RegionExecution,
+};
+use sptlb::hierarchy::global::GlobalPolicy;
 use sptlb::hierarchy::variants::Variant;
 use sptlb::metadata::MetadataStore;
 use sptlb::rebalancer::solution::SolverKind;
@@ -17,7 +21,10 @@ use sptlb::rebalancer::{ParallelConfig, ShardStrategy};
 use sptlb::report;
 use sptlb::sptlb::{Sptlb, SptlbConfig};
 use sptlb::util::cli::Command;
-use sptlb::workload::{ScenarioConfig, TestBed, WorkloadSpec};
+use sptlb::workload::{
+    generate_multiregion, MultiRegionScenario, MultiRegionSpec, ScenarioConfig, TestBed,
+    WorkloadSpec,
+};
 use std::time::Duration;
 
 fn main() {
@@ -78,6 +85,38 @@ fn parse_parallel(p: &sptlb::util::cli::Parsed) -> Result<ParallelConfig, i32> {
         }
     };
     Ok(ParallelConfig { workers, shard_strategy })
+}
+
+/// Apply the shared `--drift/--drift-frac/--arrivals/--departures`
+/// overrides to every given scenario config (one in single-region serve,
+/// one per region in multi-region serve); prints the error and returns
+/// the exit code on invalid input.
+fn apply_scenario_overrides(
+    p: &sptlb::util::cli::Parsed,
+    configs: &mut [&mut ScenarioConfig],
+) -> Result<(), i32> {
+    let knobs: [(&str, f64, fn(&mut ScenarioConfig, f64)); 4] = [
+        ("drift", f64::MAX, |c, v| c.drift_sigma = v),
+        ("drift-frac", 1.0, |c, v| c.drift_fraction = v),
+        ("arrivals", 1.0, |c, v| c.arrival_prob = v),
+        ("departures", 1.0, |c, v| c.departure_prob = v),
+    ];
+    for (flag, hi, set) in knobs {
+        if p.get(flag).is_some_and(|v| !v.is_empty()) {
+            match p.f64_in_range(flag, 0.0, hi) {
+                Ok(v) => {
+                    for c in configs.iter_mut() {
+                        set(c, v);
+                    }
+                }
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return Err(2);
+                }
+            }
+        }
+    }
+    Ok(())
 }
 
 fn with_parsed(
@@ -182,7 +221,11 @@ fn cmd_balance(args: &[String]) -> i32 {
 fn cmd_serve(args: &[String]) -> i32 {
     let cmd = Command::new("serve", "run the coordinator leader loop")
         .opt("scenario", "paper", "workload preset (paper|small|large)")
-        .opt("events", "drift", "event scenario (steady|drift|churn|spike|outage|mixed)")
+        .opt(
+            "events",
+            "drift",
+            "event scenario (steady|drift|churn|spike|outage|mixed; with --regions also multiregion|failover)",
+        )
         .opt("seed", "42", "prng seed")
         .opt("rounds", "10", "balancing rounds to run")
         .opt("timeout-ms", "60", "per-round solver deadline")
@@ -194,10 +237,23 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt("departures", "", "override: per-round app departure probability")
         .opt("workers", "1", "local-search worker threads (sharded scan)")
         .opt("shard", "apps", "move-space shard strategy (apps|moves)")
+        .opt("regions", "1", "global regions (each runs its own SPTLB; >1 enables the global layer)")
+        .opt("global-policy", "spillover", "cross-region policy (none|spillover|aggressive)")
+        .opt("region-exec", "parallel", "per-region round execution (sequential|parallel)")
         .opt("log", "", "write the decision log JSON to this file")
         .opt("event-log", "", "write the applied-events journal JSON to this file");
     with_parsed(cmd, args, |p| {
         let seed = p.u64("seed").unwrap_or(42);
+        let n_regions = match p.usize_at_least("regions", 1) {
+            Ok(n) => n,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        };
+        if n_regions > 1 {
+            return cmd_serve_multiregion(&p, seed, n_regions);
+        }
         let bed = match load_bed(&p.str("scenario").unwrap(), seed) {
             Ok(b) => b,
             Err(e) => {
@@ -221,22 +277,8 @@ fn cmd_serve(args: &[String]) -> i32 {
             }
         };
         // Optional per-knob overrides on top of the preset.
-        let overrides: [(&str, f64, &mut f64); 4] = [
-            ("drift", f64::MAX, &mut scenario.drift_sigma),
-            ("drift-frac", 1.0, &mut scenario.drift_fraction),
-            ("arrivals", 1.0, &mut scenario.arrival_prob),
-            ("departures", 1.0, &mut scenario.departure_prob),
-        ];
-        for (flag, hi, slot) in overrides {
-            if p.get(flag).is_some_and(|v| !v.is_empty()) {
-                match p.f64_in_range(flag, 0.0, hi) {
-                    Ok(v) => *slot = v,
-                    Err(e) => {
-                        eprintln!("error: {e}");
-                        return 2;
-                    }
-                }
-            }
+        if let Err(code) = apply_scenario_overrides(&p, &mut [&mut scenario]) {
+            return code;
         }
         let engine = match EngineMode::from_name(p.get("engine").unwrap_or("incremental")) {
             Some(m) => m,
@@ -284,6 +326,90 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
         0
     })
+}
+
+/// `serve --regions N` (N > 1): the global scheduler over N per-region
+/// SPTLBs, each solving in parallel on its own worker thread.
+fn cmd_serve_multiregion(p: &sptlb::util::cli::Parsed, seed: u64, n_regions: usize) -> i32 {
+    let preset = p.str("scenario").unwrap();
+    let Some(spec) = WorkloadSpec::by_name(&preset) else {
+        eprintln!("error: unknown scenario '{preset}' (paper|small|large)");
+        return 2;
+    };
+    let parallel = match parse_parallel(p) {
+        Ok(x) => x,
+        Err(code) => return code,
+    };
+    let events = p.str("events").unwrap_or_else(|_| "drift".into());
+    let Some(mut scenario) = MultiRegionScenario::by_name(&events, n_regions, seed) else {
+        eprintln!(
+            "error: unknown event scenario '{events}' \
+             (multiregion|failover|steady|drift|churn|spike|outage|mixed)"
+        );
+        return 2;
+    };
+    // Per-knob overrides apply to every region's stream.
+    let mut per_region: Vec<&mut ScenarioConfig> = scenario.per_region.iter_mut().collect();
+    if let Err(code) = apply_scenario_overrides(p, &mut per_region) {
+        return code;
+    }
+    drop(per_region);
+    let Some(engine) = EngineMode::from_name(p.get("engine").unwrap_or("incremental")) else {
+        eprintln!("error: unknown engine (incremental|rebuild)");
+        return 2;
+    };
+    let Some(policy) = GlobalPolicy::by_name(p.get("global-policy").unwrap_or("spillover"))
+    else {
+        eprintln!("error: unknown global policy (none|spillover|aggressive)");
+        return 2;
+    };
+    let Some(execution) = RegionExecution::from_name(p.get("region-exec").unwrap_or("parallel"))
+    else {
+        eprintln!("error: unknown region execution (sequential|parallel)");
+        return 2;
+    };
+    let decay = match p.u64("decay") {
+        Ok(d) => d as u32,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let bed = generate_multiregion(&MultiRegionSpec::new(n_regions, spec).with_seed(seed));
+    let cfg = MultiRegionConfig {
+        sptlb: SptlbConfig {
+            timeout: Duration::from_millis(p.u64("timeout-ms").unwrap_or(60)),
+            seed,
+            parallel,
+            avoid_decay: decay,
+            ..SptlbConfig::default()
+        },
+        engine,
+        scenario,
+        policy,
+        execution,
+        seed,
+        ..MultiRegionConfig::new(n_regions)
+    };
+    let mut coordinator = MultiRegionCoordinator::new(cfg, bed);
+    let rounds = p.u64("rounds").unwrap_or(10) as u32;
+    coordinator.run(rounds);
+    println!("{}", coordinator.metrics.to_json().pretty());
+    for (flag, json) in [
+        ("log", coordinator.log_json()),
+        ("event-log", coordinator.event_log_json()),
+    ] {
+        if let Ok(path) = p.str(flag) {
+            if !path.is_empty() {
+                if let Err(e) = std::fs::write(&path, json.pretty()) {
+                    eprintln!("error writing {path}: {e}");
+                    return 1;
+                }
+                println!("{flag} written to {path}");
+            }
+        }
+    }
+    0
 }
 
 fn cmd_fig3(args: &[String]) -> i32 {

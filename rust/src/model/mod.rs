@@ -11,6 +11,6 @@ pub mod tier;
 pub use app::{App, AppId, Criticality, Slo};
 pub use assignment::{Assignment, Move};
 pub use fleet::FleetEvent;
-pub use region::{RegionId, RegionSet};
+pub use region::{InterRegionMatrix, RegionId, RegionSet, RegionTopology};
 pub use resources::{ResourceKind, ResourceVec, NUM_RESOURCES};
 pub use tier::{default_ideal_utilization, paper_slo_mapping, paper_tiers_for_slo, Tier, TierId};

@@ -2,7 +2,17 @@
 //! about. A tier owns machines in a set of regions; moving an app to a tier
 //! without presence near its data source incurs the network cost Fig. 4
 //! measures.
+//!
+//! Two levels use this module. *Micro* regions are the per-testbed
+//! geography a tier's [`RegionSet`] spans. *Global* regions are one level
+//! up: each runs its own SPTLB over its own tiers, and the
+//! [`GlobalScheduler`](crate::hierarchy::global) balances apps across them
+//! using the [`InterRegionMatrix`] wide-area latency/egress costs and the
+//! [`RegionTopology`] per-region tier sets.
 
+use crate::model::tier::TierId;
+use crate::util::json::Json;
+use crate::util::prng::Pcg64;
 use std::fmt;
 
 /// Dense region identifier.
@@ -85,6 +95,110 @@ impl FromIterator<RegionId> for RegionSet {
     }
 }
 
+/// Wide-area costs between *global* regions: a symmetric latency matrix
+/// (ms) plus a per-unit-demand egress cost. The global scheduler consults
+/// both before proposing a cross-region migration — a move that would
+/// stream data across an expensive or slow pairing is never proposed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InterRegionMatrix {
+    n: usize,
+    latency_ms: Vec<f64>, // row-major n×n, symmetrized, zero diagonal
+    egress_cost: Vec<f64>, // row-major n×n, cost units per demand unit
+}
+
+impl InterRegionMatrix {
+    pub fn new(n: usize, latency_ms: Vec<f64>, egress_cost: Vec<f64>) -> Self {
+        assert_eq!(latency_ms.len(), n * n, "latency shape");
+        assert_eq!(egress_cost.len(), n * n, "egress shape");
+        let mut m = Self { n, latency_ms, egress_cost };
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let avg = (m.latency_ms[i * n + j] + m.latency_ms[j * n + i]) / 2.0;
+                m.latency_ms[i * n + j] = avg;
+                m.latency_ms[j * n + i] = avg;
+            }
+            m.latency_ms[i * n + i] = 0.0;
+            m.egress_cost[i * n + i] = 0.0;
+        }
+        m
+    }
+
+    /// Synthesize a geo-ring of global regions: neighbours sit ~30–60 ms
+    /// apart, antipodes ~`n/2` hops away; egress cost grows with hop
+    /// distance (same-continent transfers are cheap, cross-ocean is not).
+    pub fn synthesize(n: usize, rng: &mut Pcg64) -> Self {
+        assert!(n > 0, "need at least one region");
+        let mut latency = vec![0.0; n * n];
+        let mut egress = vec![0.0; n * n];
+        let hop_ms: Vec<f64> = (0..n).map(|_| rng.uniform(30.0, 60.0)).collect();
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                // Ring distance in hops; latency = sum of hop lengths on
+                // the shorter arc, so the triangle inequality holds.
+                let d = (i as i64 - j as i64).unsigned_abs() as usize;
+                let hops = d.min(n - d);
+                let (lo, hi) = (i.min(j), i.max(j));
+                let arc: f64 = if hi - lo == hops {
+                    (lo..hi).map(|k| hop_ms[k]).sum()
+                } else {
+                    (hi..n).chain(0..lo).map(|k| hop_ms[k]).sum()
+                };
+                latency[i * n + j] = arc + 2.0;
+                egress[i * n + j] = 0.01 * hops as f64;
+            }
+        }
+        Self::new(n, latency, egress)
+    }
+
+    pub fn n_regions(&self) -> usize {
+        self.n
+    }
+
+    pub fn latency_ms(&self, a: RegionId, b: RegionId) -> f64 {
+        self.latency_ms[a.0 * self.n + b.0]
+    }
+
+    pub fn egress_cost(&self, a: RegionId, b: RegionId) -> f64 {
+        self.egress_cost[a.0 * self.n + b.0]
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n_regions", Json::num(self.n as f64)),
+            ("latency_ms", Json::arr(self.latency_ms.iter().map(|&v| Json::num(v)))),
+            ("egress_cost", Json::arr(self.egress_cost.iter().map(|&v| Json::num(v)))),
+        ])
+    }
+}
+
+/// The global layer's static map: which tiers each global region owns
+/// (tier ids are region-local — every region runs its own SPTLB over its
+/// own tier namespace) plus the inter-region cost matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionTopology {
+    tier_sets: Vec<Vec<TierId>>,
+    pub inter: InterRegionMatrix,
+}
+
+impl RegionTopology {
+    pub fn new(tier_sets: Vec<Vec<TierId>>, inter: InterRegionMatrix) -> Self {
+        assert_eq!(tier_sets.len(), inter.n_regions(), "topology shape");
+        Self { tier_sets, inter }
+    }
+
+    pub fn n_regions(&self) -> usize {
+        self.tier_sets.len()
+    }
+
+    /// Tiers (region-local ids) the region owns.
+    pub fn tiers_of(&self, r: RegionId) -> &[TierId] {
+        &self.tier_sets[r.0]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,6 +221,59 @@ mod tests {
         assert!(!a.contains(RegionId(4)));
         assert_eq!(a.intersection_size(&b), 2);
         assert_eq!(b.intersection_size(&a), 2);
+    }
+
+    #[test]
+    fn inter_region_matrix_is_symmetric_with_zero_diagonal() {
+        let mut rng = Pcg64::new(3);
+        let m = InterRegionMatrix::synthesize(5, &mut rng);
+        for i in 0..5 {
+            assert_eq!(m.latency_ms(RegionId(i), RegionId(i)), 0.0);
+            assert_eq!(m.egress_cost(RegionId(i), RegionId(i)), 0.0);
+            for j in 0..5 {
+                assert_eq!(
+                    m.latency_ms(RegionId(i), RegionId(j)),
+                    m.latency_ms(RegionId(j), RegionId(i))
+                );
+                if i != j {
+                    assert!(m.latency_ms(RegionId(i), RegionId(j)) > 0.0);
+                    assert!(m.egress_cost(RegionId(i), RegionId(j)) > 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inter_region_costs_grow_with_ring_distance() {
+        let mut rng = Pcg64::new(9);
+        let m = InterRegionMatrix::synthesize(6, &mut rng);
+        // Antipodal (3 hops) must cost strictly more egress than adjacent.
+        assert!(
+            m.egress_cost(RegionId(0), RegionId(3)) > m.egress_cost(RegionId(0), RegionId(1))
+        );
+        assert!(
+            m.latency_ms(RegionId(0), RegionId(3)) > m.latency_ms(RegionId(0), RegionId(1))
+        );
+    }
+
+    #[test]
+    fn inter_region_matrix_synthesis_is_deterministic() {
+        let a = InterRegionMatrix::synthesize(4, &mut Pcg64::new(7));
+        let b = InterRegionMatrix::synthesize(4, &mut Pcg64::new(7));
+        assert_eq!(a, b);
+        assert!(a.to_json().to_string().contains("latency_ms"));
+    }
+
+    #[test]
+    fn topology_maps_regions_to_tier_sets() {
+        let inter = InterRegionMatrix::synthesize(2, &mut Pcg64::new(1));
+        let topo = RegionTopology::new(
+            vec![vec![TierId(0), TierId(1)], vec![TierId(0)]],
+            inter,
+        );
+        assert_eq!(topo.n_regions(), 2);
+        assert_eq!(topo.tiers_of(RegionId(0)).len(), 2);
+        assert_eq!(topo.tiers_of(RegionId(1)), &[TierId(0)]);
     }
 
     #[test]

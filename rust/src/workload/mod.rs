@@ -7,12 +7,12 @@
 
 pub mod scenario;
 
-pub use scenario::{ScenarioConfig, ScenarioGen};
+pub use scenario::{MultiRegionScenario, ScenarioConfig, ScenarioGen};
 
 use crate::model::tier::default_ideal_utilization;
 use crate::model::{
-    paper_slo_mapping, paper_tiers_for_slo, App, AppId, Assignment, Criticality, RegionId,
-    RegionSet, ResourceVec, Slo, Tier, TierId,
+    paper_slo_mapping, paper_tiers_for_slo, App, AppId, Assignment, Criticality,
+    InterRegionMatrix, RegionId, RegionSet, RegionTopology, ResourceVec, Slo, Tier, TierId,
 };
 use crate::network::LatencyMatrix;
 use crate::util::prng::Pcg64;
@@ -255,6 +255,94 @@ pub fn generate(spec: &WorkloadSpec) -> TestBed {
     TestBed { apps, tiers, initial: Assignment::new(tier_of), latency }
 }
 
+/// Parameters for a multi-region fleet: `n_regions` independent testbeds
+/// (each its own tier namespace, latency matrix and SPTLB) under one
+/// global scheduler. Capacity heterogeneity across regions is what makes
+/// cross-region balancing non-trivial (Barika et al.'s multicloud
+/// setting): some regions simply run hotter than others.
+#[derive(Debug, Clone)]
+pub struct MultiRegionSpec {
+    pub n_regions: usize,
+    /// Shape of EACH region's testbed (`n_apps` is apps per region).
+    pub per_region: WorkloadSpec,
+    /// ± fractional capacity wobble across regions (0 = homogeneous).
+    pub capacity_spread: f64,
+    pub seed: u64,
+}
+
+impl MultiRegionSpec {
+    pub fn new(n_regions: usize, per_region: WorkloadSpec) -> Self {
+        let seed = per_region.seed;
+        Self { n_regions, per_region, capacity_spread: 0.25, seed }
+    }
+
+    /// Fixed TOTAL fleet size split evenly across regions — the bench
+    /// contract (rounds/sec vs region count at constant fleet size).
+    /// `total_apps` must divide evenly and leave at least one app per
+    /// tier in each region, so the ladder compares identical fleets.
+    pub fn fixed_fleet(total_apps: usize, n_regions: usize, base: WorkloadSpec) -> Self {
+        assert!(n_regions >= 1);
+        assert_eq!(
+            total_apps % n_regions,
+            0,
+            "fixed_fleet: {total_apps} apps do not split evenly over {n_regions} regions"
+        );
+        let per = total_apps / n_regions;
+        assert!(
+            per >= base.n_tiers,
+            "fixed_fleet: {per} apps/region < {} tiers",
+            base.n_tiers
+        );
+        Self::new(n_regions, base.with_apps(per))
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Everything a multi-region balancing experiment needs.
+#[derive(Debug, Clone)]
+pub struct MultiRegionBed {
+    pub regions: Vec<TestBed>,
+    pub topology: RegionTopology,
+}
+
+impl MultiRegionBed {
+    pub fn n_regions(&self) -> usize {
+        self.regions.len()
+    }
+
+    pub fn total_apps(&self) -> usize {
+        self.regions.iter().map(|b| b.n_apps()).sum()
+    }
+}
+
+/// Generate a multi-region fleet. Per-region randomness comes from
+/// order-free `Pcg64::stream(seed, region)` substreams, so region r's
+/// testbed is identical no matter how many sibling regions exist; the
+/// cross-region wobble and inter-region costs come from a separate
+/// master stream.
+pub fn generate_multiregion(spec: &MultiRegionSpec) -> MultiRegionBed {
+    assert!(spec.n_regions >= 1, "need at least one region");
+    let mut master = Pcg64::new(spec.seed ^ 0x61_0BA1);
+    let mut regions = Vec::with_capacity(spec.n_regions);
+    let mut tier_sets = Vec::with_capacity(spec.n_regions);
+    for r in 0..spec.n_regions {
+        let seed_r = Pcg64::stream(spec.seed, r as u64).next_u64();
+        let mut bed = generate(&spec.per_region.clone().with_seed(seed_r));
+        let wobble = 1.0 + master.uniform(-spec.capacity_spread, spec.capacity_spread);
+        for t in &mut bed.tiers {
+            t.capacity = t.capacity.scale(wobble);
+        }
+        tier_sets.push(bed.tiers.iter().map(|t| t.id).collect());
+        regions.push(bed);
+    }
+    let inter = InterRegionMatrix::synthesize(spec.n_regions, &mut master);
+    MultiRegionBed { regions, topology: RegionTopology::new(tier_sets, inter) }
+}
+
 impl TestBed {
     /// Generate the named preset.
     pub fn preset(name: &str) -> Option<TestBed> {
@@ -376,5 +464,66 @@ mod tests {
             assert!(TestBed::preset(name).is_some());
         }
         assert!(TestBed::preset("nope").is_none());
+    }
+
+    #[test]
+    fn multiregion_generation_is_deterministic() {
+        let spec = MultiRegionSpec::new(3, WorkloadSpec::small());
+        let a = generate_multiregion(&spec);
+        let b = generate_multiregion(&spec);
+        assert_eq!(a.n_regions(), 3);
+        for (ra, rb) in a.regions.iter().zip(&b.regions) {
+            assert_eq!(ra.apps, rb.apps);
+            assert_eq!(ra.tiers, rb.tiers);
+            assert_eq!(ra.initial, rb.initial);
+        }
+        assert_eq!(a.topology, b.topology);
+    }
+
+    #[test]
+    fn region_substreams_are_order_free() {
+        // Region r's population must not depend on how many siblings
+        // exist (the Pcg64::stream property, one level up).
+        let two = generate_multiregion(&MultiRegionSpec::new(2, WorkloadSpec::small()));
+        let three = generate_multiregion(&MultiRegionSpec::new(3, WorkloadSpec::small()));
+        for r in 0..2 {
+            assert_eq!(two.regions[r].apps, three.regions[r].apps);
+            assert_eq!(two.regions[r].initial, three.regions[r].initial);
+        }
+    }
+
+    #[test]
+    fn regions_have_heterogeneous_capacity() {
+        let bed = generate_multiregion(&MultiRegionSpec::new(4, WorkloadSpec::small()));
+        let totals: Vec<f64> = bed
+            .regions
+            .iter()
+            .map(|b| b.tiers.iter().map(|t| t.capacity.cpu()).sum())
+            .collect();
+        let min = totals.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = totals.iter().cloned().fold(0.0, f64::max);
+        assert!(max > min * 1.02, "capacity wobble must differentiate regions");
+        assert_eq!(bed.topology.n_regions(), 4);
+        assert_eq!(bed.topology.inter.n_regions(), 4);
+    }
+
+    #[test]
+    fn fixed_fleet_splits_total_across_regions() {
+        let spec = MultiRegionSpec::fixed_fleet(120, 4, WorkloadSpec::small());
+        assert_eq!(spec.per_region.n_apps, 30);
+        let bed = generate_multiregion(&spec);
+        assert_eq!(bed.total_apps(), 120, "the ladder contract: total is exact");
+    }
+
+    #[test]
+    #[should_panic(expected = "do not split evenly")]
+    fn fixed_fleet_rejects_uneven_split() {
+        let _ = MultiRegionSpec::fixed_fleet(100, 3, WorkloadSpec::small());
+    }
+
+    #[test]
+    #[should_panic(expected = "apps/region")]
+    fn fixed_fleet_rejects_sub_tier_fleets() {
+        let _ = MultiRegionSpec::fixed_fleet(4, 4, WorkloadSpec::small());
     }
 }

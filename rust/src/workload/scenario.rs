@@ -108,6 +108,81 @@ impl ScenarioConfig {
     }
 }
 
+/// Per-region scenario bundle for multi-region service mode: one
+/// [`ScenarioConfig`] per global region, each seeded from an order-free
+/// `Pcg64::stream(seed, region)` substream so region r's event stream is
+/// identical no matter how many sibling regions run (and whether they
+/// run sequentially or in parallel).
+#[derive(Debug, Clone)]
+pub struct MultiRegionScenario {
+    pub per_region: Vec<ScenarioConfig>,
+}
+
+impl MultiRegionScenario {
+    fn stream_seed(seed: u64, region: usize) -> u64 {
+        Pcg64::stream(seed, region as u64).next_u64()
+    }
+
+    /// The same preset in every region, decorrelated per-region streams.
+    pub fn uniform(n_regions: usize, base: ScenarioConfig) -> Self {
+        let seed = base.seed;
+        Self {
+            per_region: (0..n_regions)
+                .map(|r| base.clone().with_seed(Self::stream_seed(seed, r)))
+                .collect(),
+        }
+    }
+
+    /// The multi-region steady-state workload: drift and churn
+    /// everywhere, spike waves staggered so regions heat up at different
+    /// times — the shape that keeps the spillover policy busy.
+    pub fn multiregion(n_regions: usize, seed: u64) -> Self {
+        Self {
+            per_region: (0..n_regions)
+                .map(|r| ScenarioConfig {
+                    drift_fraction: 0.3,
+                    arrival_prob: 0.4,
+                    departure_prob: 0.3,
+                    spike_period: Some(5 + r as u32),
+                    spike_fraction: 0.3,
+                    ..ScenarioConfig::drift().with_seed(Self::stream_seed(seed, r))
+                })
+                .collect(),
+        }
+    }
+
+    /// The failover drill: light drift everywhere, then region 0 loses a
+    /// micro-region at round 3 — its capacity collapses and the global
+    /// scheduler must evacuate apps into the surviving regions.
+    pub fn failover(n_regions: usize, seed: u64) -> Self {
+        Self {
+            per_region: (0..n_regions)
+                .map(|r| ScenarioConfig {
+                    drift_fraction: 0.3,
+                    outage_round: if r == 0 { Some(3) } else { None },
+                    ..ScenarioConfig::drift().with_seed(Self::stream_seed(seed, r))
+                })
+                .collect(),
+        }
+    }
+
+    /// Resolve a scenario name for `--regions N` service mode: the two
+    /// multi-region presets, or any single-region preset applied
+    /// uniformly to every region.
+    pub fn by_name(name: &str, n_regions: usize, seed: u64) -> Option<Self> {
+        match name {
+            "multiregion" => Some(Self::multiregion(n_regions, seed)),
+            "failover" => Some(Self::failover(n_regions, seed)),
+            _ => ScenarioConfig::by_name(name)
+                .map(|c| Self::uniform(n_regions, c.with_seed(seed))),
+        }
+    }
+
+    pub fn n_regions(&self) -> usize {
+        self.per_region.len()
+    }
+}
+
 /// Stateful event-stream generator. Events are emitted in a fixed order
 /// (drift, spike, outage, departure, arrival) and every random draw
 /// comes from one PRNG stream, so the same config over the same observed
@@ -319,5 +394,35 @@ mod tests {
             assert!(ScenarioConfig::by_name(name).is_some(), "{name}");
         }
         assert!(ScenarioConfig::by_name("zzz").is_none());
+    }
+
+    #[test]
+    fn multiregion_presets_resolve_and_are_per_region() {
+        for name in ["multiregion", "failover", "drift", "steady"] {
+            let s = MultiRegionScenario::by_name(name, 3, 42).expect(name);
+            assert_eq!(s.n_regions(), 3);
+        }
+        assert!(MultiRegionScenario::by_name("zzz", 3, 42).is_none());
+        // Per-region seeds are decorrelated.
+        let s = MultiRegionScenario::multiregion(3, 42);
+        assert_ne!(s.per_region[0].seed, s.per_region[1].seed);
+        // Spikes are staggered.
+        assert_ne!(s.per_region[0].spike_period, s.per_region[1].spike_period);
+    }
+
+    #[test]
+    fn failover_strikes_only_region_zero() {
+        let s = MultiRegionScenario::failover(3, 7);
+        assert_eq!(s.per_region[0].outage_round, Some(3));
+        assert!(s.per_region[1..].iter().all(|c| c.outage_round.is_none()));
+    }
+
+    #[test]
+    fn region_streams_are_order_free() {
+        // Region r's config seed must not depend on the region count.
+        let two = MultiRegionScenario::multiregion(2, 9);
+        let four = MultiRegionScenario::multiregion(4, 9);
+        assert_eq!(two.per_region[0].seed, four.per_region[0].seed);
+        assert_eq!(two.per_region[1].seed, four.per_region[1].seed);
     }
 }

@@ -1,0 +1,133 @@
+//! Compile-time stub of the `xla` bindings surface that
+//! `sptlb::runtime::pjrt` consumes. See Cargo.toml for why this exists:
+//! `cargo check --features pjrt` must keep the gated device path
+//! compiling even though the real PJRT bindings are absent offline.
+//!
+//! Shape bookkeeping in [`Literal`] is real (element counts are checked
+//! by `reshape`), so obvious tensor-layout bugs in the caller still fail
+//! fast; everything that would touch a device returns [`Error`].
+
+use std::fmt;
+
+/// The stub's only error: the operation needs the real bindings.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} requires the real xla bindings (this build uses the compile-only stub)"
+    )))
+}
+
+/// Host-side tensor. Only the shape arithmetic is functional.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    elems: usize,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T>(v: &[T]) -> Literal {
+        Literal { elems: v.len(), dims: vec![v.len() as i64] }
+    }
+
+    /// Reshape; the element count must be preserved (checked — this is
+    /// the one place the stub can catch real caller bugs).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let product: i64 = dims.iter().product();
+        if product < 0 || product as usize != self.elems {
+            return Err(Error(format!(
+                "reshape {:?} -> {:?} changes element count ({})",
+                self.dims, dims, self.elems
+            )));
+        }
+        Ok(Literal { elems: self.elems, dims: dims.to_vec() })
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Parsed HLO module text.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident output buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// The PJRT client. `cpu()` fails in the stub, so no downstream call
+/// site can reach an unimplemented path at runtime.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let l = Literal::vec1(&[0f32; 12]);
+        assert!(l.reshape(&[3, 4]).is_ok());
+        assert!(l.reshape(&[2, 4]).is_err());
+    }
+
+    #[test]
+    fn client_reports_stub() {
+        let err = PjRtClient::cpu().err().expect("stub must not hand out clients");
+        assert!(err.to_string().contains("xla stub"));
+    }
+}
