@@ -1,0 +1,67 @@
+//! Proactive scheduling: the forecast subsystem end to end.
+//!
+//! Runs the same diurnal workload (phase-shifted sinusoidal demand
+//! waves) twice through the service coordinator — once purely reactive
+//! (`--forecaster none`) and once forecast-aware (`seasonal-naive`) —
+//! and compares how many rounds each policy started with a tier already
+//! over hard capacity. The proactive loop is:
+//!
+//!   history ring buffers → forecaster → predicted-headroom goal → moves
+//!   *before* the predicted breach
+//!
+//! Usage: cargo run --release --example proactive
+
+use sptlb::coordinator::{Coordinator, CoordinatorConfig};
+use sptlb::forecast::{ForecastConfig, ForecasterKind};
+use sptlb::hierarchy::variants::Variant;
+use sptlb::sptlb::SptlbConfig;
+use sptlb::workload::{generate, ScenarioConfig, WorkloadSpec};
+use std::time::Duration;
+
+fn main() {
+    // A hot fleet (72% utilized) under the diurnal wave: three anti-phase
+    // app groups swing ±80% while aggregate demand stays ~flat, so
+    // breaches come from per-tier phase composition — fixable only by
+    // moving apps BEFORE their group peaks.
+    let rounds = 36;
+    let bed = generate(&WorkloadSpec { fleet_utilization: 0.72, ..WorkloadSpec::paper() });
+
+    let run = |kind: ForecasterKind| {
+        let cfg = CoordinatorConfig {
+            sptlb: SptlbConfig {
+                variant: Variant::NoCnst,
+                timeout: Duration::from_millis(40),
+                ..SptlbConfig::default()
+            },
+            scenario: ScenarioConfig::diurnal(),
+            forecast: ForecastConfig { forecaster: kind, ..ForecastConfig::default() },
+            ..CoordinatorConfig::default()
+        };
+        let mut c = Coordinator::from_testbed(cfg, bed.clone());
+        c.run(rounds);
+        c
+    };
+
+    println!("diurnal scenario, {rounds} rounds, {} apps\n", bed.apps.len());
+    println!("policy          breach rounds   mean sMAPE");
+    for kind in [
+        ForecasterKind::None,
+        ForecasterKind::NaiveLast,
+        ForecasterKind::Holt,
+        ForecasterKind::SeasonalNaive,
+    ] {
+        let c = run(kind);
+        let smape = c.metrics.forecast_smape.mean();
+        println!(
+            "{:<15} {:>7}/{rounds}       {}",
+            kind.name(),
+            c.metrics.breach_rounds,
+            if smape.is_finite() { format!("{smape:.4}") } else { "-".into() },
+        );
+    }
+    println!(
+        "\nThe forecast-aware policies see each group's peak coming and move\n\
+         apps while there is still headroom; the reactive baseline only reacts\n\
+         after the breach has already been counted.\nproactive OK"
+    );
+}

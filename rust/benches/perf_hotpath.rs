@@ -17,6 +17,7 @@ use sptlb::coordinator::{
     Coordinator, CoordinatorConfig, EngineMode, MultiRegionConfig, MultiRegionCoordinator,
     RegionExecution,
 };
+use sptlb::forecast::{ForecastConfig, ForecasterKind};
 use sptlb::hierarchy::global::GlobalPolicy;
 use sptlb::hierarchy::variants::Variant;
 use sptlb::metadata::MetadataStore;
@@ -253,6 +254,94 @@ fn main() {
             ("rebuild_rounds_per_sec", Json::num(rebuild_rps)),
             ("incremental_rounds_per_sec", Json::num(incremental_rps)),
             ("speedup", Json::num(speedup)),
+        ]),
+    );
+
+    // --- forecast: proactive vs reactive on the diurnal wave ----------------
+    // Same diurnal fixture for every forecaster: per-app sinusoidal demand
+    // waves in three anti-phase groups. The reactive baseline (`none`)
+    // measures the raw round cost; the forecast-aware runs add history
+    // upkeep + the predicted-headroom goal (the rounds/sec delta is the
+    // overhead of proactivity), and every forecaster reports its one-step
+    // sMAPE plus how many rounds still breached pre-solve capacity.
+    println!("\n[forecast] reactive vs forecast-aware rounds, diurnal scenario");
+    let fc_rounds: u32 = if smoke { 8 } else { 36 };
+    let fc_bed = generate(&WorkloadSpec {
+        fleet_utilization: 0.72,
+        ..WorkloadSpec::paper()
+    });
+    let run_forecaster = |kind: ForecasterKind| {
+        let bed = fc_bed.clone();
+        let cfg = CoordinatorConfig {
+            sptlb: SptlbConfig {
+                timeout: Duration::from_millis(5),
+                variant: Variant::NoCnst,
+                samples_per_app: 100,
+                ..SptlbConfig::default()
+            },
+            scenario: ScenarioConfig::diurnal(),
+            forecast: ForecastConfig { forecaster: kind, ..ForecastConfig::default() },
+            ..CoordinatorConfig::default()
+        };
+        let mut c = Coordinator::from_testbed(cfg, bed);
+        c.run(fc_rounds);
+        c
+    };
+    let mut reactive_sample = None;
+    let reactive = measure("forecast_reactive_rounds", warm, reps(3), || {
+        reactive_sample = Some(run_forecaster(ForecasterKind::None));
+    });
+    let mut aware_sample = None;
+    let aware = measure("forecast_holt_rounds", warm, reps(3), || {
+        aware_sample = Some(run_forecaster(ForecasterKind::Holt));
+    });
+    let fc_rps = |mean_ms: f64| fc_rounds as f64 / (mean_ms / 1e3);
+    let (reactive_rps, aware_rps) = (fc_rps(reactive.mean_ms), fc_rps(aware.mean_ms));
+    let reactive_sample = reactive_sample.expect("at least one measured reactive run");
+    let aware_sample = aware_sample.expect("at least one measured holt run");
+    println!(
+        "  reactive {reactive_rps:.1} rounds/s ({} breach rounds) | holt {aware_rps:.1} rounds/s \
+         ({} breach rounds over {fc_rounds})",
+        reactive_sample.metrics.breach_rounds, aware_sample.metrics.breach_rounds,
+    );
+    let mut by_forecaster: Vec<Json> = Vec::new();
+    for kind in [
+        ForecasterKind::NaiveLast,
+        ForecasterKind::Ewma,
+        ForecasterKind::Holt,
+        ForecasterKind::SeasonalNaive,
+    ] {
+        let c = run_forecaster(kind);
+        let smape = c.metrics.forecast_smape.mean();
+        println!(
+            "  {:<14} sMAPE {smape:.4}, breach rounds {}/{fc_rounds}",
+            kind.name(),
+            c.metrics.breach_rounds,
+        );
+        by_forecaster.push(Json::obj(vec![
+            ("forecaster", Json::str(kind.name())),
+            ("smape", Json::num(smape)),
+            ("breach_rounds", Json::num(c.metrics.breach_rounds as f64)),
+        ]));
+    }
+    write_bench_json(
+        "BENCH_forecast.json",
+        &Json::obj(vec![
+            ("bench", Json::str("forecast_rounds_per_sec")),
+            ("scenario", Json::str("diurnal_paper_072util")),
+            ("smoke", Json::num(smoke as u8 as f64)),
+            ("rounds", Json::num(fc_rounds as f64)),
+            ("reactive_rounds_per_sec", Json::num(reactive_rps)),
+            ("forecast_rounds_per_sec", Json::num(aware_rps)),
+            (
+                "reactive_breach_rounds",
+                Json::num(reactive_sample.metrics.breach_rounds as f64),
+            ),
+            (
+                "forecast_breach_rounds",
+                Json::num(aware_sample.metrics.breach_rounds as f64),
+            ),
+            ("by_forecaster", Json::arr(by_forecaster)),
         ]),
     );
 

@@ -34,13 +34,15 @@
 //! modes share the registry code, so decay does not break equivalence.
 
 use crate::coordinator::fleet::{FleetDelta, FleetState};
+use crate::forecast::{ForecastConfig, HistoryStore};
 use crate::metadata::MetadataStore;
 use crate::metrics::{Collector, IncrementalCollector, SimulatedMonitor};
-use crate::model::{App, AppId, FleetEvent, Move, ResourceVec, TierId};
+use crate::model::{App, AppId, FleetEvent, Move, ResourceVec, TierId, NUM_RESOURCES};
 use crate::network::LatencyMatrix;
 use crate::rebalancer::problem::Problem;
 use crate::rebalancer::scoring;
 use crate::sptlb::{BalanceReport, Sptlb, SptlbConfig};
+use crate::util::stats;
 use crate::util::timer::Stopwatch;
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -90,11 +92,47 @@ pub struct FleetEngine {
     // ---- avoid-constraint registry (shared by both modes) ----
     avoids: BTreeMap<(AppId, TierId), u32>,
     forbidden: BTreeMap<(TierId, TierId), u32>,
+    // ---- forecast subsystem (shared by both modes) ----
+    /// Forecast knobs; `forecaster == None` keeps every prediction path
+    /// dormant and the engine byte-for-byte reactive.
+    forecast: ForecastConfig,
+    /// Per-app registered-demand ring buffers, fed from the event
+    /// dirty-set (only touched apps append — the incremental capture).
+    history: HistoryStore,
+    /// Per-app forecasts, keyed by fleet-stable id and recomputed only
+    /// when the app's history advanced this round (the same dirty-set
+    /// discipline the collector uses) — an untouched app's history is
+    /// unchanged, so its cached forecasts are bit-identical to a fresh
+    /// recomputation. At the start of `forecast_round` the map still
+    /// holds *last* round's entries, which is exactly what the one-step
+    /// accuracy comparison needs.
+    forecasts: BTreeMap<AppId, AppForecast>,
+    /// sMAPE of last round's one-step forecasts against this round's
+    /// registered demands (NaN until both exist).
+    last_smape: f64,
+    /// Histories primed with the initial fleet?
+    history_primed: bool,
+}
+
+/// One app's forecasts at the two horizons the engine consumes.
+#[derive(Debug, Clone, Copy)]
+struct AppForecast {
+    /// One observation ahead — next round's accuracy baseline.
+    one_step: ResourceVec,
+    /// `ForecastConfig::horizon` ahead — the solver/global-layer input.
+    horizon: ResourceVec,
 }
 
 impl FleetEngine {
     pub fn new(mode: EngineMode, base: &SptlbConfig) -> Self {
+        Self::with_forecast(mode, base, ForecastConfig::default())
+    }
+
+    /// An engine with the forecasting subsystem configured (the
+    /// [`ForecastConfig::default`] forecaster is `none` — fully reactive).
+    pub fn with_forecast(mode: EngineMode, base: &SptlbConfig, forecast: ForecastConfig) -> Self {
         let collect_seed = base.seed ^ 0x5EED;
+        let history = HistoryStore::new(forecast.history);
         Self {
             mode,
             decay: base.avoid_decay,
@@ -111,6 +149,11 @@ impl FleetEngine {
             last_scraped: 0,
             avoids: BTreeMap::new(),
             forbidden: BTreeMap::new(),
+            forecast,
+            history,
+            forecasts: BTreeMap::new(),
+            last_smape: f64::NAN,
+            history_primed: false,
         }
     }
 
@@ -122,6 +165,143 @@ impl FleetEngine {
     /// Active forbidden tier→tier transitions (same decay registry).
     pub fn active_forbidden(&self) -> Vec<(TierId, TierId)> {
         self.forbidden.keys().copied().collect()
+    }
+
+    /// Is the forecasting subsystem feeding the schedulers?
+    pub fn forecasting_enabled(&self) -> bool {
+        self.forecast.is_enabled()
+    }
+
+    /// sMAPE of last round's one-step forecasts against this round's
+    /// registered demands — NaN while forecasting is off or before the
+    /// first comparison exists.
+    pub fn last_smape(&self) -> f64 {
+        self.last_smape
+    }
+
+    /// Apps with recorded demand history (observability + tests).
+    pub fn history_len(&self) -> usize {
+        self.history.n_apps()
+    }
+
+    /// Horizon forecast for every app of `state`, positionally parallel
+    /// to `state.apps()` — what the global layer reads for predicted
+    /// region pressure. `None` while forecasting is off. Pure given the
+    /// current histories, so calling it never perturbs the engine. Each
+    /// app's forecast is looked up by its *stable id* (the per-app cache
+    /// `forecast_round` maintains), so a positionally-shifted fleet can
+    /// never misattribute predictions; an app without a cached entry
+    /// (e.g. a call before the first round) falls back to a fresh
+    /// computation from its — possibly empty — history.
+    pub fn predicted_fleet(&self, state: &FleetState) -> Option<Vec<ResourceVec>> {
+        if !self.forecast.is_enabled() {
+            return None;
+        }
+        Some(
+            state
+                .apps()
+                .iter()
+                .map(|a| match self.forecasts.get(&a.id) {
+                    Some(f) => f.horizon,
+                    None => self.forecast.forecaster.forecast(
+                        self.history.series(a.id),
+                        self.forecast.horizon,
+                        self.forecast.period,
+                    ),
+                })
+                .collect(),
+        )
+    }
+
+    /// Forecast-subsystem upkeep, shared verbatim by both engine modes so
+    /// forecasting can never break the equivalence contract: evict
+    /// departed apps, append the event-touched apps' post-event demands
+    /// (the incremental capture — untouched apps cost nothing), score
+    /// last round's one-step forecasts, and produce this round's horizon
+    /// predictions.
+    fn forecast_round(&mut self, state: &FleetState, delta: &FleetDelta) -> Option<Vec<ResourceVec>> {
+        if !self.forecast.is_enabled() {
+            return None;
+        }
+        for id in &delta.departed {
+            self.history.remove(*id);
+            self.forecasts.remove(id);
+        }
+        // Whose history advances this round: every app when priming,
+        // the event dirty-set after. A set, not a list — `drifted`
+        // holds one entry per event, so an app hit by several drifts in
+        // one batch (wave + spike) must still append exactly one
+        // observation. `delta.arrived` keeps ids that departed again in
+        // the same batch (only `drifted` is pruned by `apply_all`), so
+        // filter to apps still live.
+        let touched: BTreeSet<AppId> = if !self.history_primed {
+            self.history_primed = true;
+            state.apps().iter().map(|a| a.id).collect()
+        } else {
+            delta
+                .drifted
+                .iter()
+                .chain(&delta.arrived)
+                .copied()
+                .filter(|id| state.index_of(*id).is_some())
+                .collect()
+        };
+        for id in &touched {
+            let idx = state.index_of(*id).expect("filtered to live ids");
+            self.history.observe(*id, state.apps()[idx].demand);
+        }
+
+        // Accuracy: compare last round's one-step predictions — the map
+        // entries have not been refreshed yet — against the registered
+        // demands they tried to anticipate.
+        let mut actual = Vec::new();
+        let mut predicted = Vec::new();
+        for app in state.apps() {
+            if let Some(f) = self.forecasts.get(&app.id) {
+                for k in 0..NUM_RESOURCES {
+                    actual.push(app.demand.0[k]);
+                    predicted.push(f.one_step.0[k]);
+                }
+            }
+        }
+        self.last_smape =
+            if actual.is_empty() { f64::NAN } else { stats::smape(&actual, &predicted) };
+
+        // Refresh only the touched apps' forecasts: every other app's
+        // history — hence forecast — is unchanged since last round, so
+        // the cached entries are already bit-identical to a recompute.
+        for id in touched {
+            let series = self.history.series(id);
+            self.forecasts.insert(
+                id,
+                AppForecast {
+                    one_step: self.forecast.forecaster.forecast(series, 1, self.forecast.period),
+                    horizon: self.forecast.forecaster.forecast(
+                        series,
+                        self.forecast.horizon,
+                        self.forecast.period,
+                    ),
+                },
+            );
+        }
+        self.predicted_fleet(state)
+    }
+
+    /// Install (or clear) the forecast inputs on the round's problem —
+    /// the single point where predictions arm the predicted-headroom
+    /// goal, shared by both engine modes.
+    fn arm_problem(problem: &mut Problem, predicted: Option<&[ResourceVec]>) {
+        match predicted {
+            Some(pred) => {
+                problem.predicted_demand = pred.to_vec();
+                problem.weights.predicted_headroom =
+                    crate::rebalancer::goals::PREDICTED_HEADROOM_WEIGHT;
+            }
+            None => {
+                problem.predicted_demand.clear();
+                problem.weights.predicted_headroom = 0.0;
+            }
+        }
     }
 
     /// Run one balancing round against the (already event-advanced) fleet
@@ -148,15 +328,28 @@ impl FleetEngine {
         }
         let expired = self.age_registry();
 
+        // Forecast upkeep (shared preamble → bit-identical across modes):
+        // histories advance from the event dirty-set, accuracy is scored,
+        // and the horizon predictions for this round's solve come back.
+        let predicted = self.forecast_round(state, delta);
+
         let mut cfg = base.clone();
         cfg.seed = base.seed.wrapping_add(round as u64);
         let sptlb = Sptlb::new(cfg);
 
         let report = match self.mode {
-            EngineMode::Rebuild => self.round_rebuild(state, &sptlb, latency),
-            EngineMode::Incremental => {
-                self.round_incremental(state, events, delta, &sptlb, latency, &expired)
+            EngineMode::Rebuild => {
+                self.round_rebuild(state, &sptlb, latency, predicted.as_deref())
             }
+            EngineMode::Incremental => self.round_incremental(
+                state,
+                events,
+                delta,
+                &sptlb,
+                latency,
+                &expired,
+                predicted.as_deref(),
+            ),
         };
 
         harvest_registry(&mut self.avoids, &mut self.forbidden, &report.problem, state);
@@ -177,6 +370,7 @@ impl FleetEngine {
         state: &FleetState,
         sptlb: &Sptlb,
         latency: &LatencyMatrix,
+        predicted: Option<&[ResourceVec]>,
     ) -> BalanceReport {
         let pipeline_sw = Stopwatch::start();
         let collect_sw = Stopwatch::start();
@@ -208,6 +402,7 @@ impl FleetEngine {
         )
         .expect("fleet state is structurally valid");
         apply_avoid_registry(&self.avoids, &self.forbidden, &mut problem, state, &BTreeSet::new());
+        Self::arm_problem(&mut problem, predicted);
         sptlb.solve_collected(
             &mut problem,
             &apps,
@@ -228,6 +423,7 @@ impl FleetEngine {
         sptlb: &Sptlb,
         latency: &LatencyMatrix,
         expired: &BTreeSet<AppId>,
+        predicted: Option<&[ResourceVec]>,
     ) -> BalanceReport {
         let pipeline_sw = Stopwatch::start();
         let first = self.problem.is_none();
@@ -290,6 +486,7 @@ impl FleetEngine {
         }
         let problem = self.problem.as_mut().expect("just built");
         apply_avoid_registry(&self.avoids, &self.forbidden, problem, state, expired);
+        Self::arm_problem(problem, predicted);
 
         // ---- per-tier aggregates: refresh only what went stale -------
         if first || delta.structural || self.loads.len() != problem.n_tiers() {
@@ -439,6 +636,92 @@ mod tests {
         let expired = engine.age_registry();
         assert_eq!(expired.into_iter().collect::<Vec<_>>(), vec![AppId(1)]);
         assert!(engine.avoids.is_empty());
+    }
+
+    #[test]
+    fn forecast_round_primes_then_appends_only_touched_apps() {
+        use crate::forecast::ForecasterKind;
+        use crate::model::ResourceVec;
+        use crate::workload::{generate, WorkloadSpec};
+        let mut state = FleetState::from_testbed(generate(&WorkloadSpec::small()));
+        let base = SptlbConfig::default();
+        let fc = ForecastConfig {
+            forecaster: ForecasterKind::Holt,
+            ..ForecastConfig::default()
+        };
+        let mut engine = FleetEngine::with_forecast(EngineMode::Incremental, &base, fc);
+
+        // Round 0: histories prime with every app's registered demand.
+        let delta = FleetDelta::default();
+        let pred = engine.forecast_round(&state, &delta).expect("forecasting on");
+        assert_eq!(pred.len(), state.n_apps());
+        assert_eq!(engine.history_len(), state.n_apps());
+        assert!(engine.last_smape().is_nan(), "no prior one-step forecast yet");
+
+        // Round 1: two drifts for the SAME app (wave + spike shape) —
+        // its series still grows by exactly one observation (the
+        // post-batch demand), and only the touched app's grows at all.
+        let id = state.apps()[2].id;
+        let other = state.apps()[0].id;
+        let delta = state.apply_all(&[
+            FleetEvent::DemandDrift { app: id, demand: ResourceVec::new(8.0, 8.0, 8.0) },
+            FleetEvent::DemandDrift { app: id, demand: ResourceVec::new(9.0, 9.0, 9.0) },
+        ]);
+        let pred = engine.forecast_round(&state, &delta).expect("forecasting on");
+        assert_eq!(engine.history.series(id).len(), 2, "one batch, one observation");
+        assert_eq!(engine.history.series(id)[1], ResourceVec::new(9.0, 9.0, 9.0));
+        assert_eq!(engine.history.series(other).len(), 1, "untouched apps never append");
+        assert!(engine.last_smape().is_finite(), "accuracy defined from round 1 on");
+        assert!(pred.iter().all(|p| p.is_non_negative()));
+        // Same-round readers (the global layer) get the cached horizon
+        // predictions — bit-identical to what the round computed.
+        assert_eq!(engine.predicted_fleet(&state), Some(pred));
+
+        // Departure evicts the series and the accuracy baseline.
+        let delta = state.apply_all(&[FleetEvent::Departure { app: id }]);
+        engine.forecast_round(&state, &delta);
+        assert!(engine.history.series(id).is_empty());
+    }
+
+    #[test]
+    fn same_round_arrival_and_departure_is_benign_with_forecasting() {
+        use crate::forecast::ForecasterKind;
+        use crate::model::App;
+        use crate::workload::{generate, WorkloadSpec};
+        let mut state = FleetState::from_testbed(generate(&WorkloadSpec::small()));
+        let base = SptlbConfig::default();
+        let fc = ForecastConfig { forecaster: ForecasterKind::Ewma, ..ForecastConfig::default() };
+        let mut engine = FleetEngine::with_forecast(EngineMode::Incremental, &base, fc);
+        engine.forecast_round(&state, &FleetDelta::default());
+        let primed = engine.history_len();
+
+        // An app that arrives and departs in the same batch stays in
+        // delta.arrived (apply_all prunes only drifted) — the forecast
+        // path must skip it rather than panic, and record nothing.
+        let ghost = App { id: AppId(state.next_app_id()), ..state.apps()[0].clone() };
+        let gid = ghost.id;
+        let delta = state.apply_all(&[
+            FleetEvent::Arrival { app: ghost },
+            FleetEvent::Departure { app: gid },
+        ]);
+        assert!(delta.arrived.contains(&gid), "fixture must exercise the unpruned arrival");
+        let pred = engine.forecast_round(&state, &delta).expect("forecasting on");
+        assert_eq!(pred.len(), state.n_apps());
+        assert_eq!(engine.history_len(), primed, "the ghost app is never recorded");
+        assert!(engine.history.series(gid).is_empty());
+    }
+
+    #[test]
+    fn disabled_forecaster_keeps_the_engine_reactive() {
+        use crate::workload::{generate, WorkloadSpec};
+        let state = FleetState::from_testbed(generate(&WorkloadSpec::small()));
+        let base = SptlbConfig::default();
+        let mut engine = FleetEngine::new(EngineMode::Incremental, &base);
+        assert!(!engine.forecasting_enabled());
+        assert!(engine.forecast_round(&state, &FleetDelta::default()).is_none());
+        assert_eq!(engine.history_len(), 0, "no histories accrue while off");
+        assert!(engine.last_smape().is_nan());
+        assert!(engine.predicted_fleet(&state).is_none());
     }
 
     #[test]

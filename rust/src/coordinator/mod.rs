@@ -23,7 +23,8 @@ pub use multiregion::{
     MultiRegionMetrics, MultiRegionRound, RegionExecution,
 };
 
-use crate::model::{App, Assignment, FleetEvent, Tier};
+use crate::forecast::ForecastConfig;
+use crate::model::{App, Assignment, FleetEvent, ResourceVec, Tier};
 use crate::network::LatencyMatrix;
 use crate::sptlb::{BalanceReport, SptlbConfig};
 use crate::util::json::Json;
@@ -42,6 +43,8 @@ pub struct CoordinatorConfig {
     pub scenario: ScenarioConfig,
     /// Round engine (incremental by default; rebuild is the oracle).
     pub engine: EngineMode,
+    /// Load-forecasting subsystem (default: off — fully reactive).
+    pub forecast: ForecastConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -51,12 +54,26 @@ impl Default for CoordinatorConfig {
             tick: Duration::from_millis(250),
             scenario: ScenarioConfig::default(),
             engine: EngineMode::Incremental,
+            forecast: ForecastConfig::default(),
         }
     }
 }
 
+/// Tiers whose *pre-solve* utilization exceeds hard capacity on any
+/// resource — the proactive loop's headline failure metric. Counted on
+/// the incumbent under the round's fresh demands (before this round's
+/// moves), so it measures what the *previous* decisions failed to
+/// anticipate: a reactive policy can fix a breach only after this
+/// counter has already seen it.
+pub fn count_breach_tiers(initial_utilization: &[ResourceVec]) -> usize {
+    initial_utilization
+        .iter()
+        .filter(|u| u.0.iter().any(|&x| x > 1.0))
+        .count()
+}
+
 /// One round's record in the decision log.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct RoundRecord {
     pub round: u32,
     /// Fleet events applied at the start of the round.
@@ -70,6 +87,33 @@ pub struct RoundRecord {
     /// engine's headline saving).
     pub collect_ms: f64,
     pub ticks_skipped: u32,
+    /// Tiers whose pre-solve utilization breached hard capacity this
+    /// round (see [`count_breach_tiers`]).
+    pub breach_tiers: usize,
+    /// sMAPE of last round's one-step demand forecasts against this
+    /// round's registered demands (NaN → JSON null while forecasting is
+    /// off or before the first comparison).
+    pub forecast_smape: f64,
+}
+
+/// Bitwise equality on the float fields — the repo's determinism pins
+/// compare records for *bit-identity*, and `forecast_smape` is NaN by
+/// design while forecasting is off (a derived `PartialEq` would make
+/// every such record unequal to itself).
+impl PartialEq for RoundRecord {
+    fn eq(&self, other: &Self) -> bool {
+        self.round == other.round
+            && self.n_events == other.n_events
+            && self.moves_executed == other.moves_executed
+            && self.score.to_bits() == other.score.to_bits()
+            && self.p99_latency_ms.to_bits() == other.p99_latency_ms.to_bits()
+            && self.worst_imbalance.to_bits() == other.worst_imbalance.to_bits()
+            && self.pipeline_ms.to_bits() == other.pipeline_ms.to_bits()
+            && self.collect_ms.to_bits() == other.collect_ms.to_bits()
+            && self.ticks_skipped == other.ticks_skipped
+            && self.breach_tiers == other.breach_tiers
+            && self.forecast_smape.to_bits() == other.forecast_smape.to_bits()
+    }
 }
 
 impl RoundRecord {
@@ -84,6 +128,8 @@ impl RoundRecord {
             ("pipeline_ms", Json::num(self.pipeline_ms)),
             ("collect_ms", Json::num(self.collect_ms)),
             ("ticks_skipped", Json::num(self.ticks_skipped as f64)),
+            ("breach_tiers", Json::num(self.breach_tiers as f64)),
+            ("forecast_smape", Json::num(self.forecast_smape)),
         ])
     }
 }
@@ -98,8 +144,14 @@ pub struct ServiceMetrics {
     pub collect_ms: OnlineStats,
     pub moves: OnlineStats,
     pub events: OnlineStats,
+    /// Forecast accuracy over rounds where it was measurable.
+    pub forecast_smape: OnlineStats,
     pub rounds: u32,
     pub ticks_skipped: u32,
+    /// Rounds with at least one pre-solve capacity breach — what the
+    /// proactive path exists to minimize (`rust/tests/forecast.rs` pins
+    /// forecast-aware < reactive on the diurnal scenario).
+    pub breach_rounds: u32,
 }
 
 impl ServiceMetrics {
@@ -115,12 +167,14 @@ impl ServiceMetrics {
         Json::obj(vec![
             ("rounds", Json::num(self.rounds as f64)),
             ("ticks_skipped", Json::num(self.ticks_skipped as f64)),
+            ("breach_rounds", Json::num(self.breach_rounds as f64)),
             ("imbalance", stat(&self.imbalance)),
             ("latency_p99_ms", stat(&self.latency_p99)),
             ("pipeline_ms", stat(&self.pipeline_ms)),
             ("collect_ms", stat(&self.collect_ms)),
             ("moves_per_round", stat(&self.moves)),
             ("events_per_round", stat(&self.events)),
+            ("forecast_smape", stat(&self.forecast_smape)),
         ])
     }
 }
@@ -161,7 +215,8 @@ impl Coordinator {
         initial: Assignment,
     ) -> Self {
         let state = FleetState::new(apps, tiers, initial);
-        let engine = FleetEngine::new(config.engine, &config.sptlb);
+        let engine =
+            FleetEngine::with_forecast(config.engine, &config.sptlb, config.forecast.clone());
         let scenario = ScenarioGen::new(config.scenario.clone());
         Self {
             config,
@@ -231,6 +286,8 @@ impl Coordinator {
             &report.projected_utilization,
             crate::hierarchy::variants::BALANCED_TARGET,
         );
+        let breach_tiers = count_breach_tiers(&report.initial_utilization);
+        let forecast_smape = self.engine.last_smape();
         let record = RoundRecord {
             round,
             n_events: events.len(),
@@ -241,9 +298,17 @@ impl Coordinator {
             pipeline_ms: report.pipeline_ms,
             collect_ms: report.collect_ms,
             ticks_skipped,
+            breach_tiers,
+            forecast_smape,
         };
         self.metrics.rounds += 1;
         self.metrics.ticks_skipped += ticks_skipped;
+        if breach_tiers > 0 {
+            self.metrics.breach_rounds += 1;
+        }
+        if forecast_smape.is_finite() {
+            self.metrics.forecast_smape.push(forecast_smape);
+        }
         self.metrics.imbalance.push(worst);
         self.metrics.latency_p99.push(report.p99_latency_ms);
         self.metrics.pipeline_ms.push(report.pipeline_ms);
@@ -456,6 +521,45 @@ mod tests {
         assert!(parsed.get("collect_ms").get("mean").as_f64().is_some());
         let ev = c.event_log_json().to_string();
         assert!(crate::util::json::Json::parse(&ev).is_ok());
+    }
+
+    #[test]
+    fn breach_tier_counting() {
+        let utils = vec![
+            ResourceVec::new(0.5, 0.9, 1.0),
+            ResourceVec::new(1.2, 0.1, 0.1),
+            ResourceVec::new(0.2, 1.01, 0.3),
+        ];
+        assert_eq!(count_breach_tiers(&utils), 2, "exactly-at-capacity is not a breach");
+        assert_eq!(count_breach_tiers(&[]), 0);
+    }
+
+    #[test]
+    fn forecasting_populates_accuracy_and_breach_metrics() {
+        use crate::forecast::{ForecastConfig, ForecasterKind};
+        let mut c = coordinator(|cfg| {
+            cfg.scenario = ScenarioConfig::diurnal().with_seed(5);
+            cfg.forecast = ForecastConfig {
+                forecaster: ForecasterKind::NaiveLast,
+                ..ForecastConfig::default()
+            };
+        });
+        c.run(4);
+        // Round 0 has nothing to compare against; later rounds do (the
+        // diurnal wave drifts every app every round, so naive-last is
+        // always measurably wrong but finite).
+        assert!(c.log[0].forecast_smape.is_nan());
+        assert!(c.log[1..].iter().all(|r| r.forecast_smape.is_finite()));
+        assert_eq!(c.metrics.forecast_smape.count(), 3);
+        // The new fields serialize (NaN → JSON null) and parse back.
+        let parsed = Json::parse(&c.log_json().pretty()).unwrap();
+        let rounds = parsed.as_arr().unwrap();
+        assert!(rounds[0].get("breach_tiers").as_f64().is_some());
+        assert!(rounds[0].get("forecast_smape").as_f64().is_none(), "NaN is null");
+        assert!(rounds[1].get("forecast_smape").as_f64().is_some());
+        let m = Json::parse(&c.metrics.to_json().to_string()).unwrap();
+        assert!(m.get("breach_rounds").as_f64().is_some());
+        assert!(m.get("forecast_smape").get("mean").as_f64().is_some());
     }
 
     #[test]

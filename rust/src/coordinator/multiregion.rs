@@ -32,9 +32,12 @@
 //! global layer off and reproduces every regional decision bit-for-bit.
 
 use crate::coordinator::fleet::FleetState;
-use crate::coordinator::{ticks_skipped_for, EngineMode, FleetEngine, RoundRecord};
+use crate::coordinator::{
+    count_breach_tiers, ticks_skipped_for, EngineMode, FleetEngine, RoundRecord,
+};
+use crate::forecast::ForecastConfig;
 use crate::hierarchy::global::{
-    GlobalPolicy, GlobalScheduler, MigrationProposal, RegionView,
+    view_pressure, GlobalPolicy, GlobalScheduler, MigrationProposal, RegionView,
 };
 use crate::hierarchy::variants::{worst_imbalance, BALANCED_TARGET};
 use crate::model::{App, AppId, FleetEvent, RegionId, TierId};
@@ -86,6 +89,10 @@ pub struct MultiRegionConfig {
     pub scenario: MultiRegionScenario,
     pub policy: GlobalPolicy,
     pub execution: RegionExecution,
+    /// Load-forecasting subsystem, shared shape across regions (each
+    /// region's engine owns its own histories). When enabled, the global
+    /// scheduler also plans on *predicted* region pressure.
+    pub forecast: ForecastConfig,
     pub seed: u64,
 }
 
@@ -100,6 +107,7 @@ impl MultiRegionConfig {
             scenario: MultiRegionScenario::multiregion(n_regions, seed),
             policy: GlobalPolicy::spillover(),
             execution: RegionExecution::Parallel,
+            forecast: ForecastConfig::default(),
             seed,
         }
     }
@@ -244,6 +252,8 @@ impl RegionRuntime {
             pipeline_ms: report.pipeline_ms,
             collect_ms: report.collect_ms,
             ticks_skipped,
+            breach_tiers: count_breach_tiers(&report.initial_utilization),
+            forecast_smape: self.engine.last_smape(),
         }
     }
 }
@@ -289,7 +299,8 @@ impl MultiRegionCoordinator {
             .map(|(r, tb)| {
                 let seed_r = Pcg64::stream(config.seed, r as u64).next_u64();
                 let cfg = SptlbConfig { seed: seed_r, ..config.sptlb.clone() };
-                let engine = FleetEngine::new(config.engine, &cfg);
+                let engine =
+                    FleetEngine::with_forecast(config.engine, &cfg, config.forecast.clone());
                 let scenario = ScenarioGen::new(config.scenario.per_region[r].clone());
                 RegionRuntime {
                     region: RegionId(r),
@@ -442,14 +453,22 @@ impl MultiRegionCoordinator {
         let (planned, rejected, pressures) = if live {
             self.global_phase(&outage)
         } else {
+            // Replay logs the same planning pressure a live round would
+            // have recorded: predicted when forecasting is on (each
+            // region's engine just ran its forecast_round), else
+            // instantaneous — so replayed and live decision logs match.
             let pressures = self
                 .regions
                 .iter()
-                .map(|rt| {
-                    crate::hierarchy::global::region_pressure(
-                        rt.state.apps(),
-                        rt.state.tiers(),
-                    )
+                .enumerate()
+                .map(|(r, rt)| {
+                    view_pressure(&RegionView {
+                        region: RegionId(r),
+                        apps: rt.state.apps(),
+                        tiers: rt.state.tiers(),
+                        outage: outage[r],
+                        predicted: rt.engine.predicted_fleet(&rt.state),
+                    })
                 })
                 .collect();
             (0, 0, pressures)
@@ -496,6 +515,10 @@ impl MultiRegionCoordinator {
                 apps: rt.state.apps(),
                 tiers: rt.state.tiers(),
                 outage: outage[r],
+                // Forecast-aware planning: the global layer reads the
+                // region's *predicted* load (None while forecasting is
+                // off — instantaneous pressure, the legacy behaviour).
+                predicted: rt.engine.predicted_fleet(&rt.state),
             })
             .collect();
         let plan = self.global.propose(&views);

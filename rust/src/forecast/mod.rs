@@ -1,0 +1,372 @@
+//! Load forecasting — the proactive half of the coordinator (ROADMAP:
+//! "robust and *proactive* to application load"). Every scheduler layer
+//! used to react to the *last scraped* load sample; this subsystem gives
+//! them a forward view instead:
+//!
+//! ```text
+//!   history ring buffers  (per app, registered peak demand — appended
+//!        │                 only when an event touched the app)
+//!        ▼
+//!   Forecaster            (pure function of the ring buffer: naive-last,
+//!        │                 ewma, holt, seasonal-naive)
+//!        ▼
+//!   predicted demand      → ScoreState's predicted-headroom goal
+//!                         → GlobalScheduler's predicted region pressure
+//! ```
+//!
+//! # Determinism contract
+//!
+//! A forecast is a **pure function** of (forecaster, history, horizon,
+//! period). Histories are driven exclusively by the fleet event stream —
+//! identical for any worker count, region count, and for both engine
+//! modes — so forecasts are bit-identical everywhere the decisions must
+//! be (`rust/tests/forecast.rs` pins this). No PRNG, no clock, no
+//! thread-order dependence anywhere in this module.
+//!
+//! # Totality contract
+//!
+//! Every forecaster returns finite, non-negative predictions for *any*
+//! (possibly empty, possibly degenerate) history — enforced by a
+//! propcheck below and re-pinned end-to-end in `rust/tests/forecast.rs`.
+//! A non-finite intermediate falls back to the last observation, and an
+//! empty history forecasts zero.
+
+use crate::model::{AppId, ResourceVec, NUM_RESOURCES};
+use std::collections::BTreeMap;
+
+/// EWMA smoothing factor (weight of the newest observation).
+const EWMA_ALPHA: f64 = 0.4;
+/// Holt level smoothing factor.
+const HOLT_ALPHA: f64 = 0.5;
+/// Holt trend smoothing factor.
+const HOLT_BETA: f64 = 0.3;
+
+/// Which per-app load forecaster the coordinator runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ForecasterKind {
+    /// Forecasting off: the scheduler stays purely reactive (no
+    /// predicted-headroom goal, no predicted region pressure).
+    None,
+    /// Next value = last observation.
+    NaiveLast,
+    /// Exponentially weighted moving average (level only).
+    Ewma,
+    /// Holt's linear method (level + trend): extrapolates rises and
+    /// falls, so rising tiers are evacuated *before* they peak.
+    Holt,
+    /// Value one season ago: exact on periodic (diurnal) workloads once
+    /// a full period of history exists; falls back to naive-last before.
+    SeasonalNaive,
+}
+
+impl ForecasterKind {
+    pub const ALL: [ForecasterKind; 5] = [
+        ForecasterKind::None,
+        ForecasterKind::NaiveLast,
+        ForecasterKind::Ewma,
+        ForecasterKind::Holt,
+        ForecasterKind::SeasonalNaive,
+    ];
+
+    /// CLI-facing names, in [`ForecasterKind::ALL`] order.
+    pub const NAMES: [&'static str; 5] = ["none", "naive-last", "ewma", "holt", "seasonal-naive"];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ForecasterKind::None => "none",
+            ForecasterKind::NaiveLast => "naive-last",
+            ForecasterKind::Ewma => "ewma",
+            ForecasterKind::Holt => "holt",
+            ForecasterKind::SeasonalNaive => "seasonal-naive",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ForecasterKind> {
+        match s {
+            "none" => Some(ForecasterKind::None),
+            "naive-last" | "naive" | "last" => Some(ForecasterKind::NaiveLast),
+            "ewma" => Some(ForecasterKind::Ewma),
+            "holt" => Some(ForecasterKind::Holt),
+            "seasonal-naive" | "seasonal" => Some(ForecasterKind::SeasonalNaive),
+            _ => None,
+        }
+    }
+
+    /// Does this kind feed predictions into the schedulers at all?
+    pub fn is_enabled(self) -> bool {
+        self != ForecasterKind::None
+    }
+
+    /// Forecast the demand `horizon` observations ahead of `series`
+    /// (oldest first). Pure; per-resource; total (see module docs).
+    pub fn forecast(self, series: &[ResourceVec], horizon: u32, period: u32) -> ResourceVec {
+        let mut out = ResourceVec::ZERO;
+        for k in 0..NUM_RESOURCES {
+            let xs: Vec<f64> = series.iter().map(|d| d.0[k]).collect();
+            out.0[k] = sanitize(self.forecast_scalar(&xs, horizon, period), &xs);
+        }
+        out
+    }
+
+    fn forecast_scalar(self, xs: &[f64], horizon: u32, period: u32) -> f64 {
+        let Some(&last) = xs.last() else { return 0.0 };
+        let horizon = horizon.max(1);
+        match self {
+            // `None` never reaches the schedulers, but stays total so the
+            // propcheck can sweep ALL kinds uniformly.
+            ForecasterKind::None | ForecasterKind::NaiveLast => last,
+            ForecasterKind::Ewma => {
+                let mut level = xs[0];
+                for &x in &xs[1..] {
+                    level = EWMA_ALPHA * x + (1.0 - EWMA_ALPHA) * level;
+                }
+                level
+            }
+            ForecasterKind::Holt => {
+                if xs.len() < 2 {
+                    return last;
+                }
+                let mut level = xs[0];
+                let mut trend = xs[1] - xs[0];
+                for &x in &xs[1..] {
+                    let prev = level;
+                    level = HOLT_ALPHA * x + (1.0 - HOLT_ALPHA) * (level + trend);
+                    trend = HOLT_BETA * (level - prev) + (1.0 - HOLT_BETA) * trend;
+                }
+                level + horizon as f64 * trend
+            }
+            ForecasterKind::SeasonalNaive => {
+                let p = period.max(1) as usize;
+                if xs.len() < p {
+                    return last;
+                }
+                xs[xs.len() - p + ((horizon as usize - 1) % p)]
+            }
+        }
+    }
+}
+
+/// Clamp a raw scalar forecast to the totality contract: finite and
+/// non-negative, falling back to the last observation (then zero).
+fn sanitize(v: f64, xs: &[f64]) -> f64 {
+    if v.is_finite() {
+        return v.max(0.0);
+    }
+    match xs.last() {
+        Some(&l) if l.is_finite() => l.max(0.0),
+        _ => 0.0,
+    }
+}
+
+/// Forecast-subsystem knobs (CLI: `serve --forecaster/--horizon/--history`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ForecastConfig {
+    pub forecaster: ForecasterKind,
+    /// Observations ahead to forecast for the predicted-headroom goal.
+    pub horizon: u32,
+    /// Ring-buffer capacity per app (observations kept).
+    pub history: usize,
+    /// Season length for `seasonal-naive` (observations per cycle; the
+    /// `diurnal` scenario's default wave period).
+    pub period: u32,
+}
+
+impl Default for ForecastConfig {
+    fn default() -> Self {
+        Self { forecaster: ForecasterKind::None, horizon: 3, history: 32, period: 12 }
+    }
+}
+
+impl ForecastConfig {
+    pub fn is_enabled(&self) -> bool {
+        self.forecaster.is_enabled()
+    }
+}
+
+/// Per-app demand-history ring buffers, keyed by fleet-stable id. An
+/// entry is appended only when an event *touched* the app (arrival,
+/// drift) — the incremental capture the engine relies on — so a steady
+/// app holds one observation and costs nothing per round.
+#[derive(Debug, Clone)]
+pub struct HistoryStore {
+    cap: usize,
+    series: BTreeMap<AppId, Vec<ResourceVec>>,
+}
+
+impl HistoryStore {
+    pub fn new(cap: usize) -> Self {
+        Self { cap: cap.max(2), series: BTreeMap::new() }
+    }
+
+    /// Append an observation for `id`. Eviction is amortized O(1): the
+    /// backing vector grows to at most `2·cap − 1` entries before one
+    /// bulk drain, and [`HistoryStore::series`] only ever exposes the
+    /// last `cap` — window semantics are identical to a per-push shift
+    /// without its O(cap) cost on every observation.
+    pub fn observe(&mut self, id: AppId, demand: ResourceVec) {
+        let cap = self.cap;
+        let s = self.series.entry(id).or_default();
+        s.push(demand);
+        if s.len() >= 2 * cap {
+            s.drain(..s.len() - cap);
+        }
+    }
+
+    /// Drop a departed app's series.
+    pub fn remove(&mut self, id: AppId) {
+        self.series.remove(&id);
+    }
+
+    /// The last `cap` observations recorded for `id`, oldest first
+    /// (empty if never observed).
+    pub fn series(&self, id: AppId) -> &[ResourceVec] {
+        match self.series.get(&id) {
+            Some(v) => &v[v.len().saturating_sub(self.cap)..],
+            None => &[],
+        }
+    }
+
+    /// Apps with at least one observation.
+    pub fn n_apps(&self) -> usize {
+        self.series.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{forall, Check};
+
+    fn constant(v: f64, n: usize) -> Vec<ResourceVec> {
+        vec![ResourceVec::splat(v); n]
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for k in ForecasterKind::ALL {
+            assert_eq!(ForecasterKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(ForecasterKind::from_name("seasonal"), Some(ForecasterKind::SeasonalNaive));
+        assert!(ForecasterKind::from_name("oracle").is_none());
+        assert_eq!(ForecasterKind::ALL.len(), ForecasterKind::NAMES.len());
+        for (k, n) in ForecasterKind::ALL.iter().zip(ForecasterKind::NAMES) {
+            assert_eq!(k.name(), n);
+        }
+    }
+
+    #[test]
+    fn all_forecasters_are_exact_on_constant_series() {
+        let series = constant(5.0, 20);
+        for k in ForecasterKind::ALL {
+            let f = k.forecast(&series, 3, 6);
+            for r in 0..NUM_RESOURCES {
+                assert!((f.0[r] - 5.0).abs() < 1e-9, "{} on constant", k.name());
+            }
+        }
+    }
+
+    #[test]
+    fn holt_extrapolates_a_linear_trend() {
+        // 1, 2, ..., 10 — Holt must predict ~10 + h on a clean ramp.
+        let series: Vec<ResourceVec> =
+            (1..=10).map(|i| ResourceVec::splat(i as f64)).collect();
+        let f = ForecasterKind::Holt.forecast(&series, 3, 12);
+        assert!((f.cpu() - 13.0).abs() < 1.0, "holt 3-ahead on ramp: {}", f.cpu());
+        let naive = ForecasterKind::NaiveLast.forecast(&series, 3, 12);
+        assert!(f.cpu() > naive.cpu(), "holt must see the rise coming");
+    }
+
+    #[test]
+    fn seasonal_naive_repeats_the_last_season() {
+        // Period-4 sawtooth: 1 2 3 4 | 1 2 3 4 — h-ahead must pick the
+        // matching point of the last season.
+        let series: Vec<ResourceVec> = (0..8)
+            .map(|i| ResourceVec::splat((i % 4 + 1) as f64))
+            .collect();
+        for h in 1..=8u32 {
+            let f = ForecasterKind::SeasonalNaive.forecast(&series, h, 4);
+            let expect = ((h as usize - 1) % 4 + 1) as f64;
+            assert_eq!(f.cpu(), expect, "h={h}");
+        }
+        // Shorter than a season: fall back to the last observation.
+        let short = constant(7.0, 2);
+        assert_eq!(ForecasterKind::SeasonalNaive.forecast(&short, 1, 4).cpu(), 7.0);
+    }
+
+    #[test]
+    fn empty_history_forecasts_zero() {
+        for k in ForecasterKind::ALL {
+            assert_eq!(k.forecast(&[], 1, 4), ResourceVec::ZERO, "{}", k.name());
+        }
+    }
+
+    #[test]
+    fn forecasts_are_total_on_arbitrary_histories() {
+        // The module's totality contract: finite, non-negative outputs
+        // for any history length/values, any horizon, any period —
+        // including zeros, spikes, and length-degenerate inputs.
+        forall(
+            200,
+            |rng| {
+                let len = rng.range(0, 40);
+                let series: Vec<ResourceVec> = (0..len)
+                    .map(|_| {
+                        let spike = if rng.chance(0.1) { 1e6 } else { 1.0 };
+                        ResourceVec::new(
+                            rng.uniform(0.0, 50.0) * spike,
+                            rng.uniform(0.0, 200.0),
+                            rng.uniform(0.0, 500.0).round(),
+                        )
+                    })
+                    .collect();
+                let horizon = rng.range(0, 9) as u32;
+                let period = rng.range(0, 16) as u32;
+                (series, horizon, period)
+            },
+            |(series, horizon, period)| {
+                for k in ForecasterKind::ALL {
+                    let f = k.forecast(series, *horizon, *period);
+                    for r in 0..NUM_RESOURCES {
+                        if !f.0[r].is_finite() || f.0[r] < 0.0 {
+                            return Check::fail(&format!(
+                                "{} produced {} (len={}, h={horizon}, p={period})",
+                                k.name(),
+                                f.0[r],
+                                series.len()
+                            ));
+                        }
+                    }
+                }
+                Check::pass()
+            },
+        );
+    }
+
+    #[test]
+    fn history_ring_evicts_oldest_at_capacity() {
+        let mut h = HistoryStore::new(3);
+        // The exposed window is always the last `cap` observations, on
+        // both sides of the amortized bulk-drain boundary (2·cap).
+        for i in 0..12 {
+            h.observe(AppId(1), ResourceVec::splat(i as f64));
+            let s = h.series(AppId(1));
+            assert_eq!(s.len(), (i + 1).min(3), "after observation {i}");
+            assert_eq!(s[s.len() - 1].cpu(), i as f64);
+            assert_eq!(s[0].cpu(), (i as i64 - 2).max(0) as f64);
+        }
+        assert!(h.series(AppId(2)).is_empty());
+        h.remove(AppId(1));
+        assert_eq!(h.n_apps(), 0);
+    }
+
+    #[test]
+    fn forecast_is_a_pure_function_of_the_series() {
+        let series: Vec<ResourceVec> =
+            (0..16).map(|i| ResourceVec::splat((i * i % 7) as f64)).collect();
+        for k in ForecasterKind::ALL {
+            let a = k.forecast(&series, 4, 8);
+            let b = k.forecast(&series, 4, 8);
+            assert_eq!(a, b, "{} must be deterministic", k.name());
+        }
+    }
+}

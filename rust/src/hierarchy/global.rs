@@ -120,6 +120,37 @@ pub struct RegionView<'a> {
     pub tiers: &'a [Tier],
     /// True when a `RegionOutage` event struck this region this round.
     pub outage: bool,
+    /// Per-app *predicted* demand at the forecast horizon, positionally
+    /// parallel to `apps` — attached by the multi-region coordinator when
+    /// the forecasting subsystem is on. When present, the planner's
+    /// pressures, donor/receiver ordering and running projections all use
+    /// it, so regions spill *before* the predicted breach; `None` keeps
+    /// the legacy instantaneous-pressure behaviour bit-for-bit.
+    pub predicted: Option<Vec<ResourceVec>>,
+}
+
+impl RegionView<'_> {
+    /// Demand of app `i` as the planner should see it: predicted when a
+    /// forecast is attached, instantaneous otherwise.
+    fn planning_demand(&self, i: usize) -> ResourceVec {
+        match &self.predicted {
+            Some(p) => p[i],
+            None => self.apps[i].demand,
+        }
+    }
+
+    /// Aggregate planning demand of the whole region.
+    fn planning_total(&self) -> ResourceVec {
+        (0..self.apps.len())
+            .fold(ResourceVec::ZERO, |acc, i| acc + self.planning_demand(i))
+    }
+}
+
+/// A view's planning pressure: predicted when a forecast is attached
+/// ([`RegionView::predicted`]), instantaneous otherwise.
+pub fn view_pressure(v: &RegionView) -> f64 {
+    let capacity = v.tiers.iter().fold(ResourceVec::ZERO, |acc, t| acc + t.capacity);
+    pressure_of(&v.planning_total(), &capacity)
 }
 
 /// Worst-resource pressure of an aggregate (demand, capacity) pair.
@@ -211,19 +242,18 @@ impl GlobalScheduler {
     /// admissible receiver within the latency/egress budgets.
     pub fn propose(&self, views: &[RegionView]) -> GlobalPlan {
         let n = views.len();
-        let pressures: Vec<f64> =
-            views.iter().map(|v| region_pressure(v.apps, v.tiers)).collect();
+        let pressures: Vec<f64> = views.iter().map(view_pressure).collect();
         let mut proposals = Vec::new();
         if self.policy.max_migrations_per_round == 0 || n < 2 {
             return GlobalPlan { proposals, pressures };
         }
 
         // Running totals so one round's plan does not oversubscribe a
-        // receiver or over-drain a donor.
-        let mut demand: Vec<ResourceVec> = views
-            .iter()
-            .map(|v| v.apps.iter().fold(ResourceVec::ZERO, |acc, a| acc + a.demand))
-            .collect();
+        // receiver or over-drain a donor. Planning demand throughout:
+        // predicted when the view carries a forecast, instantaneous
+        // otherwise — the destination-vetting path downstream stays
+        // unchanged either way.
+        let mut demand: Vec<ResourceVec> = views.iter().map(|v| v.planning_total()).collect();
         let capacity: Vec<ResourceVec> = views
             .iter()
             .map(|v| v.tiers.iter().fold(ResourceVec::ZERO, |acc, t| acc + t.capacity))
@@ -250,15 +280,15 @@ impl GlobalScheduler {
             if proposals.len() >= self.policy.max_migrations_per_round {
                 break;
             }
-            // Candidates: biggest normalized footprint leaves first; app
-            // id breaks ties (total order).
-            let mut candidates: Vec<&App> = views[d].apps.iter().collect();
-            candidates.sort_by(|a, b| {
-                let norm = |x: &App| pressure(&x.demand, &capacity[d]);
+            // Candidates: biggest normalized planning footprint leaves
+            // first; app id breaks ties (total order).
+            let mut candidates: Vec<usize> = (0..views[d].apps.len()).collect();
+            candidates.sort_by(|&a, &b| {
+                let norm = |i: usize| pressure(&views[d].planning_demand(i), &capacity[d]);
                 norm(b)
                     .partial_cmp(&norm(a))
                     .unwrap()
-                    .then(a.id.cmp(&b.id))
+                    .then(views[d].apps[a].id.cmp(&views[d].apps[b].id))
             });
 
             let drain_target = if views[d].outage && self.policy.evacuate_on_outage {
@@ -266,7 +296,9 @@ impl GlobalScheduler {
             } else {
                 self.policy.spill_threshold
             };
-            for app in candidates {
+            for i in candidates {
+                let app = &views[d].apps[i];
+                let moved = views[d].planning_demand(i);
                 if proposals.len() >= self.policy.max_migrations_per_round {
                     break;
                 }
@@ -292,12 +324,12 @@ impl GlobalScheduler {
                     {
                         continue;
                     }
-                    let after = demand[r] + app.demand;
+                    let after = demand[r] + moved;
                     if pressure(&after, &capacity[r]) > self.policy.accept_ceiling {
                         continue;
                     }
                     demand[r] = after;
-                    demand[d] = demand[d] - app.demand;
+                    demand[d] = demand[d] - moved;
                     proposals.push(MigrationProposal { app: app.id, from, to });
                     break;
                 }
@@ -334,6 +366,7 @@ mod tests {
                 apps: &b.apps,
                 tiers: &b.tiers,
                 outage: outage[r],
+                predicted: None,
             })
             .collect()
     }
@@ -421,6 +454,37 @@ mod tests {
         let b = sched.propose(&views(&beds, &outage));
         assert_eq!(a.proposals, b.proposals);
         assert_eq!(a.pressures, b.pressures);
+    }
+
+    #[test]
+    fn predicted_pressure_makes_a_cool_region_spill_early() {
+        // Region 0 is fine *today* but forecast to triple — the planner
+        // must treat it as the donor and move apps before the breach,
+        // while the same views without a forecast propose nothing.
+        let beds = beds(2);
+        let policy = GlobalPolicy {
+            latency_budget_ms: 1e9,
+            egress_budget: 1e9,
+            ..GlobalPolicy::spillover()
+        };
+        let sched = scheduler(policy, 2);
+        let reactive = sched.propose(&views(&beds, &[false, false]));
+        assert!(
+            reactive.proposals.is_empty(),
+            "healthy instantaneous pressure must not spill (got {:?})",
+            reactive.proposals
+        );
+
+        let mut forecast_views = views(&beds, &[false, false]);
+        forecast_views[0].predicted =
+            Some(beds[0].apps.iter().map(|a| a.demand.scale(3.0)).collect());
+        let proactive = sched.propose(&forecast_views);
+        assert!(
+            proactive.pressures[0] > reactive.pressures[0],
+            "pressure must be computed on the predicted load"
+        );
+        assert!(!proactive.proposals.is_empty(), "predicted breach must trigger spillover");
+        assert!(proactive.proposals.iter().all(|p| p.from == RegionId(0)));
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub mod greedy;
 pub mod hierarchy;
 pub mod bench;
 pub mod coordinator;
+pub mod forecast;
 pub mod metadata;
 pub mod metrics;
 pub mod model;

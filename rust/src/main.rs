@@ -13,6 +13,7 @@ use sptlb::coordinator::{
     Coordinator, CoordinatorConfig, EngineMode, MultiRegionConfig, MultiRegionCoordinator,
     RegionExecution,
 };
+use sptlb::forecast::{ForecastConfig, ForecasterKind};
 use sptlb::hierarchy::global::GlobalPolicy;
 use sptlb::hierarchy::variants::Variant;
 use sptlb::metadata::MetadataStore;
@@ -62,7 +63,65 @@ fn print_help() {
 fn load_bed(scenario: &str, seed: u64) -> Result<TestBed, String> {
     WorkloadSpec::by_name(scenario)
         .map(|s| sptlb::workload::generate(&s.with_seed(seed)))
-        .ok_or_else(|| format!("unknown scenario '{scenario}' (paper|small|large)"))
+        .ok_or_else(|| {
+            format!("unknown scenario '{scenario}' ({})", WorkloadSpec::PRESETS.join("|"))
+        })
+}
+
+/// The `--events` preset list for error messages and `--events help`,
+/// derived from the presets themselves so it cannot drift from the code.
+fn event_preset_list(multiregion: bool) -> String {
+    let mut names: Vec<&str> = Vec::new();
+    if multiregion {
+        names.extend(MultiRegionScenario::PRESETS);
+    }
+    names.extend(ScenarioConfig::PRESETS);
+    names.join("|")
+}
+
+/// Parse the shared `--forecaster/--horizon/--history` options into a
+/// [`ForecastConfig`]; prints the error and returns the exit code on
+/// invalid input.
+fn parse_forecast(p: &sptlb::util::cli::Parsed) -> Result<ForecastConfig, i32> {
+    let name = p.get("forecaster").unwrap_or("none");
+    let Some(forecaster) = ForecasterKind::from_name(name) else {
+        eprintln!(
+            "error: unknown forecaster '{name}' ({})",
+            ForecasterKind::NAMES.join("|")
+        );
+        return Err(2);
+    };
+    let horizon = match p.usize_at_least("horizon", 1) {
+        Ok(h) => h as u32,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return Err(2);
+        }
+    };
+    let history = match p.usize_at_least("history", 2) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return Err(2);
+        }
+    };
+    let period = match p.usize_at_least("period", 1) {
+        Ok(v) => v as u32,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return Err(2);
+        }
+    };
+    // seasonal-naive needs a full season in the ring buffer; with
+    // history < period it would silently degrade to naive-last forever.
+    if forecaster == ForecasterKind::SeasonalNaive && history < period as usize {
+        eprintln!(
+            "error: --history ({history}) must be >= --period ({period}) for seasonal-naive \
+             (a shorter window can never hold one full season)"
+        );
+        return Err(2);
+    }
+    Ok(ForecastConfig { forecaster, horizon, history, period })
 }
 
 /// Parse the shared `--workers` / `--shard` options into a
@@ -224,13 +283,21 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt(
             "events",
             "drift",
-            "event scenario (steady|drift|churn|spike|outage|mixed; with --regions also multiregion|failover)",
+            "event scenario (steady|drift|churn|spike|outage|mixed|diurnal|burst; with --regions also multiregion|failover; 'help' lists)",
         )
         .opt("seed", "42", "prng seed")
         .opt("rounds", "10", "balancing rounds to run")
         .opt("timeout-ms", "60", "per-round solver deadline")
         .opt("engine", "incremental", "round engine (incremental|rebuild)")
         .opt("decay", "0", "rounds a protocol avoid-constraint persists")
+        .opt(
+            "forecaster",
+            "none",
+            "load forecaster feeding every scheduler layer (none|naive-last|ewma|holt|seasonal-naive)",
+        )
+        .opt("horizon", "3", "forecast horizon in rounds (>= 1)")
+        .opt("history", "32", "per-app demand-history window in observations (>= 2)")
+        .opt("period", "12", "seasonal-naive season length in observations (match the wave period; >= 1)")
         .opt("drift", "", "override: demand drift sigma")
         .opt("drift-frac", "", "override: fraction of apps drifting per round")
         .opt("arrivals", "", "override: per-round app arrival probability")
@@ -251,6 +318,21 @@ fn cmd_serve(args: &[String]) -> i32 {
                 return 2;
             }
         };
+        // `--scenario help` / `--events help`: enumerate the valid preset
+        // names instead of erroring (the lists are derived from the
+        // presets themselves, so they always include new additions).
+        if p.str("scenario").unwrap() == "help" {
+            println!("workload presets: {}", WorkloadSpec::PRESETS.join("|"));
+            return 0;
+        }
+        if p.get("events") == Some("help") {
+            println!("event scenarios: {}", event_preset_list(false));
+            println!(
+                "with --regions N > 1 also: {}",
+                MultiRegionScenario::PRESETS.join("|")
+            );
+            return 0;
+        }
         if n_regions > 1 {
             return cmd_serve_multiregion(&p, seed, n_regions);
         }
@@ -265,13 +347,17 @@ fn cmd_serve(args: &[String]) -> i32 {
             Ok(x) => x,
             Err(code) => return code,
         };
+        let forecast = match parse_forecast(&p) {
+            Ok(f) => f,
+            Err(code) => return code,
+        };
         let events = p.str("events").unwrap_or_else(|_| "drift".into());
         let mut scenario = match ScenarioConfig::by_name(&events) {
             Some(s) => s.with_seed(seed),
             None => {
                 eprintln!(
-                    "error: unknown event scenario '{events}' \
-                     (steady|drift|churn|spike|outage|mixed)"
+                    "error: unknown event scenario '{events}' ({})",
+                    event_preset_list(false)
                 );
                 return 2;
             }
@@ -304,6 +390,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             },
             scenario,
             engine,
+            forecast,
             ..CoordinatorConfig::default()
         };
         let mut coordinator = Coordinator::from_testbed(cfg, bed);
@@ -333,18 +420,25 @@ fn cmd_serve(args: &[String]) -> i32 {
 fn cmd_serve_multiregion(p: &sptlb::util::cli::Parsed, seed: u64, n_regions: usize) -> i32 {
     let preset = p.str("scenario").unwrap();
     let Some(spec) = WorkloadSpec::by_name(&preset) else {
-        eprintln!("error: unknown scenario '{preset}' (paper|small|large)");
+        eprintln!(
+            "error: unknown scenario '{preset}' ({})",
+            WorkloadSpec::PRESETS.join("|")
+        );
         return 2;
     };
     let parallel = match parse_parallel(p) {
         Ok(x) => x,
         Err(code) => return code,
     };
+    let forecast = match parse_forecast(p) {
+        Ok(f) => f,
+        Err(code) => return code,
+    };
     let events = p.str("events").unwrap_or_else(|_| "drift".into());
     let Some(mut scenario) = MultiRegionScenario::by_name(&events, n_regions, seed) else {
         eprintln!(
-            "error: unknown event scenario '{events}' \
-             (multiregion|failover|steady|drift|churn|spike|outage|mixed)"
+            "error: unknown event scenario '{events}' ({})",
+            event_preset_list(true)
         );
         return 2;
     };
@@ -388,6 +482,7 @@ fn cmd_serve_multiregion(p: &sptlb::util::cli::Parsed, seed: u64, n_regions: usi
         scenario,
         policy,
         execution,
+        forecast,
         seed,
         ..MultiRegionConfig::new(n_regions)
     };

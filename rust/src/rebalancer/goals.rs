@@ -46,6 +46,21 @@ impl Goal {
 /// Weight of the capacity (constraint) term — always above every goal.
 pub const CAPACITY_WEIGHT: f64 = 1e6;
 
+/// Weight of the forecast-driven predicted-headroom term when the
+/// forecasting subsystem is on: a decade above the top goal — the solver
+/// must prefer pre-breach moves to any goal trade-off — but well below
+/// the capacity constraint, so an *actual* breach always outranks a
+/// *predicted* one. The coordinator engine installs it on the round's
+/// problem; it is never part of a priority ordering (forecasting is a
+/// service-mode feature, not a §3.2.1 goal).
+pub const PREDICTED_HEADROOM_WEIGHT: f64 = 1e4;
+
+/// Predicted utilization above this fraction of hard capacity counts as
+/// a predicted breach. The 10% margin absorbs forecast error and one
+/// round of demand movement, so the proactive path acts *before* the
+/// hard-capacity line is in sight.
+pub const HEADROOM_LIMIT: f64 = 0.9;
+
 /// Decade separation between consecutive priorities keeps the ordering
 /// effectively lexicographic while remaining a single scalar objective
 /// (what Rebalancer's weighted solvers consume).
@@ -61,6 +76,7 @@ pub fn weights_from_priorities(order: &[Goal; 5]) -> GoalWeights {
         task_balance: 0.0,
         move_cost: 0.0,
         criticality: 0.0,
+        predicted_headroom: 0.0,
     };
     for (rank, goal) in order.iter().enumerate() {
         let weight = 1e3 / PRIORITY_DECADE.powi(rank as i32);
@@ -105,6 +121,18 @@ mod tests {
                 assert!(w.capacity > 100.0 * gw);
             }
         }
+    }
+
+    #[test]
+    fn predicted_headroom_sits_between_goals_and_capacity() {
+        // The forecast term must dominate every goal (so predicted
+        // breaches are fixed before goal trade-offs) yet stay two decades
+        // under the capacity constraint (an actual breach always wins).
+        let w = weights_from_priorities(&Goal::DEFAULT_ORDER);
+        assert_eq!(w.predicted_headroom, 0.0, "off until the engine enables it");
+        assert!(PREDICTED_HEADROOM_WEIGHT > 1e3);
+        assert!(CAPACITY_WEIGHT >= 100.0 * PREDICTED_HEADROOM_WEIGHT);
+        assert!((0.0..1.0).contains(&HEADROOM_LIMIT));
     }
 
     #[test]

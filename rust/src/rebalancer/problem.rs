@@ -91,6 +91,12 @@ pub struct GoalWeights {
     pub task_balance: f64,
     pub move_cost: f64,
     pub criticality: f64,
+    /// Weight of the forecast-driven predicted-headroom term (0 = the
+    /// forecasting subsystem is off — the engine sets it each round; see
+    /// `rebalancer::goals::PREDICTED_HEADROOM_WEIGHT`). Rust-scorer only:
+    /// the PJRT artifact scores the six python-parity terms, which is why
+    /// this weight is absent from [`GoalWeights::as_array`].
+    pub predicted_headroom: f64,
 }
 
 impl Default for GoalWeights {
@@ -102,11 +108,14 @@ impl Default for GoalWeights {
             task_balance: 1e1,
             move_cost: 1.0,
             criticality: 1e-1,
+            predicted_headroom: 0.0,
         }
     }
 }
 
 impl GoalWeights {
+    /// The six python-parity weights (`ref.py DEFAULT_WEIGHTS` order) —
+    /// what crosses the PJRT boundary.
     pub fn as_array(&self) -> [f64; 6] {
         [
             self.capacity,
@@ -143,6 +152,11 @@ pub struct Problem {
     /// Fleet-stable app id per dense index (ascending; identity for a
     /// dense population). Parallel to `apps` and `initial`.
     pub stable_ids: Vec<AppId>,
+    /// Per-app demand forecast at the configured horizon, positionally
+    /// parallel to `apps` — set by the coordinator engine each round when
+    /// forecasting is on, empty otherwise. Drives the predicted-headroom
+    /// goal (see [`Problem::forecast_active`]).
+    pub predicted_demand: Vec<ResourceVec>,
 }
 
 /// What a batch of fleet events touched in a [`Problem`] — the dirty set
@@ -223,9 +237,18 @@ impl Problem {
             transition_policy: TransitionPolicy::All,
             weights,
             stable_ids: apps.iter().map(|a| a.id).collect(),
+            predicted_demand: Vec::new(),
         };
         problem.check()?;
         Ok(problem)
+    }
+
+    /// Is the predicted-headroom goal live? Requires both the engine-set
+    /// weight and a prediction per app (positional staleness after
+    /// structural events is impossible: [`Problem::apply_events`] clears
+    /// the vector and the engine re-derives it every round).
+    pub fn forecast_active(&self) -> bool {
+        self.weights.predicted_headroom > 0.0 && self.predicted_demand.len() == self.apps.len()
     }
 
     /// C3 budget formula shared by [`Problem::build`] and the incremental
@@ -287,6 +310,10 @@ impl Problem {
         let mut dirty_stable: BTreeSet<AppId> = BTreeSet::new();
         let mut structural = false;
         let mut tiers_changed = false;
+        // Predictions are positional; drop them rather than risk a stale
+        // pairing — the engine re-derives the vector after every event
+        // application anyway.
+        self.predicted_demand.clear();
         for ev in events {
             match ev {
                 FleetEvent::DemandDrift { app, demand } => {

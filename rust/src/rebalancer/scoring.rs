@@ -66,6 +66,11 @@ pub struct Breakdown {
     pub task_balance: f64,
     pub move_cost: f64,
     pub crit_cost: f64,
+    /// Forecast term: Σ over tiers/resources of the squared excess of
+    /// *predicted* utilization over `goals::HEADROOM_LIMIT`. Zero unless
+    /// the coordinator's forecasting subsystem armed the problem
+    /// ([`Problem::forecast_active`]).
+    pub predicted_breach: f64,
 }
 
 impl Breakdown {
@@ -76,6 +81,7 @@ impl Breakdown {
             + w.task_balance * self.task_balance
             + w.move_cost * self.move_cost
             + w.criticality * self.crit_cost
+            + w.predicted_headroom * self.predicted_breach
     }
 
     pub fn is_capacity_feasible(&self) -> bool {
@@ -96,6 +102,11 @@ pub struct ScoreState<'p> {
     problem: &'p Problem,
     tier_of: Vec<TierId>,
     loads: Vec<ResourceVec>,
+    /// Per-tier *predicted* loads when the forecast goal is live
+    /// ([`Problem::forecast_active`]); empty otherwise, so the reactive
+    /// path pays one branch and nothing else. Maintained in lockstep
+    /// with `loads` by `apply`/`revert`.
+    pred_loads: Vec<ResourceVec>,
     /// Σ task-count of apps not on their incumbent tier (G4 numerator).
     moved_tasks: f64,
     /// Σ criticality of apps not on their incumbent tier (G5 numerator).
@@ -119,6 +130,9 @@ pub struct Applied {
     pub to: TierId,
     prev_load_from: ResourceVec,
     prev_load_to: ResourceVec,
+    /// Predicted-load snapshots (ZERO when the forecast goal is off).
+    prev_pred_from: ResourceVec,
+    prev_pred_to: ResourceVec,
     prev_moved_tasks: f64,
     prev_moved_crit: f64,
     prev_n_moved: usize,
@@ -148,6 +162,18 @@ impl<'p> ScoreState<'p> {
             tier_loads(problem, &assignment),
             "warm loads must be bit-identical to a fresh accumulation"
         );
+        // Predicted loads are always accumulated fresh (O(A), canonical
+        // ascending-app order — the same order as `tier_loads`, so every
+        // construction path produces bit-identical aggregates).
+        let pred_loads = if problem.forecast_active() {
+            let mut pl = vec![ResourceVec::ZERO; problem.n_tiers()];
+            for i in 0..problem.n_apps() {
+                pl[assignment.as_slice()[i].0] += problem.predicted_demand[i];
+            }
+            pl
+        } else {
+            Vec::new()
+        };
         let mut moved_tasks = 0.0;
         let mut moved_crit = 0.0;
         let mut n_moved = 0;
@@ -174,6 +200,7 @@ impl<'p> ScoreState<'p> {
             problem,
             tier_of: assignment.as_slice().to_vec(),
             loads,
+            pred_loads,
             moved_tasks,
             moved_crit,
             n_moved,
@@ -215,12 +242,15 @@ impl<'p> ScoreState<'p> {
     /// Apply a move; O(1). Caller must have checked `placement_allowed`.
     pub fn apply(&mut self, app: usize, to: TierId) -> Applied {
         let from = self.tier_of[app];
+        let forecasting = !self.pred_loads.is_empty();
         let token = Applied {
             app,
             from,
             to,
             prev_load_from: self.loads[from.0],
             prev_load_to: self.loads[to.0],
+            prev_pred_from: if forecasting { self.pred_loads[from.0] } else { ResourceVec::ZERO },
+            prev_pred_to: if forecasting { self.pred_loads[to.0] } else { ResourceVec::ZERO },
             prev_moved_tasks: self.moved_tasks,
             prev_moved_crit: self.moved_crit,
             prev_n_moved: self.n_moved,
@@ -232,6 +262,11 @@ impl<'p> ScoreState<'p> {
         let init = self.problem.initial.as_slice()[app];
         self.loads[from.0] -= a.demand;
         self.loads[to.0] += a.demand;
+        if forecasting {
+            let pd = self.problem.predicted_demand[app];
+            self.pred_loads[from.0] -= pd;
+            self.pred_loads[to.0] += pd;
+        }
         // Moved-set bookkeeping relative to the incumbent.
         if from == init {
             self.moved_tasks += a.demand.tasks();
@@ -253,6 +288,10 @@ impl<'p> ScoreState<'p> {
         self.tier_of[token.app] = token.from;
         self.loads[token.from.0] = token.prev_load_from;
         self.loads[token.to.0] = token.prev_load_to;
+        if !self.pred_loads.is_empty() {
+            self.pred_loads[token.from.0] = token.prev_pred_from;
+            self.pred_loads[token.to.0] = token.prev_pred_to;
+        }
         self.moved_tasks = token.prev_moved_tasks;
         self.moved_crit = token.prev_moved_crit;
         self.n_moved = token.prev_n_moved;
@@ -301,6 +340,26 @@ impl<'p> ScoreState<'p> {
                 + (self.util_at(t, 1) - mean[1]).powi(2);
             task_balance += (self.util_at(t, 2) - mean[2]).powi(2);
         }
+        // Forecast pass (skipped entirely on the reactive path): squared
+        // excess of *predicted* utilization over the headroom limit —
+        // what makes the solver move apps before the breach, not after.
+        let mut predicted_breach = 0.0;
+        if !self.pred_loads.is_empty() {
+            let limit = crate::rebalancer::goals::HEADROOM_LIMIT;
+            for (t, tier) in self.problem.tiers.iter().enumerate() {
+                for r in 0..NUM_RESOURCES {
+                    let cap = tier.capacity.0[r];
+                    let u = if cap > 0.0 {
+                        self.pred_loads[t].0[r] / cap
+                    } else if self.pred_loads[t].0[r] > 0.0 {
+                        f64::INFINITY
+                    } else {
+                        0.0
+                    };
+                    predicted_breach += (u - limit).max(0.0).powi(2);
+                }
+            }
+        }
         Breakdown {
             capacity_violation: cap_vio,
             over_ideal,
@@ -308,6 +367,7 @@ impl<'p> ScoreState<'p> {
             task_balance,
             move_cost: self.moved_tasks / self.task_total,
             crit_cost: self.moved_crit / self.crit_total,
+            predicted_breach,
         }
     }
 
@@ -522,6 +582,87 @@ mod tests {
         assert_eq!(warm.score(), cold.score(), "bitwise score equality");
         assert_eq!(warm.loads(), cold.loads());
         assert_eq!(warm.n_moved(), cold.n_moved());
+    }
+
+    /// Arm the predicted-headroom goal: predictions = demand scaled by
+    /// `factor`, weight from `goals`.
+    fn arm_forecast(p: &mut Problem, factor: f64) {
+        p.predicted_demand = p.apps.iter().map(|a| a.demand.scale(factor)).collect();
+        p.weights.predicted_headroom = crate::rebalancer::goals::PREDICTED_HEADROOM_WEIGHT;
+    }
+
+    #[test]
+    fn forecast_goal_is_inert_by_default() {
+        let p = paper_problem();
+        assert!(!p.forecast_active());
+        let (_, b) = score_assignment(&p, &p.initial.clone());
+        assert_eq!(b.predicted_breach, 0.0);
+        // Weight without predictions (or vice versa) stays inert too.
+        let mut armed = p.clone();
+        armed.weights.predicted_headroom = 1e4;
+        assert!(!armed.forecast_active(), "weight alone must not arm the goal");
+        let mut half = p.clone();
+        half.predicted_demand = vec![ResourceVec::ZERO; half.n_apps()];
+        assert!(!half.forecast_active(), "predictions alone must not arm the goal");
+    }
+
+    #[test]
+    fn predicted_breach_fires_before_actual_breach() {
+        // Predictions at 3x demand breach the 0.9 headroom on the
+        // incumbent — the "move before the breach" signal — and the
+        // weighted term moves the total score.
+        let mut p = paper_problem();
+        arm_forecast(&mut p, 3.0);
+        let (_, b) = score_assignment(&p, &p.initial.clone());
+        assert!(b.predicted_breach > 0.0, "3x predicted demand must breach headroom");
+        let with = b.total(&p.weights);
+        let mut unweighted = p.weights;
+        unweighted.predicted_headroom = 0.0;
+        assert!(with > b.total(&unweighted));
+        // Calm predictions stay under the limit: the term is exactly 0.
+        let mut calm = paper_problem();
+        arm_forecast(&mut calm, 0.1);
+        let (_, cb) = score_assignment(&calm, &calm.initial.clone());
+        assert_eq!(cb.predicted_breach, 0.0);
+    }
+
+    #[test]
+    fn incremental_matches_full_rescore_with_forecast_armed() {
+        let mut p = paper_problem();
+        arm_forecast(&mut p, 1.6);
+        let mut state = ScoreState::new(&p, p.initial.clone());
+        let mut rng = Pcg64::new(3);
+        for _ in 0..50 {
+            let app = rng.range(0, p.n_apps());
+            let to = *rng.choose(&p.apps[app].allowed).unwrap();
+            state.apply(app, to);
+            let full = ScoreState::new(&p, state.assignment());
+            assert_eq!(
+                state.score().to_bits(),
+                full.score().to_bits(),
+                "incremental predicted loads must stay bit-identical to cold"
+            );
+            assert_eq!(state.breakdown().predicted_breach, full.breakdown().predicted_breach);
+        }
+    }
+
+    #[test]
+    fn peek_is_bitwise_pure_with_forecast_armed() {
+        let mut p = paper_problem();
+        arm_forecast(&mut p, 2.0);
+        let mut state = ScoreState::new(&p, p.initial.clone());
+        let mut rng = Pcg64::new(11);
+        for _ in 0..100 {
+            let app = rng.range(0, p.n_apps());
+            let to = *rng.choose(&p.apps[app].allowed).unwrap();
+            if rng.chance(0.3) {
+                state.apply(app, to);
+            } else {
+                let before = state.score();
+                let _ = state.peek(app, to);
+                assert_eq!(state.score(), before, "peek must not leak predicted loads");
+            }
+        }
     }
 
     #[test]

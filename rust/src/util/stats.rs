@@ -49,6 +49,52 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     variance(xs).sqrt()
 }
 
+/// Mean absolute percentage error of `forecast` against `actual`
+/// (positionally paired). Zero actuals are skipped (the ratio is
+/// undefined there); returns NaN when no term survives — empty input or
+/// all-zero actuals.
+pub fn mape(actual: &[f64], forecast: &[f64]) -> f64 {
+    assert_eq!(actual.len(), forecast.len(), "mape: paired slices");
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for (&a, &f) in actual.iter().zip(forecast) {
+        if a != 0.0 {
+            sum += ((f - a) / a).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        f64::NAN
+    } else {
+        sum / n as f64
+    }
+}
+
+/// Symmetric MAPE in [0, 2]: mean of `2|f−a| / (|a|+|f|)`. The forecast-
+/// accuracy metric the coordinator emits — symmetric, so over- and
+/// under-prediction of the same magnitude score the same, and defined at
+/// zero actuals (a 0/0 term counts as a perfect 0). Returns NaN for
+/// empty input.
+pub fn smape(actual: &[f64], forecast: &[f64]) -> f64 {
+    assert_eq!(actual.len(), forecast.len(), "smape: paired slices");
+    if actual.is_empty() {
+        return f64::NAN;
+    }
+    let sum: f64 = actual
+        .iter()
+        .zip(forecast)
+        .map(|(&a, &f)| {
+            let denom = a.abs() + f.abs();
+            if denom == 0.0 {
+                0.0
+            } else {
+                2.0 * (f - a).abs() / denom
+            }
+        })
+        .sum();
+    sum / actual.len() as f64
+}
+
 /// Maximum absolute deviation from the mean — the "worst balanced
 /// resource difference" metric Fig. 5 plots.
 pub fn max_abs_dev_from_mean(xs: &[f64]) -> f64 {
@@ -286,6 +332,31 @@ mod tests {
         }
         assert!((os.mean() - mean(&xs)).abs() < 1e-9);
         assert!((os.variance() - variance(&xs)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mape_skips_zero_actuals_and_handles_empty() {
+        assert!(mape(&[], &[]).is_nan(), "empty slices have no error");
+        assert!(mape(&[0.0, 0.0], &[1.0, 2.0]).is_nan(), "all-zero actuals");
+        // Zero actual skipped; remaining terms: |9-10|/10 and |6-4|/4.
+        let m = mape(&[10.0, 0.0, 4.0], &[9.0, 5.0, 6.0]);
+        assert!((m - (0.1 + 0.5) / 2.0).abs() < 1e-12, "{m}");
+        assert_eq!(mape(&[3.0], &[3.0]), 0.0);
+    }
+
+    #[test]
+    fn smape_is_symmetric_bounded_and_total_at_zero() {
+        assert!(smape(&[], &[]).is_nan(), "empty slices have no error");
+        assert_eq!(smape(&[0.0], &[0.0]), 0.0, "0/0 terms are a perfect hit");
+        assert_eq!(smape(&[5.0], &[5.0]), 0.0);
+        // Symmetry: swapping actual and forecast changes nothing.
+        let a = smape(&[10.0], &[14.0]);
+        let b = smape(&[14.0], &[10.0]);
+        assert_eq!(a, b);
+        assert!((a - 2.0 * 4.0 / 24.0).abs() < 1e-12, "{a}");
+        // Worst case (one side zero) saturates at 2.
+        assert_eq!(smape(&[0.0], &[7.0]), 2.0);
+        assert_eq!(smape(&[7.0], &[0.0]), 2.0);
     }
 
     #[test]

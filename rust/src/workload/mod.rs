@@ -102,6 +102,10 @@ impl WorkloadSpec {
         }
     }
 
+    /// Every workload preset name, in `by_name` order — what the CLI
+    /// prints for `--scenario help` and unknown-name errors.
+    pub const PRESETS: [&'static str; 3] = ["paper", "small", "large"];
+
     pub fn by_name(name: &str) -> Option<Self> {
         match name {
             "paper" => Some(Self::paper()),

@@ -29,6 +29,25 @@ pub struct ScenarioConfig {
     pub spike_factor: f64,
     /// Round at which one region goes dark (None = never).
     pub outage_round: Option<u32>,
+    /// Amplitude of the deterministic per-app demand wave (0 = off).
+    /// When on, the wave *replaces* the sigma-drift block: each round
+    /// every app's demand is set to `base × wave_factor(round, app)`
+    /// (times lognormal noise when `drift_sigma > 0`), where `base` is
+    /// the demand the generator first observed for the app. The factor
+    /// is a pure function of (config, round, app id) — no PRNG — so the
+    /// wave is exactly the shape a forecaster can learn.
+    pub wave_amplitude: f64,
+    /// Rounds per wave cycle.
+    pub wave_period: u32,
+    /// Number of distinct per-app phase offsets, spread over the full
+    /// cycle (app `i` gets phase `(i mod wave_phases)/wave_phases` of a
+    /// period). Aggregate demand stays ~flat while each phase group
+    /// swings — so breaches come from per-tier phase *composition*,
+    /// which only proactive (pre-peak) moves can fix.
+    pub wave_phases: u32,
+    /// Square wave — full amplitude for the first quarter of each cycle,
+    /// baseline otherwise (the `burst` preset) — instead of a sinusoid.
+    pub wave_square: bool,
     pub seed: u64,
 }
 
@@ -49,6 +68,10 @@ impl ScenarioConfig {
             spike_fraction: 0.2,
             spike_factor: 2.0,
             outage_round: None,
+            wave_amplitude: 0.0,
+            wave_period: 12,
+            wave_phases: 3,
+            wave_square: false,
             seed: 42,
         }
     }
@@ -78,6 +101,38 @@ impl ScenarioConfig {
         Self { outage_round: Some(3), ..Self::base() }
     }
 
+    /// Phase-shifted sinusoidal demand waves per app — the diurnal
+    /// workload the forecasting subsystem exists for. Noise-free (pure
+    /// wave), period 12 rounds, three phase groups a third of a cycle
+    /// apart: aggregate demand is ~flat, so a reactive scheduler only
+    /// sees a tier's wave *after* its composition has already peaked.
+    pub fn diurnal() -> Self {
+        Self {
+            drift_sigma: 0.0,
+            drift_fraction: 0.0,
+            wave_amplitude: 0.8,
+            wave_period: 12,
+            wave_phases: 3,
+            ..Self::base()
+        }
+    }
+
+    /// Square-wave demand bursts: anti-phase app groups jump to 2.5×
+    /// base for a quarter of every 8-round cycle — exactly periodic, so
+    /// `seasonal-naive` (run with `--period 8` to match the cycle)
+    /// anticipates the edge a reactive scheduler can only chase.
+    pub fn burst() -> Self {
+        Self {
+            drift_sigma: 0.0,
+            drift_fraction: 0.0,
+            wave_amplitude: 1.5,
+            wave_period: 8,
+            wave_phases: 2,
+            wave_square: true,
+            ..Self::base()
+        }
+    }
+
     /// Everything at once: drift, churn, spikes, and an outage.
     pub fn mixed() -> Self {
         Self {
@@ -90,6 +145,13 @@ impl ScenarioConfig {
         }
     }
 
+    /// Every single-region preset name, in `by_name` order — the single
+    /// source of truth the CLI prints in `--events help` and in
+    /// unknown-name errors, so the list can never drift from the code.
+    pub const PRESETS: [&'static str; 8] = [
+        "steady", "drift", "churn", "spike", "outage", "mixed", "diurnal", "burst",
+    ];
+
     pub fn by_name(name: &str) -> Option<Self> {
         match name {
             "steady" => Some(Self::steady()),
@@ -98,6 +160,8 @@ impl ScenarioConfig {
             "spike" => Some(Self::spike()),
             "outage" => Some(Self::outage()),
             "mixed" => Some(Self::mixed()),
+            "diurnal" => Some(Self::diurnal()),
+            "burst" => Some(Self::burst()),
             _ => None,
         }
     }
@@ -166,6 +230,10 @@ impl MultiRegionScenario {
         }
     }
 
+    /// The multi-region-only preset names ([`ScenarioConfig::PRESETS`]
+    /// also resolve, applied uniformly per region).
+    pub const PRESETS: [&'static str; 2] = ["multiregion", "failover"];
+
     /// Resolve a scenario name for `--regions N` service mode: the two
     /// multi-region presets, or any single-region preset applied
     /// uniformly to every region.
@@ -190,6 +258,36 @@ impl MultiRegionScenario {
 pub struct ScenarioGen {
     pub config: ScenarioConfig,
     rng: Pcg64,
+    /// Wave baselines: the demand first observed per app. The wave is
+    /// `base × wave_factor`, never a ratio chain, so fp error cannot
+    /// accumulate across cycles and the shape stays exactly periodic.
+    bases: std::collections::BTreeMap<AppId, crate::model::ResourceVec>,
+}
+
+/// The wave's multiplicative demand factor for `app` at `round` — a pure
+/// function (no PRNG, no state), so recorded journals replay exactly and
+/// every engine mode and worker count sees the identical stream.
+pub fn wave_factor(cfg: &ScenarioConfig, round: u32, app: AppId) -> f64 {
+    if cfg.wave_amplitude <= 0.0 {
+        return 1.0;
+    }
+    let period = cfg.wave_period.max(1) as f64;
+    let phases = cfg.wave_phases.max(1) as u64;
+    let phase = (app.0 as u64 % phases) as f64 * period / phases as f64;
+    // Reduce into one cycle BEFORE the trig call: `%` is exact on f64,
+    // so round r and round r + period produce the bit-identical factor
+    // (sin(x + τ) recomputed in floating point would not).
+    let t = (round as f64 + phase) % period;
+    if cfg.wave_square {
+        if t < period / 4.0 {
+            1.0 + cfg.wave_amplitude
+        } else {
+            1.0
+        }
+    } else {
+        // Floor keeps demand positive even for amplitudes > 1.
+        (1.0 + cfg.wave_amplitude * (std::f64::consts::TAU * t / period).sin()).max(0.05)
+    }
 }
 
 /// Fleet size floor below which departures stop firing (keeps degenerate
@@ -199,7 +297,7 @@ const MIN_FLEET_FOR_DEPARTURE: usize = 8;
 impl ScenarioGen {
     pub fn new(config: ScenarioConfig) -> Self {
         let rng = Pcg64::new(config.seed ^ 0xE7E27);
-        Self { config, rng }
+        Self { config, rng, bases: std::collections::BTreeMap::new() }
     }
 
     /// Events for one round, given the current fleet view. `next_app_id`
@@ -215,8 +313,34 @@ impl ScenarioGen {
         let cfg = self.config.clone();
         let mut events = Vec::new();
 
+        // -- deterministic demand wave (diurnal/burst) ------------------
+        // Replaces the sigma-drift block when active; optional lognormal
+        // noise rides on top when drift_sigma > 0. Every app emits every
+        // round — square-wave plateaus included — so per-app demand
+        // histories advance one observation per round and a seasonal
+        // forecaster's period aligns with the wave period.
+        if cfg.wave_amplitude > 0.0 {
+            // Evict baselines of apps no longer in the fleet. Departures
+            // can be injected from outside the generator too (cross-region
+            // migrations, evacuations), so pruning against the live view —
+            // ids are unique and ascending in `apps` — is the only spot
+            // that catches them all; ids are never reused, so a departed
+            // app's entry is dead weight forever.
+            self.bases
+                .retain(|id, _| apps.binary_search_by(|a| a.id.cmp(id)).is_ok());
+            for app in apps {
+                let base = *self.bases.entry(app.id).or_insert(app.demand);
+                let mut demand = base.scale(wave_factor(&cfg, round, app.id));
+                if cfg.drift_sigma > 0.0 {
+                    demand = demand.scale(self.rng.log_normal(0.0, cfg.drift_sigma));
+                }
+                demand.0[2] = demand.0[2].round().max(1.0);
+                events.push(FleetEvent::DemandDrift { app: app.id, demand });
+            }
+        }
+
         // -- demand drift over a fraction of the fleet ------------------
-        if cfg.drift_sigma > 0.0 && cfg.drift_fraction > 0.0 {
+        if cfg.wave_amplitude <= 0.0 && cfg.drift_sigma > 0.0 && cfg.drift_fraction > 0.0 {
             for app in apps {
                 if !self.rng.chance(cfg.drift_fraction) {
                     continue;
@@ -390,10 +514,103 @@ mod tests {
 
     #[test]
     fn presets_resolve_by_name() {
-        for name in ["steady", "drift", "churn", "spike", "outage", "mixed"] {
+        for name in ScenarioConfig::PRESETS {
             assert!(ScenarioConfig::by_name(name).is_some(), "{name}");
         }
+        assert!(ScenarioConfig::PRESETS.contains(&"diurnal"));
+        assert!(ScenarioConfig::PRESETS.contains(&"burst"));
         assert!(ScenarioConfig::by_name("zzz").is_none());
+    }
+
+    #[test]
+    fn wave_factor_is_periodic_and_phase_shifted() {
+        let cfg = ScenarioConfig::diurnal();
+        for r in 0..cfg.wave_period {
+            // Exact periodicity (no ratio-chain drift).
+            assert_eq!(
+                wave_factor(&cfg, r, AppId(0)),
+                wave_factor(&cfg, r + cfg.wave_period, AppId(0)),
+                "round {r}"
+            );
+            // Same group, same factor.
+            assert_eq!(wave_factor(&cfg, r, AppId(0)), wave_factor(&cfg, r, AppId(3)));
+        }
+        // Phase groups traverse the cycle shifted: the factor SEQUENCES
+        // differ (individual rounds may coincide — sin 30° == sin 150°).
+        let cycle = |app: AppId| -> Vec<f64> {
+            (0..cfg.wave_period).map(|r| wave_factor(&cfg, r, app)).collect()
+        };
+        assert_ne!(cycle(AppId(0)), cycle(AppId(1)));
+        assert_ne!(cycle(AppId(1)), cycle(AppId(2)));
+        // Sinusoid actually swings by the configured amplitude.
+        let peaks: Vec<f64> =
+            (0..cfg.wave_period).map(|r| wave_factor(&cfg, r, AppId(0))).collect();
+        let hi = peaks.iter().cloned().fold(0.0, f64::max);
+        let lo = peaks.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(hi > 1.0 + 0.9 * cfg.wave_amplitude * 0.9, "peak {hi}");
+        assert!(lo < 1.0 - 0.5 * cfg.wave_amplitude, "trough {lo}");
+        assert!(lo > 0.0, "demand stays positive");
+    }
+
+    #[test]
+    fn burst_square_wave_toggles_between_two_levels() {
+        let cfg = ScenarioConfig::burst();
+        let levels: std::collections::BTreeSet<u64> = (0..cfg.wave_period * 2)
+            .map(|r| wave_factor(&cfg, r, AppId(0)).to_bits())
+            .collect();
+        assert_eq!(levels.len(), 2, "square wave is two-valued");
+        assert_eq!(wave_factor(&cfg, 0, AppId(0)), 1.0 + cfg.wave_amplitude, "burst on at t=0");
+        assert_eq!(wave_factor(&cfg, cfg.wave_period / 2, AppId(0)), 1.0, "off mid-cycle");
+        // Anti-phase: group 1 bursts half a cycle after group 0.
+        assert_eq!(
+            wave_factor(&cfg, cfg.wave_period / 2, AppId(1)),
+            1.0 + cfg.wave_amplitude
+        );
+    }
+
+    #[test]
+    fn diurnal_emits_wave_drifts_that_return_to_base() {
+        let bed = bed();
+        let mut g = ScenarioGen::new(ScenarioConfig::diurnal());
+        let mut apps = bed.apps.clone();
+        let period = g.config.wave_period;
+        let mut round0_demand: Option<Vec<_>> = None;
+        for r in 0..=period {
+            let events = g.events_for_round(r, &apps, &bed.tiers, apps.len());
+            assert!(
+                events.iter().all(|e| matches!(e, FleetEvent::DemandDrift { .. })),
+                "pure wave emits drifts only"
+            );
+            assert!(!events.is_empty(), "the wave touches the fleet every round");
+            for e in &events {
+                if let FleetEvent::DemandDrift { app, demand } = e {
+                    let i = apps.iter().position(|a| a.id == *app).unwrap();
+                    apps[i].demand = *demand;
+                    assert!(demand.is_non_negative());
+                    assert!(demand.tasks() >= 1.0);
+                }
+            }
+            let snapshot: Vec<_> = apps.iter().map(|a| a.demand).collect();
+            if r == 0 {
+                round0_demand = Some(snapshot);
+            } else if r == period {
+                // base × wave is exactly periodic: one full cycle later
+                // every demand is bit-identical to round 0's.
+                assert_eq!(Some(snapshot), round0_demand, "wave must close its cycle exactly");
+            }
+        }
+    }
+
+    #[test]
+    fn wave_generation_is_deterministic() {
+        let bed = bed();
+        let run = || {
+            let mut g = ScenarioGen::new(ScenarioConfig::burst().with_seed(3));
+            (0..10)
+                .map(|r| g.events_for_round(r, &bed.apps, &bed.tiers, bed.apps.len()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]
