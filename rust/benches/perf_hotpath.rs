@@ -13,15 +13,19 @@
 //! (single reps, scaled fixtures; every BENCH_*.json is still emitted)
 
 use sptlb::bench::{measure, smoke_mode, worker_ladder, write_bench_json};
+use sptlb::coop::AvoidRegistry;
 use sptlb::coordinator::{
     Coordinator, CoordinatorConfig, EngineMode, MultiRegionConfig, MultiRegionCoordinator,
     RegionExecution,
 };
 use sptlb::forecast::{ForecastConfig, ForecasterKind};
 use sptlb::hierarchy::global::GlobalPolicy;
+use sptlb::hierarchy::host::HostScheduler;
+use sptlb::hierarchy::protocol::{CoopConfig, CoopProtocol};
+use sptlb::hierarchy::region::RegionScheduler;
 use sptlb::hierarchy::variants::Variant;
 use sptlb::metadata::MetadataStore;
-use sptlb::model::{Assignment, TierId};
+use sptlb::model::{AppId, Assignment, TierId};
 use sptlb::rebalancer::problem::{GoalWeights, Problem};
 use sptlb::rebalancer::scoring::{score_assignment, ScoreState};
 use sptlb::rebalancer::{LocalSearch, LocalSearchConfig, OptimalSearch, ParallelConfig};
@@ -342,6 +346,66 @@ fn main() {
                 Json::num(aware_sample.metrics.breach_rounds as f64),
             ),
             ("by_forecaster", Json::arr(by_forecaster)),
+        ]),
+    );
+
+    // --- coop kernel: negotiation rounds/sec + avoid-registry ops/sec ------
+    // A strict proximity budget forces the §3.4 loop through several
+    // propose → vet → avoid rounds per run; the registry ladder measures
+    // the shared AvoidRegistry at SPTLB-registry scale (1k apps) and 10x
+    // that (every app carrying one decaying avoid edge).
+    println!("\n[coop] negotiation kernel + shared avoid registry");
+    let coop_problem = Problem::build(
+        &bed.apps,
+        &bed.tiers,
+        bed.initial.clone(),
+        0.10,
+        GoalWeights::default(),
+    )
+    .unwrap();
+    let mut neg_rounds = 0usize;
+    let neg = measure("coop_negotiation_strict_proximity", warm, reps(5), || {
+        let mut p = coop_problem.clone();
+        let region = RegionScheduler::new(bed.latency.clone(), 8.0);
+        let host = HostScheduler::uniform(&bed.tiers, 16);
+        let proto = CoopProtocol::new(region, host, CoopConfig::default());
+        let out = proto.run(&mut p, &bed.apps, &bed.tiers, Deadline::after_ms(ms(200)));
+        neg_rounds = out.rounds.len();
+        neg_rounds
+    });
+    let neg_rps = neg_rounds as f64 / (neg.mean_ms / 1e3);
+    println!("  -> {neg_rps:.1} negotiation rounds/s ({neg_rounds} rounds/run)");
+
+    let mut reg_entries: Vec<Json> = Vec::new();
+    for n_apps in [1_000usize, 10_000] {
+        // One record + one expiry sweep per edge, decay 2 (= 4 registry
+        // ops per edge: record, two aging touches, one expiry drop).
+        let r = measure(&format!("avoid_registry_{n_apps}_edges"), warm, reps(5), || {
+            let mut reg: AvoidRegistry<(AppId, TierId)> = AvoidRegistry::new(2);
+            for i in 0..n_apps {
+                reg.record((AppId(i), TierId(i % 8)));
+            }
+            let mut expired = 0usize;
+            while !reg.is_empty() {
+                expired += reg.age().expired.len();
+            }
+            expired
+        });
+        let ops_per_sec = (4 * n_apps) as f64 / (r.mean_ms / 1e3);
+        println!("  registry {n_apps} edges: {:.2e} ops/s", ops_per_sec);
+        reg_entries.push(Json::obj(vec![
+            ("edges", Json::num(n_apps as f64)),
+            ("ops_per_sec", Json::num(ops_per_sec)),
+        ]));
+    }
+    write_bench_json(
+        "BENCH_coop.json",
+        &Json::obj(vec![
+            ("bench", Json::str("coop_kernel")),
+            ("smoke", Json::num(smoke as u8 as f64)),
+            ("negotiation_rounds_per_sec", Json::num(neg_rps)),
+            ("rounds_per_run", Json::num(neg_rounds as f64)),
+            ("registry", Json::arr(reg_entries)),
         ]),
     );
 

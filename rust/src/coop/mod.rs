@@ -1,0 +1,603 @@
+//! The co-operation kernel — §3.4's propose → vet → reject-as-avoid →
+//! re-solve-with-decay loop, factored once and instantiated by every
+//! scheduler layer in the hierarchy:
+//!
+//! ```text
+//!   GlobalScheduler      negotiate() over cross-region migrations;
+//!        ▲               rejections → AvoidRegistry<(app, from, to)>
+//!        │ escalation (a rejection that outlives its decay window
+//!        │  repeatedly becomes a pressure signal one level up)
+//!   per-region SPTLB     negotiate() over app→tier moves vetted by the
+//!                        region/host schedulers; rejections →
+//!                        AvoidRegistry<(app, tier)> + (from, to) bans
+//! ```
+//!
+//! Before this module existed the repo carried the same mechanism three
+//! times: `hierarchy::protocol`'s in-round loop, the coordinator
+//! engine's decay registry, and `hierarchy::global`'s private avoid map.
+//! All three now run on the pieces here:
+//!
+//!  * [`Verdict`] / [`RejectReason`] — the vetting vocabulary every
+//!    layer shares (accept, reject-with-reason, reject-transition);
+//!  * [`AvoidRegistry`] — the *single* decay/expiry implementation,
+//!    generic over the edge key: `(AppId, TierId)` at the SPTLB level,
+//!    `(AppId, RegionId, RegionId)` at the global level;
+//!  * [`negotiate`] — the round driver generic over [`CoopLayer`]
+//!    (propose, vet, feed back, absorb; round budget + deadline);
+//!  * escalation — an avoid edge that expires [`ESCALATE_AFTER`] times
+//!    raises exactly one pressure signal for the layer above
+//!    ([`escalation_boost`] converts signals into region pressure).
+//!
+//! # Determinism contract
+//!
+//! Nothing here draws randomness or reads the clock beyond the caller's
+//! [`Deadline`]. Registry iteration is `BTreeMap`-ordered, so the same
+//! operation sequence yields bit-identical expiry/escalation sequences —
+//! the property the fleet/multiregion equivalence suites stand on.
+
+use crate::util::json::Json;
+use crate::util::timer::Deadline;
+use std::collections::BTreeMap;
+
+/// An avoid edge must expire this many times (i.e. the conflict must
+/// outlive its decay window this often) before one escalation signal is
+/// raised to the layer above.
+pub const ESCALATE_AFTER: u32 = 2;
+
+/// Region-pressure equivalent of one escalation signal: the global
+/// scheduler treats a region with a persistent lower-level conflict as
+/// this much hotter than its raw demand/capacity ratio says.
+pub const ESCALATION_PRESSURE: f64 = 0.25;
+
+/// Fraction of the remaining negotiation budget each round's solve gets
+/// (geometric split: the first round is substantive, later rounds still
+/// have room to re-solve).
+pub const ROUND_BUDGET_FRACTION: f64 = 0.6;
+
+/// Pressure boost for `n` escalation signals. Exactly `0.0` for `n == 0`
+/// so escalation-free pressures stay bit-identical to the raw ones.
+pub fn escalation_boost(n: u32) -> f64 {
+    n as f64 * ESCALATION_PRESSURE
+}
+
+/// Why a vetting layer refused a proposal item.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RejectReason {
+    /// Near-data-source test failed: best achievable latency (ms) on the
+    /// proposed destination exceeded the budget.
+    Proximity { achievable_ms: f64 },
+    /// The transition's worst-case (p99) latency exceeded the budget.
+    TransitionLatency { p99_ms: f64 },
+    /// No feasible host packing at the destination.
+    Packing,
+    /// Destination capacity headroom exhausted.
+    Capacity,
+    /// No destination supports the item at all (SLO routability).
+    Routability,
+}
+
+/// One vetting layer's answer for one proposal item (§3.4 / Fig. 2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Verdict {
+    Accept,
+    /// Rejected: feed back a *point* avoid constraint (this item's
+    /// specific destination).
+    Reject(RejectReason),
+    /// Rejected: the whole transition class is bad — feed back a
+    /// (from, to) ban rather than a point constraint.
+    RejectTransition(RejectReason),
+}
+
+impl Verdict {
+    pub fn is_accept(&self) -> bool {
+        matches!(self, Verdict::Accept)
+    }
+}
+
+/// Per-reason rejection tally — the uniform negotiation telemetry every
+/// layer emits (`RoundRecord.coop_rejects`, `RoundTrace.rejects`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RejectCounts {
+    pub proximity: usize,
+    pub transition: usize,
+    pub packing: usize,
+    pub capacity: usize,
+    pub routability: usize,
+}
+
+impl RejectCounts {
+    pub fn count(&mut self, reason: RejectReason) {
+        match reason {
+            RejectReason::Proximity { .. } => self.proximity += 1,
+            RejectReason::TransitionLatency { .. } => self.transition += 1,
+            RejectReason::Packing => self.packing += 1,
+            RejectReason::Capacity => self.capacity += 1,
+            RejectReason::Routability => self.routability += 1,
+        }
+    }
+
+    pub fn add(&mut self, other: &RejectCounts) {
+        self.proximity += other.proximity;
+        self.transition += other.transition;
+        self.packing += other.packing;
+        self.capacity += other.capacity;
+        self.routability += other.routability;
+    }
+
+    pub fn total(&self) -> usize {
+        self.proximity + self.transition + self.packing + self.capacity + self.routability
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("proximity", Json::num(self.proximity as f64)),
+            ("transition", Json::num(self.transition as f64)),
+            ("packing", Json::num(self.packing as f64)),
+            ("capacity", Json::num(self.capacity as f64)),
+            ("routability", Json::num(self.routability as f64)),
+        ])
+    }
+}
+
+/// One negotiated proposal item, tagged with the avoid-edge key it maps
+/// to when rejected — a convenience [`CoopLayer::Item`] for layers whose
+/// items carry no payload beyond the key itself (see the kernel's own
+/// test layer). The in-tree production layers have richer items (`Move`,
+/// `MigrationProposal`) and key the registry themselves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Proposal<K> {
+    pub key: K,
+}
+
+/// What [`AvoidRegistry::age`] observed in one round.
+#[derive(Debug, Clone, Default)]
+pub struct Aged<K> {
+    /// Edges whose decay window ended this round (ascending key order);
+    /// the owning layer must restore the avoided option.
+    pub expired: Vec<K>,
+    /// Edges whose cumulative expiry count just reached the escalation
+    /// threshold — each raises exactly one signal and resets its count.
+    pub escalated: Vec<K>,
+}
+
+/// The single decaying avoid-constraint store (§3.4's "reject as avoid
+/// constraint", with service-mode decay). Keyed `(AppId, TierId)` at the
+/// SPTLB level and `(AppId, RegionId, RegionId)` at the global level.
+///
+/// Semantics (pinned against the two legacy registries by
+/// `rust/tests/coop_kernel.rs`):
+///
+///  * an edge recorded in round *r* is in force for the next `decay`
+///    rounds and expires on the aging call after that (`decay == 0`:
+///    expires on the very next aging call — the legacy per-round
+///    behaviour);
+///  * [`AvoidRegistry::record`] keeps an already-active edge's age (the
+///    engine's harvest semantics: re-observing an active edge is not a
+///    new rejection);
+///  * [`AvoidRegistry::renew`] resets the edge to age 0 (the global
+///    layer's semantics: a fresh rejection restarts the decay window).
+#[derive(Debug, Clone)]
+pub struct AvoidRegistry<K> {
+    decay: u32,
+    /// 0 disables escalation.
+    escalate_after: u32,
+    /// Active edges → age in aging rounds.
+    edges: BTreeMap<K, u32>,
+    /// Expiry counts since the last escalation, per key.
+    expiries: BTreeMap<K, u32>,
+}
+
+impl<K: Ord + Copy> AvoidRegistry<K> {
+    /// A registry without escalation (the layer above never hears of it).
+    pub fn new(decay: u32) -> Self {
+        Self::with_escalation(decay, 0)
+    }
+
+    /// A registry that raises one escalation signal every time an edge
+    /// accumulates `escalate_after` expiries (0 = escalation off).
+    pub fn with_escalation(decay: u32, escalate_after: u32) -> Self {
+        Self { decay, escalate_after, edges: BTreeMap::new(), expiries: BTreeMap::new() }
+    }
+
+    /// Rounds an edge stays in force after the round that added it.
+    pub fn decay(&self) -> u32 {
+        self.decay
+    }
+
+    /// Age every edge by one round; expired edges are dropped and
+    /// returned, and edges that crossed the escalation threshold emit
+    /// one signal each (see [`Aged`]).
+    pub fn age(&mut self) -> Aged<K> {
+        let mut aged = Aged { expired: Vec::new(), escalated: Vec::new() };
+        let decay = self.decay;
+        for (key, age) in std::mem::take(&mut self.edges) {
+            let age = age.saturating_add(1);
+            if age <= decay {
+                self.edges.insert(key, age);
+            } else {
+                aged.expired.push(key);
+                if self.escalate_after > 0 {
+                    let n = self.expiries.entry(key).or_insert(0);
+                    *n += 1;
+                    if *n >= self.escalate_after {
+                        aged.escalated.push(key);
+                        *n = 0;
+                    }
+                }
+            }
+        }
+        // A counter whose key is neither active nor among this round's
+        // expiries belongs to a conflict that RESOLVED — the edge
+        // expired earlier and was never re-added. Drop it, so only
+        // uninterrupted expire → re-add cycles count toward escalation
+        // ("outlives its decay window repeatedly", not "ever expired N
+        // times in total").
+        if self.escalate_after > 0 && !self.expiries.is_empty() {
+            let edges = &self.edges;
+            let expired = &aged.expired;
+            self.expiries
+                .retain(|k, _| edges.contains_key(k) || expired.binary_search(k).is_ok());
+        }
+        aged
+    }
+
+    /// Record an edge at age 0 if absent; an already-active edge keeps
+    /// its age. Returns true if the edge is new.
+    pub fn record(&mut self, key: K) -> bool {
+        use std::collections::btree_map::Entry;
+        match self.edges.entry(key) {
+            Entry::Vacant(v) => {
+                v.insert(0);
+                true
+            }
+            Entry::Occupied(_) => false,
+        }
+    }
+
+    /// Insert-or-reset an edge to age 0 (a fresh rejection restarts the
+    /// decay window). Returns true if the edge was not already active.
+    pub fn renew(&mut self, key: K) -> bool {
+        self.edges.insert(key, 0).is_none()
+    }
+
+    /// Is this edge currently in force?
+    pub fn avoided(&self, key: &K) -> bool {
+        self.edges.contains_key(key)
+    }
+
+    /// Active edge count.
+    pub fn len(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    /// Active edges, ascending key order.
+    pub fn keys(&self) -> impl Iterator<Item = &K> {
+        self.edges.keys()
+    }
+
+    /// Drop every edge (and its escalation counter) whose key fails the
+    /// predicate — e.g. a departed app's edges.
+    pub fn retain_keys(&mut self, mut keep: impl FnMut(&K) -> bool) {
+        self.edges.retain(|k, _| keep(k));
+        self.expiries.retain(|k, _| keep(k));
+    }
+}
+
+/// One negotiation round's uniform telemetry.
+#[derive(Debug, Clone)]
+pub struct RoundTelemetry {
+    pub round: u32,
+    /// Items the layer proposed this round.
+    pub proposed: usize,
+    /// Rejections by reason.
+    pub rejects: RejectCounts,
+    /// NEW avoid edges the rejections materialized into (re-rejections
+    /// of already-constrained options do not count).
+    pub avoids_added: usize,
+    /// The layer's score for this round's proposal (lower is better for
+    /// solver layers; pressure for the global layer).
+    pub score: f64,
+}
+
+/// The driver's summary of one [`negotiate`] run.
+#[derive(Debug, Clone, Default)]
+pub struct NegotiationOutcome {
+    pub rounds: Vec<RoundTelemetry>,
+    /// True if some round's non-empty proposal was accepted in full.
+    pub fully_accepted: bool,
+}
+
+/// One scheduler layer's bindings into the §3.4 loop. The driver owns
+/// the round structure (budget split, accept test, telemetry); the layer
+/// owns the domain (how to propose, who vets, what an avoid edge is).
+pub trait CoopLayer {
+    /// A full per-round proposal (a `Solution`, a `GlobalPlan`, …).
+    type Proposal;
+    /// One independently vettable unit of the proposal.
+    type Item: Copy;
+
+    /// Produce this round's proposal within `round_deadline` (a
+    /// [`ROUND_BUDGET_FRACTION`] share of what remains overall).
+    fn propose(&mut self, round: u32, round_deadline: Deadline) -> Self::Proposal;
+
+    /// The proposal's vettable items, in deterministic order.
+    fn items(&self, proposal: &Self::Proposal) -> Vec<Self::Item>;
+
+    /// Have the lower layer(s) vet every item; one verdict per item, in
+    /// item order.
+    fn vet(&mut self, proposal: &Self::Proposal, items: &[Self::Item]) -> Vec<Verdict>;
+
+    /// Feed one rejection back as an avoid constraint. Returns true if a
+    /// NEW edge was added (telemetry only).
+    fn feed_back(&mut self, item: &Self::Item, verdict: &Verdict) -> bool;
+
+    /// The proposal's score for telemetry.
+    fn score(&self, proposal: &Self::Proposal) -> f64;
+
+    /// Take ownership of the vetted proposal: finalize it when
+    /// `accepted`, otherwise prepare the re-solve (warm starts, fallback
+    /// tracking, migration queues, …).
+    fn absorb(
+        &mut self,
+        proposal: Self::Proposal,
+        vetted: &[(Self::Item, Verdict)],
+        accepted: bool,
+    );
+}
+
+/// Run the §3.4 negotiation loop: up to `max_rounds` rounds of propose →
+/// vet → feed-back-rejections, stopping early when a non-empty proposal
+/// is accepted in full or the deadline expires. An empty proposal never
+/// self-accepts — later rounds keep the leftover budget and a real
+/// chance to propose.
+pub fn negotiate<L: CoopLayer>(
+    layer: &mut L,
+    max_rounds: u32,
+    deadline: Deadline,
+) -> NegotiationOutcome {
+    let mut outcome = NegotiationOutcome::default();
+    for round in 0..max_rounds {
+        if deadline.expired() {
+            break;
+        }
+        let round_deadline = Deadline::after(deadline.remaining().mul_f64(ROUND_BUDGET_FRACTION));
+        let proposal = layer.propose(round, round_deadline);
+        let items = layer.items(&proposal);
+        let verdicts = layer.vet(&proposal, &items);
+        debug_assert_eq!(items.len(), verdicts.len(), "one verdict per item");
+        let vetted: Vec<(L::Item, Verdict)> = items.into_iter().zip(verdicts).collect();
+
+        let mut rejects = RejectCounts::default();
+        let mut avoids_added = 0usize;
+        for (item, verdict) in &vetted {
+            match verdict {
+                Verdict::Accept => {}
+                Verdict::Reject(reason) | Verdict::RejectTransition(reason) => {
+                    rejects.count(*reason);
+                    if layer.feed_back(item, verdict) {
+                        avoids_added += 1;
+                    }
+                }
+            }
+        }
+        let accepted = !vetted.is_empty() && rejects.total() == 0;
+        outcome.rounds.push(RoundTelemetry {
+            round,
+            proposed: vetted.len(),
+            rejects,
+            avoids_added,
+            score: layer.score(&proposal),
+        });
+        layer.absorb(proposal, &vetted, accepted);
+        if accepted {
+            outcome.fully_accepted = true;
+            break;
+        }
+    }
+    outcome
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_record_keeps_age_renew_resets_it() {
+        let mut reg: AvoidRegistry<u32> = AvoidRegistry::new(2);
+        assert!(reg.record(7));
+        assert!(!reg.record(7), "re-recording an active edge is not new");
+        reg.age(); // age 1
+        reg.age(); // age 2 (still <= decay)
+        assert!(reg.avoided(&7));
+        // record keeps age 2 → next aging expires it.
+        reg.record(7);
+        assert_eq!(reg.age().expired, vec![7]);
+        assert!(reg.is_empty());
+
+        // renew resets: the same sequence with renew survives.
+        reg.renew(7);
+        reg.age();
+        reg.age();
+        assert!(!reg.renew(7), "renewing an active edge is not new");
+        assert!(reg.age().expired.is_empty(), "renew restarted the window");
+        assert!(reg.avoided(&7));
+    }
+
+    #[test]
+    fn decay_zero_expires_on_next_aging() {
+        let mut reg: AvoidRegistry<u32> = AvoidRegistry::new(0);
+        reg.record(1);
+        reg.record(2);
+        let aged = reg.age();
+        assert_eq!(aged.expired, vec![1, 2]);
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn escalation_fires_exactly_once_per_threshold() {
+        let mut reg: AvoidRegistry<u32> = AvoidRegistry::with_escalation(0, 3);
+        let mut signals = 0;
+        for cycle in 1..=7 {
+            reg.record(5);
+            let aged = reg.age();
+            assert_eq!(aged.expired, vec![5], "cycle {cycle}");
+            signals += aged.escalated.len();
+            // 3 expiries → 1 signal; 6 expiries → 2 signals.
+            assert_eq!(signals, (cycle / 3) as usize, "cycle {cycle}");
+        }
+        // A registry without escalation never signals.
+        let mut off: AvoidRegistry<u32> = AvoidRegistry::new(0);
+        for _ in 0..10 {
+            off.record(5);
+            assert!(off.age().escalated.is_empty());
+        }
+    }
+
+    #[test]
+    fn retain_keys_drops_edges_and_escalation_counters() {
+        let mut reg: AvoidRegistry<(u32, u32)> = AvoidRegistry::with_escalation(0, 2);
+        reg.record((1, 0));
+        reg.record((2, 0));
+        reg.age(); // both expire once (counters at 1)
+        reg.record((1, 0));
+        reg.record((2, 0));
+        reg.retain_keys(|(app, _)| *app != 1);
+        assert!(!reg.avoided(&(1, 0)));
+        let aged = reg.age();
+        // (2,0) hits its second expiry and escalates; (1,0)'s counter was
+        // purged with its edge, so a re-added (1,0) starts from scratch.
+        assert_eq!(aged.escalated, vec![(2, 0)]);
+        reg.record((1, 0));
+        assert!(reg.age().escalated.is_empty(), "counter was reset by retain_keys");
+    }
+
+    #[test]
+    fn escalation_boost_is_exact_zero_for_no_signals() {
+        assert_eq!(escalation_boost(0).to_bits(), 0.0f64.to_bits());
+        assert!(escalation_boost(2) > escalation_boost(1));
+    }
+
+    #[test]
+    fn reject_counts_tally_by_reason() {
+        let mut c = RejectCounts::default();
+        c.count(RejectReason::Proximity { achievable_ms: 50.0 });
+        c.count(RejectReason::TransitionLatency { p99_ms: 200.0 });
+        c.count(RejectReason::Packing);
+        c.count(RejectReason::Capacity);
+        c.count(RejectReason::Routability);
+        c.count(RejectReason::Packing);
+        assert_eq!(c.total(), 6);
+        assert_eq!(c.packing, 2);
+        let mut sum = RejectCounts::default();
+        sum.add(&c);
+        sum.add(&c);
+        assert_eq!(sum.total(), 12);
+        let j = c.to_json().to_string();
+        assert!(j.contains("packing"));
+    }
+
+    /// A toy layer: proposes `round + 1` items (as [`Proposal`]-keyed
+    /// units); the vetter rejects every item whose key is below the
+    /// threshold and the layer avoids the rejected keys next round.
+    /// Accepts once nothing is rejected.
+    struct ToyLayer {
+        reject_below: u32,
+        avoids: AvoidRegistry<u32>,
+        accepted: Option<Vec<u32>>,
+    }
+
+    impl CoopLayer for ToyLayer {
+        type Proposal = Vec<u32>;
+        type Item = Proposal<u32>;
+
+        fn propose(&mut self, round: u32, _d: Deadline) -> Vec<u32> {
+            (0..=round).filter(|v| !self.avoids.avoided(v)).collect()
+        }
+        fn items(&self, p: &Vec<u32>) -> Vec<Proposal<u32>> {
+            p.iter().map(|&key| Proposal { key }).collect()
+        }
+        fn vet(&mut self, _p: &Vec<u32>, items: &[Proposal<u32>]) -> Vec<Verdict> {
+            items
+                .iter()
+                .map(|item| {
+                    if item.key < self.reject_below {
+                        Verdict::Reject(RejectReason::Capacity)
+                    } else {
+                        Verdict::Accept
+                    }
+                })
+                .collect()
+        }
+        fn feed_back(&mut self, item: &Proposal<u32>, _v: &Verdict) -> bool {
+            self.avoids.record(item.key)
+        }
+        fn score(&self, p: &Vec<u32>) -> f64 {
+            p.len() as f64
+        }
+        fn absorb(&mut self, p: Vec<u32>, _vetted: &[(Proposal<u32>, Verdict)], accepted: bool) {
+            if accepted {
+                self.accepted = Some(p);
+            }
+        }
+    }
+
+    #[test]
+    fn negotiate_converges_by_avoiding_rejections() {
+        let mut layer = ToyLayer {
+            reject_below: 2,
+            avoids: AvoidRegistry::new(8),
+            accepted: None,
+        };
+        let out = negotiate(&mut layer, 8, Deadline::unbounded());
+        assert!(out.fully_accepted);
+        // Round 0 proposes {0} (rejected), round 1 {1} (0 avoided,
+        // 1 rejected), round 2 {2} — accepted.
+        assert_eq!(out.rounds.len(), 3);
+        assert_eq!(layer.accepted.as_deref(), Some(&[2][..]));
+        assert_eq!(out.rounds[0].rejects.capacity, 1);
+        assert_eq!(out.rounds[0].avoids_added, 1);
+        assert_eq!(out.rounds[2].rejects.total(), 0);
+    }
+
+    #[test]
+    fn negotiate_empty_proposals_never_self_accept() {
+        // reject_below > every proposable value: all non-empty proposals
+        // reject, and once everything is avoided the proposals go empty —
+        // the loop must run to its round limit without accepting.
+        let mut layer = ToyLayer {
+            reject_below: u32::MAX,
+            avoids: AvoidRegistry::new(8),
+            accepted: None,
+        };
+        let out = negotiate(&mut layer, 5, Deadline::unbounded());
+        assert!(!out.fully_accepted);
+        assert_eq!(out.rounds.len(), 5);
+        assert!(layer.accepted.is_none());
+
+        // Every value proposable in rounds 0..2 is now avoided, so the
+        // re-run's proposals are EMPTY — and an empty proposal must not
+        // self-accept either.
+        let out = negotiate(&mut layer, 3, Deadline::unbounded());
+        assert!(!out.fully_accepted);
+        assert_eq!(out.rounds.len(), 3);
+        assert!(out.rounds.iter().all(|r| r.proposed == 0 && r.rejects.total() == 0));
+        assert!(layer.accepted.is_none());
+    }
+
+    #[test]
+    fn negotiate_respects_the_deadline_and_round_limit() {
+        let mut layer = ToyLayer {
+            reject_below: u32::MAX,
+            avoids: AvoidRegistry::new(8),
+            accepted: None,
+        };
+        let out = negotiate(&mut layer, 3, Deadline::unbounded());
+        assert_eq!(out.rounds.len(), 3, "round limit");
+        let out = negotiate(&mut layer, 100, Deadline::after_ms(0));
+        assert!(out.rounds.is_empty(), "expired deadline runs no rounds");
+    }
+}

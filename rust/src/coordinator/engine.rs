@@ -27,12 +27,25 @@
 //! # Avoid-constraint decay
 //!
 //! The co-operation protocol's avoid edges used to die with the round's
-//! throwaway problem. The engine now keeps them in a registry: an edge
-//! added in round r stays in force for the next `avoid_decay` rounds
-//! (`SptlbConfig::avoid_decay`; 0 = legacy, die immediately) and then
-//! expires, returning the tier to the app's allowed set. Both engine
-//! modes share the registry code, so decay does not break equivalence.
+//! throwaway problem. The engine keeps them in the hierarchy-wide
+//! [`AvoidRegistry`] kernel (`crate::coop` — the same store the global
+//! scheduler uses one level up): an edge added in round r stays in force
+//! for the next `avoid_decay` rounds (`SptlbConfig::avoid_decay`; 0 =
+//! legacy, die immediately) and then expires, returning the tier to the
+//! app's allowed set. Both engine modes share the registry code, so
+//! decay does not break equivalence.
+//!
+//! # Escalation
+//!
+//! An avoid edge that keeps coming back — expiring
+//! [`crate::coop::ESCALATE_AFTER`] times because the protocol re-rejects
+//! the same placement every window — raises one *escalation signal*: a
+//! pressure hint the layer above (the global scheduler) reads through
+//! [`FleetEngine::take_escalations`] and folds into its region-pressure
+//! view. Escalation never touches the round's problem, so it cannot
+//! perturb the equivalence contract.
 
+use crate::coop::{AvoidRegistry, ESCALATE_AFTER};
 use crate::coordinator::fleet::{FleetDelta, FleetState};
 use crate::forecast::{ForecastConfig, HistoryStore};
 use crate::metadata::MetadataStore;
@@ -77,7 +90,6 @@ impl EngineMode {
 /// Long-lived engine state (see module docs).
 pub struct FleetEngine {
     pub mode: EngineMode,
-    decay: u32,
     collect_seed: u64,
     // ---- incremental-mode caches (unused by Rebuild) ----
     store: MetadataStore,
@@ -89,9 +101,14 @@ pub struct FleetEngine {
     /// Endpoints scraped in the last round (observability: the
     /// incrementality win, vs fleet size for the rebuild engine).
     pub last_scraped: usize,
-    // ---- avoid-constraint registry (shared by both modes) ----
-    avoids: BTreeMap<(AppId, TierId), u32>,
-    forbidden: BTreeMap<(TierId, TierId), u32>,
+    // ---- avoid-constraint registries (shared by both modes; the
+    // decay/expiry semantics live in the coop kernel) ----
+    avoids: AvoidRegistry<(AppId, TierId)>,
+    forbidden: AvoidRegistry<(TierId, TierId)>,
+    /// Escalation signals the avoid registry raised this round.
+    last_escalations: u32,
+    /// Signals accumulated since the layer above last consumed them.
+    escalations_pending: u32,
     // ---- forecast subsystem (shared by both modes) ----
     /// Forecast knobs; `forecaster == None` keeps every prediction path
     /// dormant and the engine byte-for-byte reactive.
@@ -135,7 +152,6 @@ impl FleetEngine {
         let history = HistoryStore::new(forecast.history);
         Self {
             mode,
-            decay: base.avoid_decay,
             collect_seed,
             store: MetadataStore::new(),
             collector: IncrementalCollector::new(
@@ -147,8 +163,10 @@ impl FleetEngine {
             loads: Vec::new(),
             adoption_dirty: BTreeSet::new(),
             last_scraped: 0,
-            avoids: BTreeMap::new(),
-            forbidden: BTreeMap::new(),
+            avoids: AvoidRegistry::with_escalation(base.avoid_decay, ESCALATE_AFTER),
+            forbidden: AvoidRegistry::new(base.avoid_decay),
+            last_escalations: 0,
+            escalations_pending: 0,
             forecast,
             history,
             forecasts: BTreeMap::new(),
@@ -165,6 +183,27 @@ impl FleetEngine {
     /// Active forbidden tier→tier transitions (same decay registry).
     pub fn active_forbidden(&self) -> Vec<(TierId, TierId)> {
         self.forbidden.keys().copied().collect()
+    }
+
+    /// Live avoid edges: point (app, tier) avoids plus forbidden
+    /// transitions still in their decay window — O(1), the per-round
+    /// telemetry counter.
+    pub fn avoid_edge_count(&self) -> usize {
+        self.avoids.len() + self.forbidden.len()
+    }
+
+    /// Escalation signals the avoid registry raised this round (a
+    /// persistent placement conflict outlived its decay window
+    /// [`ESCALATE_AFTER`] times) — the per-round telemetry value.
+    pub fn last_escalations(&self) -> u32 {
+        self.last_escalations
+    }
+
+    /// Drain the escalation signals accumulated since the layer above
+    /// last read them — the global scheduler folds these into its
+    /// region-pressure view each planning round.
+    pub fn take_escalations(&mut self) -> u32 {
+        std::mem::take(&mut self.escalations_pending)
     }
 
     /// Is the forecasting subsystem feeding the schedulers?
@@ -324,7 +363,7 @@ impl FleetEngine {
     ) -> (BalanceReport, Vec<Move>) {
         // Registry upkeep: drop departed apps' edges, age the rest.
         for id in &delta.departed {
-            self.avoids.retain(|(a, _), _| a != id);
+            self.avoids.retain_keys(|(a, _)| a != id);
         }
         let expired = self.age_registry();
 
@@ -510,26 +549,17 @@ impl FleetEngine {
         )
     }
 
-    /// Age the registry by one round and drop expired edges. Returns the
-    /// apps whose allowed sets must be restored (some edge expired).
+    /// Age both registries by one round (the decay/expiry semantics live
+    /// in [`AvoidRegistry`]). Returns the apps whose allowed sets must be
+    /// restored (some edge expired), and latches this round's escalation
+    /// signals for [`FleetEngine::last_escalations`] /
+    /// [`FleetEngine::take_escalations`].
     fn age_registry(&mut self) -> BTreeSet<AppId> {
-        let decay = self.decay;
-        let mut expired_apps = BTreeSet::new();
-        for ((app, tier), age) in std::mem::take(&mut self.avoids) {
-            let age = age.saturating_add(1);
-            if age <= decay {
-                self.avoids.insert((app, tier), age);
-            } else {
-                expired_apps.insert(app);
-            }
-        }
-        for (edge, age) in std::mem::take(&mut self.forbidden) {
-            let age = age.saturating_add(1);
-            if age <= decay {
-                self.forbidden.insert(edge, age);
-            }
-        }
-        expired_apps
+        let aged = self.avoids.age();
+        self.last_escalations = aged.escalated.len() as u32;
+        self.escalations_pending = self.escalations_pending.saturating_add(self.last_escalations);
+        self.forbidden.age();
+        aged.expired.into_iter().map(|(app, _)| app).collect()
     }
 }
 
@@ -537,8 +567,8 @@ impl FleetEngine {
 /// edges, and install the active forbidden transitions. Shared verbatim
 /// by both engine modes so decayed constraints cannot break equivalence.
 fn apply_avoid_registry(
-    avoids: &BTreeMap<(AppId, TierId), u32>,
-    forbidden: &BTreeMap<(TierId, TierId), u32>,
+    avoids: &AvoidRegistry<(AppId, TierId)>,
+    forbidden: &AvoidRegistry<(TierId, TierId)>,
     problem: &mut Problem,
     state: &FleetState,
     extra_reset: &BTreeSet<AppId>,
@@ -575,10 +605,11 @@ fn effective_allowed(mut base: Vec<TierId>, avoided: &[TierId]) -> Vec<TierId> {
 
 /// Record every avoid edge / forbidden transition present in the solved
 /// problem that the registry does not know yet (age 0: in force for the
-/// next `avoid_decay` rounds).
+/// next `avoid_decay` rounds). [`AvoidRegistry::record`] keeps an active
+/// edge's age — re-observing a constraint is not a fresh rejection.
 fn harvest_registry(
-    avoids: &mut BTreeMap<(AppId, TierId), u32>,
-    forbidden: &mut BTreeMap<(TierId, TierId), u32>,
+    avoids: &mut AvoidRegistry<(AppId, TierId)>,
+    forbidden: &mut AvoidRegistry<(TierId, TierId)>,
     problem: &Problem,
     state: &FleetState,
 ) {
@@ -591,12 +622,12 @@ fn harvest_registry(
         }
         for t in &base {
             if !papp.allowed.contains(t) {
-                avoids.entry((id, *t)).or_insert(0);
+                avoids.record((id, *t));
             }
         }
     }
     for edge in &problem.forbidden_transitions {
-        forbidden.entry(*edge).or_insert(0);
+        forbidden.record(*edge);
     }
 }
 
@@ -630,12 +661,31 @@ mod tests {
     fn registry_ages_and_expires() {
         let base = SptlbConfig { avoid_decay: 2, ..SptlbConfig::default() };
         let mut engine = FleetEngine::new(EngineMode::Incremental, &base);
-        engine.avoids.insert((AppId(1), TierId(0)), 0);
+        engine.avoids.record((AppId(1), TierId(0)));
         assert!(engine.age_registry().is_empty(), "age 1 <= decay 2");
         assert!(engine.age_registry().is_empty(), "age 2 <= decay 2");
         let expired = engine.age_registry();
         assert_eq!(expired.into_iter().collect::<Vec<_>>(), vec![AppId(1)]);
         assert!(engine.avoids.is_empty());
+    }
+
+    #[test]
+    fn persistent_expiries_escalate_exactly_once_per_threshold() {
+        // decay 0: an edge re-recorded every round expires every round;
+        // after ESCALATE_AFTER expiries exactly one signal is raised and
+        // the counter restarts.
+        let base = SptlbConfig::default();
+        let mut engine = FleetEngine::new(EngineMode::Incremental, &base);
+        let mut signals = 0u32;
+        for cycle in 1..=2 * ESCALATE_AFTER {
+            engine.avoids.record((AppId(7), TierId(1)));
+            engine.age_registry();
+            signals += engine.last_escalations();
+            assert_eq!(signals, cycle / ESCALATE_AFTER, "cycle {cycle}");
+        }
+        assert_eq!(engine.take_escalations(), 2, "pending signals drain once");
+        assert_eq!(engine.take_escalations(), 0);
+        assert_eq!(engine.last_escalations(), 1, "the final cycle raised one signal");
     }
 
     #[test]
@@ -728,8 +778,8 @@ mod tests {
     fn decay_zero_expires_immediately() {
         let base = SptlbConfig::default();
         let mut engine = FleetEngine::new(EngineMode::Incremental, &base);
-        engine.avoids.insert((AppId(3), TierId(2)), 0);
-        engine.forbidden.insert((TierId(0), TierId(1)), 0);
+        engine.avoids.record((AppId(3), TierId(2)));
+        engine.forbidden.record((TierId(0), TierId(1)));
         let expired = engine.age_registry();
         assert!(expired.contains(&AppId(3)));
         assert!(engine.avoids.is_empty());

@@ -23,6 +23,7 @@ pub use multiregion::{
     MultiRegionMetrics, MultiRegionRound, RegionExecution,
 };
 
+use crate::coop::RejectCounts;
 use crate::forecast::ForecastConfig;
 use crate::model::{App, Assignment, FleetEvent, ResourceVec, Tier};
 use crate::network::LatencyMatrix;
@@ -94,6 +95,18 @@ pub struct RoundRecord {
     /// round's registered demands (NaN → JSON null while forecasting is
     /// off or before the first comparison).
     pub forecast_smape: f64,
+    /// §3.4 negotiation rounds the SPTLB ran this round (0 under the
+    /// no/w_cnst variants, which skip the protocol).
+    pub coop_rounds: u32,
+    /// Negotiation rejections this round, by reason (the co-op kernel's
+    /// uniform telemetry).
+    pub coop_rejects: RejectCounts,
+    /// Live avoid edges after the round: point (app, tier) avoids plus
+    /// forbidden transitions still in their decay window.
+    pub avoid_edges: usize,
+    /// Escalation signals the avoid registry raised this round
+    /// (persistent rejections that outlived their decay window).
+    pub escalations: u32,
 }
 
 /// Bitwise equality on the float fields — the repo's determinism pins
@@ -113,6 +126,10 @@ impl PartialEq for RoundRecord {
             && self.ticks_skipped == other.ticks_skipped
             && self.breach_tiers == other.breach_tiers
             && self.forecast_smape.to_bits() == other.forecast_smape.to_bits()
+            && self.coop_rounds == other.coop_rounds
+            && self.coop_rejects == other.coop_rejects
+            && self.avoid_edges == other.avoid_edges
+            && self.escalations == other.escalations
     }
 }
 
@@ -130,6 +147,10 @@ impl RoundRecord {
             ("ticks_skipped", Json::num(self.ticks_skipped as f64)),
             ("breach_tiers", Json::num(self.breach_tiers as f64)),
             ("forecast_smape", Json::num(self.forecast_smape)),
+            ("coop_rounds", Json::num(self.coop_rounds as f64)),
+            ("coop_rejects", self.coop_rejects.to_json()),
+            ("avoid_edges", Json::num(self.avoid_edges as f64)),
+            ("escalations", Json::num(self.escalations as f64)),
         ])
     }
 }
@@ -146,6 +167,14 @@ pub struct ServiceMetrics {
     pub events: OnlineStats,
     /// Forecast accuracy over rounds where it was measurable.
     pub forecast_smape: OnlineStats,
+    /// §3.4 negotiation rounds per coordinator round.
+    pub coop_rounds: OnlineStats,
+    /// Negotiation rejections per round (all reasons).
+    pub coop_rejects: OnlineStats,
+    /// Live avoid edges per round (point avoids + forbidden transitions).
+    pub avoid_edges: OnlineStats,
+    /// Escalation signals raised across the run.
+    pub escalations: u32,
     pub rounds: u32,
     pub ticks_skipped: u32,
     /// Rounds with at least one pre-solve capacity breach — what the
@@ -175,7 +204,21 @@ impl ServiceMetrics {
             ("moves_per_round", stat(&self.moves)),
             ("events_per_round", stat(&self.events)),
             ("forecast_smape", stat(&self.forecast_smape)),
+            ("coop_rounds", stat(&self.coop_rounds)),
+            ("coop_rejects", stat(&self.coop_rejects)),
+            ("avoid_edges", stat(&self.avoid_edges)),
+            ("escalations", Json::num(self.escalations as f64)),
         ])
+    }
+}
+
+/// Negotiation telemetry of one round's report: (§3.4 rounds run,
+/// rejections by reason). Zero under the no/w_cnst variants, which skip
+/// the protocol entirely.
+pub fn coop_telemetry(report: &BalanceReport) -> (u32, RejectCounts) {
+    match &report.coop {
+        Some(out) => (out.rounds.len() as u32, out.rejects()),
+        None => (0, RejectCounts::default()),
     }
 }
 
@@ -288,6 +331,15 @@ impl Coordinator {
         );
         let breach_tiers = count_breach_tiers(&report.initial_utilization);
         let forecast_smape = self.engine.last_smape();
+        let (coop_rounds, coop_rejects) = coop_telemetry(&report);
+        let avoid_edges = self.engine.avoid_edge_count();
+        let escalations = self.engine.last_escalations();
+        // Single-region mode has no scheduler layer above to consume the
+        // pressure signals: drain them each round (they are logged via
+        // `escalations` above) so a long-lived service never accumulates
+        // a stale backlog that a later-attached global layer would
+        // misread as fresh pressure.
+        self.engine.take_escalations();
         let record = RoundRecord {
             round,
             n_events: events.len(),
@@ -300,6 +352,10 @@ impl Coordinator {
             ticks_skipped,
             breach_tiers,
             forecast_smape,
+            coop_rounds,
+            coop_rejects,
+            avoid_edges,
+            escalations,
         };
         self.metrics.rounds += 1;
         self.metrics.ticks_skipped += ticks_skipped;
@@ -309,6 +365,10 @@ impl Coordinator {
         if forecast_smape.is_finite() {
             self.metrics.forecast_smape.push(forecast_smape);
         }
+        self.metrics.coop_rounds.push(coop_rounds as f64);
+        self.metrics.coop_rejects.push(coop_rejects.total() as f64);
+        self.metrics.avoid_edges.push(avoid_edges as f64);
+        self.metrics.escalations += escalations;
         self.metrics.imbalance.push(worst);
         self.metrics.latency_p99.push(report.p99_latency_ms);
         self.metrics.pipeline_ms.push(report.pipeline_ms);

@@ -31,23 +31,24 @@
 //! [`MultiRegionCoordinator::run_events`] replays a journal with the
 //! global layer off and reproduces every regional decision bit-for-bit.
 
+use crate::coop::{negotiate, CoopLayer, RejectReason, Verdict};
 use crate::coordinator::fleet::FleetState;
 use crate::coordinator::{
-    count_breach_tiers, ticks_skipped_for, EngineMode, FleetEngine, RoundRecord,
+    coop_telemetry, count_breach_tiers, ticks_skipped_for, EngineMode, FleetEngine, RoundRecord,
 };
 use crate::forecast::ForecastConfig;
 use crate::hierarchy::global::{
-    view_pressure, GlobalPolicy, GlobalScheduler, MigrationProposal, RegionView,
+    view_pressure, GlobalPlan, GlobalPolicy, GlobalScheduler, MigrationProposal, RegionView,
 };
 use crate::hierarchy::variants::{worst_imbalance, BALANCED_TARGET};
-use crate::model::{App, AppId, FleetEvent, RegionId, TierId};
+use crate::model::{App, AppId, FleetEvent, RegionId, ResourceVec, TierId};
 use crate::network::{app_tier_latency_ms, LatencyMatrix};
 use crate::sptlb::SptlbConfig;
 use crate::util::json::Json;
 use crate::util::pool::par_map_mut;
 use crate::util::prng::Pcg64;
 use crate::util::stats::OnlineStats;
-use crate::util::timer::Stopwatch;
+use crate::util::timer::{Deadline, Stopwatch};
 use crate::workload::{MultiRegionBed, MultiRegionScenario, ScenarioGen};
 use std::collections::{BTreeMap, BTreeSet};
 use std::time::Duration;
@@ -146,6 +147,11 @@ pub struct MultiRegionRound {
     pub planned: usize,
     /// Proposals the destination regions rejected this round.
     pub rejected: usize,
+    /// Live global-layer avoid edges after this round's planning.
+    pub global_avoids: usize,
+    /// Escalation signals the regions' SPTLBs raised this round
+    /// (persistent §3.4 rejections feeding the pressure view upward).
+    pub escalations: u32,
     /// Post-solve pressure per region.
     pub pressures: Vec<f64>,
 }
@@ -169,6 +175,8 @@ impl MultiRegionRound {
             ),
             ("planned", Json::num(self.planned as f64)),
             ("rejected", Json::num(self.rejected as f64)),
+            ("global_avoids", Json::num(self.global_avoids as f64)),
+            ("escalations", Json::num(self.escalations as f64)),
             (
                 "pressures",
                 Json::arr(self.pressures.iter().map(|&p| Json::num(p))),
@@ -183,6 +191,10 @@ pub struct MultiRegionMetrics {
     pub rounds: u32,
     pub migrations: u32,
     pub migrations_rejected: u32,
+    /// Escalation signals raised across the run (all regions).
+    pub escalations: u32,
+    /// Live global-layer avoid edges per round.
+    pub global_avoids: OnlineStats,
     /// Worst per-region pressure each round.
     pub worst_pressure: OnlineStats,
     /// Moves executed per round, summed over regions.
@@ -206,6 +218,8 @@ impl MultiRegionMetrics {
             ("rounds", Json::num(self.rounds as f64)),
             ("migrations", Json::num(self.migrations as f64)),
             ("migrations_rejected", Json::num(self.migrations_rejected as f64)),
+            ("escalations", Json::num(self.escalations as f64)),
+            ("global_avoids", stat(&self.global_avoids)),
             ("worst_pressure", stat(&self.worst_pressure)),
             ("moves_per_round", stat(&self.moves)),
             ("events_per_round", stat(&self.events)),
@@ -242,6 +256,7 @@ impl RegionRuntime {
             moves.len(),
             worst,
         );
+        let (coop_rounds, coop_rejects) = coop_telemetry(&report);
         RoundRecord {
             round,
             n_events: events.len(),
@@ -254,6 +269,10 @@ impl RegionRuntime {
             ticks_skipped,
             breach_tiers: count_breach_tiers(&report.initial_utilization),
             forecast_smape: self.engine.last_smape(),
+            coop_rounds,
+            coop_rejects,
+            avoid_edges: self.engine.avoid_edge_count(),
+            escalations: self.engine.last_escalations(),
         }
     }
 }
@@ -456,28 +475,25 @@ impl MultiRegionCoordinator {
             // Replay logs the same planning pressure a live round would
             // have recorded: predicted when forecasting is on (each
             // region's engine just ran its forecast_round), else
-            // instantaneous — so replayed and live decision logs match.
-            let pressures = self
+            // instantaneous, with the same escalation signals consumed —
+            // so replayed and live decision logs match.
+            let escalations: Vec<u32> = self
                 .regions
-                .iter()
-                .enumerate()
-                .map(|(r, rt)| {
-                    view_pressure(&RegionView {
-                        region: RegionId(r),
-                        apps: rt.state.apps(),
-                        tiers: rt.state.tiers(),
-                        outage: outage[r],
-                        predicted: rt.engine.predicted_fleet(&rt.state),
-                    })
-                })
+                .iter_mut()
+                .map(|rt| rt.engine.take_escalations())
                 .collect();
+            let views = region_views(&self.regions, &outage, &escalations);
+            let pressures = views.iter().map(view_pressure).collect();
             (0, 0, pressures)
         };
 
         let migrations = std::mem::take(&mut self.staged);
+        let escalations: u32 = records.iter().map(|r| r.escalations).sum();
         self.metrics.rounds += 1;
         self.metrics.migrations += migrations.len() as u32;
         self.metrics.migrations_rejected += rejected as u32;
+        self.metrics.escalations += escalations;
+        self.metrics.global_avoids.push(self.global.active_avoids() as f64);
         self.metrics
             .worst_pressure
             .push(pressures.iter().cloned().fold(0.0, f64::max));
@@ -496,75 +512,42 @@ impl MultiRegionCoordinator {
             migrations,
             planned,
             rejected,
+            global_avoids: self.global.active_avoids(),
+            escalations,
             pressures,
         });
         self.event_log.push(events);
         self.rounds_run += 1;
     }
 
-    /// Global planning + destination vetting. Returns (planned, rejected,
-    /// pressures).
+    /// Global planning + destination vetting: one `negotiate()` round of
+    /// the shared co-op kernel per coordinator round (the §3.4 loop at
+    /// this level is amortized across rounds — the persisted avoid
+    /// registry carries the "re-solve with the constraint" half into the
+    /// next planning round). Returns (planned, rejected, pressures).
     fn global_phase(&mut self, outage: &[bool]) -> (usize, usize, Vec<f64>) {
         self.global.begin_round();
-        let views: Vec<RegionView<'_>> = self
+        // Drain each region's escalation signals: persistent SPTLB-level
+        // rejections surface here as pressure on the region's view.
+        let escalations: Vec<u32> = self
             .regions
-            .iter()
-            .enumerate()
-            .map(|(r, rt)| RegionView {
-                region: RegionId(r),
-                apps: rt.state.apps(),
-                tiers: rt.state.tiers(),
-                outage: outage[r],
-                // Forecast-aware planning: the global layer reads the
-                // region's *predicted* load (None while forecasting is
-                // off — instantaneous pressure, the legacy behaviour).
-                predicted: rt.engine.predicted_fleet(&rt.state),
-            })
+            .iter_mut()
+            .map(|rt| rt.engine.take_escalations())
             .collect();
-        let plan = self.global.propose(&views);
-        drop(views);
-
-        let mut accepted = Vec::new();
-        let mut rejected = Vec::new();
-        // Demand already accepted this round per (region, landing tier),
-        // so a batch of individually-fitting migrants cannot jointly
-        // oversubscribe one destination tier.
-        let mut accepted_load: BTreeMap<(usize, TierId), crate::model::ResourceVec> =
-            BTreeMap::new();
-        // Destination tier utilizations are O(n_apps) to compute; do it
-        // once per destination region, not once per proposal.
-        let mut utils_cache: BTreeMap<usize, Vec<crate::model::ResourceVec>> = BTreeMap::new();
-        for p in plan.proposals {
-            let src = &self.regions[p.from.0];
-            let Some(idx) = src.state.index_of(p.app) else { continue };
-            let app = &src.state.apps()[idx];
-            let dst = &self.regions[p.to.0];
-            let utils = utils_cache.entry(p.to.0).or_insert_with(|| {
-                dst.state
-                    .assignment()
-                    .tier_utilizations(dst.state.apps(), dst.state.tiers())
-            });
-            match vet_migration(dst, app, p.to.0, utils, &accepted_load) {
-                Some((tier, preferred)) => {
-                    *accepted_load
-                        .entry((p.to.0, tier))
-                        .or_insert(crate::model::ResourceVec::ZERO) += app.demand;
-                    accepted.push(QueuedMigration {
-                        app: p.app,
-                        from: p.from,
-                        to: p.to,
-                        preferred,
-                    });
-                }
-                None => rejected.push(p),
-            }
-        }
-        for p in &rejected {
-            self.global.reject(p);
-        }
-        let planned = accepted.len();
-        self.pending = accepted;
-        (planned, rejected.len(), plan.pressures)
+        let mut session = GlobalSession {
+            regions: &self.regions,
+            global: &mut self.global,
+            outage,
+            escalations,
+            landings: Vec::new(),
+            pressures: Vec::new(),
+            accepted: Vec::new(),
+        };
+        let outcome = negotiate(&mut session, 1, Deadline::unbounded());
+        let rejected = outcome.rounds.first().map_or(0, |r| r.rejects.total());
+        let planned = session.accepted.len();
+        self.pending = std::mem::take(&mut session.accepted);
+        (planned, rejected, std::mem::take(&mut session.pressures))
     }
 
     /// Decision log as JSON (persisted by `serve --regions N --log`).
@@ -611,6 +594,141 @@ pub fn parse_multiregion_event_log(j: &Json) -> Option<Vec<Vec<Vec<FleetEvent>>>
         .collect()
 }
 
+/// Build the global layer's per-region views (escalation signals
+/// pre-drained by the caller). Shared by the live planning path and the
+/// replay pressure-logging path so the two can never drift: predicted
+/// load when forecasting is on (`None` keeps the legacy instantaneous
+/// pressure), plus each region's escalation signals.
+fn region_views<'a>(
+    regions: &'a [RegionRuntime],
+    outage: &'a [bool],
+    escalations: &[u32],
+) -> Vec<RegionView<'a>> {
+    regions
+        .iter()
+        .enumerate()
+        .map(|(r, rt)| RegionView {
+            region: RegionId(r),
+            apps: rt.state.apps(),
+            tiers: rt.state.tiers(),
+            outage: outage[r],
+            predicted: rt.engine.predicted_fleet(&rt.state),
+            escalations: escalations[r],
+        })
+        .collect()
+}
+
+/// The global layer's binding into the shared negotiation kernel: the
+/// `GlobalScheduler` proposes a migration plan, every destination region
+/// vets its incoming migrants, and rejections renew edges in the global
+/// avoid registry. This layer runs a single `negotiate()` round per
+/// coordinator round — the re-solve half of the §3.4 loop happens next
+/// coordinator round through the persisted registry.
+struct GlobalSession<'a> {
+    regions: &'a [RegionRuntime],
+    global: &'a mut GlobalScheduler,
+    outage: &'a [bool],
+    /// Per-region escalation signals drained from the engines.
+    escalations: Vec<u32>,
+    /// Per-item landing choices from the last vet pass (`Some` iff the
+    /// verdict was Accept), consumed by `absorb`.
+    landings: Vec<Option<(TierId, RegionId)>>,
+    /// Out: the plan's recorded per-region pressures.
+    pressures: Vec<f64>,
+    /// Out: vetted migrations queued for next round (filled by `absorb`).
+    accepted: Vec<QueuedMigration>,
+}
+
+impl CoopLayer for GlobalSession<'_> {
+    type Proposal = GlobalPlan;
+    type Item = MigrationProposal;
+
+    fn propose(&mut self, _round: u32, _deadline: Deadline) -> GlobalPlan {
+        let views = region_views(self.regions, self.outage, &self.escalations);
+        let plan = self.global.propose(&views);
+        self.pressures = plan.pressures.clone();
+        plan
+    }
+
+    /// The plan's migrations, dropping any whose source app no longer
+    /// exists (defensive: the plan was built from the same states, so
+    /// this filter is a no-op in practice).
+    fn items(&self, plan: &GlobalPlan) -> Vec<MigrationProposal> {
+        plan.proposals
+            .iter()
+            .filter(|p| self.regions[p.from.0].state.index_of(p.app).is_some())
+            .copied()
+            .collect()
+    }
+
+    fn vet(&mut self, _plan: &GlobalPlan, items: &[MigrationProposal]) -> Vec<Verdict> {
+        // Demand already accepted this round per (region, landing tier),
+        // so a batch of individually-fitting migrants cannot jointly
+        // oversubscribe one destination tier.
+        let mut accepted_load: BTreeMap<(usize, TierId), ResourceVec> = BTreeMap::new();
+        // Destination tier utilizations are O(n_apps) to compute; do it
+        // once per destination region, not once per proposal.
+        let mut utils_cache: BTreeMap<usize, Vec<ResourceVec>> = BTreeMap::new();
+        let mut verdicts = Vec::with_capacity(items.len());
+        for p in items {
+            let src = &self.regions[p.from.0];
+            let idx = src.state.index_of(p.app).expect("items are filtered to live apps");
+            let app = &src.state.apps()[idx];
+            let dst = &self.regions[p.to.0];
+            let utils = utils_cache.entry(p.to.0).or_insert_with(|| {
+                dst.state
+                    .assignment()
+                    .tier_utilizations(dst.state.apps(), dst.state.tiers())
+            });
+            match vet_migration(dst, app, p.to.0, utils, &accepted_load) {
+                Ok((tier, preferred)) => {
+                    *accepted_load
+                        .entry((p.to.0, tier))
+                        .or_insert(ResourceVec::ZERO) += app.demand;
+                    self.landings.push(Some((tier, preferred)));
+                    verdicts.push(Verdict::Accept);
+                }
+                Err(reason) => {
+                    self.landings.push(None);
+                    verdicts.push(Verdict::Reject(reason));
+                }
+            }
+        }
+        verdicts
+    }
+
+    fn feed_back(&mut self, p: &MigrationProposal, _verdict: &Verdict) -> bool {
+        self.global.reject(p)
+    }
+
+    /// Worst recorded pressure — the global analogue of a solver score.
+    fn score(&self, plan: &GlobalPlan) -> f64 {
+        plan.pressures.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Queue the vetted proposal's accepted migrations for the next
+    /// coordinator round (the registry carries the rejections into the
+    /// next planning round).
+    fn absorb(
+        &mut self,
+        _plan: GlobalPlan,
+        vetted: &[(MigrationProposal, Verdict)],
+        _accepted: bool,
+    ) {
+        debug_assert_eq!(vetted.len(), self.landings.len(), "one landing slot per item");
+        for ((p, verdict), landing) in vetted.iter().zip(std::mem::take(&mut self.landings)) {
+            if let (Verdict::Accept, Some((_, preferred))) = (verdict, landing) {
+                self.accepted.push(QueuedMigration {
+                    app: p.app,
+                    from: p.from,
+                    to: p.to,
+                    preferred,
+                });
+            }
+        }
+    }
+}
+
 /// Destination-side vetting — the §3.4 co-op handshake one level up. The
 /// destination accepts a migrant only if its own region scheduler can
 /// place it: some SLO-supporting tier must have hard-capacity headroom
@@ -618,26 +736,30 @@ pub fn parse_multiregion_event_log(j: &Json) -> Option<Vec<Vec<Vec<FleetEvent>>>
 /// accepted onto this round (`accepted_load`) — AND pass the
 /// near-data-source proximity test for the migrant's data source
 /// remapped into the destination's micro-region space. Returns the
-/// landing tier and the remapped data source, or `None` (→ a global
-/// avoid constraint).
+/// landing tier and the remapped data source, or the rejection reason
+/// (→ a global avoid constraint).
 fn vet_migration(
     dst: &RegionRuntime,
     app: &App,
     dst_index: usize,
-    utils: &[crate::model::ResourceVec],
-    accepted_load: &BTreeMap<(usize, TierId), crate::model::ResourceVec>,
-) -> Option<(TierId, RegionId)> {
+    utils: &[ResourceVec],
+    accepted_load: &BTreeMap<(usize, TierId), ResourceVec>,
+) -> Result<(TierId, RegionId), RejectReason> {
     let preferred = RegionId(app.preferred_region.0 % dst.latency.n_regions());
     let mut probe = app.clone();
     probe.preferred_region = preferred;
+    let mut any_slo = false;
+    let mut any_fit = false;
+    let mut best_ms = f64::INFINITY;
     for tier in dst.state.tiers() {
         if !tier.supports_slo(app.slo) {
             continue;
         }
+        any_slo = true;
         let pending = accepted_load
             .get(&(dst_index, tier.id))
             .copied()
-            .unwrap_or(crate::model::ResourceVec::ZERO);
+            .unwrap_or(ResourceVec::ZERO);
         let fits = (0..crate::model::NUM_RESOURCES).all(|k| {
             let cap = tier.capacity.0[k];
             cap > 0.0
@@ -646,11 +768,20 @@ fn vet_migration(
         if !fits {
             continue;
         }
-        if app_tier_latency_ms(&probe, tier, &dst.latency) <= dst.cfg.proximity_budget_ms {
-            return Some((tier.id, preferred));
+        any_fit = true;
+        let achievable = app_tier_latency_ms(&probe, tier, &dst.latency);
+        if achievable <= dst.cfg.proximity_budget_ms {
+            return Ok((tier.id, preferred));
         }
+        best_ms = best_ms.min(achievable);
     }
-    None
+    Err(if !any_slo {
+        RejectReason::Routability
+    } else if any_fit {
+        RejectReason::Proximity { achievable_ms: best_ms }
+    } else {
+        RejectReason::Capacity
+    })
 }
 
 #[cfg(test)]

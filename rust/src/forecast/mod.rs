@@ -32,7 +32,6 @@
 //! empty history forecasts zero.
 
 use crate::model::{AppId, ResourceVec, NUM_RESOURCES};
-use std::collections::BTreeMap;
 
 /// EWMA smoothing factor (weight of the newest observation).
 const EWMA_ALPHA: f64 = 0.4;
@@ -183,52 +182,103 @@ impl ForecastConfig {
     }
 }
 
-/// Per-app demand-history ring buffers, keyed by fleet-stable id. An
-/// entry is appended only when an event *touched* the app (arrival,
+/// Sentinel for "this app id has no slot".
+const NO_SLOT: u32 = u32::MAX;
+
+/// Per-app demand-history ring buffers, slot-indexed by fleet-stable id.
+/// An entry is appended only when an event *touched* the app (arrival,
 /// drift) — the incremental capture the engine relies on — so a steady
 /// app holds one observation and costs nothing per round.
+///
+/// # Layout
+///
+/// The hot dirty-set path (`observe`/`series` every round) does **no
+/// tree lookup and no per-append reallocation**: app ids are monotonic
+/// small integers, so `index[id]` maps straight to a slot (a dense id →
+/// slot table, `u32::MAX` = none), and each slot's buffer is
+/// preallocated to `2·cap` on first use. A slot grows to at most
+/// `2·cap − 1` entries before one bulk wrap-around drain, and
+/// [`HistoryStore::series`] only ever exposes the last `cap` — window
+/// semantics are identical to a per-push shift without its O(cap) cost
+/// on every observation (bit-identical to the old `BTreeMap<AppId,
+/// Vec<_>>` store; pinned below). Departed apps' slots are recycled
+/// through a free list, so long-churn runs don't leak buffers.
 #[derive(Debug, Clone)]
 pub struct HistoryStore {
     cap: usize,
-    series: BTreeMap<AppId, Vec<ResourceVec>>,
+    /// App id → slot (`NO_SLOT` = none). Grows to the max id ever seen.
+    index: Vec<u32>,
+    /// Slot-indexed ring buffers; a freed slot keeps its allocation.
+    slots: Vec<Vec<ResourceVec>>,
+    /// Recycled slots awaiting reuse.
+    free: Vec<u32>,
 }
 
 impl HistoryStore {
     pub fn new(cap: usize) -> Self {
-        Self { cap: cap.max(2), series: BTreeMap::new() }
+        Self { cap: cap.max(2), index: Vec::new(), slots: Vec::new(), free: Vec::new() }
     }
 
-    /// Append an observation for `id`. Eviction is amortized O(1): the
-    /// backing vector grows to at most `2·cap − 1` entries before one
-    /// bulk drain, and [`HistoryStore::series`] only ever exposes the
-    /// last `cap` — window semantics are identical to a per-push shift
-    /// without its O(cap) cost on every observation.
-    pub fn observe(&mut self, id: AppId, demand: ResourceVec) {
-        let cap = self.cap;
-        let s = self.series.entry(id).or_default();
-        s.push(demand);
-        if s.len() >= 2 * cap {
-            s.drain(..s.len() - cap);
+    fn slot_of(&self, id: AppId) -> Option<usize> {
+        match self.index.get(id.0) {
+            Some(&s) if s != NO_SLOT => Some(s as usize),
+            _ => None,
         }
     }
 
-    /// Drop a departed app's series.
+    /// Append an observation for `id` — O(1), allocation-free once the
+    /// app's slot exists (amortized O(1) across the bulk drain).
+    pub fn observe(&mut self, id: AppId, demand: ResourceVec) {
+        let cap = self.cap;
+        let slot = match self.slot_of(id) {
+            Some(s) => s,
+            None => {
+                if self.index.len() <= id.0 {
+                    self.index.resize(id.0 + 1, NO_SLOT);
+                }
+                let s = match self.free.pop() {
+                    Some(s) => s as usize,
+                    None => {
+                        self.slots.push(Vec::with_capacity(2 * cap));
+                        self.slots.len() - 1
+                    }
+                };
+                self.index[id.0] = s as u32;
+                s
+            }
+        };
+        let buf = &mut self.slots[slot];
+        buf.push(demand);
+        if buf.len() >= 2 * cap {
+            buf.drain(..buf.len() - cap);
+        }
+    }
+
+    /// Drop a departed app's series; the slot (and its allocation) is
+    /// recycled for the next arrival.
     pub fn remove(&mut self, id: AppId) {
-        self.series.remove(&id);
+        if let Some(s) = self.slot_of(id) {
+            self.index[id.0] = NO_SLOT;
+            self.slots[s].clear();
+            self.free.push(s as u32);
+        }
     }
 
     /// The last `cap` observations recorded for `id`, oldest first
     /// (empty if never observed).
     pub fn series(&self, id: AppId) -> &[ResourceVec] {
-        match self.series.get(&id) {
-            Some(v) => &v[v.len().saturating_sub(self.cap)..],
+        match self.slot_of(id) {
+            Some(s) => {
+                let buf = &self.slots[s];
+                &buf[buf.len().saturating_sub(self.cap)..]
+            }
             None => &[],
         }
     }
 
     /// Apps with at least one observation.
     pub fn n_apps(&self) -> usize {
-        self.series.len()
+        self.slots.len() - self.free.len()
     }
 }
 
@@ -357,6 +407,108 @@ mod tests {
         assert!(h.series(AppId(2)).is_empty());
         h.remove(AppId(1));
         assert_eq!(h.n_apps(), 0);
+    }
+
+    #[test]
+    fn slot_store_is_bit_identical_to_the_legacy_tree_store() {
+        // The slot-indexed store must reproduce the old
+        // `BTreeMap<AppId, Vec<ResourceVec>>` store exactly — same
+        // windows, same forecasts to the bit — across arbitrary
+        // observe/remove churn (including id reuse of freed slots by
+        // later arrivals and re-observation after removal).
+        use std::collections::BTreeMap;
+
+        struct LegacyStore {
+            cap: usize,
+            series: BTreeMap<AppId, Vec<ResourceVec>>,
+        }
+        impl LegacyStore {
+            fn observe(&mut self, id: AppId, demand: ResourceVec) {
+                let cap = self.cap;
+                let s = self.series.entry(id).or_default();
+                s.push(demand);
+                if s.len() >= 2 * cap {
+                    s.drain(..s.len() - cap);
+                }
+            }
+            fn series(&self, id: AppId) -> &[ResourceVec] {
+                match self.series.get(&id) {
+                    Some(v) => &v[v.len().saturating_sub(self.cap)..],
+                    None => &[],
+                }
+            }
+        }
+
+        forall(
+            30,
+            |rng| {
+                let cap = rng.range(2, 8);
+                let ops: Vec<(bool, usize, f64)> = (0..rng.range(10, 120))
+                    .map(|_| (rng.chance(0.15), rng.range(0, 12), rng.uniform(0.0, 50.0)))
+                    .collect();
+                (cap, ops)
+            },
+            |(cap, ops)| {
+                let cap = *cap;
+                let mut new = HistoryStore::new(cap);
+                let mut old = LegacyStore { cap: cap.max(2), series: BTreeMap::new() };
+                for (remove, id, v) in ops {
+                    let id = AppId(*id);
+                    if *remove {
+                        new.remove(id);
+                        old.series.remove(&id);
+                    } else {
+                        let d = ResourceVec::splat(*v);
+                        new.observe(id, d);
+                        old.observe(id, d);
+                    }
+                }
+                for raw in 0..12 {
+                    let id = AppId(raw);
+                    if new.series(id) != old.series(id) {
+                        return Check::fail(&format!("series diverged for app {raw}"));
+                    }
+                    for k in ForecasterKind::ALL {
+                        let a = k.forecast(new.series(id), 3, 4);
+                        let b = k.forecast(old.series(id), 3, 4);
+                        for r in 0..NUM_RESOURCES {
+                            if a.0[r].to_bits() != b.0[r].to_bits() {
+                                return Check::fail(&format!(
+                                    "{} forecast diverged for app {raw}",
+                                    k.name()
+                                ));
+                            }
+                        }
+                    }
+                }
+                if new.n_apps() != old.series.len() {
+                    return Check::fail("n_apps diverged");
+                }
+                Check::pass()
+            },
+        );
+    }
+
+    #[test]
+    fn slot_store_recycles_freed_slots() {
+        let mut h = HistoryStore::new(3);
+        for i in 0..4 {
+            h.observe(AppId(i), ResourceVec::splat(i as f64));
+        }
+        assert_eq!(h.n_apps(), 4);
+        h.remove(AppId(1));
+        h.remove(AppId(2));
+        assert_eq!(h.n_apps(), 2);
+        assert!(h.series(AppId(1)).is_empty());
+        // New arrivals reuse the freed slots; old series never bleed in.
+        h.observe(AppId(10), ResourceVec::splat(99.0));
+        h.observe(AppId(11), ResourceVec::splat(98.0));
+        assert_eq!(h.n_apps(), 4);
+        assert_eq!(h.series(AppId(10)), &[ResourceVec::splat(99.0)]);
+        assert_eq!(h.series(AppId(11)), &[ResourceVec::splat(98.0)]);
+        // A removed id can be re-observed from scratch.
+        h.observe(AppId(1), ResourceVec::splat(1.5));
+        assert_eq!(h.series(AppId(1)), &[ResourceVec::splat(1.5)]);
     }
 
     #[test]

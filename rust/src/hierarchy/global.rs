@@ -18,8 +18,17 @@
 //! routability, per-tier capacity headroom, the region scheduler's
 //! proximity test); a rejected migration comes back to this layer as an
 //! *avoid constraint* — the same §3.4 feedback mechanism the SPTLB uses
-//! with its region/host schedulers, one level up — and decays after
-//! `avoid_decay` rounds just like the engine's registry.
+//! with its region/host schedulers, one level up. The registry is the
+//! hierarchy-wide [`AvoidRegistry`] kernel (`crate::coop`), keyed
+//! `(app, from, to)` at this level and decaying after `avoid_decay`
+//! rounds exactly like the engine's `(app, tier)` registry below.
+//!
+//! The layer also *listens downward*: a region whose SPTLB keeps
+//! re-rejecting the same placements (an avoid edge that outlives its
+//! decay window repeatedly) raises escalation signals, and
+//! [`view_pressure`] folds them into the region's planning pressure
+//! ([`crate::coop::escalation_boost`]) — a persistently conflicted
+//! region spills even when its raw demand/capacity ratio looks healthy.
 //!
 //! Everything here is deterministic: donors and receivers are ordered by
 //! (pressure, region id), candidates by (normalized demand, app id), so
@@ -27,9 +36,9 @@
 //! sequential-vs-parallel equivalence contract in
 //! `rust/tests/multiregion_equivalence.rs` stands on.
 
+use crate::coop::{escalation_boost, AvoidRegistry};
 use crate::model::{App, AppId, InterRegionMatrix, RegionId, ResourceVec, Tier};
 use crate::util::json::Json;
-use std::collections::BTreeMap;
 
 /// Global-layer balancing policy.
 #[derive(Debug, Clone, PartialEq)]
@@ -127,6 +136,12 @@ pub struct RegionView<'a> {
     /// it, so regions spill *before* the predicted breach; `None` keeps
     /// the legacy instantaneous-pressure behaviour bit-for-bit.
     pub predicted: Option<Vec<ResourceVec>>,
+    /// Escalation signals the region's SPTLB raised since the last
+    /// planning round (persistent §3.4 rejections that outlived their
+    /// decay window repeatedly). Folded into [`view_pressure`] as
+    /// [`crate::coop::escalation_boost`]; 0 keeps the raw pressure
+    /// bit-for-bit.
+    pub escalations: u32,
 }
 
 impl RegionView<'_> {
@@ -147,10 +162,18 @@ impl RegionView<'_> {
 }
 
 /// A view's planning pressure: predicted when a forecast is attached
-/// ([`RegionView::predicted`]), instantaneous otherwise.
+/// ([`RegionView::predicted`]), instantaneous otherwise, plus the
+/// escalation boost for any pressure signals the region's SPTLB raised
+/// (exactly zero when there are none, so escalation-free pressures stay
+/// bit-identical to the raw ratio).
 pub fn view_pressure(v: &RegionView) -> f64 {
     let capacity = v.tiers.iter().fold(ResourceVec::ZERO, |acc, t| acc + t.capacity);
-    pressure_of(&v.planning_total(), &capacity)
+    let base = pressure_of(&v.planning_total(), &capacity);
+    if v.escalations > 0 {
+        base + escalation_boost(v.escalations)
+    } else {
+        base
+    }
 }
 
 /// Worst-resource pressure of an aggregate (demand, capacity) pair.
@@ -199,25 +222,23 @@ pub struct GlobalPlan {
 pub struct GlobalScheduler {
     pub policy: GlobalPolicy,
     pub inter: InterRegionMatrix,
-    /// Avoid registry, §3.4 one level up: (app, from, to) → age in
-    /// rounds. An edge added in round r blocks re-proposing that pairing
-    /// for the next `avoid_decay` rounds, then expires.
-    avoids: BTreeMap<(AppId, RegionId, RegionId), u32>,
+    /// The §3.4 avoid store, one level up: the same [`AvoidRegistry`]
+    /// kernel the engine uses below, keyed (app, from, to). An edge
+    /// added in round r blocks re-proposing that pairing for the next
+    /// `avoid_decay` rounds, then expires.
+    avoids: AvoidRegistry<(AppId, RegionId, RegionId)>,
 }
 
 impl GlobalScheduler {
     pub fn new(policy: GlobalPolicy, inter: InterRegionMatrix) -> Self {
-        Self { policy, inter, avoids: BTreeMap::new() }
+        let avoids = AvoidRegistry::new(policy.avoid_decay);
+        Self { policy, inter, avoids }
     }
 
     /// Age the avoid registry by one round, dropping expired edges.
     /// Mirrors `FleetEngine::age_registry` one level up.
     pub fn begin_round(&mut self) {
-        let decay = self.policy.avoid_decay;
-        self.avoids.retain(|_, age| {
-            *age = age.saturating_add(1);
-            *age <= decay
-        });
+        self.avoids.age();
     }
 
     /// Active avoid edges (observability + tests).
@@ -225,14 +246,15 @@ impl GlobalScheduler {
         self.avoids.len()
     }
 
-    /// Record a destination rejection as an avoid constraint (age 0: in
-    /// force for the next `avoid_decay` rounds).
-    pub fn reject(&mut self, p: &MigrationProposal) {
-        self.avoids.insert((p.app, p.from, p.to), 0);
+    /// Record a destination rejection as an avoid constraint. A fresh
+    /// rejection restarts the decay window ([`AvoidRegistry::renew`]).
+    /// Returns true if the pairing was not already avoided.
+    pub fn reject(&mut self, p: &MigrationProposal) -> bool {
+        self.avoids.renew((p.app, p.from, p.to))
     }
 
     fn avoided(&self, app: AppId, from: RegionId, to: RegionId) -> bool {
-        self.avoids.contains_key(&(app, from, to))
+        self.avoids.avoided(&(app, from, to))
     }
 
     /// Plan this round's migrations. Pure given the views and registry:
@@ -252,7 +274,10 @@ impl GlobalScheduler {
         // receiver or over-drain a donor. Planning demand throughout:
         // predicted when the view carries a forecast, instantaneous
         // otherwise — the destination-vetting path downstream stays
-        // unchanged either way.
+        // unchanged either way. A donor's escalation boost is constant
+        // within the round, so it shifts the drain comparison rather
+        // than the running demand (exactly 0.0 without signals).
+        let boost: Vec<f64> = views.iter().map(|v| escalation_boost(v.escalations)).collect();
         let mut demand: Vec<ResourceVec> = views.iter().map(|v| v.planning_total()).collect();
         let capacity: Vec<ResourceVec> = views
             .iter()
@@ -302,16 +327,24 @@ impl GlobalScheduler {
                 if proposals.len() >= self.policy.max_migrations_per_round {
                     break;
                 }
-                if pressure(&demand[d], &capacity[d]) <= drain_target {
+                // With enough signals the boosted pressure can exceed any
+                // reachable drain target; the per-round migration cap
+                // (checked above) is the explicit bound on how much a
+                // persistently conflicted region sheds per round.
+                if pressure(&demand[d], &capacity[d]) + boost[d] <= drain_target {
                     break; // donor is cool enough, stop draining
                 }
                 // Receivers: coolest admissible first; region id ties.
+                // The sort key matches the admission key below — raw
+                // pressure plus the receiver's own escalation boost — so
+                // a persistently conflicted region is also *ranked* as
+                // hot, not just vetoed at the ceiling.
                 let mut receivers: Vec<usize> = (0..n)
                     .filter(|&r| r != d && !views[r].outage)
                     .collect();
                 receivers.sort_by(|&a, &b| {
-                    pressure(&demand[a], &capacity[a])
-                        .partial_cmp(&pressure(&demand[b], &capacity[b]))
+                    (pressure(&demand[a], &capacity[a]) + boost[a])
+                        .partial_cmp(&(pressure(&demand[b], &capacity[b]) + boost[b]))
                         .unwrap()
                         .then(a.cmp(&b))
                 });
@@ -324,8 +357,13 @@ impl GlobalScheduler {
                     {
                         continue;
                     }
+                    // Admission counts the receiver's own escalation
+                    // boost: a region whose SPTLB keeps rejecting its
+                    // EXISTING placements must not be handed migrants in
+                    // the same round it is being treated as hotter
+                    // (+0.0 without signals — bit-identical admission).
                     let after = demand[r] + moved;
-                    if pressure(&after, &capacity[r]) > self.policy.accept_ceiling {
+                    if pressure(&after, &capacity[r]) + boost[r] > self.policy.accept_ceiling {
                         continue;
                     }
                     demand[r] = after;
@@ -341,6 +379,7 @@ impl GlobalScheduler {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("policy", Json::str(self.policy.name)),
+            ("avoid_decay", Json::num(self.avoids.decay() as f64)),
             ("active_avoids", Json::num(self.avoids.len() as f64)),
         ])
     }
@@ -367,6 +406,7 @@ mod tests {
                 tiers: &b.tiers,
                 outage: outage[r],
                 predicted: None,
+                escalations: 0,
             })
             .collect()
     }
@@ -485,6 +525,40 @@ mod tests {
         );
         assert!(!proactive.proposals.is_empty(), "predicted breach must trigger spillover");
         assert!(proactive.proposals.iter().all(|p| p.from == RegionId(0)));
+    }
+
+    #[test]
+    fn escalation_signals_turn_a_healthy_region_into_a_donor() {
+        // Both regions sit at healthy raw pressure, so the plain plan is
+        // empty; the same views with escalation signals on region 0 must
+        // mark it pressured and spill — a persistent lower-level
+        // rejection altering a global-layer decision.
+        let beds = beds(2);
+        let policy = GlobalPolicy {
+            spill_threshold: 0.95,
+            accept_ceiling: 0.90,
+            latency_budget_ms: 1e9,
+            egress_budget: 1e9,
+            ..GlobalPolicy::spillover()
+        };
+        let sched = scheduler(policy, 2);
+        let calm = sched.propose(&views(&beds, &[false, false]));
+        assert!(calm.proposals.is_empty(), "healthy raw pressure must not spill");
+
+        let mut escalated = views(&beds, &[false, false]);
+        escalated[0].escalations = 4; // boost 4 × ESCALATION_PRESSURE = 1.0
+        let plan = sched.propose(&escalated);
+        assert!(
+            plan.pressures[0] > calm.pressures[0],
+            "escalation must boost the recorded pressure"
+        );
+        assert_eq!(
+            plan.pressures[1].to_bits(),
+            calm.pressures[1].to_bits(),
+            "signal-free regions keep bit-identical pressure"
+        );
+        assert!(!plan.proposals.is_empty(), "escalated region must spill");
+        assert!(plan.proposals.iter().all(|p| p.from == RegionId(0)));
     }
 
     #[test]

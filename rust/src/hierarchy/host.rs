@@ -37,6 +37,18 @@ pub enum HostVerdict {
     Reject,
 }
 
+impl HostVerdict {
+    /// This layer's verdict in the shared co-operation vocabulary
+    /// ([`crate::coop::Verdict`]): a packing failure is a point avoid.
+    pub fn to_coop(self) -> crate::coop::Verdict {
+        use crate::coop::{RejectReason, Verdict};
+        match self {
+            HostVerdict::Accept => Verdict::Accept,
+            HostVerdict::Reject => Verdict::Reject(RejectReason::Packing),
+        }
+    }
+}
+
 /// Host scheduler: per-tier FFD packing feasibility.
 #[derive(Debug, Clone)]
 pub struct HostScheduler {

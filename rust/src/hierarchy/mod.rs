@@ -3,6 +3,10 @@
 //! the three integration variants evaluated in §4.2.2–4.2.3, and the
 //! global layer above the per-region SPTLBs (`global`) that completes
 //! the hierarchy upward with the same feedback mechanism.
+//!
+//! The mechanism itself — propose → vet → reject-as-avoid → re-solve
+//! with decay — is the [`crate::coop`] kernel; `protocol` and `global`
+//! are its two in-tree instantiations (SPTLB level and global level).
 
 pub mod global;
 pub mod host;

@@ -5,10 +5,17 @@
 //! mechanism as C4's SLO avoids) and SPTLB re-solves. "These iterations
 //! continue until SPTLB times out or the number of iterations limit is
 //! reached."
+//!
+//! The round structure itself — budget split, accept test, rejection
+//! feedback, telemetry — lives in the shared [`crate::coop`] kernel;
+//! this module only binds the SPTLB layer's domain into it: a private
+//! `ProtocolSession` implements [`CoopLayer`] with solutions as
+//! proposals, moves as items, and the region/host schedulers as vetters.
 
-use crate::hierarchy::host::{HostScheduler, HostVerdict};
+use crate::coop::{negotiate, CoopLayer, RejectCounts, RoundTelemetry, Verdict};
+use crate::hierarchy::host::HostScheduler;
 use crate::hierarchy::region::{RegionScheduler, RegionVerdict};
-use crate::model::App;
+use crate::model::{App, Assignment, Move, ResourceVec, Tier};
 use crate::rebalancer::local_search::{LocalSearch, LocalSearchConfig, ParallelConfig};
 use crate::rebalancer::optimal::OptimalSearch;
 use crate::rebalancer::problem::Problem;
@@ -23,8 +30,27 @@ pub struct RoundTrace {
     pub proposed_moves: usize,
     pub region_rejects: usize,
     pub host_rejects: usize,
+    /// Rejections by reason — the kernel's uniform telemetry.
+    pub rejects: RejectCounts,
     pub avoid_edges_added: usize,
     pub score: f64,
+}
+
+impl RoundTrace {
+    /// Project the kernel's uniform telemetry into this layer's trace:
+    /// the region scheduler owns proximity + transition rejections, the
+    /// host scheduler owns packing.
+    fn from_telemetry(t: &RoundTelemetry) -> Self {
+        Self {
+            round: t.round,
+            proposed_moves: t.proposed,
+            region_rejects: t.rejects.proximity + t.rejects.transition,
+            host_rejects: t.rejects.packing,
+            rejects: t.rejects,
+            avoid_edges_added: t.avoids_added,
+            score: t.score,
+        }
+    }
 }
 
 /// Protocol outcome.
@@ -36,6 +62,17 @@ pub struct CoopOutcome {
     /// True if every proposed move was accepted by both schedulers.
     pub fully_accepted: bool,
     pub elapsed: Duration,
+}
+
+impl CoopOutcome {
+    /// Total rejections across all rounds, by reason.
+    pub fn rejects(&self) -> RejectCounts {
+        let mut total = RejectCounts::default();
+        for r in &self.rounds {
+            total.add(&r.rejects);
+        }
+        total
+    }
 }
 
 /// Protocol configuration.
@@ -64,6 +101,130 @@ pub struct CoopProtocol {
     pub region: RegionScheduler,
     pub host: HostScheduler,
     pub config: CoopConfig,
+}
+
+/// The SPTLB layer's binding into the shared negotiation kernel: one
+/// `negotiate()` run's mutable state (warm start, best-so-far fallback)
+/// plus borrows of the domain the vetters need.
+struct ProtocolSession<'a> {
+    proto: &'a CoopProtocol,
+    problem: &'a mut Problem,
+    apps: &'a [App],
+    tiers: &'a [Tier],
+    warm_loads: Option<&'a [ResourceVec]>,
+    /// Previous round's proposal minus its rejected moves: avoid edges
+    /// only *remove* options, so it is a strong, feasible warm start.
+    warm_start: Option<Assignment>,
+    /// Best acceptable solution seen so far (the fallback on limit or
+    /// timeout).
+    best: Option<Solution>,
+}
+
+impl CoopLayer for ProtocolSession<'_> {
+    type Proposal = Solution;
+    type Item = Move;
+
+    /// SPTLB solve, warm-started from the previous (cleaned) proposal
+    /// when one exists; any round that solves from `problem.initial` (in
+    /// practice the first) may reuse the caller's cached per-tier
+    /// aggregates instead of re-accumulating them.
+    fn propose(&mut self, round: u32, round_deadline: Deadline) -> Solution {
+        let cfg = &self.proto.config;
+        let local = |seed: u64| {
+            LocalSearch::new(LocalSearchConfig {
+                seed,
+                parallel: cfg.parallel,
+                ..LocalSearchConfig::default()
+            })
+        };
+        match (cfg.solver, &self.warm_start) {
+            (SolverKind::LocalSearch, Some(start)) => local(cfg.seed + round as u64)
+                .solve_from(self.problem, round_deadline, start.clone()),
+            (SolverKind::LocalSearch, None) => match self.warm_loads {
+                // Solving from the incumbent: the caller's cached
+                // aggregates apply verbatim.
+                Some(loads) => {
+                    local(cfg.seed + round as u64).solve_warm(self.problem, round_deadline, loads)
+                }
+                None => local(cfg.seed + round as u64).solve(self.problem, round_deadline),
+            },
+            (SolverKind::OptimalSearch, _) => OptimalSearch::with_seed(cfg.seed + round as u64)
+                .solve(self.problem, round_deadline),
+        }
+    }
+
+    fn items(&self, proposal: &Solution) -> Vec<Move> {
+        proposal.moves(self.problem)
+    }
+
+    /// Two-stage vetting, exactly as Fig. 2 draws it: the region
+    /// scheduler sees every move, the host scheduler only the survivors.
+    fn vet(&mut self, proposal: &Solution, items: &[Move]) -> Vec<Verdict> {
+        let region_verdicts = self.proto.region.vet(items, self.apps, self.tiers);
+        let surviving: Vec<Move> = region_verdicts
+            .iter()
+            .filter(|(_, v)| matches!(v, RegionVerdict::Accept))
+            .map(|(m, _)| *m)
+            .collect();
+        let host_verdicts = self.proto.host.vet(&surviving, &proposal.assignment, self.apps);
+        let mut host_iter = host_verdicts.iter();
+        region_verdicts
+            .iter()
+            .map(|(m, rv)| match rv {
+                RegionVerdict::Accept => {
+                    let (hm, hv) = host_iter.next().expect("one host verdict per survivor");
+                    debug_assert_eq!(hm, m, "host verdicts align with survivors");
+                    hv.to_coop()
+                }
+                _ => rv.to_coop(),
+            })
+            .collect()
+    }
+
+    /// Feed a rejection back into the problem. Transition rejections ban
+    /// the tier→tier transition globally (§4.2.2: manual_cnst "deters
+    /// transitions ... detected as high latency"); data-proximity and
+    /// host rejections only avoid the specific (app, tier) placement.
+    fn feed_back(&mut self, m: &Move, verdict: &Verdict) -> bool {
+        match verdict {
+            Verdict::Accept => false,
+            Verdict::RejectTransition(_) => {
+                if !self.problem.forbidden_transitions.contains(&(m.from, m.to)) {
+                    self.problem.forbid_transition(m.from, m.to);
+                    true
+                } else {
+                    false
+                }
+            }
+            Verdict::Reject(_) => self.problem.add_avoid(m.app, m.to),
+        }
+    }
+
+    fn score(&self, proposal: &Solution) -> f64 {
+        proposal.score
+    }
+
+    /// A cleaned copy of the proposal (rejected moves reverted) is both
+    /// the next round's warm start and the acceptable fallback solution.
+    fn absorb(&mut self, solution: Solution, vetted: &[(Move, Verdict)], accepted: bool) {
+        let mut cleaned = solution.assignment.clone();
+        for (m, v) in vetted {
+            if !v.is_accept() {
+                cleaned.set(m.app, m.from);
+            }
+        }
+        let candidate = if accepted {
+            solution
+        } else {
+            Solution::of_assignment(self.problem, cleaned.clone(), self.proto.config.solver)
+        };
+        if self.best.as_ref().map_or(true, |b| candidate.score < b.score) {
+            self.best = Some(candidate);
+        }
+        if !accepted {
+            self.warm_start = Some(cleaned);
+        }
+    }
 }
 
 impl CoopProtocol {
@@ -98,139 +259,26 @@ impl CoopProtocol {
         deadline: Deadline,
         warm_loads: Option<&[crate::model::ResourceVec]>,
     ) -> CoopOutcome {
-        let mut rounds = Vec::new();
-        let mut best: Option<Solution> = None;
-        let mut warm_start: Option<crate::model::Assignment> = None;
-
-        for round in 0..self.config.max_rounds {
-            if deadline.expired() {
-                break;
-            }
-            // Geometric budget split: each round gets 60% of what's
-            // left, so the first solve is substantive (a starved first
-            // round would propose zero moves and trivially self-accept)
-            // while later rounds still have room to re-solve.
-            let per_round = deadline.remaining().mul_f64(0.6);
-            let round_deadline = Deadline::after(per_round);
-
-            // --- SPTLB solve (warm-started from the previous proposal:
-            // avoid edges only *remove* options, so the prior solution
-            // minus its rejected moves is a strong, feasible start).
-            let local = |seed: u64| {
-                LocalSearch::new(LocalSearchConfig {
-                    seed,
-                    parallel: self.config.parallel,
-                    ..LocalSearchConfig::default()
-                })
-            };
-            let solution = match (self.config.solver, &warm_start) {
-                (SolverKind::LocalSearch, Some(start)) => local(self.config.seed + round as u64)
-                    .solve_from(problem, round_deadline, start.clone()),
-                (SolverKind::LocalSearch, None) => match warm_loads {
-                    // Solving from the incumbent: the caller's cached
-                    // aggregates apply verbatim.
-                    Some(loads) => local(self.config.seed + round as u64)
-                        .solve_warm(problem, round_deadline, loads),
-                    None => local(self.config.seed + round as u64).solve(problem, round_deadline),
-                },
-                (SolverKind::OptimalSearch, _) => {
-                    OptimalSearch::with_seed(self.config.seed + round as u64)
-                        .solve(problem, round_deadline)
-                }
-            };
-            let moves = solution.moves(problem);
-
-            // --- region scheduler vets each move.
-            let region_verdicts = self.region.vet(&moves, apps, tiers);
-            let region_rejects: Vec<_> = region_verdicts
-                .iter()
-                .filter(|(_, v)| !matches!(v, RegionVerdict::Accept))
-                .map(|(m, _)| *m)
-                .collect();
-
-            // --- host scheduler vets the survivors.
-            let surviving: Vec<_> = region_verdicts
-                .iter()
-                .filter(|(_, v)| matches!(v, RegionVerdict::Accept))
-                .map(|(m, _)| *m)
-                .collect();
-            let host_verdicts = self.host.vet(&surviving, &solution.assignment, apps);
-            let host_rejects: Vec<_> = host_verdicts
-                .iter()
-                .filter(|(_, v)| *v == HostVerdict::Reject)
-                .map(|(m, _)| *m)
-                .collect();
-
-            // --- feed rejections back as avoid constraints. Transition
-            // rejections ban the tier→tier transition globally (§4.2.2:
-            // manual_cnst "deters transitions ... detected as high
-            // latency"); data-proximity and host rejections only avoid
-            // the specific (app, tier) placement.
-            let mut added = 0;
-            for (m, v) in region_verdicts.iter() {
-                match v {
-                    RegionVerdict::Accept => {}
-                    RegionVerdict::RejectTransition { .. } => {
-                        if !problem.forbidden_transitions.contains(&(m.from, m.to)) {
-                            problem.forbid_transition(m.from, m.to);
-                            added += 1;
-                        }
-                    }
-                    RegionVerdict::Reject { .. } => {
-                        if problem.add_avoid(m.app, m.to) {
-                            added += 1;
-                        }
-                    }
-                }
-            }
-            for m in host_rejects.iter() {
-                if problem.add_avoid(m.app, m.to) {
-                    added += 1;
-                }
-            }
-
-            // A cleaned copy of the proposal (rejected moves reverted) is
-            // both the warm start and the acceptable fallback solution.
-            let mut cleaned = solution.assignment.clone();
-            for m in region_rejects.iter().chain(host_rejects.iter()) {
-                cleaned.set(m.app, m.from);
-            }
-            let cleaned_solution =
-                Solution::of_assignment(problem, cleaned.clone(), self.config.solver);
-
-            rounds.push(RoundTrace {
-                round,
-                proposed_moves: moves.len(),
-                region_rejects: region_rejects.len(),
-                host_rejects: host_rejects.len(),
-                avoid_edges_added: added,
-                score: solution.score,
-            });
-
-            // An empty proposal (e.g. a time-starved OptimalSearch round)
-            // must not self-accept: later rounds get the leftover budget
-            // and a real chance to propose moves.
-            let accepted =
-                !moves.is_empty() && region_rejects.is_empty() && host_rejects.is_empty();
-            let candidate = if accepted { solution } else { cleaned_solution };
-            if best.as_ref().map_or(true, |b| candidate.score < b.score) {
-                best = Some(candidate);
-            }
-            if accepted {
-                return CoopOutcome {
-                    solution: best.unwrap(),
-                    rounds,
-                    fully_accepted: true,
-                    elapsed: deadline.elapsed(),
-                };
-            }
-            warm_start = Some(cleaned);
-        }
-
+        let mut session = ProtocolSession {
+            proto: self,
+            problem: &mut *problem,
+            apps,
+            tiers,
+            warm_loads,
+            warm_start: None,
+            best: None,
+        };
+        let outcome = negotiate(&mut session, self.config.max_rounds, deadline);
+        let ProtocolSession { best, .. } = session;
         let solution = best.unwrap_or_else(|| {
             Solution::of_assignment(problem, problem.initial.clone(), self.config.solver)
         });
-        CoopOutcome { solution, rounds, fully_accepted: false, elapsed: deadline.elapsed() }
+        CoopOutcome {
+            solution,
+            rounds: outcome.rounds.iter().map(RoundTrace::from_telemetry).collect(),
+            fully_accepted: outcome.fully_accepted,
+            elapsed: deadline.elapsed(),
+        }
     }
 }
 
@@ -319,5 +367,23 @@ mod tests {
         assert!(verdicts
             .iter()
             .all(|(_, v)| matches!(v, RegionVerdict::Accept)));
+    }
+
+    #[test]
+    fn trace_reason_counts_match_the_legacy_split() {
+        // The kernel tallies rejections by reason; the legacy
+        // region/host split must be a pure projection of it.
+        let (mut p, apps, tiers, proto) = setup(-1.0);
+        let out = proto.run(&mut p, &apps, &tiers, Deadline::after_ms(400));
+        for r in &out.rounds {
+            assert_eq!(r.region_rejects, r.rejects.proximity + r.rejects.transition);
+            assert_eq!(r.host_rejects, r.rejects.packing);
+            assert_eq!(r.rejects.capacity + r.rejects.routability, 0);
+        }
+        let total = out.rejects();
+        assert_eq!(
+            total.total(),
+            out.rounds.iter().map(|r| r.region_rejects + r.host_rejects).sum::<usize>()
+        );
     }
 }

@@ -21,6 +21,24 @@ pub enum RegionVerdict {
     RejectTransition { p99_ms: f64 },
 }
 
+impl RegionVerdict {
+    /// This layer's verdict in the shared co-operation vocabulary
+    /// ([`crate::coop::Verdict`]): proximity misses become point avoids,
+    /// high-latency transitions become transition bans.
+    pub fn to_coop(self) -> crate::coop::Verdict {
+        use crate::coop::{RejectReason, Verdict};
+        match self {
+            RegionVerdict::Accept => Verdict::Accept,
+            RegionVerdict::Reject { achievable_ms } => {
+                Verdict::Reject(RejectReason::Proximity { achievable_ms })
+            }
+            RegionVerdict::RejectTransition { p99_ms } => {
+                Verdict::RejectTransition(RejectReason::TransitionLatency { p99_ms })
+            }
+        }
+    }
+}
+
 /// Region scheduler over a latency matrix. Rejects a proposed move when
 /// EITHER the app cannot stay near its data source on the destination
 /// tier (Fig. 2's test) OR the tier→tier transition itself is a

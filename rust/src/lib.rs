@@ -7,6 +7,7 @@
 pub mod greedy;
 pub mod hierarchy;
 pub mod bench;
+pub mod coop;
 pub mod coordinator;
 pub mod forecast;
 pub mod metadata;

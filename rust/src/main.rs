@@ -289,7 +289,19 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt("rounds", "10", "balancing rounds to run")
         .opt("timeout-ms", "60", "per-round solver deadline")
         .opt("engine", "incremental", "round engine (incremental|rebuild)")
-        .opt("decay", "0", "rounds a protocol avoid-constraint persists")
+        .opt(
+            "decay",
+            "0",
+            "rounds a protocol avoid-constraint persists (SPTLB-level edges in the shared \
+             coop::AvoidRegistry kernel; see --global-avoid-decay for the level above)",
+        )
+        .opt(
+            "global-avoid-decay",
+            "",
+            "rounds a rejected cross-region migration stays avoided (global-level edges in the \
+             same coop::AvoidRegistry kernel as --decay; default: the --global-policy preset's \
+             value; only meaningful with --regions > 1)",
+        )
         .opt(
             "forecaster",
             "none",
@@ -452,11 +464,22 @@ fn cmd_serve_multiregion(p: &sptlb::util::cli::Parsed, seed: u64, n_regions: usi
         eprintln!("error: unknown engine (incremental|rebuild)");
         return 2;
     };
-    let Some(policy) = GlobalPolicy::by_name(p.get("global-policy").unwrap_or("spillover"))
+    let Some(mut policy) = GlobalPolicy::by_name(p.get("global-policy").unwrap_or("spillover"))
     else {
         eprintln!("error: unknown global policy (none|spillover|aggressive)");
         return 2;
     };
+    // --global-avoid-decay overrides the preset's registry decay — the
+    // same knob --decay sets for the SPTLB layer, one level up.
+    if p.get("global-avoid-decay").is_some_and(|v| !v.is_empty()) {
+        match p.u64("global-avoid-decay") {
+            Ok(d) => policy.avoid_decay = d as u32,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        }
+    }
     let Some(execution) = RegionExecution::from_name(p.get("region-exec").unwrap_or("parallel"))
     else {
         eprintln!("error: unknown region execution (sequential|parallel)");

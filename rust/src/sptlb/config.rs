@@ -35,7 +35,10 @@ pub struct SptlbConfig {
     /// the next `avoid_decay` rounds, then expires and the tier returns
     /// to the app's allowed set. 0 (the default) reproduces the legacy
     /// rebuild-every-round behaviour where edges live only within the
-    /// round that added them.
+    /// round that added them. The store is the hierarchy-wide
+    /// [`crate::coop::AvoidRegistry`] kernel — the global layer's
+    /// `GlobalPolicy::avoid_decay` (CLI: `--global-avoid-decay`) is the
+    /// same knob one level up.
     pub avoid_decay: u32,
     /// Sharded local-search parallelism (workers + shard strategy).
     pub parallel: ParallelConfig,

@@ -1,0 +1,377 @@
+//! The co-operation kernel's contracts (ISSUE 5 acceptance):
+//!
+//!  * `AvoidRegistry<K>` reproduces BOTH legacy registries exactly — the
+//!    engine's `or_insert` harvest semantics and the global layer's
+//!    insert-reset rejection semantics — under arbitrary op sequences
+//!    (property test against re-implementations of the two legacy
+//!    `BTreeMap` registries);
+//!  * golden decision-log equivalence on fixed seeds with the kernel in
+//!    the loop (ManualCnst + decay): workers {1, 2, 8} × regions {1, 3}
+//!    replay bit-identically;
+//!  * escalation: an avoid edge expiring N times raises exactly one
+//!    pressure signal, and a persistent SPTLB-level rejection alters a
+//!    global-layer decision (the escalated region spills while the same
+//!    fleet without signals stays put).
+
+use sptlb::coop::{escalation_boost, AvoidRegistry, ESCALATE_AFTER};
+use sptlb::coordinator::{
+    Coordinator, CoordinatorConfig, EngineMode, MultiRegionConfig, MultiRegionCoordinator,
+    RegionExecution,
+};
+use sptlb::hierarchy::global::GlobalPolicy;
+use sptlb::hierarchy::variants::Variant;
+use sptlb::model::RegionId;
+use sptlb::rebalancer::ParallelConfig;
+use sptlb::sptlb::SptlbConfig;
+use sptlb::util::propcheck::{forall, Check};
+use sptlb::workload::{
+    generate, generate_multiregion, MultiRegionScenario, MultiRegionSpec, ScenarioConfig,
+    WorkloadSpec,
+};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Everything decision-relevant about one round record, bit-exact —
+/// wall-clock fields (pipeline/collect/ticks) deliberately excluded.
+fn record_fingerprint(r: &sptlb::coordinator::RoundRecord) -> String {
+    format!(
+        "r{} score={:016x} moves={} imb={:016x} events={} coop_rounds={} rejects={:?} \
+         avoid_edges={} escalations={}",
+        r.round,
+        r.score.to_bits(),
+        r.moves_executed,
+        r.worst_imbalance.to_bits(),
+        r.n_events,
+        r.coop_rounds,
+        r.coop_rejects,
+        r.avoid_edges,
+        r.escalations,
+    )
+}
+
+// ---------------------------------------------------------------------
+// Property: one kernel, two legacy semantics.
+// ---------------------------------------------------------------------
+
+/// The engine's legacy registry: `entry().or_insert(0)` on record (an
+/// active edge keeps its age), retain-with-increment aging.
+struct LegacyEngineRegistry {
+    decay: u32,
+    edges: BTreeMap<u32, u32>,
+}
+
+impl LegacyEngineRegistry {
+    fn record(&mut self, key: u32) {
+        self.edges.entry(key).or_insert(0);
+    }
+    fn age(&mut self) -> Vec<u32> {
+        let decay = self.decay;
+        let mut expired = Vec::new();
+        for (key, age) in std::mem::take(&mut self.edges) {
+            let age = age.saturating_add(1);
+            if age <= decay {
+                self.edges.insert(key, age);
+            } else {
+                expired.push(key);
+            }
+        }
+        expired
+    }
+}
+
+/// The global layer's legacy registry: `insert(key, 0)` on reject (a
+/// fresh rejection resets the window), retain-with-increment aging.
+struct LegacyGlobalRegistry {
+    decay: u32,
+    edges: BTreeMap<u32, u32>,
+}
+
+impl LegacyGlobalRegistry {
+    fn reject(&mut self, key: u32) {
+        self.edges.insert(key, 0);
+    }
+    fn age(&mut self) {
+        let decay = self.decay;
+        self.edges.retain(|_, age| {
+            *age = age.saturating_add(1);
+            *age <= decay
+        });
+    }
+}
+
+#[test]
+fn registry_matches_both_legacy_semantics_under_arbitrary_ops() {
+    // Ops: (0, key) = record/reject, (1, _) = age. The kernel's `record`
+    // must track the engine registry and `renew` the global one — same
+    // active sets, same ages (observable through expiry timing), same
+    // expired keys in the same order.
+    forall(
+        40,
+        |rng| {
+            let decay = rng.range(0, 4) as u32;
+            let ops: Vec<(bool, u32)> = (0..rng.range(5, 80))
+                .map(|_| (rng.chance(0.35), rng.range(0, 10) as u32))
+                .collect();
+            (decay, ops)
+        },
+        |(decay, ops)| {
+            let mut kernel_record: AvoidRegistry<u32> = AvoidRegistry::new(*decay);
+            let mut kernel_renew: AvoidRegistry<u32> = AvoidRegistry::new(*decay);
+            let mut engine = LegacyEngineRegistry { decay: *decay, edges: BTreeMap::new() };
+            let mut global = LegacyGlobalRegistry { decay: *decay, edges: BTreeMap::new() };
+            for (is_age, key) in ops {
+                if *is_age {
+                    let aged = kernel_record.age();
+                    let legacy_expired = engine.age();
+                    if aged.expired != legacy_expired {
+                        return Check::fail(&format!(
+                            "record-mode expiry diverged: {:?} vs {legacy_expired:?}",
+                            aged.expired
+                        ));
+                    }
+                    kernel_renew.age();
+                    global.age();
+                } else {
+                    kernel_record.record(*key);
+                    engine.record(*key);
+                    kernel_renew.renew(*key);
+                    global.reject(*key);
+                }
+                let ka: Vec<u32> = kernel_record.keys().copied().collect();
+                let ea: Vec<u32> = engine.edges.keys().copied().collect();
+                if ka != ea {
+                    return Check::fail(&format!(
+                        "record-mode active sets diverged: {ka:?} vs {ea:?}"
+                    ));
+                }
+                let kr: Vec<u32> = kernel_renew.keys().copied().collect();
+                let ga: Vec<u32> = global.edges.keys().copied().collect();
+                if kr != ga {
+                    return Check::fail(&format!(
+                        "renew-mode active sets diverged: {kr:?} vs {ga:?}"
+                    ));
+                }
+            }
+            Check::pass()
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Escalation semantics.
+// ---------------------------------------------------------------------
+
+#[test]
+fn edge_expiring_n_times_raises_exactly_one_signal() {
+    for n in [1u32, 2, 3, 5] {
+        let mut reg: AvoidRegistry<u32> = AvoidRegistry::with_escalation(0, n);
+        let mut signals = 0usize;
+        for cycle in 1..=3 * n {
+            reg.record(42);
+            let aged = reg.age();
+            signals += aged.escalated.len();
+            assert_eq!(
+                signals,
+                (cycle / n) as usize,
+                "threshold {n}, cycle {cycle}: one signal per {n} expiries, exactly"
+            );
+        }
+    }
+}
+
+#[test]
+fn escalation_boost_scales_with_signals_and_vanishes_without() {
+    assert_eq!(escalation_boost(0).to_bits(), 0.0f64.to_bits());
+    assert!(escalation_boost(1) > 0.0);
+    assert_eq!(escalation_boost(4), 4.0 * escalation_boost(1));
+}
+
+// ---------------------------------------------------------------------
+// Golden decision-log equivalence with the kernel in the loop:
+// ManualCnst runs the negotiation kernel every round, decay keeps the
+// registry populated across rounds, and the global layer plans on top.
+// workers {1, 2, 8} × regions {1, 3} must replay bit-identically.
+// ---------------------------------------------------------------------
+
+#[test]
+fn golden_equivalence_workers_by_regions_with_kernel_in_the_loop() {
+    // regions = 1: the single-region coordinator under ManualCnst +
+    // decay — the kernel's SPTLB instantiation.
+    let scenario = ScenarioConfig {
+        drift_fraction: 0.5,
+        arrival_prob: 0.5,
+        departure_prob: 0.3,
+        ..ScenarioConfig::churn()
+    }
+    .with_seed(23);
+    let single = |workers: usize, events: Option<&[Vec<sptlb::model::FleetEvent>]>| {
+        let bed = generate(&WorkloadSpec::small().with_seed(23));
+        let cfg = CoordinatorConfig {
+            sptlb: SptlbConfig {
+                variant: Variant::ManualCnst,
+                timeout: Duration::from_secs(20),
+                avoid_decay: 2,
+                max_coop_rounds: 2,
+                samples_per_app: 40,
+                parallel: ParallelConfig::with_workers(workers),
+                ..SptlbConfig::default()
+            },
+            scenario: scenario.clone(),
+            engine: EngineMode::Incremental,
+            ..CoordinatorConfig::default()
+        };
+        let mut c = Coordinator::from_testbed(cfg, bed);
+        match events {
+            None => {
+                c.run(6);
+            }
+            Some(ev) => {
+                c.run_events(ev);
+            }
+        }
+        c
+    };
+    let base = single(1, None);
+    assert!(
+        base.log.iter().any(|r| r.coop_rounds > 0),
+        "ManualCnst must exercise the negotiation kernel"
+    );
+    for workers in [2usize, 8] {
+        let replay = single(workers, Some(&base.event_log));
+        assert_eq!(base.log.len(), replay.log.len());
+        for (a, b) in base.log.iter().zip(&replay.log) {
+            assert_eq!(
+                record_fingerprint(a),
+                record_fingerprint(b),
+                "regions=1 workers={workers}: decision log diverged"
+            );
+        }
+        assert_eq!(base.current_assignment(), replay.current_assignment());
+    }
+
+    // regions = 3: per-region ManualCnst stacks under the global layer.
+    let multi = |workers: usize, events: Option<&[Vec<Vec<sptlb::model::FleetEvent>>]>| {
+        let bed = generate_multiregion(&MultiRegionSpec::new(3, WorkloadSpec::small()));
+        let cfg = MultiRegionConfig {
+            sptlb: SptlbConfig {
+                variant: Variant::ManualCnst,
+                timeout: Duration::from_secs(20),
+                avoid_decay: 2,
+                max_coop_rounds: 2,
+                samples_per_app: 40,
+                parallel: ParallelConfig::with_workers(workers),
+                ..SptlbConfig::default()
+            },
+            engine: EngineMode::Incremental,
+            scenario: MultiRegionScenario::multiregion(3, 23),
+            policy: GlobalPolicy::spillover(),
+            execution: RegionExecution::Parallel,
+            ..MultiRegionConfig::new(3)
+        };
+        let mut c = MultiRegionCoordinator::new(cfg, bed);
+        match events {
+            None => c.run(4),
+            Some(ev) => c.run_events(ev),
+        }
+        c
+    };
+    let base = multi(1, None);
+    for workers in [2usize, 8] {
+        let replay = multi(workers, Some(&base.event_log));
+        assert_eq!(base.log.len(), replay.log.len());
+        for (a, b) in base.log.iter().zip(&replay.log) {
+            let fa: Vec<String> = a.records.iter().map(record_fingerprint).collect();
+            let fb: Vec<String> = b.records.iter().map(record_fingerprint).collect();
+            assert_eq!(fa, fb, "regions=3 workers={workers} round {}", a.round);
+        }
+        for r in 0..3 {
+            assert_eq!(
+                base.region_fleet(RegionId(r)).assignment(),
+                replay.region_fleet(RegionId(r)).assignment(),
+                "regions=3 workers={workers}: region {r} assignment diverged"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Escalation end-to-end: a persistent SPTLB-level rejection raises
+// signals through the engine and alters what the layer above sees.
+// ---------------------------------------------------------------------
+
+#[test]
+fn persistent_sptlb_rejections_escalate_into_the_global_pressure_view() {
+    // Run A: an unsatisfiable proximity budget makes the protocol reject
+    // every proposed move every round; with decay 1 the avoid edges
+    // expire and re-appear until they escalate. Run B: a generous budget
+    // — no rejections, no signals. Region pressure is a pure function of
+    // demands and capacities (assignment-independent), and the steady
+    // scenario keeps demands fixed, so any pressure divergence between
+    // the runs is exactly the escalation boost — the global layer
+    // observably sees a different fleet.
+    let run = |proximity_ms: f64| {
+        let mut spec = MultiRegionSpec::new(2, WorkloadSpec::small());
+        spec.capacity_spread = 0.0;
+        let bed = generate_multiregion(&spec);
+        let cfg = MultiRegionConfig {
+            sptlb: SptlbConfig {
+                variant: Variant::ManualCnst,
+                timeout: Duration::from_millis(50),
+                avoid_decay: 1,
+                max_coop_rounds: 2,
+                samples_per_app: 20,
+                proximity_budget_ms: proximity_ms,
+                // One host = the whole tier: packing can never reject, so
+                // the control run is guaranteed rejection-free.
+                hosts_per_tier: 1,
+                ..SptlbConfig::default()
+            },
+            engine: EngineMode::Incremental,
+            scenario: MultiRegionScenario::uniform(2, ScenarioConfig::steady().with_seed(3)),
+            policy: GlobalPolicy::spillover(),
+            execution: RegionExecution::Sequential,
+            ..MultiRegionConfig::new(2)
+        };
+        let mut c = MultiRegionCoordinator::new(cfg, bed);
+        c.run(12);
+        c
+    };
+    let rejected = run(-1.0);
+    let accepted = run(1e9);
+
+    assert!(
+        rejected.metrics.escalations > 0,
+        "persistent rejections must raise escalation signals"
+    );
+    assert_eq!(accepted.metrics.escalations, 0, "no rejections, no signals");
+    let signal_rounds: Vec<u32> = rejected
+        .log
+        .iter()
+        .filter(|r| r.escalations > 0)
+        .map(|r| r.round)
+        .collect();
+    assert!(!signal_rounds.is_empty());
+    // On a signal round the recorded planning pressure strictly exceeds
+    // the signal-free run's (identical demands/capacities otherwise) —
+    // the global plan is computed from a genuinely different view.
+    for round in &signal_rounds {
+        let a = &rejected.log[*round as usize];
+        let b = &accepted.log[*round as usize];
+        assert!(
+            a.pressures.iter().zip(&b.pressures).any(|(pa, pb)| pa > pb),
+            "round {round}: escalation must boost some region's planning pressure"
+        );
+    }
+    // And the per-round telemetry accounts for the signals uniformly.
+    assert_eq!(
+        rejected.metrics.escalations,
+        rejected.log.iter().map(|r| r.escalations).sum::<u32>()
+    );
+    assert!(
+        rejected.log.iter().any(|r| r.records.iter().any(|rec| rec.coop_rejects.total() > 0)),
+        "the decision log must carry the kernel's reject-by-reason telemetry"
+    );
+    // ESCALATE_AFTER expiries per signal: with decay 1 the first signal
+    // cannot appear before the threshold's worth of expiry cycles.
+    assert!(*signal_rounds.first().unwrap() >= ESCALATE_AFTER);
+}
