@@ -77,8 +77,9 @@ pub fn smoke_mode() -> bool {
         || std::env::var("SPTLB_BENCH_SMOKE").as_deref() == Ok("1")
 }
 
-/// Write a bench-trajectory JSON file (e.g. `BENCH_coordinator.json`)
-/// into [`bench_out_dir`] so perf runs leave a machine-readable trail.
+/// Write a bench-trajectory JSON file (e.g. `BENCH_coordinator.json`,
+/// or the gap harness's `GAP_report.json`) into [`bench_out_dir`] so
+/// perf and quality runs leave a machine-readable trail.
 pub fn write_bench_json(file: &str, json: &crate::util::json::Json) {
     let dir = bench_out_dir();
     if let Err(e) = std::fs::create_dir_all(&dir) {

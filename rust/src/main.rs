@@ -8,6 +8,9 @@
 //!   fig3      regenerate Figure 3 (a/b/c) tables for a preset.
 //!   sweep     regenerate the Fig. 4/5 variant×solver×timeout sweep.
 //!   check     verify the AOT artifacts load and match the rust scorer.
+//!   bench     solution-quality harnesses; `bench gap` measures the
+//!             LocalSearch optimality gap against exact optima and
+//!             writes GAP_report.json (the CI gap-gate input).
 
 use sptlb::coordinator::{
     Coordinator, CoordinatorConfig, EngineMode, MultiRegionConfig, MultiRegionCoordinator,
@@ -37,6 +40,7 @@ fn main() {
         Some("fig3") => cmd_fig3(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("check") => cmd_check(&args[1..]),
+        Some("bench") => cmd_bench(&args[1..]),
         Some("--help") | Some("help") | None => {
             print_help();
             0
@@ -54,7 +58,7 @@ fn print_help() {
     println!(
         "sptlb — Stream-Processing Tier Load Balancer (paper reproduction)\n\
          \n\
-         USAGE: sptlb <balance|serve|fig3|sweep|check> [options]\n\
+         USAGE: sptlb <balance|serve|fig3|sweep|check|bench> [options]\n\
          \n\
          Run `sptlb <subcommand> --help` for per-command options."
     );
@@ -613,7 +617,7 @@ fn cmd_check(args: &[String]) -> i32 {
             &bed.apps,
             &bed.tiers,
             bed.initial.clone(),
-            0.10,
+            sptlb::rebalancer::goals::MOVEMENT_FRACTION,
             Default::default(),
         )
         .unwrap();
@@ -649,5 +653,125 @@ fn cmd_check(args: &[String]) -> i32 {
             eprintln!("parity FAILED: worst relative error {worst}");
             1
         }
+    })
+}
+
+fn cmd_bench(args: &[String]) -> i32 {
+    use sptlb::rebalancer::gap::{self, GapConfig};
+
+    let cmd = Command::new("bench", "solution-quality harnesses (modes: gap)")
+        .positionals(1)
+        .opt("seed", "", "prng seed (default: harness default)")
+        .opt("rounds", "", "scenario-evolution rounds per preset")
+        .opt("movement", "", "movement fraction for the tiny instances")
+        .opt("local-ms", "", "LocalSearch budget per cell in ms")
+        .opt("exact-ms", "", "exhaustive/LP budget per cell in ms")
+        .opt("out-dir", ".", "directory GAP_report.json is written to")
+        .opt(
+            "baseline",
+            "",
+            "gate this run against a baseline JSON (exit 1 on regression)",
+        )
+        .opt("tolerance", "0.05", "slack added to each baseline ceiling")
+        .opt(
+            "write-baseline",
+            "",
+            "derive a fresh baseline from this run and write it here",
+        )
+        .flag("smoke", "CI gate configuration (full grid, short budgets)");
+    with_parsed(cmd, args, |p| {
+        let mode = p.positionals.first().map(|s| s.as_str()).unwrap_or("gap");
+        if mode != "gap" {
+            eprintln!("error: unknown bench mode '{mode}' (available: gap)");
+            return 2;
+        }
+        let mut cfg = if p.flag("smoke") { GapConfig::smoke() } else { GapConfig::default() };
+        // Empty-string defaults mean "keep the harness default" so the
+        // smoke preset's budgets survive unless explicitly overridden.
+        if p.get("seed").is_some_and(|v| !v.is_empty()) {
+            cfg.seed = p.u64("seed").unwrap_or(cfg.seed);
+        }
+        if p.get("rounds").is_some_and(|v| !v.is_empty()) {
+            cfg.rounds = p.u64("rounds").unwrap_or(cfg.rounds as u64) as u32;
+        }
+        if p.get("movement").is_some_and(|v| !v.is_empty()) {
+            match p.f64_in_range("movement", 0.0, 1.0) {
+                Ok(f) => cfg.movement_fraction = f,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            }
+        }
+        if p.get("local-ms").is_some_and(|v| !v.is_empty()) {
+            cfg.local_ms = p.u64("local-ms").unwrap_or(cfg.local_ms);
+        }
+        if p.get("exact-ms").is_some_and(|v| !v.is_empty()) {
+            cfg.exact_ms = p.u64("exact-ms").unwrap_or(cfg.exact_ms);
+        }
+
+        let report = gap::run(&cfg);
+        for cell in &report.cells {
+            println!(
+                "gap {:<8} {:<20} gap {:.4}  exact {:>9.4} ({} states{}) local {:>9.4}  lp {}",
+                cell.preset,
+                cell.mix,
+                cell.gap,
+                cell.exact_objective,
+                cell.exact_states,
+                if cell.exact_complete { "" } else { ", INCOMPLETE" },
+                cell.local_objective,
+                match cell.lp_objective {
+                    Some(v) if cell.lp_certified =>
+                        format!("{v:.4} certified in {} round(s)", cell.lp_tighten_rounds),
+                    Some(v) => format!("{v:.4} uncertified"),
+                    None => "infeasible/failed".to_string(),
+                },
+            );
+        }
+        println!(
+            "max gap {:.4} over {} cell(s)",
+            report.max_gap(),
+            report.cells.len()
+        );
+        sptlb::bench::write_bench_json("GAP_report.json", &report.to_json());
+
+        if let Some(path) = p.get("write-baseline").filter(|v| !v.is_empty()) {
+            let baseline = gap::baseline_from(&report, 0.05);
+            if let Err(e) = std::fs::write(path, baseline.pretty() + "\n") {
+                eprintln!("error writing {path}: {e}");
+                return 1;
+            }
+            println!("baseline written to {path}");
+        }
+
+        if let Some(path) = p.get("baseline").filter(|v| !v.is_empty()) {
+            let tolerance = p.f64("tolerance").unwrap_or(0.05);
+            let text = match std::fs::read_to_string(path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("error reading baseline {path}: {e}");
+                    return 1;
+                }
+            };
+            let baseline = match sptlb::util::json::Json::parse(&text) {
+                Ok(j) => j,
+                Err(e) => {
+                    eprintln!("error parsing baseline {path}: {e}");
+                    return 1;
+                }
+            };
+            let failures = gap::gate_against_baseline(&report, &baseline, tolerance);
+            if failures.is_empty() {
+                println!("gap gate OK against {path} (tolerance {tolerance})");
+            } else {
+                eprintln!("gap gate FAILED against {path}:");
+                for f in &failures {
+                    eprintln!("  - {f}");
+                }
+                return 1;
+            }
+        }
+        0
     })
 }

@@ -1,0 +1,656 @@
+//! Optimality-gap harness (`bench gap`): how good are LocalSearch
+//! solutions, really?
+//!
+//! Every solver in the repo is multi-objective and anytime, so a speed
+//! optimisation could silently trade solution quality for throughput and
+//! no test would notice. This module closes that hole the same way the
+//! bit-identical equivalence tests close the correctness hole: it
+//! computes **exact optima on small instances** and measures the
+//! LocalSearch gap per scenario preset × goal-weight mix, and CI gates on
+//! the result against a committed baseline.
+//!
+//! Three independent references per cell:
+//!  1. **Exhaustive enumeration** ([`super::optimal::exhaustive_search`])
+//!     — the ground truth: the true (quadratic) scoring objective,
+//!     minimized over every budget- and transition-legal assignment.
+//!  2. **LP bound tightening** ([`tighten_lp`]) — the PumpkinBP
+//!     `OptimisationSolver` linear-search pattern: solve, add an
+//!     objective-bound row (`obj ≤ incumbent − ε`), re-solve until
+//!     infeasible, keep the last feasible incumbent. With an exact
+//!     simplex the loop terminates after one tighten; its value here is
+//!     the certificate — the re-solve *proves* no strictly better
+//!     fractional point exists, which catches simplex bugs that return a
+//!     suboptimal "Optimal". The LP objective is a *linearized proxy* of
+//!     the quadratic score (and ignores the predicted-headroom term), so
+//!     it is reported as informational, never as the exact optimum.
+//!  3. **LocalSearch** — the solver under measurement, run with its
+//!     production configuration under a short deadline.
+//!
+//! The grid is [`crate::workload::scenario::ScenarioConfig::GAP_PRESETS`]
+//! (6 presets) × [`MIXES`] (4 goal-weight mixes); `bench gap` writes the
+//! per-cell results to `GAP_report.json` and the CI `gap-gate` job fails
+//! any cell whose gap regresses beyond `rust/gap_baseline.json` plus a
+//! relative tolerance.
+
+use crate::model::{App, Assignment, FleetEvent, Tier, TierId};
+use crate::rebalancer::goals::PREDICTED_HEADROOM_WEIGHT;
+use crate::rebalancer::local_search::LocalSearch;
+use crate::rebalancer::lp::{Lp, LpOutcome, Sense};
+use crate::rebalancer::optimal::{exhaustive_search, OptimalSearch};
+use crate::rebalancer::problem::{GoalWeights, Problem};
+use crate::util::json::Json;
+use crate::util::timer::{Deadline, Stopwatch};
+use crate::workload::scenario::{ScenarioConfig, ScenarioGen};
+use crate::workload::{generate, tiers_for_slo, WorkloadSpec};
+
+/// The goal-weight mixes the harness sweeps — how tenant intents enter
+/// the objective (Henge's intent framing): each mix is a different
+/// trade-off the gap must stay small under.
+pub const MIXES: [&str; 4] =
+    ["balanced", "headroom_heavy", "transition_heavy", "predicted_headroom"];
+
+/// Demand multiplier fabricating the armed forecast for the
+/// `predicted_headroom` mix (the coordinator-engine pattern: predicted
+/// demand = observed demand × a growth factor).
+pub const FORECAST_FACTOR: f64 = 1.3;
+
+/// Resolve a goal-weight mix by name.
+pub fn mix_weights(name: &str) -> Option<GoalWeights> {
+    let base = GoalWeights::default();
+    match name {
+        // The paper's default priority ordering.
+        "balanced" => Some(base),
+        // Utilization-limit goal promoted a decade above its default —
+        // headroom breaches dominate every balance/movement trade-off.
+        "headroom_heavy" => Some(GoalWeights { util_limit: 1e4, ..base }),
+        // Movement and criticality costs promoted to the top two goal
+        // decades — the "moves are expensive" tenant intent.
+        "transition_heavy" => Some(GoalWeights { move_cost: 1e3, criticality: 1e2, ..base }),
+        // Forecast term armed at its production weight; the harness also
+        // installs `predicted_demand` (see [`build_problem`]).
+        "predicted_headroom" => {
+            Some(GoalWeights { predicted_headroom: PREDICTED_HEADROOM_WEIGHT, ..base })
+        }
+        _ => None,
+    }
+}
+
+/// Harness knobs. Small by construction: exactness comes from exhaustive
+/// enumeration, which is only tractable at ≤ 8 apps × ≤ 3 tiers.
+#[derive(Debug, Clone)]
+pub struct GapConfig {
+    pub seed: u64,
+    /// Apps in the generated instance (before churn; hard-capped at
+    /// [`GapConfig::max_apps`] as arrivals land).
+    pub n_apps: usize,
+    /// Arrival cap keeping enumeration tractable.
+    pub max_apps: usize,
+    pub n_tiers: usize,
+    /// Scenario-evolution rounds applied to the seed instance before
+    /// measuring, so each preset actually shapes the instance.
+    pub rounds: u32,
+    /// Movement budget fraction for the tiny instances. Deliberately NOT
+    /// `goals::MOVEMENT_FRACTION` (0.10): `floor(8 × 0.10) = 0` would
+    /// leave every solver pinned to the incumbent and measure nothing.
+    /// The fleet-scale beds keep the shared constant.
+    pub movement_fraction: f64,
+    /// LocalSearch wall-clock budget per cell.
+    pub local_ms: u64,
+    /// Exhaustive-enumeration and LP-loop wall-clock budget per cell.
+    pub exact_ms: u64,
+    /// Simplex pivot budget per LP solve.
+    pub lp_iters: usize,
+    /// Bound-tightening rounds cap (each adds one objective-bound row).
+    pub tighten_max_rounds: usize,
+    pub presets: Vec<String>,
+    pub mixes: Vec<String>,
+    pub smoke: bool,
+}
+
+impl Default for GapConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0x6A9,
+            n_apps: 7,
+            max_apps: 8,
+            n_tiers: 3,
+            rounds: 4,
+            movement_fraction: 0.5,
+            local_ms: 40,
+            exact_ms: 1000,
+            lp_iters: 20_000,
+            tighten_max_rounds: 8,
+            presets: ScenarioConfig::GAP_PRESETS.iter().map(|s| s.to_string()).collect(),
+            mixes: MIXES.iter().map(|s| s.to_string()).collect(),
+            smoke: false,
+        }
+    }
+}
+
+impl GapConfig {
+    /// The CI `gap-gate` configuration: the full 6 × 4 grid (the gate
+    /// compares every cell), shorter per-cell budgets.
+    pub fn smoke() -> Self {
+        Self { rounds: 2, local_ms: 15, exact_ms: 500, smoke: true, ..Self::default() }
+    }
+}
+
+/// One (preset × mix) measurement.
+#[derive(Debug, Clone)]
+pub struct GapCell {
+    pub preset: String,
+    pub mix: String,
+    /// Apps in the evolved instance (churn presets grow it).
+    pub n_apps: usize,
+    /// Exact optimum of the true quadratic objective (exhaustive).
+    pub exact_objective: f64,
+    /// Whether enumeration visited every feasible assignment; a cell
+    /// with `false` carries no quality information and fails the gate.
+    pub exact_complete: bool,
+    pub exact_states: u64,
+    pub exact_ms: f64,
+    /// LocalSearch score on the identical problem.
+    pub local_objective: f64,
+    pub local_ms: f64,
+    /// Shifted relative gap: `max(0, local − exact) / (1 + |exact|)`.
+    /// The `1 +` keeps cells with near-zero exact optima (steady preset)
+    /// from exploding a noise-level absolute difference into a huge
+    /// ratio; the clamp removes fp noise (exact ≤ local always holds).
+    pub gap: f64,
+    /// LP-relaxation objective (linearized proxy bound; informational).
+    pub lp_objective: Option<f64>,
+    /// Objective-bound rows added before the loop proved infeasibility.
+    pub lp_tighten_rounds: usize,
+    /// True when the tightening loop certified the LP optimum (re-solve
+    /// under the bound came back Infeasible).
+    pub lp_certified: bool,
+    pub lp_ms: f64,
+}
+
+impl GapCell {
+    pub fn key(&self) -> String {
+        format!("{}/{}", self.preset, self.mix)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("preset", Json::str(self.preset.as_str())),
+            ("mix", Json::str(self.mix.as_str())),
+            ("n_apps", Json::num(self.n_apps as f64)),
+            ("exact_objective", Json::num(self.exact_objective)),
+            ("exact_complete", Json::Bool(self.exact_complete)),
+            ("exact_states", Json::num(self.exact_states as f64)),
+            ("exact_ms", Json::num(self.exact_ms)),
+            ("local_objective", Json::num(self.local_objective)),
+            ("local_ms", Json::num(self.local_ms)),
+            ("gap", Json::num(self.gap)),
+            (
+                "lp_objective",
+                self.lp_objective.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("lp_tighten_rounds", Json::num(self.lp_tighten_rounds as f64)),
+            ("lp_certified", Json::Bool(self.lp_certified)),
+            ("lp_ms", Json::num(self.lp_ms)),
+        ])
+    }
+}
+
+/// The full grid result `bench gap` serializes to `GAP_report.json`.
+#[derive(Debug, Clone)]
+pub struct GapReport {
+    pub seed: u64,
+    pub smoke: bool,
+    pub cells: Vec<GapCell>,
+}
+
+impl GapReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("gap_report")),
+            ("seed", Json::num(self.seed as f64)),
+            ("smoke", Json::Bool(self.smoke)),
+            (
+                "n_presets",
+                Json::num(distinct(self.cells.iter().map(|c| c.preset.as_str())) as f64),
+            ),
+            (
+                "n_mixes",
+                Json::num(distinct(self.cells.iter().map(|c| c.mix.as_str())) as f64),
+            ),
+            ("max_gap", Json::num(self.max_gap())),
+            ("cells", Json::arr(self.cells.iter().map(GapCell::to_json))),
+        ])
+    }
+
+    pub fn max_gap(&self) -> f64 {
+        self.cells.iter().map(|c| c.gap).fold(0.0, f64::max)
+    }
+}
+
+fn distinct<'a>(names: impl Iterator<Item = &'a str>) -> usize {
+    names.collect::<std::collections::BTreeSet<_>>().len()
+}
+
+/// Shifted relative gap (see [`GapCell::gap`]).
+pub fn relative_gap(exact: f64, local: f64) -> f64 {
+    (local - exact).max(0.0) / (1.0 + exact.abs())
+}
+
+/// Result of the bound-tightening loop.
+#[derive(Debug, Clone)]
+pub struct LpTighten {
+    /// Best (last feasible) incumbent objective, if any solve reached
+    /// Optimal.
+    pub objective: Option<f64>,
+    /// Objective-bound rows added.
+    pub rounds: usize,
+    /// The loop terminated by proving the tightened bound infeasible —
+    /// `objective` is a certified minimum of the relaxation.
+    pub certified: bool,
+}
+
+/// PumpkinBP's linear-search pattern over our simplex: solve, add
+/// `objective · x ≤ incumbent − ε`, re-solve until [`LpOutcome::Infeasible`],
+/// keeping the last feasible incumbent. Doubles as a simplex self-check:
+/// a buggy "Optimal" that is actually improvable would survive the
+/// re-solve and tighten again instead of certifying.
+pub fn tighten_lp(
+    mut lp: Lp,
+    max_rounds: usize,
+    max_iters: usize,
+    deadline: Deadline,
+) -> LpTighten {
+    let mut incumbent: Option<f64> = None;
+    let mut rounds = 0usize;
+    for _ in 0..max_rounds {
+        match lp.solve_with_deadline(max_iters, deadline) {
+            LpOutcome::Optimal { objective, .. } => {
+                incumbent = Some(match incumbent {
+                    Some(prev) => prev.min(objective),
+                    None => objective,
+                });
+                let step = 1e-6 + objective.abs() * 1e-6;
+                lp.add_row(lp.objective.clone(), Sense::Le, objective - step);
+                rounds += 1;
+            }
+            LpOutcome::Infeasible => {
+                return LpTighten { objective: incumbent, rounds, certified: incumbent.is_some() }
+            }
+            // Unbounded, pivot-budget, or deadline: report the incumbent
+            // uncertified rather than looping on a solver that cannot
+            // make progress.
+            _ => break,
+        }
+    }
+    LpTighten { objective: incumbent, rounds, certified: false }
+}
+
+/// Generate the seed instance for a preset and evolve it through
+/// `cfg.rounds` of the preset's event stream, so drift/churn/spike/wave
+/// shapes actually reach the measured problem. Departures never fire at
+/// this scale (the generator's fleet floor is 8) and arrivals are capped
+/// at `cfg.max_apps` to keep enumeration tractable; outage/capacity
+/// events are excluded by the preset list (`GAP_PRESETS`).
+pub fn evolve_instance(
+    cfg: &GapConfig,
+    preset: &str,
+) -> (Vec<App>, Vec<Tier>, Vec<TierId>) {
+    let mut spec = WorkloadSpec::small().with_seed(cfg.seed);
+    // generate() asserts n_apps >= n_tiers.
+    spec.n_apps = cfg.n_apps.max(cfg.n_tiers);
+    spec.n_tiers = cfg.n_tiers;
+    let bed = generate(&spec);
+
+    let mut apps = bed.apps.clone();
+    let tiers = bed.tiers.clone();
+    let mut initial: Vec<TierId> = bed.initial.as_slice().to_vec();
+
+    let scenario = ScenarioConfig::by_name(preset)
+        .unwrap_or_else(|| panic!("unknown scenario preset `{preset}`"))
+        .with_seed(cfg.seed ^ 0x9A7);
+    let mut gen = ScenarioGen::new(scenario);
+    let mut next_id = apps.iter().map(|a| a.id.0 + 1).max().unwrap_or(0);
+
+    for round in 0..cfg.rounds {
+        for event in gen.events_for_round(round, &apps, &tiers, next_id) {
+            match event {
+                FleetEvent::DemandDrift { app, demand } => {
+                    if let Some(i) = apps.iter().position(|a| a.id == app) {
+                        apps[i].demand = demand;
+                    }
+                }
+                FleetEvent::Arrival { app } => {
+                    if apps.len() >= cfg.max_apps {
+                        continue;
+                    }
+                    // Land on the first tier supporting the app's SLO —
+                    // the fleet engine's placement rule — which is always
+                    // in the app's allowed set.
+                    let tier = tiers_for_slo(app.slo, tiers.len())
+                        .first()
+                        .copied()
+                        .unwrap_or(TierId(0));
+                    next_id = next_id.max(app.id.0 + 1);
+                    apps.push(app);
+                    initial.push(tier);
+                }
+                FleetEvent::Departure { app } => {
+                    if let Some(i) = apps.iter().position(|a| a.id == app) {
+                        apps.remove(i);
+                        initial.remove(i);
+                    }
+                }
+                // Structural events are excluded from the gap grid; skip
+                // defensively if a custom preset emits them.
+                FleetEvent::TierCapacityChange { .. } | FleetEvent::RegionOutage { .. } => {}
+            }
+        }
+    }
+    (apps, tiers, initial)
+}
+
+/// Build the cell's problem: shared instance, per-mix weights, and the
+/// fabricated forecast when the mix arms the predicted-headroom term.
+pub fn build_problem(
+    cfg: &GapConfig,
+    apps: &[App],
+    tiers: &[Tier],
+    initial: &[TierId],
+    mix: &str,
+) -> Problem {
+    let weights =
+        mix_weights(mix).unwrap_or_else(|| panic!("unknown goal-weight mix `{mix}`"));
+    let mut problem = Problem::build(
+        apps,
+        tiers,
+        Assignment::new(initial.to_vec()),
+        cfg.movement_fraction,
+        weights,
+    )
+    .expect("gap instance must build");
+    if problem.weights.predicted_headroom > 0.0 {
+        problem.predicted_demand =
+            problem.apps.iter().map(|a| a.demand.scale(FORECAST_FACTOR)).collect();
+        debug_assert!(problem.forecast_active());
+    }
+    problem
+}
+
+/// Measure one cell: exhaustive exact, LocalSearch, LP tightening loop.
+pub fn measure_cell(cfg: &GapConfig, preset: &str, mix: &str, problem: &Problem) -> GapCell {
+    let sw = Stopwatch::start();
+    let exact = exhaustive_search(problem, Deadline::after_ms(cfg.exact_ms));
+    let exact_ms = sw.elapsed_ms();
+
+    let sw = Stopwatch::start();
+    let local = LocalSearch::with_seed(cfg.seed).solve(problem, Deadline::after_ms(cfg.local_ms));
+    let local_ms = sw.elapsed_ms();
+
+    let sw = Stopwatch::start();
+    let lp = OptimalSearch::with_seed(cfg.seed).build_lp(problem);
+    let tight =
+        tighten_lp(lp, cfg.tighten_max_rounds, cfg.lp_iters, Deadline::after_ms(cfg.exact_ms));
+    let lp_ms = sw.elapsed_ms();
+
+    GapCell {
+        preset: preset.to_string(),
+        mix: mix.to_string(),
+        n_apps: problem.n_apps(),
+        exact_objective: exact.solution.score,
+        exact_complete: exact.complete,
+        exact_states: exact.states_scored,
+        exact_ms,
+        local_objective: local.score,
+        local_ms,
+        gap: relative_gap(exact.solution.score, local.score),
+        lp_objective: tight.objective,
+        lp_tighten_rounds: tight.rounds,
+        lp_certified: tight.certified,
+        lp_ms,
+    }
+}
+
+/// Run the full preset × mix grid.
+pub fn run(cfg: &GapConfig) -> GapReport {
+    let mut cells = Vec::new();
+    for preset in &cfg.presets {
+        let (apps, tiers, initial) = evolve_instance(cfg, preset);
+        for mix in &cfg.mixes {
+            let problem = build_problem(cfg, &apps, &tiers, &initial, mix);
+            cells.push(measure_cell(cfg, preset, mix, &problem));
+        }
+    }
+    GapReport { seed: cfg.seed, smoke: cfg.smoke, cells }
+}
+
+/// Derive a baseline JSON from a measured report: per-cell gap ceilings
+/// with multiplicative and additive headroom so run-to-run LocalSearch
+/// variance does not trip the gate. This is what
+/// `bench gap --write-baseline <path>` commits.
+pub fn baseline_from(report: &GapReport, headroom: f64) -> Json {
+    let cells = report
+        .cells
+        .iter()
+        .map(|c| {
+            let ceiling = (c.gap * 1.5 + headroom).max(headroom);
+            // Round up to 4 decimals for a stable, reviewable file.
+            (c.key(), Json::num((ceiling * 1e4).ceil() / 1e4))
+        })
+        .collect::<Vec<_>>();
+    Json::obj(vec![
+        ("kind", Json::str("gap_baseline")),
+        (
+            "note",
+            Json::str(
+                "Per-cell max allowed optimality gap; regenerate with \
+                 `sptlb bench gap --write-baseline rust/gap_baseline.json`.",
+            ),
+        ),
+        ("cells", Json::Obj(cells.into_iter().collect())),
+    ])
+}
+
+/// Gate a fresh report against a committed baseline. Returns the list of
+/// regressions (empty = pass): a cell fails when its gap exceeds the
+/// baseline ceiling by more than `tolerance`, when its exact enumeration
+/// did not complete (no quality information), or when the baseline has
+/// no entry for it (the grid changed — regenerate the baseline).
+pub fn gate_against_baseline(report: &GapReport, baseline: &Json, tolerance: f64) -> Vec<String> {
+    let ceilings = baseline.get("cells");
+    let mut failures = Vec::new();
+    for cell in &report.cells {
+        let key = cell.key();
+        if !cell.exact_complete {
+            failures.push(format!(
+                "cell {key}: exhaustive enumeration incomplete ({} states) — raise --exact-ms",
+                cell.exact_states
+            ));
+            continue;
+        }
+        match ceilings.get(&key).as_f64() {
+            None => failures.push(format!(
+                "cell {key}: missing from baseline — regenerate with `bench gap --write-baseline`"
+            )),
+            Some(ceiling) => {
+                if cell.gap > ceiling + tolerance {
+                    failures.push(format!(
+                        "cell {key}: gap {:.4} exceeds baseline {:.4} + tolerance {:.4} \
+                         (exact {:.4}, local {:.4})",
+                        cell.gap, ceiling, tolerance, cell.exact_objective, cell.local_objective
+                    ));
+                }
+            }
+        }
+    }
+    failures
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixes_resolve_and_unknown_is_none() {
+        for name in MIXES {
+            assert!(mix_weights(name).is_some(), "{name}");
+        }
+        assert!(mix_weights("zzz").is_none());
+        // Each mix is a genuinely different weighting.
+        let ws: Vec<GoalWeights> = MIXES.iter().map(|m| mix_weights(m).unwrap()).collect();
+        for i in 0..ws.len() {
+            for j in i + 1..ws.len() {
+                assert_ne!(ws[i], ws[j], "{} vs {}", MIXES[i], MIXES[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn relative_gap_is_clamped_and_shifted() {
+        assert_eq!(relative_gap(10.0, 10.0), 0.0);
+        assert_eq!(relative_gap(10.0, 9.0), 0.0, "fp noise clamps to zero");
+        assert!((relative_gap(10.0, 21.0) - 1.0).abs() < 1e-12);
+        // Near-zero exact optima do not explode the ratio.
+        assert!(relative_gap(0.0, 0.01) <= 0.01 + 1e-12);
+    }
+
+    #[test]
+    fn tighten_certifies_a_true_lp_optimum() {
+        // min 2x+3y s.t. x+y >= 10, x <= 6 — optimum 24 (x=6, y=4).
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, 2.0);
+        lp.set_objective(1, 3.0);
+        lp.add_row(vec![(0, 1.0), (1, 1.0)], Sense::Ge, 10.0);
+        lp.add_row(vec![(0, 1.0)], Sense::Le, 6.0);
+        let direct = match lp.solve(200) {
+            LpOutcome::Optimal { objective, .. } => objective,
+            other => panic!("{other:?}"),
+        };
+        let t = tighten_lp(lp, 8, 200, Deadline::unbounded());
+        assert!(t.certified, "loop must reach Infeasible");
+        assert!(t.rounds >= 1);
+        let obj = t.objective.expect("incumbent");
+        assert!((obj - direct).abs() < 1e-6, "tightened {obj} vs direct {direct}");
+    }
+
+    #[test]
+    fn tighten_reports_initial_infeasibility() {
+        let mut lp = Lp::new(1);
+        lp.set_objective(0, 1.0);
+        lp.add_row(vec![(0, 1.0)], Sense::Le, 1.0);
+        lp.add_row(vec![(0, 1.0)], Sense::Ge, 2.0);
+        let t = tighten_lp(lp, 8, 100, Deadline::unbounded());
+        assert_eq!(t.objective, None);
+        assert!(!t.certified);
+        assert_eq!(t.rounds, 0);
+    }
+
+    fn synthetic_report(gaps: &[(&str, &str, f64)]) -> GapReport {
+        GapReport {
+            seed: 1,
+            smoke: true,
+            cells: gaps
+                .iter()
+                .map(|&(preset, mix, gap)| GapCell {
+                    preset: preset.to_string(),
+                    mix: mix.to_string(),
+                    n_apps: 7,
+                    exact_objective: 10.0,
+                    exact_complete: true,
+                    exact_states: 100,
+                    exact_ms: 1.0,
+                    local_objective: 10.0 + gap * 11.0,
+                    local_ms: 1.0,
+                    gap,
+                    lp_objective: Some(5.0),
+                    lp_tighten_rounds: 1,
+                    lp_certified: true,
+                    lp_ms: 1.0,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn gate_passes_at_baseline_and_fails_on_injected_regression() {
+        let report = synthetic_report(&[("steady", "balanced", 0.02), ("drift", "balanced", 0.05)]);
+        let baseline = baseline_from(&report, 0.05);
+        assert!(gate_against_baseline(&report, &baseline, 0.05).is_empty());
+
+        // Inject a quality regression into one cell: the gate must fail
+        // it and name the cell.
+        let mut worse = report.clone();
+        worse.cells[1].gap = 0.9;
+        worse.cells[1].local_objective = 10.0 + 0.9 * 11.0;
+        let failures = gate_against_baseline(&worse, &baseline, 0.05);
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("drift/balanced"), "{}", failures[0]);
+    }
+
+    #[test]
+    fn gate_fails_on_missing_baseline_cell_and_incomplete_exact() {
+        let report = synthetic_report(&[("steady", "balanced", 0.0), ("churn", "balanced", 0.0)]);
+        let baseline = baseline_from(&synthetic_report(&[("steady", "balanced", 0.0)]), 0.05);
+        let failures = gate_against_baseline(&report, &baseline, 0.05);
+        assert_eq!(failures.len(), 1);
+        assert!(failures[0].contains("missing from baseline"), "{}", failures[0]);
+
+        let mut incomplete = report.clone();
+        incomplete.cells[0].exact_complete = false;
+        let failures = gate_against_baseline(&incomplete, &baseline, 0.05);
+        assert!(failures.iter().any(|f| f.contains("incomplete")), "{failures:?}");
+    }
+
+    #[test]
+    fn baseline_roundtrips_through_json_text() {
+        let report = synthetic_report(&[("steady", "balanced", 0.02)]);
+        let baseline = baseline_from(&report, 0.05);
+        let parsed = Json::parse(&baseline.pretty()).expect("valid json");
+        assert!(gate_against_baseline(&report, &parsed, 0.05).is_empty());
+        assert!(parsed.get("cells").get("steady/balanced").as_f64().is_some());
+    }
+
+    #[test]
+    fn evolved_instances_stay_tractable_and_aligned() {
+        let cfg = GapConfig::smoke();
+        for preset in ScenarioConfig::GAP_PRESETS {
+            let (apps, tiers, initial) = evolve_instance(&cfg, preset);
+            assert!(apps.len() <= cfg.max_apps, "{preset}: {} apps", apps.len());
+            assert!(apps.len() >= cfg.n_tiers, "{preset}");
+            assert_eq!(apps.len(), initial.len(), "{preset}");
+            assert_eq!(tiers.len(), cfg.n_tiers, "{preset}");
+            // Every initial placement must be buildable.
+            for mix in MIXES {
+                let p = build_problem(&cfg, &apps, &tiers, &initial, mix);
+                assert_eq!(p.n_apps(), apps.len());
+            }
+        }
+    }
+
+    #[test]
+    fn predicted_headroom_mix_arms_the_forecast() {
+        let cfg = GapConfig::smoke();
+        let (apps, tiers, initial) = evolve_instance(&cfg, "steady");
+        let armed = build_problem(&cfg, &apps, &tiers, &initial, "predicted_headroom");
+        assert!(armed.forecast_active());
+        let plain = build_problem(&cfg, &apps, &tiers, &initial, "balanced");
+        assert!(!plain.forecast_active());
+    }
+
+    #[test]
+    fn single_cell_measurement_is_internally_consistent() {
+        let cfg = GapConfig { local_ms: 20, ..GapConfig::smoke() };
+        let (apps, tiers, initial) = evolve_instance(&cfg, "drift");
+        let p = build_problem(&cfg, &apps, &tiers, &initial, "balanced");
+        let cell = measure_cell(&cfg, "drift", "balanced", &p);
+        assert!(cell.exact_complete, "tiny instance must enumerate fully");
+        assert!(cell.exact_states >= 1);
+        // The exact optimum lower-bounds LocalSearch on the same problem.
+        assert!(
+            cell.exact_objective <= cell.local_objective + 1e-9,
+            "exact {} vs local {}",
+            cell.exact_objective,
+            cell.local_objective
+        );
+        assert!(cell.gap >= 0.0);
+    }
+}

@@ -61,6 +61,15 @@ pub const PREDICTED_HEADROOM_WEIGHT: f64 = 1e4;
 /// hard-capacity line is in sight.
 pub const HEADROOM_LIMIT: f64 = 0.9;
 
+/// Default movement budget as a fraction of the fleet (C3: at most this
+/// share of apps may switch tiers per round). Written as a literal rather
+/// than `1.0 - HEADROOM_LIMIT` so the derived integer budget
+/// (`floor(n_apps * fraction)`) is not perturbed by floating-point
+/// rounding; a test pins the two constants as complements. Every test bed
+/// and the gap harness plumb this one constant into `Problem::build` so
+/// exact and local-search solvers score against the same constraint set.
+pub const MOVEMENT_FRACTION: f64 = 0.10;
+
 /// Decade separation between consecutive priorities keeps the ordering
 /// effectively lexicographic while remaining a single scalar objective
 /// (what Rebalancer's weighted solvers consume).
@@ -133,6 +142,14 @@ mod tests {
         assert!(PREDICTED_HEADROOM_WEIGHT > 1e3);
         assert!(CAPACITY_WEIGHT >= 100.0 * PREDICTED_HEADROOM_WEIGHT);
         assert!((0.0..1.0).contains(&HEADROOM_LIMIT));
+    }
+
+    #[test]
+    fn movement_fraction_complements_headroom_limit() {
+        assert!((MOVEMENT_FRACTION - (1.0 - HEADROOM_LIMIT)).abs() < 1e-9);
+        assert!((0.0..=1.0).contains(&MOVEMENT_FRACTION));
+        // The paper fleet (120 apps) must keep its 12-move budget.
+        assert_eq!((120.0 * MOVEMENT_FRACTION).floor() as usize, 12);
     }
 
     #[test]

@@ -43,6 +43,11 @@ pub enum LpOutcome {
     /// Iteration limit hit; x is the best feasible point found (phase-2
     /// iterate) if any.
     IterationLimit,
+    /// Wall-clock deadline expired before the pivot budget ran out. Kept
+    /// distinct from [`LpOutcome::IterationLimit`] (and from
+    /// `Infeasible`) so anytime callers can tell "out of time" apart from
+    /// "proved infeasible" / "pivot budget exhausted".
+    DeadlineExpired,
 }
 
 impl Lp {
@@ -66,7 +71,10 @@ impl Lp {
     }
 
     /// Solve with a wall-clock deadline (checked every few pivots); on
-    /// expiry returns [`LpOutcome::IterationLimit`].
+    /// expiry returns [`LpOutcome::DeadlineExpired`]. With an unexpired
+    /// (e.g. [`crate::util::timer::Deadline::unbounded`]) deadline this
+    /// returns exactly what [`Lp::solve`] returns for the same instance
+    /// and pivot budget — both paths share one tableau implementation.
     pub fn solve_with_deadline(
         &self,
         max_iters: usize,
@@ -238,18 +246,21 @@ impl Tableau {
             if iter % 8 == 0 {
                 if let Some(d) = deadline {
                     if d.expired() {
-                        return Err(LpOutcome::IterationLimit);
+                        return Err(LpOutcome::DeadlineExpired);
                     }
                 }
             }
             let rc = self.reduced_costs(cost);
             // Entering column: Dantzig; Bland after a degeneracy streak.
+            // NaN-safe pricing: `total_cmp` never panics (degenerate goal
+            // weights can produce non-finite reduced costs) and the index
+            // tiebreak keeps pivot choice bit-stable across platforms.
             let entering = if degenerate_streak > 24 {
                 (0..col_limit).find(|&c| rc[c] < -EPS)
             } else {
                 (0..col_limit)
                     .filter(|&c| rc[c] < -EPS)
-                    .min_by(|&x, &y| rc[x].partial_cmp(&rc[y]).unwrap())
+                    .min_by(|&x, &y| rc[x].total_cmp(&rc[y]).then(x.cmp(&y)))
             };
             let Some(pc) = entering else {
                 return Ok(iter);
@@ -332,7 +343,10 @@ impl Tableau {
                 LpOutcome::Optimal { x, objective }
             }
             Err(LpOutcome::Unbounded) => LpOutcome::Unbounded,
-            Err(_) => LpOutcome::IterationLimit,
+            // Preserve the deadline/pivot-budget distinction: phase 2 used
+            // to collapse every error into IterationLimit, which made a
+            // hit deadline indistinguishable from an exhausted budget.
+            Err(other) => other,
         }
     }
 }
@@ -459,6 +473,71 @@ mod tests {
         lp.set_objective(0, -1.0);
         lp.add_row(vec![(0, 1.0), (1, 1.0)], Sense::Le, 2.0);
         assert_eq!(lp.solve(0), LpOutcome::IterationLimit);
+    }
+
+    #[test]
+    fn expired_deadline_is_distinguishable() {
+        // A hit deadline must not masquerade as Infeasible or as a pivot
+        // budget exhaustion — callers need to tell the three apart.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, 1.0);
+        lp.set_objective(1, 2.0);
+        lp.add_row(vec![(0, 1.0), (1, 1.0)], Sense::Ge, 4.0);
+        lp.add_row(vec![(0, 1.0)], Sense::Le, 1.0);
+        let dead = crate::util::timer::Deadline::after(std::time::Duration::ZERO);
+        assert_eq!(lp.solve_with_deadline(10_000, dead), LpOutcome::DeadlineExpired);
+        // The pivot budget path still reports IterationLimit.
+        assert_eq!(lp.solve(0), LpOutcome::IterationLimit);
+    }
+
+    #[test]
+    fn solve_and_solve_with_deadline_agree_when_not_expired() {
+        // Pin: with an unexpired deadline both entry points return the
+        // same LpOutcome for the same instance, across outcome kinds.
+        let unbounded = crate::util::timer::Deadline::unbounded;
+
+        // Optimal.
+        let mut opt = Lp::new(2);
+        opt.set_objective(0, 2.0);
+        opt.set_objective(1, 3.0);
+        opt.add_row(vec![(0, 1.0), (1, 1.0)], Sense::Ge, 10.0);
+        opt.add_row(vec![(0, 1.0)], Sense::Le, 6.0);
+        assert_eq!(opt.solve(200), opt.solve_with_deadline(200, unbounded()));
+
+        // Infeasible.
+        let mut infeas = Lp::new(1);
+        infeas.set_objective(0, 1.0);
+        infeas.add_row(vec![(0, 1.0)], Sense::Le, 1.0);
+        infeas.add_row(vec![(0, 1.0)], Sense::Ge, 2.0);
+        assert_eq!(infeas.solve(100), infeas.solve_with_deadline(100, unbounded()));
+        assert_eq!(infeas.solve(100), LpOutcome::Infeasible);
+
+        // Unbounded.
+        let mut unb = Lp::new(1);
+        unb.set_objective(0, -1.0);
+        unb.add_row(vec![(0, 1.0)], Sense::Ge, 0.0);
+        assert_eq!(unb.solve(100), unb.solve_with_deadline(100, unbounded()));
+        assert_eq!(unb.solve(100), LpOutcome::Unbounded);
+
+        // Iteration limit (pivot budget, not wall clock).
+        let mut lim = Lp::new(2);
+        lim.set_objective(0, -1.0);
+        lim.add_row(vec![(0, 1.0), (1, 1.0)], Sense::Le, 2.0);
+        assert_eq!(lim.solve(0), lim.solve_with_deadline(0, unbounded()));
+        assert_eq!(lim.solve(0), LpOutcome::IterationLimit);
+    }
+
+    #[test]
+    fn nan_objective_does_not_panic() {
+        // Degenerate goal-weight mixes can leak non-finite costs into the
+        // pricing loop; total_cmp keeps entering-column selection total.
+        let mut lp = Lp::new(2);
+        lp.set_objective(0, f64::NAN);
+        lp.set_objective(1, -1.0);
+        lp.add_row(vec![(0, 1.0)], Sense::Le, 2.0);
+        lp.add_row(vec![(1, 1.0)], Sense::Le, 3.0);
+        // Any outcome is acceptable; the property under test is "no panic".
+        let _ = lp.solve(100);
     }
 
     #[test]

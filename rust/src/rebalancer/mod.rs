@@ -4,6 +4,7 @@
 //! types). This module is our from-scratch implementation of that surface.
 
 pub mod constraints;
+pub mod gap;
 pub mod goals;
 pub mod local_search;
 pub mod lp;
@@ -13,9 +14,10 @@ pub mod scoring;
 pub mod solution;
 
 pub use constraints::{is_feasible, validate, Violation};
+pub use gap::{GapCell, GapConfig, GapReport};
 pub use goals::{weights_from_priorities, Goal};
 pub use local_search::{LocalSearch, LocalSearchConfig, ParallelConfig, ShardStrategy};
-pub use optimal::{OptimalSearch, OptimalSearchConfig};
+pub use optimal::{exhaustive_search, ExhaustiveResult, OptimalSearch, OptimalSearchConfig};
 pub use problem::{EventDirty, GoalWeights, Problem, ProblemApp, ProblemTier};
 pub use scoring::{refresh_tier_loads, score_assignment, tier_loads, Breakdown, ScoreState};
 pub use solution::{Solution, SolveStats, SolverKind};

@@ -153,8 +153,10 @@ impl OptimalSearch {
         best
     }
 
-    /// Build the LP relaxation.
-    fn build_lp(&self, problem: &Problem) -> Lp {
+    /// Build the LP relaxation. Public so the gap harness
+    /// (`rebalancer::gap`) and the quality-harness integration tests can
+    /// drive the same relaxation through the bound-tightening loop.
+    pub fn build_lp(&self, problem: &Problem) -> Lp {
         let vm = VarMap::build(problem);
         let mut lp = Lp::new(vm.n_vars);
         let n_tiers = problem.n_tiers();
@@ -294,14 +296,116 @@ impl OptimalSearch {
             tier_of.push(chosen);
         }
         // Budget repair: keep the strongest-supported moves only.
+        // NaN-safe: total_cmp cannot panic on non-finite LP fractions and
+        // the app-index tiebreak keeps the kept-move set deterministic.
         if moved.len() > problem.max_moves {
-            moved.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            moved.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
             for &(a, _) in &moved[problem.max_moves..] {
                 tier_of[a] = problem.initial.as_slice()[a];
             }
         }
         Assignment::new(tier_of)
     }
+}
+
+/// Result of [`exhaustive_search`]. `complete` reports whether the
+/// enumeration visited every feasible assignment: only then is
+/// `solution.score` the exact optimum of the (quadratic) scoring
+/// objective; on deadline expiry it is merely the best state visited.
+#[derive(Debug, Clone)]
+pub struct ExhaustiveResult {
+    pub solution: Solution,
+    pub complete: bool,
+    /// Leaves scored (= feasible assignments under the movement budget
+    /// and transition policy).
+    pub states_scored: u64,
+}
+
+/// Exact optimum by exhaustive enumeration — tractable only on the small
+/// instances the gap harness builds (≤ 8 apps × ≤ 3 tiers ⇒ ≤ 6561
+/// leaves). Enumerates, per app, the initial tier (always legal to keep)
+/// plus every allowed tier reachable under the transition policy; prunes
+/// branches that exceed the movement budget; scores each leaf with the
+/// true quadratic objective. First-found-best with lexicographic DFS
+/// order makes ties deterministic.
+pub fn exhaustive_search(problem: &Problem, deadline: Deadline) -> ExhaustiveResult {
+    let mut candidates: Vec<Vec<TierId>> = Vec::with_capacity(problem.n_apps());
+    for (a, app) in problem.apps.iter().enumerate() {
+        let init = problem.initial.as_slice()[a];
+        let mut cs = vec![init];
+        for &t in &app.allowed {
+            if t != init && problem.transition_allowed(init, t) {
+                cs.push(t);
+            }
+        }
+        candidates.push(cs);
+    }
+
+    let mut st = ExhaustiveState {
+        problem,
+        candidates,
+        deadline,
+        current: problem.initial.as_slice().to_vec(),
+        best: problem.initial.as_slice().to_vec(),
+        best_score: f64::INFINITY,
+        states: 0,
+        complete: true,
+    };
+    descend(&mut st, 0, 0);
+
+    let mut solution = Solution::of_assignment(
+        problem,
+        Assignment::new(st.best),
+        SolverKind::OptimalSearch,
+    );
+    solution.stats.candidates_scored = st.states;
+    solution.stats.elapsed = deadline.elapsed();
+    solution.stats.converged_at = deadline.elapsed();
+    ExhaustiveResult { solution, complete: st.complete, states_scored: st.states }
+}
+
+struct ExhaustiveState<'p> {
+    problem: &'p Problem,
+    candidates: Vec<Vec<TierId>>,
+    deadline: Deadline,
+    current: Vec<TierId>,
+    best: Vec<TierId>,
+    best_score: f64,
+    states: u64,
+    complete: bool,
+}
+
+fn descend(st: &mut ExhaustiveState<'_>, app: usize, moves_used: usize) {
+    if !st.complete {
+        return;
+    }
+    if app == st.problem.n_apps() {
+        st.states += 1;
+        // Anytime: poll the deadline per scored leaf, never mid-branch, so
+        // a completed run is bit-identical regardless of wall clock.
+        if st.states % 64 == 0 && st.deadline.expired() {
+            st.complete = false;
+            return;
+        }
+        let assignment = Assignment::new(st.current.clone());
+        let (score, _) = score_assignment(st.problem, &assignment);
+        if score < st.best_score {
+            st.best_score = score;
+            st.best.copy_from_slice(&st.current);
+        }
+        return;
+    }
+    let tiers = st.candidates[app].clone();
+    for &t in &tiers {
+        let moved = t != st.problem.initial.as_slice()[app];
+        let next_moves = moves_used + usize::from(moved);
+        if next_moves > st.problem.max_moves {
+            continue;
+        }
+        st.current[app] = t;
+        descend(st, app + 1, next_moves);
+    }
+    st.current[app] = st.problem.initial.as_slice()[app];
 }
 
 /// LocalSearch wrapper that starts from a given assignment instead of the
@@ -339,7 +443,16 @@ mod tests {
 
     fn paper_problem(seed: u64) -> Problem {
         let bed = generate(&WorkloadSpec::paper().with_seed(seed));
-        Problem::build(&bed.apps, &bed.tiers, bed.initial, 0.10, GoalWeights::default()).unwrap()
+        // Movement budget comes from the shared goals constant so this
+        // bed scores against the same constraint set as the gap harness.
+        Problem::build(
+            &bed.apps,
+            &bed.tiers,
+            bed.initial,
+            crate::rebalancer::goals::MOVEMENT_FRACTION,
+            GoalWeights::default(),
+        )
+        .unwrap()
     }
 
     #[test]
@@ -405,6 +518,58 @@ mod tests {
         let sol = OptimalSearch::with_seed(5).solve(&p, Deadline::after_ms(0));
         let (initial_score, _) = score_assignment(&p, &p.initial.clone());
         assert!(sol.score <= initial_score + 1e-9);
+    }
+
+    #[test]
+    fn exhaustive_finds_exact_optimum_on_tiny_instance() {
+        let bed = generate(&WorkloadSpec::small().with_seed(3));
+        // Truncate to 6 apps so full enumeration stays tiny.
+        let apps = &bed.apps[..6];
+        let initial = Assignment::new(bed.initial.as_slice()[..6].to_vec());
+        let p = Problem::build(
+            apps,
+            &bed.tiers,
+            initial,
+            0.5,
+            GoalWeights::default(),
+        )
+        .unwrap();
+        let exact = exhaustive_search(&p, Deadline::unbounded());
+        assert!(exact.complete, "unbounded deadline must finish enumeration");
+        assert!(exact.states_scored >= 1);
+        // Exact ≤ every other solver on the same problem, by construction.
+        let local = LocalSearch::with_seed(1).solve(&p, Deadline::after_ms(100));
+        assert!(
+            exact.solution.score <= local.score + 1e-9,
+            "exact {} vs local {}",
+            exact.solution.score,
+            local.score
+        );
+        // The movement budget is a hard constraint on the exact optimum too.
+        assert!(exact.solution.assignment.move_count_from(&p.initial) <= p.max_moves);
+    }
+
+    #[test]
+    fn exhaustive_is_deterministic() {
+        let bed = generate(&WorkloadSpec::small().with_seed(9));
+        let apps = &bed.apps[..5];
+        let initial = Assignment::new(bed.initial.as_slice()[..5].to_vec());
+        let p = Problem::build(apps, &bed.tiers, initial, 0.4, GoalWeights::default()).unwrap();
+        let a = exhaustive_search(&p, Deadline::unbounded());
+        let b = exhaustive_search(&p, Deadline::unbounded());
+        assert_eq!(a.solution.assignment.as_slice(), b.solution.assignment.as_slice());
+        assert_eq!(a.states_scored, b.states_scored);
+        assert!(a.complete && b.complete);
+    }
+
+    #[test]
+    fn exhaustive_expired_deadline_degrades_gracefully() {
+        let p = paper_problem(42); // 120 apps — enumeration cannot finish
+        let r = exhaustive_search(&p, Deadline::after(std::time::Duration::ZERO));
+        assert!(!r.complete, "a zero deadline cannot complete 120-app enumeration");
+        // Still returns a scored, budget-respecting assignment.
+        assert!(r.solution.score.is_finite());
+        assert!(r.solution.assignment.move_count_from(&p.initial) <= p.max_moves);
     }
 
     #[test]

@@ -152,6 +152,15 @@ impl ScenarioConfig {
         "steady", "drift", "churn", "spike", "outage", "mixed", "diurnal", "burst",
     ];
 
+    /// The presets the optimality-gap harness sweeps (`bench gap`): every
+    /// single-region preset except `outage` and `mixed`, whose capacity
+    /// collapse on tiny (≤8-app) instances would measure constraint
+    /// repair rather than goal quality. Kept here, next to [`PRESETS`],
+    /// so the harness grid cannot drift from the scenario source of
+    /// truth.
+    pub const GAP_PRESETS: [&'static str; 6] =
+        ["steady", "drift", "churn", "spike", "diurnal", "burst"];
+
     pub fn by_name(name: &str) -> Option<Self> {
         match name {
             "steady" => Some(Self::steady()),
@@ -520,6 +529,17 @@ mod tests {
         assert!(ScenarioConfig::PRESETS.contains(&"diurnal"));
         assert!(ScenarioConfig::PRESETS.contains(&"burst"));
         assert!(ScenarioConfig::by_name("zzz").is_none());
+    }
+
+    #[test]
+    fn gap_presets_are_a_resolvable_subset() {
+        for name in ScenarioConfig::GAP_PRESETS {
+            assert!(ScenarioConfig::by_name(name).is_some(), "{name}");
+            assert!(ScenarioConfig::PRESETS.contains(&name), "{name}");
+        }
+        // The gap grid deliberately skips the capacity-collapse presets.
+        assert!(!ScenarioConfig::GAP_PRESETS.contains(&"outage"));
+        assert!(!ScenarioConfig::GAP_PRESETS.contains(&"mixed"));
     }
 
     #[test]

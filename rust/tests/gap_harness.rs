@@ -1,0 +1,205 @@
+//! Integration tests for the optimality-gap harness (`rebalancer::gap`).
+//!
+//! Property layer: on random tiny instances (≤ 8 apps, ≤ 3 tiers) the
+//! three solver paths must agree — exhaustive enumeration is the ground
+//! truth, LocalSearch can never beat it, and the LP relaxation's
+//! feasibility verdict must match the integer search. Grid layer: the
+//! full preset × mix run covers the shape the CI gap-gate consumes, and
+//! the gate itself is demonstrated to pass at a derived baseline and
+//! fail on an injected regression.
+
+use sptlb::rebalancer::gap::{self, GapConfig};
+use sptlb::rebalancer::lp::LpOutcome;
+use sptlb::rebalancer::{exhaustive_search, score_assignment, LocalSearch, OptimalSearch};
+use sptlb::util::json::Json;
+use sptlb::util::propcheck::{forall, gen, Check};
+use sptlb::util::timer::Deadline;
+use sptlb::workload::{generate, WorkloadSpec};
+
+#[derive(Debug)]
+struct TinyCase {
+    seed: u64,
+    n_apps: usize,
+    n_tiers: usize,
+}
+
+fn tiny_case(rng: &mut sptlb::util::prng::Pcg64) -> TinyCase {
+    TinyCase {
+        seed: rng.next_u64(),
+        // generate() asserts n_apps >= n_tiers (4 > 3 keeps that true);
+        // cap at 8 so 3^8 states stay enumerable inside the test budget.
+        n_apps: gen::usize_in(rng, 4, 9),
+        n_tiers: gen::usize_in(rng, 2, 4),
+    }
+}
+
+/// Exhaustive search, the LP bound-tightening loop, and LocalSearch agree
+/// on random tiny instances across every goal-weight mix:
+/// - enumeration completes and its optimum lower-bounds LocalSearch;
+/// - a capacity-feasible integer optimum implies a feasible LP (the
+///   indicator point satisfies every relaxation row), so the LP may
+///   report `Infeasible` only when no feasible integer assignment exists;
+/// - when the LP is solvable, the tightening loop produces an incumbent.
+#[test]
+fn solvers_agree_on_random_tiny_instances() {
+    let cfg = GapConfig { movement_fraction: 0.5, ..GapConfig::default() };
+    forall(12, tiny_case, |case| {
+        let mut spec = WorkloadSpec::small().with_seed(case.seed);
+        spec.n_apps = case.n_apps;
+        spec.n_tiers = case.n_tiers;
+        let bed = generate(&spec);
+
+        for mix in gap::MIXES {
+            let problem =
+                gap::build_problem(&cfg, &bed.apps, &bed.tiers, bed.initial.as_slice(), mix);
+
+            let exact = exhaustive_search(&problem, Deadline::unbounded());
+            if !exact.complete {
+                return Check::fail(&format!(
+                    "mix {mix}: exhaustive enumeration incomplete under an unbounded deadline"
+                ));
+            }
+            let local =
+                LocalSearch::with_seed(case.seed).solve(&problem, Deadline::after_ms(15));
+            if exact.solution.score > local.score + 1e-9 {
+                return Check::fail(&format!(
+                    "mix {mix}: exhaustive optimum {} worse than LocalSearch {}",
+                    exact.solution.score, local.score
+                ));
+            }
+            if gap::relative_gap(exact.solution.score, local.score) < 0.0 {
+                return Check::fail("relative gap went negative");
+            }
+
+            let lp = OptimalSearch::with_seed(case.seed).build_lp(&problem);
+            let probe = lp.solve(50_000);
+            let (_, breakdown) = score_assignment(&problem, &exact.solution.assignment);
+            if breakdown.is_capacity_feasible() && probe == LpOutcome::Infeasible {
+                return Check::fail(&format!(
+                    "mix {mix}: integer optimum is capacity-feasible but the LP \
+                     relaxation claims Infeasible"
+                ));
+            }
+            if let LpOutcome::Optimal { objective, .. } = &probe {
+                let tight = gap::tighten_lp(lp, 8, 50_000, Deadline::unbounded());
+                match tight.objective {
+                    None => {
+                        return Check::fail(&format!(
+                            "mix {mix}: LP solvable (objective {objective}) but the \
+                             tightening loop produced no incumbent"
+                        ))
+                    }
+                    Some(inc) => {
+                        // The loop keeps the best incumbent, so it can
+                        // only match or improve the one-shot solve.
+                        if inc > objective + 1e-6 {
+                            return Check::fail(&format!(
+                                "mix {mix}: tightened incumbent {inc} worse than \
+                                 one-shot LP optimum {objective}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Check::pass()
+    });
+}
+
+/// `floor(6 × MOVEMENT_FRACTION) = 0` moves: with no movement budget all
+/// solvers are pinned to the incumbent assignment, so the gap is exactly
+/// zero. This pins the harness's behaviour at the budget edge instead of
+/// letting a zero-move cell masquerade as "LocalSearch matched optimal".
+#[test]
+fn zero_move_budget_pins_every_solver_to_the_incumbent() {
+    let mut spec = WorkloadSpec::small().with_seed(11);
+    spec.n_apps = 6;
+    spec.n_tiers = 3;
+    let bed = generate(&spec);
+    let cfg = GapConfig {
+        movement_fraction: sptlb::rebalancer::goals::MOVEMENT_FRACTION,
+        ..GapConfig::default()
+    };
+    let problem =
+        gap::build_problem(&cfg, &bed.apps, &bed.tiers, bed.initial.as_slice(), "balanced");
+    assert_eq!(problem.max_moves, 0);
+
+    let exact = exhaustive_search(&problem, Deadline::unbounded());
+    assert!(exact.complete);
+    assert_eq!(exact.solution.assignment.as_slice(), problem.initial.as_slice());
+
+    let local = LocalSearch::with_seed(11).solve(&problem, Deadline::after_ms(10));
+    assert_eq!(local.assignment.as_slice(), problem.initial.as_slice());
+    assert_eq!(gap::relative_gap(exact.solution.score, local.score), 0.0);
+}
+
+/// The full preset × mix grid: every cell present exactly once, exact
+/// enumeration complete everywhere, and the committed CI baseline covers
+/// the whole grid so the gate can never fail on a missing key.
+#[test]
+fn full_grid_covers_every_preset_mix_cell() {
+    let mut cfg = GapConfig::smoke();
+    // Tests share CI cores with the rest of the suite: keep the local
+    // budget minimal and give enumeration slack so `exact_complete`
+    // cannot flake under load.
+    cfg.local_ms = 10;
+    cfg.exact_ms = 5_000;
+    let report = gap::run(&cfg);
+
+    assert_eq!(report.cells.len(), 24, "6 presets × 4 mixes");
+    let keys: std::collections::BTreeSet<String> =
+        report.cells.iter().map(|c| c.key()).collect();
+    assert_eq!(keys.len(), 24, "cell keys must be unique");
+    let json = report.to_json();
+    assert_eq!(json.get("n_presets").as_f64(), Some(6.0));
+    assert_eq!(json.get("n_mixes").as_f64(), Some(4.0));
+    for cell in &report.cells {
+        assert!(cell.exact_complete, "cell {} did not finish enumeration", cell.key());
+        assert!(cell.gap >= 0.0, "cell {} has a negative gap", cell.key());
+        assert!(cell.n_apps <= cfg.max_apps, "cell {} outgrew the arrival cap", cell.key());
+    }
+
+    let committed = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/gap_baseline.json"
+    ))
+    .expect("committed baseline rust/gap_baseline.json must exist");
+    let baseline = Json::parse(&committed).expect("committed baseline must parse");
+    assert_eq!(baseline.get("kind").as_str(), Some("gap_baseline"));
+    for cell in &report.cells {
+        assert!(
+            baseline.get("cells").get(&cell.key()).as_f64().is_some(),
+            "committed baseline is missing cell {}",
+            cell.key()
+        );
+    }
+}
+
+/// End-to-end gate demonstration on a measured report: a baseline derived
+/// from the run passes, and injecting a regression into one cell makes
+/// the gate fail with a message naming exactly that cell.
+#[test]
+fn gate_passes_at_derived_baseline_and_fails_on_injected_regression() {
+    let mut cfg = GapConfig::smoke();
+    cfg.presets = vec!["steady".to_string(), "churn".to_string()];
+    cfg.local_ms = 10;
+    cfg.exact_ms = 5_000;
+    let report = gap::run(&cfg);
+    assert_eq!(report.cells.len(), 8);
+
+    let baseline = gap::baseline_from(&report, 0.05);
+    assert!(
+        gap::gate_against_baseline(&report, &baseline, 0.01).is_empty(),
+        "a report must pass the baseline derived from itself"
+    );
+
+    let mut regressed = report.clone();
+    regressed.cells[3].gap = 10.0;
+    let failures = gap::gate_against_baseline(&regressed, &baseline, 0.01);
+    assert_eq!(failures.len(), 1);
+    assert!(
+        failures[0].contains(&report.cells[3].key()),
+        "failure message must name the regressed cell: {}",
+        failures[0]
+    );
+}
