@@ -6,6 +6,9 @@
 //!  * PJRT batch scoring throughput (device path) vs the rust scorer,
 //!  * full pipeline latency (collect -> construct -> solve -> execute),
 //!  * coordinator rounds/sec (incremental vs rebuild),
+//!  * steady-state scale ladder (10k -> 100k -> 1M apps): zero-alloc
+//!    drift rounds through the engine fast path, with allocs/round
+//!    counted by a gated global allocator and peak RSS from VmHWM,
 //!  * multi-region rounds/sec vs region count at fixed fleet size.
 //!
 //! Run: cargo bench --bench perf_hotpath
@@ -15,8 +18,8 @@
 use sptlb::bench::{measure, smoke_mode, worker_ladder, write_bench_json};
 use sptlb::coop::AvoidRegistry;
 use sptlb::coordinator::{
-    Coordinator, CoordinatorConfig, EngineMode, MultiRegionConfig, MultiRegionCoordinator,
-    RegionExecution,
+    Coordinator, CoordinatorConfig, EngineMode, FleetEngine, FleetState, MultiRegionConfig,
+    MultiRegionCoordinator, RegionExecution,
 };
 use sptlb::forecast::{ForecastConfig, ForecasterKind};
 use sptlb::hierarchy::global::GlobalPolicy;
@@ -25,7 +28,7 @@ use sptlb::hierarchy::protocol::{CoopConfig, CoopProtocol};
 use sptlb::hierarchy::region::RegionScheduler;
 use sptlb::hierarchy::variants::Variant;
 use sptlb::metadata::MetadataStore;
-use sptlb::model::{AppId, Assignment, TierId};
+use sptlb::model::{AppId, Assignment, FleetEvent, TierId};
 use sptlb::rebalancer::problem::{GoalWeights, Problem};
 use sptlb::rebalancer::scoring::{score_assignment, ScoreState};
 use sptlb::rebalancer::{LocalSearch, LocalSearchConfig, OptimalSearch, ParallelConfig};
@@ -37,7 +40,58 @@ use sptlb::workload::{
     generate, generate_multiregion, MultiRegionScenario, MultiRegionSpec, ScenarioConfig,
     WorkloadSpec,
 };
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Duration;
+
+/// Gated counting allocator for the `[scale]` steady-state ladder: while
+/// `COUNTING` is set, every `alloc`/`realloc` bumps `ALLOCS`. The gate is
+/// off for the rest of the bench, so the only cost elsewhere is one
+/// relaxed atomic load per allocation.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static COUNTING: AtomicBool = AtomicBool::new(false);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Peak resident set (VmHWM) in MiB from /proc/self/status; `None` off
+/// Linux. Monotone over the process lifetime, so ladder rungs report a
+/// cumulative high-water mark.
+fn peak_rss_mb() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: f64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb / 1024.0)
+}
 
 fn main() {
     let smoke = smoke_mode();
@@ -69,7 +123,8 @@ fn main() {
         (0..1024)
             .map(|_| {
                 let a = rng.range(0, problem.n_apps());
-                let t = *rng.choose(&problem.apps[a].allowed).unwrap();
+                let al = problem.apps[a].allowed;
+                let t = al.nth(rng.range(0, al.len())).unwrap();
                 (a, t)
             })
             .collect()
@@ -85,7 +140,7 @@ fn main() {
         let mut acc = 0.0;
         for &(a, t) in &moves {
             let mut asg = problem.initial.clone();
-            asg.set(sptlb::model::AppId(a), t);
+            asg.set(sptlb::model::AppId::from_usize(a), t);
             acc += score_assignment(&problem, &asg).0;
         }
         acc
@@ -110,8 +165,9 @@ fn main() {
                     let mut asg = problem.initial.clone();
                     for _ in 0..4 {
                         let a = rng.range(0, problem.n_apps());
-                        let t = *rng.choose(&problem.apps[a].allowed).unwrap();
-                        asg.set(sptlb::model::AppId(a), t);
+                        let al = problem.apps[a].allowed;
+                        let t = al.nth(rng.range(0, al.len())).unwrap();
+                        asg.set(sptlb::model::AppId::from_usize(a), t);
                     }
                     asg
                 })
@@ -261,6 +317,108 @@ fn main() {
         ]),
     );
 
+    // --- steady-state scale ladder: zero-alloc drift rounds ----------------
+    // The million-app claim: after one full priming round, drift-only
+    // rounds go through the engine fast path (FleetEngine::apply_events)
+    // — slot-table fleet advance, in-place problem patch, masked tier
+    // refresh, warm solve into recycled scratch — and must not touch the
+    // allocator at all. Allocations are counted by the gated global
+    // allocator above; `steady_allocs_per_round` in BENCH_scale.json is
+    // the CI gate (must be 0).
+    println!("\n[scale] steady-state ladder: arena-backed drift rounds (zero-alloc target)");
+    let ladder: &[usize] =
+        if smoke { &[10_000] } else { &[10_000, 100_000, 1_000_000] };
+    let drifts_per_round = 64usize;
+    let mut rungs: Vec<Json> = Vec::new();
+    let mut steady_allocs_max = 0.0f64;
+    for &n_apps in ladder {
+        let scale_bed = generate(&WorkloadSpec::paper().with_apps(n_apps));
+        let latency = scale_bed.latency.clone();
+        // Small sample counts + short solver deadlines: the rung measures
+        // round orchestration cost, not the anytime solver's budget.
+        let scale_cfg = SptlbConfig {
+            timeout: Duration::from_millis(if n_apps >= 1_000_000 { 50 } else { 20 }),
+            samples_per_app: 8,
+            variant: Variant::NoCnst,
+            ..SptlbConfig::default()
+        };
+        let mut fleet = FleetState::from_testbed(scale_bed);
+        let mut engine = FleetEngine::new(EngineMode::Incremental, &scale_cfg);
+        let delta = fleet.apply_all(&[]);
+        engine.round(&mut fleet, &[], &delta, &scale_cfg, &latency, 0);
+
+        let meas_rounds: u32 = if smoke {
+            5
+        } else if n_apps >= 1_000_000 {
+            3
+        } else if n_apps >= 100_000 {
+            8
+        } else {
+            32
+        };
+        let warm_rounds: u32 = 3;
+        // Pre-generate every batch so event construction stays outside
+        // both the timing and the allocation window.
+        let mut rng = Pcg64::new(0xA11C);
+        let batches: Vec<Vec<FleetEvent>> = (0..warm_rounds + meas_rounds)
+            .map(|_| {
+                (0..drifts_per_round)
+                    .map(|_| {
+                        let app = &fleet.apps()[rng.range(0, fleet.n_apps())];
+                        FleetEvent::DemandDrift {
+                            app: app.id,
+                            demand: app.demand * (0.9 + rng.range(0, 21) as f64 / 100.0),
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let mut round = 1u32;
+        for batch in &batches[..warm_rounds as usize] {
+            engine
+                .apply_events(&mut fleet, batch, &scale_cfg, round)
+                .expect("drift-only rounds take the fast path");
+            round += 1;
+        }
+        ALLOCS.store(0, Ordering::Relaxed);
+        COUNTING.store(true, Ordering::Relaxed);
+        let t0 = std::time::Instant::now();
+        for batch in &batches[warm_rounds as usize..] {
+            engine
+                .apply_events(&mut fleet, batch, &scale_cfg, round)
+                .expect("drift-only rounds take the fast path");
+            round += 1;
+        }
+        let elapsed = t0.elapsed();
+        COUNTING.store(false, Ordering::Relaxed);
+        let allocs_per_round = ALLOCS.load(Ordering::Relaxed) as f64 / meas_rounds as f64;
+        steady_allocs_max = steady_allocs_max.max(allocs_per_round);
+        let rounds_per_sec = meas_rounds as f64 / elapsed.as_secs_f64();
+        let rss_mb = peak_rss_mb().unwrap_or(-1.0);
+        println!(
+            "  {n_apps:>9} apps: {rounds_per_sec:>8.1} rounds/s, \
+             {allocs_per_round:.1} allocs/round, peak RSS {rss_mb:.0} MiB"
+        );
+        rungs.push(Json::obj(vec![
+            ("apps", Json::num(n_apps as f64)),
+            ("rounds", Json::num(meas_rounds as f64)),
+            ("rounds_per_sec", Json::num(rounds_per_sec)),
+            ("allocs_per_round", Json::num(allocs_per_round)),
+            ("peak_rss_mb", Json::num(rss_mb)),
+        ]));
+    }
+    write_bench_json(
+        "BENCH_scale.json",
+        &Json::obj(vec![
+            ("bench", Json::str("steady_state_scale_ladder")),
+            ("smoke", Json::num(smoke as u8 as f64)),
+            ("drifts_per_round", Json::num(drifts_per_round as f64)),
+            ("steady_allocs_per_round", Json::num(steady_allocs_max)),
+            ("ladder", Json::arr(rungs)),
+        ]),
+    );
+
     // --- forecast: proactive vs reactive on the diurnal wave ----------------
     // Same diurnal fixture for every forecaster: per-app sinusoidal demand
     // waves in three anti-phase groups. The reactive baseline (`none`)
@@ -383,7 +541,7 @@ fn main() {
         let r = measure(&format!("avoid_registry_{n_apps}_edges"), warm, reps(5), || {
             let mut reg: AvoidRegistry<(AppId, TierId)> = AvoidRegistry::new(2);
             for i in 0..n_apps {
-                reg.record((AppId(i), TierId(i % 8)));
+                reg.record((AppId::from_usize(i), TierId::from_usize(i % 8)));
             }
             let mut expired = 0usize;
             while !reg.is_empty() {

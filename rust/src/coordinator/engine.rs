@@ -48,15 +48,18 @@
 use crate::coop::{AvoidRegistry, ESCALATE_AFTER};
 use crate::coordinator::fleet::{FleetDelta, FleetState};
 use crate::forecast::{ForecastConfig, HistoryStore};
+use crate::hierarchy::variants::Variant;
 use crate::metadata::MetadataStore;
 use crate::metrics::{Collector, IncrementalCollector, SimulatedMonitor};
-use crate::model::{App, AppId, FleetEvent, Move, ResourceVec, TierId, NUM_RESOURCES};
+use crate::model::{App, AppId, FleetEvent, Move, ResourceVec, TierId, TierMask, NUM_RESOURCES};
 use crate::network::LatencyMatrix;
+use crate::rebalancer::local_search::{LocalSearch, LocalSearchConfig, SolveScratch};
 use crate::rebalancer::problem::Problem;
 use crate::rebalancer::scoring;
+use crate::rebalancer::solution::SolverKind;
 use crate::sptlb::{BalanceReport, Sptlb, SptlbConfig};
 use crate::util::stats;
-use crate::util::timer::Stopwatch;
+use crate::util::timer::{Deadline, Stopwatch};
 use std::collections::{BTreeMap, BTreeSet};
 
 /// Which round engine the coordinator runs.
@@ -97,7 +100,13 @@ pub struct FleetEngine {
     problem: Option<Problem>,
     collected_apps: Vec<App>,
     loads: Vec<ResourceVec>,
-    adoption_dirty: BTreeSet<TierId>,
+    adoption_dirty: TierMask,
+    // ---- steady-state scratch (reused across rounds so drift-only
+    // rounds through `apply_events` touch the allocator zero times) ----
+    dirty_apps: Vec<usize>,
+    delta_scratch: FleetDelta,
+    solve_scratch: SolveScratch,
+    moves_scratch: Vec<Move>,
     /// Endpoints scraped in the last round (observability: the
     /// incrementality win, vs fleet size for the rebuild engine).
     pub last_scraped: usize,
@@ -161,7 +170,11 @@ impl FleetEngine {
             problem: None,
             collected_apps: Vec::new(),
             loads: Vec::new(),
-            adoption_dirty: BTreeSet::new(),
+            adoption_dirty: TierMask::EMPTY,
+            dirty_apps: Vec::new(),
+            delta_scratch: FleetDelta::default(),
+            solve_scratch: SolveScratch::new(),
+            moves_scratch: Vec::new(),
             last_scraped: 0,
             avoids: AvoidRegistry::with_escalation(base.avoid_decay, ESCALATE_AFTER),
             forbidden: AvoidRegistry::new(base.avoid_decay),
@@ -403,6 +416,104 @@ impl FleetEngine {
         (report, moves)
     }
 
+    /// The zero-alloc steady-state round: advance the fleet by a
+    /// drift-only event batch, patch the problem and per-tier aggregates
+    /// in place, warm-solve into recycled scratch buffers, and adopt the
+    /// resulting moves — touching the heap **zero times** once every
+    /// scratch arena has warmed up to the fleet size (release build,
+    /// `workers == 1`; the sharded backend spawns threads, which
+    /// inherently allocate). Returns the number of moves adopted, or
+    /// `None` when the round is not eligible for the fast path and must
+    /// go through [`FleetEngine::round`] instead:
+    ///
+    ///  * the engine is not [`EngineMode::Incremental`] or has not run a
+    ///    full round yet (the problem/store/loads caches are unprimed);
+    ///  * forecasting is on (histories and forecasts are map-backed);
+    ///  * the config asks for a solver other than LocalSearch, a variant
+    ///    other than `NoCnst`, or avoid/forbidden edges are in force
+    ///    (constraint rebuilds allocate);
+    ///  * the batch contains a structural event (arrival/departure) or a
+    ///    drift for an app the fleet does not know.
+    ///
+    /// Semantics match a full [`FleetEngine::round`] with one documented
+    /// difference: the collection stage is bypassed, so the solver sees
+    /// the *registered* (event) demands rather than a p99 re-scrape of
+    /// them. The metadata store is still kept in sync, so interleaving
+    /// fast-path and full rounds stays well-formed.
+    pub fn apply_events(
+        &mut self,
+        state: &mut FleetState,
+        events: &[FleetEvent],
+        base: &SptlbConfig,
+        round: u32,
+    ) -> Option<usize> {
+        if self.mode != EngineMode::Incremental
+            || self.problem.is_none()
+            || self.forecast.is_enabled()
+            || base.solver != SolverKind::LocalSearch
+            || base.variant != Variant::NoCnst
+            || !self.avoids.is_empty()
+            || !self.forbidden.is_empty()
+        {
+            return None;
+        }
+        let all_known_drifts = events.iter().all(|e| match e {
+            FleetEvent::DemandDrift { app, .. } => state.index_of(*app).is_some(),
+            _ => false,
+        });
+        if !all_known_drifts {
+            return None;
+        }
+
+        // ---- fleet + metadata advance (recycled delta) ---------------
+        state.apply_all_into(events, &mut self.delta_scratch);
+        for e in events {
+            if let FleetEvent::DemandDrift { app, demand } = e {
+                self.store.update_demand(*app, *demand).expect("drift ids gated to live apps");
+            }
+        }
+
+        // ---- problem patch + per-tier aggregate refresh --------------
+        let p = self.problem.as_mut().expect("gated on a primed problem");
+        p.apply_events(
+            events,
+            state.tiers(),
+            state.assignment(),
+            base.movement_fraction,
+            &mut self.dirty_apps,
+        )
+        .expect("drift events keep the problem well-formed");
+        let dirty = self.delta_scratch.dirty_tiers.union(self.adoption_dirty);
+        self.adoption_dirty = TierMask::EMPTY;
+        scoring::refresh_tier_loads(p, &p.initial, &mut self.loads, dirty);
+
+        // ---- warm solve into the scratch arena -----------------------
+        let solver = LocalSearch::new(LocalSearchConfig {
+            seed: base.seed.wrapping_add(round as u64),
+            parallel: base.parallel,
+            ..LocalSearchConfig::default()
+        });
+        let deadline = Deadline::after(base.timeout);
+        solver.solve_warm_into(p, deadline, &self.loads, &mut self.solve_scratch);
+
+        // ---- decision execution: diff best vs incumbent, adopt -------
+        self.moves_scratch.clear();
+        self.moves_scratch.reserve(p.max_moves);
+        for (i, (&to, &from)) in
+            self.solve_scratch.best().iter().zip(p.initial.as_slice()).enumerate()
+        {
+            if to != from {
+                self.moves_scratch.push(Move { app: AppId::from_usize(i), from, to });
+            }
+        }
+        for m in &self.moves_scratch {
+            self.adoption_dirty.insert(m.from);
+            self.adoption_dirty.insert(m.to);
+        }
+        state.adopt(&self.moves_scratch);
+        Some(self.moves_scratch.len())
+    }
+
     /// Legacy batch round: everything rebuilt from scratch.
     fn round_rebuild(
         &mut self,
@@ -515,7 +626,7 @@ impl FleetEngine {
         } else {
             let p = self.problem.as_mut().expect("problem exists after first round");
             let fraction = sptlb.config.movement_fraction;
-            p.apply_events(events, state.tiers(), state.assignment(), fraction)
+            p.apply_events(events, state.tiers(), state.assignment(), fraction, &mut self.dirty_apps)
                 .expect("fleet events keep the problem well-formed");
             // Substitute collected (p99) demands; untouched apps get the
             // same bits back, so only event-dirty tiers change.
@@ -530,11 +641,11 @@ impl FleetEngine {
         // ---- per-tier aggregates: refresh only what went stale -------
         if first || delta.structural || self.loads.len() != problem.n_tiers() {
             self.loads = scoring::tier_loads(problem, &problem.initial);
-            self.adoption_dirty.clear();
+            self.adoption_dirty = TierMask::EMPTY;
         } else {
-            let mut dirty = delta.dirty_tiers.clone();
-            dirty.append(&mut self.adoption_dirty);
-            scoring::refresh_tier_loads(problem, &problem.initial, &mut self.loads, &dirty);
+            let dirty = delta.dirty_tiers.union(self.adoption_dirty);
+            self.adoption_dirty = TierMask::EMPTY;
+            scoring::refresh_tier_loads(problem, &problem.initial, &mut self.loads, dirty);
         }
 
         // ---- stages 3-4: warm-started solve + evaluation -------------
@@ -593,12 +704,12 @@ fn apply_avoid_registry(
 /// `Problem::add_avoid`) to strand an app on an empty set. `avoided` must
 /// be ascending so both engine modes drop the same edges when the floor
 /// is hit.
-fn effective_allowed(mut base: Vec<TierId>, avoided: &[TierId]) -> Vec<TierId> {
-    for t in avoided {
+fn effective_allowed(mut base: TierMask, avoided: &[TierId]) -> TierMask {
+    for &t in avoided {
         if base.len() <= 1 {
             break;
         }
-        base.retain(|x| x != t);
+        base.remove(t);
     }
     base
 }
@@ -620,9 +731,9 @@ fn harvest_registry(
         if papp.allowed.len() == base.len() {
             continue;
         }
-        for t in &base {
+        for t in base.iter() {
             if !papp.allowed.contains(t) {
-                avoids.record((id, *t));
+                avoids.record((id, t));
             }
         }
     }
@@ -645,15 +756,15 @@ mod tests {
 
     #[test]
     fn effective_allowed_never_strands() {
-        let base = vec![TierId(0), TierId(1), TierId(2)];
+        let base: TierMask = [TierId(0), TierId(1), TierId(2)].into_iter().collect();
         assert_eq!(
-            effective_allowed(base.clone(), &[TierId(1)]),
-            vec![TierId(0), TierId(2)]
+            effective_allowed(base, &[TierId(1)]),
+            [TierId(0), TierId(2)].into_iter().collect::<TierMask>()
         );
         // Removing everything stops at the last routable tier.
         assert_eq!(
             effective_allowed(base, &[TierId(0), TierId(1), TierId(2)]),
-            vec![TierId(2)]
+            TierMask::single(TierId(2))
         );
     }
 
@@ -748,7 +859,7 @@ mod tests {
         // An app that arrives and departs in the same batch stays in
         // delta.arrived (apply_all prunes only drifted) — the forecast
         // path must skip it rather than panic, and record nothing.
-        let ghost = App { id: AppId(state.next_app_id()), ..state.apps()[0].clone() };
+        let ghost = App { id: AppId::from_usize(state.next_app_id()), ..state.apps()[0].clone() };
         let gid = ghost.id;
         let delta = state.apply_all(&[
             FleetEvent::Arrival { app: ghost },
@@ -772,6 +883,85 @@ mod tests {
         assert_eq!(engine.history_len(), 0, "no histories accrue while off");
         assert!(engine.last_smape().is_nan());
         assert!(engine.predicted_fleet(&state).is_none());
+    }
+
+    #[test]
+    fn fast_path_gates_to_primed_drift_only_rounds() {
+        use crate::model::ResourceVec;
+        use crate::workload::{generate, WorkloadSpec};
+        let bed = generate(&WorkloadSpec::small());
+        let latency = bed.latency.clone();
+        let mut state = FleetState::from_testbed(bed);
+        let base = SptlbConfig { variant: Variant::NoCnst, ..SptlbConfig::default() };
+        let mut engine = FleetEngine::new(EngineMode::Incremental, &base);
+
+        let drift = |state: &FleetState| {
+            vec![FleetEvent::DemandDrift {
+                app: state.apps()[0].id,
+                demand: ResourceVec::new(5.0, 5.0, 5.0),
+            }]
+        };
+
+        // Unprimed: the problem/store/loads caches don't exist yet.
+        let events = drift(&state);
+        assert_eq!(engine.apply_events(&mut state, &events, &base, 0), None);
+
+        // Prime with one full round, then drift-only rounds are eligible.
+        let delta = state.apply_all(&[]);
+        engine.round(&mut state, &[], &delta, &base, &latency, 0);
+        let events = drift(&state);
+        assert!(engine.apply_events(&mut state, &events, &base, 1).is_some());
+
+        // Structural batches and unknown drift ids fall back to `round`.
+        let ghost =
+            App { id: AppId::from_usize(state.next_app_id()), ..state.apps()[0].clone() };
+        assert_eq!(
+            engine.apply_events(&mut state, &[FleetEvent::Arrival { app: ghost }], &base, 2),
+            None
+        );
+        let unknown = FleetEvent::DemandDrift {
+            app: AppId(9_999),
+            demand: ResourceVec::new(1.0, 1.0, 1.0),
+        };
+        assert_eq!(engine.apply_events(&mut state, &[unknown], &base, 2), None);
+
+        // Constraint-bearing variants fall back too.
+        let manual = SptlbConfig::default();
+        let events = drift(&state);
+        assert_eq!(engine.apply_events(&mut state, &events, &manual, 2), None);
+    }
+
+    #[test]
+    fn fast_path_is_worker_count_invariant() {
+        use crate::model::ResourceVec;
+        use crate::rebalancer::ParallelConfig;
+        use crate::workload::{generate, WorkloadSpec};
+        let mut results = Vec::new();
+        for workers in [1usize, 2] {
+            let bed = generate(&WorkloadSpec::small());
+            let latency = bed.latency.clone();
+            let mut state = FleetState::from_testbed(bed);
+            let base = SptlbConfig {
+                variant: Variant::NoCnst,
+                parallel: ParallelConfig::with_workers(workers),
+                ..SptlbConfig::default()
+            };
+            let mut engine = FleetEngine::new(EngineMode::Incremental, &base);
+            let delta = state.apply_all(&[]);
+            engine.round(&mut state, &[], &delta, &base, &latency, 0);
+            for round in 1..4u32 {
+                let id = state.apps()[round as usize % state.n_apps()].id;
+                let events = vec![FleetEvent::DemandDrift {
+                    app: id,
+                    demand: ResourceVec::new(3.0 + round as f64, 4.0, 5.0),
+                }];
+                engine
+                    .apply_events(&mut state, &events, &base, round)
+                    .expect("drift-only round takes the fast path");
+            }
+            results.push(state.assignment().clone());
+        }
+        assert_eq!(results[0], results[1], "fast path must be worker-count invariant");
     }
 
     #[test]

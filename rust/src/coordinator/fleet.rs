@@ -6,9 +6,11 @@
 //! engine exactly what must be re-collected and which per-tier aggregates
 //! went stale.
 
-use crate::model::{App, AppId, Assignment, FleetEvent, Move, Tier, TierId};
+use crate::model::{App, AppId, Assignment, FleetEvent, Move, Tier, TierMask};
 use crate::workload::TestBed;
-use std::collections::BTreeSet;
+
+/// Slot-table sentinel: the stable id has no live dense position.
+const NO_SLOT: u32 = u32::MAX;
 
 /// What one round's events touched — consumed by the incremental engine.
 #[derive(Debug, Clone, Default)]
@@ -21,23 +23,45 @@ pub struct FleetDelta {
     pub departed: Vec<AppId>,
     /// Tiers whose load aggregate went stale (membership or member
     /// demand changed). Capacity-only changes do NOT dirty loads.
-    pub dirty_tiers: BTreeSet<TierId>,
+    pub dirty_tiers: TierMask,
     /// True when arrivals/departures changed the population shape.
     pub structural: bool,
     /// True when tier capacities or region sets changed.
     pub tiers_changed: bool,
 }
 
+impl FleetDelta {
+    /// Reset for reuse by [`FleetState::apply_all_into`], keeping the
+    /// vectors' capacity so steady-state rounds never reallocate.
+    pub fn clear(&mut self) {
+        self.drifted.clear();
+        self.arrived.clear();
+        self.departed.clear();
+        self.dirty_tiers = TierMask::EMPTY;
+        self.structural = false;
+        self.tiers_changed = false;
+    }
+}
+
 /// The fleet the coordinator balances: apps in ascending stable-id order,
 /// the tier topology, the incumbent assignment (positional, parallel to
 /// the app list), and the monotonic id counter arrivals allocate from —
 /// ids are never reused, so departures cannot cause id collisions.
+///
+/// Layout: the app table and assignment are dense, positionally parallel
+/// arrays (structure-of-arrays, ascending stable id); `slot` is the
+/// id→position table (`NO_SLOT` once departed) that makes the drift hot
+/// path's lookups O(1) with no search and no allocation. Departures
+/// rewrite the shifted tail of the slot table — the same O(n) the
+/// `Vec::remove` already pays — and never shrink it, so arrivals reuse
+/// recycled capacity.
 #[derive(Debug, Clone)]
 pub struct FleetState {
     apps: Vec<App>,
     tiers: Vec<Tier>,
     assignment: Assignment,
     next_app_id: usize,
+    slot: Vec<u32>,
 }
 
 impl FleetState {
@@ -47,8 +71,12 @@ impl FleetState {
             apps.windows(2).all(|w| w[0].id < w[1].id),
             "apps must be in ascending stable-id order"
         );
-        let next_app_id = apps.last().map_or(0, |a| a.id.0 + 1);
-        Self { apps, tiers, assignment, next_app_id }
+        let next_app_id = apps.last().map_or(0, |a| a.id.idx() + 1);
+        let mut slot = vec![NO_SLOT; next_app_id];
+        for (i, a) in apps.iter().enumerate() {
+            slot[a.id.idx()] = i as u32;
+        }
+        Self { apps, tiers, assignment, next_app_id, slot }
     }
 
     pub fn from_testbed(bed: TestBed) -> Self {
@@ -76,9 +104,13 @@ impl FleetState {
         self.next_app_id
     }
 
-    /// Position of a stable id in the (ascending) app list.
+    /// Position of a stable id in the (ascending) app list — one slot-
+    /// table load, O(1).
     pub fn index_of(&self, id: AppId) -> Option<usize> {
-        self.apps.binary_search_by_key(&id, |a| a.id).ok()
+        match self.slot.get(id.idx()) {
+            Some(&s) if s != NO_SLOT => Some(s as usize),
+            _ => None,
+        }
     }
 
     /// Execute a round's accepted moves on the incumbent — decision
@@ -92,12 +124,27 @@ impl FleetState {
     /// Apply one round's events in order, accumulating the delta.
     pub fn apply_all(&mut self, events: &[FleetEvent]) -> FleetDelta {
         let mut delta = FleetDelta::default();
+        self.apply_all_into(events, &mut delta);
+        delta
+    }
+
+    /// [`FleetState::apply_all`] into a caller-owned delta (cleared
+    /// first). Reusing one delta across rounds keeps drift-only batches
+    /// off the allocator once its vectors are warm — the steady-state
+    /// fast path ([`FleetEngine::apply_events`]) depends on this.
+    ///
+    /// [`FleetEngine::apply_events`]: crate::coordinator::FleetEngine::apply_events
+    pub fn apply_all_into(&mut self, events: &[FleetEvent], delta: &mut FleetDelta) {
+        delta.clear();
+        delta.drifted.reserve(events.len());
         for ev in events {
-            self.apply(ev, &mut delta);
+            self.apply(ev, delta);
         }
         // Drop drifted entries for apps that departed in the same round.
-        delta.drifted.retain(|id| self.index_of(*id).is_some());
+        let slot = &self.slot;
         delta
+            .drifted
+            .retain(|id| matches!(slot.get(id.idx()), Some(&s) if s != NO_SLOT));
     }
 
     fn apply(&mut self, event: &FleetEvent, delta: &mut FleetDelta) {
@@ -107,21 +154,23 @@ impl FleetState {
                     .index_of(*app)
                     .unwrap_or_else(|| panic!("drift for unknown {app:?}"));
                 self.apps[idx].demand = *demand;
-                delta.dirty_tiers.insert(self.assignment.tier_of(AppId(idx)));
+                delta.dirty_tiers.insert(self.assignment.tier_of(AppId::from_usize(idx)));
                 delta.drifted.push(*app);
             }
             FleetEvent::Arrival { app } => {
                 assert_eq!(
-                    app.id.0, self.next_app_id,
+                    app.id.idx(),
+                    self.next_app_id,
                     "arrival must carry the fleet's next monotonic id"
                 );
-                self.next_app_id = app.id.0 + 1;
+                self.next_app_id = app.id.idx() + 1;
                 let tier = self
                     .tiers
                     .iter()
                     .find(|t| t.supports_slo(app.slo))
                     .unwrap_or_else(|| panic!("no tier supports {:?}", app.slo))
                     .id;
+                self.slot.push(self.apps.len() as u32);
                 self.apps.push(app.clone());
                 self.assignment.push(tier);
                 delta.dirty_tiers.insert(tier);
@@ -134,12 +183,18 @@ impl FleetState {
                     .unwrap_or_else(|| panic!("departure of unknown {app:?}"));
                 let tier = self.assignment.remove(idx);
                 self.apps.remove(idx);
+                // Recycle the slot and re-point the shifted tail — the
+                // same O(n) the two removes above already paid.
+                self.slot[app.idx()] = NO_SLOT;
+                for (j, a) in self.apps.iter().enumerate().skip(idx) {
+                    self.slot[a.id.idx()] = j as u32;
+                }
                 delta.dirty_tiers.insert(tier);
                 delta.departed.push(*app);
                 delta.structural = true;
             }
             FleetEvent::TierCapacityChange { tier, factor } => {
-                let t = &mut self.tiers[tier.0];
+                let t = &mut self.tiers[tier.idx()];
                 t.capacity = t.capacity.scale(*factor);
                 delta.tiers_changed = true;
             }
@@ -188,9 +243,9 @@ mod tests {
         s.apply(&FleetEvent::Departure { app: AppId(3) }, &mut delta);
         assert_eq!(s.n_apps(), n0 - 1);
         // Old scheme would now allocate AppId(n0 - 1) — which EXISTS.
-        assert!(s.index_of(AppId(n0 - 1)).is_some());
+        assert!(s.index_of(AppId::from_usize(n0 - 1)).is_some());
         assert_eq!(s.next_app_id(), n0, "counter unaffected by departures");
-        let arrival = App { id: AppId(s.next_app_id()), ..template };
+        let arrival = App { id: AppId::from_usize(s.next_app_id()), ..template };
         s.apply(&FleetEvent::Arrival { app: arrival }, &mut delta);
         assert_eq!(s.next_app_id(), n0 + 1);
         // Ids stay unique and ascending.
@@ -208,9 +263,50 @@ mod tests {
             demand: ResourceVec::new(1.0, 2.0, 3.0),
         }]);
         assert_eq!(s.apps()[5].demand, ResourceVec::new(1.0, 2.0, 3.0));
-        assert!(delta.dirty_tiers.contains(&tier));
+        assert!(delta.dirty_tiers.contains(tier));
         assert!(!delta.structural);
         assert_eq!(delta.drifted, vec![app]);
+    }
+
+    #[test]
+    fn slot_table_tracks_positions_through_churn() {
+        let mut s = state();
+        let n0 = s.n_apps();
+        let template = s.apps()[0].clone();
+        let mut delta = FleetDelta::default();
+        s.apply(&FleetEvent::Departure { app: AppId(1) }, &mut delta);
+        s.apply(&FleetEvent::Departure { app: AppId(4) }, &mut delta);
+        assert_eq!(s.index_of(AppId(1)), None);
+        assert_eq!(s.index_of(AppId(4)), None);
+        let arrival = App { id: AppId::from_usize(s.next_app_id()), ..template };
+        let id = arrival.id;
+        s.apply(&FleetEvent::Arrival { app: arrival }, &mut delta);
+        // Every live id resolves to its dense position, exactly.
+        for (i, a) in s.apps().iter().enumerate() {
+            assert_eq!(s.index_of(a.id), Some(i));
+        }
+        assert_eq!(s.index_of(id), Some(s.n_apps() - 1));
+        assert_eq!(s.n_apps(), n0 - 1);
+    }
+
+    #[test]
+    fn apply_all_into_reuses_the_delta() {
+        let mut s = state();
+        let mut delta = FleetDelta::default();
+        let app = s.apps()[3].id;
+        s.apply_all_into(
+            &[FleetEvent::DemandDrift { app, demand: ResourceVec::new(1.0, 1.0, 1.0) }],
+            &mut delta,
+        );
+        assert_eq!(delta.drifted, vec![app]);
+        // Second batch: the delta is cleared first, buffers reused.
+        let app2 = s.apps()[5].id;
+        s.apply_all_into(
+            &[FleetEvent::DemandDrift { app: app2, demand: ResourceVec::new(2.0, 2.0, 2.0) }],
+            &mut delta,
+        );
+        assert_eq!(delta.drifted, vec![app2]);
+        assert!(!delta.structural && !delta.tiers_changed);
     }
 
     #[test]

@@ -350,7 +350,7 @@ impl MultiRegionCoordinator {
     }
 
     pub fn region_fleet(&self, r: RegionId) -> &FleetState {
-        &self.regions[r.0].state
+        &self.regions[r.idx()].state
     }
 
     pub fn total_apps(&self) -> usize {
@@ -426,7 +426,7 @@ impl MultiRegionCoordinator {
             let Some(idx) = self.regions[src].state.index_of(q.app) else {
                 continue;
             };
-            let new_id = AppId(next_ids[dst]);
+            let new_id = AppId::from_usize(next_ids[dst]);
             next_ids[dst] += 1;
             let source = &self.regions[src].state.apps()[idx];
             let app = App {
@@ -656,7 +656,7 @@ impl CoopLayer for GlobalSession<'_> {
     fn items(&self, plan: &GlobalPlan) -> Vec<MigrationProposal> {
         plan.proposals
             .iter()
-            .filter(|p| self.regions[p.from.0].state.index_of(p.app).is_some())
+            .filter(|p| self.regions[p.from.idx()].state.index_of(p.app).is_some())
             .copied()
             .collect()
     }
@@ -671,10 +671,10 @@ impl CoopLayer for GlobalSession<'_> {
         let mut utils_cache: BTreeMap<usize, Vec<ResourceVec>> = BTreeMap::new();
         let mut verdicts = Vec::with_capacity(items.len());
         for p in items {
-            let src = &self.regions[p.from.0];
+            let src = &self.regions[p.from.idx()];
             let idx = src.state.index_of(p.app).expect("items are filtered to live apps");
             let app = &src.state.apps()[idx];
-            let dst = &self.regions[p.to.0];
+            let dst = &self.regions[p.to.idx()];
             let utils = utils_cache.entry(p.to.0).or_insert_with(|| {
                 dst.state
                     .assignment()
@@ -763,7 +763,7 @@ fn vet_migration(
         let fits = (0..crate::model::NUM_RESOURCES).all(|k| {
             let cap = tier.capacity.0[k];
             cap > 0.0
-                && utils[tier.id.0].0[k] + (pending.0[k] + app.demand.0[k]) / cap <= 1.0
+                && utils[tier.id.idx()].0[k] + (pending.0[k] + app.demand.0[k]) / cap <= 1.0
         });
         if !fits {
             continue;

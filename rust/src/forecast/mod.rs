@@ -220,7 +220,7 @@ impl HistoryStore {
     }
 
     fn slot_of(&self, id: AppId) -> Option<usize> {
-        match self.index.get(id.0) {
+        match self.index.get(id.idx()) {
             Some(&s) if s != NO_SLOT => Some(s as usize),
             _ => None,
         }
@@ -233,8 +233,8 @@ impl HistoryStore {
         let slot = match self.slot_of(id) {
             Some(s) => s,
             None => {
-                if self.index.len() <= id.0 {
-                    self.index.resize(id.0 + 1, NO_SLOT);
+                if self.index.len() <= id.idx() {
+                    self.index.resize(id.idx() + 1, NO_SLOT);
                 }
                 let s = match self.free.pop() {
                     Some(s) => s as usize,
@@ -243,7 +243,7 @@ impl HistoryStore {
                         self.slots.len() - 1
                     }
                 };
-                self.index[id.0] = s as u32;
+                self.index[id.idx()] = s as u32;
                 s
             }
         };
@@ -258,7 +258,7 @@ impl HistoryStore {
     /// recycled for the next arrival.
     pub fn remove(&mut self, id: AppId) {
         if let Some(s) = self.slot_of(id) {
-            self.index[id.0] = NO_SLOT;
+            self.index[id.idx()] = NO_SLOT;
             self.slots[s].clear();
             self.free.push(s as u32);
         }
@@ -453,7 +453,7 @@ mod tests {
                 let mut new = HistoryStore::new(cap);
                 let mut old = LegacyStore { cap: cap.max(2), series: BTreeMap::new() };
                 for (remove, id, v) in ops {
-                    let id = AppId(*id);
+                    let id = AppId::from_usize(*id);
                     if *remove {
                         new.remove(id);
                         old.series.remove(&id);

@@ -45,7 +45,7 @@ impl GreedyScheduler {
         let mut loads = {
             let mut l = vec![crate::model::ResourceVec::ZERO; problem.n_tiers()];
             for (i, app) in problem.apps.iter().enumerate() {
-                l[assignment.as_slice()[i].0] += app.demand;
+                l[assignment.as_slice()[i].idx()] += app.demand;
             }
             l
         };
@@ -79,11 +79,11 @@ impl GreedyScheduler {
                 .enumerate()
                 .filter(|(i, app)| {
                     !moved[*i]
-                        && assignment.as_slice()[*i] == TierId(hot)
-                        && app.allowed.contains(&TierId(cold))
+                        && assignment.as_slice()[*i] == TierId::from_usize(hot)
+                        && app.allowed.contains(TierId::from_usize(cold))
                         && !problem
                             .forbidden_transitions
-                            .contains(&(problem.initial.as_slice()[*i], TierId(cold)))
+                            .contains(&(problem.initial.as_slice()[*i], TierId::from_usize(cold)))
                 })
                 .max_by(|(_, a), (_, b)| {
                     a.demand
@@ -98,7 +98,7 @@ impl GreedyScheduler {
             // 3. move it.
             loads[hot] -= app.demand;
             loads[cold] += app.demand;
-            assignment.set(crate::model::AppId(i), TierId(cold));
+            assignment.set(crate::model::AppId::from_usize(i), TierId::from_usize(cold));
             moved[i] = true;
             // Moving back to the incumbent frees budget; count real moves.
             n_moved = assignment.move_count_from(&problem.initial);
@@ -156,7 +156,7 @@ mod tests {
                 .iter()
                 .enumerate()
                 .fold(vec![crate::model::ResourceVec::ZERO; p.n_tiers()], |mut acc, (i, t)| {
-                    acc[t.0] += p.apps[i].demand;
+                    acc[t.idx()] += p.apps[i].demand;
                     acc
                 })
                 .iter()

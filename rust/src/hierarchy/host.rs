@@ -71,7 +71,7 @@ impl HostScheduler {
     /// they consume `floor(max_dim_fraction)` dedicated hosts and their
     /// remainder is packed normally.
     pub fn packable(&self, tier: TierId, apps_on_tier: &[&App]) -> bool {
-        let h = &self.hosts[tier.0];
+        let h = &self.hosts[tier.idx()];
         if h.host_cpu <= 0.0 || h.host_mem <= 0.0 {
             return apps_on_tier.is_empty();
         }
@@ -128,7 +128,7 @@ impl HostScheduler {
         // Pre-compute packability per destination tier once.
         let mut verdict_per_tier = std::collections::BTreeMap::<usize, bool>::new();
         for m in moves {
-            verdict_per_tier.entry(m.to.0).or_insert_with(|| {
+            verdict_per_tier.entry(m.to.idx()).or_insert_with(|| {
                 let residents: Vec<&App> = apps
                     .iter()
                     .filter(|a| proposed.tier_of(a.id) == m.to)
@@ -139,7 +139,7 @@ impl HostScheduler {
         moves
             .iter()
             .map(|m| {
-                let ok = verdict_per_tier[&m.to.0];
+                let ok = verdict_per_tier[&m.to.idx()];
                 (*m, if ok { HostVerdict::Accept } else { HostVerdict::Reject })
             })
             .collect()
@@ -154,7 +154,7 @@ mod tests {
 
     fn app(i: usize, cpu: f64, mem: f64) -> App {
         App {
-            id: AppId(i),
+            id: AppId::from_usize(i),
             name: format!("a{i}"),
             demand: ResourceVec::new(cpu, mem, 1.0),
             slo: Slo::Slo3,

@@ -139,7 +139,7 @@ impl CoopLayer for ProtocolSession<'_> {
         };
         match (cfg.solver, &self.warm_start) {
             (SolverKind::LocalSearch, Some(start)) => local(cfg.seed + round as u64)
-                .solve_from(self.problem, round_deadline, start.clone()),
+                .solve_from(self.problem, round_deadline, start),
             (SolverKind::LocalSearch, None) => match self.warm_loads {
                 // Solving from the incumbent: the caller's cached
                 // aggregates apply verbatim.
@@ -338,7 +338,7 @@ mod tests {
     #[test]
     fn outcome_improves_over_incumbent() {
         let (mut p, apps, tiers, proto) = setup(25.0);
-        let (initial_score, _) = score_assignment(&p, &p.initial.clone());
+        let (initial_score, _) = score_assignment(&p, &p.initial);
         let out = proto.run(&mut p, &apps, &tiers, Deadline::after_ms(600));
         assert!(out.solution.score <= initial_score);
     }

@@ -95,7 +95,7 @@ impl RegionScheduler {
             .map(|m| {
                 (
                     *m,
-                    self.vet_move(&apps[m.app.0], &tiers[m.from.0], &tiers[m.to.0]),
+                    self.vet_move(&apps[m.app.idx()], &tiers[m.from.idx()], &tiers[m.to.idx()]),
                 )
             })
             .collect()

@@ -250,9 +250,9 @@ mod tests {
         .unwrap();
         for m in r.solution.assignment.moves_from(&problem.initial) {
             assert!(
-                bed.tiers[m.from.0]
+                bed.tiers[m.from.idx()]
                     .regions
-                    .majority_overlap(&bed.tiers[m.to.0].regions),
+                    .majority_overlap(&bed.tiers[m.to.idx()].regions),
                 "w_cnst move {m:?} violates overlap"
             );
         }

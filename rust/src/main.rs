@@ -626,8 +626,9 @@ fn cmd_check(args: &[String]) -> i32 {
             .map(|_| {
                 let mut a = problem.initial.clone();
                 let i = rng.range(0, problem.n_apps());
-                let t = *rng.choose(&problem.apps[i].allowed).unwrap();
-                a.set(sptlb::model::AppId(i), t);
+                let al = problem.apps[i].allowed;
+                let t = al.nth(rng.range(0, al.len())).unwrap();
+                a.set(sptlb::model::AppId::from_usize(i), t);
                 a
             })
             .collect();

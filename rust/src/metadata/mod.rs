@@ -152,7 +152,7 @@ mod tests {
 
     fn app(i: usize, slo: Slo) -> App {
         App {
-            id: AppId(i),
+            id: AppId::from_usize(i),
             name: format!("app{i}"),
             demand: ResourceVec::new(1.0, 2.0, 3.0),
             slo,
@@ -206,7 +206,7 @@ mod tests {
         store.update_demand(AppId(0), ResourceVec::new(9.0, 9.0, 9.0)).unwrap();
         assert_eq!(store.get(AppId(0)).unwrap().demand, ResourceVec::new(9.0, 9.0, 9.0));
         assert!(store.update_demand(AppId(5), ResourceVec::ZERO).is_err());
-        let ids: Vec<usize> = store.iter().map(|a| a.id.0).collect();
+        let ids: Vec<usize> = store.iter().map(|a| a.id.idx()).collect();
         assert_eq!(ids, vec![0]);
     }
 

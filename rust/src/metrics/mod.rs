@@ -275,7 +275,7 @@ mod tests {
 
     fn mk_store(n: usize) -> MetadataStore {
         MetadataStore::from_apps((0..n).map(|i| App {
-            id: AppId(i),
+            id: AppId::from_usize(i),
             name: format!("app{i}"),
             demand: ResourceVec::new(10.0, 20.0, 100.0),
             slo: Slo::Slo3,
@@ -371,7 +371,7 @@ mod tests {
         let solo = a.scrape(&ep1, 50);
         let mut b = SimulatedMonitor::new(&apps, 5);
         for id in [0usize, 2, 0] {
-            let ep = store.monitoring_endpoint(AppId(id)).unwrap();
+            let ep = store.monitoring_endpoint(AppId::from_usize(id)).unwrap();
             let _ = b.scrape(&ep, 50);
         }
         assert_eq!(b.scrape(&ep1, 50), solo);

@@ -17,6 +17,12 @@ impl Assignment {
         Self { tier_of }
     }
 
+    /// Consume into the raw position→tier column — zero-copy handoff
+    /// into solver state (the inverse of [`Assignment::new`]).
+    pub fn into_vec(self) -> Vec<TierId> {
+        self.tier_of
+    }
+
     pub fn uniform(n_apps: usize, tier: TierId) -> Self {
         Self { tier_of: vec![tier; n_apps] }
     }
@@ -26,11 +32,11 @@ impl Assignment {
     }
 
     pub fn tier_of(&self, app: AppId) -> TierId {
-        self.tier_of[app.0]
+        self.tier_of[app.idx()]
     }
 
     pub fn set(&mut self, app: AppId, tier: TierId) {
-        self.tier_of[app.0] = tier;
+        self.tier_of[app.idx()] = tier;
     }
 
     /// Grow the mapping by one app placed on `tier` (fleet arrival; the
@@ -46,11 +52,18 @@ impl Assignment {
     }
 
     pub fn iter(&self) -> impl Iterator<Item = (AppId, TierId)> + '_ {
-        self.tier_of.iter().enumerate().map(|(a, t)| (AppId(a), *t))
+        self.tier_of.iter().enumerate().map(|(a, t)| (AppId::from_usize(a), *t))
     }
 
     pub fn as_slice(&self) -> &[TierId] {
         &self.tier_of
+    }
+
+    /// Overwrite this mapping with `other`'s, reusing the existing
+    /// buffer: a same-size copy never touches the allocator, which the
+    /// incremental engine's steady-state rounds depend on.
+    pub fn copy_from(&mut self, other: &Assignment) {
+        self.tier_of.clone_from(&other.tier_of);
     }
 
     /// Apps moved relative to `from` (the diff §3.3 reports).
@@ -73,7 +86,7 @@ impl Assignment {
         assert_eq!(apps.len(), self.n_apps(), "assignment size mismatch");
         let mut loads = vec![ResourceVec::ZERO; n_tiers];
         for (t, app) in self.tier_of.iter().zip(apps) {
-            loads[t.0] += app.demand;
+            loads[t.idx()] += app.demand;
         }
         loads
     }
@@ -91,7 +104,7 @@ impl Assignment {
     pub fn apps_per_tier(&self, n_tiers: usize) -> Vec<usize> {
         let mut counts = vec![0usize; n_tiers];
         for t in &self.tier_of {
-            counts[t.0] += 1;
+            counts[t.idx()] += 1;
         }
         counts
     }
@@ -104,7 +117,7 @@ impl Assignment {
         let arr = j.as_arr()?;
         let tier_of = arr
             .iter()
-            .map(|v| v.as_usize().map(TierId))
+            .map(|v| v.as_usize().map(TierId::from_usize))
             .collect::<Option<Vec<_>>>()?;
         Some(Assignment::new(tier_of))
     }
@@ -138,7 +151,7 @@ mod tests {
     fn mk_apps() -> Vec<App> {
         (0..4)
             .map(|i| App {
-                id: AppId(i),
+                id: AppId::from_usize(i),
                 name: format!("app{i}"),
                 demand: ResourceVec::new(1.0 + i as f64, 2.0, 10.0),
                 slo: Slo::Slo3,
@@ -151,7 +164,7 @@ mod tests {
     fn mk_tiers(n: usize) -> Vec<Tier> {
         (0..n)
             .map(|i| Tier {
-                id: TierId(i),
+                id: TierId::from_usize(i),
                 name: format!("tier{}", i + 1),
                 capacity: ResourceVec::new(100.0, 100.0, 100.0),
                 ideal_utilization: default_ideal_utilization(),

@@ -86,7 +86,7 @@ impl FleetEvent {
     pub fn from_json(j: &Json) -> Option<FleetEvent> {
         match j.get("event").as_str()? {
             "demand_drift" => Some(FleetEvent::DemandDrift {
-                app: AppId(j.get("app").as_usize()?),
+                app: AppId::from_usize(j.get("app").as_usize()?),
                 demand: ResourceVec::new(
                     j.get("cpu").as_f64()?,
                     j.get("mem").as_f64()?,
@@ -94,9 +94,9 @@ impl FleetEvent {
                 ),
             }),
             "arrival" => Some(FleetEvent::Arrival { app: App::from_json(j.get("spec"))? }),
-            "departure" => Some(FleetEvent::Departure { app: AppId(j.get("app").as_usize()?) }),
+            "departure" => Some(FleetEvent::Departure { app: AppId::from_usize(j.get("app").as_usize()?) }),
             "tier_capacity_change" => Some(FleetEvent::TierCapacityChange {
-                tier: TierId(j.get("tier").as_usize()?),
+                tier: TierId::from_usize(j.get("tier").as_usize()?),
                 factor: j.get("factor").as_f64()?,
             }),
             "region_outage" => Some(FleetEvent::RegionOutage {

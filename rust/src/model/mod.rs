@@ -13,4 +13,7 @@ pub use assignment::{Assignment, Move};
 pub use fleet::FleetEvent;
 pub use region::{InterRegionMatrix, RegionId, RegionSet, RegionTopology};
 pub use resources::{ResourceKind, ResourceVec, NUM_RESOURCES};
-pub use tier::{default_ideal_utilization, paper_slo_mapping, paper_tiers_for_slo, Tier, TierId};
+pub use tier::{
+    default_ideal_utilization, paper_slo_mapping, paper_tiers_for_slo, Tier, TierId, TierMask,
+    MAX_TIERS,
+};

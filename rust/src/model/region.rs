@@ -19,6 +19,14 @@ use std::fmt;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct RegionId(pub usize);
 
+impl RegionId {
+    /// Use this id as a dense array index (mirrors `AppId::idx`).
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0
+    }
+}
+
 impl fmt::Display for RegionId {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "region{}", self.0)
@@ -195,7 +203,7 @@ impl RegionTopology {
 
     /// Tiers (region-local ids) the region owns.
     pub fn tiers_of(&self, r: RegionId) -> &[TierId] {
-        &self.tier_sets[r.0]
+        &self.tier_sets[r.idx()]
     }
 }
 

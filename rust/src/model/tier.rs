@@ -8,15 +8,182 @@ use crate::model::region::RegionSet;
 use crate::model::resources::{ResourceKind, ResourceVec};
 use std::fmt;
 
-/// Dense tier identifier (index into the problem's tier arrays).
+/// Dense tier identifier (index into the problem's tier arrays). A `u32`
+/// newtype so per-app assignment columns stay four bytes wide.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct TierId(pub usize);
+pub struct TierId(pub u32);
+
+impl TierId {
+    /// Use this id as a dense array index.
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+
+    /// Map a dense array index back to an id.
+    #[inline]
+    pub fn from_usize(i: usize) -> Self {
+        debug_assert!(i <= u32::MAX as usize);
+        TierId(i as u32)
+    }
+}
 
 impl fmt::Display for TierId {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "tier{}", self.0 + 1) // paper numbers tiers from 1
     }
 }
+
+/// Hard ceiling on the tier count a single problem may carry, imposed by
+/// [`TierMask`]'s 64-bit representation. The paper's testbeds use 3–8
+/// tiers; production SPTLB deployments stay well under this.
+pub const MAX_TIERS: usize = 64;
+
+/// A set of tiers as one 64-bit word — the "allowed tiers" column of the
+/// flattened problem state. Replacing the old per-app `Vec<TierId>` with
+/// this mask removes one heap allocation per app (a million-app problem
+/// used to carry a million tiny vectors) and makes
+/// [`ProblemApp`](crate::rebalancer::ProblemApp) a flat `Copy` POD, so the
+/// app table is a single contiguous arena with no pointer chasing.
+///
+/// Iteration order is ascending tier id — identical to the sorted `Vec`
+/// it replaced — so every enumeration-order-sensitive consumer (LP column
+/// layout, local-search candidate order, RNG-driven picks) observes the
+/// exact same sequence and results stay bit-identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct TierMask(pub u64);
+
+impl TierMask {
+    /// The empty set.
+    pub const EMPTY: TierMask = TierMask(0);
+
+    /// A mask containing every tier in `0..n_tiers`.
+    #[inline]
+    pub fn all(n_tiers: usize) -> Self {
+        assert!(n_tiers <= MAX_TIERS, "TierMask supports at most {MAX_TIERS} tiers");
+        if n_tiers == MAX_TIERS {
+            TierMask(u64::MAX)
+        } else {
+            TierMask((1u64 << n_tiers) - 1)
+        }
+    }
+
+    /// A mask containing exactly one tier.
+    #[inline]
+    pub fn single(t: TierId) -> Self {
+        debug_assert!(t.idx() < MAX_TIERS);
+        TierMask(1u64 << t.0)
+    }
+
+    #[inline]
+    pub fn contains(self, t: TierId) -> bool {
+        t.idx() < MAX_TIERS && (self.0 >> t.0) & 1 == 1
+    }
+
+    #[inline]
+    pub fn insert(&mut self, t: TierId) {
+        debug_assert!(t.idx() < MAX_TIERS, "tier id {t:?} exceeds MAX_TIERS");
+        self.0 |= 1u64 << t.0;
+    }
+
+    #[inline]
+    pub fn remove(&mut self, t: TierId) {
+        if t.idx() < MAX_TIERS {
+            self.0 &= !(1u64 << t.0);
+        }
+    }
+
+    /// Number of tiers in the set.
+    #[inline]
+    pub fn len(self) -> usize {
+        self.0.count_ones() as usize
+    }
+
+    #[inline]
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    /// Lowest tier id in the set.
+    #[inline]
+    pub fn first(self) -> Option<TierId> {
+        if self.0 == 0 {
+            None
+        } else {
+            Some(TierId(self.0.trailing_zeros()))
+        }
+    }
+
+    /// The `k`-th tier in ascending order (0-based) — the mask equivalent
+    /// of `sorted_vec[k]`, used to keep RNG-driven picks consuming exactly
+    /// one draw.
+    #[inline]
+    pub fn nth(self, k: usize) -> Option<TierId> {
+        self.iter().nth(k)
+    }
+
+    /// Ascending-id iteration (pops the lowest set bit each step).
+    #[inline]
+    pub fn iter(self) -> TierMaskIter {
+        TierMaskIter(self.0)
+    }
+
+    /// Set intersection.
+    #[inline]
+    pub fn intersect(self, other: TierMask) -> TierMask {
+        TierMask(self.0 & other.0)
+    }
+
+    /// Set union.
+    #[inline]
+    pub fn union(self, other: TierMask) -> TierMask {
+        TierMask(self.0 | other.0)
+    }
+}
+
+impl FromIterator<TierId> for TierMask {
+    fn from_iter<I: IntoIterator<Item = TierId>>(iter: I) -> Self {
+        let mut m = TierMask::EMPTY;
+        for t in iter {
+            m.insert(t);
+        }
+        m
+    }
+}
+
+impl IntoIterator for TierMask {
+    type Item = TierId;
+    type IntoIter = TierMaskIter;
+    fn into_iter(self) -> TierMaskIter {
+        self.iter()
+    }
+}
+
+/// Iterator over a [`TierMask`] in ascending tier-id order.
+#[derive(Debug, Clone)]
+pub struct TierMaskIter(u64);
+
+impl Iterator for TierMaskIter {
+    type Item = TierId;
+
+    #[inline]
+    fn next(&mut self) -> Option<TierId> {
+        if self.0 == 0 {
+            None
+        } else {
+            let t = self.0.trailing_zeros();
+            self.0 &= self.0 - 1; // clear lowest set bit
+            Some(TierId(t))
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = self.0.count_ones() as usize;
+        (n, Some(n))
+    }
+}
+
+impl ExactSizeIterator for TierMaskIter {}
 
 /// Default ideal utilization (paper Fig. 3): 70% cpu/mem, 80% tasks.
 pub fn default_ideal_utilization() -> ResourceVec {
@@ -79,7 +246,7 @@ pub fn paper_slo_mapping(tier_index: usize) -> Vec<Slo> {
 pub fn paper_tiers_for_slo(slo: Slo, n_tiers: usize) -> Vec<TierId> {
     (0..n_tiers)
         .filter(|&t| paper_slo_mapping(t).contains(&slo))
-        .map(TierId)
+        .map(TierId::from_usize)
         .collect()
 }
 
@@ -135,5 +302,55 @@ mod tests {
         let t = tier();
         let u = t.utilization_of(&ResourceVec::new(500.0, 2000.0, 25000.0));
         assert_eq!(u, ResourceVec::new(0.5, 0.5, 0.5));
+    }
+
+    #[test]
+    fn mask_iterates_ascending_like_a_sorted_vec() {
+        let m: TierMask = [TierId(4), TierId(0), TierId(2)].into_iter().collect();
+        assert_eq!(m.len(), 3);
+        assert!(!m.is_empty());
+        let order: Vec<TierId> = m.iter().collect();
+        assert_eq!(order, vec![TierId(0), TierId(2), TierId(4)]);
+        assert_eq!(m.first(), Some(TierId(0)));
+        assert_eq!(m.nth(0), Some(TierId(0)));
+        assert_eq!(m.nth(1), Some(TierId(2)));
+        assert_eq!(m.nth(2), Some(TierId(4)));
+        assert_eq!(m.nth(3), None);
+        assert_eq!(m.iter().len(), 3);
+    }
+
+    #[test]
+    fn mask_insert_remove_contains() {
+        let mut m = TierMask::EMPTY;
+        assert!(m.is_empty());
+        assert_eq!(m.first(), None);
+        m.insert(TierId(3));
+        m.insert(TierId(3)); // idempotent
+        assert!(m.contains(TierId(3)));
+        assert!(!m.contains(TierId(2)));
+        assert_eq!(m, TierMask::single(TierId(3)));
+        m.remove(TierId(3));
+        assert!(m.is_empty());
+        // Removing an absent tier is a no-op.
+        m.remove(TierId(7));
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn mask_all_and_intersect() {
+        let all = TierMask::all(5);
+        assert_eq!(all.len(), 5);
+        assert!(all.contains(TierId(4)));
+        assert!(!all.contains(TierId(5)));
+        let odd: TierMask = [TierId(1), TierId(3), TierId(5)].into_iter().collect();
+        let both = all.intersect(odd);
+        assert_eq!(both.iter().collect::<Vec<_>>(), vec![TierId(1), TierId(3)]);
+        assert_eq!(TierMask::all(MAX_TIERS).len(), MAX_TIERS);
+        let either = TierMask::single(TierId(7)).union(odd);
+        assert_eq!(
+            either.iter().collect::<Vec<_>>(),
+            vec![TierId(1), TierId(3), TierId(5), TierId(7)]
+        );
+        assert_eq!(either.union(TierMask::EMPTY), either);
     }
 }

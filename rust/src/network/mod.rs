@@ -137,7 +137,7 @@ pub fn solution_p99_latency_ms(
     // Group moves by (from, to) transition.
     let mut counts = std::collections::BTreeMap::<(usize, usize), usize>::new();
     for m in moves {
-        *counts.entry((m.from.0, m.to.0)).or_insert(0) += 1;
+        *counts.entry((m.from.idx(), m.to.idx())).or_insert(0) += 1;
     }
     let total_moves = moves.len();
     let mut pooled = Vec::with_capacity(FIG4_SAMPLES);
@@ -173,7 +173,7 @@ pub fn assignment_mean_latency_ms(
     }
     let total: f64 = apps
         .iter()
-        .map(|app| app_tier_latency_ms(app, &tiers[assignment.tier_of(app.id).0], matrix))
+        .map(|app| app_tier_latency_ms(app, &tiers[assignment.tier_of(app.id).idx()], matrix))
         .sum();
     total / apps.len() as f64
 }
@@ -186,7 +186,7 @@ mod tests {
 
     fn tier(id: usize, regions: &[usize]) -> Tier {
         Tier {
-            id: TierId(id),
+            id: TierId::from_usize(id),
             name: format!("tier{}", id + 1),
             capacity: ResourceVec::splat(100.0),
             ideal_utilization: default_ideal_utilization(),

@@ -54,7 +54,7 @@ pub fn validate(problem: &Problem, assignment: &Assignment) -> Vec<Violation> {
     // C1/C2: capacity per tier per resource.
     let mut loads = vec![crate::model::ResourceVec::ZERO; problem.n_tiers()];
     for (i, app) in problem.apps.iter().enumerate() {
-        loads[assignment.as_slice()[i].0] += app.demand;
+        loads[assignment.as_slice()[i].idx()] += app.demand;
     }
     for (t, tier) in problem.tiers.iter().enumerate() {
         for r in ResourceKind::ALL {
@@ -81,7 +81,7 @@ pub fn validate(problem: &Problem, assignment: &Assignment) -> Vec<Violation> {
     for (i, app) in problem.apps.iter().enumerate() {
         let to = assignment.as_slice()[i];
         let from = problem.initial.as_slice()[i];
-        if !app.allowed.contains(&to) {
+        if !app.allowed.contains(to) {
             violations.push(Violation::DisallowedTier { app: i, tier: to });
         }
         if from != to && !problem.transition_allowed(from, to) {
@@ -113,7 +113,7 @@ mod tests {
     #[test]
     fn incumbent_is_movement_and_placement_clean() {
         let p = problem();
-        let v = validate(&p, &p.initial.clone());
+        let v = validate(&p, &p.initial);
         // The skewed initial state may violate capacity, but never
         // movement/placement constraints.
         assert!(v.iter().all(|v| matches!(v, Violation::CapacityExceeded { .. })));
@@ -129,8 +129,8 @@ mod tests {
             if moved > p.max_moves {
                 break;
             }
-            if let Some(&t) = app.allowed.iter().find(|&&t| t != p.initial.tier_of(AppId(i))) {
-                asg.set(AppId(i), t);
+            if let Some(t) = app.allowed.iter().find(|&t| t != p.initial.tier_of(AppId::from_usize(i))) {
+                asg.set(AppId::from_usize(i), t);
                 moved += 1;
             }
         }
@@ -150,11 +150,11 @@ mod tests {
             .find(|(_, a)| a.allowed.len() < p.n_tiers())
             .expect("paper mapping has restricted SLOs");
         let bad = (0..p.n_tiers())
-            .map(TierId)
-            .find(|t| !app.allowed.contains(t))
+            .map(TierId::from_usize)
+            .find(|&t| !app.allowed.contains(t))
             .unwrap();
         let mut asg = p.initial.clone();
-        asg.set(AppId(i), bad);
+        asg.set(AppId::from_usize(i), bad);
         assert!(validate(&p, &asg)
             .iter()
             .any(|v| matches!(v, Violation::DisallowedTier { app, .. } if *app == i)));
@@ -164,11 +164,11 @@ mod tests {
     fn forbidden_transition_detected() {
         let mut p = problem();
         let i = p.apps.iter().position(|a| a.allowed.len() >= 2).unwrap();
-        let from = p.initial.tier_of(AppId(i));
-        let to = *p.apps[i].allowed.iter().find(|&&t| t != from).unwrap();
+        let from = p.initial.tier_of(AppId::from_usize(i));
+        let to = p.apps[i].allowed.iter().find(|&t| t != from).unwrap();
         p.forbid_transition(from, to);
         let mut asg = p.initial.clone();
-        asg.set(AppId(i), to);
+        asg.set(AppId::from_usize(i), to);
         assert!(validate(&p, &asg)
             .iter()
             .any(|v| matches!(v, Violation::ForbiddenTransition { .. })));
@@ -180,8 +180,8 @@ mod tests {
         // Stack everything allowed onto tier 0.
         let mut asg = p.initial.clone();
         for (i, app) in p.apps.iter().enumerate() {
-            if app.allowed.contains(&TierId(0)) {
-                asg.set(AppId(i), TierId(0));
+            if app.allowed.contains(TierId(0)) {
+                asg.set(AppId::from_usize(i), TierId(0));
             }
         }
         let vs = validate(&p, &asg);

@@ -301,15 +301,16 @@ pub fn evolve_instance(
     spec.n_tiers = cfg.n_tiers;
     let bed = generate(&spec);
 
-    let mut apps = bed.apps.clone();
-    let tiers = bed.tiers.clone();
-    let mut initial: Vec<TierId> = bed.initial.as_slice().to_vec();
+    // The bed is ours: move its columns out instead of cloning them.
+    let mut apps = bed.apps;
+    let tiers = bed.tiers;
+    let mut initial: Vec<TierId> = bed.initial.into_vec();
 
     let scenario = ScenarioConfig::by_name(preset)
         .unwrap_or_else(|| panic!("unknown scenario preset `{preset}`"))
         .with_seed(cfg.seed ^ 0x9A7);
     let mut gen = ScenarioGen::new(scenario);
-    let mut next_id = apps.iter().map(|a| a.id.0 + 1).max().unwrap_or(0);
+    let mut next_id = apps.iter().map(|a| a.id.idx() + 1).max().unwrap_or(0);
 
     for round in 0..cfg.rounds {
         for event in gen.events_for_round(round, &apps, &tiers, next_id) {
@@ -330,7 +331,7 @@ pub fn evolve_instance(
                         .first()
                         .copied()
                         .unwrap_or(TierId(0));
-                    next_id = next_id.max(app.id.0 + 1);
+                    next_id = next_id.max(app.id.idx() + 1);
                     apps.push(app);
                     initial.push(tier);
                 }

@@ -86,7 +86,7 @@ impl ShardStrategy {
     fn owns(self, w: usize, n: usize, app: usize, tier: TierId, n_tiers: usize) -> bool {
         match self {
             ShardStrategy::Apps => app % n == w,
-            ShardStrategy::Moves => (app * n_tiers + tier.0) % n == w,
+            ShardStrategy::Moves => (app * n_tiers + tier.idx()) % n == w,
         }
     }
 }
@@ -206,7 +206,7 @@ fn scan_shard(
     for &app in order {
         let current = state.tier_of(app);
         let remaining = state.moves_remaining();
-        for &t in &problem.apps[app].allowed {
+        for t in problem.apps[app].allowed.iter() {
             if !strategy.owns(w, n, app, t, n_tiers)
                 || !move_is_legal(problem, current, remaining, app, t)
             {
@@ -235,7 +235,7 @@ fn enumerate_shard(
     for app in 0..problem.n_apps() {
         let current = state.tier_of(app);
         let remaining = state.moves_remaining();
-        for &t in &problem.apps[app].allowed {
+        for t in problem.apps[app].allowed.iter() {
             if strategy.owns(w, n, app, t, n_tiers)
                 && move_is_legal(problem, current, remaining, app, t)
             {
@@ -318,6 +318,9 @@ fn worker_loop<'p>(
 trait Scanner {
     fn score(&self) -> f64;
     fn assignment(&self) -> Assignment;
+    /// Copy the current assignment column into `out`, reusing its
+    /// capacity — the zero-alloc best-tracking path.
+    fn copy_assignment_into(&self, out: &mut Vec<TierId>);
     fn tier_of(&self, app: usize) -> TierId;
     fn moves_remaining(&self) -> usize;
     /// Score a hypothetical move against the authoritative state.
@@ -347,6 +350,11 @@ impl Scanner for InlineScanner<'_> {
 
     fn assignment(&self) -> Assignment {
         self.state.assignment()
+    }
+
+    fn copy_assignment_into(&self, out: &mut Vec<TierId>) {
+        out.clear();
+        out.extend_from_slice(self.state.tiers_slice());
     }
 
     fn tier_of(&self, app: usize) -> TierId {
@@ -411,6 +419,11 @@ impl Scanner for ShardedScanner<'_> {
         self.master.assignment()
     }
 
+    fn copy_assignment_into(&self, out: &mut Vec<TierId>) {
+        out.clear();
+        out.extend_from_slice(self.master.tiers_slice());
+    }
+
     fn tier_of(&self, app: usize) -> TierId {
         self.master.tier_of(app)
     }
@@ -451,7 +464,7 @@ impl Scanner for ShardedScanner<'_> {
         // legal by construction, so rejection here is a bug).
         if let Some((app, t, _)) = best {
             let mut cand = self.master.assignment();
-            cand.set(AppId(app), t);
+            cand.set(AppId::from_usize(app), t);
             let hard_violation = validate(self.problem, &cand)
                 .iter()
                 .any(|v| !matches!(v, Violation::CapacityExceeded { .. }));
@@ -473,6 +486,39 @@ impl Scanner for ShardedScanner<'_> {
             }
         }
         shards
+    }
+}
+
+/// Reusable buffers for [`LocalSearch::solve_warm_into`]: everything a
+/// warm solve would otherwise allocate, owned by the caller so
+/// steady-state rounds recycle capacity instead of touching the
+/// allocator. A `Default`-constructed scratch warms up on first use and
+/// keeps its capacity across solves.
+#[derive(Debug, Default)]
+pub struct SolveScratch {
+    /// Working assignment column, handed to [`ScoreState`] via
+    /// [`Assignment::new`] and recovered with [`ScoreState::into_parts`]
+    /// after the search.
+    tier_of: Vec<TierId>,
+    /// Per-tier load aggregates — same recycle cycle as `tier_of`.
+    loads: Vec<ResourceVec>,
+    /// Inline-scan traversal order (the identity permutation).
+    order: Vec<usize>,
+    /// Best assignment found — the solve's result column.
+    best: Vec<TierId>,
+    /// Moved-app scratch for perturbation restarts.
+    moved: Vec<usize>,
+}
+
+impl SolveScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The best assignment the last [`LocalSearch::solve_warm_into`]
+    /// found, as the raw position→tier column.
+    pub fn best(&self) -> &[TierId] {
+        &self.best
     }
 }
 
@@ -500,7 +546,7 @@ impl LocalSearch {
 
     /// Solve with the incremental CPU scorer.
     pub fn solve(&self, problem: &Problem, deadline: Deadline) -> Solution {
-        self.solve_inner(problem, deadline, None, problem.initial.clone(), None)
+        self.solve_inner(problem, deadline, None, &problem.initial, None)
     }
 
     /// Solve from the incumbent, warm-starting the score state from
@@ -515,14 +561,31 @@ impl LocalSearch {
         deadline: Deadline,
         loads: &[ResourceVec],
     ) -> Solution {
-        self.solve_inner(problem, deadline, None, problem.initial.clone(), Some(loads))
+        self.solve_inner(problem, deadline, None, &problem.initial, Some(loads))
+    }
+
+    /// Warm solve writing into caller-owned scratch buffers — the
+    /// steady-state entry point. Behaves exactly like
+    /// [`LocalSearch::solve_warm`]: same trajectory, bit-identical best
+    /// assignment (left in [`SolveScratch::best`]). Once the scratch has
+    /// warmed up to the fleet size, a `workers == 1` solve touches the
+    /// allocator zero times (the sharded backend spawns threads and
+    /// channels, which inherently allocate).
+    pub fn solve_warm_into(
+        &self,
+        problem: &Problem,
+        deadline: Deadline,
+        loads: &[ResourceVec],
+        scratch: &mut SolveScratch,
+    ) -> SolveStats {
+        self.solve_into(problem, deadline, None, &problem.initial, Some(loads), scratch)
     }
 
     /// Solve starting the search from `start` instead of the incumbent
     /// (movement is still measured against `problem.initial`). Used by
     /// OptimalSearch's polish stage. `start` must already satisfy the
     /// movement budget.
-    pub fn solve_from(&self, problem: &Problem, deadline: Deadline, start: Assignment) -> Solution {
+    pub fn solve_from(&self, problem: &Problem, deadline: Deadline, start: &Assignment) -> Solution {
         self.solve_inner(problem, deadline, None, start, None)
     }
 
@@ -536,69 +599,130 @@ impl LocalSearch {
         deadline: Deadline,
         scorer: &mut dyn BatchScorer,
     ) -> Solution {
-        self.solve_inner(problem, deadline, Some(scorer), problem.initial.clone(), None)
+        self.solve_inner(problem, deadline, Some(scorer), &problem.initial, None)
     }
 
+    /// One-shot wrapper over [`LocalSearch::solve_into`]: runs with a
+    /// throwaway scratch and packages the best column as a [`Solution`].
     fn solve_inner(
         &self,
         problem: &Problem,
         deadline: Deadline,
         batch: Option<&mut dyn BatchScorer>,
-        start: Assignment,
+        start: &Assignment,
         warm_loads: Option<&[ResourceVec]>,
     ) -> Solution {
-        let make_state = |start: Assignment| match warm_loads {
-            Some(l) => ScoreState::with_loads(problem, start, l.to_vec()),
-            None => ScoreState::new(problem, start),
+        let mut scratch = SolveScratch::new();
+        let stats = self.solve_into(problem, deadline, batch, start, warm_loads, &mut scratch);
+        let mut solution = Solution::of_assignment(
+            problem,
+            Assignment::new(std::mem::take(&mut scratch.best)),
+            SolverKind::LocalSearch,
+        );
+        solution.stats = stats;
+        solution
+    }
+
+    /// The search core: every buffer it needs comes from (and returns
+    /// to) `scratch`, so repeated solves recycle capacity instead of
+    /// allocating. The best assignment is left in `scratch.best`.
+    fn solve_into(
+        &self,
+        problem: &Problem,
+        deadline: Deadline,
+        batch: Option<&mut dyn BatchScorer>,
+        start: &Assignment,
+        warm_loads: Option<&[ResourceVec]>,
+        scratch: &mut SolveScratch,
+    ) -> SolveStats {
+        // Working column: recycled buffer refilled from the start.
+        let mut tier_buf = std::mem::take(&mut scratch.tier_of);
+        tier_buf.clear();
+        tier_buf.extend_from_slice(start.as_slice());
+        let state = match warm_loads {
+            Some(l) => {
+                let mut loads_buf = std::mem::take(&mut scratch.loads);
+                loads_buf.clear();
+                loads_buf.extend_from_slice(l);
+                ScoreState::with_loads(problem, Assignment::new(tier_buf), loads_buf)
+            }
+            None => ScoreState::new(problem, Assignment::new(tier_buf)),
         };
         let workers = self.config.parallel.workers.max(1).min(problem.n_apps().max(1));
-        if workers <= 1 {
-            let mut scanner = InlineScanner {
+        let (stats, state) = if workers <= 1 {
+            let mut order = std::mem::take(&mut scratch.order);
+            order.clear();
+            order.extend(0..problem.n_apps());
+            let mut scanner = InlineScanner { problem, state, order };
+            let stats = self.run_search(
                 problem,
-                state: make_state(start),
-                order: (0..problem.n_apps()).collect(),
-            };
-            return self.run_search(problem, deadline, batch, &mut scanner);
-        }
-        let strategy = self.config.parallel.shard_strategy;
-        let seed = self.config.seed;
-        let master = make_state(start);
-        std::thread::scope(|scope| {
-            let (reply_tx, reply_rx) = mpsc::channel();
-            let mut cmd_txs = Vec::with_capacity(workers);
-            for wid in 0..workers {
-                let (tx, rx) = mpsc::channel::<Cmd>();
-                cmd_txs.push(tx);
-                let reply_tx = reply_tx.clone();
-                let state = master.replica();
-                scope.spawn(move || {
-                    worker_loop(problem, state, wid, workers, strategy, seed, rx, reply_tx)
-                });
-            }
-            drop(reply_tx);
-            let mut scanner = ShardedScanner { problem, master, cmd_txs, reply_rx };
-            self.run_search(problem, deadline, batch, &mut scanner)
-            // scanner drops here: command channels close, workers exit,
-            // and the scope joins them before returning.
-        })
+                deadline,
+                batch,
+                &mut scanner,
+                &mut scratch.best,
+                &mut scratch.moved,
+            );
+            scratch.order = std::mem::take(&mut scanner.order);
+            (stats, scanner.state)
+        } else {
+            let strategy = self.config.parallel.shard_strategy;
+            let seed = self.config.seed;
+            let master = state;
+            std::thread::scope(|scope| {
+                let (reply_tx, reply_rx) = mpsc::channel();
+                let mut cmd_txs = Vec::with_capacity(workers);
+                for wid in 0..workers {
+                    let (tx, rx) = mpsc::channel::<Cmd>();
+                    cmd_txs.push(tx);
+                    let reply_tx = reply_tx.clone();
+                    let state = master.replica();
+                    scope.spawn(move || {
+                        worker_loop(problem, state, wid, workers, strategy, seed, rx, reply_tx)
+                    });
+                }
+                drop(reply_tx);
+                let mut scanner = ShardedScanner { problem, master, cmd_txs, reply_rx };
+                let stats = self.run_search(
+                    problem,
+                    deadline,
+                    batch,
+                    &mut scanner,
+                    &mut scratch.best,
+                    &mut scratch.moved,
+                );
+                // Recover the master state; the scanner's command
+                // channels drop here, workers exit, and the scope joins
+                // them before returning.
+                (stats, scanner.master)
+            })
+        };
+        let (tier_of, loads) = state.into_parts();
+        scratch.tier_of = tier_of;
+        scratch.loads = loads;
+        stats
     }
 
     /// The backend-agnostic search loop: steepest-descent generations
     /// with plateau-triggered perturbation restarts. All randomness that
     /// can influence the output flows through the master stream
     /// `Pcg64::new(seed)`; scanner-internal randomness only reorders
-    /// traversal.
+    /// traversal. The best assignment found is tracked in (and returned
+    /// through) `best`; `moved` is perturbation scratch. Both reuse their
+    /// capacity, so a warmed-up search never allocates here.
+    #[allow(clippy::too_many_arguments)]
     fn run_search<S: Scanner>(
         &self,
         problem: &Problem,
         deadline: Deadline,
         mut batch: Option<&mut dyn BatchScorer>,
         scanner: &mut S,
-    ) -> Solution {
+        best: &mut Vec<TierId>,
+        moved: &mut Vec<usize>,
+    ) -> SolveStats {
         let mut rng = Pcg64::new(self.config.seed);
         let mut stats = SolveStats::default();
 
-        let mut best_assignment = scanner.assignment();
+        scanner.copy_assignment_into(best);
         let mut best_score = scanner.score();
         let mut converged_at = std::time::Duration::ZERO;
 
@@ -637,7 +761,7 @@ impl LocalSearch {
                             .iter()
                             .map(|&(app, t)| {
                                 let mut asg = base.clone();
-                                asg.set(AppId(app), t);
+                                asg.set(AppId::from_usize(app), t);
                                 asg
                             })
                             .collect();
@@ -666,7 +790,7 @@ impl LocalSearch {
                             let new_score = scanner.score();
                             if new_score < best_score {
                                 best_score = new_score;
-                                best_assignment = scanner.assignment();
+                                scanner.copy_assignment_into(best);
                                 converged_at = deadline.elapsed();
                             }
                         }
@@ -694,7 +818,7 @@ impl LocalSearch {
                     improved_this_pass = true;
                     if s < best_score {
                         best_score = s;
-                        best_assignment = scanner.assignment();
+                        scanner.copy_assignment_into(best);
                         converged_at = deadline.elapsed();
                     }
                 }
@@ -719,7 +843,7 @@ impl LocalSearch {
                     best_at_last_restart = best_score;
                     // Perturbation restart: revert part of the diff and
                     // kick a few random feasible moves, keeping best.
-                    self.perturb(problem, scanner, &mut rng);
+                    self.perturb(problem, scanner, &mut rng, moved);
                     stats.restarts += 1;
                     plateau = 0;
                 }
@@ -728,18 +852,24 @@ impl LocalSearch {
 
         stats.elapsed = deadline.elapsed();
         stats.converged_at = converged_at;
-        let mut solution =
-            Solution::of_assignment(problem, best_assignment, SolverKind::LocalSearch);
-        solution.stats = stats;
-        solution
+        stats
     }
 
-    fn perturb<S: Scanner>(&self, problem: &Problem, scanner: &mut S, rng: &mut Pcg64) {
-        // Revert a fraction of moved apps.
-        let moved: Vec<usize> = (0..problem.n_apps())
-            .filter(|&a| scanner.tier_of(a) != problem.initial.as_slice()[a])
-            .collect();
-        for &app in &moved {
+    fn perturb<S: Scanner>(
+        &self,
+        problem: &Problem,
+        scanner: &mut S,
+        rng: &mut Pcg64,
+        moved: &mut Vec<usize>,
+    ) {
+        // Revert a fraction of moved apps. Same enumeration order as the
+        // Vec this scratch replaced, so the rng draw sequence — and hence
+        // the search trajectory — is unchanged.
+        moved.clear();
+        moved.extend(
+            (0..problem.n_apps()).filter(|&a| scanner.tier_of(a) != problem.initial.as_slice()[a]),
+        );
+        for &app in moved.iter() {
             if rng.chance(self.config.perturb_revert_frac) {
                 scanner.apply(app, problem.initial.as_slice()[app]);
             }
@@ -747,8 +877,10 @@ impl LocalSearch {
         // Kick random feasible moves.
         for _ in 0..self.config.perturb_kicks {
             let app = rng.range(0, problem.n_apps());
-            let allowed = &problem.apps[app].allowed;
-            let to = *rng.choose(allowed).unwrap();
+            // `nth(range(0, len))` consumes exactly one draw, like the
+            // `choose` on the sorted Vec this mask replaced.
+            let allowed = problem.apps[app].allowed;
+            let to = allowed.nth(rng.range(0, allowed.len())).unwrap();
             if move_is_legal(problem, scanner.tier_of(app), scanner.moves_remaining(), app, to) {
                 scanner.apply(app, to);
             }
@@ -773,7 +905,7 @@ mod tests {
     #[test]
     fn improves_over_incumbent() {
         let p = paper_problem(42);
-        let (initial_score, _) = score_assignment(&p, &p.initial.clone());
+        let (initial_score, _) = score_assignment(&p, &p.initial);
         let sol = LocalSearch::with_seed(1).solve(&p, Deadline::after_ms(300));
         assert!(
             sol.score < initial_score,
@@ -787,7 +919,7 @@ mod tests {
     #[test]
     fn sharded_improves_over_incumbent() {
         let p = paper_problem(42);
-        let (initial_score, _) = score_assignment(&p, &p.initial.clone());
+        let (initial_score, _) = score_assignment(&p, &p.initial);
         let sol = LocalSearch::sharded(1, 4).solve(&p, Deadline::after_ms(300));
         assert!(sol.score < initial_score);
         assert!(sol.stats.candidates_scored > 0);
@@ -879,7 +1011,7 @@ mod tests {
         let mut scorer = CpuBatch;
         let sol =
             LocalSearch::with_seed(6).solve_batched(&p, Deadline::after_ms(200), &mut scorer);
-        let (initial_score, _) = score_assignment(&p, &p.initial.clone());
+        let (initial_score, _) = score_assignment(&p, &p.initial);
         assert!(sol.score < initial_score);
         assert!(sol.assignment.move_count_from(&p.initial) <= p.max_moves);
     }
@@ -948,7 +1080,7 @@ mod tests {
                 for app in 0..n_apps {
                     for t in 0..n_tiers {
                         let owners = (0..n)
-                            .filter(|&w| strategy.owns(w, n, app, TierId(t), n_tiers))
+                            .filter(|&w| strategy.owns(w, n, app, TierId::from_usize(t), n_tiers))
                             .count();
                         assert_eq!(owners, 1, "{strategy:?} n={n} app={app} t={t}");
                     }

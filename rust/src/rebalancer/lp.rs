@@ -314,7 +314,7 @@ impl Tableau {
             for c in self.art_start..self.n_cols {
                 phase1_cost[c] = 1.0;
             }
-            match self.run(&phase1_cost.clone(), self.n_cols, max_iters, deadline) {
+            match self.run(&phase1_cost, self.n_cols, max_iters, deadline) {
                 Ok(it) => used = it,
                 Err(LpOutcome::Unbounded) => return LpOutcome::Infeasible,
                 Err(other) => return other,
@@ -334,7 +334,9 @@ impl Tableau {
             }
         }
         // ---- phase 2: optimize the real objective over non-artificials.
-        let cost = self.cost.clone();
+        // Take, don't clone: `run` needs `&mut self` while pricing against
+        // the phase-2 cost, and `solve` owns `self` outright.
+        let cost = std::mem::take(&mut self.cost);
         let budget = max_iters.saturating_sub(used).max(1);
         match self.run(&cost, self.art_start, budget, deadline) {
             Ok(_) => {

@@ -16,7 +16,7 @@ pub mod solution;
 pub use constraints::{is_feasible, validate, Violation};
 pub use gap::{GapCell, GapConfig, GapReport};
 pub use goals::{weights_from_priorities, Goal};
-pub use local_search::{LocalSearch, LocalSearchConfig, ParallelConfig, ShardStrategy};
+pub use local_search::{LocalSearch, LocalSearchConfig, ParallelConfig, ShardStrategy, SolveScratch};
 pub use optimal::{exhaustive_search, ExhaustiveResult, OptimalSearch, OptimalSearchConfig};
 pub use problem::{EventDirty, GoalWeights, Problem, ProblemApp, ProblemTier};
 pub use scoring::{refresh_tier_loads, score_assignment, tier_loads, Breakdown, ScoreState};

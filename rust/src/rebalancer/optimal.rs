@@ -14,7 +14,7 @@
 //!     the rounded point (keeps the solution at least as good as rounding
 //!     left it, and strictly enforces all constraints by construction).
 
-use crate::model::{Assignment, TierId, NUM_RESOURCES};
+use crate::model::{AppId, Assignment, TierId, NUM_RESOURCES};
 use crate::rebalancer::local_search::{LocalSearch, LocalSearchConfig};
 use crate::rebalancer::lp::{Lp, LpOutcome, Sense};
 use crate::rebalancer::problem::Problem;
@@ -76,7 +76,7 @@ impl VarMap {
         problem.apps[app]
             .allowed
             .iter()
-            .position(|&t| t == tier)
+            .position(|t| t == tier)
             .map(|k| self.x_offset[app] + k)
     }
 
@@ -129,21 +129,22 @@ impl OptimalSearch {
         };
 
         // ---- 2-3. rounded + repaired start (fall back to incumbent) -----
-        let start = rounded.unwrap_or_else(|| problem.initial.clone());
+        let start = rounded.as_ref().unwrap_or(&problem.initial);
         debug_assert!(start.move_count_from(&problem.initial) <= problem.max_moves);
 
         // ---- 4. polish with LocalSearch from the rounded point ----------
         let pre_polish = deadline.elapsed();
         let polish_budget = deadline.remaining().mul_f64(self.config.polish_fraction);
-        let polish = PolishSearch { seed: self.config.seed, start: start.clone() };
+        let polish = PolishSearch { seed: self.config.seed, start };
         let mut best = polish.run(problem, Deadline::after(polish_budget));
         // Convergence time includes the LP + rounding prelude.
         best.stats.converged_at += pre_polish;
 
         // Keep whichever of {rounded, polished} scores better (polish can
         // only improve, but guard against pathological perturbation).
-        let (start_score, _) = score_assignment(problem, &start);
+        let (start_score, _) = score_assignment(problem, start);
         if start_score < best.score {
+            let start = rounded.unwrap_or_else(|| problem.initial.clone());
             best = Solution::of_assignment(problem, start, SolverKind::OptimalSearch);
             best.stats.converged_at = pre_polish;
         }
@@ -193,7 +194,7 @@ impl OptimalSearch {
             let init = problem.initial.as_slice()[a];
             let move_cost =
                 w.move_cost * app.demand.tasks() / task_total + w.criticality * app.criticality / crit_total;
-            for (k, &t) in app.allowed.iter().enumerate() {
+            for (k, t) in app.allowed.iter().enumerate() {
                 if t != init {
                     lp.set_objective(vm.x_offset[a] + k, move_cost);
                 }
@@ -212,7 +213,7 @@ impl OptimalSearch {
         // x[a][t] = 0 for banned (init→t).
         for (a, app) in problem.apps.iter().enumerate() {
             let init = problem.initial.as_slice()[a];
-            for (k, &t) in app.allowed.iter().enumerate() {
+            for (k, t) in app.allowed.iter().enumerate() {
                 if t != init && !problem.transition_allowed(init, t) {
                     lp.add_row(vec![(vm.x_offset[a] + k, 1.0)], Sense::Eq, 0.0);
                 }
@@ -228,23 +229,28 @@ impl OptimalSearch {
                 }
                 let mut load_coeffs: Vec<(usize, f64)> = Vec::new();
                 for (a, app) in problem.apps.iter().enumerate() {
-                    if let Some(xv) = vm.x(problem, a, TierId(t)) {
+                    if let Some(xv) = vm.x(problem, a, TierId::from_usize(t)) {
                         let d = app.demand.0[r];
                         if d != 0.0 {
                             load_coeffs.push((xv, d / cap));
                         }
                     }
                 }
-                // C1/C2: utilization <= 1.
-                lp.add_row(load_coeffs.clone(), Sense::Le, 1.0);
-                // Balance linearization: util - d + e = target.
-                let mut dev = load_coeffs.clone();
+                // The deviation and overage rows extend the shared load
+                // row; build them from a borrow (exact capacity up front)
+                // so the C1/C2 row can take ownership without a clone.
+                let mut dev = Vec::with_capacity(load_coeffs.len() + 2);
+                dev.extend_from_slice(&load_coeffs);
                 dev.push((vm.d(t, r), -1.0));
                 dev.push((vm.e(t, r), 1.0));
+                let mut over = Vec::with_capacity(load_coeffs.len() + 1);
+                over.extend_from_slice(&load_coeffs);
+                over.push((vm.o(t, r), -1.0));
+                // C1/C2: utilization <= 1.
+                lp.add_row(load_coeffs, Sense::Le, 1.0);
+                // Balance linearization: util - d + e = target.
                 lp.add_row(dev, Sense::Eq, target[r]);
                 // Overage: util - o <= ideal.
-                let mut over = load_coeffs;
-                over.push((vm.o(t, r), -1.0));
                 lp.add_row(over, Sense::Le, tier.ideal_utilization.0[r]);
             }
         }
@@ -278,7 +284,7 @@ impl OptimalSearch {
             let mut best_k = 0usize;
             let mut best_v = f64::NEG_INFINITY;
             let mut init_v = 0.0;
-            for (k, &t) in app.allowed.iter().enumerate() {
+            for (k, t) in app.allowed.iter().enumerate() {
                 let v = x[vm.x_offset[a] + k];
                 if t == init {
                     init_v = v;
@@ -289,7 +295,7 @@ impl OptimalSearch {
                     best_k = k;
                 }
             }
-            let chosen = app.allowed[best_k];
+            let chosen = app.allowed.nth(best_k).unwrap();
             if chosen != init {
                 moved.push((a, best_v - init_v));
             }
@@ -333,7 +339,7 @@ pub fn exhaustive_search(problem: &Problem, deadline: Deadline) -> ExhaustiveRes
     for (a, app) in problem.apps.iter().enumerate() {
         let init = problem.initial.as_slice()[a];
         let mut cs = vec![init];
-        for &t in &app.allowed {
+        for t in app.allowed.iter() {
             if t != init && problem.transition_allowed(init, t) {
                 cs.push(t);
             }
@@ -345,7 +351,7 @@ pub fn exhaustive_search(problem: &Problem, deadline: Deadline) -> ExhaustiveRes
         problem,
         candidates,
         deadline,
-        current: problem.initial.as_slice().to_vec(),
+        current: problem.initial.clone(),
         best: problem.initial.as_slice().to_vec(),
         best_score: f64::INFINITY,
         states: 0,
@@ -368,7 +374,9 @@ struct ExhaustiveState<'p> {
     problem: &'p Problem,
     candidates: Vec<Vec<TierId>>,
     deadline: Deadline,
-    current: Vec<TierId>,
+    /// Kept as an [`Assignment`] so each leaf scores in place — the DFS
+    /// allocates nothing per node or per leaf.
+    current: Assignment,
     best: Vec<TierId>,
     best_score: f64,
     states: u64,
@@ -387,35 +395,35 @@ fn descend(st: &mut ExhaustiveState<'_>, app: usize, moves_used: usize) {
             st.complete = false;
             return;
         }
-        let assignment = Assignment::new(st.current.clone());
-        let (score, _) = score_assignment(st.problem, &assignment);
+        let (score, _) = score_assignment(st.problem, &st.current);
         if score < st.best_score {
             st.best_score = score;
-            st.best.copy_from_slice(&st.current);
+            st.best.copy_from_slice(st.current.as_slice());
         }
         return;
     }
-    let tiers = st.candidates[app].clone();
-    for &t in &tiers {
-        let moved = t != st.problem.initial.as_slice()[app];
+    let init = st.problem.initial.as_slice()[app];
+    for k in 0..st.candidates[app].len() {
+        let t = st.candidates[app][k];
+        let moved = t != init;
         let next_moves = moves_used + usize::from(moved);
         if next_moves > st.problem.max_moves {
             continue;
         }
-        st.current[app] = t;
+        st.current.set(AppId::from_usize(app), t);
         descend(st, app + 1, next_moves);
     }
-    st.current[app] = st.problem.initial.as_slice()[app];
+    st.current.set(AppId::from_usize(app), init);
 }
 
 /// LocalSearch wrapper that starts from a given assignment instead of the
 /// incumbent (used by the polish stage).
-struct PolishSearch {
+struct PolishSearch<'a> {
     seed: u64,
-    start: Assignment,
+    start: &'a Assignment,
 }
 
-impl PolishSearch {
+impl PolishSearch<'_> {
     fn run(&self, problem: &Problem, deadline: Deadline) -> Solution {
         // Trick: construct a sub-problem whose *search start* is `start`
         // by running LocalSearch on the original problem but seeding its
@@ -428,7 +436,7 @@ impl PolishSearch {
             seed: self.seed,
             ..LocalSearchConfig::default()
         });
-        let mut sol = ls.solve_from(problem, deadline, self.start.clone());
+        let mut sol = ls.solve_from(problem, deadline, self.start);
         sol.solver = SolverKind::OptimalSearch;
         sol
     }
@@ -458,7 +466,7 @@ mod tests {
     #[test]
     fn beats_incumbent() {
         let p = paper_problem(42);
-        let (initial_score, _) = score_assignment(&p, &p.initial.clone());
+        let (initial_score, _) = score_assignment(&p, &p.initial);
         let sol = OptimalSearch::with_seed(1).solve(&p, Deadline::after_ms(500));
         assert!(sol.score < initial_score, "{} < {}", sol.score, initial_score);
         assert_eq!(sol.solver, SolverKind::OptimalSearch);
@@ -516,7 +524,7 @@ mod tests {
     fn zero_deadline_returns_incumbent_quality_or_better() {
         let p = paper_problem(42);
         let sol = OptimalSearch::with_seed(5).solve(&p, Deadline::after_ms(0));
-        let (initial_score, _) = score_assignment(&p, &p.initial.clone());
+        let (initial_score, _) = score_assignment(&p, &p.initial);
         assert!(sol.score <= initial_score + 1e-9);
     }
 

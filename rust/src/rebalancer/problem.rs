@@ -7,7 +7,10 @@
 //! dynamically added constraints), and tier-level forbidden transitions
 //! (the w_cnst region-overlap constraint, C5).
 
-use crate::model::{App, AppId, Assignment, FleetEvent, RegionSet, ResourceVec, Slo, Tier, TierId};
+use crate::model::{
+    App, AppId, Assignment, FleetEvent, RegionSet, ResourceVec, Slo, Tier, TierId, TierMask,
+    MAX_TIERS,
+};
 use std::collections::BTreeSet;
 
 /// Tier-transition policy (C5). `All` is the default; `MajorityOverlap`
@@ -52,22 +55,26 @@ impl TransitionPolicy {
                     }
                 }
                 std::hint::black_box(hash);
-                regions[from.0].majority_overlap(&regions[to.0])
+                regions[from.idx()].majority_overlap(&regions[to.idx()])
             }
         }
     }
 }
 
-/// Solver-facing app entity.
-#[derive(Debug, Clone, PartialEq)]
+/// Solver-facing app entity: a flat `Copy` POD (id + demand columns +
+/// criticality + allowed-tier bitset), so `Vec<ProblemApp>` is one
+/// contiguous arena with zero per-app heap indirection — the app table a
+/// million-app problem iterates every round stays cache-linear.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ProblemApp {
     pub id: AppId,
     /// Peak (p99) demand from the collection stage.
     pub demand: ResourceVec,
     /// Criticality score in [0,1] (goal G5 affinity).
     pub criticality: f64,
-    /// Tiers this app may run on (SLO support, C4). Sorted, deduped.
-    pub allowed: Vec<TierId>,
+    /// Tiers this app may run on (SLO support, C4). Iterates ascending,
+    /// exactly like the sorted `Vec<TierId>` it replaced.
+    pub allowed: TierMask,
 }
 
 /// Solver-facing tier container.
@@ -157,16 +164,18 @@ pub struct Problem {
     /// forecasting is on, empty otherwise. Drives the predicted-headroom
     /// goal (see [`Problem::forecast_active`]).
     pub predicted_demand: Vec<ResourceVec>,
+    /// Scratch for [`Problem::apply_events`]'s dirty-id accumulation —
+    /// kept on the problem so steady-state drift rounds reuse its
+    /// capacity instead of allocating a set per round.
+    dirty_scratch: Vec<AppId>,
 }
 
-/// What a batch of fleet events touched in a [`Problem`] — the dirty set
-/// the incremental engine uses to decide what to re-collect and which
-/// per-tier aggregates to refresh.
-#[derive(Debug, Clone, Default)]
+/// What a batch of fleet events touched in a [`Problem`]. The dense
+/// indices of apps whose demand must be re-collected land in the
+/// caller's `dirty_apps` buffer (an out-parameter so steady-state
+/// rounds reuse one allocation); this flat flag pair is `Copy`.
+#[derive(Debug, Clone, Copy, Default)]
 pub struct EventDirty {
-    /// Dense indices (post-event) of apps whose demand must be
-    /// re-collected: drifted + arrived apps still present.
-    pub apps: Vec<usize>,
     /// True when arrivals/departures changed the population shape.
     pub structural: bool,
     /// True when tier capacities or region sets changed.
@@ -200,6 +209,11 @@ impl Problem {
         if tiers.is_empty() {
             return Err(ProblemError::NoTiers);
         }
+        assert!(
+            tiers.len() <= MAX_TIERS,
+            "TierMask caps problems at {MAX_TIERS} tiers (got {})",
+            tiers.len()
+        );
         if initial.n_apps() != apps.len() {
             return Err(ProblemError::SizeMismatch { got: initial.n_apps(), want: apps.len() });
         }
@@ -212,7 +226,7 @@ impl Problem {
                     return Err(ProblemError::Unroutable(a.id));
                 }
                 Ok(ProblemApp {
-                    id: AppId(i),
+                    id: AppId::from_usize(i),
                     demand: a.demand,
                     criticality: a.criticality.score(),
                     allowed,
@@ -238,6 +252,7 @@ impl Problem {
             weights,
             stable_ids: apps.iter().map(|a| a.id).collect(),
             predicted_demand: Vec::new(),
+            dirty_scratch: Vec::new(),
         };
         problem.check()?;
         Ok(problem)
@@ -258,18 +273,15 @@ impl Problem {
     }
 
     /// The base (C4) allowed-tier set for an SLO class: every supporting
-    /// tier, ascending. Shared by [`Problem::build`], arrivals in
+    /// tier. Shared by [`Problem::build`], arrivals in
     /// [`Problem::apply_events`], and the engine's avoid-edge decay
-    /// restoration, so all three produce identical vectors.
-    pub fn allowed_for(tiers: &[Tier], slo: Slo) -> Vec<TierId> {
-        let mut allowed: Vec<TierId> = tiers
+    /// restoration, so all three produce identical masks.
+    pub fn allowed_for(tiers: &[Tier], slo: Slo) -> TierMask {
+        tiers
             .iter()
             .filter(|t| t.supports_slo(slo))
             .map(|t| t.id)
-            .collect();
-        allowed.sort_unstable();
-        allowed.dedup();
-        allowed
+            .collect()
     }
 
     /// Dense index of a fleet-stable app id, if present.
@@ -278,11 +290,9 @@ impl Problem {
     }
 
     /// Replace an app's allowed set (C4/C6) wholesale — the engine's
-    /// avoid-constraint decay path. `allowed` must be sorted, deduped and
-    /// non-empty.
-    pub fn set_allowed(&mut self, idx: usize, allowed: Vec<TierId>) {
+    /// avoid-constraint decay path. `allowed` must be non-empty.
+    pub fn set_allowed(&mut self, idx: usize, allowed: TierMask) {
         debug_assert!(!allowed.is_empty(), "allowed set must stay routable");
-        debug_assert!(allowed.windows(2).all(|w| w[0] < w[1]), "sorted + deduped");
         self.apps[idx].allowed = allowed;
     }
 
@@ -294,7 +304,13 @@ impl Problem {
     /// `movement_fraction` the C3 knob (the budget is recomputed because
     /// arrivals/departures change the population size). Demands are set
     /// to the events' *registered* values; the caller substitutes
-    /// collected (p99) demands for the returned dirty apps afterwards.
+    /// collected (p99) demands for the dirty apps afterwards.
+    ///
+    /// `dirty_apps` receives the dense (post-event) indices of apps whose
+    /// demand must be re-collected — drifted + arrived apps still present,
+    /// ascending, deduplicated. It is cleared first and may be reused
+    /// across rounds; together with the problem-owned id scratch this
+    /// keeps drift-only batches entirely off the allocator.
     ///
     /// Equivalence contract: after this call the problem must be
     /// indistinguishable from `Problem::build` on the post-event fleet
@@ -306,8 +322,11 @@ impl Problem {
         tiers: &[Tier],
         new_initial: &Assignment,
         movement_fraction: f64,
+        dirty_apps: &mut Vec<usize>,
     ) -> Result<EventDirty, ProblemError> {
-        let mut dirty_stable: BTreeSet<AppId> = BTreeSet::new();
+        dirty_apps.clear();
+        self.dirty_scratch.clear();
+        self.dirty_scratch.reserve(events.len());
         let mut structural = false;
         let mut tiers_changed = false;
         // Predictions are positional; drop them rather than risk a stale
@@ -321,7 +340,7 @@ impl Problem {
                         .index_of_stable(*app)
                         .ok_or(ProblemError::UnknownApp(*app))?;
                     self.apps[idx].demand = *demand;
-                    dirty_stable.insert(*app);
+                    self.dirty_scratch.push(*app);
                 }
                 FleetEvent::Arrival { app } => {
                     let allowed = Self::allowed_for(tiers, app.slo);
@@ -329,13 +348,13 @@ impl Problem {
                         return Err(ProblemError::Unroutable(app.id));
                     }
                     self.apps.push(ProblemApp {
-                        id: AppId(self.apps.len()),
+                        id: AppId::from_usize(self.apps.len()),
                         demand: app.demand,
                         criticality: app.criticality.score(),
                         allowed,
                     });
                     self.stable_ids.push(app.id);
-                    dirty_stable.insert(app.id);
+                    self.dirty_scratch.push(app.id);
                     structural = true;
                 }
                 FleetEvent::Departure { app } => {
@@ -346,9 +365,9 @@ impl Problem {
                     self.stable_ids.remove(idx);
                     // Re-densify solver-space ids after the removed slot.
                     for j in idx..self.apps.len() {
-                        self.apps[j].id = AppId(j);
+                        self.apps[j].id = AppId::from_usize(j);
                     }
-                    dirty_stable.remove(app);
+                    self.dirty_scratch.retain(|d| d != app);
                     structural = true;
                 }
                 FleetEvent::TierCapacityChange { .. } | FleetEvent::RegionOutage { .. } => {
@@ -371,13 +390,21 @@ impl Problem {
                 want: self.apps.len(),
             });
         }
-        self.initial = new_initial.clone();
+        // Same-size copies (every drift-only round) reuse the incumbent's
+        // buffer rather than cloning a fresh one.
+        self.initial.copy_from(new_initial);
         self.max_moves = Self::movement_budget(self.apps.len(), movement_fraction);
-        let apps = dirty_stable
-            .iter()
-            .filter_map(|id| self.index_of_stable(*id))
-            .collect();
-        Ok(EventDirty { apps, structural, tiers_changed })
+        // Ascending + deduplicated — the same order the old id set
+        // iterated in, so collection order downstream is unchanged.
+        self.dirty_scratch.sort_unstable();
+        self.dirty_scratch.dedup();
+        dirty_apps.reserve(self.dirty_scratch.len());
+        for id in &self.dirty_scratch {
+            if let Ok(idx) = self.stable_ids.binary_search(id) {
+                dirty_apps.push(idx);
+            }
+        }
+        Ok(EventDirty { structural, tiers_changed })
     }
 
     /// Structural sanity (initial tiers in range, allowed sets non-empty).
@@ -402,7 +429,7 @@ impl Problem {
                 return Err(ProblemError::Unroutable(app.id));
             }
             let t = self.initial.tier_of(app.id);
-            if t.0 >= self.tiers.len() {
+            if t.idx() >= self.tiers.len() {
                 return Err(ProblemError::BadInitialTier(app.id, t));
             }
         }
@@ -419,8 +446,8 @@ impl Problem {
 
     /// May `app` be placed on `tier` (C4 + C5 against the incumbent)?
     pub fn placement_allowed(&self, app: AppId, tier: TierId) -> bool {
-        let a = &self.apps[app.0];
-        if !a.allowed.contains(&tier) {
+        let a = &self.apps[app.idx()];
+        if !a.allowed.contains(tier) {
             return false;
         }
         let from = self.initial.tier_of(app);
@@ -441,11 +468,11 @@ impl Problem {
     /// movement" constraint, §3.4 / Fig. 2). Returns false if that would
     /// leave the app unroutable (the caller must then keep it in place).
     pub fn add_avoid(&mut self, app: AppId, tier: TierId) -> bool {
-        let a = &mut self.apps[app.0];
-        if a.allowed.len() == 1 && a.allowed[0] == tier {
+        let a = &mut self.apps[app.idx()];
+        if a.allowed == TierMask::single(tier) {
             return false;
         }
-        a.allowed.retain(|&t| t != tier);
+        a.allowed.remove(tier);
         true
     }
 
@@ -494,8 +521,8 @@ mod tests {
         let bed = generate(&WorkloadSpec::paper());
         let p = paper_problem();
         for (app, papp) in bed.apps.iter().zip(&p.apps) {
-            for t in &papp.allowed {
-                assert!(bed.tiers[t.0].supports_slo(app.slo));
+            for t in papp.allowed.iter() {
+                assert!(bed.tiers[t.idx()].supports_slo(app.slo));
             }
         }
     }
@@ -504,7 +531,7 @@ mod tests {
     fn avoid_edge_never_strands_app() {
         let mut p = paper_problem();
         let app = AppId(0);
-        let allowed = p.apps[0].allowed.clone();
+        let allowed: Vec<TierId> = p.apps[0].allowed.iter().collect();
         // Remove all but one: each succeeds; the last must be refused.
         for t in &allowed[..allowed.len() - 1] {
             assert!(p.add_avoid(app, *t));
@@ -520,7 +547,7 @@ mod tests {
         // Find an app whose allowed set has >= 2 tiers.
         let app = p.apps.iter().find(|a| a.allowed.len() >= 2).unwrap().id;
         let from = p.initial.tier_of(app);
-        let to = *p.apps[app.0].allowed.iter().find(|&&t| t != from).unwrap();
+        let to = p.apps[app.idx()].allowed.iter().find(|&t| t != from).unwrap();
         assert!(p.placement_allowed(app, to));
         p.forbid_transition(from, to);
         assert!(!p.placement_allowed(app, to));
@@ -563,8 +590,8 @@ mod tests {
     fn build_produces_dense_ids_and_identity_stable_map() {
         let p = paper_problem();
         for (i, app) in p.apps.iter().enumerate() {
-            assert_eq!(app.id, AppId(i));
-            assert_eq!(p.stable_ids[i], AppId(i));
+            assert_eq!(app.id, AppId::from_usize(i));
+            assert_eq!(p.stable_ids[i], AppId::from_usize(i));
         }
         assert_eq!(p.index_of_stable(AppId(5)), Some(5));
         assert_eq!(p.index_of_stable(AppId(10_000)), None);
@@ -589,7 +616,7 @@ mod tests {
         let mut initial = bed.initial.clone();
         let drifted = apps[0].demand.scale(1.5);
         let arrival = crate::model::App {
-            id: AppId(apps.len()),
+            id: AppId::from_usize(apps.len()),
             name: "arrival-extra".into(),
             ..apps[1].clone()
         };
@@ -607,7 +634,8 @@ mod tests {
         initial.push(arrival_tier);
         tiers[0].capacity = tiers[0].capacity.scale(0.9);
 
-        let dirty = p.apply_events(&events, &tiers, &initial, 0.10).unwrap();
+        let mut dirty_apps = Vec::new();
+        let dirty = p.apply_events(&events, &tiers, &initial, 0.10, &mut dirty_apps).unwrap();
         let rebuilt =
             Problem::build(&apps, &tiers, initial.clone(), 0.10, GoalWeights::default()).unwrap();
         assert_eq!(p.apps, rebuilt.apps);
@@ -618,9 +646,11 @@ mod tests {
         assert!(p.check().is_ok());
         assert!(dirty.structural);
         assert!(dirty.tiers_changed);
-        // Dirty apps: the drifted app (index 0) and the arrival (last).
-        assert!(dirty.apps.contains(&0));
-        assert!(dirty.apps.contains(&(p.n_apps() - 1)));
+        // Dirty apps: the drifted app (index 0) and the arrival (last),
+        // ascending and deduplicated.
+        assert!(dirty_apps.contains(&0));
+        assert!(dirty_apps.contains(&(p.n_apps() - 1)));
+        assert!(dirty_apps.windows(2).all(|w| w[0] < w[1]));
     }
 
     #[test]
@@ -637,7 +667,7 @@ mod tests {
         .unwrap();
         let ev = vec![FleetEvent::Departure { app: AppId(999) }];
         assert!(matches!(
-            p.apply_events(&ev, &bed.tiers, &bed.initial, 0.10),
+            p.apply_events(&ev, &bed.tiers, &bed.initial, 0.10, &mut Vec::new()),
             Err(ProblemError::UnknownApp(_))
         ));
     }

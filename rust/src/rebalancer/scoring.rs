@@ -9,9 +9,8 @@
 //! Semantics must stay in lockstep with `ref.py`; the parity test against
 //! the AOT artifact (`rust/tests/runtime_parity.rs`) enforces it.
 
-use crate::model::{Assignment, ResourceVec, TierId, NUM_RESOURCES};
+use crate::model::{Assignment, ResourceVec, TierId, TierMask, NUM_RESOURCES};
 use crate::rebalancer::problem::Problem;
-use std::collections::BTreeSet;
 
 const EPS: f64 = 1e-12;
 
@@ -25,7 +24,7 @@ pub fn tier_loads(problem: &Problem, assignment: &Assignment) -> Vec<ResourceVec
     assert_eq!(assignment.n_apps(), problem.n_apps(), "assignment size");
     let mut loads = vec![ResourceVec::ZERO; problem.n_tiers()];
     for (i, app) in problem.apps.iter().enumerate() {
-        loads[assignment.as_slice()[i].0] += app.demand;
+        loads[assignment.as_slice()[i].idx()] += app.demand;
     }
     loads
 }
@@ -38,20 +37,20 @@ pub fn refresh_tier_loads(
     problem: &Problem,
     assignment: &Assignment,
     loads: &mut [ResourceVec],
-    dirty: &BTreeSet<TierId>,
+    dirty: TierMask,
 ) {
     assert_eq!(loads.len(), problem.n_tiers(), "loads cache size");
     assert_eq!(assignment.n_apps(), problem.n_apps(), "assignment size");
     if dirty.is_empty() {
         return;
     }
-    for t in dirty {
-        loads[t.0] = ResourceVec::ZERO;
+    for t in dirty.iter() {
+        loads[t.idx()] = ResourceVec::ZERO;
     }
     for (i, app) in problem.apps.iter().enumerate() {
         let t = assignment.as_slice()[i];
-        if dirty.contains(&t) {
-            loads[t.0] += app.demand;
+        if dirty.contains(t) {
+            loads[t.idx()] += app.demand;
         }
     }
 }
@@ -168,7 +167,7 @@ impl<'p> ScoreState<'p> {
         let pred_loads = if problem.forecast_active() {
             let mut pl = vec![ResourceVec::ZERO; problem.n_tiers()];
             for i in 0..problem.n_apps() {
-                pl[assignment.as_slice()[i].0] += problem.predicted_demand[i];
+                pl[assignment.as_slice()[i].idx()] += problem.predicted_demand[i];
             }
             pl
         } else {
@@ -198,7 +197,9 @@ impl<'p> ScoreState<'p> {
             .max(EPS);
         Self {
             problem,
-            tier_of: assignment.as_slice().to_vec(),
+            // Take over the assignment's buffer instead of copying it —
+            // warm construction from recycled buffers allocates nothing.
+            tier_of: assignment.into_vec(),
             loads,
             pred_loads,
             moved_tasks,
@@ -211,6 +212,19 @@ impl<'p> ScoreState<'p> {
 
     pub fn assignment(&self) -> Assignment {
         Assignment::new(self.tier_of.clone())
+    }
+
+    /// The current assignment as a raw column, no allocation — the
+    /// zero-alloc steady path copies out of this instead of cloning.
+    pub fn tiers_slice(&self) -> &[TierId] {
+        &self.tier_of
+    }
+
+    /// Decompose into the two recycled buffers (assignment column,
+    /// per-tier loads) so a caller-owned scratch arena can reuse them
+    /// for the next warm solve.
+    pub fn into_parts(self) -> (Vec<TierId>, Vec<ResourceVec>) {
+        (self.tier_of, self.loads)
     }
 
     /// A per-shard replica of this state for the sharded LocalSearch
@@ -247,10 +261,10 @@ impl<'p> ScoreState<'p> {
             app,
             from,
             to,
-            prev_load_from: self.loads[from.0],
-            prev_load_to: self.loads[to.0],
-            prev_pred_from: if forecasting { self.pred_loads[from.0] } else { ResourceVec::ZERO },
-            prev_pred_to: if forecasting { self.pred_loads[to.0] } else { ResourceVec::ZERO },
+            prev_load_from: self.loads[from.idx()],
+            prev_load_to: self.loads[to.idx()],
+            prev_pred_from: if forecasting { self.pred_loads[from.idx()] } else { ResourceVec::ZERO },
+            prev_pred_to: if forecasting { self.pred_loads[to.idx()] } else { ResourceVec::ZERO },
             prev_moved_tasks: self.moved_tasks,
             prev_moved_crit: self.moved_crit,
             prev_n_moved: self.n_moved,
@@ -260,12 +274,12 @@ impl<'p> ScoreState<'p> {
         }
         let a = &self.problem.apps[app];
         let init = self.problem.initial.as_slice()[app];
-        self.loads[from.0] -= a.demand;
-        self.loads[to.0] += a.demand;
+        self.loads[from.idx()] -= a.demand;
+        self.loads[to.idx()] += a.demand;
         if forecasting {
             let pd = self.problem.predicted_demand[app];
-            self.pred_loads[from.0] -= pd;
-            self.pred_loads[to.0] += pd;
+            self.pred_loads[from.idx()] -= pd;
+            self.pred_loads[to.idx()] += pd;
         }
         // Moved-set bookkeeping relative to the incumbent.
         if from == init {
@@ -286,11 +300,11 @@ impl<'p> ScoreState<'p> {
     /// un-reverted `apply` (the peek discipline).
     pub fn revert(&mut self, token: Applied) {
         self.tier_of[token.app] = token.from;
-        self.loads[token.from.0] = token.prev_load_from;
-        self.loads[token.to.0] = token.prev_load_to;
+        self.loads[token.from.idx()] = token.prev_load_from;
+        self.loads[token.to.idx()] = token.prev_load_to;
         if !self.pred_loads.is_empty() {
-            self.pred_loads[token.from.0] = token.prev_pred_from;
-            self.pred_loads[token.to.0] = token.prev_pred_to;
+            self.pred_loads[token.from.idx()] = token.prev_pred_from;
+            self.pred_loads[token.to.idx()] = token.prev_pred_to;
         }
         self.moved_tasks = token.prev_moved_tasks;
         self.moved_crit = token.prev_moved_crit;
@@ -402,7 +416,7 @@ mod tests {
     #[test]
     fn incumbent_has_zero_move_cost() {
         let p = paper_problem();
-        let (_, b) = score_assignment(&p, &p.initial.clone());
+        let (_, b) = score_assignment(&p, &p.initial);
         assert_eq!(b.move_cost, 0.0);
         assert_eq!(b.crit_cost, 0.0);
     }
@@ -414,7 +428,8 @@ mod tests {
         let mut rng = Pcg64::new(1);
         for _ in 0..50 {
             let app = rng.range(0, p.n_apps());
-            let to = *rng.choose(&p.apps[app].allowed).unwrap();
+            let al = p.apps[app].allowed;
+            let to = al.nth(rng.range(0, al.len())).unwrap();
             state.apply(app, to);
             let full = ScoreState::new(&p, state.assignment());
             let (a, b) = (state.score(), full.score());
@@ -433,7 +448,7 @@ mod tests {
         let before = state.score();
         let before_loads = state.loads().to_vec();
         let app = 3;
-        let to = *p.apps[app].allowed.iter().find(|&&t| t != state.tier_of(app)).unwrap();
+        let to = p.apps[app].allowed.iter().find(|&t| t != state.tier_of(app)).unwrap();
         let token = state.apply(app, to);
         assert_ne!(state.score(), before);
         state.revert(token);
@@ -448,7 +463,7 @@ mod tests {
         let mut state = ScoreState::new(&p, p.initial.clone());
         let before = state.score();
         let app = 0;
-        for &t in &p.apps[app].allowed.clone() {
+        for t in p.apps[app].allowed.iter() {
             let _ = state.peek(app, t);
         }
         assert_eq!(state.score(), before);
@@ -464,7 +479,8 @@ mod tests {
         let mut rng = Pcg64::new(9);
         for _ in 0..200 {
             let app = rng.range(0, p.n_apps());
-            let to = *rng.choose(&p.apps[app].allowed).unwrap();
+            let al = p.apps[app].allowed;
+            let to = al.nth(rng.range(0, al.len())).unwrap();
             if rng.chance(0.3) {
                 state.apply(app, to);
             } else {
@@ -482,8 +498,8 @@ mod tests {
         let p = paper_problem();
         let mut state = ScoreState::new(&p, p.initial.clone());
         let app = 5;
-        let init = p.initial.tier_of(AppId(app));
-        let other = *p.apps[app].allowed.iter().find(|&&t| t != init).unwrap();
+        let init = p.initial.tier_of(AppId::from_usize(app));
+        let other = p.apps[app].allowed.iter().find(|&t| t != init).unwrap();
         state.apply(app, other);
         assert_eq!(state.n_moved(), 1);
         state.apply(app, init);
@@ -497,7 +513,7 @@ mod tests {
         // Cram everything legal into tier 0.
         let mut state = ScoreState::new(&p, p.initial.clone());
         for (i, app) in p.apps.iter().enumerate() {
-            if app.allowed.contains(&TierId(0)) {
+            if app.allowed.contains(TierId(0)) {
                 state.apply(i, TierId(0));
             }
         }
@@ -515,7 +531,7 @@ mod tests {
             |&(n_apps, n_tiers)| {
                 let apps: Vec<crate::model::App> = (0..n_apps)
                     .map(|i| crate::model::App {
-                        id: AppId(i),
+                        id: AppId::from_usize(i),
                         name: format!("a{i}"),
                         demand: ResourceVec::new(1.0, 1.0, 1.0),
                         slo: crate::model::Slo::Slo3,
@@ -525,7 +541,7 @@ mod tests {
                     .collect();
                 let tiers: Vec<crate::model::Tier> = (0..n_tiers)
                     .map(|t| crate::model::Tier {
-                        id: TierId(t),
+                        id: TierId::from_usize(t),
                         name: format!("t{t}"),
                         capacity: ResourceVec::splat(1000.0),
                         ideal_utilization: ResourceVec::new(0.7, 0.7, 0.8),
@@ -534,7 +550,7 @@ mod tests {
                     })
                     .collect();
                 let spread = Assignment::new(
-                    (0..n_apps).map(|i| TierId(i % n_tiers)).collect(),
+                    (0..n_apps).map(|i| TierId::from_usize(i % n_tiers)).collect(),
                 );
                 let stacked = Assignment::uniform(n_apps, TierId(0));
                 // Use spread as incumbent so move costs don't interfere.
@@ -560,13 +576,13 @@ mod tests {
         let mut loads = tier_loads(&p, &assignment);
         let mut rng = Pcg64::new(4);
         for _ in 0..20 {
-            let mut dirty = std::collections::BTreeSet::new();
+            let mut dirty = TierMask::EMPTY;
             for _ in 0..3 {
                 let i = rng.range(0, p.n_apps());
                 p.apps[i].demand = p.apps[i].demand.scale(rng.uniform(0.5, 2.0));
                 dirty.insert(assignment.as_slice()[i]);
             }
-            refresh_tier_loads(&p, &assignment, &mut loads, &dirty);
+            refresh_tier_loads(&p, &assignment, &mut loads, dirty);
             assert_eq!(loads, tier_loads(&p, &assignment), "bitwise cache equality");
         }
     }
@@ -575,7 +591,7 @@ mod tests {
     fn with_loads_equals_cold_construction() {
         let p = paper_problem();
         let mut asg = p.initial.clone();
-        asg.set(AppId(0), *p.apps[0].allowed.last().unwrap());
+        asg.set(AppId(0), p.apps[0].allowed.iter().last().unwrap());
         let loads = tier_loads(&p, &asg);
         let warm = ScoreState::with_loads(&p, asg.clone(), loads);
         let cold = ScoreState::new(&p, asg);
@@ -595,7 +611,7 @@ mod tests {
     fn forecast_goal_is_inert_by_default() {
         let p = paper_problem();
         assert!(!p.forecast_active());
-        let (_, b) = score_assignment(&p, &p.initial.clone());
+        let (_, b) = score_assignment(&p, &p.initial);
         assert_eq!(b.predicted_breach, 0.0);
         // Weight without predictions (or vice versa) stays inert too.
         let mut armed = p.clone();
@@ -613,7 +629,7 @@ mod tests {
         // weighted term moves the total score.
         let mut p = paper_problem();
         arm_forecast(&mut p, 3.0);
-        let (_, b) = score_assignment(&p, &p.initial.clone());
+        let (_, b) = score_assignment(&p, &p.initial);
         assert!(b.predicted_breach > 0.0, "3x predicted demand must breach headroom");
         let with = b.total(&p.weights);
         let mut unweighted = p.weights;
@@ -622,7 +638,7 @@ mod tests {
         // Calm predictions stay under the limit: the term is exactly 0.
         let mut calm = paper_problem();
         arm_forecast(&mut calm, 0.1);
-        let (_, cb) = score_assignment(&calm, &calm.initial.clone());
+        let (_, cb) = score_assignment(&calm, &calm.initial);
         assert_eq!(cb.predicted_breach, 0.0);
     }
 
@@ -634,7 +650,8 @@ mod tests {
         let mut rng = Pcg64::new(3);
         for _ in 0..50 {
             let app = rng.range(0, p.n_apps());
-            let to = *rng.choose(&p.apps[app].allowed).unwrap();
+            let al = p.apps[app].allowed;
+            let to = al.nth(rng.range(0, al.len())).unwrap();
             state.apply(app, to);
             let full = ScoreState::new(&p, state.assignment());
             assert_eq!(
@@ -654,7 +671,8 @@ mod tests {
         let mut rng = Pcg64::new(11);
         for _ in 0..100 {
             let app = rng.range(0, p.n_apps());
-            let to = *rng.choose(&p.apps[app].allowed).unwrap();
+            let al = p.apps[app].allowed;
+            let to = al.nth(rng.range(0, al.len())).unwrap();
             if rng.chance(0.3) {
                 state.apply(app, to);
             } else {
@@ -670,7 +688,7 @@ mod tests {
         // Swapping the roles of two identical tiers must not change score
         // when the incumbent also swaps (relabeling symmetry).
         let p = paper_problem();
-        let (s0, _) = score_assignment(&p, &p.initial.clone());
+        let (s0, _) = score_assignment(&p, &p.initial);
         assert!(s0.is_finite());
     }
 }

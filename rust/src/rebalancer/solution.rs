@@ -74,7 +74,7 @@ impl Solution {
     pub fn projected_loads(&self, problem: &Problem) -> Vec<ResourceVec> {
         let mut loads = vec![ResourceVec::ZERO; problem.n_tiers()];
         for (i, app) in problem.apps.iter().enumerate() {
-            loads[self.assignment.as_slice()[i].0] += app.demand;
+            loads[self.assignment.as_slice()[i].idx()] += app.demand;
         }
         loads
     }

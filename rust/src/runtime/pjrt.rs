@@ -144,7 +144,7 @@ impl PjrtScorer {
                 debug_assert_eq!(cand.n_apps(), n_apps);
                 let base = b * a_pad * n_tiers;
                 for (i, t) in cand.as_slice().iter().enumerate() {
-                    assign[base + i * n_tiers + t.0] = 1.0;
+                    assign[base + i * n_tiers + t.idx()] = 1.0;
                 }
                 // Padding apps: pinned to tier 0 in both init and cand.
                 for i in n_apps..a_pad {
@@ -210,7 +210,7 @@ impl PjrtScorer {
     ) -> Result<xla::Literal> {
         let mut v = vec![0f32; a_pad * n_tiers];
         for (i, t) in tiers.iter().enumerate() {
-            v[i * n_tiers + t.0] = 1.0;
+            v[i * n_tiers + t.idx()] = 1.0;
         }
         for i in tiers.len()..a_pad {
             v[i * n_tiers] = 1.0; // padding apps on tier 0

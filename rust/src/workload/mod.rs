@@ -147,7 +147,7 @@ pub fn tiers_for_slo(slo: Slo, n_tiers: usize) -> Vec<TierId> {
     }
     (0..n_tiers)
         .filter(|&t| slo_mapping(t, n_tiers).contains(&slo))
-        .map(TierId)
+        .map(TierId::from_usize)
         .collect()
 }
 
@@ -189,7 +189,7 @@ pub fn generate(spec: &WorkloadSpec) -> TestBed {
                 rng.uniform(0.0, 0.5)
             };
             App {
-                id: AppId(i),
+                id: AppId::from_usize(i),
                 name: format!("stream-app-{i:04}"),
                 demand: ResourceVec::new(cpu, mem, tasks),
                 slo,
@@ -220,7 +220,7 @@ pub fn generate(spec: &WorkloadSpec) -> TestBed {
                 (0..spec.regions_per_tier).map(|k| (start + k).min(spec.n_regions - 1)),
             );
             Tier {
-                id: TierId(t),
+                id: TierId::from_usize(t),
                 name: format!("tier{}", t + 1),
                 capacity: per_tier_target * wobble,
                 ideal_utilization: default_ideal_utilization(),
@@ -236,8 +236,8 @@ pub fn generate(spec: &WorkloadSpec) -> TestBed {
         let allowed = tiers_for_slo(app.slo, spec.n_tiers);
         debug_assert!(!allowed.is_empty(), "SLO {:?} unroutable", app.slo);
         let pick = match spec.hot_tier {
-            Some(hot) if allowed.contains(&TierId(hot)) && rng.chance(spec.hot_fraction) => {
-                TierId(hot)
+            Some(hot) if allowed.contains(&TierId::from_usize(hot)) && rng.chance(spec.hot_fraction) => {
+                TierId::from_usize(hot)
             }
             _ => *rng.choose(&allowed).expect("non-empty allowed set"),
         };
@@ -250,7 +250,7 @@ pub fn generate(spec: &WorkloadSpec) -> TestBed {
     // of apps whose data lives elsewhere.
     let mut apps = apps;
     for (i, app) in apps.iter_mut().enumerate() {
-        let home = &tiers[tier_of[i].0].regions;
+        let home = &tiers[tier_of[i].idx()].regions;
         if rng.chance(0.85) {
             app.preferred_region = *rng.choose(home.as_slice()).expect("tier has regions");
         }
@@ -393,7 +393,7 @@ mod tests {
         for app in &bed.apps {
             let t = bed.initial.tier_of(app.id);
             assert!(
-                bed.tiers[t.0].supports_slo(app.slo),
+                bed.tiers[t.idx()].supports_slo(app.slo),
                 "{} with {:?} on {t}",
                 app.name,
                 app.slo

@@ -392,7 +392,7 @@ impl ScenarioGen {
         }
         if cfg.arrival_prob > 0.0 && !apps.is_empty() && self.rng.chance(cfg.arrival_prob) {
             let template = &apps[self.rng.range(0, apps.len())];
-            let id = AppId(next_app_id);
+            let id = AppId::from_usize(next_app_id);
             events.push(FleetEvent::Arrival {
                 app: App {
                     id,

@@ -63,7 +63,7 @@ fn unconstrained_fixture_fully_accepts() {
     // A proximity budget no move can violate: the first substantive
     // proposal must be accepted by both lower-level schedulers.
     let (mut p, apps, tiers, proto) = setup(1e6);
-    let (initial_score, _) = score_assignment(&p, &p.initial.clone());
+    let (initial_score, _) = score_assignment(&p, &p.initial);
     let out = proto.run(&mut p, &apps, &tiers, Deadline::after_ms(500));
     assert!(out.fully_accepted, "unconstrained fixture must fully accept");
     let last = out.rounds.last().unwrap();
@@ -154,7 +154,7 @@ fn protocol_with_sharded_solver_matches_constraint_discipline() {
     // outcome obeys the same constraint rules.
     let (mut p, apps, tiers, mut proto) = setup(25.0);
     proto.config.parallel = ParallelConfig::with_workers(4);
-    let (initial_score, _) = score_assignment(&p, &p.initial.clone());
+    let (initial_score, _) = score_assignment(&p, &p.initial);
     let out = proto.run(&mut p, &apps, &tiers, Deadline::after_ms(600));
     assert!(out.solution.score <= initial_score);
     let vs = validate(&p, &out.solution.assignment);

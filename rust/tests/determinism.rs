@@ -78,7 +78,7 @@ fn shard_strategies_agree() {
 #[test]
 fn different_seeds_may_differ_but_all_beat_incumbent() {
     let p = paper_problem(42);
-    let (initial_score, _) = score_assignment(&p, &p.initial.clone());
+    let (initial_score, _) = score_assignment(&p, &p.initial);
     for seed in [1u64, 2, 3] {
         let sol = LocalSearch::new(converging_config(seed, 4, ShardStrategy::Apps))
             .solve(&p, Deadline::unbounded());

@@ -11,13 +11,17 @@
 
 use sptlb::coordinator::{
     Coordinator, CoordinatorConfig, EngineMode, FleetDelta, FleetEngine, FleetState,
+    MultiRegionConfig, MultiRegionCoordinator, RegionExecution,
 };
 use sptlb::hierarchy::variants::Variant;
-use sptlb::model::FleetEvent;
+use sptlb::model::{FleetEvent, RegionId};
 use sptlb::rebalancer::ParallelConfig;
 use sptlb::sptlb::{BalanceReport, SptlbConfig};
 use sptlb::util::propcheck::{forall, Check};
-use sptlb::workload::{generate, ScenarioConfig, WorkloadSpec};
+use sptlb::workload::{
+    generate, generate_multiregion, MultiRegionScenario, MultiRegionSpec, ScenarioConfig,
+    WorkloadSpec,
+};
 use std::time::Duration;
 
 fn config(
@@ -210,6 +214,106 @@ fn decay_expires_protocol_avoid_constraints_on_schedule() {
 
     engine.round(&mut state, &no_events, &delta, &frozen, &latency, 2);
     assert_eq!(edges(&engine), 0, "decay 1: edges expire after their grace round");
+}
+
+#[test]
+fn slot_recycling_replay_is_worker_invariant_at_every_region_count() {
+    // Slot-recycling property (the SoA/slot-table contract): churn-heavy
+    // streams interleave arrivals and departures, so the dense slot table
+    // frees row indices mid-run and hands them to later arrivals. A
+    // recycled slot must carry no history — replaying the recorded
+    // journal is bit-identical for workers {1, 2, 8}, at region counts
+    // {1, 3} (departures-then-arrivals also cross the region boundary as
+    // migrations when the global layer plans one).
+    forall(
+        2,
+        |rng| rng.next_u64() % 1000,
+        |&seed| {
+            for n_regions in [1usize, 3] {
+                let scenario = MultiRegionScenario::uniform(
+                    n_regions,
+                    ScenarioConfig {
+                        drift_fraction: 0.3,
+                        arrival_prob: 0.8,
+                        departure_prob: 0.7,
+                        ..ScenarioConfig::churn()
+                    }
+                    .with_seed(seed),
+                );
+                let run = |workers: usize, events: Option<&[Vec<Vec<FleetEvent>>]>| {
+                    let mut c = MultiRegionCoordinator::new(
+                        MultiRegionConfig {
+                            sptlb: SptlbConfig {
+                                variant: Variant::NoCnst,
+                                timeout: Duration::from_secs(20),
+                                samples_per_app: 40,
+                                parallel: ParallelConfig::with_workers(workers),
+                                ..SptlbConfig::default()
+                            },
+                            engine: EngineMode::Incremental,
+                            scenario: scenario.clone(),
+                            execution: RegionExecution::Parallel,
+                            ..MultiRegionConfig::new(n_regions)
+                        },
+                        generate_multiregion(&MultiRegionSpec::new(
+                            n_regions,
+                            WorkloadSpec::small().with_seed(seed),
+                        )),
+                    );
+                    match events {
+                        None => {
+                            c.run(6);
+                        }
+                        Some(ev) => {
+                            c.run_events(ev);
+                        }
+                    }
+                    c
+                };
+                let base = run(1, None);
+                // The stream must actually churn the slot table: both
+                // event kinds fire, so slots are freed AND reused.
+                let count = |pred: fn(&FleetEvent) -> bool| -> usize {
+                    base.event_log.iter().flatten().flatten().filter(|e| pred(*e)).count()
+                };
+                if count(|e| matches!(e, FleetEvent::Arrival { .. })) == 0 {
+                    return Check::fail(&format!("regions={n_regions}: no arrivals fired"));
+                }
+                if count(|e| matches!(e, FleetEvent::Departure { .. })) == 0 {
+                    return Check::fail(&format!("regions={n_regions}: no departures fired"));
+                }
+                for workers in [2usize, 8] {
+                    let replay = run(workers, Some(&base.event_log));
+                    for (a, b) in base.log.iter().zip(&replay.log) {
+                        for (ra, rb) in a.records.iter().zip(&b.records) {
+                            let same = ra.score.to_bits() == rb.score.to_bits()
+                                && ra.moves_executed == rb.moves_executed
+                                && ra.worst_imbalance.to_bits() == rb.worst_imbalance.to_bits()
+                                && ra.n_events == rb.n_events;
+                            if !same {
+                                return Check::fail(&format!(
+                                    "regions={n_regions} workers={workers} round {}: \
+                                     decision log diverged",
+                                    a.round
+                                ));
+                            }
+                        }
+                    }
+                    for r in 0..n_regions {
+                        if base.region_fleet(RegionId(r)).assignment()
+                            != replay.region_fleet(RegionId(r)).assignment()
+                        {
+                            return Check::fail(&format!(
+                                "regions={n_regions} workers={workers}: region {r} final \
+                                 assignment diverged"
+                            ));
+                        }
+                    }
+                }
+            }
+            Check::pass()
+        },
+    );
 }
 
 #[test]

@@ -60,7 +60,7 @@ fn diurnal_bed() -> (TestBed, Assignment) {
             .iter()
             .map(|a| {
                 let allowed = tiers_for_slo(a.slo, bed.tiers.len());
-                allowed[a.id.0 % 3 % allowed.len()]
+                allowed[a.id.idx() % 3 % allowed.len()]
             })
             .collect(),
     );

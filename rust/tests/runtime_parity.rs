@@ -39,8 +39,9 @@ fn random_candidates(problem: &Problem, n: usize, seed: u64) -> Vec<Assignment> 
             // Perturb a handful of apps within their allowed sets.
             for _ in 0..rng.range(1, 8) {
                 let a = rng.range(0, problem.n_apps());
-                let t = *rng.choose(&problem.apps[a].allowed).unwrap();
-                asg.set(AppId(a), t);
+                let al = problem.apps[a].allowed;
+                let t = al.nth(rng.range(0, al.len())).unwrap();
+                asg.set(AppId::from_usize(a), t);
             }
             asg
         })
@@ -96,7 +97,7 @@ fn local_search_batched_through_pjrt_improves() {
     let Some(dir) = artifacts_dir() else { return };
     let mut scorer = PjrtScorer::from_dir(dir).expect("load artifacts");
     let problem = paper_problem(11);
-    let (initial_score, _) = score_assignment(&problem, &problem.initial.clone());
+    let (initial_score, _) = score_assignment(&problem, &problem.initial);
     let sol = LocalSearch::with_seed(5).solve_batched(
         &problem,
         Deadline::after_ms(1500),

@@ -1,0 +1,144 @@
+//! The zero-allocation contract for steady-state rounds: once the
+//! incremental engine is primed and its scratch arenas have warmed up to
+//! the fleet size, a drift-only round through the fast path
+//! (`FleetEngine::apply_events`) must not touch the global allocator at
+//! all — the million-app scaling claim rests on it.
+//!
+//! A gated counting allocator wraps `System`; only the measured rounds
+//! run with the gate open. One `#[test]` in this binary, so no parallel
+//! test can bleed allocations into the counting window.
+
+use sptlb::coordinator::{EngineMode, FleetEngine, FleetState};
+use sptlb::hierarchy::variants::Variant;
+use sptlb::model::{App, AppId, FleetEvent};
+use sptlb::sptlb::SptlbConfig;
+use sptlb::util::prng::Pcg64;
+use sptlb::workload::{generate, WorkloadSpec};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Duration;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static COUNTING: AtomicBool = AtomicBool::new(false);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+const WARM_ROUNDS: usize = 3;
+const MEASURED_ROUNDS: usize = 5;
+
+#[test]
+fn steady_state_drift_rounds_do_not_allocate() {
+    let bed = generate(&WorkloadSpec::paper());
+    let latency = bed.latency.clone();
+    let config = SptlbConfig {
+        timeout: Duration::from_millis(20),
+        samples_per_app: 8,
+        variant: Variant::NoCnst,
+        ..SptlbConfig::default()
+    };
+    let mut fleet = FleetState::from_testbed(bed);
+    let mut engine = FleetEngine::new(EngineMode::Incremental, &config);
+
+    // Prime: one full round builds the problem/store/loads caches.
+    let delta = fleet.apply_all(&[]);
+    engine.round(&mut fleet, &[], &delta, &config, &latency, 0);
+
+    // Every batch is pre-generated outside the counting window, and the
+    // warm-up batches are the same size as the measured ones, so the
+    // reserve() calls inside the engine are no-ops once warmed.
+    let mut rng = Pcg64::new(0x5CA1E);
+    let batches: Vec<Vec<FleetEvent>> = (0..WARM_ROUNDS + MEASURED_ROUNDS)
+        .map(|_| {
+            (0..16)
+                .map(|_| {
+                    let app = &fleet.apps()[rng.range(0, fleet.n_apps())];
+                    FleetEvent::DemandDrift {
+                        app: app.id,
+                        demand: app.demand * (0.9 + rng.range(0, 21) as f64 / 100.0),
+                    }
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut round = 1u32;
+    for batch in &batches[..WARM_ROUNDS] {
+        engine
+            .apply_events(&mut fleet, batch, &config, round)
+            .expect("drift-only rounds take the fast path");
+        round += 1;
+    }
+
+    ALLOCS.store(0, Ordering::Relaxed);
+    COUNTING.store(true, Ordering::Relaxed);
+    for batch in &batches[WARM_ROUNDS..] {
+        engine
+            .apply_events(&mut fleet, batch, &config, round)
+            .expect("drift-only rounds take the fast path");
+        round += 1;
+    }
+    COUNTING.store(false, Ordering::Relaxed);
+    let steady = ALLOCS.load(Ordering::Relaxed);
+
+    if cfg!(debug_assertions) {
+        // Debug builds allocate inside ScoreState::with_loads's
+        // loads-equivalence debug_assert (one fresh tier_loads vector per
+        // warm solve); allow that and nothing more.
+        assert!(
+            steady <= 4 * MEASURED_ROUNDS as u64,
+            "debug steady-state rounds allocated {steady} times over {MEASURED_ROUNDS} rounds"
+        );
+    } else {
+        assert_eq!(
+            steady, 0,
+            "steady-state drift rounds must be allocation-free (got {steady} over {MEASURED_ROUNDS} rounds)"
+        );
+    }
+
+    // Structural rounds go through the full engine (collection, problem
+    // resync, report construction) and legitimately allocate O(fleet).
+    // The generous bound documents the order of magnitude and guards
+    // against runaway per-round allocation creep; it is not a contract.
+    let ghost = App { id: AppId::from_usize(fleet.next_app_id()), ..fleet.apps()[0].clone() };
+    let events = vec![FleetEvent::Arrival { app: ghost }];
+    ALLOCS.store(0, Ordering::Relaxed);
+    COUNTING.store(true, Ordering::Relaxed);
+    let delta = fleet.apply_all(&events);
+    engine.round(&mut fleet, &events, &delta, &config, &latency, round);
+    COUNTING.store(false, Ordering::Relaxed);
+    let structural = ALLOCS.load(Ordering::Relaxed);
+    assert!(
+        structural < 100_000,
+        "one structural round allocated {structural} times — far beyond O(fleet)"
+    );
+}
