@@ -32,6 +32,7 @@ use sptlb::model::{AppId, Assignment, FleetEvent, TierId};
 use sptlb::rebalancer::problem::{GoalWeights, Problem};
 use sptlb::rebalancer::scoring::{score_assignment, ScoreState};
 use sptlb::rebalancer::{LocalSearch, LocalSearchConfig, OptimalSearch, ParallelConfig};
+use sptlb::service::{Service, ServiceConfig};
 use sptlb::sptlb::{Sptlb, SptlbConfig};
 use sptlb::util::json::Json;
 use sptlb::util::prng::Pcg64;
@@ -641,6 +642,171 @@ fn main() {
             ("fleet_apps", Json::num(total_apps as f64)),
             ("rounds", Json::num(mr_rounds as f64)),
             ("by_region_count", Json::arr(entries)),
+        ]),
+    );
+
+    // --- async ingest plane: sustained throughput, burst shed, zero-alloc ---
+    // Three claims for the service runtime: (1) sustained events/sec and
+    // p99 round latency as the bounded queue deepens (Block producer, so
+    // every event is admitted and the rate is true throughput), (2) the
+    // shed rate when a 10x burst hits a full queue under the Shed policy,
+    // and (3) a warm drift-only ingest round performs zero heap
+    // allocations (`ingest_allocs_per_round` is the CI gate).
+    println!("\n[ingest] service ingest plane: queue ladder, 10x burst shed, zero-alloc rounds");
+    let ingest_config = |queue: usize, backpressure: &str, max_batch: usize| {
+        ServiceConfig::builder()
+            .workload("paper")
+            .events("drift")
+            .variant("no_cnst")
+            .timeout(Duration::from_millis(5))
+            .queue_capacity(queue)
+            .batch_budget(Duration::from_millis(1))
+            .max_batch(max_batch)
+            .backpressure(backpressure)
+            .build()
+            .expect("bench service config is valid")
+    };
+    let drift_stream = |service: &Service, seed: u64, n: usize| -> Vec<FleetEvent> {
+        let apps = service.fleet().apps();
+        let mut rng = Pcg64::new(seed);
+        (0..n)
+            .map(|_| {
+                let app = &apps[rng.range(0, apps.len())];
+                FleetEvent::DemandDrift {
+                    app: app.id,
+                    demand: app.demand * (0.9 + rng.range(0, 21) as f64 / 100.0),
+                }
+            })
+            .collect()
+    };
+
+    let n_stream = if smoke { 4_000 } else { 40_000 };
+    let queue_ladder: &[usize] = if smoke { &[256, 1024] } else { &[256, 1024, 4096] };
+    let mut ladder_json: Vec<Json> = Vec::new();
+    for &cap in queue_ladder {
+        let mut service = Service::new(ingest_config(cap, "block", 256));
+        // Event construction stays outside the measured window.
+        let stream = drift_stream(&service, 0x1969 ^ cap as u64, n_stream);
+        let h = service.handle();
+        let producer = std::thread::spawn(move || {
+            let mut accepted = 0u64;
+            for ev in stream {
+                if h.submit(ev) {
+                    accepted += 1;
+                }
+            }
+            accepted
+        });
+        let t0 = std::time::Instant::now();
+        let mut round_ms: Vec<f64> = Vec::new();
+        loop {
+            let r0 = std::time::Instant::now();
+            match service.ingest_round() {
+                Some(_) => round_ms.push(r0.elapsed().as_secs_f64() * 1e3),
+                None if producer.is_finished() => break,
+                None => {}
+            }
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        service.stop();
+        let accepted = producer.join().expect("producer thread");
+        round_ms.sort_by(|a, b| a.partial_cmp(b).expect("round times are finite"));
+        let p99 = if round_ms.is_empty() {
+            0.0
+        } else {
+            round_ms[(round_ms.len() * 99 / 100).min(round_ms.len() - 1)]
+        };
+        let events_per_sec = accepted as f64 / elapsed.max(1e-9);
+        println!(
+            "  queue={cap:>5}: {events_per_sec:>9.0} events/s sustained, p99 round \
+             {p99:.3} ms over {} rounds, mean depth {:.0}",
+            round_ms.len(),
+            service.metrics.ingest.queue_depth.mean(),
+        );
+        ladder_json.push(Json::obj(vec![
+            ("queue_capacity", Json::num(cap as f64)),
+            ("events_per_sec", Json::num(events_per_sec)),
+            ("p99_round_ms", Json::num(p99)),
+            ("rounds", Json::num(round_ms.len() as f64)),
+            ("mean_batch_events", Json::num(service.metrics.ingest.batch_events.mean())),
+            ("mean_queue_depth", Json::num(service.metrics.ingest.queue_depth.mean())),
+        ]));
+    }
+
+    // 10x burst against a full queue: the Shed policy must drop at the
+    // door (bounded memory) and account for every drop.
+    let burst_cap = 256usize;
+    let mut burst_service = Service::new(ingest_config(burst_cap, "shed", 256));
+    let burst = drift_stream(&burst_service, 0xB0B0, 10 * burst_cap);
+    let h = burst_service.handle();
+    let submitted = burst.len() as u64;
+    let mut queued = 0u64;
+    for ev in burst {
+        if h.submit(ev) {
+            queued += 1;
+        }
+    }
+    while burst_service.ingest_round().is_some() {}
+    burst_service.stop();
+    let shed_rate = (submitted - queued) as f64 / submitted as f64;
+    println!(
+        "  10x burst into queue={burst_cap}: {queued}/{submitted} admitted, shed rate \
+         {shed_rate:.2} ({} counted queue_full)",
+        burst_service.metrics.ingest.shed.queue_full,
+    );
+
+    // Zero-alloc steady state: prime the engine with one full round, warm
+    // the drift-only fast path, then count allocations across measured
+    // submit + ingest_round cycles. Mirrors the [scale] gate; CI fails on
+    // a nonzero value in release builds.
+    let mut za = Service::new(ingest_config(256, "shed", 64));
+    let za_handle = za.handle();
+    let warm_rounds = 3usize;
+    let zero_rounds = 5usize;
+    let za_batches: Vec<Vec<FleetEvent>> = (0..1 + warm_rounds + zero_rounds)
+        .map(|i| drift_stream(&za, 0x2A11 + i as u64, 64))
+        .collect();
+    let mut batches = za_batches.into_iter();
+    for batch in batches.by_ref().take(1 + warm_rounds) {
+        for ev in batch {
+            za_handle.submit(ev);
+        }
+        za.ingest_round().expect("queued events produce a round");
+    }
+    ALLOCS.store(0, Ordering::Relaxed);
+    COUNTING.store(true, Ordering::Relaxed);
+    for batch in batches {
+        for ev in batch {
+            za_handle.submit(ev);
+        }
+        za.ingest_round().expect("queued events produce a round");
+    }
+    COUNTING.store(false, Ordering::Relaxed);
+    za.stop();
+    let ingest_allocs_per_round = ALLOCS.load(Ordering::Relaxed) as f64 / zero_rounds as f64;
+    println!(
+        "  warm ingest rounds: {ingest_allocs_per_round:.1} allocs/round \
+         ({} fast-path of {} rounds)",
+        za.metrics.ingest.fast_rounds,
+        za.rounds_done(),
+    );
+
+    write_bench_json(
+        "BENCH_ingest.json",
+        &Json::obj(vec![
+            ("bench", Json::str("ingest_plane")),
+            ("scenario", Json::str("paper_drift_stream")),
+            ("smoke", Json::num(smoke as u8 as f64)),
+            ("stream_events", Json::num(n_stream as f64)),
+            ("ladder", Json::arr(ladder_json)),
+            ("burst_multiplier", Json::num(10.0)),
+            ("burst_queue_capacity", Json::num(burst_cap as f64)),
+            ("burst_shed_rate", Json::num(shed_rate)),
+            (
+                "burst_shed_queue_full",
+                Json::num(burst_service.metrics.ingest.shed.queue_full as f64),
+            ),
+            ("ingest_allocs_per_round", Json::num(ingest_allocs_per_round)),
         ]),
     );
 }

@@ -440,6 +440,13 @@ impl FleetEngine {
     /// the *registered* (event) demands rather than a p99 re-scrape of
     /// them. The metadata store is still kept in sync, so interleaving
     /// fast-path and full rounds stays well-formed.
+    ///
+    /// The ingest-plane service runtime
+    /// ([`Service::ingest_round`](crate::service::Service::ingest_round))
+    /// calls this per drained batch, so the zero-alloc contract extends
+    /// through its whole warm loop — queue pop, admission, journal
+    /// append included (`rust/tests/ingest_zero_alloc.rs` pins it; the
+    /// engine-core twin is `rust/tests/zero_alloc.rs`).
     pub fn apply_events(
         &mut self,
         state: &mut FleetState,

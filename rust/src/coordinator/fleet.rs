@@ -7,6 +7,7 @@
 //! went stale.
 
 use crate::model::{App, AppId, Assignment, FleetEvent, Move, Tier, TierMask};
+use crate::util::json::Json;
 use crate::workload::TestBed;
 
 /// Slot-table sentinel: the stable id has no live dense position.
@@ -145,6 +146,47 @@ impl FleetState {
         delta
             .drifted
             .retain(|id| matches!(slot.get(id.idx()), Some(&s) if s != NO_SLOT));
+    }
+
+    /// Serialize the complete fleet truth for the service snapshot. The
+    /// id counter is explicit: [`FleetState::new`] re-derives it from the
+    /// highest live id, which under-counts once the top-id app has
+    /// departed, so a restore must carry the true monotonic value.
+    pub fn checkpoint_json(&self) -> Json {
+        Json::obj(vec![
+            ("apps", Json::arr(self.apps.iter().map(|a| a.to_json()))),
+            ("tiers", Json::arr(self.tiers.iter().map(|t| t.to_json()))),
+            ("assignment", self.assignment.to_json()),
+            ("next_app_id", Json::num(self.next_app_id as f64)),
+        ])
+    }
+
+    /// Rebuild a fleet from [`FleetState::checkpoint_json`] output.
+    pub fn from_checkpoint_json(j: &Json) -> Option<FleetState> {
+        let apps = j
+            .get("apps")
+            .as_arr()?
+            .iter()
+            .map(App::from_json)
+            .collect::<Option<Vec<_>>>()?;
+        let tiers = j
+            .get("tiers")
+            .as_arr()?
+            .iter()
+            .map(Tier::from_json)
+            .collect::<Option<Vec<_>>>()?;
+        let assignment = Assignment::from_json(j.get("assignment"))?;
+        let next_app_id = j.get("next_app_id").as_usize()?;
+        if apps.len() != assignment.n_apps() {
+            return None;
+        }
+        let mut state = FleetState::new(apps, tiers, assignment);
+        if next_app_id < state.next_app_id {
+            return None; // counter can never trail the highest live id
+        }
+        state.next_app_id = next_app_id;
+        state.slot.resize(next_app_id, NO_SLOT);
+        Some(state)
     }
 
     fn apply(&mut self, event: &FleetEvent, delta: &mut FleetDelta) {
@@ -338,6 +380,28 @@ mod tests {
                 assert_eq!(t.capacity, cap_before);
             }
         }
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_through_json_including_the_id_counter() {
+        let mut s = state();
+        let mut delta = FleetDelta::default();
+        // Depart the HIGHEST id so `FleetState::new` would under-derive
+        // the counter — the checkpoint must preserve it explicitly.
+        let top = s.apps().last().unwrap().id;
+        s.apply(&FleetEvent::Departure { app: top }, &mut delta);
+        let text = s.checkpoint_json().to_string();
+        let back =
+            FleetState::from_checkpoint_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.apps(), s.apps());
+        assert_eq!(back.tiers(), s.tiers());
+        assert_eq!(back.assignment(), s.assignment());
+        assert_eq!(back.next_app_id(), s.next_app_id());
+        // The restored slot table resolves every live id.
+        for (i, a) in s.apps().iter().enumerate() {
+            assert_eq!(back.index_of(a.id), Some(i));
+        }
+        assert_eq!(back.index_of(top), None);
     }
 
     #[test]

@@ -25,6 +25,7 @@ pub use multiregion::{
 
 use crate::coop::RejectCounts;
 use crate::forecast::ForecastConfig;
+use crate::metrics::IngestStats;
 use crate::model::{App, Assignment, FleetEvent, ResourceVec, Tier};
 use crate::network::LatencyMatrix;
 use crate::sptlb::{BalanceReport, SptlbConfig};
@@ -181,7 +182,17 @@ pub struct ServiceMetrics {
     /// proactive path exists to minimize (`rust/tests/forecast.rs` pins
     /// forecast-aware < reactive on the diurnal scenario).
     pub breach_rounds: u32,
+    /// Ingest-plane telemetry (admission sheds, batching, queue depth);
+    /// all-zero when the coordinator runs the classic synchronous loop
+    /// instead of the [`Service`](crate::service::Service) runtime.
+    pub ingest: IngestStats,
 }
+
+/// Version tag of every metrics/decision-log JSON document this crate
+/// writes ([`ServiceMetrics`], [`MultiRegionMetrics`], `GAP_report.json`).
+/// Bumped to 2 with the service-runtime redesign (ingest/shed counters,
+/// flattened config surface) so downstream parsers can detect the shape.
+pub const METRICS_SCHEMA: u32 = 2;
 
 impl ServiceMetrics {
     pub fn to_json(&self) -> Json {
@@ -194,6 +205,7 @@ impl ServiceMetrics {
             ])
         };
         Json::obj(vec![
+            ("schema", Json::num(METRICS_SCHEMA as f64)),
             ("rounds", Json::num(self.rounds as f64)),
             ("ticks_skipped", Json::num(self.ticks_skipped as f64)),
             ("breach_rounds", Json::num(self.breach_rounds as f64)),
@@ -208,6 +220,7 @@ impl ServiceMetrics {
             ("coop_rejects", stat(&self.coop_rejects)),
             ("avoid_edges", stat(&self.avoid_edges)),
             ("escalations", Json::num(self.escalations as f64)),
+            ("ingest", self.ingest.to_json()),
         ])
     }
 }
@@ -581,6 +594,20 @@ mod tests {
         assert!(parsed.get("collect_ms").get("mean").as_f64().is_some());
         let ev = c.event_log_json().to_string();
         assert!(crate::util::json::Json::parse(&ev).is_ok());
+    }
+
+    #[test]
+    fn metrics_json_carries_schema_version_and_ingest_counters() {
+        // Round-trip pin for the schema-2 shape: downstream parsers key
+        // on the version field to detect the redesigned document.
+        let mut c = coordinator(|_| {});
+        c.run(1);
+        c.metrics.ingest.shed.unknown_app = 3;
+        let j = Json::parse(&c.metrics.to_json().to_string()).unwrap();
+        assert_eq!(j.get("schema").as_u64(), Some(super::METRICS_SCHEMA as u64));
+        assert_eq!(j.get("schema").as_u64(), Some(2));
+        assert_eq!(j.get("ingest").get("shed").get("unknown_app").as_u64(), Some(3));
+        assert_eq!(j.get("ingest").get("fast_rounds").as_u64(), Some(0));
     }
 
     #[test]

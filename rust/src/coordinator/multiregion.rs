@@ -215,6 +215,7 @@ impl MultiRegionMetrics {
             ])
         };
         Json::obj(vec![
+            ("schema", Json::num(crate::coordinator::METRICS_SCHEMA as f64)),
             ("rounds", Json::num(self.rounds as f64)),
             ("migrations", Json::num(self.migrations as f64)),
             ("migrations_rejected", Json::num(self.migrations_rejected as f64)),

@@ -17,6 +17,25 @@ pub mod network;
 pub mod rebalancer;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod sptlb;
 pub mod util;
 pub mod workload;
+
+/// The one-stop import for embedding the balancer as a service:
+///
+/// ```
+/// use sptlb::prelude::*;
+///
+/// let config = ServiceConfig::builder().workload("small").build().unwrap();
+/// let service = Service::new(config);
+/// assert_eq!(service.rounds_done(), 0);
+/// ```
+pub mod prelude {
+    pub use crate::coordinator::ServiceMetrics;
+    pub use crate::model::FleetEvent;
+    pub use crate::service::{
+        Backpressure, ConfigError, Error, IngestHandle, Service, ServiceConfig, ServiceRound,
+        Snapshot,
+    };
+}

@@ -4,29 +4,37 @@
 //!   balance   one-shot balancing run on a workload preset; prints the
 //!             §3.3 report (projected mapping, metrics, validation).
 //!   serve     run the coordinator leader loop for N rounds (drifting
-//!             workload, decision log, service metrics).
+//!             workload, decision log, service metrics). With --ingest,
+//!             run the async ingest-plane service runtime instead:
+//!             producer threads feed a bounded queue, rounds batch under
+//!             a latency budget, and the run is journaled + snapshotted
+//!             so a killed process restores and replays bit-identically.
 //!   fig3      regenerate Figure 3 (a/b/c) tables for a preset.
 //!   sweep     regenerate the Fig. 4/5 variant×solver×timeout sweep.
 //!   check     verify the AOT artifacts load and match the rust scorer.
 //!   bench     solution-quality harnesses; `bench gap` measures the
 //!             LocalSearch optimality gap against exact optima and
 //!             writes GAP_report.json (the CI gap-gate input).
+//!
+//! Every command returns `Result<(), sptlb::service::Error>`; the exit
+//! code is derived in exactly one place (the bottom of [`main`]) via
+//! `Error::exit_code`. Flag parsing feeds the [`ServiceConfig`] builder
+//! at a single point ([`build_service_config`]), so invalid knob
+//! combinations surface as typed `ConfigError`s, not scattered
+//! `eprintln!`s.
 
-use sptlb::coordinator::{
-    Coordinator, CoordinatorConfig, EngineMode, MultiRegionConfig, MultiRegionCoordinator,
-    RegionExecution,
-};
-use sptlb::forecast::{ForecastConfig, ForecasterKind};
-use sptlb::hierarchy::global::GlobalPolicy;
-use sptlb::hierarchy::variants::Variant;
+use sptlb::coordinator::{Coordinator, FleetState, MultiRegionCoordinator};
 use sptlb::metadata::MetadataStore;
-use sptlb::rebalancer::solution::SolverKind;
-use sptlb::rebalancer::{ParallelConfig, ShardStrategy};
 use sptlb::report;
-use sptlb::sptlb::{Sptlb, SptlbConfig};
-use sptlb::util::cli::Command;
+use sptlb::service::{
+    append_journal_round, load_journal, ConfigError, Error, ScenarioProducer, Service,
+    ServiceConfig, Snapshot,
+};
+use sptlb::sptlb::Sptlb;
+use sptlb::util::cli::{CliError, Command, Parsed};
+use sptlb::util::json::Json;
 use sptlb::workload::{
-    generate_multiregion, MultiRegionScenario, MultiRegionSpec, ScenarioConfig, TestBed,
+    generate, generate_multiregion, MultiRegionScenario, MultiRegionSpec, ScenarioConfig, TestBed,
     WorkloadSpec,
 };
 use std::time::Duration;
@@ -34,7 +42,7 @@ use std::time::Duration;
 fn main() {
     sptlb::util::logger::init();
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let code = match args.first().map(|s| s.as_str()) {
+    let result = match args.first().map(|s| s.as_str()) {
         Some("balance") => cmd_balance(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("fig3") => cmd_fig3(&args[1..]),
@@ -43,15 +51,19 @@ fn main() {
         Some("bench") => cmd_bench(&args[1..]),
         Some("--help") | Some("help") | None => {
             print_help();
-            0
+            Ok(())
         }
         Some(other) => {
-            eprintln!("unknown subcommand '{other}'\n");
             print_help();
-            2
+            Err(Error::Usage(format!("unknown subcommand '{other}'")))
         }
     };
-    std::process::exit(code);
+    // The single exit-code mapping: usage/config mistakes exit 2,
+    // runtime failures exit 1, success exits 0.
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(e.exit_code());
+    }
 }
 
 fn print_help() {
@@ -64,12 +76,15 @@ fn print_help() {
     );
 }
 
-fn load_bed(scenario: &str, seed: u64) -> Result<TestBed, String> {
+/// Lift a CLI parse error into the crate error surface.
+fn usage(e: CliError) -> Error {
+    Error::Usage(e.to_string())
+}
+
+fn load_bed(scenario: &str, seed: u64) -> Result<TestBed, Error> {
     WorkloadSpec::by_name(scenario)
-        .map(|s| sptlb::workload::generate(&s.with_seed(seed)))
-        .ok_or_else(|| {
-            format!("unknown scenario '{scenario}' ({})", WorkloadSpec::PRESETS.join("|"))
-        })
+        .map(|s| generate(&s.with_seed(seed)))
+        .ok_or_else(|| ConfigError::UnknownWorkload(scenario.to_string()).into())
 }
 
 /// The `--events` preset list for error messages and `--events help`,
@@ -83,124 +98,33 @@ fn event_preset_list(multiregion: bool) -> String {
     names.join("|")
 }
 
-/// Parse the shared `--forecaster/--horizon/--history` options into a
-/// [`ForecastConfig`]; prints the error and returns the exit code on
-/// invalid input.
-fn parse_forecast(p: &sptlb::util::cli::Parsed) -> Result<ForecastConfig, i32> {
-    let name = p.get("forecaster").unwrap_or("none");
-    let Some(forecaster) = ForecasterKind::from_name(name) else {
-        eprintln!(
-            "error: unknown forecaster '{name}' ({})",
-            ForecasterKind::NAMES.join("|")
-        );
-        return Err(2);
-    };
-    let horizon = match p.usize_at_least("horizon", 1) {
-        Ok(h) => h as u32,
-        Err(e) => {
-            eprintln!("error: {e}");
-            return Err(2);
+fn with_parsed(
+    cmd: Command,
+    args: &[String],
+    run: impl FnOnce(Parsed) -> Result<(), Error>,
+) -> Result<(), Error> {
+    match cmd.parse(args) {
+        Ok(p) if p.flag("help") => {
+            println!("{}", cmd.usage());
+            Ok(())
         }
-    };
-    let history = match p.usize_at_least("history", 2) {
-        Ok(h) => h,
-        Err(e) => {
-            eprintln!("error: {e}");
-            return Err(2);
-        }
-    };
-    let period = match p.usize_at_least("period", 1) {
-        Ok(v) => v as u32,
-        Err(e) => {
-            eprintln!("error: {e}");
-            return Err(2);
-        }
-    };
-    // seasonal-naive needs a full season in the ring buffer; with
-    // history < period it would silently degrade to naive-last forever.
-    if forecaster == ForecasterKind::SeasonalNaive && history < period as usize {
-        eprintln!(
-            "error: --history ({history}) must be >= --period ({period}) for seasonal-naive \
-             (a shorter window can never hold one full season)"
-        );
-        return Err(2);
+        Ok(p) => run(p),
+        Err(e) => Err(Error::Usage(format!("{e}\n\n{}", cmd.usage()))),
     }
-    Ok(ForecastConfig { forecaster, horizon, history, period })
 }
 
-/// Parse the shared `--workers` / `--shard` options into a
-/// [`ParallelConfig`]; prints the error and returns the exit code on
-/// invalid input.
-fn parse_parallel(p: &sptlb::util::cli::Parsed) -> Result<ParallelConfig, i32> {
-    let workers = match p.usize_at_least("workers", 1) {
-        Ok(w) => w,
-        Err(e) => {
-            eprintln!("error: {e}");
-            return Err(2);
-        }
-    };
-    let shard = p.get("shard").unwrap_or("apps");
-    let shard_strategy = match ShardStrategy::from_name(shard) {
-        Some(s) => s,
-        None => {
-            eprintln!("error: unknown shard strategy '{shard}' (apps|moves)");
-            return Err(2);
-        }
-    };
-    Ok(ParallelConfig { workers, shard_strategy })
-}
-
-/// Apply the shared `--drift/--drift-frac/--arrivals/--departures`
-/// overrides to every given scenario config (one in single-region serve,
-/// one per region in multi-region serve); prints the error and returns
-/// the exit code on invalid input.
-fn apply_scenario_overrides(
-    p: &sptlb::util::cli::Parsed,
-    configs: &mut [&mut ScenarioConfig],
-) -> Result<(), i32> {
-    let knobs: [(&str, f64, fn(&mut ScenarioConfig, f64)); 4] = [
-        ("drift", f64::MAX, |c, v| c.drift_sigma = v),
-        ("drift-frac", 1.0, |c, v| c.drift_fraction = v),
-        ("arrivals", 1.0, |c, v| c.arrival_prob = v),
-        ("departures", 1.0, |c, v| c.departure_prob = v),
-    ];
-    for (flag, hi, set) in knobs {
-        if p.get(flag).is_some_and(|v| !v.is_empty()) {
-            match p.f64_in_range(flag, 0.0, hi) {
-                Ok(v) => {
-                    for c in configs.iter_mut() {
-                        set(c, v);
-                    }
-                }
-                Err(e) => {
-                    eprintln!("error: {e}");
-                    return Err(2);
-                }
-            }
+/// Write each `(--flag, json)` pair whose flag was given a path.
+fn write_logs(p: &Parsed, outs: &[(&str, Json)]) -> Result<(), Error> {
+    for (flag, json) in outs {
+        if let Some(path) = p.get(flag).filter(|v| !v.is_empty()) {
+            std::fs::write(path, json.pretty())?;
+            println!("{flag} written to {path}");
         }
     }
     Ok(())
 }
 
-fn with_parsed(
-    cmd: Command,
-    args: &[String],
-    run: impl FnOnce(sptlb::util::cli::Parsed) -> i32,
-) -> i32 {
-    match cmd.parse(args) {
-        Ok(p) if p.flag("help") => {
-            println!("{}", cmd.usage());
-            0
-        }
-        Ok(p) => run(p),
-        Err(e) => {
-            eprintln!("error: {e}\n\n{}", cmd.usage());
-            2
-        }
-    }
-}
-
-fn cmd_balance(args: &[String]) -> i32 {
+fn cmd_balance(args: &[String]) -> Result<(), Error> {
     let cmd = Command::new("balance", "one-shot balancing run")
         .opt("scenario", "paper", "workload preset (paper|small|large)")
         .opt("seed", "42", "prng seed")
@@ -213,31 +137,21 @@ fn cmd_balance(args: &[String]) -> i32 {
         .opt("out", "", "write the full JSON report to this file")
         .flag("json", "print the JSON report to stdout");
     with_parsed(cmd, args, |p| {
-        let (scenario, seed) = (p.str("scenario").unwrap(), p.u64("seed").unwrap());
-        let bed = match load_bed(&scenario, seed) {
-            Ok(b) => b,
-            Err(e) => {
-                eprintln!("error: {e}");
-                return 2;
-            }
-        };
-        let parallel = match parse_parallel(&p) {
-            Ok(x) => x,
-            Err(code) => return code,
-        };
-        let cfg = SptlbConfig {
-            solver: SolverKind::from_name(p.get("solver").unwrap_or("local"))
-                .unwrap_or(SolverKind::LocalSearch),
-            variant: Variant::from_name(p.get("variant").unwrap_or("manual_cnst"))
-                .unwrap_or(Variant::ManualCnst),
-            timeout: Duration::from_millis(p.u64("timeout-ms").unwrap_or(100)),
-            movement_fraction: p.f64("movement").unwrap_or(0.10),
-            parallel,
-            seed,
-            ..SptlbConfig::default()
-        };
+        let config = ServiceConfig::builder()
+            .workload(p.str("scenario").map_err(usage)?)
+            .seed(p.u64("seed").map_err(usage)?)
+            .solver(p.str("solver").map_err(usage)?)
+            .variant(p.str("variant").map_err(usage)?)
+            .timeout(Duration::from_millis(p.u64("timeout-ms").map_err(usage)?))
+            .movement_fraction(p.f64("movement").map_err(usage)?)
+            .workers(p.usize("workers").map_err(usage)?)
+            .shard(p.str("shard").map_err(usage)?)
+            .build()?;
+        let scenario = config.workload_name.clone();
+        let bed = generate(&config.workload);
         let store = MetadataStore::from_apps(bed.apps.clone()).expect("unique ids");
-        let report = Sptlb::new(cfg).balance(&store, &bed.tiers, &bed.latency, &bed.initial);
+        let report =
+            Sptlb::new(config.sptlb()).balance(&store, &bed.tiers, &bed.latency, &bed.initial);
 
         let moves = report.solution.moves(&report.problem);
         println!(
@@ -268,20 +182,63 @@ fn cmd_balance(args: &[String]) -> i32 {
         if p.flag("json") {
             println!("{}", j.pretty());
         }
-        if let Ok(path) = p.str("out") {
-            if !path.is_empty() {
-                if let Err(e) = std::fs::write(&path, j.pretty()) {
-                    eprintln!("error writing {path}: {e}");
-                    return 1;
-                }
-                println!("report written to {path}");
-            }
+        if let Some(path) = p.get("out").filter(|v| !v.is_empty()) {
+            std::fs::write(path, j.pretty())?;
+            println!("report written to {path}");
         }
-        0
+        Ok(())
     })
 }
 
-fn cmd_serve(args: &[String]) -> i32 {
+/// Parse the shared serve flags into the one validated [`ServiceConfig`]
+/// — the single point where CLI strings meet the builder.
+fn build_service_config(p: &Parsed) -> Result<ServiceConfig, Error> {
+    let mut b = ServiceConfig::builder()
+        .workload(p.str("scenario").map_err(usage)?)
+        .events(p.str("events").map_err(usage)?)
+        .seed(p.u64("seed").map_err(usage)?)
+        .rounds(p.u64("rounds").map_err(usage)? as u32)
+        .timeout(Duration::from_millis(p.u64("timeout-ms").map_err(usage)?))
+        .engine(p.str("engine").map_err(usage)?)
+        .avoid_decay(p.u64("decay").map_err(usage)? as u32)
+        .forecaster(p.str("forecaster").map_err(usage)?)
+        .horizon(p.u64("horizon").map_err(usage)? as u32)
+        .history(p.usize("history").map_err(usage)?)
+        .period(p.u64("period").map_err(usage)? as u32)
+        .workers(p.usize("workers").map_err(usage)?)
+        .shard(p.str("shard").map_err(usage)?)
+        .regions(p.usize("regions").map_err(usage)?)
+        .region_exec(p.str("region-exec").map_err(usage)?)
+        .backpressure(p.str("backpressure").map_err(usage)?)
+        .queue_capacity(p.usize("queue").map_err(usage)?)
+        .batch_budget(Duration::from_millis(p.u64("batch-ms").map_err(usage)?))
+        .max_batch(p.usize("max-batch").map_err(usage)?)
+        .snapshot_every(p.u64("snapshot-every").map_err(usage)? as u32);
+    // Empty-string defaults mean "not set": the builder rejects
+    // multi-region-only options with --regions 1, so they must only be
+    // forwarded when the user actually typed them.
+    if let Some(v) = p.get("global-policy").filter(|v| !v.is_empty()) {
+        b = b.global_policy(v.to_string());
+    }
+    if p.get("global-avoid-decay").is_some_and(|v| !v.is_empty()) {
+        b = b.global_avoid_decay(p.u64("global-avoid-decay").map_err(usage)? as u32);
+    }
+    if p.get("drift").is_some_and(|v| !v.is_empty()) {
+        b = b.drift_sigma(p.f64("drift").map_err(usage)?);
+    }
+    if p.get("drift-frac").is_some_and(|v| !v.is_empty()) {
+        b = b.drift_fraction(p.f64("drift-frac").map_err(usage)?);
+    }
+    if p.get("arrivals").is_some_and(|v| !v.is_empty()) {
+        b = b.arrival_prob(p.f64("arrivals").map_err(usage)?);
+    }
+    if p.get("departures").is_some_and(|v| !v.is_empty()) {
+        b = b.departure_prob(p.f64("departures").map_err(usage)?);
+    }
+    Ok(b.build()?)
+}
+
+fn cmd_serve(args: &[String]) -> Result<(), Error> {
     let cmd = Command::new("serve", "run the coordinator leader loop")
         .opt("scenario", "paper", "workload preset (paper|small|large)")
         .opt(
@@ -321,25 +278,30 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt("workers", "1", "local-search worker threads (sharded scan)")
         .opt("shard", "apps", "move-space shard strategy (apps|moves)")
         .opt("regions", "1", "global regions (each runs its own SPTLB; >1 enables the global layer)")
-        .opt("global-policy", "spillover", "cross-region policy (none|spillover|aggressive)")
+        .opt(
+            "global-policy",
+            "",
+            "cross-region policy (none|spillover|aggressive; default spillover; requires --regions > 1)",
+        )
         .opt("region-exec", "parallel", "per-region round execution (sequential|parallel)")
+        .flag("ingest", "run the async ingest-plane runtime (producers -> queue -> batched solves)")
+        .opt("queue", "1024", "ingest queue capacity in events (with --ingest)")
+        .opt("batch-ms", "5", "per-round batch latency budget in ms (with --ingest)")
+        .opt("max-batch", "256", "max events per batched solve (with --ingest)")
+        .opt("producers", "1", "scenario producer threads (with --ingest)")
+        .opt("backpressure", "shed", "producer policy on a full queue (shed|block; with --ingest)")
+        .opt("snapshot-dir", "", "write snapshot.json + journal.jsonl here (with --ingest)")
+        .opt("snapshot-every", "8", "snapshot every K journaled rounds (0 = final only; with --ingest)")
+        .flag("restore", "resume from <snapshot-dir>/snapshot.json before ingesting")
         .opt("log", "", "write the decision log JSON to this file")
         .opt("event-log", "", "write the applied-events journal JSON to this file");
     with_parsed(cmd, args, |p| {
-        let seed = p.u64("seed").unwrap_or(42);
-        let n_regions = match p.usize_at_least("regions", 1) {
-            Ok(n) => n,
-            Err(e) => {
-                eprintln!("error: {e}");
-                return 2;
-            }
-        };
         // `--scenario help` / `--events help`: enumerate the valid preset
         // names instead of erroring (the lists are derived from the
         // presets themselves, so they always include new additions).
-        if p.str("scenario").unwrap() == "help" {
+        if p.str("scenario").map_err(usage)? == "help" {
             println!("workload presets: {}", WorkloadSpec::PRESETS.join("|"));
-            return 0;
+            return Ok(());
         }
         if p.get("events") == Some("help") {
             println!("event scenarios: {}", event_preset_list(false));
@@ -347,194 +309,170 @@ fn cmd_serve(args: &[String]) -> i32 {
                 "with --regions N > 1 also: {}",
                 MultiRegionScenario::PRESETS.join("|")
             );
-            return 0;
+            return Ok(());
         }
-        if n_regions > 1 {
-            return cmd_serve_multiregion(&p, seed, n_regions);
+        let config = build_service_config(&p)?;
+        if config.regions > 1 {
+            if p.flag("ingest") {
+                return Err(Error::Usage(
+                    "--ingest runs the single-region service runtime; drop --regions".into(),
+                ));
+            }
+            return cmd_serve_multiregion(&p, config);
         }
-        let bed = match load_bed(&p.str("scenario").unwrap(), seed) {
-            Ok(b) => b,
-            Err(e) => {
-                eprintln!("error: {e}");
-                return 2;
-            }
-        };
-        let parallel = match parse_parallel(&p) {
-            Ok(x) => x,
-            Err(code) => return code,
-        };
-        let forecast = match parse_forecast(&p) {
-            Ok(f) => f,
-            Err(code) => return code,
-        };
-        let events = p.str("events").unwrap_or_else(|_| "drift".into());
-        let mut scenario = match ScenarioConfig::by_name(&events) {
-            Some(s) => s.with_seed(seed),
-            None => {
-                eprintln!(
-                    "error: unknown event scenario '{events}' ({})",
-                    event_preset_list(false)
-                );
-                return 2;
-            }
-        };
-        // Optional per-knob overrides on top of the preset.
-        if let Err(code) = apply_scenario_overrides(&p, &mut [&mut scenario]) {
-            return code;
+        if p.flag("ingest") {
+            return cmd_serve_ingest(&p, config);
         }
-        let engine = match EngineMode::from_name(p.get("engine").unwrap_or("incremental")) {
-            Some(m) => m,
-            None => {
-                eprintln!("error: unknown engine (incremental|rebuild)");
-                return 2;
-            }
-        };
-        let decay = match p.u64("decay") {
-            Ok(d) => d as u32,
-            Err(e) => {
-                eprintln!("error: {e}");
-                return 2;
-            }
-        };
-        let cfg = CoordinatorConfig {
-            sptlb: SptlbConfig {
-                timeout: Duration::from_millis(p.u64("timeout-ms").unwrap_or(60)),
-                seed,
-                parallel,
-                avoid_decay: decay,
-                ..SptlbConfig::default()
-            },
-            scenario,
-            engine,
-            forecast,
-            ..CoordinatorConfig::default()
-        };
-        let mut coordinator = Coordinator::from_testbed(cfg, bed);
-        let rounds = p.u64("rounds").unwrap_or(10) as u32;
-        coordinator.run(rounds);
+        let bed = generate(&config.workload);
+        let mut coordinator = Coordinator::from_testbed(config.coordinator(), bed);
+        coordinator.run(config.rounds);
         println!("{}", coordinator.metrics.to_json().pretty());
-        for (flag, json) in [
-            ("log", coordinator.log_json()),
-            ("event-log", coordinator.event_log_json()),
-        ] {
-            if let Ok(path) = p.str(flag) {
-                if !path.is_empty() {
-                    if let Err(e) = std::fs::write(&path, json.pretty()) {
-                        eprintln!("error writing {path}: {e}");
-                        return 1;
-                    }
-                    println!("{flag} written to {path}");
-                }
-            }
-        }
-        0
+        write_logs(
+            &p,
+            &[
+                ("log", coordinator.log_json()),
+                ("event-log", coordinator.event_log_json()),
+            ],
+        )
     })
 }
 
 /// `serve --regions N` (N > 1): the global scheduler over N per-region
 /// SPTLBs, each solving in parallel on its own worker thread.
-fn cmd_serve_multiregion(p: &sptlb::util::cli::Parsed, seed: u64, n_regions: usize) -> i32 {
-    let preset = p.str("scenario").unwrap();
-    let Some(spec) = WorkloadSpec::by_name(&preset) else {
-        eprintln!(
-            "error: unknown scenario '{preset}' ({})",
-            WorkloadSpec::PRESETS.join("|")
-        );
-        return 2;
-    };
-    let parallel = match parse_parallel(p) {
-        Ok(x) => x,
-        Err(code) => return code,
-    };
-    let forecast = match parse_forecast(p) {
-        Ok(f) => f,
-        Err(code) => return code,
-    };
-    let events = p.str("events").unwrap_or_else(|_| "drift".into());
-    let Some(mut scenario) = MultiRegionScenario::by_name(&events, n_regions, seed) else {
-        eprintln!(
-            "error: unknown event scenario '{events}' ({})",
-            event_preset_list(true)
-        );
-        return 2;
-    };
-    // Per-knob overrides apply to every region's stream.
-    let mut per_region: Vec<&mut ScenarioConfig> = scenario.per_region.iter_mut().collect();
-    if let Err(code) = apply_scenario_overrides(p, &mut per_region) {
-        return code;
-    }
-    drop(per_region);
-    let Some(engine) = EngineMode::from_name(p.get("engine").unwrap_or("incremental")) else {
-        eprintln!("error: unknown engine (incremental|rebuild)");
-        return 2;
-    };
-    let Some(mut policy) = GlobalPolicy::by_name(p.get("global-policy").unwrap_or("spillover"))
-    else {
-        eprintln!("error: unknown global policy (none|spillover|aggressive)");
-        return 2;
-    };
-    // --global-avoid-decay overrides the preset's registry decay — the
-    // same knob --decay sets for the SPTLB layer, one level up.
-    if p.get("global-avoid-decay").is_some_and(|v| !v.is_empty()) {
-        match p.u64("global-avoid-decay") {
-            Ok(d) => policy.avoid_decay = d as u32,
-            Err(e) => {
-                eprintln!("error: {e}");
-                return 2;
-            }
-        }
-    }
-    let Some(execution) = RegionExecution::from_name(p.get("region-exec").unwrap_or("parallel"))
-    else {
-        eprintln!("error: unknown region execution (sequential|parallel)");
-        return 2;
-    };
-    let decay = match p.u64("decay") {
-        Ok(d) => d as u32,
-        Err(e) => {
-            eprintln!("error: {e}");
-            return 2;
-        }
-    };
-    let bed = generate_multiregion(&MultiRegionSpec::new(n_regions, spec).with_seed(seed));
-    let cfg = MultiRegionConfig {
-        sptlb: SptlbConfig {
-            timeout: Duration::from_millis(p.u64("timeout-ms").unwrap_or(60)),
-            seed,
-            parallel,
-            avoid_decay: decay,
-            ..SptlbConfig::default()
-        },
-        engine,
-        scenario,
-        policy,
-        execution,
-        forecast,
-        seed,
-        ..MultiRegionConfig::new(n_regions)
-    };
-    let mut coordinator = MultiRegionCoordinator::new(cfg, bed);
-    let rounds = p.u64("rounds").unwrap_or(10) as u32;
-    coordinator.run(rounds);
+fn cmd_serve_multiregion(p: &Parsed, config: ServiceConfig) -> Result<(), Error> {
+    let bed = generate_multiregion(
+        &MultiRegionSpec::new(config.regions, config.workload.clone()).with_seed(config.seed),
+    );
+    let mut coordinator = MultiRegionCoordinator::new(config.multiregion(), bed);
+    coordinator.run(config.rounds);
     println!("{}", coordinator.metrics.to_json().pretty());
-    for (flag, json) in [
-        ("log", coordinator.log_json()),
-        ("event-log", coordinator.event_log_json()),
-    ] {
-        if let Ok(path) = p.str(flag) {
-            if !path.is_empty() {
-                if let Err(e) = std::fs::write(&path, json.pretty()) {
-                    eprintln!("error writing {path}: {e}");
-                    return 1;
-                }
-                println!("{flag} written to {path}");
-            }
-        }
-    }
-    0
+    write_logs(
+        p,
+        &[
+            ("log", coordinator.log_json()),
+            ("event-log", coordinator.event_log_json()),
+        ],
+    )
 }
 
-fn cmd_fig3(args: &[String]) -> i32 {
+/// `serve --ingest`: the async ingest-plane service runtime. Scenario
+/// producer threads submit events through cloned handles into the
+/// bounded queue; the consumer loop drains under the batch latency
+/// budget, admits, journals, solves, and periodically snapshots — so a
+/// killed process restores with `--restore` and the journal replays
+/// bit-identically offline.
+fn cmd_serve_ingest(p: &Parsed, config: ServiceConfig) -> Result<(), Error> {
+    let producers = p.usize_at_least("producers", 1).map_err(usage)?;
+    let dir = p.str("snapshot-dir").map_err(usage)?;
+    let dir = (!dir.is_empty()).then(|| std::path::PathBuf::from(dir));
+    let rounds = config.rounds;
+    let snapshot_every = config.snapshot_every;
+
+    let mut service = if p.flag("restore") {
+        let Some(dir) = dir.as_ref() else {
+            return Err(Error::Usage("--restore requires --snapshot-dir".into()));
+        };
+        let snap = Snapshot::load(&dir.join("snapshot.json"))?.map_err(Error::SnapshotCorrupt)?;
+        let journal = load_journal(&dir.join("journal.jsonl"))?.map_err(Error::SnapshotCorrupt)?;
+        let service = Service::restore(config, &snap, &journal)?;
+        println!(
+            "restored from snapshot at round {} (+{} journal tail round(s) replayed)",
+            snap.rounds_done,
+            service.rounds_done() - snap.rounds_done
+        );
+        service
+    } else {
+        Service::new(config)
+    };
+
+    // Open the on-disk journal. It is rewritten from the verified
+    // in-memory journal rather than opened in append mode: a torn tail
+    // line (dropped during load) has no trailing newline, so appending
+    // after it would corrupt the first new round.
+    let mut journal_file = match dir.as_ref() {
+        Some(dir) => {
+            std::fs::create_dir_all(dir)?;
+            let mut f = std::fs::File::create(dir.join("journal.jsonl"))?;
+            for k in 0..service.rounds_done() {
+                append_journal_round(&mut f, service.journal_round(k))?;
+            }
+            Some(f)
+        }
+        None => None,
+    };
+
+    // Scenario generators become ordinary ingest clients: one thread
+    // each, distinct stream seeds, private shadow fleets. Anything else
+    // holding an IngestHandle would feed the same queue identically.
+    let handle = service.handle();
+    let seed = service.config().seed;
+    let threads: Vec<std::thread::JoinHandle<u64>> = (0..producers)
+        .map(|i| {
+            let mut producer = ScenarioProducer::new(
+                service
+                    .config()
+                    .scenario
+                    .clone()
+                    .with_seed(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+                FleetState::new(
+                    service.fleet().apps().to_vec(),
+                    service.fleet().tiers().to_vec(),
+                    service.fleet().assignment().clone(),
+                ),
+            );
+            let h = handle.clone();
+            std::thread::spawn(move || producer.run(&h, rounds))
+        })
+        .collect();
+
+    loop {
+        match service.ingest_round() {
+            Some(rec) => {
+                if let (Some(f), Some(dir)) = (journal_file.as_mut(), dir.as_ref()) {
+                    append_journal_round(f, service.journal_round(rec.round))?;
+                    if snapshot_every > 0 && service.rounds_done() % snapshot_every == 0 {
+                        service.snapshot().write(&dir.join("snapshot.json"))?;
+                    }
+                }
+            }
+            // An empty drain with every producer finished means the
+            // queue is dry for good.
+            None => {
+                if threads.iter().all(|t| t.is_finished()) {
+                    break;
+                }
+            }
+        }
+    }
+    service.stop();
+    let accepted: u64 = threads.into_iter().map(|t| t.join().unwrap_or(0)).sum();
+
+    if let Some(dir) = dir.as_ref() {
+        service.snapshot().write(&dir.join("snapshot.json"))?;
+        println!("snapshot + journal in {}", dir.display());
+    }
+    println!("{}", service.metrics.to_json().pretty());
+    let ingest = &service.metrics.ingest;
+    println!(
+        "ingest: {} round(s) ({} fast, {} full), {} event(s) queued by {} producer(s), {} shed, {} idle poll(s)",
+        service.rounds_done(),
+        ingest.fast_rounds,
+        ingest.full_rounds,
+        accepted,
+        producers,
+        ingest.shed.total(),
+        ingest.idle_polls,
+    );
+    write_logs(
+        p,
+        &[
+            ("log", service.rounds_json()),
+            ("event-log", service.journal_json()),
+        ],
+    )
+}
+
+fn cmd_fig3(args: &[String]) -> Result<(), Error> {
     let cmd = Command::new("fig3", "regenerate Figure 3 (a/b/c)")
         .opt("scenario", "paper", "workload preset")
         .opt("seed", "42", "prng seed")
@@ -542,77 +480,57 @@ fn cmd_fig3(args: &[String]) -> i32 {
         .opt("movement", "0.10", "movement fraction")
         .flag("csv", "print CSV instead of ASCII charts");
     with_parsed(cmd, args, |p| {
-        let bed = match load_bed(&p.str("scenario").unwrap(), p.u64("seed").unwrap()) {
-            Ok(b) => b,
-            Err(e) => {
-                eprintln!("error: {e}");
-                return 2;
-            }
-        };
+        let seed = p.u64("seed").map_err(usage)?;
+        let bed = load_bed(&p.str("scenario").map_err(usage)?, seed)?;
         let rep = report::fig3_report(
             &bed,
-            Duration::from_millis(p.u64("timeout-ms").unwrap_or(100)),
-            p.f64("movement").unwrap_or(0.10),
-            p.u64("seed").unwrap_or(42),
+            Duration::from_millis(p.u64("timeout-ms").map_err(usage)?),
+            p.f64("movement").map_err(usage)?,
+            seed,
         );
         if p.flag("csv") {
             print!("{}", rep.csv());
         } else {
             print!("{}", rep.ascii());
         }
-        0
+        Ok(())
     })
 }
 
-fn cmd_sweep(args: &[String]) -> i32 {
+fn cmd_sweep(args: &[String]) -> Result<(), Error> {
     let cmd = Command::new("sweep", "regenerate the Fig. 4/5 sweep")
         .opt("scenario", "paper", "workload preset")
         .opt("seed", "42", "prng seed")
         .opt("timeouts-ms", "50,100,300,900", "comma list of solver timeouts")
         .opt("movement", "0.10", "movement fraction");
     with_parsed(cmd, args, |p| {
-        let bed = match load_bed(&p.str("scenario").unwrap(), p.u64("seed").unwrap()) {
-            Ok(b) => b,
-            Err(e) => {
-                eprintln!("error: {e}");
-                return 2;
-            }
-        };
+        let seed = p.u64("seed").map_err(usage)?;
+        let bed = load_bed(&p.str("scenario").map_err(usage)?, seed)?;
         let timeouts: Vec<Duration> = p
             .list("timeouts-ms")
-            .unwrap_or_default()
+            .map_err(usage)?
             .iter()
             .filter_map(|s| s.parse::<u64>().ok())
             .map(Duration::from_millis)
             .collect();
-        let rows = report::sweep(
-            &bed,
-            &timeouts,
-            p.f64("movement").unwrap_or(0.10),
-            p.u64("seed").unwrap_or(42),
-        );
+        let rows = report::sweep(&bed, &timeouts, p.f64("movement").map_err(usage)?, seed);
         println!("== Figure 4 rows ==");
         print!("{}", report::fig4_rows(&rows));
         println!("\n== Figure 5 rows ==");
         print!("{}", report::fig5_rows(&rows));
-        0
+        Ok(())
     })
 }
 
-fn cmd_check(args: &[String]) -> i32 {
+fn cmd_check(args: &[String]) -> Result<(), Error> {
     let cmd = Command::new("check", "verify AOT artifacts against the rust scorer")
         .opt("artifacts", "artifacts", "artifact directory")
         .opt("seed", "7", "prng seed");
     with_parsed(cmd, args, |p| {
-        let dir = std::path::PathBuf::from(p.str("artifacts").unwrap());
-        let mut scorer = match sptlb::runtime::PjrtScorer::from_dir(&dir) {
-            Ok(s) => s,
-            Err(e) => {
-                eprintln!("artifact check FAILED: {e:#}");
-                return 1;
-            }
-        };
-        let bed = sptlb::workload::generate(&WorkloadSpec::paper());
+        let dir = std::path::PathBuf::from(p.str("artifacts").map_err(usage)?);
+        let mut scorer = sptlb::runtime::PjrtScorer::from_dir(&dir)
+            .map_err(|e| Error::Solver(format!("artifact check FAILED: {e:#}")))?;
+        let bed = generate(&WorkloadSpec::paper());
         let problem = sptlb::rebalancer::Problem::build(
             &bed.apps,
             &bed.tiers,
@@ -621,7 +539,7 @@ fn cmd_check(args: &[String]) -> i32 {
             Default::default(),
         )
         .unwrap();
-        let mut rng = sptlb::util::prng::Pcg64::new(p.u64("seed").unwrap_or(7));
+        let mut rng = sptlb::util::prng::Pcg64::new(p.u64("seed").map_err(usage)?);
         let candidates: Vec<_> = (0..32)
             .map(|_| {
                 let mut a = problem.initial.clone();
@@ -632,13 +550,9 @@ fn cmd_check(args: &[String]) -> i32 {
                 a
             })
             .collect();
-        let device = match scorer.score(&problem, &candidates) {
-            Ok(d) => d,
-            Err(e) => {
-                eprintln!("artifact check FAILED: {e:#}");
-                return 1;
-            }
-        };
+        let device = scorer
+            .score(&problem, &candidates)
+            .map_err(|e| Error::Solver(format!("artifact check FAILED: {e:#}")))?;
         let mut worst = 0.0f64;
         for (i, cand) in candidates.iter().enumerate() {
             let (cpu, _) = sptlb::rebalancer::score_assignment(&problem, cand);
@@ -649,15 +563,16 @@ fn cmd_check(args: &[String]) -> i32 {
                 "artifact check OK: 32 candidates, worst relative error {worst:.2e}, {} dispatch(es)",
                 scorer.dispatches
             );
-            0
+            Ok(())
         } else {
-            eprintln!("parity FAILED: worst relative error {worst}");
-            1
+            Err(Error::Solver(format!(
+                "parity FAILED: worst relative error {worst}"
+            )))
         }
     })
 }
 
-fn cmd_bench(args: &[String]) -> i32 {
+fn cmd_bench(args: &[String]) -> Result<(), Error> {
     use sptlb::rebalancer::gap::{self, GapConfig};
 
     let cmd = Command::new("bench", "solution-quality harnesses (modes: gap)")
@@ -683,32 +598,27 @@ fn cmd_bench(args: &[String]) -> i32 {
     with_parsed(cmd, args, |p| {
         let mode = p.positionals.first().map(|s| s.as_str()).unwrap_or("gap");
         if mode != "gap" {
-            eprintln!("error: unknown bench mode '{mode}' (available: gap)");
-            return 2;
+            return Err(Error::Usage(format!(
+                "unknown bench mode '{mode}' (available: gap)"
+            )));
         }
         let mut cfg = if p.flag("smoke") { GapConfig::smoke() } else { GapConfig::default() };
         // Empty-string defaults mean "keep the harness default" so the
         // smoke preset's budgets survive unless explicitly overridden.
         if p.get("seed").is_some_and(|v| !v.is_empty()) {
-            cfg.seed = p.u64("seed").unwrap_or(cfg.seed);
+            cfg.seed = p.u64("seed").map_err(usage)?;
         }
         if p.get("rounds").is_some_and(|v| !v.is_empty()) {
-            cfg.rounds = p.u64("rounds").unwrap_or(cfg.rounds as u64) as u32;
+            cfg.rounds = p.u64("rounds").map_err(usage)? as u32;
         }
         if p.get("movement").is_some_and(|v| !v.is_empty()) {
-            match p.f64_in_range("movement", 0.0, 1.0) {
-                Ok(f) => cfg.movement_fraction = f,
-                Err(e) => {
-                    eprintln!("error: {e}");
-                    return 2;
-                }
-            }
+            cfg.movement_fraction = p.f64_in_range("movement", 0.0, 1.0).map_err(usage)?;
         }
         if p.get("local-ms").is_some_and(|v| !v.is_empty()) {
-            cfg.local_ms = p.u64("local-ms").unwrap_or(cfg.local_ms);
+            cfg.local_ms = p.u64("local-ms").map_err(usage)?;
         }
         if p.get("exact-ms").is_some_and(|v| !v.is_empty()) {
-            cfg.exact_ms = p.u64("exact-ms").unwrap_or(cfg.exact_ms);
+            cfg.exact_ms = p.u64("exact-ms").map_err(usage)?;
         }
 
         let report = gap::run(&cfg);
@@ -739,29 +649,15 @@ fn cmd_bench(args: &[String]) -> i32 {
 
         if let Some(path) = p.get("write-baseline").filter(|v| !v.is_empty()) {
             let baseline = gap::baseline_from(&report, 0.05);
-            if let Err(e) = std::fs::write(path, baseline.pretty() + "\n") {
-                eprintln!("error writing {path}: {e}");
-                return 1;
-            }
+            std::fs::write(path, baseline.pretty() + "\n")?;
             println!("baseline written to {path}");
         }
 
         if let Some(path) = p.get("baseline").filter(|v| !v.is_empty()) {
-            let tolerance = p.f64("tolerance").unwrap_or(0.05);
-            let text = match std::fs::read_to_string(path) {
-                Ok(t) => t,
-                Err(e) => {
-                    eprintln!("error reading baseline {path}: {e}");
-                    return 1;
-                }
-            };
-            let baseline = match sptlb::util::json::Json::parse(&text) {
-                Ok(j) => j,
-                Err(e) => {
-                    eprintln!("error parsing baseline {path}: {e}");
-                    return 1;
-                }
-            };
+            let tolerance = p.f64("tolerance").map_err(usage)?;
+            let text = std::fs::read_to_string(path)?;
+            let baseline = Json::parse(&text)
+                .map_err(|e| Error::Solver(format!("parsing baseline {path}: {e}")))?;
             let failures = gap::gate_against_baseline(&report, &baseline, tolerance);
             if failures.is_empty() {
                 println!("gap gate OK against {path} (tolerance {tolerance})");
@@ -770,9 +666,9 @@ fn cmd_bench(args: &[String]) -> i32 {
                 for f in &failures {
                     eprintln!("  - {f}");
                 }
-                return 1;
+                return Err(Error::Solver(format!("gap gate failed against {path}")));
             }
         }
-        0
+        Ok(())
     })
 }

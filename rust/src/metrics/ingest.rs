@@ -1,0 +1,172 @@
+//! Ingest-plane telemetry: admission-control shed counters and the
+//! batching statistics of the long-running service runtime. Henge-style
+//! overload policy lives at the ingest boundary, not in the solver — so
+//! this is where the per-reason accounting lives too: every event a
+//! producer submits is either *accepted* (journaled, then applied) or
+//! *shed* with exactly one [`ShedReason`].
+
+use crate::util::json::Json;
+use crate::util::stats::OnlineStats;
+
+/// Why an event was refused admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The bounded ingest queue was full at submit time (producer-side
+    /// backpressure under the `shed` policy).
+    QueueFull,
+    /// Drift/departure referenced an app id the fleet does not know
+    /// (departed, never admitted, or duplicated within the batch).
+    UnknownApp,
+    /// Capacity change referenced a tier outside the topology, or an
+    /// arrival's SLO is supported by no tier.
+    UnknownTier,
+    /// Outage referenced a region no tier has machines in.
+    UnknownRegion,
+    /// The event payload is unusable (non-finite or negative demand).
+    Malformed,
+}
+
+impl ShedReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::UnknownApp => "unknown_app",
+            ShedReason::UnknownTier => "unknown_tier",
+            ShedReason::UnknownRegion => "unknown_region",
+            ShedReason::Malformed => "malformed",
+        }
+    }
+}
+
+/// Per-reason shed counters (plain integers — the producer-side
+/// `queue_full` count is folded in from its atomic when metrics are
+/// snapshotted, so this type stays `Copy` and allocation-free).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShedCounts {
+    pub queue_full: u64,
+    pub unknown_app: u64,
+    pub unknown_tier: u64,
+    pub unknown_region: u64,
+    pub malformed: u64,
+}
+
+impl ShedCounts {
+    pub fn count(&mut self, reason: ShedReason) {
+        match reason {
+            ShedReason::QueueFull => self.queue_full += 1,
+            ShedReason::UnknownApp => self.unknown_app += 1,
+            ShedReason::UnknownTier => self.unknown_tier += 1,
+            ShedReason::UnknownRegion => self.unknown_region += 1,
+            ShedReason::Malformed => self.malformed += 1,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.queue_full + self.unknown_app + self.unknown_tier + self.unknown_region + self.malformed
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("queue_full", Json::num(self.queue_full as f64)),
+            ("unknown_app", Json::num(self.unknown_app as f64)),
+            ("unknown_tier", Json::num(self.unknown_tier as f64)),
+            ("unknown_region", Json::num(self.unknown_region as f64)),
+            ("malformed", Json::num(self.malformed as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<ShedCounts> {
+        Some(ShedCounts {
+            queue_full: j.get("queue_full").as_u64()?,
+            unknown_app: j.get("unknown_app").as_u64()?,
+            unknown_tier: j.get("unknown_tier").as_u64()?,
+            unknown_region: j.get("unknown_region").as_u64()?,
+            malformed: j.get("malformed").as_u64()?,
+        })
+    }
+}
+
+/// Batching statistics of the ingest loop, accumulated per round. All
+/// fields are live-only telemetry (wall-clock and queue-depth dependent)
+/// — the replay-deterministic record is
+/// [`ServiceRound`](crate::service::ServiceRound), kept separate so the
+/// live-vs-replay determinism pins compare clean bit-identity.
+#[derive(Debug, Default)]
+pub struct IngestStats {
+    /// Accepted events per solved round.
+    pub batch_events: OnlineStats,
+    /// Queue depth observed at the start of each drain.
+    pub queue_depth: OnlineStats,
+    /// Wall-clock per ingest round (drain + admit + solve + adopt).
+    pub round_ms: OnlineStats,
+    /// Rounds that took the drift-only zero-allocation fast path.
+    pub fast_rounds: u32,
+    /// Rounds that ran the full collect→solve pipeline.
+    pub full_rounds: u32,
+    /// Drains that found no events before the batch deadline.
+    pub idle_polls: u32,
+    /// Events accepted into the journal across the run.
+    pub accepted: u64,
+    /// Events refused admission, by reason.
+    pub shed: ShedCounts,
+}
+
+impl IngestStats {
+    pub fn to_json(&self) -> Json {
+        let stat = |s: &OnlineStats| {
+            Json::obj(vec![
+                ("mean", Json::num(s.mean())),
+                ("min", Json::num(s.min())),
+                ("max", Json::num(s.max())),
+            ])
+        };
+        Json::obj(vec![
+            ("batch_events", stat(&self.batch_events)),
+            ("queue_depth", stat(&self.queue_depth)),
+            ("round_ms", stat(&self.round_ms)),
+            ("fast_rounds", Json::num(self.fast_rounds as f64)),
+            ("full_rounds", Json::num(self.full_rounds as f64)),
+            ("idle_polls", Json::num(self.idle_polls as f64)),
+            ("accepted", Json::num(self.accepted as f64)),
+            ("shed", self.shed.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shed_counts_roundtrip_and_total() {
+        let mut c = ShedCounts::default();
+        c.count(ShedReason::QueueFull);
+        c.count(ShedReason::QueueFull);
+        c.count(ShedReason::UnknownApp);
+        c.count(ShedReason::UnknownTier);
+        c.count(ShedReason::UnknownRegion);
+        c.count(ShedReason::Malformed);
+        assert_eq!(c.total(), 6);
+        let text = c.to_json().to_string();
+        let back = ShedCounts::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn ingest_stats_serialize() {
+        let mut s = IngestStats::default();
+        s.batch_events.push(16.0);
+        s.fast_rounds = 3;
+        s.accepted = 16;
+        let j = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(j.get("fast_rounds").as_u64(), Some(3));
+        assert_eq!(j.get("batch_events").get("mean").as_f64(), Some(16.0));
+        assert_eq!(j.get("shed").get("queue_full").as_u64(), Some(0));
+    }
+
+    #[test]
+    fn reasons_have_stable_names() {
+        assert_eq!(ShedReason::QueueFull.name(), "queue_full");
+        assert_eq!(ShedReason::Malformed.name(), "malformed");
+    }
+}

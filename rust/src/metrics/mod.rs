@@ -5,6 +5,10 @@
 //! timeseries around a base demand) and implements the collector that
 //! reduces series to p99 demand vectors plus tier limit metrics.
 
+pub mod ingest;
+
+pub use ingest::{IngestStats, ShedCounts, ShedReason};
+
 use crate::metadata::{MetadataStore, MonitoringEndpoint};
 use crate::model::{App, AppId, ResourceVec, Tier};
 use crate::util::prng::Pcg64;

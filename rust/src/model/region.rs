@@ -95,6 +95,17 @@ impl RegionSet {
         }
         2 * self.intersection_size(other) > self.len()
     }
+
+    /// Serialize as a sorted array of region indices.
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.regions.iter().map(|r| Json::num(r.0 as f64)))
+    }
+
+    pub fn from_json(j: &Json) -> Option<RegionSet> {
+        let arr = j.as_arr()?;
+        let idx = arr.iter().map(|v| v.as_usize()).collect::<Option<Vec<_>>>()?;
+        Some(RegionSet::from_indices(idx))
+    }
 }
 
 impl FromIterator<RegionId> for RegionSet {

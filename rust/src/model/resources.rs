@@ -119,6 +119,24 @@ impl ResourceVec {
     pub fn as_f32(&self) -> [f32; NUM_RESOURCES] {
         [self.0[0] as f32, self.0[1] as f32, self.0[2] as f32]
     }
+
+    /// Serialize as a `[cpu, mem, tasks]` array — the compact form the
+    /// fleet checkpoint uses.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::arr(self.0.iter().map(|&v| crate::util::json::Json::num(v)))
+    }
+
+    pub fn from_json(j: &crate::util::json::Json) -> Option<ResourceVec> {
+        let arr = j.as_arr()?;
+        if arr.len() != NUM_RESOURCES {
+            return None;
+        }
+        let mut out = [0.0; NUM_RESOURCES];
+        for (slot, v) in out.iter_mut().zip(arr) {
+            *slot = v.as_f64()?;
+        }
+        Some(ResourceVec(out))
+    }
 }
 
 impl Add for ResourceVec {

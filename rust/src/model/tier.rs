@@ -6,6 +6,7 @@
 use crate::model::app::Slo;
 use crate::model::region::RegionSet;
 use crate::model::resources::{ResourceKind, ResourceVec};
+use crate::util::json::Json;
 use std::fmt;
 
 /// Dense tier identifier (index into the problem's tier arrays). A `u32`
@@ -229,6 +230,40 @@ impl Tier {
     pub fn ideal_for(&self, kind: ResourceKind) -> f64 {
         self.ideal_utilization.get(kind)
     }
+
+    /// Serialize the full static description — the fleet checkpoint needs
+    /// tiers to survive a process restart (outages mutate `regions`, so
+    /// tiers cannot be re-derived from the workload spec).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id.0 as f64)),
+            ("name", Json::str(self.name.as_str())),
+            ("capacity", self.capacity.to_json()),
+            ("ideal_utilization", self.ideal_utilization.to_json()),
+            (
+                "supported_slos",
+                Json::arr(self.supported_slos.iter().map(|s| Json::str(s.name()))),
+            ),
+            ("regions", self.regions.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Tier> {
+        let slos = j
+            .get("supported_slos")
+            .as_arr()?
+            .iter()
+            .map(|s| Slo::from_name(s.as_str()?))
+            .collect::<Option<Vec<_>>>()?;
+        Some(Tier {
+            id: TierId(j.get("id").as_u64()? as u32),
+            name: j.get("name").as_str()?.to_string(),
+            capacity: ResourceVec::from_json(j.get("capacity"))?,
+            ideal_utilization: ResourceVec::from_json(j.get("ideal_utilization"))?,
+            supported_slos: slos,
+            regions: RegionSet::from_json(j.get("regions"))?,
+        })
+    }
 }
 
 /// The paper's SLO→tier support mapping (§4): SLO1/2 → tiers 1–3,
@@ -288,6 +323,14 @@ mod tests {
         assert_eq!(t(Slo::Slo2), vec![0, 1, 2]);
         assert_eq!(t(Slo::Slo3), vec![0, 1, 2, 3, 4]);
         assert_eq!(t(Slo::Slo4), vec![3, 4]);
+    }
+
+    #[test]
+    fn tier_json_roundtrip() {
+        let t = tier();
+        let text = t.to_json().to_string();
+        let back = Tier::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, t);
     }
 
     #[test]

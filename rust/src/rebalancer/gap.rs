@@ -207,6 +207,7 @@ impl GapReport {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("kind", Json::str("gap_report")),
+            ("schema", Json::num(crate::coordinator::METRICS_SCHEMA as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("smoke", Json::Bool(self.smoke)),
             (

@@ -1,0 +1,604 @@
+//! One flat configuration for the whole service stack. The old surface
+//! nested `SptlbConfig` inside `CoordinatorConfig` / `MultiRegionConfig`
+//! with `ForecastConfig` on the side, and the CLI validated each knob
+//! ad-hoc at its parse site. [`ServiceConfig`] collapses that into a
+//! single struct built through a validating builder: name-based knobs
+//! (solver, variant, scenario, policy, …) go in as strings, `build()`
+//! resolves and cross-checks everything, and every rejection is a typed
+//! [`ConfigError`] variant instead of a scattered `eprintln!`.
+//!
+//! The legacy configs are not gone — the engine and coordinators still
+//! consume them — but they are now *derived* views
+//! ([`ServiceConfig::sptlb`], [`ServiceConfig::coordinator`],
+//! [`ServiceConfig::multiregion`]) of the one validated source of truth.
+
+use crate::coordinator::{CoordinatorConfig, EngineMode, MultiRegionConfig, RegionExecution};
+use crate::forecast::{ForecastConfig, ForecasterKind};
+use crate::hierarchy::global::GlobalPolicy;
+use crate::hierarchy::variants::Variant;
+use crate::rebalancer::solution::SolverKind;
+use crate::rebalancer::{ParallelConfig, ShardStrategy};
+use crate::sptlb::SptlbConfig;
+use crate::workload::{MultiRegionScenario, ScenarioConfig, WorkloadSpec};
+use std::time::Duration;
+use thiserror::Error;
+
+/// Why a [`ServiceConfigBuilder::build`] was rejected.
+#[derive(Debug, Error, PartialEq)]
+pub enum ConfigError {
+    #[error("unknown workload preset '{0}' ({})", WorkloadSpec::PRESETS.join("|"))]
+    UnknownWorkload(String),
+    #[error("unknown event scenario '{0}'")]
+    UnknownScenario(String),
+    #[error("unknown solver '{0}' (local|optimal)")]
+    UnknownSolver(String),
+    #[error("unknown variant '{0}' (no|w|manual)")]
+    UnknownVariant(String),
+    #[error("unknown engine '{0}' (incremental|rebuild)")]
+    UnknownEngine(String),
+    #[error("unknown forecaster '{0}' ({})", ForecasterKind::NAMES.join("|"))]
+    UnknownForecaster(String),
+    #[error("unknown global policy '{0}' (none|spillover|aggressive)")]
+    UnknownPolicy(String),
+    #[error("unknown region execution '{0}' (sequential|parallel)")]
+    UnknownRegionExec(String),
+    #[error("unknown shard strategy '{0}' (apps|moves)")]
+    UnknownShard(String),
+    #[error("unknown backpressure policy '{0}' (shed|block)")]
+    UnknownBackpressure(String),
+    /// A multi-region-only option was set with `--regions 1` — e.g.
+    /// `--global-policy aggressive` without a global layer to apply it.
+    #[error("--{option} {value} requires --regions > 1")]
+    RequiresMultiRegion { option: &'static str, value: String },
+    /// A numeric knob is out of its valid range.
+    #[error("invalid --{field}: {value}")]
+    Invalid { field: &'static str, value: String },
+    /// seasonal-naive can never hold one full season with
+    /// `history < period` — it would silently degrade to naive-last.
+    #[error("--history ({history}) must be >= --period ({period}) for seasonal-naive")]
+    HistoryShorterThanPeriod { history: usize, period: u32 },
+}
+
+/// How a producer handles a full ingest queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backpressure {
+    /// Drop the event and count it (`shed.queue_full`) — the default:
+    /// overload sheds load instead of stalling producers.
+    #[default]
+    Shed,
+    /// Spin/yield until the queue has space (or the service stops).
+    Block,
+}
+
+impl Backpressure {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backpressure::Shed => "shed",
+            Backpressure::Block => "block",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Backpressure> {
+        match s {
+            "shed" => Some(Backpressure::Shed),
+            "block" => Some(Backpressure::Block),
+            _ => None,
+        }
+    }
+}
+
+/// The validated, flat service configuration. Construct via
+/// [`ServiceConfig::builder`]; `Default` gives the defaults the CLI
+/// documents (paper workload, drift scenario, incremental engine).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    // -- workload identity
+    pub workload: WorkloadSpec,
+    /// Preset name the workload resolved from (stamped into snapshots so
+    /// a restore against the wrong run is rejected before any replay).
+    pub workload_name: String,
+    pub seed: u64,
+    // -- solver
+    pub solver: SolverKind,
+    pub variant: Variant,
+    pub timeout: Duration,
+    pub movement_fraction: f64,
+    pub avoid_decay: u32,
+    pub parallel: ParallelConfig,
+    // -- coordinator
+    pub tick: Duration,
+    pub engine: EngineMode,
+    pub rounds: u32,
+    pub scenario: ScenarioConfig,
+    // -- forecasting
+    pub forecast: ForecastConfig,
+    // -- global layer (regions > 1)
+    pub regions: usize,
+    pub policy: GlobalPolicy,
+    pub execution: RegionExecution,
+    pub multi_scenario: Option<MultiRegionScenario>,
+    // -- ingest plane
+    pub queue_capacity: usize,
+    /// Drain window per round: events arriving within this budget are
+    /// batched into one solve.
+    pub batch_budget: Duration,
+    /// Hard cap on events per batch (solve early when reached).
+    pub max_batch: usize,
+    pub backpressure: Backpressure,
+    /// Write a snapshot every K journaled rounds (0 = never).
+    pub snapshot_every: u32,
+    /// Rounds of journal/record capacity to pre-reserve so the warm
+    /// steady-state ingest loop never grows a vector.
+    pub reserve_rounds: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig::builder().build().expect("defaults are valid")
+    }
+}
+
+impl ServiceConfig {
+    pub fn builder() -> ServiceConfigBuilder {
+        ServiceConfigBuilder::default()
+    }
+
+    /// The solver-layer view of this config.
+    pub fn sptlb(&self) -> SptlbConfig {
+        SptlbConfig {
+            solver: self.solver,
+            variant: self.variant,
+            timeout: self.timeout,
+            movement_fraction: self.movement_fraction,
+            avoid_decay: self.avoid_decay,
+            parallel: self.parallel,
+            seed: self.seed,
+            ..SptlbConfig::default()
+        }
+    }
+
+    /// The single-region coordinator view.
+    pub fn coordinator(&self) -> CoordinatorConfig {
+        CoordinatorConfig {
+            sptlb: self.sptlb(),
+            tick: self.tick,
+            scenario: self.scenario.clone(),
+            engine: self.engine,
+            forecast: self.forecast.clone(),
+        }
+    }
+
+    /// The multi-region coordinator view. Only callable when the config
+    /// was built with `regions > 1` (the builder resolves the
+    /// region-count-dependent scenario then).
+    pub fn multiregion(&self) -> MultiRegionConfig {
+        let scenario = self
+            .multi_scenario
+            .clone()
+            .expect("multiregion() requires a config built with regions > 1");
+        MultiRegionConfig {
+            sptlb: self.sptlb(),
+            tick: self.tick,
+            engine: self.engine,
+            scenario,
+            policy: self.policy.clone(),
+            execution: self.execution,
+            forecast: self.forecast.clone(),
+            seed: self.seed,
+        }
+    }
+}
+
+/// Builder: setters take raw CLI strings for name-based knobs and typed
+/// values for the rest; [`ServiceConfigBuilder::build`] validates the
+/// whole combination at once.
+#[derive(Debug, Clone)]
+pub struct ServiceConfigBuilder {
+    workload: String,
+    seed: u64,
+    events: String,
+    solver: String,
+    variant: String,
+    engine: String,
+    forecaster: String,
+    shard: String,
+    region_exec: String,
+    backpressure: String,
+    global_policy: Option<String>,
+    global_avoid_decay: Option<u32>,
+    timeout: Duration,
+    movement_fraction: f64,
+    avoid_decay: u32,
+    workers: usize,
+    tick: Duration,
+    rounds: u32,
+    horizon: u32,
+    history: usize,
+    period: u32,
+    regions: usize,
+    drift_sigma: Option<f64>,
+    drift_fraction: Option<f64>,
+    arrival_prob: Option<f64>,
+    departure_prob: Option<f64>,
+    queue_capacity: usize,
+    batch_budget: Duration,
+    max_batch: usize,
+    snapshot_every: u32,
+    reserve_rounds: usize,
+}
+
+impl Default for ServiceConfigBuilder {
+    fn default() -> Self {
+        Self {
+            workload: "paper".into(),
+            seed: 42,
+            events: "drift".into(),
+            solver: "local".into(),
+            variant: "manual_cnst".into(),
+            engine: "incremental".into(),
+            forecaster: "none".into(),
+            shard: "apps".into(),
+            region_exec: "parallel".into(),
+            backpressure: "shed".into(),
+            global_policy: None,
+            global_avoid_decay: None,
+            timeout: Duration::from_millis(60),
+            movement_fraction: 0.10,
+            avoid_decay: 0,
+            workers: 1,
+            tick: Duration::from_millis(250),
+            rounds: 10,
+            horizon: 3,
+            history: 32,
+            period: 12,
+            regions: 1,
+            drift_sigma: None,
+            drift_fraction: None,
+            arrival_prob: None,
+            departure_prob: None,
+            queue_capacity: 1024,
+            batch_budget: Duration::from_millis(5),
+            max_batch: 256,
+            snapshot_every: 8,
+            reserve_rounds: 256,
+        }
+    }
+}
+
+macro_rules! setter {
+    ($name:ident: $ty:ty) => {
+        pub fn $name(mut self, v: $ty) -> Self {
+            self.$name = v;
+            self
+        }
+    };
+    (str $name:ident) => {
+        pub fn $name(mut self, v: impl Into<String>) -> Self {
+            self.$name = v.into();
+            self
+        }
+    };
+    (opt $name:ident: $ty:ty) => {
+        pub fn $name(mut self, v: $ty) -> Self {
+            self.$name = Some(v);
+            self
+        }
+    };
+}
+
+impl ServiceConfigBuilder {
+    setter!(str workload);
+    setter!(str events);
+    setter!(str solver);
+    setter!(str variant);
+    setter!(str engine);
+    setter!(str forecaster);
+    setter!(str shard);
+    setter!(str region_exec);
+    setter!(str backpressure);
+    setter!(seed: u64);
+    setter!(timeout: Duration);
+    setter!(movement_fraction: f64);
+    setter!(avoid_decay: u32);
+    setter!(workers: usize);
+    setter!(tick: Duration);
+    setter!(rounds: u32);
+    setter!(horizon: u32);
+    setter!(history: usize);
+    setter!(period: u32);
+    setter!(regions: usize);
+    setter!(queue_capacity: usize);
+    setter!(batch_budget: Duration);
+    setter!(max_batch: usize);
+    setter!(snapshot_every: u32);
+    setter!(reserve_rounds: usize);
+    setter!(opt global_policy: String);
+    setter!(opt global_avoid_decay: u32);
+    setter!(opt drift_sigma: f64);
+    setter!(opt drift_fraction: f64);
+    setter!(opt arrival_prob: f64);
+    setter!(opt departure_prob: f64);
+
+    /// Resolve every name, validate every range, and reject invalid
+    /// cross-knob combinations with a typed [`ConfigError`].
+    pub fn build(self) -> Result<ServiceConfig, ConfigError> {
+        let workload = WorkloadSpec::by_name(&self.workload)
+            .ok_or_else(|| ConfigError::UnknownWorkload(self.workload.clone()))?
+            .with_seed(self.seed);
+        let solver = SolverKind::from_name(&self.solver)
+            .ok_or_else(|| ConfigError::UnknownSolver(self.solver.clone()))?;
+        let variant = Variant::from_name(&self.variant)
+            .ok_or_else(|| ConfigError::UnknownVariant(self.variant.clone()))?;
+        let engine = EngineMode::from_name(&self.engine)
+            .ok_or_else(|| ConfigError::UnknownEngine(self.engine.clone()))?;
+        let forecaster = ForecasterKind::from_name(&self.forecaster)
+            .ok_or_else(|| ConfigError::UnknownForecaster(self.forecaster.clone()))?;
+        let shard_strategy = ShardStrategy::from_name(&self.shard)
+            .ok_or_else(|| ConfigError::UnknownShard(self.shard.clone()))?;
+        let execution = RegionExecution::from_name(&self.region_exec)
+            .ok_or_else(|| ConfigError::UnknownRegionExec(self.region_exec.clone()))?;
+        let backpressure = Backpressure::from_name(&self.backpressure)
+            .ok_or_else(|| ConfigError::UnknownBackpressure(self.backpressure.clone()))?;
+
+        let invalid = |field: &'static str, value: String| ConfigError::Invalid { field, value };
+        if self.regions == 0 {
+            return Err(invalid("regions", "0".into()));
+        }
+        if self.timeout.is_zero() {
+            return Err(invalid("timeout-ms", "0".into()));
+        }
+        if !(0.0..=1.0).contains(&self.movement_fraction) {
+            return Err(invalid("movement", self.movement_fraction.to_string()));
+        }
+        if self.workers == 0 {
+            return Err(invalid("workers", "0".into()));
+        }
+        if self.horizon == 0 {
+            return Err(invalid("horizon", "0".into()));
+        }
+        if self.history < 2 {
+            return Err(invalid("history", self.history.to_string()));
+        }
+        if self.period == 0 {
+            return Err(invalid("period", "0".into()));
+        }
+        if forecaster == ForecasterKind::SeasonalNaive && self.history < self.period as usize {
+            return Err(ConfigError::HistoryShorterThanPeriod {
+                history: self.history,
+                period: self.period,
+            });
+        }
+        if self.queue_capacity == 0 {
+            return Err(invalid("queue", "0".into()));
+        }
+        if self.max_batch == 0 {
+            return Err(invalid("max-batch", "0".into()));
+        }
+        if self.batch_budget.is_zero() {
+            return Err(invalid("batch-ms", "0".into()));
+        }
+
+        // Global-layer options are meaningless (and therefore rejected,
+        // not ignored) without a global layer to apply them.
+        if self.regions == 1 {
+            if let Some(policy) = &self.global_policy {
+                return Err(ConfigError::RequiresMultiRegion {
+                    option: "global-policy",
+                    value: policy.clone(),
+                });
+            }
+            if let Some(decay) = self.global_avoid_decay {
+                return Err(ConfigError::RequiresMultiRegion {
+                    option: "global-avoid-decay",
+                    value: decay.to_string(),
+                });
+            }
+        }
+        let policy_name = self.global_policy.as_deref().unwrap_or("spillover");
+        let mut policy = GlobalPolicy::by_name(policy_name)
+            .ok_or_else(|| ConfigError::UnknownPolicy(policy_name.to_string()))?;
+        if let Some(decay) = self.global_avoid_decay {
+            policy.avoid_decay = decay;
+        }
+
+        // Scenario resolution depends on the region count: the
+        // multi-region presets (multiregion|failover) only exist with a
+        // global layer; the single-region presets exist in both modes.
+        let overridden = |mut s: ScenarioConfig| -> Result<ScenarioConfig, ConfigError> {
+            let knobs: [(&'static str, Option<f64>, f64, &mut f64); 4] = [
+                ("drift", self.drift_sigma, f64::MAX, &mut s.drift_sigma),
+                ("drift-frac", self.drift_fraction, 1.0, &mut s.drift_fraction),
+                ("arrivals", self.arrival_prob, 1.0, &mut s.arrival_prob),
+                ("departures", self.departure_prob, 1.0, &mut s.departure_prob),
+            ];
+            for (field, wanted, hi, slot) in knobs {
+                if let Some(v) = wanted {
+                    if !(0.0..=hi).contains(&v) {
+                        return Err(invalid(field, v.to_string()));
+                    }
+                    *slot = v;
+                }
+            }
+            Ok(s)
+        };
+        let (scenario, multi_scenario) = if self.regions > 1 {
+            let mut multi = MultiRegionScenario::by_name(&self.events, self.regions, self.seed)
+                .ok_or_else(|| ConfigError::UnknownScenario(self.events.clone()))?;
+            for region in &mut multi.per_region {
+                *region = overridden(region.clone())?;
+            }
+            // Keep a single-region view too (the first region's stream)
+            // so `coordinator()` stays callable for diagnostics.
+            let first = multi.per_region[0].clone();
+            (first, Some(multi))
+        } else {
+            if MultiRegionScenario::PRESETS.contains(&self.events.as_str()) {
+                return Err(ConfigError::RequiresMultiRegion {
+                    option: "events",
+                    value: self.events.clone(),
+                });
+            }
+            let base = ScenarioConfig::by_name(&self.events)
+                .ok_or_else(|| ConfigError::UnknownScenario(self.events.clone()))?
+                .with_seed(self.seed);
+            (overridden(base)?, None)
+        };
+
+        Ok(ServiceConfig {
+            workload,
+            workload_name: self.workload,
+            seed: self.seed,
+            solver,
+            variant,
+            timeout: self.timeout,
+            movement_fraction: self.movement_fraction,
+            avoid_decay: self.avoid_decay,
+            parallel: ParallelConfig { workers: self.workers, shard_strategy },
+            tick: self.tick,
+            engine,
+            rounds: self.rounds,
+            scenario,
+            forecast: ForecastConfig {
+                forecaster,
+                horizon: self.horizon,
+                history: self.history,
+                period: self.period,
+            },
+            regions: self.regions,
+            policy,
+            execution,
+            multi_scenario,
+            queue_capacity: self.queue_capacity,
+            batch_budget: self.batch_budget,
+            max_batch: self.max_batch,
+            backpressure,
+            snapshot_every: self.snapshot_every,
+            reserve_rounds: self.reserve_rounds,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_build_and_derive_legacy_views() {
+        let cfg = ServiceConfig::default();
+        assert_eq!(cfg.regions, 1);
+        assert_eq!(cfg.seed, 42);
+        let sptlb = cfg.sptlb();
+        assert_eq!(sptlb.seed, 42);
+        assert_eq!(sptlb.timeout, Duration::from_millis(60));
+        let coord = cfg.coordinator();
+        assert_eq!(coord.engine, EngineMode::Incremental);
+        assert_eq!(coord.scenario.seed, 42);
+    }
+
+    #[test]
+    fn single_region_global_policy_is_a_typed_error() {
+        let err = ServiceConfig::builder()
+            .global_policy("aggressive".to_string())
+            .build()
+            .unwrap_err();
+        assert_eq!(
+            err,
+            ConfigError::RequiresMultiRegion {
+                option: "global-policy",
+                value: "aggressive".into()
+            }
+        );
+        assert!(err.to_string().contains("--regions > 1"));
+    }
+
+    #[test]
+    fn multiregion_resolves_policy_and_scenario() {
+        let cfg = ServiceConfig::builder()
+            .regions(3)
+            .events("failover")
+            .global_policy("aggressive".to_string())
+            .global_avoid_decay(7)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.policy.name, "aggressive");
+        assert_eq!(cfg.policy.avoid_decay, 7, "explicit decay overrides the preset");
+        let multi = cfg.multiregion();
+        assert_eq!(multi.scenario.per_region.len(), 3);
+        assert_eq!(multi.seed, 42);
+    }
+
+    #[test]
+    fn multiregion_preset_with_one_region_is_rejected() {
+        let err = ServiceConfig::builder().events("multiregion").build().unwrap_err();
+        assert_eq!(
+            err,
+            ConfigError::RequiresMultiRegion { option: "events", value: "multiregion".into() }
+        );
+    }
+
+    #[test]
+    fn unknown_names_map_to_their_variants() {
+        let b = || ServiceConfig::builder();
+        assert_eq!(
+            b().workload("galaxy").build().unwrap_err(),
+            ConfigError::UnknownWorkload("galaxy".into())
+        );
+        assert_eq!(
+            b().events("quakes").build().unwrap_err(),
+            ConfigError::UnknownScenario("quakes".into())
+        );
+        assert_eq!(
+            b().solver("quantum").build().unwrap_err(),
+            ConfigError::UnknownSolver("quantum".into())
+        );
+        assert_eq!(
+            b().forecaster("oracle").build().unwrap_err(),
+            ConfigError::UnknownForecaster("oracle".into())
+        );
+        assert_eq!(
+            b().backpressure("panic").build().unwrap_err(),
+            ConfigError::UnknownBackpressure("panic".into())
+        );
+    }
+
+    #[test]
+    fn range_validation_is_typed() {
+        assert_eq!(
+            ServiceConfig::builder().movement_fraction(1.5).build().unwrap_err(),
+            ConfigError::Invalid { field: "movement", value: "1.5".into() }
+        );
+        assert_eq!(
+            ServiceConfig::builder().queue_capacity(0).build().unwrap_err(),
+            ConfigError::Invalid { field: "queue", value: "0".into() }
+        );
+        assert_eq!(
+            ServiceConfig::builder()
+                .forecaster("seasonal-naive")
+                .history(4)
+                .period(12)
+                .build()
+                .unwrap_err(),
+            ConfigError::HistoryShorterThanPeriod { history: 4, period: 12 }
+        );
+        assert_eq!(
+            ServiceConfig::builder().drift_fraction(2.0).build().unwrap_err(),
+            ConfigError::Invalid { field: "drift-frac", value: "2".into() }
+        );
+    }
+
+    #[test]
+    fn scenario_overrides_apply_to_every_region() {
+        let cfg = ServiceConfig::builder()
+            .regions(2)
+            .drift_sigma(0.25)
+            .arrival_prob(0.5)
+            .build()
+            .unwrap();
+        let multi = cfg.multi_scenario.as_ref().unwrap();
+        for region in &multi.per_region {
+            assert_eq!(region.drift_sigma, 0.25);
+            assert_eq!(region.arrival_prob, 0.5);
+        }
+        assert_eq!(cfg.scenario.drift_sigma, 0.25);
+    }
+}

@@ -1,0 +1,82 @@
+//! The crate-level error surface: every CLI command and service
+//! operation returns `Result<_, Error>`, and the process exit code is
+//! derived in exactly one place (`main`) via [`Error::exit_code`] —
+//! replacing the `i32` codes that used to thread through every
+//! `cmd_*` function.
+
+use crate::service::config::ConfigError;
+use thiserror::Error;
+
+/// What can go wrong running the balancer as a service or CLI command.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Invalid or inconsistent configuration (carries the typed
+    /// [`ConfigError`] as its source).
+    #[error("configuration: {0}")]
+    Config(#[from] ConfigError),
+
+    /// Filesystem or serialization I/O failed.
+    #[error("i/o: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// A solver or runtime stage failed (PJRT artifact mismatch, scorer
+    /// parity failure, …).
+    #[error("solver: {0}")]
+    Solver(String),
+
+    /// A snapshot or journal failed integrity verification: the
+    /// catch-up replay did not reproduce the checkpointed fleet, the
+    /// document is malformed, or the journal is shorter than the
+    /// snapshot's round offset.
+    #[error("snapshot corrupt: {0}")]
+    SnapshotCorrupt(String),
+
+    /// Command-line usage error (unknown flag, unparseable value).
+    #[error("{0}")]
+    Usage(String),
+}
+
+impl Error {
+    /// Process exit code, mapped once at the top of `main`: usage and
+    /// configuration mistakes exit 2 (the conventional CLI-misuse
+    /// code), everything else exits 1.
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            Error::Config(_) | Error::Usage(_) => 2,
+            Error::Io(_) | Error::Solver(_) | Error::SnapshotCorrupt(_) => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::error::Error as _;
+
+    #[test]
+    fn exit_codes_partition_config_from_runtime() {
+        let config: Error = ConfigError::RequiresMultiRegion {
+            option: "global-policy",
+            value: "aggressive".into(),
+        }
+        .into();
+        assert_eq!(config.exit_code(), 2);
+        assert_eq!(Error::Usage("bad flag".into()).exit_code(), 2);
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert_eq!(io.exit_code(), 1);
+        assert_eq!(Error::Solver("parity".into()).exit_code(), 1);
+        assert_eq!(Error::SnapshotCorrupt("mismatch".into()).exit_code(), 1);
+    }
+
+    #[test]
+    fn source_chain_reaches_the_typed_config_error() {
+        let err: Error = ConfigError::Invalid {
+            field: "queue-capacity",
+            value: "0".into(),
+        }
+        .into();
+        let source = err.source().expect("Config wraps its cause");
+        assert!(source.to_string().contains("queue-capacity"));
+        assert!(err.to_string().starts_with("configuration:"));
+    }
+}

@@ -1,0 +1,665 @@
+//! The async ingest-plane service runtime (the tentpole of the Service
+//! API redesign): a [`Service`] owns the fleet, the round engine, and a
+//! bounded lock-free ingest queue; producer threads push
+//! [`FleetEvent`]s through cloneable [`IngestHandle`]s, and the service
+//! loop batches whatever arrived inside an explicit latency budget into
+//! one solve per round.
+//!
+//! ```text
+//!   producers ──▶ IngestQueue ──▶ drain (≤ batch_budget) ──▶ admit
+//!   (threads)     (bounded,        │                          │ shed:
+//!                  lock-free)      ▼                          ▼ typed
+//!                              batch ──▶ solve ──▶ adopt ──▶ journal
+//! ```
+//!
+//! Three contracts define the runtime:
+//!
+//! * **Admission, then journal.** Raw producer events are validated
+//!   against the live fleet *before* they are journaled: unknown
+//!   ids/tiers/regions and malformed payloads are shed (counted per
+//!   reason in [`ServiceMetrics::ingest`]); arrival ids are re-minted
+//!   from the fleet's monotonic counter. The journal therefore contains
+//!   only events that applied cleanly — replaying it never re-runs
+//!   admission and can never panic.
+//! * **Determinism.** [`ServiceRound`] records only
+//!   decision-determining facts (events, path, moves, score bits).
+//!   Replaying the journal on a fresh service with the same config
+//!   reproduces the record list and the fleet checkpoint bit-for-bit —
+//!   wall-clock telemetry lives separately in
+//!   [`IngestStats`](crate::metrics::IngestStats), which replay ignores.
+//! * **Zero-alloc steady state.** A warm drift-only ingest round —
+//!   pop, admit, journal, fast-path solve
+//!   ([`FleetEngine::apply_events`]), record — touches the heap zero
+//!   times (release build, `workers == 1`): every buffer involved is
+//!   pre-reserved at construction and recycled per round.
+
+pub mod config;
+pub mod error;
+pub mod producer;
+pub mod queue;
+pub mod snapshot;
+
+pub use config::{Backpressure, ConfigError, ServiceConfig, ServiceConfigBuilder};
+pub use error::Error;
+pub use producer::{IngestHandle, ScenarioProducer};
+pub use queue::IngestQueue;
+pub use snapshot::{append_journal_round, load_journal, Snapshot, SNAPSHOT_SCHEMA};
+
+use crate::coordinator::{
+    coop_telemetry, count_breach_tiers, FleetDelta, FleetEngine, FleetState, ServiceMetrics,
+};
+use crate::hierarchy::variants::{worst_imbalance, BALANCED_TARGET};
+use crate::metrics::ShedReason;
+use crate::model::FleetEvent;
+use crate::network::LatencyMatrix;
+use crate::sptlb::SptlbConfig;
+use crate::util::json::Json;
+use crate::util::timer::Stopwatch;
+use crate::workload::generate;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Sentinel for [`ServiceRound::score_bits`] on fast-path rounds, which
+/// skip full scoring by design.
+pub const NO_SCORE: u64 = u64::MAX;
+
+/// The deterministic record of one service round: exactly the facts
+/// that journal replay must reproduce, and nothing wall-clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServiceRound {
+    pub round: u32,
+    /// Admitted events solved this round (post-shed).
+    pub n_events: u32,
+    /// Whether the zero-alloc drift fast path handled the round.
+    pub fast_path: bool,
+    pub moves: u32,
+    /// `f64::to_bits` of the solution score, or [`NO_SCORE`] on the
+    /// fast path (bit comparison keeps NaN-bearing scores comparable).
+    pub score_bits: u64,
+}
+
+impl ServiceRound {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("round", Json::num(self.round as f64)),
+            ("n_events", Json::num(self.n_events as f64)),
+            ("fast_path", Json::Bool(self.fast_path)),
+            ("moves", Json::num(self.moves as f64)),
+            (
+                "score",
+                if self.score_bits == NO_SCORE {
+                    Json::Null
+                } else {
+                    Json::num(f64::from_bits(self.score_bits))
+                },
+            ),
+        ])
+    }
+}
+
+/// The service runtime: fleet + engine + ingest plane + journal.
+pub struct Service {
+    config: ServiceConfig,
+    /// Solver config derived once — rebuilding it per round would
+    /// allocate (goal order) inside the zero-alloc steady state.
+    solver_cfg: SptlbConfig,
+    state: FleetState,
+    engine: FleetEngine,
+    latency: LatencyMatrix,
+    rounds_done: u32,
+    /// Round-0 checkpoint, captured before any event: the root every
+    /// snapshot verifies against and every replay starts from.
+    initial_checkpoint: Json,
+    /// Flat admitted-event journal plus per-round end offsets — one
+    /// growth-free append per steady-state round.
+    journal_events: Vec<FleetEvent>,
+    journal_bounds: Vec<usize>,
+    /// Deterministic per-round records (the replay-equality witness).
+    pub rounds: Vec<ServiceRound>,
+    /// Aggregated metrics, schema 2 (includes ingest/shed telemetry).
+    pub metrics: ServiceMetrics,
+    // -- ingest plane
+    queue: Arc<IngestQueue>,
+    shed_queue_full: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    /// Recycled drain buffer (capacity `max_batch`, never grows).
+    batch: Vec<FleetEvent>,
+    /// Recycled event delta for full-path rounds.
+    delta: FleetDelta,
+}
+
+impl Service {
+    /// Build a service from a validated config: generate the workload
+    /// testbed, prime nothing (the first round primes the engine), and
+    /// pre-reserve every steady-state buffer.
+    pub fn new(config: ServiceConfig) -> Service {
+        let bed = generate(&config.workload);
+        let state = FleetState::new(bed.apps, bed.tiers, bed.initial);
+        let engine = FleetEngine::with_forecast(config.engine, &config.sptlb(), config.forecast.clone());
+        let initial_checkpoint = state.checkpoint_json();
+        let reserve_events = config.reserve_rounds * config.max_batch;
+        Service {
+            solver_cfg: config.sptlb(),
+            state,
+            engine,
+            latency: bed.latency,
+            rounds_done: 0,
+            initial_checkpoint,
+            journal_events: Vec::with_capacity(reserve_events),
+            journal_bounds: Vec::with_capacity(config.reserve_rounds),
+            rounds: Vec::with_capacity(config.reserve_rounds),
+            metrics: ServiceMetrics::default(),
+            queue: Arc::new(IngestQueue::with_capacity(config.queue_capacity)),
+            shed_queue_full: Arc::new(AtomicU64::new(0)),
+            stop: Arc::new(AtomicBool::new(false)),
+            batch: Vec::with_capacity(config.max_batch),
+            delta: FleetDelta::default(),
+            config,
+        }
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.config
+    }
+
+    pub fn fleet(&self) -> &FleetState {
+        &self.state
+    }
+
+    pub fn rounds_done(&self) -> u32 {
+        self.rounds_done
+    }
+
+    /// A cloneable producer-side handle to this service's ingest queue,
+    /// carrying the configured backpressure policy.
+    pub fn handle(&self) -> IngestHandle {
+        IngestHandle {
+            queue: Arc::clone(&self.queue),
+            shed_queue_full: Arc::clone(&self.shed_queue_full),
+            policy: self.config.backpressure,
+            stop: Arc::clone(&self.stop),
+        }
+    }
+
+    /// Tell producers (and blocking `submit`s) to wind down.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
+    /// One ingest round: drain the queue until the batch latency budget
+    /// expires (or `max_batch` events arrived), admit, journal, solve.
+    /// Returns `None` — counting an idle poll — when nothing arrived
+    /// within the budget.
+    pub fn ingest_round(&mut self) -> Option<ServiceRound> {
+        self.batch.clear();
+        let deadline = Instant::now() + self.config.batch_budget;
+        loop {
+            while self.batch.len() < self.config.max_batch {
+                match self.queue.try_pop() {
+                    Some(ev) => self.batch.push(ev),
+                    None => break,
+                }
+            }
+            if self.batch.len() >= self.config.max_batch || Instant::now() >= deadline {
+                break;
+            }
+            std::hint::spin_loop();
+        }
+        // Producer-side sheds are mirrored every round so exported
+        // metrics never trail the live counters.
+        self.metrics.ingest.shed.queue_full = self.shed_queue_full.load(Ordering::Relaxed);
+        if self.batch.is_empty() {
+            self.metrics.ingest.idle_polls += 1;
+            return None;
+        }
+        let sw = Stopwatch::start();
+        let depth_after_drain = self.queue.len();
+        self.admit();
+        let record = self.solve_batch();
+        self.metrics.ingest.accepted += record.n_events as u64;
+        self.metrics.ingest.batch_events.push(record.n_events as f64);
+        self.metrics.ingest.queue_depth.push(depth_after_drain as f64);
+        self.metrics.ingest.round_ms.push(sw.elapsed_ms());
+        Some(record)
+    }
+
+    /// Run one round from an already-admitted event list — the replay
+    /// path (and the deterministic test surface). The events are
+    /// journaled as-is; admission is *not* re-run.
+    pub fn round_from_events(&mut self, events: &[FleetEvent]) -> ServiceRound {
+        self.batch.clear();
+        self.batch.extend_from_slice(events);
+        self.solve_batch()
+    }
+
+    /// Replay a journal (one admitted-event list per round) on a fresh
+    /// service. With the same config this reproduces the original run's
+    /// [`ServiceRound`]s and fleet checkpoint bit-for-bit.
+    pub fn replay(config: ServiceConfig, journal: &[Vec<FleetEvent>]) -> Service {
+        let mut service = Service::new(config);
+        for round in journal {
+            service.round_from_events(round);
+        }
+        service
+    }
+
+    /// Capture a restorable snapshot of the current service state.
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            rounds_done: self.rounds_done,
+            initial: self.initial_checkpoint.clone(),
+            current: self.state.checkpoint_json(),
+            seed: self.config.seed,
+            workload: self.config.workload_name.clone(),
+        }
+    }
+
+    /// Resurrect a killed service from its latest snapshot plus the
+    /// full journal: rebuild from round 0, replay through the identical
+    /// pipeline, and *verify* that the replayed fleet at the snapshot's
+    /// round equals the checkpointed one bit-for-bit — a mismatch means
+    /// the snapshot or journal was tampered with or truncated, and
+    /// restore refuses rather than silently diverging. Journal rounds
+    /// past the snapshot (events admitted after it was written) are
+    /// replayed too, so no acknowledged work is lost.
+    pub fn restore(
+        config: ServiceConfig,
+        snap: &Snapshot,
+        journal: &[Vec<FleetEvent>],
+    ) -> Result<Service, Error> {
+        if snap.seed != config.seed || snap.workload != config.workload_name {
+            return Err(Error::SnapshotCorrupt(format!(
+                "snapshot is for workload '{}' seed {}, config resolves '{}' seed {}",
+                snap.workload, snap.seed, config.workload_name, config.seed
+            )));
+        }
+        if (journal.len() as u32) < snap.rounds_done {
+            return Err(Error::SnapshotCorrupt(format!(
+                "journal holds {} rounds but the snapshot was taken at round {}",
+                journal.len(),
+                snap.rounds_done
+            )));
+        }
+        let mut service = Service::new(config);
+        if service.initial_checkpoint.to_string() != snap.initial.to_string() {
+            return Err(Error::SnapshotCorrupt(
+                "initial checkpoint does not match the configured workload".into(),
+            ));
+        }
+        let (upto, tail) = journal.split_at(snap.rounds_done as usize);
+        for round in upto {
+            service.round_from_events(round);
+        }
+        if service.state.checkpoint_json().to_string() != snap.current.to_string() {
+            return Err(Error::SnapshotCorrupt(format!(
+                "replaying {} journal rounds did not reproduce the checkpointed fleet",
+                snap.rounds_done
+            )));
+        }
+        for round in tail {
+            service.round_from_events(round);
+        }
+        Ok(service)
+    }
+
+    /// Admitted events of round `k` (panics if `k` has not run).
+    pub fn journal_round(&self, k: u32) -> &[FleetEvent] {
+        let k = k as usize;
+        let start = if k == 0 { 0 } else { self.journal_bounds[k - 1] };
+        &self.journal_events[start..self.journal_bounds[k]]
+    }
+
+    /// The full admitted-event journal as JSON (same shape as
+    /// [`crate::coordinator::Coordinator::event_log_json`]).
+    pub fn journal_json(&self) -> Json {
+        let mut start = 0;
+        Json::arr(self.journal_bounds.iter().map(|&end| {
+            let round = Json::arr(self.journal_events[start..end].iter().map(|e| e.to_json()));
+            start = end;
+            round
+        }))
+    }
+
+    /// Deterministic decision log as JSON.
+    pub fn rounds_json(&self) -> Json {
+        Json::arr(self.rounds.iter().map(|r| r.to_json()))
+    }
+
+    /// Current fleet checkpoint (the bit-exact state witness).
+    pub fn checkpoint_json(&self) -> Json {
+        self.state.checkpoint_json()
+    }
+
+    /// Validate the drained batch against the live fleet, re-minting
+    /// arrival ids and shedding (with a per-reason count) anything that
+    /// could not apply cleanly. Two passes, both allocation-free:
+    ///
+    /// 1. per-event checks against the *pre-batch* fleet — unknown
+    ///    drift/departure ids, arrivals with an SLO no tier supports,
+    ///    out-of-range tiers/regions, non-finite payloads;
+    /// 2. intra-batch ordering hazards — duplicate departures and
+    ///    events referencing an app already departed earlier in the
+    ///    same batch (sequential application would panic on both).
+    fn admit(&mut self) {
+        let state = &self.state;
+        let shed = &mut self.metrics.ingest.shed;
+        let mut next_id = state.next_app_id();
+        let finite = |v: &crate::model::ResourceVec| v.0.iter().all(|x| x.is_finite() && *x >= 0.0);
+        self.batch.retain_mut(|ev| {
+            let verdict: Result<(), ShedReason> = match ev {
+                FleetEvent::DemandDrift { app, demand } => {
+                    if !finite(demand) {
+                        Err(ShedReason::Malformed)
+                    } else if state.index_of(*app).is_none() {
+                        Err(ShedReason::UnknownApp)
+                    } else {
+                        Ok(())
+                    }
+                }
+                FleetEvent::Arrival { app } => {
+                    if !finite(&app.demand) {
+                        Err(ShedReason::Malformed)
+                    } else if !state.tiers().iter().any(|t| t.supports_slo(app.slo)) {
+                        Err(ShedReason::UnknownTier)
+                    } else {
+                        // Re-mint the id from the authoritative counter:
+                        // producers race, so their intended ids are only
+                        // a hint.
+                        app.id = crate::model::AppId::from_usize(next_id);
+                        next_id += 1;
+                        Ok(())
+                    }
+                }
+                FleetEvent::Departure { app } => {
+                    if state.index_of(*app).is_none() {
+                        Err(ShedReason::UnknownApp)
+                    } else {
+                        Ok(())
+                    }
+                }
+                FleetEvent::TierCapacityChange { tier, factor } => {
+                    if tier.idx() >= state.tiers().len() {
+                        Err(ShedReason::UnknownTier)
+                    } else if !factor.is_finite() || *factor <= 0.0 {
+                        Err(ShedReason::Malformed)
+                    } else {
+                        Ok(())
+                    }
+                }
+                FleetEvent::RegionOutage { region } => {
+                    if state.tiers().iter().any(|t| t.regions.contains(*region)) {
+                        Ok(())
+                    } else {
+                        Err(ShedReason::UnknownRegion)
+                    }
+                }
+            };
+            match verdict {
+                Ok(()) => true,
+                Err(reason) => {
+                    shed.count(reason);
+                    false
+                }
+            }
+        });
+
+        // Pass 2: drop events that reference an app departed earlier in
+        // this same batch (stable in-place compaction, no allocation).
+        let mut kept = 0;
+        for i in 0..self.batch.len() {
+            let id = match &self.batch[i] {
+                FleetEvent::DemandDrift { app, .. } | FleetEvent::Departure { app } => Some(*app),
+                _ => None,
+            };
+            let departed_earlier = id.is_some_and(|id| {
+                self.batch[..kept]
+                    .iter()
+                    .any(|e| matches!(e, FleetEvent::Departure { app } if *app == id))
+            });
+            if departed_earlier {
+                self.metrics.ingest.shed.count(ShedReason::UnknownApp);
+            } else {
+                self.batch.swap(kept, i);
+                kept += 1;
+            }
+        }
+        self.batch.truncate(kept);
+    }
+
+    /// Journal the admitted batch and run it through the engine —
+    /// fast path when eligible, full pipeline otherwise. The round
+    /// record mirrors `Coordinator::round_once`'s accounting on the
+    /// full path; the fast path records moves only (no report exists).
+    fn solve_batch(&mut self) -> ServiceRound {
+        let round = self.rounds_done;
+        let n_events = self.batch.len();
+        self.journal_events.extend_from_slice(&self.batch);
+        self.journal_bounds.push(self.journal_events.len());
+
+        let record = match self.engine.apply_events(
+            &mut self.state,
+            &self.batch,
+            &self.solver_cfg,
+            round,
+        ) {
+            Some(moves) => {
+                self.metrics.ingest.fast_rounds += 1;
+                self.metrics.moves.push(moves as f64);
+                self.metrics.events.push(n_events as f64);
+                ServiceRound {
+                    round,
+                    n_events: n_events as u32,
+                    fast_path: true,
+                    moves: moves as u32,
+                    score_bits: NO_SCORE,
+                }
+            }
+            None => {
+                self.state.apply_all_into(&self.batch, &mut self.delta);
+                let (report, moves) = self.engine.round(
+                    &mut self.state,
+                    &self.batch,
+                    &self.delta,
+                    &self.solver_cfg,
+                    &self.latency,
+                    round,
+                );
+                self.metrics.ingest.full_rounds += 1;
+                let worst = worst_imbalance(&report.projected_utilization, BALANCED_TARGET);
+                if count_breach_tiers(&report.initial_utilization) > 0 {
+                    self.metrics.breach_rounds += 1;
+                }
+                let smape = self.engine.last_smape();
+                if smape.is_finite() {
+                    self.metrics.forecast_smape.push(smape);
+                }
+                let (coop_rounds, coop_rejects) = coop_telemetry(&report);
+                self.metrics.coop_rounds.push(coop_rounds as f64);
+                self.metrics.coop_rejects.push(coop_rejects.total() as f64);
+                self.metrics.avoid_edges.push(self.engine.avoid_edge_count() as f64);
+                self.metrics.escalations += self.engine.last_escalations();
+                self.engine.take_escalations();
+                self.metrics.imbalance.push(worst);
+                self.metrics.latency_p99.push(report.p99_latency_ms);
+                self.metrics.pipeline_ms.push(report.pipeline_ms);
+                self.metrics.collect_ms.push(report.collect_ms);
+                self.metrics.moves.push(moves.len() as f64);
+                self.metrics.events.push(n_events as f64);
+                ServiceRound {
+                    round,
+                    n_events: n_events as u32,
+                    fast_path: false,
+                    moves: moves.len() as u32,
+                    score_bits: report.solution.score.to_bits(),
+                }
+            }
+        };
+        self.metrics.rounds += 1;
+        self.rounds.push(record);
+        self.rounds_done += 1;
+        record
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{AppId, ResourceVec};
+    use std::time::Duration;
+
+    fn test_config() -> ServiceConfig {
+        ServiceConfig::builder()
+            .workload("small")
+            .events("churn")
+            .timeout(Duration::from_millis(20))
+            .batch_budget(Duration::from_millis(1))
+            .build()
+            .unwrap()
+    }
+
+    fn drift(id: usize, cpu: f64) -> FleetEvent {
+        FleetEvent::DemandDrift {
+            app: AppId::from_usize(id),
+            demand: ResourceVec::new(cpu, 1.0, 1.0),
+        }
+    }
+
+    #[test]
+    fn admission_sheds_with_typed_reasons_and_clean_events_pass() {
+        let mut s = Service::new(test_config());
+        let n_apps = s.fleet().apps().len();
+        let h = s.handle();
+        assert!(h.submit(drift(0, 2.5)));
+        assert!(h.submit(drift(n_apps + 50, 1.0))); // unknown app
+        assert!(h.submit(drift(1, f64::NAN))); // malformed
+        assert!(h.submit(FleetEvent::RegionOutage { region: crate::model::RegionId(999) }));
+        let rec = s.ingest_round().expect("events were queued");
+        assert_eq!(rec.n_events, 1, "only the clean drift survives admission");
+        let shed = &s.metrics.ingest.shed;
+        assert_eq!(shed.unknown_app, 1);
+        assert_eq!(shed.malformed, 1);
+        assert_eq!(shed.unknown_region, 1);
+        assert_eq!(s.journal_round(0).len(), 1, "journal holds only admitted events");
+    }
+
+    #[test]
+    fn duplicate_departures_in_one_batch_do_not_panic() {
+        let mut s = Service::new(test_config());
+        let h = s.handle();
+        assert!(h.submit(FleetEvent::Departure { app: AppId::from_usize(2) }));
+        assert!(h.submit(FleetEvent::Departure { app: AppId::from_usize(2) }));
+        assert!(h.submit(drift(2, 3.0))); // drift after its own departure
+        let rec = s.ingest_round().unwrap();
+        assert_eq!(rec.n_events, 1, "one departure survives");
+        assert_eq!(s.metrics.ingest.shed.unknown_app, 2);
+    }
+
+    #[test]
+    fn arrival_ids_are_reminted_from_the_authoritative_counter() {
+        let mut s = Service::new(test_config());
+        let next = s.fleet().next_app_id();
+        let mut app = s.fleet().apps()[0].clone();
+        app.id = AppId::from_usize(7777); // producer's id is only a hint
+        app.name = "newcomer".into();
+        let h = s.handle();
+        assert!(h.submit(FleetEvent::Arrival { app }));
+        s.ingest_round().unwrap();
+        assert_eq!(s.fleet().next_app_id(), next + 1);
+        match &s.journal_round(0)[0] {
+            FleetEvent::Arrival { app } => assert_eq!(app.id.idx(), next),
+            other => panic!("expected arrival, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn idle_polls_are_counted_and_return_none() {
+        let mut s = Service::new(test_config());
+        assert!(s.ingest_round().is_none());
+        assert!(s.ingest_round().is_none());
+        assert_eq!(s.metrics.ingest.idle_polls, 2);
+        assert_eq!(s.rounds_done(), 0);
+    }
+
+    #[test]
+    fn journal_replay_reproduces_rounds_and_checkpoint_bit_for_bit() {
+        let mut live = Service::new(test_config());
+        let h = live.handle();
+        let mut producer = ScenarioProducer::new(
+            live.config().scenario.clone(),
+            FleetState::new(
+                live.fleet().apps().to_vec(),
+                live.fleet().tiers().to_vec(),
+                live.fleet().assignment().clone(),
+            ),
+        );
+        for _ in 0..6 {
+            producer.run(&h, 1);
+            live.ingest_round();
+        }
+        assert!(live.rounds_done() > 0, "churn must produce at least one round");
+
+        let journal: Vec<Vec<FleetEvent>> =
+            (0..live.rounds_done()).map(|k| live.journal_round(k).to_vec()).collect();
+        let replayed = Service::replay(test_config(), &journal);
+        assert_eq!(replayed.rounds, live.rounds, "deterministic records match");
+        assert_eq!(
+            replayed.checkpoint_json().to_string(),
+            live.checkpoint_json().to_string(),
+            "fleet checkpoints match bit-for-bit"
+        );
+        assert_eq!(replayed.metrics.ingest.accepted, 0, "replay skips ingest accounting");
+    }
+
+    #[test]
+    fn snapshot_restore_is_equivalent_and_tamper_evident() {
+        let mut live = Service::new(test_config());
+        let h = live.handle();
+        for k in 0..4u32 {
+            h.submit(drift(k as usize % 3, 1.5 + k as f64 * 0.25));
+            live.ingest_round();
+        }
+        let snap = live.snapshot();
+        assert_eq!(snap.rounds_done, 4);
+        // One more round lands after the snapshot was written.
+        h.submit(drift(1, 9.0));
+        live.ingest_round();
+
+        let journal: Vec<Vec<FleetEvent>> =
+            (0..live.rounds_done()).map(|k| live.journal_round(k).to_vec()).collect();
+        let restored = Service::restore(test_config(), &snap, &journal).unwrap();
+        assert_eq!(restored.rounds, live.rounds);
+        assert_eq!(
+            restored.checkpoint_json().to_string(),
+            live.checkpoint_json().to_string()
+        );
+
+        // Tampering with the journal is detected, not silently adopted.
+        let mut tampered = journal.clone();
+        tampered[1] = vec![drift(0, 99.0)];
+        let err = Service::restore(test_config(), &snap, &tampered).unwrap_err();
+        assert!(matches!(err, Error::SnapshotCorrupt(_)), "{err}");
+
+        // A journal shorter than the snapshot offset is rejected.
+        let err = Service::restore(test_config(), &snap, &journal[..2]).unwrap_err();
+        assert!(matches!(err, Error::SnapshotCorrupt(_)), "{err}");
+    }
+
+    #[test]
+    fn wrong_workload_or_seed_is_rejected_before_replay() {
+        let mut live = Service::new(test_config());
+        let h = live.handle();
+        h.submit(drift(0, 2.0));
+        live.ingest_round();
+        let snap = live.snapshot();
+        let other = ServiceConfig::builder()
+            .workload("small")
+            .events("churn")
+            .seed(43)
+            .build()
+            .unwrap();
+        let err = Service::restore(other, &snap, &[]).unwrap_err();
+        assert!(matches!(err, Error::SnapshotCorrupt(_)));
+        assert!(err.to_string().contains("seed"), "{err}");
+    }
+}

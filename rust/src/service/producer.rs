@@ -1,0 +1,182 @@
+//! Producer-side ingest: the handle producer threads use to submit
+//! events under the configured backpressure policy, and a
+//! scenario-backed producer that turns the synthetic event generators
+//! into just another client of the queue.
+//!
+//! The scenario generators used to be wired directly into the
+//! coordinator's round loop; with the ingest plane they become one
+//! producer among many — anything that can obtain an [`IngestHandle`]
+//! (a scenario thread, a network frontend, a test) feeds the same
+//! queue, and the service's admission pass treats all of them
+//! identically.
+
+use crate::coordinator::FleetState;
+use crate::model::FleetEvent;
+use crate::service::config::Backpressure;
+use crate::service::queue::IngestQueue;
+use crate::workload::{ScenarioConfig, ScenarioGen};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Cloneable producer-side handle to a service's ingest queue.
+#[derive(Clone)]
+pub struct IngestHandle {
+    pub(crate) queue: Arc<IngestQueue>,
+    pub(crate) shed_queue_full: Arc<AtomicU64>,
+    pub(crate) policy: Backpressure,
+    pub(crate) stop: Arc<AtomicBool>,
+}
+
+impl IngestHandle {
+    /// Submit one event. Returns `true` if the event was enqueued.
+    ///
+    /// Under [`Backpressure::Shed`] a full queue drops the event and
+    /// counts it (`shed.queue_full` in the service metrics). Under
+    /// [`Backpressure::Block`] the call retries — yielding between
+    /// attempts — until the consumer frees a slot or the service stops.
+    pub fn submit(&self, event: FleetEvent) -> bool {
+        match self.policy {
+            Backpressure::Shed => match self.queue.try_push(event) {
+                Ok(()) => true,
+                Err(_dropped) => {
+                    self.shed_queue_full.fetch_add(1, Ordering::Relaxed);
+                    false
+                }
+            },
+            Backpressure::Block => {
+                let mut ev = event;
+                loop {
+                    match self.queue.try_push(ev) {
+                        Ok(()) => return true,
+                        Err(back) => {
+                            if self.stop.load(Ordering::Relaxed) {
+                                return false; // service shut down; don't spin forever
+                            }
+                            ev = back;
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// True once the owning service has been told to stop; producer
+    /// threads should exit their loops.
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+
+    /// Current queue occupancy (approximate under concurrency).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+/// A scenario generator packaged as an ingest producer. It keeps a
+/// *shadow* copy of the fleet so it can mint plausible arrivals and
+/// drifts without touching the live service state — the authoritative
+/// ids are re-minted by the service's admission pass anyway.
+pub struct ScenarioProducer {
+    gen: ScenarioGen,
+    shadow: FleetState,
+    round: u32,
+}
+
+impl ScenarioProducer {
+    pub fn new(config: ScenarioConfig, shadow: FleetState) -> Self {
+        Self { gen: ScenarioGen::new(config), shadow, round: 0 }
+    }
+
+    /// Generate the next round's worth of events, advancing the shadow
+    /// fleet so later rounds stay consistent with what was produced.
+    pub fn next_batch(&mut self) -> Vec<FleetEvent> {
+        let events = self.gen.events_for_round(
+            self.round,
+            self.shadow.apps(),
+            self.shadow.tiers(),
+            self.shadow.next_app_id(),
+        );
+        self.shadow.apply_all(&events);
+        self.round += 1;
+        events
+    }
+
+    /// Feed `rounds` batches through the handle; returns the number of
+    /// events accepted by the queue. Stops early if the service stops.
+    pub fn run(&mut self, handle: &IngestHandle, rounds: u32) -> u64 {
+        let mut accepted = 0;
+        for _ in 0..rounds {
+            if handle.stopped() {
+                break;
+            }
+            for ev in self.next_batch() {
+                if handle.submit(ev) {
+                    accepted += 1;
+                }
+            }
+        }
+        accepted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{AppId, ResourceVec};
+    use crate::workload::{generate, WorkloadSpec};
+
+    fn drift(id: usize) -> FleetEvent {
+        FleetEvent::DemandDrift {
+            app: AppId::from_usize(id),
+            demand: ResourceVec::new(1.0, 1.0, 1.0),
+        }
+    }
+
+    fn handle(capacity: usize, policy: Backpressure) -> IngestHandle {
+        IngestHandle {
+            queue: Arc::new(IngestQueue::with_capacity(capacity)),
+            shed_queue_full: Arc::new(AtomicU64::new(0)),
+            policy,
+            stop: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    #[test]
+    fn shed_policy_counts_drops_on_a_full_queue() {
+        let h = handle(2, Backpressure::Shed);
+        assert!(h.submit(drift(0)));
+        assert!(h.submit(drift(1)));
+        assert!(!h.submit(drift(2)), "third submit sheds");
+        assert!(!h.submit(drift(3)));
+        assert_eq!(h.shed_queue_full.load(Ordering::Relaxed), 2);
+        assert_eq!(h.queue_depth(), 2);
+    }
+
+    #[test]
+    fn block_policy_bails_out_on_stop() {
+        let h = handle(2, Backpressure::Block);
+        assert!(h.submit(drift(0)));
+        assert!(h.submit(drift(1)));
+        h.stop.store(true, Ordering::Relaxed);
+        assert!(!h.submit(drift(2)), "stop flag breaks the retry loop");
+        assert!(h.stopped());
+    }
+
+    #[test]
+    fn scenario_producer_generates_consistent_rounds() {
+        let bed = generate(&WorkloadSpec::small());
+        let shadow = FleetState::new(bed.apps.clone(), bed.tiers.clone(), bed.initial.clone());
+        let cfg = ScenarioConfig { drift_fraction: 1.0, ..ScenarioConfig::by_name("churn").unwrap() };
+        let mut producer = ScenarioProducer::new(cfg, shadow);
+        let h = handle(4096, Backpressure::Shed);
+        let accepted = producer.run(&h, 5);
+        assert!(accepted > 0, "churn at full drift fraction must emit events");
+        assert_eq!(h.shed_queue_full.load(Ordering::Relaxed), 0);
+        let mut drained = 0;
+        while h.queue.try_pop().is_some() {
+            drained += 1;
+        }
+        assert_eq!(drained as u64, accepted);
+    }
+}

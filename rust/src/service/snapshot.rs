@@ -1,0 +1,196 @@
+//! Durable service state: a JSONL event journal plus periodic snapshot
+//! documents, written so that a killed `serve --ingest` process resumes
+//! from the latest snapshot and its journal replays bit-identically
+//! offline.
+//!
+//! A snapshot deliberately does *not* serialize the engine's internal
+//! state (problem registries, avoid-sets, forecast history): restore
+//! rebuilds the fleet from the journaled *initial* checkpoint and
+//! replays the journal through the identical pipeline, which re-derives
+//! every internal structure by construction. The snapshot's round-K
+//! fleet checkpoint is carried purely as an integrity witness — if the
+//! catch-up replay does not land exactly on it, the journal or snapshot
+//! was tampered with or truncated, and restore fails with
+//! [`crate::service::Error::SnapshotCorrupt`] instead of silently
+//! diverging.
+
+use crate::model::FleetEvent;
+use crate::util::json::Json;
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Snapshot document schema (bumped together with the metrics schema).
+pub const SNAPSHOT_SCHEMA: u32 = 2;
+
+/// A point-in-time capture of a running service.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// Rounds journaled (and applied) before this snapshot was taken.
+    pub rounds_done: u32,
+    /// Fleet checkpoint at round 0, before any journaled event.
+    pub initial: Json,
+    /// Fleet checkpoint at `rounds_done` — the replay integrity witness.
+    pub current: Json,
+    /// Workload identity, so a restore against the wrong run is caught
+    /// before any replay work happens.
+    pub seed: u64,
+    pub workload: String,
+}
+
+impl Snapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("service_snapshot")),
+            ("schema", Json::num(SNAPSHOT_SCHEMA as f64)),
+            ("rounds_done", Json::num(self.rounds_done as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("workload", Json::str(&self.workload)),
+            ("initial", self.initial.clone()),
+            ("current", self.current.clone()),
+        ])
+    }
+
+    /// Parse a snapshot document; the `Err` carries what was malformed.
+    pub fn from_json(j: &Json) -> Result<Snapshot, String> {
+        if j.get("kind").as_str() != Some("service_snapshot") {
+            return Err("not a service_snapshot document".into());
+        }
+        let schema = j.get("schema").as_u64().ok_or("missing schema")?;
+        if schema != SNAPSHOT_SCHEMA as u64 {
+            return Err(format!("unsupported snapshot schema {schema}"));
+        }
+        let checkpoint = |key: &str| -> Result<Json, String> {
+            match j.get(key) {
+                Json::Null => Err(format!("missing {key} checkpoint")),
+                doc => Ok(doc.clone()),
+            }
+        };
+        Ok(Snapshot {
+            rounds_done: j.get("rounds_done").as_u64().ok_or("missing rounds_done")? as u32,
+            seed: j.get("seed").as_u64().ok_or("missing seed")?,
+            workload: j.get("workload").as_str().ok_or("missing workload")?.to_string(),
+            initial: checkpoint("initial")?,
+            current: checkpoint("current")?,
+        })
+    }
+
+    /// Atomically persist: write to `<path>.tmp`, then rename over the
+    /// target so a crash mid-write never leaves a torn snapshot.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        let tmp = path.with_extension("tmp");
+        fs::write(&tmp, self.to_json().pretty())?;
+        fs::rename(&tmp, path)
+    }
+
+    pub fn load(path: &Path) -> std::io::Result<Result<Snapshot, String>> {
+        let text = fs::read_to_string(path)?;
+        Ok(match Json::parse(&text) {
+            Ok(j) => Snapshot::from_json(&j),
+            Err(e) => Err(format!("unparseable JSON in {}: {e}", path.display())),
+        })
+    }
+}
+
+/// Append one round's admitted events to a JSONL journal: one JSON
+/// array per line, fsync-free (the snapshot's integrity witness catches
+/// any torn tail on restore).
+pub fn append_journal_round(file: &mut fs::File, events: &[FleetEvent]) -> std::io::Result<()> {
+    let line = Json::arr(events.iter().map(|e| e.to_json())).to_string();
+    writeln!(file, "{line}")
+}
+
+/// Load a JSONL journal back into per-round event lists. A truncated or
+/// unparseable *final* line (torn by a crash mid-append) is dropped;
+/// corruption anywhere earlier is an error.
+pub fn load_journal(path: &Path) -> std::io::Result<Result<Vec<Vec<FleetEvent>>, String>> {
+    let text = fs::read_to_string(path)?;
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    let mut rounds = Vec::with_capacity(lines.len());
+    for (i, line) in lines.iter().enumerate() {
+        let parsed = Json::parse(line).ok().and_then(|j| {
+            j.as_arr()?.iter().map(FleetEvent::from_json).collect::<Option<Vec<_>>>()
+        });
+        match parsed {
+            Some(events) => rounds.push(events),
+            None if i + 1 == lines.len() => break, // torn tail from a crash
+            None => return Ok(Err(format!("corrupt journal line {}", i + 1))),
+        }
+    }
+    Ok(Ok(rounds))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{AppId, ResourceVec};
+
+    fn events() -> Vec<FleetEvent> {
+        vec![
+            FleetEvent::DemandDrift {
+                app: AppId::from_usize(0),
+                demand: ResourceVec::new(1.25, 2.0, 3.0),
+            },
+            FleetEvent::Departure { app: AppId::from_usize(3) },
+        ]
+    }
+
+    #[test]
+    fn snapshot_document_roundtrips() {
+        let snap = Snapshot {
+            rounds_done: 5,
+            initial: Json::obj(vec![("x", Json::num(1.0))]),
+            current: Json::obj(vec![("x", Json::num(2.0))]),
+            seed: 42,
+            workload: "paper".into(),
+        };
+        let back = Snapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back.rounds_done, 5);
+        assert_eq!(back.seed, 42);
+        assert_eq!(back.workload, "paper");
+        assert_eq!(back.initial.to_string(), snap.initial.to_string());
+        assert_eq!(back.current.to_string(), snap.current.to_string());
+    }
+
+    #[test]
+    fn malformed_documents_are_rejected_with_a_reason() {
+        assert!(Snapshot::from_json(&Json::obj(vec![("kind", Json::str("other"))]))
+            .unwrap_err()
+            .contains("not a service_snapshot"));
+        let wrong_schema = Json::obj(vec![
+            ("kind", Json::str("service_snapshot")),
+            ("schema", Json::num(1.0)),
+        ]);
+        assert!(Snapshot::from_json(&wrong_schema).unwrap_err().contains("schema 1"));
+    }
+
+    #[test]
+    fn journal_roundtrips_and_tolerates_a_torn_tail() {
+        let dir = std::env::temp_dir().join(format!("sptlb_journal_{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("journal.jsonl");
+        {
+            let mut f = fs::File::create(&path).unwrap();
+            append_journal_round(&mut f, &events()).unwrap();
+            append_journal_round(&mut f, &[]).unwrap();
+            // Simulate a crash mid-append: a torn, unparseable tail.
+            write!(f, "[{{\"kind\":\"demand_dr").unwrap();
+        }
+        let rounds = load_journal(&path).unwrap().unwrap();
+        assert_eq!(rounds.len(), 2, "torn tail dropped");
+        assert_eq!(rounds[0], events());
+        assert!(rounds[1].is_empty());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corruption_before_the_tail_is_an_error() {
+        let dir = std::env::temp_dir().join(format!("sptlb_journal_bad_{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("journal.jsonl");
+        fs::write(&path, "garbage\n[]\n").unwrap();
+        let err = load_journal(&path).unwrap().unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -319,8 +319,24 @@ impl ScenarioGen {
         tiers: &[Tier],
         next_app_id: usize,
     ) -> Vec<FleetEvent> {
-        let cfg = self.config.clone();
         let mut events = Vec::new();
+        self.events_for_round_into(round, apps, tiers, next_app_id, &mut events);
+        events
+    }
+
+    /// [`ScenarioGen::events_for_round`] into a caller-owned buffer
+    /// (cleared first), so a long-running producer loop reuses one
+    /// allocation across rounds instead of minting a fresh `Vec` each.
+    pub fn events_for_round_into(
+        &mut self,
+        round: u32,
+        apps: &[App],
+        tiers: &[Tier],
+        next_app_id: usize,
+        events: &mut Vec<FleetEvent>,
+    ) {
+        let cfg = self.config.clone();
+        events.clear();
 
         // -- deterministic demand wave (diurnal/burst) ------------------
         // Replaces the sigma-drift block when active; optional lognormal
@@ -401,8 +417,6 @@ impl ScenarioGen {
                 },
             });
         }
-
-        events
     }
 
     /// A region every containing tier can survive losing (i.e. no tier

@@ -14,14 +14,18 @@ use sptlb::coordinator::{
     MultiRegionConfig, MultiRegionCoordinator, RegionExecution,
 };
 use sptlb::hierarchy::variants::Variant;
-use sptlb::model::{FleetEvent, RegionId};
+use sptlb::model::{AppId, FleetEvent, RegionId, ResourceVec};
 use sptlb::rebalancer::ParallelConfig;
+use sptlb::service::{
+    append_journal_round, load_journal, ScenarioProducer, Service, ServiceConfig, Snapshot,
+};
 use sptlb::sptlb::{BalanceReport, SptlbConfig};
 use sptlb::util::propcheck::{forall, Check};
 use sptlb::workload::{
     generate, generate_multiregion, MultiRegionScenario, MultiRegionSpec, ScenarioConfig,
     WorkloadSpec,
 };
+use std::fs;
 use std::time::Duration;
 
 fn config(
@@ -314,6 +318,69 @@ fn slot_recycling_replay_is_worker_invariant_at_every_region_count() {
             Check::pass()
         },
     );
+}
+
+#[test]
+fn kill_at_round_k_snapshot_restore_is_equivalent_through_disk() {
+    // ISSUE 8 acceptance: a `serve --ingest` process killed at round K
+    // resumes from its latest on-disk snapshot plus journal and lands on
+    // the exact fleet the live run reached — including the journal tail
+    // written after the snapshot. This drives the real disk formats
+    // (`snapshot.json` + `journal.jsonl`), not in-memory shortcuts.
+    let cfg = || {
+        ServiceConfig::builder()
+            .workload("small")
+            .events("churn")
+            .variant("no_cnst")
+            .timeout(Duration::from_secs(20))
+            .batch_budget(Duration::from_millis(1))
+            .build()
+            .unwrap()
+    };
+    let mut live = Service::new(cfg());
+    let h = live.handle();
+    let mut producer = ScenarioProducer::new(
+        live.config().scenario.clone(),
+        FleetState::new(
+            live.fleet().apps().to_vec(),
+            live.fleet().tiers().to_vec(),
+            live.fleet().assignment().clone(),
+        ),
+    );
+    let dir = std::env::temp_dir().join(format!("sptlb_kill_{}", std::process::id()));
+    fs::create_dir_all(&dir).unwrap();
+    let journal_path = dir.join("journal.jsonl");
+    let snap_path = dir.join("snapshot.json");
+    let mut jf = fs::File::create(&journal_path).unwrap();
+    for k in 0..8u32 {
+        // One deterministic drift per loop guarantees every iteration
+        // produces a round; the scenario producer layers churn on top.
+        h.submit(FleetEvent::DemandDrift {
+            app: AppId::from_usize(k as usize % 3),
+            demand: ResourceVec::new(1.0 + k as f64 * 0.3, 1.0, 1.0),
+        });
+        producer.run(&h, 1);
+        live.ingest_round().expect("at least the drift arrives");
+        append_journal_round(&mut jf, live.journal_round(live.rounds_done() - 1)).unwrap();
+        if k == 4 {
+            live.snapshot().write(&snap_path).unwrap();
+        }
+    }
+    drop(jf); // the "kill": no clean shutdown, the journal just ends
+
+    let snap = Snapshot::load(&snap_path).unwrap().unwrap();
+    assert_eq!(snap.rounds_done, 5);
+    let journal = load_journal(&journal_path).unwrap().unwrap();
+    assert_eq!(journal.len(), 8, "three rounds landed after the snapshot");
+    let restored = Service::restore(cfg(), &snap, &journal).unwrap();
+    assert_eq!(restored.rounds_done(), live.rounds_done());
+    assert_eq!(restored.rounds, live.rounds, "decision records match");
+    assert_eq!(
+        restored.checkpoint_json().to_string(),
+        live.checkpoint_json().to_string(),
+        "restored fleet equals the killed live fleet bit-for-bit"
+    );
+    fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]
