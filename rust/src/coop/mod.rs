@@ -35,6 +35,7 @@
 //! operation sequence yields bit-identical expiry/escalation sequences —
 //! the property the fleet/multiregion equivalence suites stand on.
 
+use crate::obs;
 use crate::util::json::Json;
 use crate::util::timer::Deadline;
 use std::collections::BTreeMap;
@@ -311,6 +312,23 @@ pub struct NegotiationOutcome {
     pub fully_accepted: bool,
 }
 
+/// Decision-provenance identity of one proposal item, as reported by
+/// [`CoopLayer::describe`] so the generic [`negotiate`] driver can emit
+/// trace events without knowing the layer's item type. `from`/`to` are
+/// tiers for [`obs::Origin::Protocol`] items and regions for
+/// [`obs::Origin::Global`] ones.
+#[derive(Debug, Clone, Copy)]
+pub struct DecisionKey {
+    /// Subject app id.
+    pub app: u32,
+    /// Source tier/region (-1 when not applicable).
+    pub from: i64,
+    /// Destination tier/region (-1 when not applicable).
+    pub to: i64,
+    /// Which scheduler layer this item belongs to.
+    pub origin: obs::Origin,
+}
+
 /// One scheduler layer's bindings into the §3.4 loop. The driver owns
 /// the round structure (budget split, accept test, telemetry); the layer
 /// owns the domain (how to propose, who vets, what an avoid edge is).
@@ -347,6 +365,38 @@ pub trait CoopLayer {
         vetted: &[(Self::Item, Verdict)],
         accepted: bool,
     );
+
+    /// Decision-provenance identity of one item, for trace emission by
+    /// the driver. Layers that return `None` (the default) negotiate
+    /// untraced.
+    fn describe(&self, _item: &Self::Item) -> Option<DecisionKey> {
+        None
+    }
+}
+
+/// Map a [`RejectReason`] onto the trace vocabulary plus its payload.
+fn obs_reason(reason: &RejectReason) -> (obs::Reason, f64) {
+    match reason {
+        RejectReason::Proximity { achievable_ms } => (obs::Reason::Proximity, *achievable_ms),
+        RejectReason::TransitionLatency { p99_ms } => (obs::Reason::TransitionLatency, *p99_ms),
+        RejectReason::Packing => (obs::Reason::Packing, 0.0),
+        RejectReason::Capacity => (obs::Reason::Capacity, 0.0),
+        RejectReason::Routability => (obs::Reason::Routability, 0.0),
+    }
+}
+
+/// Emit one decision event for `key` at `stage` (helper for the driver's
+/// per-item provenance emission).
+fn emit_decision(key: DecisionKey, stage: obs::DecisionStage, reason: obs::Reason, detail: f64) {
+    obs::decision(obs::Decision {
+        stage,
+        origin: key.origin,
+        reason,
+        app: key.app,
+        from: key.from,
+        to: key.to,
+        detail,
+    });
 }
 
 /// Run the §3.4 negotiation loop: up to `max_rounds` rounds of propose →
@@ -364,10 +414,18 @@ pub fn negotiate<L: CoopLayer>(
         if deadline.expired() {
             break;
         }
+        obs::begin(obs::SpanKind::Negotiate);
         let round_deadline = Deadline::after(deadline.remaining().mul_f64(ROUND_BUDGET_FRACTION));
         let proposal = layer.propose(round, round_deadline);
         let items = layer.items(&proposal);
+        for item in &items {
+            if let Some(key) = layer.describe(item) {
+                emit_decision(key, obs::DecisionStage::Proposed, obs::Reason::None, 0.0);
+            }
+        }
+        obs::begin(obs::SpanKind::Vet);
         let verdicts = layer.vet(&proposal, &items);
+        obs::end(obs::SpanKind::Vet);
         debug_assert_eq!(items.len(), verdicts.len(), "one verdict per item");
         let vetted: Vec<(L::Item, Verdict)> = items.into_iter().zip(verdicts).collect();
 
@@ -378,8 +436,17 @@ pub fn negotiate<L: CoopLayer>(
                 Verdict::Accept => {}
                 Verdict::Reject(reason) | Verdict::RejectTransition(reason) => {
                     rejects.count(*reason);
+                    let key = layer.describe(item);
+                    if let Some(key) = key {
+                        let (r, detail) = obs_reason(reason);
+                        emit_decision(key, obs::DecisionStage::Vetted, r, detail);
+                    }
                     if layer.feed_back(item, verdict) {
                         avoids_added += 1;
+                        if let Some(key) = key {
+                            let (r, _) = obs_reason(reason);
+                            emit_decision(key, obs::DecisionStage::AvoidRecorded, r, 0.0);
+                        }
                     }
                 }
             }
@@ -393,6 +460,7 @@ pub fn negotiate<L: CoopLayer>(
             score: layer.score(&proposal),
         });
         layer.absorb(proposal, &vetted, accepted);
+        obs::end(obs::SpanKind::Negotiate);
         if accepted {
             outcome.fully_accepted = true;
             break;

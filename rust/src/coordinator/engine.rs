@@ -53,6 +53,7 @@ use crate::metadata::MetadataStore;
 use crate::metrics::{Collector, IncrementalCollector, SimulatedMonitor};
 use crate::model::{App, AppId, FleetEvent, Move, ResourceVec, TierId, TierMask, NUM_RESOURCES};
 use crate::network::LatencyMatrix;
+use crate::obs;
 use crate::rebalancer::local_search::{LocalSearch, LocalSearchConfig, SolveScratch};
 use crate::rebalancer::problem::Problem;
 use crate::rebalancer::scoring;
@@ -383,7 +384,9 @@ impl FleetEngine {
         // Forecast upkeep (shared preamble → bit-identical across modes):
         // histories advance from the event dirty-set, accuracy is scored,
         // and the horizon predictions for this round's solve come back.
+        obs::begin(obs::SpanKind::Forecast);
         let predicted = self.forecast_round(state, delta);
+        obs::end(obs::SpanKind::Forecast);
 
         let mut cfg = base.clone();
         cfg.seed = base.seed.wrapping_add(round as u64);
@@ -407,12 +410,15 @@ impl FleetEngine {
         harvest_registry(&mut self.avoids, &mut self.forbidden, &report.problem, state);
 
         // ---- decision execution: adopt by move, never by clone. ------
+        obs::begin(obs::SpanKind::Adopt);
         let moves = report.solution.moves(&report.problem);
         state.adopt(&moves);
         for m in &moves {
             self.adoption_dirty.insert(m.from);
             self.adoption_dirty.insert(m.to);
+            emit_adopted(m);
         }
+        obs::end(obs::SpanKind::Adopt);
         (report, moves)
     }
 
@@ -495,6 +501,7 @@ impl FleetEngine {
         scoring::refresh_tier_loads(p, &p.initial, &mut self.loads, dirty);
 
         // ---- warm solve into the scratch arena -----------------------
+        obs::begin(obs::SpanKind::Solve);
         let solver = LocalSearch::new(LocalSearchConfig {
             seed: base.seed.wrapping_add(round as u64),
             parallel: base.parallel,
@@ -502,8 +509,10 @@ impl FleetEngine {
         });
         let deadline = Deadline::after(base.timeout);
         solver.solve_warm_into(p, deadline, &self.loads, &mut self.solve_scratch);
+        obs::end(obs::SpanKind::Solve);
 
         // ---- decision execution: diff best vs incumbent, adopt -------
+        obs::begin(obs::SpanKind::Adopt);
         self.moves_scratch.clear();
         self.moves_scratch.reserve(p.max_moves);
         for (i, (&to, &from)) in
@@ -516,8 +525,10 @@ impl FleetEngine {
         for m in &self.moves_scratch {
             self.adoption_dirty.insert(m.from);
             self.adoption_dirty.insert(m.to);
+            emit_adopted(m);
         }
         state.adopt(&self.moves_scratch);
+        obs::end(obs::SpanKind::Adopt);
         Some(self.moves_scratch.len())
     }
 
@@ -530,6 +541,7 @@ impl FleetEngine {
         predicted: Option<&[ResourceVec]>,
     ) -> BalanceReport {
         let pipeline_sw = Stopwatch::start();
+        obs::begin(obs::SpanKind::Collect);
         let collect_sw = Stopwatch::start();
         let store = MetadataStore::from_apps(state.apps().to_vec()).expect("unique fleet ids");
         let mut collector =
@@ -537,6 +549,7 @@ impl FleetEngine {
         collector.samples_per_app = sptlb.config.samples_per_app;
         let col = collector.collect(state.tiers());
         let collect_ms = collect_sw.elapsed_ms();
+        obs::end(obs::SpanKind::Collect);
         self.last_scraped = state.n_apps();
 
         let apps: Vec<App> = state
@@ -607,9 +620,11 @@ impl FleetEngine {
         }
 
         // ---- stage 1: collection, dirty apps only --------------------
+        obs::begin(obs::SpanKind::Collect);
         let collect_sw = Stopwatch::start();
         let (collected, scraped) = self.collector.collect(&self.store, state.apps());
         let collect_ms = collect_sw.elapsed_ms();
+        obs::end(obs::SpanKind::Collect);
         self.last_scraped = scraped;
 
         // ---- stage 2: problem construction (in place) ----------------
@@ -676,9 +691,38 @@ impl FleetEngine {
         let aged = self.avoids.age();
         self.last_escalations = aged.escalated.len() as u32;
         self.escalations_pending = self.escalations_pending.saturating_add(self.last_escalations);
+        for (app, tier) in &aged.escalated {
+            obs::decision(obs::Decision {
+                stage: obs::DecisionStage::Escalated,
+                origin: obs::Origin::Engine,
+                reason: obs::Reason::None,
+                app: app.0,
+                from: tier.0 as i64,
+                to: -1,
+                detail: 0.0,
+            });
+        }
         self.forbidden.age();
         aged.expired.into_iter().map(|(app, _)| app).collect()
     }
+}
+
+/// Emit the adoption decision + migration-distance sample for one
+/// executed move (shared by the full round and the fast path).
+fn emit_adopted(m: &Move) {
+    obs::decision(obs::Decision {
+        stage: obs::DecisionStage::Adopted,
+        origin: obs::Origin::Engine,
+        reason: obs::Reason::None,
+        app: m.app.0,
+        from: m.from.0 as i64,
+        to: m.to.0 as i64,
+        detail: 0.0,
+    });
+    obs::sample(
+        obs::SampleKind::MigrationDistance,
+        (m.from.0 as i64 - m.to.0 as i64).unsigned_abs(),
+    );
 }
 
 /// Re-derive allowed sets for every app with active or just-expired avoid

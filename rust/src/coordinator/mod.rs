@@ -28,6 +28,7 @@ use crate::forecast::ForecastConfig;
 use crate::metrics::IngestStats;
 use crate::model::{App, Assignment, FleetEvent, ResourceVec, Tier};
 use crate::network::LatencyMatrix;
+use crate::obs::{self, FlightTrigger, ObsHub, SpanRecorder};
 use crate::sptlb::{BalanceReport, SptlbConfig};
 use crate::util::json::Json;
 use crate::util::stats::OnlineStats;
@@ -190,12 +191,53 @@ pub struct ServiceMetrics {
 
 /// Version tag of every metrics/decision-log JSON document this crate
 /// writes ([`ServiceMetrics`], [`MultiRegionMetrics`], `GAP_report.json`).
-/// Bumped to 2 with the service-runtime redesign (ingest/shed counters,
-/// flattened config surface) so downstream parsers can detect the shape.
-pub const METRICS_SCHEMA: u32 = 2;
+/// History: 1 = original flat shape; 2 = service-runtime redesign
+/// (ingest/shed counters, flattened config surface); 3 = observability
+/// (optional `obs` object with span/sample percentiles and the
+/// dropped-event counter when tracing is armed).
+pub const METRICS_SCHEMA: u32 = 3;
+
+/// A metrics document declared a `schema` this build does not understand
+/// (missing, non-integer, zero, or newer than [`METRICS_SCHEMA`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SchemaError {
+    /// The `schema` value found, if it was at least an integer.
+    pub found: Option<u64>,
+}
+
+impl std::fmt::Display for SchemaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.found {
+            Some(v) => write!(
+                f,
+                "unsupported metrics schema {v} (this build understands 1..={METRICS_SCHEMA})"
+            ),
+            None => write!(f, "metrics document has no integer `schema` field"),
+        }
+    }
+}
+
+impl std::error::Error for SchemaError {}
+
+/// Validate a parsed metrics document's `schema` field. Accepts every
+/// version this build can read (`1..=`[`METRICS_SCHEMA`]) and returns
+/// it; rejects missing/zero/newer tags with a typed [`SchemaError`] so
+/// callers fail loudly instead of misreading a shape they don't know.
+pub fn check_metrics_schema(doc: &Json) -> Result<u32, SchemaError> {
+    match doc.get("schema").as_u64() {
+        Some(v) if (1..=METRICS_SCHEMA as u64).contains(&v) => Ok(v as u32),
+        found => Err(SchemaError { found }),
+    }
+}
 
 impl ServiceMetrics {
     pub fn to_json(&self) -> Json {
+        self.to_json_with_obs(None)
+    }
+
+    /// Metrics JSON with an optional `obs` object folded in (the hub's
+    /// span/sample histogram summary — see [`ObsHub::metrics_json`]).
+    pub fn to_json_with_obs(&self, obs: Option<Json>) -> Json {
         let stat = |s: &OnlineStats| {
             Json::obj(vec![
                 ("mean", Json::num(s.mean())),
@@ -204,7 +246,7 @@ impl ServiceMetrics {
                 ("std", Json::num(s.std_dev())),
             ])
         };
-        Json::obj(vec![
+        let mut fields = vec![
             ("schema", Json::num(METRICS_SCHEMA as f64)),
             ("rounds", Json::num(self.rounds as f64)),
             ("ticks_skipped", Json::num(self.ticks_skipped as f64)),
@@ -221,7 +263,11 @@ impl ServiceMetrics {
             ("avoid_edges", stat(&self.avoid_edges)),
             ("escalations", Json::num(self.escalations as f64)),
             ("ingest", self.ingest.to_json()),
-        ])
+        ];
+        if let Some(o) = obs {
+            fields.push(("obs", o));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -260,6 +306,11 @@ pub struct Coordinator {
     /// Applied events per round — the replayable service journal.
     pub event_log: Vec<Vec<FleetEvent>>,
     pub metrics: ServiceMetrics,
+    /// Trace/flight-recorder hub (None unless `--trace` armed it).
+    hub: Option<ObsHub>,
+    /// The coordinator's span recorder, parked here between rounds and
+    /// installed into the running thread's slot for each round's scope.
+    obs: Option<SpanRecorder>,
 }
 
 impl Coordinator {
@@ -284,6 +335,56 @@ impl Coordinator {
             log: Vec::new(),
             event_log: Vec::new(),
             metrics: ServiceMetrics::default(),
+            hub: None,
+            obs: None,
+        }
+    }
+
+    /// Arm tracing: the coordinator records onto [`obs::GLOBAL_TRACK`]
+    /// and harvests into `hub` after every round.
+    pub fn attach_obs(&mut self, hub: ObsHub) {
+        self.obs = Some(hub.recorder(obs::GLOBAL_TRACK));
+        self.hub = Some(hub);
+    }
+
+    /// The attached hub, if tracing is armed.
+    pub fn obs_hub(&self) -> Option<&ObsHub> {
+        self.hub.as_ref()
+    }
+
+    /// Fire a flight-recorder trigger (dumps the last rounds' ring once
+    /// per trigger kind — see [`ObsHub::trigger`]).
+    pub fn obs_trigger(&mut self, trigger: FlightTrigger, note: &str) {
+        if let Some(hub) = self.hub.as_mut() {
+            hub.trigger(trigger, note);
+        }
+    }
+
+    /// Service metrics with the hub's `obs` summary folded in when
+    /// tracing is armed.
+    pub fn metrics_json(&self) -> Json {
+        self.metrics.to_json_with_obs(self.hub.as_ref().map(ObsHub::metrics_json))
+    }
+
+    /// Install the parked recorder into this thread's slot for the round
+    /// about to run (no-op when tracing is off).
+    fn obs_install_round(&mut self) {
+        if let Some(mut rec) = self.obs.take() {
+            rec.set_round(self.rounds_run);
+            let displaced = obs::swap(Some(rec));
+            debug_assert!(displaced.is_none(), "coordinator thread slot was free");
+        }
+    }
+
+    /// Uninstall the recorder, park it, and harvest the round's events
+    /// into the hub (flight ring + trace file + histograms).
+    fn obs_harvest_round(&mut self, round: u32) {
+        if let Some(rec) = obs::uninstall() {
+            self.obs = Some(rec);
+        }
+        if let (Some(hub), Some(rec)) = (self.hub.as_mut(), self.obs.as_mut()) {
+            hub.harvest(rec);
+            hub.commit_round(round);
         }
     }
 
@@ -324,6 +425,11 @@ impl Coordinator {
 
     fn round_once(&mut self, events: Vec<FleetEvent>) -> BalanceReport {
         let round = self.rounds_run;
+        let installed_here = self.obs.is_some();
+        if installed_here {
+            self.obs_install_round();
+        }
+        obs::begin(obs::SpanKind::GlobalRound);
         let sw = Stopwatch::start();
         let delta = self.state.apply_all(&events);
         let (report, moves) = self.engine.round(
@@ -400,6 +506,10 @@ impl Coordinator {
         self.log.push(record);
         self.event_log.push(events);
         self.rounds_run += 1;
+        obs::end(obs::SpanKind::GlobalRound);
+        if installed_here {
+            self.obs_harvest_round(round);
+        }
         report
     }
 
@@ -598,16 +708,66 @@ mod tests {
 
     #[test]
     fn metrics_json_carries_schema_version_and_ingest_counters() {
-        // Round-trip pin for the schema-2 shape: downstream parsers key
+        // Round-trip pin for the schema-3 shape: downstream parsers key
         // on the version field to detect the redesigned document.
         let mut c = coordinator(|_| {});
         c.run(1);
         c.metrics.ingest.shed.unknown_app = 3;
         let j = Json::parse(&c.metrics.to_json().to_string()).unwrap();
         assert_eq!(j.get("schema").as_u64(), Some(super::METRICS_SCHEMA as u64));
-        assert_eq!(j.get("schema").as_u64(), Some(2));
+        assert_eq!(j.get("schema").as_u64(), Some(3));
         assert_eq!(j.get("ingest").get("shed").get("unknown_app").as_u64(), Some(3));
         assert_eq!(j.get("ingest").get("fast_rounds").as_u64(), Some(0));
+        // Without an attached hub the `obs` object is absent.
+        assert!(j.get("obs").as_obj().is_none());
+        assert_eq!(check_metrics_schema(&j), Ok(3));
+    }
+
+    #[test]
+    fn schema_validation_rejects_unknown_documents() {
+        // Every version this build can read round-trips through the
+        // checker; missing/zero/future tags fail with the typed error.
+        for v in 1..=METRICS_SCHEMA {
+            let doc = Json::parse(&format!("{{\"schema\": {v}}}")).unwrap();
+            assert_eq!(check_metrics_schema(&doc), Ok(v));
+        }
+        let future = Json::parse(&format!("{{\"schema\": {}}}", METRICS_SCHEMA + 1)).unwrap();
+        let err = check_metrics_schema(&future).unwrap_err();
+        assert_eq!(err.found, Some(METRICS_SCHEMA as u64 + 1));
+        assert!(err.to_string().contains("unsupported metrics schema"));
+        let missing = Json::parse("{\"rounds\": 5}").unwrap();
+        let err = check_metrics_schema(&missing).unwrap_err();
+        assert_eq!(err.found, None);
+        let zero = Json::parse("{\"schema\": 0}").unwrap();
+        assert!(check_metrics_schema(&zero).is_err());
+    }
+
+    #[test]
+    fn traced_coordinator_folds_obs_into_metrics_and_stays_deterministic() {
+        use std::time::Duration;
+        let mut plain = coordinator(|cfg| cfg.sptlb.timeout = Duration::from_secs(2));
+        let mut traced = coordinator(|cfg| cfg.sptlb.timeout = Duration::from_secs(2));
+        traced.attach_obs(ObsHub::new(obs::TraceLevel::Decisions, None).unwrap());
+        plain.run(4);
+        let journal = plain.event_log.clone();
+        traced.run_events(&journal);
+        // Deterministic decision fields only — `RoundRecord::eq` is
+        // bit-exact and includes wall-clock stage timings, which two
+        // separate runs legitimately differ on.
+        assert_eq!(plain.log.len(), traced.log.len());
+        for (a, b) in plain.log.iter().zip(&traced.log) {
+            assert_eq!(a.score.to_bits(), b.score.to_bits(), "tracing perturbed round {}", a.round);
+            assert_eq!(a.moves_executed, b.moves_executed);
+            assert_eq!(a.n_events, b.n_events);
+            assert_eq!(a.avoid_edges, b.avoid_edges);
+            assert_eq!(a.escalations, b.escalations);
+        }
+        let j = Json::parse(&traced.metrics_json().to_string()).unwrap();
+        assert_eq!(check_metrics_schema(&j), Ok(3));
+        let o = j.get("obs");
+        assert_eq!(o.get("level").as_str(), Some("decisions"));
+        assert!(o.get("spans").get("global_round").get("count").as_u64().unwrap_or(0) >= 4);
+        assert!(o.get("dropped_events").as_u64().is_some());
     }
 
     #[test]

@@ -31,7 +31,7 @@
 //! [`MultiRegionCoordinator::run_events`] replays a journal with the
 //! global layer off and reproduces every regional decision bit-for-bit.
 
-use crate::coop::{negotiate, CoopLayer, RejectReason, Verdict};
+use crate::coop::{negotiate, CoopLayer, DecisionKey, RejectReason, Verdict};
 use crate::coordinator::fleet::FleetState;
 use crate::coordinator::{
     coop_telemetry, count_breach_tiers, ticks_skipped_for, EngineMode, FleetEngine, RoundRecord,
@@ -43,6 +43,7 @@ use crate::hierarchy::global::{
 use crate::hierarchy::variants::{worst_imbalance, BALANCED_TARGET};
 use crate::model::{App, AppId, FleetEvent, RegionId, ResourceVec, TierId};
 use crate::network::{app_tier_latency_ms, LatencyMatrix};
+use crate::obs::{self, ObsHub, SpanRecorder};
 use crate::sptlb::SptlbConfig;
 use crate::util::json::Json;
 use crate::util::pool::par_map_mut;
@@ -207,6 +208,12 @@ pub struct MultiRegionMetrics {
 
 impl MultiRegionMetrics {
     pub fn to_json(&self) -> Json {
+        self.to_json_with_obs(None)
+    }
+
+    /// [`MultiRegionMetrics::to_json`] with the tracing layer's merged
+    /// span/sample histograms folded in as an `obs` section (schema 3).
+    pub fn to_json_with_obs(&self, obs: Option<Json>) -> Json {
         let stat = |s: &OnlineStats| {
             Json::obj(vec![
                 ("mean", Json::num(s.mean())),
@@ -214,7 +221,7 @@ impl MultiRegionMetrics {
                 ("max", Json::num(s.max())),
             ])
         };
-        Json::obj(vec![
+        let mut fields = vec![
             ("schema", Json::num(crate::coordinator::METRICS_SCHEMA as f64)),
             ("rounds", Json::num(self.rounds as f64)),
             ("migrations", Json::num(self.migrations as f64)),
@@ -225,7 +232,11 @@ impl MultiRegionMetrics {
             ("moves_per_round", stat(&self.moves)),
             ("events_per_round", stat(&self.events)),
             ("pipeline_ms", stat(&self.pipeline_ms)),
-        ])
+        ];
+        if let Some(o) = obs {
+            fields.push(("obs", o));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -237,12 +248,34 @@ struct RegionRuntime {
     engine: FleetEngine,
     scenario: ScenarioGen,
     latency: LatencyMatrix,
+    /// This region's tracing recorder (one per logical track, installed
+    /// thread-locally for the round's duration — works identically under
+    /// sequential and per-region-thread execution).
+    obs: Option<SpanRecorder>,
 }
 
 impl RegionRuntime {
     /// Apply the round's events and run one engine round; the regional
     /// analogue of `Coordinator::round_once`.
     fn round_once(&mut self, round: u32, events: &[FleetEvent], tick: Duration) -> RoundRecord {
+        // Install this region's recorder on the current thread,
+        // displacing (and later restoring) whatever was there — under
+        // sequential execution that is the coordinator's global-track
+        // recorder, so region spans can never leak onto it.
+        let displaced = self.obs.take().map(|mut rec| {
+            rec.set_round(round);
+            obs::swap(Some(rec))
+        });
+        obs::begin(obs::SpanKind::RegionRound);
+        let record = self.round_inner(round, events, tick);
+        obs::end(obs::SpanKind::RegionRound);
+        if let Some(prev) = displaced {
+            self.obs = obs::swap(prev);
+        }
+        record
+    }
+
+    fn round_inner(&mut self, round: u32, events: &[FleetEvent], tick: Duration) -> RoundRecord {
         let sw = Stopwatch::start();
         let delta = self.state.apply_all(events);
         let (report, moves) =
@@ -302,6 +335,12 @@ pub struct MultiRegionCoordinator {
     /// list region `region` applied that round (migrations included).
     pub event_log: Vec<Vec<Vec<FleetEvent>>>,
     pub metrics: MultiRegionMetrics,
+    /// Tracing hub ([`MultiRegionCoordinator::attach_obs`]); harvests
+    /// every track in ascending-region-then-global order each round.
+    hub: Option<ObsHub>,
+    /// The global/service track's recorder (installed on the
+    /// coordinating thread for each round's duration).
+    global_obs: Option<SpanRecorder>,
 }
 
 impl MultiRegionCoordinator {
@@ -329,6 +368,7 @@ impl MultiRegionCoordinator {
                     state: FleetState::from_testbed(tb),
                     engine,
                     scenario,
+                    obs: None,
                 }
             })
             .collect();
@@ -343,7 +383,55 @@ impl MultiRegionCoordinator {
             log: Vec::new(),
             event_log: Vec::new(),
             metrics: MultiRegionMetrics::default(),
+            hub: None,
+            global_obs: None,
         }
+    }
+
+    /// Attach a tracing hub: one recorder per region plus one for the
+    /// global track. All recorders share the hub's level; the hub
+    /// harvests them in a fixed order each round, so the trace is
+    /// bit-identical across worker counts and execution modes.
+    pub fn attach_obs(&mut self, hub: ObsHub) {
+        for (r, rt) in self.regions.iter_mut().enumerate() {
+            rt.obs = Some(hub.recorder(r as u16));
+        }
+        self.global_obs = Some(hub.recorder(obs::GLOBAL_TRACK));
+        self.hub = Some(hub);
+    }
+
+    /// The attached tracing hub, if any.
+    pub fn obs_hub(&self) -> Option<&ObsHub> {
+        self.hub.as_ref()
+    }
+
+    /// Fire a flight-recorder trigger on the attached hub (no-op
+    /// without one).
+    pub fn obs_trigger(&mut self, trigger: obs::FlightTrigger, note: &str) {
+        if let Some(hub) = self.hub.as_mut() {
+            hub.trigger(trigger, note);
+        }
+    }
+
+    /// Service metrics JSON with the tracing histograms folded in when a
+    /// hub is attached.
+    pub fn metrics_json(&self) -> Json {
+        self.metrics.to_json_with_obs(self.hub.as_ref().map(ObsHub::metrics_json))
+    }
+
+    /// Drain every track's events into the hub (ascending region order,
+    /// then the global track) and seal the round's flight capsule.
+    fn harvest_obs(&mut self, round: u32) {
+        let Some(hub) = self.hub.as_mut() else { return };
+        for rt in &mut self.regions {
+            if let Some(rec) = rt.obs.as_mut() {
+                hub.harvest(rec);
+            }
+        }
+        if let Some(rec) = self.global_obs.as_mut() {
+            hub.harvest(rec);
+        }
+        hub.commit_round(round);
     }
 
     pub fn n_regions(&self) -> usize {
@@ -450,6 +538,12 @@ impl MultiRegionCoordinator {
 
     fn round_once(&mut self, events: Vec<Vec<FleetEvent>>, live: bool) {
         let round = self.rounds_run;
+        if let Some(mut rec) = self.global_obs.take() {
+            rec.set_round(round);
+            self.global_obs = obs::swap(Some(rec));
+            debug_assert!(self.global_obs.is_none(), "coordinating thread slot was free");
+        }
+        obs::begin(obs::SpanKind::GlobalRound);
         let outage: Vec<bool> = events
             .iter()
             .map(|evs| evs.iter().any(|e| matches!(e, FleetEvent::RegionOutage { .. })))
@@ -489,6 +583,22 @@ impl MultiRegionCoordinator {
         };
 
         let migrations = std::mem::take(&mut self.staged);
+        for m in &migrations {
+            obs::decision(obs::Decision {
+                stage: obs::DecisionStage::Adopted,
+                origin: obs::Origin::Global,
+                reason: obs::Reason::None,
+                app: m.app.0,
+                from: m.from.0 as i64,
+                to: m.to.0 as i64,
+                // The id the destination minted for the migrant.
+                detail: m.new_id.0 as f64,
+            });
+            obs::sample(
+                obs::SampleKind::MigrationDistance,
+                (m.from.0 as i64 - m.to.0 as i64).unsigned_abs(),
+            );
+        }
         let escalations: u32 = records.iter().map(|r| r.escalations).sum();
         self.metrics.rounds += 1;
         self.metrics.migrations += migrations.len() as u32;
@@ -519,6 +629,9 @@ impl MultiRegionCoordinator {
         });
         self.event_log.push(events);
         self.rounds_run += 1;
+        obs::end(obs::SpanKind::GlobalRound);
+        self.global_obs = obs::uninstall();
+        self.harvest_obs(round);
     }
 
     /// Global planning + destination vetting: one `negotiate()` round of
@@ -535,6 +648,19 @@ impl MultiRegionCoordinator {
             .iter_mut()
             .map(|rt| rt.engine.take_escalations())
             .collect();
+        for (r, &n) in escalations.iter().enumerate() {
+            if n > 0 {
+                obs::decision(obs::Decision {
+                    stage: obs::DecisionStage::EscalationPressure,
+                    origin: obs::Origin::Global,
+                    reason: obs::Reason::None,
+                    app: obs::NO_APP,
+                    from: r as i64,
+                    to: -1,
+                    detail: n as f64,
+                });
+            }
+        }
         let mut session = GlobalSession {
             regions: &self.regions,
             global: &mut self.global,
@@ -700,6 +826,15 @@ impl CoopLayer for GlobalSession<'_> {
 
     fn feed_back(&mut self, p: &MigrationProposal, _verdict: &Verdict) -> bool {
         self.global.reject(p)
+    }
+
+    fn describe(&self, p: &MigrationProposal) -> Option<DecisionKey> {
+        Some(DecisionKey {
+            app: p.app.0,
+            from: p.from.0 as i64,
+            to: p.to.0 as i64,
+            origin: obs::Origin::Global,
+        })
     }
 
     /// Worst recorded pressure — the global analogue of a solver score.

@@ -12,10 +12,11 @@
 //! `ProtocolSession` implements [`CoopLayer`] with solutions as
 //! proposals, moves as items, and the region/host schedulers as vetters.
 
-use crate::coop::{negotiate, CoopLayer, RejectCounts, RoundTelemetry, Verdict};
+use crate::coop::{negotiate, CoopLayer, DecisionKey, RejectCounts, RoundTelemetry, Verdict};
 use crate::hierarchy::host::HostScheduler;
 use crate::hierarchy::region::{RegionScheduler, RegionVerdict};
 use crate::model::{App, Assignment, Move, ResourceVec, Tier};
+use crate::obs;
 use crate::rebalancer::local_search::{LocalSearch, LocalSearchConfig, ParallelConfig};
 use crate::rebalancer::optimal::OptimalSearch;
 use crate::rebalancer::problem::Problem;
@@ -224,6 +225,16 @@ impl CoopLayer for ProtocolSession<'_> {
         if !accepted {
             self.warm_start = Some(cleaned);
         }
+    }
+
+    /// Tier-level provenance: `from`/`to` are tier ids.
+    fn describe(&self, m: &Move) -> Option<DecisionKey> {
+        Some(DecisionKey {
+            app: m.app.0,
+            from: m.from.0 as i64,
+            to: m.to.0 as i64,
+            origin: obs::Origin::Protocol,
+        })
     }
 }
 

@@ -14,6 +14,7 @@ pub mod metadata;
 pub mod metrics;
 pub mod model;
 pub mod network;
+pub mod obs;
 pub mod rebalancer;
 pub mod report;
 pub mod runtime;

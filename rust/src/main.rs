@@ -15,6 +15,8 @@
 //!   bench     solution-quality harnesses; `bench gap` measures the
 //!             LocalSearch optimality gap against exact optima and
 //!             writes GAP_report.json (the CI gap-gate input).
+//!   explain   reconstruct an app's decision provenance (propose → vet
+//!             → avoid → escalate chain) from a `serve --trace` JSONL.
 //!
 //! Every command returns `Result<(), sptlb::service::Error>`; the exit
 //! code is derived in exactly one place (the bottom of [`main`]) via
@@ -25,6 +27,7 @@
 
 use sptlb::coordinator::{Coordinator, FleetState, MultiRegionCoordinator};
 use sptlb::metadata::MetadataStore;
+use sptlb::obs::{self, FlightTrigger, ObsHub, TraceLevel};
 use sptlb::report;
 use sptlb::service::{
     append_journal_round, load_journal, ConfigError, Error, ScenarioProducer, Service,
@@ -49,6 +52,7 @@ fn main() {
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("check") => cmd_check(&args[1..]),
         Some("bench") => cmd_bench(&args[1..]),
+        Some("explain") => cmd_explain(&args[1..]),
         Some("--help") | Some("help") | None => {
             print_help();
             Ok(())
@@ -70,7 +74,7 @@ fn print_help() {
     println!(
         "sptlb — Stream-Processing Tier Load Balancer (paper reproduction)\n\
          \n\
-         USAGE: sptlb <balance|serve|fig3|sweep|check|bench> [options]\n\
+         USAGE: sptlb <balance|serve|fig3|sweep|check|bench|explain> [options]\n\
          \n\
          Run `sptlb <subcommand> --help` for per-command options."
     );
@@ -238,6 +242,45 @@ fn build_service_config(p: &Parsed) -> Result<ServiceConfig, Error> {
     Ok(b.build()?)
 }
 
+/// Build the trace/flight-recorder hub from `--trace`/`--trace-level`
+/// and arm the panic hook so a crash dumps the retained round window
+/// next to the trace file. Returns `None` when tracing is disarmed
+/// (no `--trace` path and no explicit level, or `--trace-level off`).
+fn build_obs_hub(p: &Parsed) -> Result<Option<ObsHub>, Error> {
+    let path = p.str("trace").map_err(usage)?;
+    let level_arg = p.str("trace-level").map_err(usage)?;
+    let level = if level_arg.is_empty() {
+        // A bare `--trace <path>` records spans; decisions are opt-in.
+        if path.is_empty() {
+            return Ok(None);
+        }
+        TraceLevel::Spans
+    } else {
+        TraceLevel::parse(&level_arg).ok_or_else(|| {
+            Error::Usage(format!(
+                "unknown --trace-level '{level_arg}' (off|rounds|spans|decisions)"
+            ))
+        })?
+    };
+    if level == TraceLevel::Off {
+        return Ok(None);
+    }
+    let path = (!path.is_empty()).then(|| std::path::PathBuf::from(&path));
+    let hub = ObsHub::new(level, path.as_deref())?;
+    if let (flight, Some(trace)) = hub.flight_handle() {
+        obs::arm_panic_hook(flight, &trace);
+    }
+    Ok(Some(hub))
+}
+
+/// Warn (without failing the run) if any trace write errored — the
+/// trace is best-effort telemetry, never a reason to lose a run.
+fn warn_trace_io(hub: Option<&ObsHub>) {
+    if hub.is_some_and(ObsHub::had_io_error) {
+        eprintln!("warning: some trace writes failed; the trace file is incomplete");
+    }
+}
+
 fn cmd_serve(args: &[String]) -> Result<(), Error> {
     let cmd = Command::new("serve", "run the coordinator leader loop")
         .opt("scenario", "paper", "workload preset (paper|small|large)")
@@ -294,7 +337,13 @@ fn cmd_serve(args: &[String]) -> Result<(), Error> {
         .opt("snapshot-every", "8", "snapshot every K journaled rounds (0 = final only; with --ingest)")
         .flag("restore", "resume from <snapshot-dir>/snapshot.json before ingesting")
         .opt("log", "", "write the decision log JSON to this file")
-        .opt("event-log", "", "write the applied-events journal JSON to this file");
+        .opt("event-log", "", "write the applied-events journal JSON to this file")
+        .opt("trace", "", "write a Chrome-trace-event JSONL (Perfetto-loadable) to this file")
+        .opt(
+            "trace-level",
+            "",
+            "tracing detail: off|rounds|spans|decisions (default with --trace: spans)",
+        );
     with_parsed(cmd, args, |p| {
         // `--scenario help` / `--events help`: enumerate the valid preset
         // names instead of erroring (the lists are derived from the
@@ -325,8 +374,12 @@ fn cmd_serve(args: &[String]) -> Result<(), Error> {
         }
         let bed = generate(&config.workload);
         let mut coordinator = Coordinator::from_testbed(config.coordinator(), bed);
+        if let Some(hub) = build_obs_hub(&p)? {
+            coordinator.attach_obs(hub);
+        }
         coordinator.run(config.rounds);
-        println!("{}", coordinator.metrics.to_json().pretty());
+        println!("{}", coordinator.metrics_json().pretty());
+        warn_trace_io(coordinator.obs_hub());
         write_logs(
             &p,
             &[
@@ -344,8 +397,12 @@ fn cmd_serve_multiregion(p: &Parsed, config: ServiceConfig) -> Result<(), Error>
         &MultiRegionSpec::new(config.regions, config.workload.clone()).with_seed(config.seed),
     );
     let mut coordinator = MultiRegionCoordinator::new(config.multiregion(), bed);
+    if let Some(hub) = build_obs_hub(p)? {
+        coordinator.attach_obs(hub);
+    }
     coordinator.run(config.rounds);
-    println!("{}", coordinator.metrics.to_json().pretty());
+    println!("{}", coordinator.metrics_json().pretty());
+    warn_trace_io(coordinator.obs_hub());
     write_logs(
         p,
         &[
@@ -367,23 +424,44 @@ fn cmd_serve_ingest(p: &Parsed, config: ServiceConfig) -> Result<(), Error> {
     let dir = (!dir.is_empty()).then(|| std::path::PathBuf::from(dir));
     let rounds = config.rounds;
     let snapshot_every = config.snapshot_every;
+    // The hub exists before restore so a corrupt snapshot/journal fires
+    // the flight trigger (dumping whatever the ring held) on the way out.
+    let mut hub = build_obs_hub(p)?;
 
     let mut service = if p.flag("restore") {
         let Some(dir) = dir.as_ref() else {
             return Err(Error::Usage("--restore requires --snapshot-dir".into()));
         };
-        let snap = Snapshot::load(&dir.join("snapshot.json"))?.map_err(Error::SnapshotCorrupt)?;
-        let journal = load_journal(&dir.join("journal.jsonl"))?.map_err(Error::SnapshotCorrupt)?;
-        let service = Service::restore(config, &snap, &journal)?;
-        println!(
-            "restored from snapshot at round {} (+{} journal tail round(s) replayed)",
-            snap.rounds_done,
-            service.rounds_done() - snap.rounds_done
-        );
-        service
+        let restored = (|| {
+            let snap =
+                Snapshot::load(&dir.join("snapshot.json"))?.map_err(Error::SnapshotCorrupt)?;
+            let journal =
+                load_journal(&dir.join("journal.jsonl"))?.map_err(Error::SnapshotCorrupt)?;
+            let service = Service::restore(config, &snap, &journal)?;
+            Ok::<_, Error>((snap.rounds_done, service))
+        })();
+        match restored {
+            Ok((snap_rounds, service)) => {
+                println!(
+                    "restored from snapshot at round {} (+{} journal tail round(s) replayed)",
+                    snap_rounds,
+                    service.rounds_done() - snap_rounds
+                );
+                service
+            }
+            Err(e) => {
+                if let (Error::SnapshotCorrupt(_), Some(h)) = (&e, hub.as_mut()) {
+                    h.trigger(FlightTrigger::SnapshotCorrupt, &e.to_string());
+                }
+                return Err(e);
+            }
+        }
     } else {
         Service::new(config)
     };
+    if let Some(hub) = hub.take() {
+        service.attach_obs(hub);
+    }
 
     // Open the on-disk journal. It is rewritten from the verified
     // in-memory journal rather than opened in append mode: a torn tail
@@ -431,7 +509,7 @@ fn cmd_serve_ingest(p: &Parsed, config: ServiceConfig) -> Result<(), Error> {
                 if let (Some(f), Some(dir)) = (journal_file.as_mut(), dir.as_ref()) {
                     append_journal_round(f, service.journal_round(rec.round))?;
                     if snapshot_every > 0 && service.rounds_done() % snapshot_every == 0 {
-                        service.snapshot().write(&dir.join("snapshot.json"))?;
+                        service.snapshot_traced().write(&dir.join("snapshot.json"))?;
                     }
                 }
             }
@@ -451,7 +529,8 @@ fn cmd_serve_ingest(p: &Parsed, config: ServiceConfig) -> Result<(), Error> {
         service.snapshot().write(&dir.join("snapshot.json"))?;
         println!("snapshot + journal in {}", dir.display());
     }
-    println!("{}", service.metrics.to_json().pretty());
+    println!("{}", service.metrics_json().pretty());
+    warn_trace_io(service.obs_hub());
     let ingest = &service.metrics.ingest;
     println!(
         "ingest: {} round(s) ({} fast, {} full), {} event(s) queued by {} producer(s), {} shed, {} idle poll(s)",
@@ -569,6 +648,38 @@ fn cmd_check(args: &[String]) -> Result<(), Error> {
                 "parity FAILED: worst relative error {worst}"
             )))
         }
+    })
+}
+
+/// `explain --trace t.jsonl --app 42 --round 17`: reconstruct the
+/// propose → vet → avoid → escalate chain for one app around one round,
+/// from the decision-provenance events in a `serve --trace` file
+/// recorded at `--trace-level decisions`.
+fn cmd_explain(args: &[String]) -> Result<(), Error> {
+    let cmd = Command::new("explain", "reconstruct decision provenance from a trace")
+        .opt("trace", "", "trace JSONL written by serve --trace (at level 'decisions')")
+        .opt("app", "", "app id whose decisions to explain")
+        .opt("round", "", "focus round")
+        .opt("window", "8", "look-back window in rounds before --round");
+    with_parsed(cmd, args, |p| {
+        let path = p.str("trace").map_err(usage)?;
+        if path.is_empty() {
+            return Err(Error::Usage("explain requires --trace <file>".into()));
+        }
+        if p.get("app").map_or(true, |v| v.is_empty()) {
+            return Err(Error::Usage("explain requires --app <id>".into()));
+        }
+        if p.get("round").map_or(true, |v| v.is_empty()) {
+            return Err(Error::Usage("explain requires --round <n>".into()));
+        }
+        let query = obs::explain::ExplainQuery {
+            app: p.u64("app").map_err(usage)? as u32,
+            round: p.u64("round").map_err(usage)? as u32,
+            window: p.u64("window").map_err(usage)? as u32,
+        };
+        let text = obs::explain::explain_trace(std::path::Path::new(&path), &query)?;
+        print!("{text}");
+        Ok(())
     })
 }
 

@@ -1,0 +1,219 @@
+//! Offline decision-provenance queries over a written trace file.
+//!
+//! `explain --trace t.jsonl --app 42 --round 17` reconstructs the cause
+//! chain of an app's migrations and terminal rejects — proposal origin,
+//! vet verdicts with reasons, avoid-registry hits, escalations, and the
+//! final adoption — purely from the trace, with no access to the run
+//! that produced it.
+
+use crate::util::json::Json;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Which decision events to reconstruct.
+#[derive(Debug, Clone, Copy)]
+pub struct ExplainQuery {
+    /// Subject app id.
+    pub app: u32,
+    /// Focus round: the chain covers `round - window ..= round`.
+    pub round: u32,
+    /// Look-back window in rounds (default 8 — avoid decay and
+    /// escalation cycles fit comfortably inside it).
+    pub window: u32,
+}
+
+/// One decision event re-parsed from the trace.
+#[derive(Debug, Clone)]
+struct Row {
+    round: u32,
+    ts: u64,
+    track: f64,
+    stage: String,
+    origin: String,
+    reason: String,
+    app: u32,
+    from: i64,
+    to: i64,
+    detail: f64,
+}
+
+/// Parse every decision event in the trace within the query window.
+/// Tolerant of the Chrome-trace framing (`[` opener, trailing commas,
+/// truncated tail): unparseable lines are skipped, like the journal
+/// loader treats a torn tail.
+fn parse_decisions(text: &str, lo: u32, hi: u32) -> Vec<Row> {
+    let mut rows = Vec::new();
+    for raw in text.lines() {
+        let line = raw.trim().trim_end_matches(',');
+        if line.is_empty() || line == "[" || line == "]" {
+            continue;
+        }
+        let Ok(v) = Json::parse(line) else { continue };
+        if v.get("name").as_str() != Some("decision") {
+            continue;
+        }
+        let args = v.get("args");
+        let Some(round) = args.get("round").as_u64() else { continue };
+        let round = round as u32;
+        if round < lo || round > hi {
+            continue;
+        }
+        rows.push(Row {
+            round,
+            ts: v.get("ts").as_u64().unwrap_or(0),
+            track: v.get("tid").as_f64().unwrap_or(-1.0),
+            stage: args.get("stage").as_str().unwrap_or("?").to_string(),
+            origin: args.get("origin").as_str().unwrap_or("?").to_string(),
+            reason: args.get("reason").as_str().unwrap_or("none").to_string(),
+            app: args.get("app").as_u64().unwrap_or(u32::MAX as u64) as u32,
+            from: args.get("from").as_f64().unwrap_or(-1.0) as i64,
+            to: args.get("to").as_f64().unwrap_or(-1.0) as i64,
+            detail: args.get("detail").as_f64().unwrap_or(0.0),
+        });
+    }
+    rows.sort_by_key(|r| r.ts);
+    rows
+}
+
+fn describe(row: &Row, out: &mut String) {
+    // Global-origin events move between regions; everything else moves
+    // between tiers inside one region.
+    let unit = if row.origin == "global" { "region" } else { "tier" };
+    let _ = write!(out, "  {:<20}", row.stage);
+    match row.stage.as_str() {
+        "escalation_pressure" => {
+            let _ = write!(
+                out,
+                "region {} contributed {} escalation(s) to global pressure",
+                row.from, row.detail
+            );
+        }
+        "escalated" => {
+            let _ = write!(
+                out,
+                "app {} {unit} {} conflict escalated to the global layer",
+                row.app, row.from
+            );
+        }
+        "avoid_recorded" => {
+            let _ = write!(
+                out,
+                "app {} avoid edge recorded ({unit} {} -> {})",
+                row.app, row.from, row.to
+            );
+        }
+        _ => {
+            let _ = write!(out, "app {} {unit} {} -> {}", row.app, row.from, row.to);
+            if row.reason != "none" {
+                let _ = write!(out, ": reject {}", row.reason);
+                if row.detail != 0.0 {
+                    let _ = write!(out, " (detail {:.3})", row.detail);
+                }
+            }
+        }
+    }
+    let _ = write!(out, " [{}]", row.origin);
+    out.push('\n');
+}
+
+/// Render the cause chain for `query` from already-loaded trace text.
+pub fn explain_text(trace: &str, query: &ExplainQuery) -> String {
+    let lo = query.round.saturating_sub(query.window);
+    let hi = query.round;
+    let rows = parse_decisions(trace, lo, hi);
+    let mut out = String::new();
+    let _ = writeln!(out, "decision provenance for app {}, rounds {lo}..={hi}", query.app);
+    let mut printed = 0usize;
+    let mut last_round = u32::MAX;
+    for row in &rows {
+        // App rows build the chain; region-scoped pressure rows are
+        // context printed for any app (they have no app of their own).
+        let relevant = row.app == query.app || row.stage == "escalation_pressure";
+        if !relevant {
+            continue;
+        }
+        if row.round != last_round {
+            let track = if row.track >= u16::MAX as f64 || row.track < 0.0 {
+                "global".to_string()
+            } else {
+                format!("track {}", row.track as i64)
+            };
+            let _ = writeln!(out, "round {} ({track}):", row.round);
+            last_round = row.round;
+        }
+        describe(row, &mut out);
+        printed += 1;
+    }
+    if printed == 0 {
+        let _ = writeln!(
+            out,
+            "(no decision events for app {} in this window — was the trace \
+             recorded with --trace-level decisions?)",
+            query.app
+        );
+    }
+    out
+}
+
+/// Load a trace file and render the cause chain for `query`.
+pub fn explain_trace(path: &Path, query: &ExplainQuery) -> std::io::Result<String> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(explain_text(&text, query))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"[
+{"ph":"M","pid":0,"name":"process_name","args":{"name":"sptlb"}},
+{"ph":"B","pid":0,"tid":0,"ts":9000000,"name":"region_round","args":{"round":9}},
+{"ph":"i","pid":0,"tid":0,"ts":9000001,"s":"t","name":"decision","args":{"stage":"proposed","origin":"protocol","reason":"none","round":9,"app":42,"from":1,"to":3,"detail":0}},
+{"ph":"i","pid":0,"tid":0,"ts":9000002,"s":"t","name":"decision","args":{"stage":"vetted","origin":"protocol","reason":"proximity","round":9,"app":42,"from":1,"to":3,"detail":14.25}},
+{"ph":"i","pid":0,"tid":0,"ts":9000003,"s":"t","name":"decision","args":{"stage":"avoid_recorded","origin":"protocol","reason":"proximity","round":9,"app":42,"from":1,"to":3,"detail":0}},
+{"ph":"i","pid":0,"tid":0,"ts":11000001,"s":"t","name":"decision","args":{"stage":"escalated","origin":"engine","reason":"none","round":11,"app":42,"from":3,"to":-1,"detail":0}},
+{"ph":"i","pid":0,"tid":65535,"ts":12000001,"s":"t","name":"decision","args":{"stage":"escalation_pressure","origin":"global","reason":"none","round":12,"app":4294967295,"from":0,"to":-1,"detail":1}},
+{"ph":"i","pid":0,"tid":65535,"ts":12000002,"s":"t","name":"decision","args":{"stage":"adopted","origin":"global","reason":"none","round":12,"app":42,"from":0,"to":1,"detail":0}},
+{"ph":"i","pid":0,"tid":0,"ts":12000003,"s":"t","name":"decision","args":{"stage":"adopted","origin":"engine","reason":"none","round":12,"app":7,"from":2,"to":0,"detail":0}},
+"#;
+
+    #[test]
+    fn reconstructs_full_chain_in_order() {
+        let q = ExplainQuery { app: 42, round: 12, window: 8 };
+        let out = explain_text(SAMPLE, &q);
+        let idx = |needle: &str| out.find(needle).unwrap_or_else(|| panic!("missing {needle:?} in:\n{out}"));
+        // The whole propose -> vet -> avoid -> escalate -> pressure ->
+        // adopt chain appears, in logical-time order.
+        let chain = [
+            "proposed",
+            "reject proximity",
+            "avoid_recorded",
+            "escalated",
+            "escalation_pressure",
+            "adopted",
+        ];
+        let positions: Vec<usize> = chain.iter().map(|s| idx(s)).collect();
+        assert!(positions.windows(2).all(|w| w[0] < w[1]), "out of order:\n{out}");
+        // Reason detail survives.
+        assert!(out.contains("detail 14.250"), "{out}");
+        // Global adoption renders regions, not tiers.
+        assert!(out.contains("region 0 -> 1"), "{out}");
+        // Other apps' rows are filtered out.
+        assert!(!out.contains("app 7"), "{out}");
+    }
+
+    #[test]
+    fn window_filters_rounds() {
+        let q = ExplainQuery { app: 42, round: 9, window: 0 };
+        let out = explain_text(SAMPLE, &q);
+        assert!(out.contains("proposed"));
+        assert!(!out.contains("escalated"), "round 11 is outside the window:\n{out}");
+    }
+
+    #[test]
+    fn empty_result_explains_itself() {
+        let q = ExplainQuery { app: 999, round: 12, window: 8 };
+        let out = explain_text(SAMPLE, &q);
+        assert!(out.contains("no decision events for app 999"), "{out}");
+    }
+}

@@ -1,0 +1,533 @@
+//! Harvest side of the tracing layer: per-round merge of recorders into
+//! a Chrome-trace-event JSONL file, the bounded flight-recorder ring,
+//! and the merged duration histograms folded into metrics JSON.
+
+use super::recorder::{DecisionEvent, SpanEvent, SpanRecorder};
+use super::{DecisionStage, Origin, Reason, SampleKind, SpanKind, TraceLevel, N_HISTS, N_SPAN_KINDS};
+use crate::util::json::Json;
+use crate::util::stats::Log2Histogram;
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Rounds retained by the flight recorder.
+const FLIGHT_ROUNDS: usize = 32;
+
+/// Preallocated span capacity per flight capsule: absorbing a typical
+/// round never grows the buffer, so warm steady-state rounds stay
+/// allocation-free from the very first pass around the ring (a burst
+/// round may still grow its capsule once; the capacity then persists).
+const CAPSULE_SPANS: usize = 512;
+
+/// Preallocated decision capacity per flight capsule.
+const CAPSULE_DECISIONS: usize = 1024;
+
+/// What tripped a flight-recorder dump. Each trigger kind dumps at most
+/// once per run (the first occurrence is the interesting one; repeats
+/// would overwrite it with a later, less relevant window).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlightTrigger {
+    /// A round left one or more tiers over their SLO capacity.
+    SloBreach = 0,
+    /// The ingest queue shed events at the door this round.
+    ShedBurst = 1,
+    /// A snapshot failed its restore integrity check.
+    SnapshotCorrupt = 2,
+    /// The process panicked (dump written from the panic hook).
+    Panic = 3,
+}
+
+/// Number of flight-trigger kinds.
+const N_TRIGGERS: usize = 4;
+
+impl FlightTrigger {
+    /// File-name fragment and JSON name of this trigger.
+    pub fn name(self) -> &'static str {
+        match self {
+            FlightTrigger::SloBreach => "slo_breach",
+            FlightTrigger::ShedBurst => "shed_burst",
+            FlightTrigger::SnapshotCorrupt => "snapshot_corrupt",
+            FlightTrigger::Panic => "panic",
+        }
+    }
+}
+
+/// One retained round of spans + decisions.
+#[derive(Debug)]
+struct Capsule {
+    round: u32,
+    used: bool,
+    spans: Vec<SpanEvent>,
+    decisions: Vec<DecisionEvent>,
+}
+
+/// Bounded ring of the last [`FLIGHT_ROUNDS`] rounds' events, dumped to
+/// disk when a [`FlightTrigger`] fires. Shared behind `Arc<Mutex<..>>`
+/// so the panic hook can dump it from any thread.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    capsules: Vec<Capsule>,
+    /// Index of the capsule currently being filled.
+    head: usize,
+}
+
+impl FlightRecorder {
+    fn new() -> Self {
+        let capsules = (0..FLIGHT_ROUNDS)
+            .map(|_| Capsule {
+                round: 0,
+                used: false,
+                spans: Vec::with_capacity(CAPSULE_SPANS),
+                decisions: Vec::with_capacity(CAPSULE_DECISIONS),
+            })
+            .collect();
+        Self { capsules, head: 0 }
+    }
+
+    /// Recycle the head capsule lazily: the first absorb of a new round
+    /// clears whatever the ring held K rounds ago, so retention is the
+    /// full K rounds (clearing eagerly on seal would cost one).
+    fn recycle_head(&mut self) {
+        let c = &mut self.capsules[self.head];
+        if c.used {
+            c.used = false;
+            c.spans.clear();
+            c.decisions.clear();
+        }
+    }
+
+    fn absorb(&mut self, spans: &[SpanEvent], decisions: &[DecisionEvent]) {
+        self.recycle_head();
+        let c = &mut self.capsules[self.head];
+        c.spans.extend_from_slice(spans);
+        c.decisions.extend_from_slice(decisions);
+    }
+
+    fn seal_round(&mut self, round: u32) {
+        self.recycle_head();
+        let c = &mut self.capsules[self.head];
+        c.round = round;
+        c.used = true;
+        self.head = (self.head + 1) % self.capsules.len();
+    }
+
+    /// Serialize the retained window (oldest round first) for a dump.
+    pub fn to_json(&self, trigger: FlightTrigger, note: &str) -> Json {
+        let mut idx: Vec<usize> =
+            (0..self.capsules.len()).filter(|&i| self.capsules[i].used).collect();
+        idx.sort_by_key(|&i| self.capsules[i].round);
+        let rounds = idx.into_iter().map(|i| {
+            let c = &self.capsules[i];
+            Json::obj(vec![
+                ("round", Json::num(c.round as f64)),
+                (
+                    "spans",
+                    Json::arr(c.spans.iter().map(|s| {
+                        Json::obj(vec![
+                            ("track", Json::num(s.track as f64)),
+                            ("name", Json::str(SpanKind::from_u8(s.kind).name())),
+                            ("phase", Json::str(if s.phase == 0 { "B" } else { "E" })),
+                            ("ts", Json::num(s.ts() as f64)),
+                        ])
+                    })),
+                ),
+                ("decisions", Json::arr(c.decisions.iter().map(decision_json))),
+            ])
+        });
+        Json::obj(vec![
+            ("kind", Json::str("flight_recorder_dump")),
+            ("trigger", Json::str(trigger.name())),
+            ("note", Json::str(note)),
+            ("retained_rounds", Json::num(FLIGHT_ROUNDS as f64)),
+            ("rounds", Json::arr(rounds)),
+        ])
+    }
+
+    /// Write a dump file for `trigger` next to the trace at `path`.
+    pub fn dump(&self, path: &Path, trigger: FlightTrigger, note: &str) -> std::io::Result<()> {
+        let mut out = self.to_json(trigger, note).pretty();
+        out.push('\n');
+        std::fs::write(path, out)
+    }
+}
+
+fn decision_json(d: &DecisionEvent) -> Json {
+    Json::obj(vec![
+        ("track", Json::num(d.track as f64)),
+        ("stage", Json::str(DecisionStage::from_u8(d.stage).name())),
+        ("origin", Json::str(Origin::from_u8(d.origin).name())),
+        ("reason", Json::str(Reason::from_u8(d.reason).name())),
+        ("round", Json::num(d.round as f64)),
+        ("app", Json::num(d.app as f64)),
+        ("from", Json::num(d.from as f64)),
+        ("to", Json::num(d.to as f64)),
+        ("detail", Json::num(d.detail)),
+    ])
+}
+
+/// Buffered Chrome-trace-event JSONL writer. The output is a JSON array
+/// opened with `[` whose elements sit one per line with trailing commas
+/// and no closing bracket — exactly the truncation-tolerant form
+/// Perfetto and `chrome://tracing` load, and trivially greppable line
+/// by line. All formatting goes through one reused `String` scratch so
+/// steady-state writes never allocate.
+struct TraceWriter {
+    out: BufWriter<File>,
+    line: String,
+}
+
+impl TraceWriter {
+    fn create(path: &Path) -> std::io::Result<Self> {
+        let file = File::create(path)?;
+        let mut out = BufWriter::with_capacity(1 << 16, file);
+        out.write_all(b"[\n")?;
+        out.write_all(
+            b"{\"ph\":\"M\",\"pid\":0,\"name\":\"process_name\",\
+              \"args\":{\"name\":\"sptlb\"}},\n",
+        )?;
+        Ok(Self { out, line: String::with_capacity(512) })
+    }
+
+    fn write_span(&mut self, s: &SpanEvent) -> std::io::Result<()> {
+        self.line.clear();
+        let name = SpanKind::from_u8(s.kind).name();
+        if s.phase == 0 {
+            let _ = write!(
+                self.line,
+                "{{\"ph\":\"B\",\"pid\":0,\"tid\":{},\"ts\":{},\"name\":\"{}\",\
+                 \"args\":{{\"round\":{}}}}},",
+                s.track,
+                s.ts(),
+                name,
+                s.round
+            );
+        } else {
+            let _ = write!(
+                self.line,
+                "{{\"ph\":\"E\",\"pid\":0,\"tid\":{},\"ts\":{},\"name\":\"{}\"}},",
+                s.track,
+                s.ts(),
+                name
+            );
+        }
+        self.line.push('\n');
+        self.out.write_all(self.line.as_bytes())
+    }
+
+    fn write_decision(&mut self, d: &DecisionEvent) -> std::io::Result<()> {
+        self.line.clear();
+        let _ = write!(
+            self.line,
+            "{{\"ph\":\"i\",\"pid\":0,\"tid\":{},\"ts\":{},\"s\":\"t\",\"name\":\"decision\",\
+             \"args\":{{\"stage\":\"{}\",\"origin\":\"{}\",\"reason\":\"{}\",\"round\":{},\
+             \"app\":{},\"from\":{},\"to\":{},\"detail\":{}}}}},",
+            d.track,
+            d.ts(),
+            DecisionStage::from_u8(d.stage).name(),
+            Origin::from_u8(d.origin).name(),
+            Reason::from_u8(d.reason).name(),
+            d.round,
+            d.app,
+            d.from,
+            d.to,
+            // JSON has no NaN/Inf; clamp non-finite payloads to 0.
+            if d.detail.is_finite() { d.detail } else { 0.0 }
+        );
+        self.line.push('\n');
+        self.out.write_all(self.line.as_bytes())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+/// Per-owner tracing hub: makes the owner's [`SpanRecorder`]s, harvests
+/// them once per round in a fixed order, writes the trace file, feeds
+/// the flight ring, and accumulates the merged duration histograms.
+pub struct ObsHub {
+    level: TraceLevel,
+    writer: Option<TraceWriter>,
+    trace_path: Option<PathBuf>,
+    flight: Arc<Mutex<FlightRecorder>>,
+    hists: [Log2Histogram; N_HISTS],
+    dropped: u64,
+    dumped: [bool; N_TRIGGERS],
+    io_error: bool,
+}
+
+impl std::fmt::Debug for ObsHub {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ObsHub")
+            .field("level", &self.level)
+            .field("trace_path", &self.trace_path)
+            .field("dropped", &self.dropped)
+            .finish()
+    }
+}
+
+impl ObsHub {
+    /// A hub writing the trace to `path` at `level`. With `path = None`
+    /// spans/decisions still feed the flight ring and histograms but no
+    /// trace file is written.
+    pub fn new(level: TraceLevel, path: Option<&Path>) -> std::io::Result<Self> {
+        let writer = match path {
+            Some(p) => Some(TraceWriter::create(p)?),
+            None => None,
+        };
+        Ok(Self {
+            level,
+            writer,
+            trace_path: path.map(Path::to_path_buf),
+            flight: Arc::new(Mutex::new(FlightRecorder::new())),
+            hists: super::hist_array(),
+            dropped: 0,
+            dumped: [false; N_TRIGGERS],
+            io_error: false,
+        })
+    }
+
+    /// The hub's trace level.
+    pub fn level(&self) -> TraceLevel {
+        self.level
+    }
+
+    /// A new preallocated recorder for `track` at the hub's level.
+    pub fn recorder(&self, track: u16) -> SpanRecorder {
+        SpanRecorder::new(self.level, track)
+    }
+
+    /// Shared flight ring + dump-path base, for the panic hook.
+    pub fn flight_handle(&self) -> (Arc<Mutex<FlightRecorder>>, Option<PathBuf>) {
+        (Arc::clone(&self.flight), self.trace_path.clone())
+    }
+
+    /// Drain one recorder's events into the trace file and the current
+    /// flight capsule, merge its histograms, and clear it. Call once
+    /// per recorder per round, in a fixed (track) order.
+    pub fn harvest(&mut self, rec: &mut SpanRecorder) {
+        if let Some(w) = self.writer.as_mut() {
+            for s in rec.spans() {
+                if w.write_span(s).is_err() {
+                    self.io_error = true;
+                    break;
+                }
+            }
+            for d in rec.decisions() {
+                if w.write_decision(d).is_err() {
+                    self.io_error = true;
+                    break;
+                }
+            }
+        }
+        if let Ok(mut flight) = self.flight.lock() {
+            flight.absorb(rec.spans(), rec.decisions());
+        }
+        for (acc, h) in self.hists.iter_mut().zip(rec.hists()) {
+            acc.merge(h);
+        }
+        self.dropped += rec.dropped();
+        rec.clear();
+        rec.clear_hists();
+    }
+
+    /// Seal the flight capsule for `round` and flush the trace file.
+    pub fn commit_round(&mut self, round: u32) {
+        if let Ok(mut flight) = self.flight.lock() {
+            flight.seal_round(round);
+        }
+        if let Some(w) = self.writer.as_mut() {
+            if w.flush().is_err() {
+                self.io_error = true;
+            }
+        }
+    }
+
+    /// Fire a flight trigger: dump the retained window to
+    /// `<trace>.flight-<trigger>.json`, at most once per trigger kind.
+    pub fn trigger(&mut self, trigger: FlightTrigger, note: &str) {
+        if self.dumped[trigger as usize] {
+            return;
+        }
+        self.dumped[trigger as usize] = true;
+        if let (Some(base), Ok(flight)) = (self.trace_path.as_ref(), self.flight.lock()) {
+            let path = flight_dump_path(base, trigger);
+            if let Err(e) = flight.dump(&path, trigger, note) {
+                eprintln!("flight dump failed ({}): {e}", path.display());
+            }
+        }
+    }
+
+    /// Merged per-span-kind duration histograms plus free-form value
+    /// histograms as metrics JSON (telemetry: percentiles are log2
+    /// bucket lower bounds — ns for spans, domain units for samples).
+    pub fn metrics_json(&self) -> Json {
+        let spans = (0..N_SPAN_KINDS).filter_map(|i| {
+            let h = &self.hists[i];
+            if h.is_empty() {
+                return None;
+            }
+            Some((
+                SpanKind::from_u8(i as u8).name(),
+                Json::obj(vec![
+                    ("count", Json::num(h.count() as f64)),
+                    ("p50_ns", Json::num(h.p50() as f64)),
+                    ("p95_ns", Json::num(h.p95() as f64)),
+                    ("p99_ns", Json::num(h.p99() as f64)),
+                ]),
+            ))
+        });
+        let samples = (0..super::N_SAMPLE_KINDS).filter_map(|i| {
+            let h = &self.hists[N_SPAN_KINDS + i];
+            if h.is_empty() {
+                return None;
+            }
+            Some((
+                SampleKind::from_u8(i as u8).name(),
+                Json::obj(vec![
+                    ("count", Json::num(h.count() as f64)),
+                    ("p50", Json::num(h.p50() as f64)),
+                    ("p95", Json::num(h.p95() as f64)),
+                    ("p99", Json::num(h.p99() as f64)),
+                ]),
+            ))
+        });
+        Json::obj(vec![
+            ("level", Json::str(self.level.name())),
+            ("dropped_events", Json::num(self.dropped as f64)),
+            ("spans", Json::obj(spans.collect())),
+            ("samples", Json::obj(samples.collect())),
+        ])
+    }
+
+    /// Whether any trace write failed (the run keeps going; the trace
+    /// is best-effort by design).
+    pub fn had_io_error(&self) -> bool {
+        self.io_error
+    }
+}
+
+/// Dump path for `trigger` derived from the trace path.
+pub fn flight_dump_path(trace: &Path, trigger: FlightTrigger) -> PathBuf {
+    let mut name = trace.file_name().unwrap_or_default().to_os_string();
+    name.push(format!(".flight-{}.json", trigger.name()));
+    trace.with_file_name(name)
+}
+
+type PanicFlight = (Arc<Mutex<FlightRecorder>>, PathBuf);
+
+static PANIC_FLIGHT: Mutex<Option<PanicFlight>> = Mutex::new(None);
+static PANIC_HOOK: OnceLock<()> = OnceLock::new();
+
+/// Arm the process-wide panic hook to dump the given flight ring on
+/// panic. The hook is installed once (chaining the default hook); the
+/// armed ring can be replaced by later calls.
+pub fn arm_panic_hook(flight: Arc<Mutex<FlightRecorder>>, trace_path: &Path) {
+    if let Ok(mut slot) = PANIC_FLIGHT.lock() {
+        *slot = Some((flight, trace_path.to_path_buf()));
+    }
+    PANIC_HOOK.get_or_init(|| {
+        let previous = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if let Ok(slot) = PANIC_FLIGHT.lock() {
+                if let Some((flight, base)) = slot.as_ref() {
+                    if let Ok(f) = flight.lock() {
+                        let path = flight_dump_path(base, FlightTrigger::Panic);
+                        let note = info.to_string();
+                        let _ = f.dump(&path, FlightTrigger::Panic, &note);
+                    }
+                }
+            }
+            previous(info);
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Decision, DecisionStage, Origin, Reason};
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("sptlb_obs_{}_{}", name, std::process::id()))
+    }
+
+    #[test]
+    fn hub_writes_trace_lines_and_histograms() {
+        let path = tmp("hub");
+        let mut hub = ObsHub::new(TraceLevel::Decisions, Some(&path)).unwrap();
+        let mut rec = hub.recorder(0);
+        rec.set_round(3);
+        rec.begin(SpanKind::RegionRound);
+        rec.begin(SpanKind::Solve);
+        rec.end(SpanKind::Solve);
+        rec.decision(Decision {
+            stage: DecisionStage::Adopted,
+            origin: Origin::Engine,
+            reason: Reason::None,
+            app: 9,
+            from: 0,
+            to: 2,
+            detail: 0.0,
+        });
+        rec.end(SpanKind::RegionRound);
+        hub.harvest(&mut rec);
+        hub.commit_round(3);
+        assert!(!hub.had_io_error());
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("[\n"));
+        assert!(text.contains("\"name\":\"solve\""));
+        assert!(text.contains("\"name\":\"decision\""));
+        assert!(text.contains("\"stage\":\"adopted\""));
+        assert!(text.contains("\"ts\":3000000"));
+        // Recorder drained; histograms merged into the hub.
+        assert!(rec.spans().is_empty());
+        let m = hub.metrics_json();
+        assert!(m.get("spans").get("solve").get("count").as_u64() == Some(1));
+        assert_eq!(m.get("dropped_events").as_u64(), Some(0));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn flight_ring_retains_last_k_rounds_and_dumps_once() {
+        let path = tmp("flight");
+        let mut hub = ObsHub::new(TraceLevel::Decisions, Some(&path)).unwrap();
+        let mut rec = hub.recorder(0);
+        for round in 0..40u32 {
+            rec.set_round(round);
+            rec.begin(SpanKind::RegionRound);
+            rec.end(SpanKind::RegionRound);
+            hub.harvest(&mut rec);
+            hub.commit_round(round);
+        }
+        hub.trigger(FlightTrigger::SloBreach, "test breach");
+        hub.trigger(FlightTrigger::SloBreach, "second breach (ignored)");
+        let dump_path = flight_dump_path(&path, FlightTrigger::SloBreach);
+        let dump = std::fs::read_to_string(&dump_path).unwrap();
+        let j = Json::parse(&dump).unwrap();
+        assert_eq!(j.get("trigger").as_str(), Some("slo_breach"));
+        assert_eq!(j.get("note").as_str(), Some("test breach"));
+        let rounds = j.get("rounds").as_arr().unwrap();
+        assert_eq!(rounds.len(), FLIGHT_ROUNDS, "ring keeps exactly K rounds");
+        // Oldest retained round is 40 - K (the ring dropped the rest).
+        assert_eq!(rounds[0].get("round").as_u64(), Some(40 - FLIGHT_ROUNDS as u64));
+        assert_eq!(rounds.last().unwrap().get("round").as_u64(), Some(39));
+        std::fs::remove_file(&path).unwrap();
+        std::fs::remove_file(&dump_path).unwrap();
+    }
+
+    #[test]
+    fn hub_without_path_still_accumulates() {
+        let mut hub = ObsHub::new(TraceLevel::Spans, None).unwrap();
+        let mut rec = hub.recorder(0);
+        rec.begin(SpanKind::Solve);
+        rec.end(SpanKind::Solve);
+        hub.harvest(&mut rec);
+        hub.commit_round(0);
+        assert_eq!(hub.metrics_json().get("spans").get("solve").get("count").as_u64(), Some(1));
+        // No trace path: triggers are a no-op rather than an error.
+        hub.trigger(FlightTrigger::ShedBurst, "no-op");
+    }
+}

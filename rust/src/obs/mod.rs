@@ -1,0 +1,482 @@
+//! Observability layer: hierarchical span tracing, decision provenance,
+//! and a flight recorder across the scheduler stack.
+//!
+//! Three invariants shape everything here (they are what lets tracing
+//! ride the repo's bit-identical equivalence contracts):
+//!
+//! 1. **Logical time only in the trace.** Exported span/decision events
+//!    carry `(round, seq)` logical timestamps, never wall clock, so the
+//!    emitted JSONL is byte-identical across worker counts, region
+//!    execution modes, and machine speeds. Wall-clock durations are
+//!    measured (`Instant`) but flow *only* into [`Log2Histogram`]s that
+//!    are reported as telemetry (like `pipeline_ms`), never compared.
+//! 2. **One recorder per logical track, installed thread-locally.** A
+//!    [`SpanRecorder`] represents a region (or the global/service
+//!    scope), not an OS thread. The owner installs it into the current
+//!    thread's slot for the duration of a round ([`swap`]), so
+//!    LocalSearch worker threads — which never get a recorder — record
+//!    nothing and can never perturb the trace.
+//! 3. **No-op when absent, zero-alloc when present.** Every emission
+//!    free function is a thread-local load + bounds-checked push into a
+//!    preallocated buffer; overflow drops the event and bumps a counter
+//!    instead of growing.
+//!
+//! The harvesting side ([`ObsHub`]) merges recorders in a fixed order
+//! per round, writes Chrome-trace-event/Perfetto-compatible JSONL, feeds
+//! the bounded [`FlightRecorder`] ring, and folds histograms into the
+//! `"schema": 3` metrics JSON. [`explain`] reconstructs decision cause
+//! chains offline from the written trace.
+
+pub mod explain;
+mod hub;
+mod recorder;
+
+pub use hub::{arm_panic_hook, FlightRecorder, FlightTrigger, ObsHub};
+pub use recorder::{DecisionEvent, SpanEvent, SpanRecorder, MAX_SPAN_DEPTH};
+
+use crate::util::stats::Log2Histogram;
+use std::cell::RefCell;
+
+/// How much the tracing layer records. Levels are cumulative: each one
+/// includes everything below it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TraceLevel {
+    /// Nothing is recorded; no recorder is ever installed.
+    Off,
+    /// Round-granularity spans only (`global_round`, `region_round`,
+    /// `ingest_batch`).
+    Rounds,
+    /// All spans in the vocabulary (adds `collect`, `forecast`,
+    /// `negotiate`, `solve`, `vet`, `adopt`, `snapshot`).
+    Spans,
+    /// Spans plus decision-provenance events (proposals, vet verdicts,
+    /// avoid-registry hits, adoptions, escalations).
+    Decisions,
+}
+
+impl TraceLevel {
+    /// Every level name accepted by `--trace-level`.
+    pub const NAMES: [&'static str; 4] = ["off", "rounds", "spans", "decisions"];
+
+    /// The CLI name of this level.
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceLevel::Off => "off",
+            TraceLevel::Rounds => "rounds",
+            TraceLevel::Spans => "spans",
+            TraceLevel::Decisions => "decisions",
+        }
+    }
+
+    /// Parse a CLI level name.
+    pub fn parse(s: &str) -> Option<TraceLevel> {
+        match s {
+            "off" => Some(TraceLevel::Off),
+            "rounds" => Some(TraceLevel::Rounds),
+            "spans" => Some(TraceLevel::Spans),
+            "decisions" => Some(TraceLevel::Decisions),
+            _ => None,
+        }
+    }
+}
+
+/// The static span vocabulary. Adding a kind means adding it here, to
+/// [`SpanKind::name`], and (if it should appear at the `rounds` level)
+/// to [`SpanKind::min_level`] — nothing else; buffers and histograms
+/// size themselves from [`N_SPAN_KINDS`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// One whole multi-region round (global scope).
+    GlobalRound = 0,
+    /// One region's balancing round.
+    RegionRound = 1,
+    /// Metric collection / re-scrape.
+    Collect = 2,
+    /// Forecast history upkeep + prediction.
+    Forecast = 3,
+    /// One §3.4 propose→vet→feed-back negotiation.
+    Negotiate = 4,
+    /// A solver invocation (plain or warm-started).
+    Solve = 5,
+    /// One vet pass over a proposal's items.
+    Vet = 6,
+    /// Decision execution (`state.adopt`).
+    Adopt = 7,
+    /// Snapshot serialization.
+    Snapshot = 8,
+    /// One service ingest round (drain + admit + solve).
+    IngestBatch = 9,
+}
+
+/// Number of span kinds (array sizes for per-kind state).
+pub const N_SPAN_KINDS: usize = 10;
+
+impl SpanKind {
+    /// Trace-file name of this span kind.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::GlobalRound => "global_round",
+            SpanKind::RegionRound => "region_round",
+            SpanKind::Collect => "collect",
+            SpanKind::Forecast => "forecast",
+            SpanKind::Negotiate => "negotiate",
+            SpanKind::Solve => "solve",
+            SpanKind::Vet => "vet",
+            SpanKind::Adopt => "adopt",
+            SpanKind::Snapshot => "snapshot",
+            SpanKind::IngestBatch => "ingest_batch",
+        }
+    }
+
+    /// Inverse of the `repr(u8)` discriminant (for harvested events).
+    pub fn from_u8(v: u8) -> SpanKind {
+        match v {
+            0 => SpanKind::GlobalRound,
+            1 => SpanKind::RegionRound,
+            2 => SpanKind::Collect,
+            3 => SpanKind::Forecast,
+            4 => SpanKind::Negotiate,
+            5 => SpanKind::Solve,
+            6 => SpanKind::Vet,
+            7 => SpanKind::Adopt,
+            8 => SpanKind::Snapshot,
+            _ => SpanKind::IngestBatch,
+        }
+    }
+
+    /// The lowest [`TraceLevel`] at which this span is recorded.
+    pub fn min_level(self) -> TraceLevel {
+        match self {
+            SpanKind::GlobalRound | SpanKind::RegionRound | SpanKind::IngestBatch => {
+                TraceLevel::Rounds
+            }
+            _ => TraceLevel::Spans,
+        }
+    }
+}
+
+/// Stage of a decision-provenance event within the propose → vet →
+/// avoid → escalate → adopt chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum DecisionStage {
+    /// An item was proposed by a negotiation layer.
+    Proposed = 0,
+    /// The proposal was vetted; `reason` carries the verdict.
+    Vetted = 1,
+    /// The move/migration was adopted into the fleet.
+    Adopted = 2,
+    /// A rejection was fed back as a new avoid-registry edge.
+    AvoidRecorded = 3,
+    /// A persistent avoid edge escalated to cross-layer pressure.
+    Escalated = 4,
+    /// A region's drained escalation count contributed global pressure.
+    EscalationPressure = 5,
+}
+
+impl DecisionStage {
+    /// Trace-file name of this stage.
+    pub fn name(self) -> &'static str {
+        match self {
+            DecisionStage::Proposed => "proposed",
+            DecisionStage::Vetted => "vetted",
+            DecisionStage::Adopted => "adopted",
+            DecisionStage::AvoidRecorded => "avoid_recorded",
+            DecisionStage::Escalated => "escalated",
+            DecisionStage::EscalationPressure => "escalation_pressure",
+        }
+    }
+
+    /// Inverse of the `repr(u8)` discriminant.
+    pub fn from_u8(v: u8) -> DecisionStage {
+        match v {
+            0 => DecisionStage::Proposed,
+            1 => DecisionStage::Vetted,
+            2 => DecisionStage::Adopted,
+            3 => DecisionStage::AvoidRecorded,
+            4 => DecisionStage::Escalated,
+            _ => DecisionStage::EscalationPressure,
+        }
+    }
+}
+
+/// Which scheduler layer originated a decision event. Determines how
+/// `from`/`to` are interpreted: tiers for [`Origin::Protocol`] and
+/// [`Origin::Engine`], regions for [`Origin::Global`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Origin {
+    /// The per-region SPTLB co-operation protocol (tier moves).
+    Protocol = 0,
+    /// The global cross-region scheduler (migrations).
+    Global = 1,
+    /// The fleet engine itself (adoption, escalation aging).
+    Engine = 2,
+}
+
+impl Origin {
+    /// Trace-file name of this origin.
+    pub fn name(self) -> &'static str {
+        match self {
+            Origin::Protocol => "protocol",
+            Origin::Global => "global",
+            Origin::Engine => "engine",
+        }
+    }
+
+    /// Inverse of the `repr(u8)` discriminant.
+    pub fn from_u8(v: u8) -> Origin {
+        match v {
+            0 => Origin::Protocol,
+            1 => Origin::Global,
+            _ => Origin::Engine,
+        }
+    }
+}
+
+/// Reject-reason vocabulary mirrored from `coop::RejectReason` (kept
+/// here so `obs` has no dependency on the scheduler layers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Reason {
+    /// Not a rejection (accepts, adoptions, escalations).
+    None = 0,
+    /// Proximity budget exceeded; `detail` = best achievable ms.
+    Proximity = 1,
+    /// Transition latency too high; `detail` = p99 ms.
+    TransitionLatency = 2,
+    /// Host-level packing failure.
+    Packing = 3,
+    /// Destination capacity exhausted.
+    Capacity = 4,
+    /// No SLO-compatible destination tier.
+    Routability = 5,
+}
+
+impl Reason {
+    /// Trace-file name of this reason.
+    pub fn name(self) -> &'static str {
+        match self {
+            Reason::None => "none",
+            Reason::Proximity => "proximity",
+            Reason::TransitionLatency => "transition_latency",
+            Reason::Packing => "packing",
+            Reason::Capacity => "capacity",
+            Reason::Routability => "routability",
+        }
+    }
+
+    /// Inverse of the `repr(u8)` discriminant.
+    pub fn from_u8(v: u8) -> Reason {
+        match v {
+            0 => Reason::None,
+            1 => Reason::Proximity,
+            2 => Reason::TransitionLatency,
+            3 => Reason::Packing,
+            4 => Reason::Capacity,
+            _ => Reason::Routability,
+        }
+    }
+}
+
+/// Free-form value histograms recorded alongside the per-span-kind
+/// duration histograms (distinct slots, so domain values never mix with
+/// nanosecond durations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SampleKind {
+    /// |from - to| of an adopted tier move / region migration.
+    MigrationDistance = 0,
+    /// Events admitted per ingest batch.
+    BatchSize = 1,
+}
+
+/// Number of free-form sample kinds.
+pub const N_SAMPLE_KINDS: usize = 2;
+
+/// Total histogram slots per recorder: span durations first, then the
+/// free-form samples.
+pub(crate) const N_HISTS: usize = N_SPAN_KINDS + N_SAMPLE_KINDS;
+
+impl SampleKind {
+    /// Metrics-JSON name of this sample kind.
+    pub fn name(self) -> &'static str {
+        match self {
+            SampleKind::MigrationDistance => "migration_distance",
+            SampleKind::BatchSize => "batch_size",
+        }
+    }
+
+    /// Inverse of the `repr(u8)` discriminant.
+    pub fn from_u8(v: u8) -> SampleKind {
+        match v {
+            0 => SampleKind::MigrationDistance,
+            _ => SampleKind::BatchSize,
+        }
+    }
+}
+
+/// App-id sentinel for region-scoped decision events (escalation
+/// pressure) that are not attributable to a single app.
+pub const NO_APP: u32 = u32::MAX;
+
+/// Track id of the global/service scope (regions use their index).
+pub const GLOBAL_TRACK: u16 = u16::MAX;
+
+/// One decision-provenance emission, before the recorder stamps logical
+/// time and track onto it.
+#[derive(Debug, Clone, Copy)]
+pub struct Decision {
+    /// Chain stage.
+    pub stage: DecisionStage,
+    /// Originating scheduler layer.
+    pub origin: Origin,
+    /// Verdict reason ([`Reason::None`] outside vet stages).
+    pub reason: Reason,
+    /// Subject app id ([`NO_APP`] for region-scoped events).
+    pub app: u32,
+    /// Source tier/region (-1 when not applicable).
+    pub from: i64,
+    /// Destination tier/region (-1 when not applicable).
+    pub to: i64,
+    /// Reason-specific payload (achievable ms, p99 ms, pressure count).
+    pub detail: f64,
+}
+
+thread_local! {
+    static RECORDER: RefCell<Option<SpanRecorder>> = const { RefCell::new(None) };
+}
+
+/// Swap the current thread's recorder slot, returning the previous
+/// occupant. The primitive behind install/uninstall; callers that may
+/// nest (sequential region execution under an installed global
+/// recorder) must restore what they displaced.
+pub fn swap(rec: Option<SpanRecorder>) -> Option<SpanRecorder> {
+    RECORDER.with(|r| std::mem::replace(&mut *r.borrow_mut(), rec))
+}
+
+/// Install a recorder on the current thread for the duration of a
+/// round. Returns whatever was previously installed.
+pub fn install(rec: SpanRecorder) -> Option<SpanRecorder> {
+    swap(Some(rec))
+}
+
+/// Remove and return the current thread's recorder.
+pub fn uninstall() -> Option<SpanRecorder> {
+    swap(None)
+}
+
+/// Begin a span. No-op without an installed recorder or below the
+/// span's minimum level.
+#[inline]
+pub fn begin(kind: SpanKind) {
+    RECORDER.with(|r| {
+        if let Some(rec) = r.borrow_mut().as_mut() {
+            rec.begin(kind);
+        }
+    });
+}
+
+/// End a span begun with [`begin`]. Must be called under the same level
+/// and recorder so begin/end stay balanced.
+#[inline]
+pub fn end(kind: SpanKind) {
+    RECORDER.with(|r| {
+        if let Some(rec) = r.borrow_mut().as_mut() {
+            rec.end(kind);
+        }
+    });
+}
+
+/// Emit a decision-provenance event (recorded only at
+/// [`TraceLevel::Decisions`]).
+#[inline]
+pub fn decision(d: Decision) {
+    RECORDER.with(|r| {
+        if let Some(rec) = r.borrow_mut().as_mut() {
+            rec.decision(d);
+        }
+    });
+}
+
+/// Record a value into the installed recorder's free-form histogram for
+/// `kind` (migration distance, batch size).
+#[inline]
+pub fn sample(kind: SampleKind, value: u64) {
+    RECORDER.with(|r| {
+        if let Some(rec) = r.borrow_mut().as_mut() {
+            rec.sample(kind, value);
+        }
+    });
+}
+
+/// Set the logical round on the installed recorder (resets the
+/// within-round sequence counter).
+#[inline]
+pub fn set_round(round: u32) {
+    RECORDER.with(|r| {
+        if let Some(rec) = r.borrow_mut().as_mut() {
+            rec.set_round(round);
+        }
+    });
+}
+
+pub(crate) fn hist_array() -> [Log2Histogram; N_HISTS] {
+    [Log2Histogram::new(); N_HISTS]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_are_ordered_and_named() {
+        assert!(TraceLevel::Off < TraceLevel::Rounds);
+        assert!(TraceLevel::Rounds < TraceLevel::Spans);
+        assert!(TraceLevel::Spans < TraceLevel::Decisions);
+        for name in TraceLevel::NAMES {
+            assert_eq!(TraceLevel::parse(name).unwrap().name(), name);
+        }
+        assert!(TraceLevel::parse("verbose").is_none());
+    }
+
+    #[test]
+    fn span_kind_round_trips_through_u8() {
+        for v in 0..N_SPAN_KINDS as u8 {
+            let k = SpanKind::from_u8(v);
+            assert_eq!(k as u8, v);
+            assert!(!k.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn emission_without_recorder_is_a_noop() {
+        assert!(uninstall().is_none());
+        begin(SpanKind::Solve);
+        end(SpanKind::Solve);
+        decision(Decision {
+            stage: DecisionStage::Adopted,
+            origin: Origin::Engine,
+            reason: Reason::None,
+            app: 1,
+            from: 0,
+            to: 1,
+            detail: 0.0,
+        });
+        set_round(7);
+        assert!(uninstall().is_none());
+    }
+
+    #[test]
+    fn swap_nests_and_restores() {
+        let outer = SpanRecorder::new(TraceLevel::Spans, GLOBAL_TRACK);
+        assert!(install(outer).is_none());
+        let inner = SpanRecorder::new(TraceLevel::Spans, 0);
+        let displaced = swap(Some(inner)).expect("outer recorder present");
+        assert_eq!(displaced.track(), GLOBAL_TRACK);
+        let inner_back = swap(Some(displaced)).expect("inner recorder present");
+        assert_eq!(inner_back.track(), 0);
+        assert_eq!(uninstall().expect("outer restored").track(), GLOBAL_TRACK);
+    }
+}

@@ -1,0 +1,335 @@
+//! Preallocated per-track span/decision recorder.
+//!
+//! A [`SpanRecorder`] is owned by whoever owns the logical track (a
+//! region runtime, the coordinator, the service) and installed into the
+//! running thread's slot for the duration of a round. All emission
+//! paths are bounded-buffer pushes: once the buffers reach their
+//! preallocated capacity further events are dropped and counted, never
+//! grown, so tracing at any level stays allocation-free in the warm
+//! steady state.
+
+use super::{Decision, SampleKind, SpanKind, TraceLevel, N_HISTS, N_SPAN_KINDS};
+use crate::util::stats::Log2Histogram;
+use std::time::Instant;
+
+/// Maximum span nesting depth tracked for wall-clock durations.
+pub const MAX_SPAN_DEPTH: usize = 16;
+
+/// Preallocated span-event capacity per recorder per round.
+const SPAN_CAPACITY: usize = 4096;
+
+/// Preallocated decision-event capacity per recorder per round.
+const DECISION_CAPACITY: usize = 8192;
+
+/// One span boundary in logical time. `ts = round * 1e6 + seq` is the
+/// deterministic Chrome-trace timestamp.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Logical track (region index or [`super::GLOBAL_TRACK`]).
+    pub track: u16,
+    /// [`SpanKind`] discriminant.
+    pub kind: u8,
+    /// 0 = begin, 1 = end.
+    pub phase: u8,
+    /// Logical round.
+    pub round: u32,
+    /// Within-round emission sequence.
+    pub seq: u32,
+}
+
+impl SpanEvent {
+    /// Deterministic trace timestamp in "microseconds".
+    pub fn ts(&self) -> u64 {
+        self.round as u64 * 1_000_000 + self.seq as u64
+    }
+}
+
+/// One decision-provenance event in logical time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecisionEvent {
+    /// Logical track (region index or [`super::GLOBAL_TRACK`]).
+    pub track: u16,
+    /// [`super::DecisionStage`] discriminant.
+    pub stage: u8,
+    /// [`super::Origin`] discriminant.
+    pub origin: u8,
+    /// [`super::Reason`] discriminant.
+    pub reason: u8,
+    /// Logical round.
+    pub round: u32,
+    /// Within-round emission sequence.
+    pub seq: u32,
+    /// Subject app id ([`super::NO_APP`] for region-scoped events).
+    pub app: u32,
+    /// Source tier/region (-1 when not applicable).
+    pub from: i64,
+    /// Destination tier/region (-1 when not applicable).
+    pub to: i64,
+    /// Reason-specific payload.
+    pub detail: f64,
+}
+
+impl DecisionEvent {
+    /// Deterministic trace timestamp in "microseconds".
+    pub fn ts(&self) -> u64 {
+        self.round as u64 * 1_000_000 + self.seq as u64
+    }
+}
+
+/// Per-track ring-buffer recorder over the static span vocabulary.
+///
+/// Emits logical-time [`SpanEvent`]s/[`DecisionEvent`]s into
+/// preallocated buffers and keeps per-kind [`Log2Histogram`]s of
+/// wall-clock span durations (telemetry only — wall clock never reaches
+/// the trace file).
+#[derive(Debug)]
+pub struct SpanRecorder {
+    level: TraceLevel,
+    track: u16,
+    round: u32,
+    seq: u32,
+    spans: Vec<SpanEvent>,
+    decisions: Vec<DecisionEvent>,
+    stack: [(u8, Instant); MAX_SPAN_DEPTH],
+    depth: usize,
+    dropped: u64,
+    hists: [Log2Histogram; N_HISTS],
+}
+
+impl SpanRecorder {
+    /// A recorder for `track` at `level`, with all buffers preallocated.
+    pub fn new(level: TraceLevel, track: u16) -> Self {
+        Self {
+            level,
+            track,
+            round: 0,
+            seq: 0,
+            spans: Vec::with_capacity(SPAN_CAPACITY),
+            decisions: Vec::with_capacity(DECISION_CAPACITY),
+            stack: [(0, Instant::now()); MAX_SPAN_DEPTH],
+            depth: 0,
+            dropped: 0,
+            hists: super::hist_array(),
+        }
+    }
+
+    /// The recorder's configured level.
+    pub fn level(&self) -> TraceLevel {
+        self.level
+    }
+
+    /// The recorder's logical track id.
+    pub fn track(&self) -> u16 {
+        self.track
+    }
+
+    /// Set the logical round and reset the within-round sequence.
+    pub fn set_round(&mut self, round: u32) {
+        self.round = round;
+        self.seq = 0;
+    }
+
+    fn next_seq(&mut self) -> u32 {
+        let s = self.seq;
+        self.seq += 1;
+        s
+    }
+
+    /// Begin a span (no-op below the span's minimum level).
+    pub fn begin(&mut self, kind: SpanKind) {
+        if self.level < kind.min_level() {
+            return;
+        }
+        let seq = self.next_seq();
+        if self.spans.len() < self.spans.capacity() {
+            self.spans.push(SpanEvent {
+                track: self.track,
+                kind: kind as u8,
+                phase: 0,
+                round: self.round,
+                seq,
+            });
+        } else {
+            self.dropped += 1;
+        }
+        if self.depth < MAX_SPAN_DEPTH {
+            self.stack[self.depth] = (kind as u8, Instant::now());
+        }
+        self.depth += 1;
+    }
+
+    /// End a span begun with [`SpanRecorder::begin`].
+    pub fn end(&mut self, kind: SpanKind) {
+        if self.level < kind.min_level() {
+            return;
+        }
+        let seq = self.next_seq();
+        if self.spans.len() < self.spans.capacity() {
+            self.spans.push(SpanEvent {
+                track: self.track,
+                kind: kind as u8,
+                phase: 1,
+                round: self.round,
+                seq,
+            });
+        } else {
+            self.dropped += 1;
+        }
+        if self.depth > 0 {
+            self.depth -= 1;
+            if self.depth < MAX_SPAN_DEPTH {
+                let (started_kind, started_at) = self.stack[self.depth];
+                if started_kind == kind as u8 {
+                    let ns = started_at.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+                    self.hists[kind as usize].record(ns);
+                }
+            }
+        }
+    }
+
+    /// Emit a decision event (no-op below [`TraceLevel::Decisions`]).
+    pub fn decision(&mut self, d: Decision) {
+        if self.level < TraceLevel::Decisions {
+            return;
+        }
+        let seq = self.next_seq();
+        if self.decisions.len() < self.decisions.capacity() {
+            self.decisions.push(DecisionEvent {
+                track: self.track,
+                stage: d.stage as u8,
+                origin: d.origin as u8,
+                reason: d.reason as u8,
+                round: self.round,
+                seq,
+                app: d.app,
+                from: d.from,
+                to: d.to,
+                detail: d.detail,
+            });
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Record a free-form value (migration distance, batch size) into
+    /// its dedicated histogram slot. Active at any level.
+    pub fn sample(&mut self, kind: SampleKind, value: u64) {
+        self.hists[N_SPAN_KINDS + kind as usize].record(value);
+    }
+
+    /// Span events recorded since the last [`SpanRecorder::clear`].
+    pub fn spans(&self) -> &[SpanEvent] {
+        &self.spans
+    }
+
+    /// Decision events recorded since the last [`SpanRecorder::clear`].
+    pub fn decisions(&self) -> &[DecisionEvent] {
+        &self.decisions
+    }
+
+    /// Events dropped due to full buffers (cumulative).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Per-kind histograms: span durations (ns) in the first
+    /// [`N_SPAN_KINDS`] slots, free-form samples after.
+    pub fn hists(&self) -> &[Log2Histogram; N_HISTS] {
+        &self.hists
+    }
+
+    /// Clear event buffers (keeping capacity) after a harvest.
+    pub fn clear(&mut self) {
+        self.spans.clear();
+        self.decisions.clear();
+        self.depth = 0;
+    }
+
+    /// Clear the duration histograms (after the hub merged them).
+    pub fn clear_hists(&mut self) {
+        for h in &mut self.hists {
+            h.clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Decision, DecisionStage, Origin, Reason};
+    use super::*;
+
+    #[test]
+    fn spans_respect_levels_and_balance() {
+        let mut r = SpanRecorder::new(TraceLevel::Rounds, 3);
+        r.set_round(5);
+        r.begin(SpanKind::RegionRound); // rounds-level: recorded
+        r.begin(SpanKind::Solve); // spans-level: filtered
+        r.end(SpanKind::Solve);
+        r.end(SpanKind::RegionRound);
+        assert_eq!(r.spans().len(), 2);
+        assert_eq!(r.spans()[0].kind, SpanKind::RegionRound as u8);
+        assert_eq!(r.spans()[0].phase, 0);
+        assert_eq!(r.spans()[1].phase, 1);
+        assert_eq!(r.spans()[0].ts(), 5_000_000);
+        assert!(r.hists()[SpanKind::RegionRound as usize].count() >= 1);
+    }
+
+    #[test]
+    fn decisions_only_at_decisions_level() {
+        let d = Decision {
+            stage: DecisionStage::Proposed,
+            origin: Origin::Protocol,
+            reason: Reason::None,
+            app: 42,
+            from: 1,
+            to: 2,
+            detail: 0.0,
+        };
+        let mut spans_only = SpanRecorder::new(TraceLevel::Spans, 0);
+        spans_only.decision(d);
+        assert!(spans_only.decisions().is_empty());
+        let mut full = SpanRecorder::new(TraceLevel::Decisions, 0);
+        full.decision(d);
+        assert_eq!(full.decisions().len(), 1);
+        assert_eq!(full.decisions()[0].app, 42);
+    }
+
+    #[test]
+    fn overflow_drops_and_counts_instead_of_growing() {
+        let mut r = SpanRecorder::new(TraceLevel::Decisions, 0);
+        let cap = r.spans.capacity();
+        for _ in 0..cap + 10 {
+            r.begin(SpanKind::Solve);
+            r.end(SpanKind::Solve);
+        }
+        assert_eq!(r.spans().len(), cap);
+        assert_eq!(r.spans.capacity(), cap, "buffer must not grow");
+        assert_eq!(r.dropped(), 2 * (cap as u64 + 10) - cap as u64);
+        r.clear();
+        assert!(r.spans().is_empty());
+        assert_eq!(r.spans.capacity(), cap, "clear keeps capacity");
+    }
+
+    #[test]
+    fn clear_resets_rounds_independent_state() {
+        let mut r = SpanRecorder::new(TraceLevel::Decisions, 0);
+        r.set_round(1);
+        r.begin(SpanKind::Solve);
+        r.end(SpanKind::Solve);
+        r.decision(Decision {
+            stage: DecisionStage::Adopted,
+            origin: Origin::Engine,
+            reason: Reason::None,
+            app: 1,
+            from: 0,
+            to: 1,
+            detail: 0.0,
+        });
+        r.clear();
+        assert!(r.spans().is_empty() && r.decisions().is_empty());
+        // Histograms survive clear (they are merged separately).
+        assert_eq!(r.hists()[SpanKind::Solve as usize].count(), 1);
+        r.clear_hists();
+        assert_eq!(r.hists()[SpanKind::Solve as usize].count(), 0);
+    }
+}

@@ -34,6 +34,12 @@ pub enum Error {
     /// Command-line usage error (unknown flag, unparseable value).
     #[error("{0}")]
     Usage(String),
+
+    /// A metrics document declared a `schema` version this build does
+    /// not understand (missing, zero, or newer than
+    /// [`crate::coordinator::METRICS_SCHEMA`]).
+    #[error("metrics: {0}")]
+    UnknownSchema(#[from] crate::coordinator::SchemaError),
 }
 
 impl Error {
@@ -44,6 +50,7 @@ impl Error {
         match self {
             Error::Config(_) | Error::Usage(_) => 2,
             Error::Io(_) | Error::Solver(_) | Error::SnapshotCorrupt(_) => 1,
+            Error::UnknownSchema(_) => 1,
         }
     }
 }
@@ -66,6 +73,9 @@ mod tests {
         assert_eq!(io.exit_code(), 1);
         assert_eq!(Error::Solver("parity".into()).exit_code(), 1);
         assert_eq!(Error::SnapshotCorrupt("mismatch".into()).exit_code(), 1);
+        let schema: Error = crate::coordinator::SchemaError { found: Some(99) }.into();
+        assert_eq!(schema.exit_code(), 1);
+        assert!(schema.to_string().contains("unsupported metrics schema 99"), "{schema}");
     }
 
     #[test]

@@ -52,6 +52,7 @@ use crate::hierarchy::variants::{worst_imbalance, BALANCED_TARGET};
 use crate::metrics::ShedReason;
 use crate::model::FleetEvent;
 use crate::network::LatencyMatrix;
+use crate::obs::{self, FlightTrigger, ObsHub, SpanRecorder};
 use crate::sptlb::SptlbConfig;
 use crate::util::json::Json;
 use crate::util::timer::Stopwatch;
@@ -117,7 +118,8 @@ pub struct Service {
     journal_bounds: Vec<usize>,
     /// Deterministic per-round records (the replay-equality witness).
     pub rounds: Vec<ServiceRound>,
-    /// Aggregated metrics, schema 2 (includes ingest/shed telemetry).
+    /// Aggregated metrics, schema 3 (ingest/shed telemetry plus the
+    /// optional `obs` summary when tracing is armed).
     pub metrics: ServiceMetrics,
     // -- ingest plane
     queue: Arc<IngestQueue>,
@@ -127,7 +129,17 @@ pub struct Service {
     batch: Vec<FleetEvent>,
     /// Recycled event delta for full-path rounds.
     delta: FleetDelta,
+    // -- observability (None unless `--trace` armed it)
+    hub: Option<ObsHub>,
+    /// The service's span recorder, parked between rounds and installed
+    /// into the running thread's slot for each round's scope.
+    obs: Option<SpanRecorder>,
 }
+
+/// Minimum drained-batch size for a shed burst: a round that drains at
+/// least this many events and sheds at least half of them fires the
+/// [`FlightTrigger::ShedBurst`] flight dump.
+const SHED_BURST_MIN_BATCH: usize = 8;
 
 impl Service {
     /// Build a service from a validated config: generate the workload
@@ -155,7 +167,57 @@ impl Service {
             stop: Arc::new(AtomicBool::new(false)),
             batch: Vec::with_capacity(config.max_batch),
             delta: FleetDelta::default(),
+            hub: None,
+            obs: None,
             config,
+        }
+    }
+
+    /// Arm tracing: the service records onto [`obs::GLOBAL_TRACK`] and
+    /// harvests into `hub` after every non-idle round.
+    pub fn attach_obs(&mut self, hub: ObsHub) {
+        self.obs = Some(hub.recorder(obs::GLOBAL_TRACK));
+        self.hub = Some(hub);
+    }
+
+    /// The attached hub, if tracing is armed.
+    pub fn obs_hub(&self) -> Option<&ObsHub> {
+        self.hub.as_ref()
+    }
+
+    /// Fire a flight-recorder trigger (dumps the retained round window
+    /// once per trigger kind — see [`ObsHub::trigger`]).
+    pub fn obs_trigger(&mut self, trigger: FlightTrigger, note: &str) {
+        if let Some(hub) = self.hub.as_mut() {
+            hub.trigger(trigger, note);
+        }
+    }
+
+    /// Service metrics with the hub's `obs` summary folded in when
+    /// tracing is armed.
+    pub fn metrics_json(&self) -> Json {
+        self.metrics.to_json_with_obs(self.hub.as_ref().map(ObsHub::metrics_json))
+    }
+
+    /// Install the parked recorder into this thread's slot for the
+    /// round about to run (no-op when tracing is off).
+    fn obs_install_round(&mut self) {
+        if let Some(mut rec) = self.obs.take() {
+            rec.set_round(self.rounds_done);
+            let displaced = obs::swap(Some(rec));
+            debug_assert!(displaced.is_none(), "service thread slot was free");
+        }
+    }
+
+    /// Uninstall the recorder, park it, and harvest the round's events
+    /// into the hub (flight ring + trace file + histograms).
+    fn obs_harvest_round(&mut self, round: u32) {
+        if let Some(rec) = obs::uninstall() {
+            self.obs = Some(rec);
+        }
+        if let (Some(hub), Some(rec)) = (self.hub.as_mut(), self.obs.as_mut()) {
+            hub.harvest(rec);
+            hub.commit_round(round);
         }
     }
 
@@ -215,12 +277,22 @@ impl Service {
         }
         let sw = Stopwatch::start();
         let depth_after_drain = self.queue.len();
+        self.obs_install_round();
+        obs::begin(obs::SpanKind::IngestBatch);
+        let drained = self.batch.len();
         self.admit();
+        let shed_now = drained - self.batch.len();
+        obs::sample(obs::SampleKind::BatchSize, self.batch.len() as u64);
+        obs::end(obs::SpanKind::IngestBatch);
+        if drained >= SHED_BURST_MIN_BATCH && shed_now * 2 >= drained {
+            self.obs_trigger(FlightTrigger::ShedBurst, "admission shed at least half the batch");
+        }
         let record = self.solve_batch();
         self.metrics.ingest.accepted += record.n_events as u64;
         self.metrics.ingest.batch_events.push(record.n_events as f64);
         self.metrics.ingest.queue_depth.push(depth_after_drain as f64);
         self.metrics.ingest.round_ms.push(sw.elapsed_ms());
+        self.obs_harvest_round(record.round);
         Some(record)
     }
 
@@ -230,7 +302,10 @@ impl Service {
     pub fn round_from_events(&mut self, events: &[FleetEvent]) -> ServiceRound {
         self.batch.clear();
         self.batch.extend_from_slice(events);
-        self.solve_batch()
+        self.obs_install_round();
+        let record = self.solve_batch();
+        self.obs_harvest_round(record.round);
+        record
     }
 
     /// Replay a journal (one admitted-event list per round) on a fresh
@@ -242,6 +317,18 @@ impl Service {
             service.round_from_events(round);
         }
         service
+    }
+
+    /// [`Service::snapshot`] with the serialization cost recorded as a
+    /// `snapshot` span (attributed to the upcoming round's timestamp
+    /// window, since snapshots are taken between rounds).
+    pub fn snapshot_traced(&mut self) -> Snapshot {
+        self.obs_install_round();
+        obs::begin(obs::SpanKind::Snapshot);
+        let snap = self.snapshot();
+        obs::end(obs::SpanKind::Snapshot);
+        self.obs_harvest_round(self.rounds_done);
+        snap
     }
 
     /// Capture a restorable snapshot of the current service state.
@@ -469,6 +556,7 @@ impl Service {
                 let worst = worst_imbalance(&report.projected_utilization, BALANCED_TARGET);
                 if count_breach_tiers(&report.initial_utilization) > 0 {
                     self.metrics.breach_rounds += 1;
+                    self.obs_trigger(FlightTrigger::SloBreach, "pre-solve capacity breach");
                 }
                 let smape = self.engine.last_smape();
                 if smape.is_finite() {
@@ -570,6 +658,26 @@ mod tests {
             FleetEvent::Arrival { app } => assert_eq!(app.id.idx(), next),
             other => panic!("expected arrival, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn traced_ingest_rounds_fold_obs_into_metrics() {
+        let mut s = Service::new(test_config());
+        s.attach_obs(ObsHub::new(obs::TraceLevel::Decisions, None).unwrap());
+        let h = s.handle();
+        for k in 0..3u32 {
+            assert!(h.submit(drift(k as usize % 3, 1.2 + k as f64 * 0.1)));
+            s.ingest_round().expect("event was queued");
+        }
+        let _ = s.snapshot_traced();
+        let j = Json::parse(&s.metrics_json().to_string()).unwrap();
+        assert_eq!(j.get("schema").as_u64(), Some(3));
+        let o = j.get("obs");
+        assert_eq!(o.get("level").as_str(), Some("decisions"));
+        assert!(o.get("spans").get("ingest_batch").get("count").as_u64().unwrap_or(0) >= 3);
+        assert!(o.get("spans").get("snapshot").get("count").as_u64().unwrap_or(0) >= 1);
+        assert!(o.get("samples").get("batch_size").get("count").as_u64().unwrap_or(0) >= 3);
+        assert_eq!(o.get("dropped_events").as_u64(), Some(0));
     }
 
     #[test]

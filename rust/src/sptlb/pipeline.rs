@@ -161,6 +161,7 @@ impl Sptlb {
         let initial_utilization = problem.initial.tier_utilizations(apps, tiers);
 
         // ---- stage 3: solve (per integration variant) + execute ------
+        crate::obs::begin(crate::obs::SpanKind::Solve);
         let deadline = Deadline::after(self.config.timeout);
         let (solution, coop) = match self.config.variant {
             Variant::NoCnst => (self.solve_plain(problem, deadline, warm_loads), None),
@@ -188,6 +189,7 @@ impl Sptlb {
                 (out.solution.clone(), Some(out))
             }
         };
+        crate::obs::end(crate::obs::SpanKind::Solve);
 
         // ---- decision evaluation / metric emission --------------------
         let violations = validate(problem, &solution.assignment);

@@ -30,6 +30,118 @@ pub fn p99(xs: &[f64]) -> f64 {
     percentile(xs, 99.0)
 }
 
+/// Nearest-rank median of an unsorted slice (NaN on empty input).
+pub fn p50(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Nearest-rank 95th percentile of an unsorted slice (NaN on empty input).
+pub fn p95(xs: &[f64]) -> f64 {
+    percentile(xs, 95.0)
+}
+
+/// Number of buckets in a [`Log2Histogram`]: bucket 0 holds the exact
+/// value 0, bucket `i` (1..=64) holds values in `[2^(i-1), 2^i)`, so
+/// `u64::MAX` saturates into bucket 64.
+pub const LOG2_BUCKETS: usize = 65;
+
+/// Fixed-bucket power-of-two histogram over `u64` samples (span
+/// durations in ns, migration distances, batch sizes). Recording is a
+/// single `leading_zeros` + array increment — no allocation, no
+/// branching on sample order — so it is safe inside the zero-alloc
+/// steady-state round. Percentile queries return the *lower bound* of
+/// the bucket containing the nearest-rank sample, which is exact to
+/// within a factor of 2 by construction.
+#[derive(Debug, Clone, Copy)]
+pub struct Log2Histogram {
+    buckets: [u64; LOG2_BUCKETS],
+    count: u64,
+}
+
+impl Default for Log2Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Log2Histogram {
+    pub const fn new() -> Self {
+        Self { buckets: [0; LOG2_BUCKETS], count: 0 }
+    }
+
+    fn bucket_of(value: u64) -> usize {
+        if value == 0 {
+            0
+        } else {
+            64 - value.leading_zeros() as usize
+        }
+    }
+
+    /// Lower bound of bucket `i` (the value reported by percentiles).
+    fn bucket_floor(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else {
+            1u64 << (i - 1)
+        }
+    }
+
+    pub fn record(&mut self, value: u64) {
+        self.buckets[Self::bucket_of(value)] += 1;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn merge(&mut self, other: &Log2Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+    }
+
+    pub fn clear(&mut self) {
+        self.buckets = [0; LOG2_BUCKETS];
+        self.count = 0;
+    }
+
+    /// Nearest-rank percentile (q in [0,100]) as the containing bucket's
+    /// lower bound; 0 for an empty histogram.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 100.0);
+        let rank = (((q / 100.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return Self::bucket_floor(i);
+            }
+        }
+        Self::bucket_floor(LOG2_BUCKETS - 1)
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(99.0)
+    }
+}
+
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
@@ -384,5 +496,66 @@ mod tests {
         h.record(15.0);
         h.record(5.0);
         assert_eq!(h.total(), 3);
+    }
+
+    #[test]
+    fn p50_p95_p99_edge_cases() {
+        // Empty input: NaN across the whole helper family.
+        assert!(p50(&[]).is_nan());
+        assert!(p95(&[]).is_nan());
+        assert!(p99(&[]).is_nan());
+        // A single sample IS every percentile.
+        assert_eq!(p50(&[7.5]), 7.5);
+        assert_eq!(p95(&[7.5]), 7.5);
+        assert_eq!(p99(&[7.5]), 7.5);
+        // Nearest-rank on 1..=100.
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(p50(&xs), 50.0);
+        assert_eq!(p95(&xs), 95.0);
+        assert_eq!(p99(&xs), 99.0);
+    }
+
+    #[test]
+    fn log2_histogram_empty_and_single_sample() {
+        let mut h = Log2Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.p50(), 0, "empty histogram reports 0");
+        h.record(100); // bucket [64, 128)
+        assert_eq!(h.count(), 1);
+        for q in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(h.percentile(q), 64, "single sample is every percentile");
+        }
+    }
+
+    #[test]
+    fn log2_histogram_buckets_and_percentiles() {
+        let mut h = Log2Histogram::new();
+        h.record(0); // bucket 0
+        h.record(1); // bucket [1, 2)
+        for _ in 0..98 {
+            h.record(1000); // bucket [512, 1024)
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.percentile(1.0), 0);
+        assert_eq!(h.percentile(2.0), 1);
+        assert_eq!(h.p50(), 512);
+        assert_eq!(h.p99(), 512);
+    }
+
+    #[test]
+    fn log2_histogram_saturating_bucket_and_merge() {
+        let mut h = Log2Histogram::new();
+        h.record(u64::MAX); // top bucket [2^63, ..] — must not overflow
+        assert_eq!(h.p99(), 1u64 << 63);
+        let mut other = Log2Histogram::new();
+        other.record(0);
+        other.record(u64::MAX);
+        h.merge(&other);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.percentile(33.0), 0);
+        assert_eq!(h.p99(), 1u64 << 63);
+        h.clear();
+        assert!(h.is_empty());
+        assert_eq!(h.p99(), 0);
     }
 }

@@ -18,6 +18,7 @@ use sptlb::coordinator::{
 use sptlb::hierarchy::global::GlobalPolicy;
 use sptlb::hierarchy::variants::Variant;
 use sptlb::model::{Assignment, RegionId};
+use sptlb::obs::{ObsHub, TraceLevel};
 use sptlb::rebalancer::constraints::{validate, Violation};
 use sptlb::rebalancer::problem::{GoalWeights, Problem};
 use sptlb::rebalancer::scoring::score_assignment;
@@ -180,6 +181,89 @@ fn region_tagged_event_log_replay_is_worker_count_invariant() {
                     replay.region_fleet(RegionId(r)).assignment(),
                     "regions={n_regions} workers={workers}: region {r} assignment"
                 );
+            }
+        }
+    }
+}
+
+#[test]
+fn traces_are_bit_identical_across_worker_counts_and_nonperturbing() {
+    // The tracing layer must be a pure observer. Two pins per region
+    // count, replaying one recorded journal:
+    //
+    //  1. non-perturbation — a traced replay's decision log is
+    //     bit-identical to an untraced control replay's, and
+    //  2. trace determinism — the trace JSONL itself (logical
+    //     timestamps only, fixed harvest order) is byte-identical for
+    //     workers in {1, 2, 8}.
+    for n_regions in [1usize, 3] {
+        let make = |workers: usize| {
+            let bed = generate_multiregion(&MultiRegionSpec::new(
+                n_regions,
+                WorkloadSpec::small(),
+            ));
+            let cfg = MultiRegionConfig {
+                sptlb: SptlbConfig {
+                    variant: Variant::NoCnst,
+                    timeout: Duration::from_secs(20),
+                    samples_per_app: 40,
+                    parallel: ParallelConfig::with_workers(workers),
+                    ..SptlbConfig::default()
+                },
+                engine: EngineMode::Incremental,
+                scenario: MultiRegionScenario::multiregion(n_regions, 13),
+                policy: GlobalPolicy {
+                    spill_threshold: 0.55,
+                    accept_ceiling: 0.90,
+                    latency_budget_ms: 1e9,
+                    egress_budget: 1e9,
+                    ..GlobalPolicy::aggressive()
+                },
+                execution: RegionExecution::Parallel,
+                ..MultiRegionConfig::new(n_regions)
+            };
+            MultiRegionCoordinator::new(cfg, bed)
+        };
+        let mut live = make(1);
+        live.run(5);
+        let mut control = make(1);
+        control.run_events(&live.event_log);
+
+        let mut base_trace: Option<Vec<u8>> = None;
+        for workers in [1usize, 2, 8] {
+            let path = std::env::temp_dir().join(format!(
+                "sptlb_det_trace_{}_{n_regions}_{workers}.jsonl",
+                std::process::id()
+            ));
+            let mut traced = make(workers);
+            traced.attach_obs(
+                ObsHub::new(TraceLevel::Decisions, Some(path.as_path())).unwrap(),
+            );
+            traced.run_events(&live.event_log);
+
+            assert_eq!(traced.log.len(), control.log.len());
+            for (a, b) in control.log.iter().zip(&traced.log) {
+                for (ra, rb) in a.records.iter().zip(&b.records) {
+                    assert_eq!(
+                        ra.score.to_bits(),
+                        rb.score.to_bits(),
+                        "regions={n_regions} workers={workers} round {}: \
+                         tracing perturbed a decision",
+                        a.round
+                    );
+                    assert_eq!(ra.moves_executed, rb.moves_executed);
+                }
+            }
+
+            let bytes = std::fs::read(&path).unwrap();
+            std::fs::remove_file(&path).ok();
+            assert!(!bytes.is_empty(), "trace file was written");
+            match &base_trace {
+                None => base_trace = Some(bytes),
+                Some(base) => assert_eq!(
+                    &bytes, base,
+                    "regions={n_regions} workers={workers}: trace bytes diverged"
+                ),
             }
         }
     }

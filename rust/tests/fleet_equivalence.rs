@@ -15,6 +15,7 @@ use sptlb::coordinator::{
 };
 use sptlb::hierarchy::variants::Variant;
 use sptlb::model::{AppId, FleetEvent, RegionId, ResourceVec};
+use sptlb::obs::{ObsHub, TraceLevel};
 use sptlb::rebalancer::ParallelConfig;
 use sptlb::service::{
     append_journal_round, load_journal, ScenarioProducer, Service, ServiceConfig, Snapshot,
@@ -133,6 +134,43 @@ fn incremental_matches_rebuild_bit_for_bit_on_mixed_paper_scenario() {
         assert_eq!(ra.moves_executed, rb.moves_executed);
         assert_eq!(ra.worst_imbalance.to_bits(), rb.worst_imbalance.to_bits());
     }
+}
+
+#[test]
+fn tracing_at_decisions_level_is_equivalence_preserving() {
+    // Observability satellite: the span/decision recorder is a pure
+    // observer. Running the full coop-protocol scenario with tracing
+    // armed at the most verbose level (no trace file — the recorder and
+    // histogram paths still run in full) must produce `BalanceReport`s
+    // bit-identical to an untraced twin drawing the same event stream.
+    let scenario = ScenarioConfig {
+        drift_fraction: 0.5,
+        arrival_prob: 0.5,
+        departure_prob: 0.3,
+        ..ScenarioConfig::churn()
+    };
+    let run = |traced: bool| {
+        let bed = generate(&WorkloadSpec::small());
+        let mut c = Coordinator::from_testbed(
+            config(Variant::ManualCnst, scenario.clone(), 2, EngineMode::Incremental, 1),
+            bed,
+        );
+        if traced {
+            c.attach_obs(ObsHub::new(TraceLevel::Decisions, None).unwrap());
+        }
+        let reports = c.run(10);
+        (reports, c)
+    };
+    let (plain_reports, plain) = run(false);
+    let (traced_reports, traced) = run(true);
+    assert_eq!(plain.event_log, traced.event_log);
+    assert_reports_bit_identical(&plain_reports, &traced_reports);
+    assert_eq!(plain.current_assignment(), traced.current_assignment());
+    // The traced twin really recorded work: its histograms saw a solve
+    // span for every round.
+    let obs = traced.obs_hub().expect("hub stays attached").metrics_json();
+    let solves = obs.get("spans").get("solve").get("count").as_u64();
+    assert!(solves.is_some_and(|n| n >= 10), "solve spans recorded: {solves:?}");
 }
 
 #[test]

@@ -1,0 +1,161 @@
+//! The observability extension of the zero-allocation contract: a warm
+//! drift-only ingest round with tracing armed at the *most verbose*
+//! level (`decisions`, trace file being written) must still not touch
+//! the global allocator. Every tracing buffer — recorder span/decision
+//! rings, flight-ring capsules, the trace writer's line scratch and
+//! BufWriter — is preallocated and recycled, so emission is bounded
+//! pushes plus buffered file writes.
+//!
+//! Same gated counting allocator as tests/ingest_zero_alloc.rs; one
+//! `#[test]` in this binary so no parallel test bleeds allocations into
+//! the counting window.
+
+use sptlb::model::FleetEvent;
+use sptlb::obs::{ObsHub, TraceLevel};
+use sptlb::service::{Service, ServiceConfig};
+use sptlb::util::prng::Pcg64;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Duration;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static COUNTING: AtomicBool = AtomicBool::new(false);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+const WARM_ROUNDS: usize = 6;
+const MEASURED_ROUNDS: usize = 5;
+const BATCH: usize = 16;
+
+#[test]
+fn warm_traced_ingest_rounds_do_not_allocate() {
+    let config = ServiceConfig::builder()
+        .workload("paper")
+        .events("drift")
+        .variant("no_cnst")
+        .timeout(Duration::from_millis(20))
+        .batch_budget(Duration::from_millis(1))
+        .max_batch(BATCH)
+        .queue_capacity(64)
+        .build()
+        .unwrap();
+    let mut service = Service::new(config);
+
+    // Arm tracing at the most verbose level with a real trace file, so
+    // the measured window covers span emission, decision emission,
+    // sampling, harvest into the flight ring, AND the buffered JSONL
+    // writes — the full `serve --trace` steady-state path.
+    let trace_path = std::env::temp_dir().join(format!(
+        "sptlb_obs_zero_alloc_{}.jsonl",
+        std::process::id()
+    ));
+    service.attach_obs(ObsHub::new(TraceLevel::Decisions, Some(trace_path.as_path())).unwrap());
+    let handle = service.handle();
+
+    // Batches are pre-generated outside the counting window; drift
+    // events carry only Copy payloads.
+    let mut rng = Pcg64::new(0x0B5);
+    let batches: Vec<Vec<FleetEvent>> = (0..1 + WARM_ROUNDS + MEASURED_ROUNDS)
+        .map(|_| {
+            (0..BATCH)
+                .map(|_| {
+                    let apps = service.fleet().apps();
+                    let app = &apps[rng.range(0, apps.len())];
+                    FleetEvent::DemandDrift {
+                        app: app.id,
+                        demand: app.demand * (0.9 + rng.range(0, 21) as f64 / 100.0),
+                    }
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut batches = batches.into_iter();
+    // Round 0 primes the engine (full path); warm rounds settle the
+    // fast path, every pre-reserved service buffer, and the trace
+    // writer's scratch line.
+    for batch in batches.by_ref().take(1 + WARM_ROUNDS) {
+        for ev in batch {
+            assert!(handle.submit(ev));
+        }
+        service.ingest_round().expect("queued events produce a round");
+    }
+    assert_eq!(service.metrics.ingest.fast_rounds as usize, WARM_ROUNDS);
+
+    ALLOCS.store(0, Ordering::Relaxed);
+    COUNTING.store(true, Ordering::Relaxed);
+    for batch in batches {
+        for ev in batch {
+            handle.submit(ev);
+        }
+        service.ingest_round().expect("queued events produce a round");
+    }
+    COUNTING.store(false, Ordering::Relaxed);
+    let steady = ALLOCS.load(Ordering::Relaxed);
+
+    assert_eq!(
+        service.metrics.ingest.fast_rounds as usize,
+        WARM_ROUNDS + MEASURED_ROUNDS,
+        "every warm drift round must take the fast path"
+    );
+    // The trace must actually have been written — a silently disarmed
+    // hub would make the zero-alloc assertion vacuous.
+    let hub = service.obs_hub().expect("hub stays attached");
+    assert!(!hub.had_io_error(), "trace writes must succeed");
+    let trace = std::fs::read_to_string(&trace_path).unwrap();
+    assert!(
+        trace.lines().any(|l| l.contains("\"name\":\"ingest_batch\"")),
+        "trace records ingest_batch spans"
+    );
+    assert!(
+        trace.lines().any(|l| l.contains("\"name\":\"solve\"")),
+        "trace records solve spans"
+    );
+    std::fs::remove_file(&trace_path).ok();
+
+    if cfg!(debug_assertions) {
+        // Debug builds allocate inside the engine's loads-equivalence
+        // debug_assert (see tests/zero_alloc.rs); allow that and nothing
+        // more.
+        assert!(
+            steady <= 4 * MEASURED_ROUNDS as u64,
+            "debug traced rounds allocated {steady} times over {MEASURED_ROUNDS} rounds"
+        );
+    } else {
+        assert_eq!(
+            steady, 0,
+            "warm traced ingest rounds must be allocation-free \
+             (got {steady} over {MEASURED_ROUNDS} rounds)"
+        );
+    }
+}

@@ -1,0 +1,151 @@
+#!/usr/bin/env python3
+"""Validate a sptlb trace JSONL file (`serve --trace <path>`).
+
+The trace is a Chrome-trace-event array in the truncation-tolerant
+streaming form: an opening `[`, then one event object per line with a
+trailing comma and no closing bracket. This checker enforces the
+structural invariants the tracer guarantees:
+
+  * every event line is well-formed JSON once the trailing comma is
+    stripped, with the fields Perfetto needs (ph, pid, ts, name);
+  * begin/end spans are balanced per track (tid), LIFO-nested, and an
+    `E` always closes the innermost open `B` of the same name;
+  * round ids are non-decreasing across the file (the harvest order is
+    rounds ascending), and per-track logical timestamps never go
+    backwards;
+  * decision instants carry the full provenance payload (stage, origin,
+    reason, round, app, from, to, detail).
+
+Exit code 0 on a valid trace; 1 with a line-numbered report otherwise.
+
+Usage: python3 tools/check_trace.py <trace.jsonl>
+"""
+
+import json
+import sys
+
+SPAN_NAMES = {
+    "global_round",
+    "region_round",
+    "collect",
+    "forecast",
+    "negotiate",
+    "solve",
+    "vet",
+    "adopt",
+    "snapshot",
+    "ingest_batch",
+}
+
+DECISION_ARG_KEYS = {"stage", "origin", "reason", "round", "app", "from", "to", "detail"}
+
+
+def check(path):
+    errors = []
+    open_spans = {}  # tid -> [name, ...] stack of open B spans
+    last_ts = {}  # tid -> last logical timestamp
+    last_round = -1
+    n_spans = 0
+    n_decisions = 0
+
+    with open(path, encoding="utf-8") as f:
+        for lineno, raw in enumerate(f, start=1):
+            line = raw.strip()
+            if not line or line == "[":
+                continue
+            if line.endswith(","):
+                line = line[:-1]
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError as e:
+                errors.append(f"line {lineno}: not valid JSON: {e}")
+                continue
+
+            ph = ev.get("ph")
+            if ph == "M":  # metadata (process name etc.)
+                continue
+            if ph not in ("B", "E", "i"):
+                errors.append(f"line {lineno}: unexpected phase {ph!r}")
+                continue
+
+            tid = ev.get("tid")
+            ts = ev.get("ts")
+            name = ev.get("name")
+            if not isinstance(tid, int) or not isinstance(ts, int):
+                errors.append(f"line {lineno}: missing/non-integer tid or ts")
+                continue
+            if ts < last_ts.get(tid, 0):
+                errors.append(
+                    f"line {lineno}: ts {ts} went backwards on tid {tid} "
+                    f"(last {last_ts[tid]})"
+                )
+            last_ts[tid] = ts
+
+            if ph == "B":
+                n_spans += 1
+                if name not in SPAN_NAMES:
+                    errors.append(f"line {lineno}: unknown span name {name!r}")
+                rnd = ev.get("args", {}).get("round")
+                if not isinstance(rnd, int):
+                    errors.append(f"line {lineno}: B span without integer args.round")
+                else:
+                    if rnd < last_round:
+                        errors.append(
+                            f"line {lineno}: round {rnd} went backwards "
+                            f"(last {last_round})"
+                        )
+                    last_round = max(last_round, rnd)
+                open_spans.setdefault(tid, []).append(name)
+            elif ph == "E":
+                stack = open_spans.get(tid, [])
+                if not stack:
+                    errors.append(f"line {lineno}: E {name!r} with no open span on tid {tid}")
+                elif stack[-1] != name:
+                    errors.append(
+                        f"line {lineno}: E {name!r} does not close innermost "
+                        f"B {stack[-1]!r} on tid {tid}"
+                    )
+                else:
+                    stack.pop()
+            else:  # ph == "i": decision instant
+                n_decisions += 1
+                if name != "decision":
+                    errors.append(f"line {lineno}: instant named {name!r}, want 'decision'")
+                missing = DECISION_ARG_KEYS - set(ev.get("args", {}))
+                if missing:
+                    errors.append(
+                        f"line {lineno}: decision missing args {sorted(missing)}"
+                    )
+
+    for tid, stack in open_spans.items():
+        if stack:
+            errors.append(f"eof: tid {tid} left unbalanced spans open: {stack}")
+    if n_spans == 0:
+        errors.append("eof: trace contains no spans")
+
+    return errors, n_spans, n_decisions
+
+
+def main(argv):
+    if len(argv) != 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    try:
+        errors, n_spans, n_decisions = check(argv[1])
+    except OSError as e:
+        print(f"check_trace: cannot read {argv[1]}: {e}", file=sys.stderr)
+        return 2
+    if errors:
+        for e in errors:
+            print(f"check_trace: {e}", file=sys.stderr)
+        print(f"check_trace: FAIL ({len(errors)} errors)", file=sys.stderr)
+        return 1
+    print(
+        f"check_trace: OK — {n_spans} spans, {n_decisions} decisions, "
+        "balanced and monotone"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
