@@ -9,7 +9,9 @@
 //!  * steady-state scale ladder (10k -> 100k -> 1M apps): zero-alloc
 //!    drift rounds through the engine fast path, with allocs/round
 //!    counted by a gated global allocator and peak RSS from VmHWM,
-//!  * multi-region rounds/sec vs region count at fixed fleet size.
+//!  * multi-region rounds/sec vs region count at fixed fleet size,
+//!  * multi-region ingest plane: per-region queue throughput and
+//!    zero-alloc warm rounds at region counts {1, 3}.
 //!
 //! Run: cargo bench --bench perf_hotpath
 //! CI smoke: cargo bench --bench perf_hotpath -- --smoke --out-dir bench-out
@@ -33,7 +35,7 @@ use sptlb::obs::{self, ObsHub, SpanKind, SpanRecorder, TraceLevel};
 use sptlb::rebalancer::problem::{GoalWeights, Problem};
 use sptlb::rebalancer::scoring::{score_assignment, ScoreState};
 use sptlb::rebalancer::{LocalSearch, LocalSearchConfig, OptimalSearch, ParallelConfig};
-use sptlb::service::{Service, ServiceConfig};
+use sptlb::service::{MultiRegionService, Service, ServiceConfig};
 use sptlb::sptlb::{Sptlb, SptlbConfig};
 use sptlb::util::json::Json;
 use sptlb::util::prng::Pcg64;
@@ -791,6 +793,127 @@ fn main() {
         za.rounds_done(),
     );
 
+    // Multi-region ladder: the same sustained-throughput and zero-alloc
+    // claims for `serve --ingest --regions N`. Each region gets one Block
+    // producer feeding its own queue; region workers drain in parallel on
+    // the pinned fabric, so events/sec scales with regions on multi-core
+    // hosts while warm drift-only rounds stay allocation-free at every
+    // region count (the CI gate checks every rung's allocs_per_round).
+    println!("  multi-region ladder: per-region queues on the pinned fabric");
+    fn mr_stream(service: &MultiRegionService, r: usize, seed: u64, n: usize) -> Vec<FleetEvent> {
+        let apps = service.region_fleet(r).apps();
+        let mut rng = Pcg64::new(seed);
+        (0..n)
+            .map(|_| {
+                let app = &apps[rng.range(0, apps.len())];
+                FleetEvent::DemandDrift {
+                    app: app.id,
+                    demand: app.demand * (0.9 + rng.range(0, 21) as f64 / 100.0),
+                }
+            })
+            .collect()
+    }
+    let multi_ingest_config = |regions: usize, backpressure: &str| {
+        let mut b = ServiceConfig::builder()
+            .workload("paper")
+            .events("drift")
+            .variant("no_cnst")
+            .timeout(Duration::from_millis(5))
+            .queue_capacity(1024)
+            .batch_budget(Duration::from_millis(1))
+            .max_batch(256)
+            .backpressure(backpressure)
+            .regions(regions);
+        if regions > 1 {
+            // Planner off: warm rounds must stay migration-free so the
+            // drift fast path (and the zero-alloc claim) is what's timed.
+            b = b.global_policy("none".to_string());
+        }
+        b.build().expect("bench multi service config is valid")
+    };
+    let mr_stream_n = if smoke { 2_000 } else { 20_000 };
+    let mut region_ladder_json: Vec<Json> = Vec::new();
+    for regions in [1usize, 3] {
+        let mut service = MultiRegionService::new(multi_ingest_config(regions, "block"));
+        let handle = service.handle();
+        let producers: Vec<_> = (0..regions)
+            .map(|r| {
+                let stream = mr_stream(&service, r, 0x1969 ^ r as u64, mr_stream_n);
+                let h = handle.clone();
+                std::thread::spawn(move || {
+                    let mut accepted = 0u64;
+                    for ev in stream {
+                        if h.submit(r, ev) {
+                            accepted += 1;
+                        }
+                    }
+                    accepted
+                })
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let mut mr_ingest_rounds = 0u64;
+        loop {
+            match service.ingest_round() {
+                Some(_) => mr_ingest_rounds += 1,
+                None if producers.iter().all(|p| p.is_finished()) => break,
+                None => {}
+            }
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        service.stop();
+        let accepted: u64 = producers.into_iter().map(|p| p.join().expect("producer")).sum();
+        let events_per_sec = accepted as f64 / elapsed.max(1e-9);
+
+        // Zero-alloc window on a fresh service, mirroring the
+        // single-region gate: one priming round, warm rounds, then count
+        // allocations across measured submit + ingest_round cycles.
+        let mut za = MultiRegionService::new(multi_ingest_config(regions, "shed"));
+        let za_handle = za.handle();
+        let za_rounds: Vec<Vec<Vec<FleetEvent>>> = (0..1 + warm_rounds + zero_rounds)
+            .map(|i| {
+                (0..regions)
+                    .map(|r| mr_stream(&za, r, 0x2A11 + (i * regions + r) as u64, 64))
+                    .collect()
+            })
+            .collect();
+        let mut mr_batches = za_rounds.into_iter();
+        for round in mr_batches.by_ref().take(1 + warm_rounds) {
+            for (r, batch) in round.into_iter().enumerate() {
+                for ev in batch {
+                    za_handle.submit(r, ev);
+                }
+            }
+            za.ingest_round().expect("queued events produce a round");
+        }
+        ALLOCS.store(0, Ordering::Relaxed);
+        COUNTING.store(true, Ordering::Relaxed);
+        for round in mr_batches {
+            for (r, batch) in round.into_iter().enumerate() {
+                for ev in batch {
+                    za_handle.submit(r, ev);
+                }
+            }
+            za.ingest_round().expect("queued events produce a round");
+        }
+        COUNTING.store(false, Ordering::Relaxed);
+        za.stop();
+        let allocs_per_round = ALLOCS.load(Ordering::Relaxed) as f64 / zero_rounds as f64;
+        println!(
+            "  regions={regions}: {events_per_sec:>9.0} events/s sustained over \
+             {mr_ingest_rounds} rounds, {allocs_per_round:.1} allocs/round warm, \
+             {} fabric thread(s)",
+            service.fabric_threads_spawned(),
+        );
+        region_ladder_json.push(Json::obj(vec![
+            ("regions", Json::num(regions as f64)),
+            ("events_per_sec", Json::num(events_per_sec)),
+            ("rounds", Json::num(mr_ingest_rounds as f64)),
+            ("allocs_per_round", Json::num(allocs_per_round)),
+            ("fabric_threads", Json::num(service.fabric_threads_spawned() as f64)),
+        ]));
+    }
+
     write_bench_json(
         "BENCH_ingest.json",
         &Json::obj(vec![
@@ -807,6 +930,7 @@ fn main() {
                 Json::num(burst_service.metrics.ingest.shed.queue_full as f64),
             ),
             ("ingest_allocs_per_round", Json::num(ingest_allocs_per_round)),
+            ("region_ladder", Json::arr(region_ladder_json)),
         ]),
     );
 

@@ -45,8 +45,8 @@ use crate::model::{App, AppId, FleetEvent, RegionId, ResourceVec, TierId};
 use crate::network::{app_tier_latency_ms, LatencyMatrix};
 use crate::obs::{self, ObsHub, SpanRecorder};
 use crate::sptlb::SptlbConfig;
+use crate::util::fabric::Fabric;
 use crate::util::json::Json;
-use crate::util::pool::par_map_mut;
 use crate::util::prng::Pcg64;
 use crate::util::stats::OnlineStats;
 use crate::util::timer::{Deadline, Stopwatch};
@@ -240,24 +240,39 @@ impl MultiRegionMetrics {
     }
 }
 
-/// One region's full coordinator stack.
-struct RegionRuntime {
-    region: RegionId,
-    cfg: SptlbConfig,
-    state: FleetState,
-    engine: FleetEngine,
-    scenario: ScenarioGen,
-    latency: LatencyMatrix,
+/// One region's full coordinator stack. Boxed by its owner so the whole
+/// stack moves through the channel fabric as one 8-byte pointer copy —
+/// the heap data behind it never moves, and the worker thread that ran
+/// a region last round finds its caches still warm this round.
+pub(crate) struct RegionRuntime {
+    pub(crate) region: RegionId,
+    pub(crate) cfg: SptlbConfig,
+    pub(crate) state: FleetState,
+    pub(crate) engine: FleetEngine,
+    pub(crate) scenario: ScenarioGen,
+    pub(crate) latency: LatencyMatrix,
     /// This region's tracing recorder (one per logical track, installed
     /// thread-locally for the round's duration — works identically under
     /// sequential and per-region-thread execution).
-    obs: Option<SpanRecorder>,
+    pub(crate) obs: Option<SpanRecorder>,
 }
+
+/// The persistent worker pool driving [`RegionExecution::Parallel`]
+/// rounds: each worker owns one region's boxed stack for the duration of
+/// a round and hands it back with the round record and the (reused)
+/// event buffer.
+type RegionFabric =
+    Fabric<RegionRuntime, (u32, Vec<FleetEvent>, Duration), (RoundRecord, Vec<FleetEvent>)>;
 
 impl RegionRuntime {
     /// Apply the round's events and run one engine round; the regional
     /// analogue of `Coordinator::round_once`.
-    fn round_once(&mut self, round: u32, events: &[FleetEvent], tick: Duration) -> RoundRecord {
+    pub(crate) fn round_once(
+        &mut self,
+        round: u32,
+        events: &[FleetEvent],
+        tick: Duration,
+    ) -> RoundRecord {
         // Install this region's recorder on the current thread,
         // displacing (and later restoring) whatever was there — under
         // sequential execution that is the coordinator's global-track
@@ -313,19 +328,23 @@ impl RegionRuntime {
 
 /// A vetted migration waiting to be applied next round.
 #[derive(Debug, Clone, Copy)]
-struct QueuedMigration {
-    app: AppId,
-    from: RegionId,
-    to: RegionId,
+pub(crate) struct QueuedMigration {
+    pub(crate) app: AppId,
+    pub(crate) from: RegionId,
+    pub(crate) to: RegionId,
     /// Data source remapped into the destination's micro-region space
     /// (chosen by the destination's vetting pass).
-    preferred: RegionId,
+    pub(crate) preferred: RegionId,
 }
 
 /// The global leader loop.
 pub struct MultiRegionCoordinator {
     pub config: MultiRegionConfig,
-    regions: Vec<RegionRuntime>,
+    regions: Vec<Box<RegionRuntime>>,
+    /// Lazily-built persistent worker pool (Parallel execution only):
+    /// spawned on the first parallel round, reused for the process
+    /// lifetime — no thread spawns after warm-up.
+    fabric: Option<RegionFabric>,
     global: GlobalScheduler,
     pending: Vec<QueuedMigration>,
     staged: Vec<MigrationRecord>,
@@ -343,39 +362,52 @@ pub struct MultiRegionCoordinator {
     global_obs: Option<SpanRecorder>,
 }
 
+/// Build every region's boxed runtime stack from a testbed — shared by
+/// [`MultiRegionCoordinator::new`] and the ingest-plane service runtime
+/// (`service::multi`), which drives the same stacks from its own loop.
+/// Returns the runtimes (ascending region id) and the bed's topology so
+/// the caller can construct its [`GlobalScheduler`].
+pub(crate) fn build_region_runtimes(
+    config: &MultiRegionConfig,
+    bed: MultiRegionBed,
+) -> (Vec<Box<RegionRuntime>>, crate::model::RegionTopology) {
+    assert_eq!(
+        config.scenario.n_regions(),
+        bed.n_regions(),
+        "scenario must cover every region"
+    );
+    assert!(bed.n_regions() >= 1);
+    let MultiRegionBed { regions, topology } = bed;
+    let runtimes = regions
+        .into_iter()
+        .enumerate()
+        .map(|(r, tb)| {
+            let seed_r = Pcg64::stream(config.seed, r as u64).next_u64();
+            let cfg = SptlbConfig { seed: seed_r, ..config.sptlb.clone() };
+            let engine = FleetEngine::with_forecast(config.engine, &cfg, config.forecast.clone());
+            let scenario = ScenarioGen::new(config.scenario.per_region[r].clone());
+            Box::new(RegionRuntime {
+                region: RegionId(r),
+                cfg,
+                latency: tb.latency.clone(),
+                state: FleetState::from_testbed(tb),
+                engine,
+                scenario,
+                obs: None,
+            })
+        })
+        .collect();
+    (runtimes, topology)
+}
+
 impl MultiRegionCoordinator {
     pub fn new(config: MultiRegionConfig, bed: MultiRegionBed) -> Self {
-        assert_eq!(
-            config.scenario.n_regions(),
-            bed.n_regions(),
-            "scenario must cover every region"
-        );
-        assert!(bed.n_regions() >= 1);
-        let regions: Vec<RegionRuntime> = bed
-            .regions
-            .into_iter()
-            .enumerate()
-            .map(|(r, tb)| {
-                let seed_r = Pcg64::stream(config.seed, r as u64).next_u64();
-                let cfg = SptlbConfig { seed: seed_r, ..config.sptlb.clone() };
-                let engine =
-                    FleetEngine::with_forecast(config.engine, &cfg, config.forecast.clone());
-                let scenario = ScenarioGen::new(config.scenario.per_region[r].clone());
-                RegionRuntime {
-                    region: RegionId(r),
-                    cfg,
-                    latency: tb.latency.clone(),
-                    state: FleetState::from_testbed(tb),
-                    engine,
-                    scenario,
-                    obs: None,
-                }
-            })
-            .collect();
-        let global = GlobalScheduler::new(config.policy.clone(), bed.topology.inter);
+        let (regions, topology) = build_region_runtimes(&config, bed);
+        let global = GlobalScheduler::new(config.policy.clone(), topology.inter);
         Self {
             config,
             regions,
+            fabric: None,
             global,
             pending: Vec::new(),
             staged: Vec::new(),
@@ -463,10 +495,10 @@ impl MultiRegionCoordinator {
     /// Replay a recorded region-tagged event log with the global layer
     /// off — the journal already contains every migration as ordinary
     /// departure/arrival events.
-    pub fn run_events(&mut self, rounds: &[Vec<Vec<FleetEvent>>]) {
+    pub fn run_events(&mut self, rounds: Vec<Vec<Vec<FleetEvent>>>) {
         for evs in rounds {
             assert_eq!(evs.len(), self.regions.len(), "journal region count");
-            self.round_once(evs.clone(), false);
+            self.round_once(evs, false);
         }
     }
 
@@ -521,8 +553,10 @@ impl MultiRegionCoordinator {
             let app = App {
                 id: new_id,
                 name: format!("migrant-{}", new_id.0),
+                demand: source.demand,
+                slo: source.slo,
+                criticality: source.criticality,
                 preferred_region: q.preferred,
-                ..source.clone()
             };
             events[src].push(FleetEvent::Departure { app: q.app });
             events[dst].push(FleetEvent::Arrival { app });
@@ -536,7 +570,7 @@ impl MultiRegionCoordinator {
         events
     }
 
-    fn round_once(&mut self, events: Vec<Vec<FleetEvent>>, live: bool) {
+    fn round_once(&mut self, mut events: Vec<Vec<FleetEvent>>, live: bool) {
         let round = self.rounds_run;
         if let Some(mut rec) = self.global_obs.take() {
             rec.set_round(round);
@@ -550,7 +584,10 @@ impl MultiRegionCoordinator {
             .collect();
         let tick = self.config.tick;
 
-        // ---- per-region solves: sequential or one thread per region.
+        // ---- per-region solves: sequential, or the persistent worker
+        // pool (one long-lived thread per region; each region's boxed
+        // stack and event buffer move through the fabric's rings and
+        // come back — no spawn, no clone, no allocation on this path).
         let records: Vec<RoundRecord> = match self.config.execution {
             RegionExecution::Sequential => self
                 .regions
@@ -559,7 +596,24 @@ impl MultiRegionCoordinator {
                 .map(|(i, rt)| rt.round_once(round, &events[i], tick))
                 .collect(),
             RegionExecution::Parallel => {
-                par_map_mut(&mut self.regions, |i, rt| rt.round_once(round, &events[i], tick))
+                let n = self.regions.len();
+                let fabric = self.fabric.get_or_insert_with(|| {
+                    Fabric::new(n, |rt: &mut RegionRuntime, (round, evs, tick)| {
+                        let record = rt.round_once(round, &evs, tick);
+                        (record, evs)
+                    })
+                });
+                for (i, (cell, evs)) in self.regions.drain(..).zip(events.drain(..)).enumerate() {
+                    fabric.dispatch(i, cell, (round, evs, tick));
+                }
+                let mut records = Vec::with_capacity(n);
+                for i in 0..n {
+                    let (cell, (record, evs)) = fabric.collect(i);
+                    self.regions.push(cell);
+                    events.push(evs);
+                    records.push(record);
+                }
+                records
             }
         };
 
@@ -577,7 +631,8 @@ impl MultiRegionCoordinator {
                 .iter_mut()
                 .map(|rt| rt.engine.take_escalations())
                 .collect();
-            let views = region_views(&self.regions, &outage, &escalations);
+            let refs: Vec<&RegionRuntime> = self.regions.iter().map(|b| &**b).collect();
+            let views = region_views(&refs, &outage, &escalations);
             let pressures = views.iter().map(view_pressure).collect();
             (0, 0, pressures)
         };
@@ -661,8 +716,9 @@ impl MultiRegionCoordinator {
                 });
             }
         }
+        let refs: Vec<&RegionRuntime> = self.regions.iter().map(|b| &**b).collect();
         let mut session = GlobalSession {
-            regions: &self.regions,
+            regions: &refs,
             global: &mut self.global,
             outage,
             escalations,
@@ -726,15 +782,15 @@ pub fn parse_multiregion_event_log(j: &Json) -> Option<Vec<Vec<Vec<FleetEvent>>>
 /// replay pressure-logging path so the two can never drift: predicted
 /// load when forecasting is on (`None` keeps the legacy instantaneous
 /// pressure), plus each region's escalation signals.
-fn region_views<'a>(
-    regions: &'a [RegionRuntime],
-    outage: &'a [bool],
+pub(crate) fn region_views<'a>(
+    regions: &[&'a RegionRuntime],
+    outage: &[bool],
     escalations: &[u32],
 ) -> Vec<RegionView<'a>> {
     regions
         .iter()
         .enumerate()
-        .map(|(r, rt)| RegionView {
+        .map(|(r, &rt)| RegionView {
             region: RegionId(r),
             apps: rt.state.apps(),
             tiers: rt.state.tiers(),
@@ -751,19 +807,19 @@ fn region_views<'a>(
 /// avoid registry. This layer runs a single `negotiate()` round per
 /// coordinator round — the re-solve half of the §3.4 loop happens next
 /// coordinator round through the persisted registry.
-struct GlobalSession<'a> {
-    regions: &'a [RegionRuntime],
-    global: &'a mut GlobalScheduler,
-    outage: &'a [bool],
+pub(crate) struct GlobalSession<'a> {
+    pub(crate) regions: &'a [&'a RegionRuntime],
+    pub(crate) global: &'a mut GlobalScheduler,
+    pub(crate) outage: &'a [bool],
     /// Per-region escalation signals drained from the engines.
-    escalations: Vec<u32>,
+    pub(crate) escalations: Vec<u32>,
     /// Per-item landing choices from the last vet pass (`Some` iff the
     /// verdict was Accept), consumed by `absorb`.
-    landings: Vec<Option<(TierId, RegionId)>>,
+    pub(crate) landings: Vec<Option<(TierId, RegionId)>>,
     /// Out: the plan's recorded per-region pressures.
-    pressures: Vec<f64>,
+    pub(crate) pressures: Vec<f64>,
     /// Out: vetted migrations queued for next round (filled by `absorb`).
-    accepted: Vec<QueuedMigration>,
+    pub(crate) accepted: Vec<QueuedMigration>,
 }
 
 impl CoopLayer for GlobalSession<'_> {
@@ -772,9 +828,7 @@ impl CoopLayer for GlobalSession<'_> {
 
     fn propose(&mut self, _round: u32, _deadline: Deadline) -> GlobalPlan {
         let views = region_views(self.regions, self.outage, &self.escalations);
-        let plan = self.global.propose(&views);
-        self.pressures = plan.pressures.clone();
-        plan
+        self.global.propose(&views)
     }
 
     /// The plan's migrations, dropping any whose source app no longer
@@ -847,10 +901,13 @@ impl CoopLayer for GlobalSession<'_> {
     /// next planning round).
     fn absorb(
         &mut self,
-        _plan: GlobalPlan,
+        plan: GlobalPlan,
         vetted: &[(MigrationProposal, Verdict)],
         _accepted: bool,
     ) {
+        // The plan arrives by value: its recorded pressures move out
+        // instead of being cloned in `propose`.
+        self.pressures = plan.pressures;
         debug_assert_eq!(vetted.len(), self.landings.len(), "one landing slot per item");
         for ((p, verdict), landing) in vetted.iter().zip(std::mem::take(&mut self.landings)) {
             if let (Verdict::Accept, Some((_, preferred))) = (verdict, landing) {
@@ -874,7 +931,7 @@ impl CoopLayer for GlobalSession<'_> {
 /// remapped into the destination's micro-region space. Returns the
 /// landing tier and the remapped data source, or the rejection reason
 /// (→ a global avoid constraint).
-fn vet_migration(
+pub(crate) fn vet_migration(
     dst: &RegionRuntime,
     app: &App,
     dst_index: usize,

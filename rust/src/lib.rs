@@ -36,7 +36,7 @@ pub mod prelude {
     pub use crate::coordinator::ServiceMetrics;
     pub use crate::model::FleetEvent;
     pub use crate::service::{
-        Backpressure, ConfigError, Error, IngestHandle, Service, ServiceConfig, ServiceRound,
-        Snapshot,
+        Backpressure, ConfigError, Error, IngestHandle, MultiIngestHandle, MultiRegionService,
+        MultiSnapshot, Service, ServiceConfig, ServiceRound, Snapshot,
     };
 }

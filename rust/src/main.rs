@@ -9,6 +9,9 @@
 //!             producer threads feed a bounded queue, rounds batch under
 //!             a latency budget, and the run is journaled + snapshotted
 //!             so a killed process restores and replays bit-identically.
+//!             With --ingest --regions N > 1 each region gets its own
+//!             queue drained by a pinned fabric worker, and the journal
+//!             and snapshot are region-tagged.
 //!   fig3      regenerate Figure 3 (a/b/c) tables for a preset.
 //!   sweep     regenerate the Fig. 4/5 variant×solver×timeout sweep.
 //!   check     verify the AOT artifacts load and match the rust scorer.
@@ -30,8 +33,8 @@ use sptlb::metadata::MetadataStore;
 use sptlb::obs::{self, FlightTrigger, ObsHub, TraceLevel};
 use sptlb::report;
 use sptlb::service::{
-    append_journal_round, load_journal, ConfigError, Error, ScenarioProducer, Service,
-    ServiceConfig, Snapshot,
+    append_journal_round, append_multi_journal_round, load_journal, load_multi_journal, ConfigError,
+    Error, MultiRegionService, MultiSnapshot, ScenarioProducer, Service, ServiceConfig, Snapshot,
 };
 use sptlb::sptlb::Sptlb;
 use sptlb::util::cli::{CliError, Command, Parsed};
@@ -327,11 +330,15 @@ fn cmd_serve(args: &[String]) -> Result<(), Error> {
             "cross-region policy (none|spillover|aggressive; default spillover; requires --regions > 1)",
         )
         .opt("region-exec", "parallel", "per-region round execution (sequential|parallel)")
-        .flag("ingest", "run the async ingest-plane runtime (producers -> queue -> batched solves)")
-        .opt("queue", "1024", "ingest queue capacity in events (with --ingest)")
+        .flag(
+            "ingest",
+            "run the async ingest-plane runtime (producers -> queue -> batched solves); with \
+             --regions N > 1 each region drains its own queue on a pinned worker fabric",
+        )
+        .opt("queue", "1024", "per-queue ingest capacity in events (with --ingest)")
         .opt("batch-ms", "5", "per-round batch latency budget in ms (with --ingest)")
         .opt("max-batch", "256", "max events per batched solve (with --ingest)")
-        .opt("producers", "1", "scenario producer threads (with --ingest)")
+        .opt("producers", "1", "scenario producer threads, per region (with --ingest)")
         .opt("backpressure", "shed", "producer policy on a full queue (shed|block; with --ingest)")
         .opt("snapshot-dir", "", "write snapshot.json + journal.jsonl here (with --ingest)")
         .opt("snapshot-every", "8", "snapshot every K journaled rounds (0 = final only; with --ingest)")
@@ -361,16 +368,15 @@ fn cmd_serve(args: &[String]) -> Result<(), Error> {
             return Ok(());
         }
         let config = build_service_config(&p)?;
-        if config.regions > 1 {
-            if p.flag("ingest") {
-                return Err(Error::Usage(
-                    "--ingest runs the single-region service runtime; drop --regions".into(),
-                ));
-            }
-            return cmd_serve_multiregion(&p, config);
-        }
         if p.flag("ingest") {
-            return cmd_serve_ingest(&p, config);
+            return if config.regions > 1 {
+                cmd_serve_ingest_multi(&p, config)
+            } else {
+                cmd_serve_ingest(&p, config)
+            };
+        }
+        if config.regions > 1 {
+            return cmd_serve_multiregion(&p, config);
         }
         let bed = generate(&config.workload);
         let mut coordinator = Coordinator::from_testbed(config.coordinator(), bed);
@@ -541,6 +547,152 @@ fn cmd_serve_ingest(p: &Parsed, config: ServiceConfig) -> Result<(), Error> {
         producers,
         ingest.shed.total(),
         ingest.idle_polls,
+    );
+    write_logs(
+        p,
+        &[
+            ("log", service.rounds_json()),
+            ("event-log", service.journal_json()),
+        ],
+    )
+}
+
+/// `serve --ingest --regions N` (N > 1): the multi-region ingest plane.
+/// Producer threads route events into per-region bounded queues; each
+/// region's pinned fabric worker drains its own queue under the shared
+/// batch budget; the coordinator commits one region-tagged journal row
+/// per round — so a killed process restores with `--restore` and every
+/// region replays bit-identically.
+fn cmd_serve_ingest_multi(p: &Parsed, config: ServiceConfig) -> Result<(), Error> {
+    let producers = p.usize_at_least("producers", 1).map_err(usage)?;
+    let dir = p.str("snapshot-dir").map_err(usage)?;
+    let dir = (!dir.is_empty()).then(|| std::path::PathBuf::from(dir));
+    let rounds = config.rounds;
+    let snapshot_every = config.snapshot_every;
+    // The hub exists before restore so a corrupt snapshot/journal fires
+    // the flight trigger (dumping whatever the ring held) on the way out.
+    let mut hub = build_obs_hub(p)?;
+
+    let mut service = if p.flag("restore") {
+        let Some(dir) = dir.as_ref() else {
+            return Err(Error::Usage("--restore requires --snapshot-dir".into()));
+        };
+        let restored = (|| {
+            let snap =
+                MultiSnapshot::load(&dir.join("snapshot.json"))?.map_err(Error::SnapshotCorrupt)?;
+            let journal =
+                load_multi_journal(&dir.join("journal.jsonl"))?.map_err(Error::SnapshotCorrupt)?;
+            let service = MultiRegionService::restore(config, &snap, &journal)?;
+            Ok::<_, Error>((snap.rounds_done, service))
+        })();
+        match restored {
+            Ok((snap_rounds, service)) => {
+                println!(
+                    "restored from snapshot at round {} (+{} journal tail round(s) replayed)",
+                    snap_rounds,
+                    service.rounds_done() - snap_rounds
+                );
+                service
+            }
+            Err(e) => {
+                if let (Error::SnapshotCorrupt(_), Some(h)) = (&e, hub.as_mut()) {
+                    h.trigger(FlightTrigger::SnapshotCorrupt, &e.to_string());
+                }
+                return Err(e);
+            }
+        }
+    } else {
+        MultiRegionService::new(config)
+    };
+    if let Some(hub) = hub.take() {
+        service.attach_obs(hub);
+    }
+
+    // Same rewrite-don't-append contract as the single-region runtime:
+    // the on-disk journal is regenerated from the verified in-memory
+    // journal, so a torn tail line cannot corrupt the first new round.
+    let mut journal_file = match dir.as_ref() {
+        Some(dir) => {
+            std::fs::create_dir_all(dir)?;
+            let mut f = std::fs::File::create(dir.join("journal.jsonl"))?;
+            for k in 0..service.rounds_done() {
+                append_multi_journal_round(&mut f, &service.journal_round_all(k))?;
+            }
+            Some(f)
+        }
+        None => None,
+    };
+
+    // One scenario producer thread per (region, index) pair. Region r's
+    // producers replay its per-region scenario stream (already
+    // seed-split by region) further mixed per thread, mint events
+    // against a private shadow of that region's fleet, and submit them
+    // to region r's queue — the region-tagged half of the ingest plane.
+    let handle = service.handle();
+    let mut threads: Vec<std::thread::JoinHandle<u64>> = Vec::new();
+    for r in 0..service.n_regions() {
+        let scenario = service
+            .config()
+            .multi_scenario
+            .as_ref()
+            .map_or_else(|| service.config().scenario.clone(), |m| m.per_region[r].clone());
+        let fleet = service.region_fleet(r);
+        for i in 0..producers {
+            let stream = scenario.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let mut producer = ScenarioProducer::new(
+                scenario.clone().with_seed(stream),
+                FleetState::new(
+                    fleet.apps().to_vec(),
+                    fleet.tiers().to_vec(),
+                    fleet.assignment().clone(),
+                ),
+            );
+            let h = handle.region(r).clone();
+            threads.push(std::thread::spawn(move || producer.run(&h, rounds)));
+        }
+    }
+
+    loop {
+        match service.ingest_round() {
+            Some(_) => {
+                if let (Some(f), Some(dir)) = (journal_file.as_mut(), dir.as_ref()) {
+                    let k = service.rounds_done() - 1;
+                    append_multi_journal_round(f, &service.journal_round_all(k))?;
+                    if snapshot_every > 0 && service.rounds_done() % snapshot_every == 0 {
+                        service.snapshot_traced().write(&dir.join("snapshot.json"))?;
+                    }
+                }
+            }
+            // An empty drain across every region with every producer
+            // finished means the queues are dry for good.
+            None => {
+                if threads.iter().all(|t| t.is_finished()) {
+                    break;
+                }
+            }
+        }
+    }
+    service.stop();
+    let accepted: u64 = threads.into_iter().map(|t| t.join().unwrap_or(0)).sum();
+
+    if let Some(dir) = dir.as_ref() {
+        service.snapshot().write(&dir.join("snapshot.json"))?;
+        println!("snapshot + journal in {}", dir.display());
+    }
+    println!("{}", service.metrics_json().pretty());
+    warn_trace_io(service.obs_hub());
+    let ingest = &service.metrics.ingest;
+    println!(
+        "ingest: {} region(s), {} round(s) ({} fast, {} full), {} event(s) queued by {} producer(s), {} shed, {} idle poll(s), {} migration(s)",
+        service.n_regions(),
+        service.rounds_done(),
+        ingest.fast_rounds,
+        ingest.full_rounds,
+        accepted,
+        producers * service.n_regions(),
+        ingest.shed.total(),
+        ingest.idle_polls,
+        service.migrations().len(),
     );
     write_logs(
         p,

@@ -601,4 +601,23 @@ mod tests {
         }
         assert_eq!(cfg.scenario.drift_sigma, 0.25);
     }
+
+    #[test]
+    fn ingest_knobs_compose_with_multiple_regions() {
+        let cfg = ServiceConfig::builder()
+            .regions(3)
+            .events("churn")
+            .queue_capacity(512)
+            .batch_budget(Duration::from_millis(2))
+            .max_batch(64)
+            .backpressure("block")
+            .build()
+            .unwrap();
+        assert_eq!(cfg.regions, 3);
+        assert_eq!(cfg.queue_capacity, 512);
+        assert_eq!(cfg.max_batch, 64);
+        assert_eq!(cfg.backpressure, Backpressure::Block);
+        let multi = cfg.multi_scenario.as_ref().unwrap();
+        assert_eq!(multi.per_region.len(), 3, "single-region preset fans out uniformly");
+    }
 }

@@ -35,21 +35,26 @@
 
 pub mod config;
 pub mod error;
+pub mod multi;
 pub mod producer;
 pub mod queue;
 pub mod snapshot;
 
 pub use config::{Backpressure, ConfigError, ServiceConfig, ServiceConfigBuilder};
 pub use error::Error;
-pub use producer::{IngestHandle, ScenarioProducer};
+pub use multi::MultiRegionService;
+pub use producer::{IngestHandle, MultiIngestHandle, ScenarioProducer};
 pub use queue::IngestQueue;
-pub use snapshot::{append_journal_round, load_journal, Snapshot, SNAPSHOT_SCHEMA};
+pub use snapshot::{
+    append_journal_round, append_multi_journal_round, load_journal, load_multi_journal,
+    MultiSnapshot, Snapshot, MULTI_SNAPSHOT_SCHEMA, SNAPSHOT_SCHEMA,
+};
 
 use crate::coordinator::{
     coop_telemetry, count_breach_tiers, FleetDelta, FleetEngine, FleetState, ServiceMetrics,
 };
 use crate::hierarchy::variants::{worst_imbalance, BALANCED_TARGET};
-use crate::metrics::ShedReason;
+use crate::metrics::{ShedCounts, ShedReason};
 use crate::model::FleetEvent;
 use crate::network::LatencyMatrix;
 use crate::obs::{self, FlightTrigger, ObsHub, SpanRecorder};
@@ -418,100 +423,10 @@ impl Service {
         self.state.checkpoint_json()
     }
 
-    /// Validate the drained batch against the live fleet, re-minting
-    /// arrival ids and shedding (with a per-reason count) anything that
-    /// could not apply cleanly. Two passes, both allocation-free:
-    ///
-    /// 1. per-event checks against the *pre-batch* fleet — unknown
-    ///    drift/departure ids, arrivals with an SLO no tier supports,
-    ///    out-of-range tiers/regions, non-finite payloads;
-    /// 2. intra-batch ordering hazards — duplicate departures and
-    ///    events referencing an app already departed earlier in the
-    ///    same batch (sequential application would panic on both).
+    /// Validate the drained batch against the live fleet (see
+    /// [`admit_batch`], which the multi-region ingest plane shares).
     fn admit(&mut self) {
-        let state = &self.state;
-        let shed = &mut self.metrics.ingest.shed;
-        let mut next_id = state.next_app_id();
-        let finite = |v: &crate::model::ResourceVec| v.0.iter().all(|x| x.is_finite() && *x >= 0.0);
-        self.batch.retain_mut(|ev| {
-            let verdict: Result<(), ShedReason> = match ev {
-                FleetEvent::DemandDrift { app, demand } => {
-                    if !finite(demand) {
-                        Err(ShedReason::Malformed)
-                    } else if state.index_of(*app).is_none() {
-                        Err(ShedReason::UnknownApp)
-                    } else {
-                        Ok(())
-                    }
-                }
-                FleetEvent::Arrival { app } => {
-                    if !finite(&app.demand) {
-                        Err(ShedReason::Malformed)
-                    } else if !state.tiers().iter().any(|t| t.supports_slo(app.slo)) {
-                        Err(ShedReason::UnknownTier)
-                    } else {
-                        // Re-mint the id from the authoritative counter:
-                        // producers race, so their intended ids are only
-                        // a hint.
-                        app.id = crate::model::AppId::from_usize(next_id);
-                        next_id += 1;
-                        Ok(())
-                    }
-                }
-                FleetEvent::Departure { app } => {
-                    if state.index_of(*app).is_none() {
-                        Err(ShedReason::UnknownApp)
-                    } else {
-                        Ok(())
-                    }
-                }
-                FleetEvent::TierCapacityChange { tier, factor } => {
-                    if tier.idx() >= state.tiers().len() {
-                        Err(ShedReason::UnknownTier)
-                    } else if !factor.is_finite() || *factor <= 0.0 {
-                        Err(ShedReason::Malformed)
-                    } else {
-                        Ok(())
-                    }
-                }
-                FleetEvent::RegionOutage { region } => {
-                    if state.tiers().iter().any(|t| t.regions.contains(*region)) {
-                        Ok(())
-                    } else {
-                        Err(ShedReason::UnknownRegion)
-                    }
-                }
-            };
-            match verdict {
-                Ok(()) => true,
-                Err(reason) => {
-                    shed.count(reason);
-                    false
-                }
-            }
-        });
-
-        // Pass 2: drop events that reference an app departed earlier in
-        // this same batch (stable in-place compaction, no allocation).
-        let mut kept = 0;
-        for i in 0..self.batch.len() {
-            let id = match &self.batch[i] {
-                FleetEvent::DemandDrift { app, .. } | FleetEvent::Departure { app } => Some(*app),
-                _ => None,
-            };
-            let departed_earlier = id.is_some_and(|id| {
-                self.batch[..kept]
-                    .iter()
-                    .any(|e| matches!(e, FleetEvent::Departure { app } if *app == id))
-            });
-            if departed_earlier {
-                self.metrics.ingest.shed.count(ShedReason::UnknownApp);
-            } else {
-                self.batch.swap(kept, i);
-                kept += 1;
-            }
-        }
-        self.batch.truncate(kept);
+        admit_batch(&self.state, &mut self.batch, &mut self.metrics.ingest.shed);
     }
 
     /// Journal the admitted batch and run it through the engine —
@@ -588,6 +503,102 @@ impl Service {
         self.rounds_done += 1;
         record
     }
+}
+
+/// Validate a drained batch against a live fleet, re-minting arrival
+/// ids and shedding (with a per-reason count) anything that could not
+/// apply cleanly. Shared by the single-region [`Service`] and every
+/// region worker of the multi-region ingest plane
+/// ([`multi::MultiRegionService`]). Two passes, both allocation-free:
+///
+/// 1. per-event checks against the *pre-batch* fleet — unknown
+///    drift/departure ids, arrivals with an SLO no tier supports,
+///    out-of-range tiers/regions, non-finite payloads;
+/// 2. intra-batch ordering hazards — duplicate departures and
+///    events referencing an app already departed earlier in the
+///    same batch (sequential application would panic on both).
+pub(crate) fn admit_batch(state: &FleetState, batch: &mut Vec<FleetEvent>, shed: &mut ShedCounts) {
+    let mut next_id = state.next_app_id();
+    let finite = |v: &crate::model::ResourceVec| v.0.iter().all(|x| x.is_finite() && *x >= 0.0);
+    batch.retain_mut(|ev| {
+        let verdict: Result<(), ShedReason> = match ev {
+            FleetEvent::DemandDrift { app, demand } => {
+                if !finite(demand) {
+                    Err(ShedReason::Malformed)
+                } else if state.index_of(*app).is_none() {
+                    Err(ShedReason::UnknownApp)
+                } else {
+                    Ok(())
+                }
+            }
+            FleetEvent::Arrival { app } => {
+                if !finite(&app.demand) {
+                    Err(ShedReason::Malformed)
+                } else if !state.tiers().iter().any(|t| t.supports_slo(app.slo)) {
+                    Err(ShedReason::UnknownTier)
+                } else {
+                    // Re-mint the id from the authoritative counter:
+                    // producers race, so their intended ids are only
+                    // a hint.
+                    app.id = crate::model::AppId::from_usize(next_id);
+                    next_id += 1;
+                    Ok(())
+                }
+            }
+            FleetEvent::Departure { app } => {
+                if state.index_of(*app).is_none() {
+                    Err(ShedReason::UnknownApp)
+                } else {
+                    Ok(())
+                }
+            }
+            FleetEvent::TierCapacityChange { tier, factor } => {
+                if tier.idx() >= state.tiers().len() {
+                    Err(ShedReason::UnknownTier)
+                } else if !factor.is_finite() || *factor <= 0.0 {
+                    Err(ShedReason::Malformed)
+                } else {
+                    Ok(())
+                }
+            }
+            FleetEvent::RegionOutage { region } => {
+                if state.tiers().iter().any(|t| t.regions.contains(*region)) {
+                    Ok(())
+                } else {
+                    Err(ShedReason::UnknownRegion)
+                }
+            }
+        };
+        match verdict {
+            Ok(()) => true,
+            Err(reason) => {
+                shed.count(reason);
+                false
+            }
+        }
+    });
+
+    // Pass 2: drop events that reference an app departed earlier in
+    // this same batch (stable in-place compaction, no allocation).
+    let mut kept = 0;
+    for i in 0..batch.len() {
+        let id = match &batch[i] {
+            FleetEvent::DemandDrift { app, .. } | FleetEvent::Departure { app } => Some(*app),
+            _ => None,
+        };
+        let departed_earlier = id.is_some_and(|id| {
+            batch[..kept]
+                .iter()
+                .any(|e| matches!(e, FleetEvent::Departure { app } if *app == id))
+        });
+        if departed_earlier {
+            shed.count(ShedReason::UnknownApp);
+        } else {
+            batch.swap(kept, i);
+            kept += 1;
+        }
+    }
+    batch.truncate(kept);
 }
 
 #[cfg(test)]

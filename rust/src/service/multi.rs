@@ -1,0 +1,974 @@
+//! The multi-region ingest plane: N region workers on one persistent
+//! channel fabric, each owning its region's full solver stack *and* its
+//! own bounded ingest queue, under a coordinator thread that runs the
+//! global scheduling layer over fixed-layout `RegionSummary` frames.
+//!
+//! ```text
+//!   producers ──▶ queue[0] ──▶ worker 0: drain ▸ admit ▸ solve ─┐
+//!   (routed    ──▶ queue[1] ──▶ worker 1:   (own RegionCell)    ├─▶ summaries
+//!    by region) ──▶ queue[2] ──▶ worker 2:        …             ┘      │
+//!                                                        global layer ◀┘
+//!                                                (plan migrations → inboxes)
+//! ```
+//!
+//! Per global round the coordinator dispatches every boxed
+//! `RegionCell` through the shared [`Fabric`] (an 8-byte pointer move
+//! per direction — no clone, no spawn), each worker drains *its own*
+//! queue under the shared batch deadline, admits via the same
+//! `admit_batch` pass the single-region [`Service`](super::Service)
+//! uses, and solves only if events were admitted. The coordinator then
+//! commits one journal bound per region (empty for regions that sat
+//! out, so one journal row spans all regions), aggregates the `Copy`
+//! summary frames into [`ServiceMetrics`], and — on rounds where at
+//! least one region took the full path — runs one global planning
+//! round whose vetted migrations become next round's inbox events.
+//!
+//! The contracts are the single-region service's, extended by a region
+//! axis:
+//!
+//! * **Determinism.** The per-region journal fully determines a run:
+//!   migrations are journaled as ordinary departure/arrival events in
+//!   their landing order, so [`MultiRegionService::replay`] (planning
+//!   off) reproduces every region's [`ServiceRound`] list and fleet
+//!   checkpoint bit-for-bit, for any solver worker count.
+//! * **Zero-alloc steady state.** A warm drift-only round — N drains,
+//!   N admissions, N fast-path solves, N summary frames through the
+//!   rings, metric folds — touches the heap zero times; every buffer is
+//!   pre-reserved and recycled, and the summary frames are `Copy`.
+//! * **No spawns after warm-up.** The fabric spawns its N workers on
+//!   the first round and never again
+//!   ([`MultiRegionService::fabric_threads_spawned`]).
+
+use crate::coop::{negotiate, RejectCounts};
+use crate::coordinator::multiregion::{
+    build_region_runtimes, GlobalSession, MigrationRecord, QueuedMigration, RegionRuntime,
+};
+use crate::coordinator::{
+    coop_telemetry, count_breach_tiers, FleetDelta, FleetState, MultiRegionConfig, ServiceMetrics,
+};
+use crate::hierarchy::global::GlobalScheduler;
+use crate::hierarchy::variants::{worst_imbalance, BALANCED_TARGET};
+use crate::metrics::ShedCounts;
+use crate::model::{App, AppId, FleetEvent};
+use crate::obs::{self, FlightTrigger, ObsHub, SpanRecorder};
+use crate::service::config::ServiceConfig;
+use crate::service::error::Error;
+use crate::service::producer::{IngestHandle, MultiIngestHandle};
+use crate::service::queue::IngestQueue;
+use crate::service::snapshot::MultiSnapshot;
+use crate::service::{admit_batch, ServiceRound, NO_SCORE, SHED_BURST_MIN_BATCH};
+use crate::util::fabric::Fabric;
+use crate::util::json::Json;
+use crate::util::timer::{Deadline, Stopwatch};
+use crate::workload::{generate_multiregion, MultiRegionScenario, MultiRegionSpec};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Inbox/batch headroom reserved for coordinator-staged migration
+/// events, so a typical migration round stays within capacity too.
+const MIGRATION_SLACK: usize = 16;
+
+/// The per-round argument every region worker receives: the global
+/// round index and the *shared* drain deadline (all regions batch
+/// under one `--batch-ms` budget).
+#[derive(Debug, Clone, Copy)]
+struct RoundCtx {
+    round: u32,
+    deadline: Instant,
+    max_batch: usize,
+}
+
+/// Full-pipeline telemetry a worker reports for a non-fast-path round;
+/// folded into [`ServiceMetrics`] by the coordinator.
+#[derive(Debug, Clone, Copy)]
+struct FullPathStats {
+    imbalance: f64,
+    p99_ms: f64,
+    pipeline_ms: f64,
+    collect_ms: f64,
+    breach: bool,
+    smape: f64,
+    coop_rounds: u32,
+    coop_rejects: RejectCounts,
+    avoid_edges: u32,
+    escalations: u32,
+}
+
+/// The fixed-layout result frame a region worker hands back through the
+/// fabric's done ring each round. `Copy` by construction: the
+/// region↔global path moves no `Vec` and clones nothing.
+#[derive(Debug, Clone, Copy)]
+struct RegionSummary {
+    /// The solved round's record, or `None` if the region sat out (no
+    /// admitted events this round).
+    record: Option<ServiceRound>,
+    /// Full-pipeline telemetry (`None` on fast-path and idle rounds).
+    full: Option<FullPathStats>,
+    /// An admitted `RegionOutage` was in this round's batch.
+    saw_outage: bool,
+    /// Events drained from the queue (pre-admission, pre-inbox).
+    drained: u32,
+    /// Events shed by admission this round.
+    shed_now: u32,
+    /// Queue occupancy right after the drain.
+    queue_depth: u32,
+}
+
+impl RegionSummary {
+    fn idle(drained: u32, shed_now: u32, queue_depth: u32) -> RegionSummary {
+        RegionSummary {
+            record: None,
+            full: None,
+            saw_outage: false,
+            drained,
+            shed_now,
+            queue_depth,
+        }
+    }
+}
+
+/// One region's complete ingest stack: the coordinator-shared
+/// [`RegionRuntime`] (fleet, engine, SPTLB, tracing recorder) plus the
+/// region-local ingest plane (queue, batch buffer, migration inbox,
+/// journal, records, shed counters). Boxed by the service so a round
+/// dispatch moves one pointer through the fabric.
+struct RegionCell {
+    rt: RegionRuntime,
+    queue: Arc<IngestQueue>,
+    shed_queue_full: Arc<AtomicU64>,
+    /// Recycled drain buffer (`max_batch` + migration slack).
+    batch: Vec<FleetEvent>,
+    /// Migration events the coordinator staged for this round; the
+    /// worker appends them to the batch before admission.
+    inbox: Vec<FleetEvent>,
+    /// Recycled event delta for full-path rounds.
+    delta: FleetDelta,
+    /// Flat admitted-event journal plus per-*global*-round end offsets.
+    journal_events: Vec<FleetEvent>,
+    journal_bounds: Vec<usize>,
+    /// Deterministic records of the rounds this region solved
+    /// (`record.round` is the global round index).
+    rounds: Vec<ServiceRound>,
+    /// Round-0 checkpoint (snapshot root).
+    initial_checkpoint: Json,
+    /// Admission sheds for this region (producer-side `queue_full`
+    /// lives in the atomic; the coordinator merges both into metrics).
+    shed: ShedCounts,
+}
+
+/// The persistent worker pool: one long-lived thread per region, each
+/// driving its own cell's drain→admit→solve round.
+type IngestFabric = Fabric<RegionCell, RoundCtx, RegionSummary>;
+
+impl RegionCell {
+    /// One region-local ingest round: drain own queue until the shared
+    /// deadline (or `max_batch`), append the staged migration inbox,
+    /// admit, and solve iff anything was admitted.
+    fn ingest_round(&mut self, ctx: RoundCtx) -> RegionSummary {
+        self.batch.clear();
+        loop {
+            while self.batch.len() < ctx.max_batch {
+                match self.queue.try_pop() {
+                    Some(ev) => self.batch.push(ev),
+                    None => break,
+                }
+            }
+            if self.batch.len() >= ctx.max_batch || Instant::now() >= ctx.deadline {
+                break;
+            }
+            std::thread::yield_now();
+        }
+        let drained = self.batch.len() as u32;
+        let queue_depth = self.queue.len() as u32;
+        self.batch.append(&mut self.inbox);
+        if self.batch.is_empty() {
+            return RegionSummary::idle(drained, 0, queue_depth);
+        }
+        // Install this region's recorder on the worker thread for the
+        // round's scope (same displaced-slot discipline as
+        // `RegionRuntime::round_once`).
+        let displaced = self.rt.obs.take().map(|mut rec| {
+            rec.set_round(ctx.round);
+            obs::swap(Some(rec))
+        });
+        obs::begin(obs::SpanKind::IngestBatch);
+        let before = self.batch.len();
+        admit_batch(&self.rt.state, &mut self.batch, &mut self.shed);
+        let shed_now = (before - self.batch.len()) as u32;
+        obs::sample(obs::SampleKind::BatchSize, self.batch.len() as u64);
+        obs::end(obs::SpanKind::IngestBatch);
+        let mut summary = RegionSummary::idle(drained, shed_now, queue_depth);
+        if !self.batch.is_empty() {
+            summary.saw_outage =
+                self.batch.iter().any(|e| matches!(e, FleetEvent::RegionOutage { .. }));
+            let (record, full) = self.solve_batch(ctx.round);
+            summary.record = Some(record);
+            summary.full = full;
+        }
+        if let Some(prev) = displaced {
+            self.rt.obs = obs::swap(prev);
+        }
+        summary
+    }
+
+    /// Journal the admitted batch and run it through the engine — the
+    /// region-local mirror of `Service::solve_batch`. The journal
+    /// *bound* is committed by the coordinator after collect, so
+    /// regions that sat out still journal an aligned empty round.
+    fn solve_batch(&mut self, round: u32) -> (ServiceRound, Option<FullPathStats>) {
+        let n_events = self.batch.len();
+        self.journal_events.extend_from_slice(&self.batch);
+        let (record, full) = match self.rt.engine.apply_events(
+            &mut self.rt.state,
+            &self.batch,
+            &self.rt.cfg,
+            round,
+        ) {
+            Some(moves) => (
+                ServiceRound {
+                    round,
+                    n_events: n_events as u32,
+                    fast_path: true,
+                    moves: moves as u32,
+                    score_bits: NO_SCORE,
+                },
+                None,
+            ),
+            None => {
+                self.rt.state.apply_all_into(&self.batch, &mut self.delta);
+                let (report, moves) = self.rt.engine.round(
+                    &mut self.rt.state,
+                    &self.batch,
+                    &self.delta,
+                    &self.rt.cfg,
+                    &self.rt.latency,
+                    round,
+                );
+                let (coop_rounds, coop_rejects) = coop_telemetry(&report);
+                let full = FullPathStats {
+                    imbalance: worst_imbalance(&report.projected_utilization, BALANCED_TARGET),
+                    p99_ms: report.p99_latency_ms,
+                    pipeline_ms: report.pipeline_ms,
+                    collect_ms: report.collect_ms,
+                    breach: count_breach_tiers(&report.initial_utilization) > 0,
+                    smape: self.rt.engine.last_smape(),
+                    coop_rounds,
+                    coop_rejects,
+                    avoid_edges: self.rt.engine.avoid_edge_count() as u32,
+                    escalations: self.rt.engine.last_escalations(),
+                };
+                (
+                    ServiceRound {
+                        round,
+                        n_events: n_events as u32,
+                        fast_path: false,
+                        moves: moves.len() as u32,
+                        score_bits: report.solution.score.to_bits(),
+                    },
+                    Some(full),
+                )
+            }
+        };
+        self.rounds.push(record);
+        (record, full)
+    }
+}
+
+/// The multi-region service runtime: per-region ingest cells on one
+/// persistent fabric, the global scheduling layer, and region-tagged
+/// journal/snapshot persistence.
+pub struct MultiRegionService {
+    config: ServiceConfig,
+    cells: Vec<Box<RegionCell>>,
+    /// Lazily-built persistent worker pool: spawned on the first ingest
+    /// round, reused for the process lifetime.
+    fabric: Option<IngestFabric>,
+    global: GlobalScheduler,
+    /// Vetted migrations planned last round, staged into inboxes at the
+    /// start of the next.
+    pending: Vec<QueuedMigration>,
+    /// Migrations staged *this* round, awaiting destination-minted ids.
+    staged: Vec<QueuedMigration>,
+    rounds_done: u32,
+    /// Recycled per-round summary frames (one per region).
+    summaries: Vec<RegionSummary>,
+    /// Applied cross-region migrations, in commit order.
+    migrations: Vec<MigrationRecord>,
+    /// Aggregated metrics, schema 3 — same shape as the single-region
+    /// service's, folded across regions.
+    pub metrics: ServiceMetrics,
+    stop: Arc<AtomicBool>,
+    hub: Option<ObsHub>,
+    global_obs: Option<SpanRecorder>,
+}
+
+impl MultiRegionService {
+    /// Build the multi-region service from a validated config: one
+    /// testbed, queue, and solver stack per region, all steady-state
+    /// buffers pre-reserved. Works for `regions == 1` too (no global
+    /// layer activity, but the same worker/queue plumbing).
+    pub fn new(config: ServiceConfig) -> MultiRegionService {
+        let scenario = config
+            .multi_scenario
+            .clone()
+            .unwrap_or_else(|| MultiRegionScenario::uniform(1, config.scenario.clone()));
+        let mcfg = MultiRegionConfig {
+            sptlb: config.sptlb(),
+            tick: config.tick,
+            engine: config.engine,
+            scenario,
+            policy: config.policy.clone(),
+            execution: config.execution,
+            forecast: config.forecast.clone(),
+            seed: config.seed,
+        };
+        let bed = generate_multiregion(
+            &MultiRegionSpec::new(config.regions, config.workload.clone()).with_seed(config.seed),
+        );
+        let (runtimes, topology) = build_region_runtimes(&mcfg, bed);
+        let global = GlobalScheduler::new(mcfg.policy.clone(), topology.inter);
+        let reserve_events = config.reserve_rounds * config.max_batch;
+        let n = runtimes.len();
+        let cells = runtimes
+            .into_iter()
+            .map(|rt| {
+                let initial_checkpoint = rt.state.checkpoint_json();
+                Box::new(RegionCell {
+                    rt: *rt,
+                    queue: Arc::new(IngestQueue::with_capacity(config.queue_capacity)),
+                    shed_queue_full: Arc::new(AtomicU64::new(0)),
+                    batch: Vec::with_capacity(config.max_batch + MIGRATION_SLACK),
+                    inbox: Vec::with_capacity(MIGRATION_SLACK),
+                    delta: FleetDelta::default(),
+                    journal_events: Vec::with_capacity(reserve_events),
+                    journal_bounds: Vec::with_capacity(config.reserve_rounds),
+                    rounds: Vec::with_capacity(config.reserve_rounds),
+                    initial_checkpoint,
+                    shed: ShedCounts::default(),
+                })
+            })
+            .collect();
+        MultiRegionService {
+            config,
+            cells,
+            fabric: None,
+            global,
+            pending: Vec::new(),
+            staged: Vec::new(),
+            rounds_done: 0,
+            summaries: Vec::with_capacity(n),
+            migrations: Vec::new(),
+            metrics: ServiceMetrics::default(),
+            stop: Arc::new(AtomicBool::new(false)),
+            hub: None,
+            global_obs: None,
+        }
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.config
+    }
+
+    pub fn n_regions(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Committed global rounds (idle polls do not count).
+    pub fn rounds_done(&self) -> u32 {
+        self.rounds_done
+    }
+
+    pub fn region_fleet(&self, r: usize) -> &FleetState {
+        &self.cells[r].rt.state
+    }
+
+    /// The rounds region `r` solved (`record.round` is the global round
+    /// index; regions skip rounds with no admitted events).
+    pub fn region_rounds(&self, r: usize) -> &[ServiceRound] {
+        &self.cells[r].rounds
+    }
+
+    pub fn total_apps(&self) -> usize {
+        self.cells.iter().map(|c| c.rt.state.n_apps()).sum()
+    }
+
+    /// Applied cross-region migrations, in commit order.
+    pub fn migrations(&self) -> &[MigrationRecord] {
+        &self.migrations
+    }
+
+    /// Worker threads the fabric has spawned — settles at
+    /// [`MultiRegionService::n_regions`] after the first ingest round
+    /// and never grows again (the no-spawn-after-warm-up pin).
+    pub fn fabric_threads_spawned(&self) -> u64 {
+        self.fabric.as_ref().map_or(0, |f| f.threads_spawned())
+    }
+
+    /// A cloneable producer-side handle: one [`IngestHandle`] per
+    /// region, all sharing this service's stop flag.
+    pub fn handle(&self) -> MultiIngestHandle {
+        MultiIngestHandle {
+            regions: self
+                .cells
+                .iter()
+                .map(|c| IngestHandle {
+                    queue: Arc::clone(&c.queue),
+                    shed_queue_full: Arc::clone(&c.shed_queue_full),
+                    policy: self.config.backpressure,
+                    stop: Arc::clone(&self.stop),
+                })
+                .collect(),
+        }
+    }
+
+    /// Tell producers (and blocking `submit`s) to wind down.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
+    /// Arm tracing: one recorder per region track plus the global
+    /// track, harvested in ascending-region-then-global order.
+    pub fn attach_obs(&mut self, hub: ObsHub) {
+        for (r, cell) in self.cells.iter_mut().enumerate() {
+            cell.rt.obs = Some(hub.recorder(r as u16));
+        }
+        self.global_obs = Some(hub.recorder(obs::GLOBAL_TRACK));
+        self.hub = Some(hub);
+    }
+
+    /// The attached tracing hub, if any.
+    pub fn obs_hub(&self) -> Option<&ObsHub> {
+        self.hub.as_ref()
+    }
+
+    /// Fire a flight-recorder trigger on the attached hub (no-op
+    /// without one).
+    pub fn obs_trigger(&mut self, trigger: FlightTrigger, note: &str) {
+        if let Some(hub) = self.hub.as_mut() {
+            hub.trigger(trigger, note);
+        }
+    }
+
+    /// Service metrics with the hub's `obs` summary folded in when
+    /// tracing is armed.
+    pub fn metrics_json(&self) -> Json {
+        self.metrics.to_json_with_obs(self.hub.as_ref().map(ObsHub::metrics_json))
+    }
+
+    fn harvest_obs(&mut self, round: u32) {
+        let Some(hub) = self.hub.as_mut() else { return };
+        for cell in &mut self.cells {
+            if let Some(rec) = cell.rt.obs.as_mut() {
+                hub.harvest(rec);
+            }
+        }
+        if let Some(rec) = self.global_obs.as_mut() {
+            hub.harvest(rec);
+        }
+        hub.commit_round(round);
+    }
+
+    /// One global ingest round: stage pending migrations into region
+    /// inboxes, dispatch every cell through the fabric (each worker
+    /// drains its own queue under the shared batch deadline), collect
+    /// the summary frames, commit the journal, and — when at least one
+    /// region took the full path — plan next round's migrations.
+    /// Returns the number of regions that solved, or `None` (counting
+    /// an idle poll) when no region admitted anything.
+    pub fn ingest_round(&mut self) -> Option<u32> {
+        let round = self.rounds_done;
+        let sw = Stopwatch::start();
+        if let Some(mut rec) = self.global_obs.take() {
+            rec.set_round(round);
+            self.global_obs = obs::swap(Some(rec));
+            debug_assert!(self.global_obs.is_none(), "coordinating thread slot was free");
+        }
+        obs::begin(obs::SpanKind::GlobalRound);
+        self.stage_pending();
+        let ctx = RoundCtx {
+            round,
+            deadline: Instant::now() + self.config.batch_budget,
+            max_batch: self.config.max_batch,
+        };
+        let n = self.cells.len();
+        let fabric = self.fabric.get_or_insert_with(|| {
+            Fabric::new(n, |cell: &mut RegionCell, ctx: RoundCtx| cell.ingest_round(ctx))
+        });
+        for (i, cell) in self.cells.drain(..).enumerate() {
+            fabric.dispatch(i, cell, ctx);
+        }
+        self.summaries.clear();
+        for i in 0..n {
+            let (cell, summary) = fabric.collect(i);
+            self.cells.push(cell);
+            self.summaries.push(summary);
+        }
+        self.mirror_shed();
+        let solved = self.summaries.iter().filter(|s| s.record.is_some()).count() as u32;
+        if solved > 0 {
+            // Every region journals one (possibly empty) round, so one
+            // journal row spans all regions — the workers already
+            // appended their admitted events.
+            for cell in &mut self.cells {
+                cell.journal_bounds.push(cell.journal_events.len());
+            }
+            self.recover_migrants();
+            self.aggregate(sw.elapsed_ms());
+            if n > 1 && self.summaries.iter().any(|s| s.full.is_some()) {
+                self.plan_next_round();
+            }
+            self.rounds_done += 1;
+        } else {
+            // All-shed staged migrations (possible only if a migrant
+            // was refused admission) die here rather than leaking into
+            // a later round's id recovery.
+            self.staged.clear();
+            self.metrics.ingest.idle_polls += 1;
+        }
+        obs::end(obs::SpanKind::GlobalRound);
+        self.global_obs = obs::uninstall();
+        if solved > 0 {
+            self.harvest_obs(round);
+            Some(solved)
+        } else {
+            None
+        }
+    }
+
+    /// Turn last round's vetted migration plan into inbox events: a
+    /// `Departure` in the source region and an `Arrival` in the
+    /// destination. The destination's admission pass mints the landing
+    /// id in batch order; the deterministic migrant name is the
+    /// recovery key that maps it back to the plan.
+    fn stage_pending(&mut self) {
+        for q in self.pending.drain(..) {
+            let (src, dst) = (q.from.idx(), q.to.idx());
+            let Some(idx) = self.cells[src].rt.state.index_of(q.app) else {
+                continue; // departed on its own since planning
+            };
+            let source = &self.cells[src].rt.state.apps()[idx];
+            let app = App {
+                id: AppId::from_usize(0), // admission re-mints
+                name: format!("migrant-{}-{}", q.app.0, q.from.0),
+                demand: source.demand,
+                slo: source.slo,
+                criticality: source.criticality,
+                preferred_region: q.preferred,
+            };
+            self.cells[src].inbox.push(FleetEvent::Departure { app: q.app });
+            self.cells[dst].inbox.push(FleetEvent::Arrival { app });
+            self.staged.push(q);
+        }
+    }
+
+    /// Map each staged migration to the id its destination minted: the
+    /// arrival is in the destination's just-committed journal round
+    /// under the deterministic migrant name.
+    fn recover_migrants(&mut self) {
+        for q in self.staged.drain(..) {
+            let name = format!("migrant-{}-{}", q.app.0, q.from.0);
+            let cell = &self.cells[q.to.idx()];
+            let bounds = &cell.journal_bounds;
+            let start = if bounds.len() < 2 { 0 } else { bounds[bounds.len() - 2] };
+            let slice = &cell.journal_events[start..bounds[bounds.len() - 1]];
+            let minted = slice.iter().find_map(|e| match e {
+                FleetEvent::Arrival { app } if app.name == name => Some(app.id),
+                _ => None,
+            });
+            let Some(new_id) = minted else { continue };
+            obs::decision(obs::Decision {
+                stage: obs::DecisionStage::Adopted,
+                origin: obs::Origin::Global,
+                reason: obs::Reason::None,
+                app: q.app.0,
+                from: q.from.0 as i64,
+                to: q.to.0 as i64,
+                detail: new_id.0 as f64,
+            });
+            obs::sample(
+                obs::SampleKind::MigrationDistance,
+                (q.from.0 as i64 - q.to.0 as i64).unsigned_abs(),
+            );
+            self.migrations.push(MigrationRecord { app: q.app, new_id, from: q.from, to: q.to });
+        }
+    }
+
+    /// Mirror producer-side and admission shed counters into metrics so
+    /// exports never trail the live counters. Allocation-free.
+    fn mirror_shed(&mut self) {
+        let mut shed = ShedCounts::default();
+        for cell in &self.cells {
+            shed.queue_full += cell.shed_queue_full.load(Ordering::Relaxed);
+            shed.unknown_app += cell.shed.unknown_app;
+            shed.unknown_tier += cell.shed.unknown_tier;
+            shed.unknown_region += cell.shed.unknown_region;
+            shed.malformed += cell.shed.malformed;
+        }
+        self.metrics.ingest.shed = shed;
+    }
+
+    /// Fold the round's summary frames into [`ServiceMetrics`].
+    /// Allocation-free: the frames are `Copy` and every sink is an
+    /// online accumulator.
+    fn aggregate(&mut self, elapsed_ms: f64) {
+        let mut batch_total = 0u64;
+        let mut depth_total = 0u64;
+        let mut moves_total = 0.0;
+        let mut shed_burst = false;
+        let mut breach = false;
+        for s in &self.summaries {
+            depth_total += s.queue_depth as u64;
+            let drained = s.drained as usize;
+            if drained >= SHED_BURST_MIN_BATCH && (s.shed_now as usize) * 2 >= drained {
+                shed_burst = true;
+            }
+            let Some(record) = s.record else { continue };
+            batch_total += record.n_events as u64;
+            moves_total += record.moves as f64;
+            if record.fast_path {
+                self.metrics.ingest.fast_rounds += 1;
+            } else {
+                self.metrics.ingest.full_rounds += 1;
+            }
+            let Some(full) = s.full else { continue };
+            self.metrics.imbalance.push(full.imbalance);
+            self.metrics.latency_p99.push(full.p99_ms);
+            self.metrics.pipeline_ms.push(full.pipeline_ms);
+            self.metrics.collect_ms.push(full.collect_ms);
+            if full.breach {
+                self.metrics.breach_rounds += 1;
+                breach = true;
+            }
+            if full.smape.is_finite() {
+                self.metrics.forecast_smape.push(full.smape);
+            }
+            self.metrics.coop_rounds.push(full.coop_rounds as f64);
+            self.metrics.coop_rejects.push(full.coop_rejects.total() as f64);
+            self.metrics.avoid_edges.push(full.avoid_edges as f64);
+            self.metrics.escalations += full.escalations;
+        }
+        if shed_burst {
+            self.obs_trigger(FlightTrigger::ShedBurst, "admission shed at least half a batch");
+        }
+        if breach {
+            self.obs_trigger(FlightTrigger::SloBreach, "pre-solve capacity breach");
+        }
+        self.metrics.ingest.accepted += batch_total;
+        self.metrics.ingest.batch_events.push(batch_total as f64);
+        self.metrics.ingest.queue_depth.push(depth_total as f64);
+        self.metrics.ingest.round_ms.push(elapsed_ms);
+        self.metrics.moves.push(moves_total);
+        self.metrics.events.push(batch_total as f64);
+        self.metrics.rounds += 1;
+    }
+
+    /// One global planning round over the post-solve fleets (the same
+    /// [`GlobalSession`] negotiation the synchronous multi-region
+    /// coordinator runs): vetted migrations land in `pending` and are
+    /// staged into inboxes next round. Runs only on rounds where at
+    /// least one region took the full path — drift-only fast-path
+    /// rounds shift no pressure and stay allocation-free.
+    fn plan_next_round(&mut self) {
+        self.global.begin_round();
+        let escalations: Vec<u32> =
+            self.cells.iter_mut().map(|c| c.rt.engine.take_escalations()).collect();
+        let outage: Vec<bool> = self.summaries.iter().map(|s| s.saw_outage).collect();
+        let refs: Vec<&RegionRuntime> = self.cells.iter().map(|c| &c.rt).collect();
+        let mut session = GlobalSession {
+            regions: &refs,
+            global: &mut self.global,
+            outage: &outage,
+            escalations,
+            landings: Vec::new(),
+            pressures: Vec::new(),
+            accepted: Vec::new(),
+        };
+        negotiate(&mut session, 1, Deadline::unbounded());
+        self.pending = std::mem::take(&mut session.accepted);
+    }
+
+    /// Run one global round from already-admitted per-region event
+    /// lists — the replay path. Regions with an empty list sat the
+    /// round out (exactly as live); admission is *not* re-run.
+    pub fn round_from_events(&mut self, per_region: &[Vec<FleetEvent>]) {
+        assert_eq!(per_region.len(), self.cells.len(), "journal region count");
+        let round = self.rounds_done;
+        for (cell, events) in self.cells.iter_mut().zip(per_region) {
+            if !events.is_empty() {
+                cell.batch.clear();
+                cell.batch.extend_from_slice(events);
+                cell.solve_batch(round);
+            }
+            cell.journal_bounds.push(cell.journal_events.len());
+        }
+        self.rounds_done += 1;
+    }
+
+    /// Replay a region-tagged journal (`journal[round][region]`) on a
+    /// fresh service with the global layer off. With the same config
+    /// this reproduces every region's records and checkpoint
+    /// bit-for-bit, for any solver worker count.
+    pub fn replay(config: ServiceConfig, journal: &[Vec<Vec<FleetEvent>>]) -> MultiRegionService {
+        let mut service = MultiRegionService::new(config);
+        for round in journal {
+            service.round_from_events(round);
+        }
+        service
+    }
+
+    /// Capture a restorable snapshot: per-region initial and current
+    /// checkpoints under one `rounds_done` cursor.
+    pub fn snapshot(&self) -> MultiSnapshot {
+        MultiSnapshot {
+            rounds_done: self.rounds_done,
+            seed: self.config.seed,
+            workload: self.config.workload_name.clone(),
+            regions: self.cells.len() as u32,
+            initial: self.cells.iter().map(|c| c.initial_checkpoint.clone()).collect(),
+            current: self.cells.iter().map(|c| c.rt.state.checkpoint_json()).collect(),
+        }
+    }
+
+    /// [`MultiRegionService::snapshot`] with the serialization cost
+    /// recorded as a `snapshot` span on the global track.
+    pub fn snapshot_traced(&mut self) -> MultiSnapshot {
+        if let Some(mut rec) = self.global_obs.take() {
+            rec.set_round(self.rounds_done);
+            self.global_obs = obs::swap(Some(rec));
+        }
+        obs::begin(obs::SpanKind::Snapshot);
+        let snap = self.snapshot();
+        obs::end(obs::SpanKind::Snapshot);
+        self.global_obs = obs::uninstall();
+        self.harvest_obs(self.rounds_done);
+        snap
+    }
+
+    /// Resurrect a killed multi-region service from its latest snapshot
+    /// plus the full region-tagged journal — the single-region
+    /// [`Service::restore`](super::Service::restore) contract with a
+    /// region axis: every region's replayed fleet at the snapshot round
+    /// must equal its checkpoint bit-for-bit, then the journal tail
+    /// (rounds admitted after the snapshot) is replayed on top.
+    pub fn restore(
+        config: ServiceConfig,
+        snap: &MultiSnapshot,
+        journal: &[Vec<Vec<FleetEvent>>],
+    ) -> Result<MultiRegionService, Error> {
+        if snap.seed != config.seed || snap.workload != config.workload_name {
+            return Err(Error::SnapshotCorrupt(format!(
+                "snapshot is for workload '{}' seed {}, config resolves '{}' seed {}",
+                snap.workload, snap.seed, config.workload_name, config.seed
+            )));
+        }
+        if snap.regions as usize != config.regions {
+            return Err(Error::SnapshotCorrupt(format!(
+                "snapshot spans {} regions but the config resolves {}",
+                snap.regions, config.regions
+            )));
+        }
+        if (journal.len() as u32) < snap.rounds_done {
+            return Err(Error::SnapshotCorrupt(format!(
+                "journal holds {} rounds but the snapshot was taken at round {}",
+                journal.len(),
+                snap.rounds_done
+            )));
+        }
+        let mut service = MultiRegionService::new(config);
+        for (r, cell) in service.cells.iter().enumerate() {
+            if cell.initial_checkpoint.to_string() != snap.initial[r].to_string() {
+                return Err(Error::SnapshotCorrupt(format!(
+                    "region {r}: initial checkpoint does not match the configured workload"
+                )));
+            }
+        }
+        let (upto, tail) = journal.split_at(snap.rounds_done as usize);
+        for round in upto {
+            service.round_from_events(round);
+        }
+        for (r, cell) in service.cells.iter().enumerate() {
+            if cell.rt.state.checkpoint_json().to_string() != snap.current[r].to_string() {
+                return Err(Error::SnapshotCorrupt(format!(
+                    "region {r}: replaying {} journal rounds did not reproduce the checkpoint",
+                    snap.rounds_done
+                )));
+            }
+        }
+        for round in tail {
+            service.round_from_events(round);
+        }
+        Ok(service)
+    }
+
+    /// Admitted events region `region` journaled in global round `k`
+    /// (empty if the region sat that round out).
+    pub fn journal_round(&self, region: usize, k: u32) -> &[FleetEvent] {
+        let cell = &self.cells[region];
+        let k = k as usize;
+        let start = if k == 0 { 0 } else { cell.journal_bounds[k - 1] };
+        &cell.journal_events[start..cell.journal_bounds[k]]
+    }
+
+    /// Per-region admitted-event slices of round `k`, ascending region
+    /// id — the shape `append_multi_journal_round` persists.
+    pub fn journal_round_all(&self, k: u32) -> Vec<&[FleetEvent]> {
+        (0..self.cells.len()).map(|r| self.journal_round(r, k)).collect()
+    }
+
+    /// The full region-tagged journal: `journal[round][region]`.
+    pub fn journal(&self) -> Vec<Vec<Vec<FleetEvent>>> {
+        (0..self.rounds_done)
+            .map(|k| (0..self.cells.len()).map(|r| self.journal_round(r, k).to_vec()).collect())
+            .collect()
+    }
+
+    /// The journal as JSON, in the same region-tagged shape as
+    /// [`crate::coordinator::MultiRegionCoordinator::event_log_json`]
+    /// (so `parse_multiregion_event_log` reads it back).
+    pub fn journal_json(&self) -> Json {
+        Json::arr((0..self.rounds_done).map(|k| {
+            Json::arr((0..self.cells.len()).map(|r| {
+                Json::obj(vec![
+                    ("region", Json::num(r as f64)),
+                    ("events", Json::arr(self.journal_round(r, k).iter().map(|e| e.to_json()))),
+                ])
+            }))
+        }))
+    }
+
+    /// Deterministic per-region decision log as JSON.
+    pub fn rounds_json(&self) -> Json {
+        Json::arr(self.cells.iter().enumerate().map(|(r, cell)| {
+            Json::obj(vec![
+                ("region", Json::num(r as f64)),
+                ("rounds", Json::arr(cell.rounds.iter().map(|rec| rec.to_json()))),
+            ])
+        }))
+    }
+
+    /// Per-region fleet checkpoints (the bit-exact state witnesses).
+    pub fn checkpoint_json(&self) -> Json {
+        Json::arr(self.cells.iter().map(|c| c.rt.state.checkpoint_json()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{AppId, ResourceVec};
+    use std::time::Duration;
+
+    fn test_config(regions: usize) -> ServiceConfig {
+        ServiceConfig::builder()
+            .workload("small")
+            .events("churn")
+            .regions(regions)
+            .timeout(Duration::from_millis(20))
+            .batch_budget(Duration::from_millis(1))
+            .build()
+            .unwrap()
+    }
+
+    fn drift(id: usize, cpu: f64) -> FleetEvent {
+        FleetEvent::DemandDrift {
+            app: AppId::from_usize(id),
+            demand: ResourceVec::new(cpu, 1.0, 1.0),
+        }
+    }
+
+    #[test]
+    fn regions_drain_their_own_queues_and_journal_aligned_rounds() {
+        let mut s = MultiRegionService::new(test_config(3));
+        let h = s.handle();
+        assert_eq!(h.n_regions(), 3);
+        // Regions 0 and 2 get events; region 1 sits the round out.
+        assert!(h.submit(0, drift(0, 2.0)));
+        assert!(h.submit(2, drift(1, 1.5)));
+        let solved = s.ingest_round().expect("two regions had events");
+        assert_eq!(solved, 2);
+        assert_eq!(s.rounds_done(), 1);
+        assert_eq!(s.journal_round(0, 0).len(), 1);
+        assert_eq!(s.journal_round(1, 0).len(), 0, "idle region journals an empty round");
+        assert_eq!(s.journal_round(2, 0).len(), 1);
+        assert_eq!(s.region_rounds(0).len(), 1);
+        assert_eq!(s.region_rounds(1).len(), 0, "idle region records nothing");
+        assert_eq!(s.fabric_threads_spawned(), 3, "one persistent worker per region");
+    }
+
+    #[test]
+    fn idle_polls_commit_nothing() {
+        let mut s = MultiRegionService::new(test_config(2));
+        assert!(s.ingest_round().is_none());
+        assert!(s.ingest_round().is_none());
+        assert_eq!(s.metrics.ingest.idle_polls, 2);
+        assert_eq!(s.rounds_done(), 0);
+    }
+
+    #[test]
+    fn replaying_the_journal_reproduces_records_and_checkpoints() {
+        let mut live = MultiRegionService::new(test_config(3));
+        let h = live.handle();
+        for k in 0..5u32 {
+            for r in 0..3 {
+                h.submit(r, drift((k as usize + r) % 4, 1.0 + k as f64 * 0.2));
+            }
+            live.ingest_round();
+        }
+        assert!(live.rounds_done() > 0);
+        let journal = live.journal();
+        let replay = MultiRegionService::replay(test_config(3), &journal);
+        for r in 0..3 {
+            assert_eq!(replay.region_rounds(r), live.region_rounds(r), "region {r} records");
+        }
+        assert_eq!(
+            replay.checkpoint_json().to_string(),
+            live.checkpoint_json().to_string(),
+            "checkpoints match bit-for-bit"
+        );
+        assert_eq!(replay.metrics.ingest.accepted, 0, "replay skips ingest accounting");
+    }
+
+    #[test]
+    fn snapshot_restore_verifies_per_region_checkpoints() {
+        let mut live = MultiRegionService::new(test_config(2));
+        let h = live.handle();
+        for k in 0..3u32 {
+            h.submit(0, drift(k as usize % 3, 2.0));
+            h.submit(1, drift(k as usize % 3, 1.2));
+            live.ingest_round();
+        }
+        let snap = live.snapshot();
+        assert_eq!(snap.rounds_done, 3);
+        // One more round lands after the snapshot.
+        h.submit(1, drift(0, 4.0));
+        live.ingest_round();
+
+        let journal = live.journal();
+        let restored = MultiRegionService::restore(test_config(2), &snap, &journal).unwrap();
+        for r in 0..2 {
+            assert_eq!(restored.region_rounds(r), live.region_rounds(r));
+        }
+        assert_eq!(restored.checkpoint_json().to_string(), live.checkpoint_json().to_string());
+
+        // Region-count mismatch is refused before any replay.
+        let err = MultiRegionService::restore(test_config(3), &snap, &journal).unwrap_err();
+        assert!(matches!(err, Error::SnapshotCorrupt(_)), "{err}");
+
+        // A tampered journal is detected.
+        let mut tampered = journal.clone();
+        tampered[1][0] = vec![drift(0, 99.0)];
+        let err = MultiRegionService::restore(test_config(2), &snap, &tampered).unwrap_err();
+        assert!(matches!(err, Error::SnapshotCorrupt(_)), "{err}");
+    }
+
+    #[test]
+    fn single_region_service_works_without_a_multi_scenario() {
+        let mut s = MultiRegionService::new(test_config(1));
+        let h = s.handle();
+        assert!(h.submit(0, drift(0, 1.8)));
+        assert_eq!(s.ingest_round(), Some(1));
+        assert_eq!(s.n_regions(), 1);
+        assert!(s.migrations().is_empty(), "no global layer with one region");
+    }
+}

@@ -73,6 +73,39 @@ impl IngestHandle {
     }
 }
 
+/// Cloneable producer-side handle to a multi-region service's ingest
+/// plane: one [`IngestHandle`] per region, so producers route each
+/// event to the queue its region worker drains. Events are region-tagged
+/// at the producer (the caller knows which region's shadow fleet minted
+/// them); an event submitted to region `r` is validated against region
+/// `r`'s live fleet by that worker's admission pass.
+#[derive(Clone)]
+pub struct MultiIngestHandle {
+    pub(crate) regions: Vec<IngestHandle>,
+}
+
+impl MultiIngestHandle {
+    pub fn n_regions(&self) -> usize {
+        self.regions.len()
+    }
+
+    /// The producer handle for one region's queue.
+    pub fn region(&self, r: usize) -> &IngestHandle {
+        &self.regions[r]
+    }
+
+    /// Submit one event to region `r`'s queue under its backpressure
+    /// policy. Returns `true` if the event was enqueued.
+    pub fn submit(&self, r: usize, event: FleetEvent) -> bool {
+        self.regions[r].submit(event)
+    }
+
+    /// True once the owning service has been told to stop.
+    pub fn stopped(&self) -> bool {
+        self.regions.first().is_none_or(|h| h.stopped())
+    }
+}
+
 /// A scenario generator packaged as an ingest producer. It keeps a
 /// *shadow* copy of the fleet so it can mint plausible arrivals and
 /// drifts without touching the live service state — the authoritative

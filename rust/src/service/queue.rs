@@ -1,148 +1,19 @@
-//! The bounded, mutex-free ingest queue: a Vyukov-style MPMC ring
-//! buffer specialized to [`FleetEvent`]. Producer threads `try_push`
-//! concurrently; the single service loop `try_pop`s during its drain
-//! window. Capacity is fixed at construction (rounded up to a power of
-//! two) — a full queue is the backpressure signal, surfaced to the
-//! producer as the rejected event so the shed/block policy can decide
-//! what to do with it.
-//!
-//! No external crates: each slot carries an atomic sequence number that
-//! encodes whose turn it is (producer when `seq == pos`, consumer when
-//! `seq == pos + 1`), so push and pop synchronize through one
-//! acquire/release pair per transfer and never lock. Neither operation
-//! touches the allocator — the warm ingest round's zero-allocation
-//! contract extends through the queue.
+//! The bounded, mutex-free ingest queue: the generic Vyukov ring
+//! ([`crate::util::ring::Ring`]) specialized to [`FleetEvent`].
+//! Producer threads `try_push` concurrently; the service loop (or, with
+//! `--regions N`, the region worker owning this queue) `try_pop`s
+//! during its drain window. Capacity is fixed at construction (rounded
+//! up to a power of two) — a full queue is the backpressure signal,
+//! surfaced to the producer as the rejected event so the shed/block
+//! policy can decide what to do with it. Push and pop never touch the
+//! allocator, so the warm ingest round's zero-allocation contract
+//! extends through the queue.
 
 use crate::model::FleetEvent;
-use std::cell::UnsafeCell;
-use std::mem::MaybeUninit;
-use std::sync::atomic::{AtomicUsize, Ordering};
-
-struct Slot {
-    /// Turn counter: `pos` ⇒ free for the producer claiming `pos`;
-    /// `pos + 1` ⇒ holds that producer's value, free for the consumer;
-    /// `pos + capacity` ⇒ recycled for the next lap.
-    seq: AtomicUsize,
-    value: UnsafeCell<MaybeUninit<FleetEvent>>,
-}
+use crate::util::ring::Ring;
 
 /// Bounded lock-free multi-producer event queue.
-pub struct IngestQueue {
-    slots: Box<[Slot]>,
-    mask: usize,
-    push_pos: AtomicUsize,
-    pop_pos: AtomicUsize,
-}
-
-// The UnsafeCell contents are handed off with release/acquire ordering
-// on the slot sequence; a slot is only ever touched by the thread whose
-// claimed position matches the sequence.
-unsafe impl Send for IngestQueue {}
-unsafe impl Sync for IngestQueue {}
-
-impl IngestQueue {
-    /// A queue holding at least `capacity` events (rounded up to the
-    /// next power of two, minimum 2).
-    pub fn with_capacity(capacity: usize) -> Self {
-        let cap = capacity.max(2).next_power_of_two();
-        let slots: Box<[Slot]> = (0..cap)
-            .map(|i| Slot {
-                seq: AtomicUsize::new(i),
-                value: UnsafeCell::new(MaybeUninit::uninit()),
-            })
-            .collect();
-        Self {
-            slots,
-            mask: cap - 1,
-            push_pos: AtomicUsize::new(0),
-            pop_pos: AtomicUsize::new(0),
-        }
-    }
-
-    pub fn capacity(&self) -> usize {
-        self.slots.len()
-    }
-
-    /// Approximate occupancy (exact when no push/pop races the read).
-    pub fn len(&self) -> usize {
-        let push = self.push_pos.load(Ordering::Relaxed);
-        let pop = self.pop_pos.load(Ordering::Relaxed);
-        push.saturating_sub(pop)
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-
-    /// Enqueue without blocking. On a full queue the event is handed
-    /// back untouched so the caller's backpressure policy (shed or
-    /// block-and-retry) owns it.
-    pub fn try_push(&self, event: FleetEvent) -> Result<(), FleetEvent> {
-        let mut pos = self.push_pos.load(Ordering::Relaxed);
-        loop {
-            let slot = &self.slots[pos & self.mask];
-            let seq = slot.seq.load(Ordering::Acquire);
-            let diff = seq as isize - pos as isize;
-            if diff == 0 {
-                match self.push_pos.compare_exchange_weak(
-                    pos,
-                    pos + 1,
-                    Ordering::Relaxed,
-                    Ordering::Relaxed,
-                ) {
-                    Ok(_) => {
-                        unsafe { (*slot.value.get()).write(event) };
-                        slot.seq.store(pos + 1, Ordering::Release);
-                        return Ok(());
-                    }
-                    Err(current) => pos = current,
-                }
-            } else if diff < 0 {
-                // The slot is still occupied by a value from the
-                // previous lap: the ring is full.
-                return Err(event);
-            } else {
-                pos = self.push_pos.load(Ordering::Relaxed);
-            }
-        }
-    }
-
-    /// Dequeue without blocking; `None` when the queue is empty.
-    pub fn try_pop(&self) -> Option<FleetEvent> {
-        let mut pos = self.pop_pos.load(Ordering::Relaxed);
-        loop {
-            let slot = &self.slots[pos & self.mask];
-            let seq = slot.seq.load(Ordering::Acquire);
-            let diff = seq as isize - (pos + 1) as isize;
-            if diff == 0 {
-                match self.pop_pos.compare_exchange_weak(
-                    pos,
-                    pos + 1,
-                    Ordering::Relaxed,
-                    Ordering::Relaxed,
-                ) {
-                    Ok(_) => {
-                        let event = unsafe { (*slot.value.get()).assume_init_read() };
-                        slot.seq.store(pos + self.mask + 1, Ordering::Release);
-                        return Some(event);
-                    }
-                    Err(current) => pos = current,
-                }
-            } else if diff < 0 {
-                return None;
-            } else {
-                pos = self.pop_pos.load(Ordering::Relaxed);
-            }
-        }
-    }
-}
-
-impl Drop for IngestQueue {
-    fn drop(&mut self) {
-        // Events own heap (arrival names); drain what was never consumed.
-        while self.try_pop().is_some() {}
-    }
-}
+pub type IngestQueue = Ring<FleetEvent>;
 
 #[cfg(test)]
 mod tests {

@@ -120,6 +120,130 @@ pub fn load_journal(path: &Path) -> std::io::Result<Result<Vec<Vec<FleetEvent>>,
     Ok(Ok(rounds))
 }
 
+/// Multi-region snapshot document schema (first multi-region version).
+pub const MULTI_SNAPSHOT_SCHEMA: u32 = 3;
+
+/// A point-in-time capture of a running multi-region ingest service:
+/// the single-region [`Snapshot`] contract extended with a region axis.
+/// Checkpoints are per region, ascending region id; `rounds_done`
+/// counts *global* committed rounds (every region journals one —
+/// possibly empty — event list per committed round, so one journal line
+/// covers all regions).
+#[derive(Debug, Clone)]
+pub struct MultiSnapshot {
+    pub rounds_done: u32,
+    pub seed: u64,
+    pub workload: String,
+    /// Region count, so a restore with the wrong `--regions` is caught
+    /// before any replay work happens.
+    pub regions: u32,
+    /// Per-region fleet checkpoints at round 0.
+    pub initial: Vec<Json>,
+    /// Per-region fleet checkpoints at `rounds_done` — the replay
+    /// integrity witnesses.
+    pub current: Vec<Json>,
+}
+
+impl MultiSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("multi_service_snapshot")),
+            ("schema", Json::num(MULTI_SNAPSHOT_SCHEMA as f64)),
+            ("rounds_done", Json::num(self.rounds_done as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("workload", Json::str(&self.workload)),
+            ("regions", Json::num(self.regions as f64)),
+            ("initial", Json::arr(self.initial.iter().cloned())),
+            ("current", Json::arr(self.current.iter().cloned())),
+        ])
+    }
+
+    /// Parse a multi-region snapshot document.
+    pub fn from_json(j: &Json) -> Result<MultiSnapshot, String> {
+        if j.get("kind").as_str() != Some("multi_service_snapshot") {
+            return Err("not a multi_service_snapshot document".into());
+        }
+        let schema = j.get("schema").as_u64().ok_or("missing schema")?;
+        if schema != MULTI_SNAPSHOT_SCHEMA as u64 {
+            return Err(format!("unsupported multi snapshot schema {schema}"));
+        }
+        let regions = j.get("regions").as_u64().ok_or("missing regions")? as u32;
+        let checkpoints = |key: &str| -> Result<Vec<Json>, String> {
+            let arr = j.get(key).as_arr().ok_or_else(|| format!("missing {key} checkpoints"))?;
+            if arr.len() != regions as usize {
+                return Err(format!(
+                    "{key} holds {} checkpoints for {regions} regions",
+                    arr.len()
+                ));
+            }
+            Ok(arr.to_vec())
+        };
+        Ok(MultiSnapshot {
+            rounds_done: j.get("rounds_done").as_u64().ok_or("missing rounds_done")? as u32,
+            seed: j.get("seed").as_u64().ok_or("missing seed")?,
+            workload: j.get("workload").as_str().ok_or("missing workload")?.to_string(),
+            regions,
+            initial: checkpoints("initial")?,
+            current: checkpoints("current")?,
+        })
+    }
+
+    /// Atomically persist (same `.tmp` + rename dance as [`Snapshot`]).
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        let tmp = path.with_extension("tmp");
+        fs::write(&tmp, self.to_json().pretty())?;
+        fs::rename(&tmp, path)
+    }
+
+    pub fn load(path: &Path) -> std::io::Result<Result<MultiSnapshot, String>> {
+        let text = fs::read_to_string(path)?;
+        Ok(match Json::parse(&text) {
+            Ok(j) => MultiSnapshot::from_json(&j),
+            Err(e) => Err(format!("unparseable JSON in {}: {e}", path.display())),
+        })
+    }
+}
+
+/// Append one committed multi-region round to a JSONL journal: one JSON
+/// array-of-arrays per line — `regions[r]` is region `r`'s admitted
+/// event list for the round (empty for regions that sat the round out).
+pub fn append_multi_journal_round(
+    file: &mut fs::File,
+    regions: &[&[FleetEvent]],
+) -> std::io::Result<()> {
+    let rounds = regions.iter().map(|evs| Json::arr(evs.iter().map(|e| e.to_json())));
+    let line = Json::arr(rounds).to_string();
+    writeln!(file, "{line}")
+}
+
+/// Load a multi-region JSONL journal back into per-round, per-region
+/// event lists. Same torn-tail contract as [`load_journal`]: a crash
+/// mid-append may tear the final line (dropped); corruption anywhere
+/// earlier is an error.
+pub fn load_multi_journal(
+    path: &Path,
+) -> std::io::Result<Result<Vec<Vec<Vec<FleetEvent>>>, String>> {
+    let text = fs::read_to_string(path)?;
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    let mut rounds = Vec::with_capacity(lines.len());
+    for (i, line) in lines.iter().enumerate() {
+        let parsed = Json::parse(line).ok().and_then(|j| {
+            j.as_arr()?
+                .iter()
+                .map(|region| {
+                    region.as_arr()?.iter().map(FleetEvent::from_json).collect::<Option<Vec<_>>>()
+                })
+                .collect::<Option<Vec<_>>>()
+        });
+        match parsed {
+            Some(regions) => rounds.push(regions),
+            None if i + 1 == lines.len() => break, // torn tail from a crash
+            None => return Ok(Err(format!("corrupt journal line {}", i + 1))),
+        }
+    }
+    Ok(Ok(rounds))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -191,6 +315,61 @@ mod tests {
         fs::write(&path, "garbage\n[]\n").unwrap();
         let err = load_journal(&path).unwrap().unwrap_err();
         assert!(err.contains("line 1"), "{err}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn multi_snapshot_document_roundtrips_and_checks_region_count() {
+        let snap = MultiSnapshot {
+            rounds_done: 7,
+            seed: 42,
+            workload: "paper".into(),
+            regions: 2,
+            initial: vec![Json::num(1.0), Json::num(2.0)],
+            current: vec![Json::num(3.0), Json::num(4.0)],
+        };
+        let back = MultiSnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back.rounds_done, 7);
+        assert_eq!(back.regions, 2);
+        assert_eq!(back.initial.len(), 2);
+        assert_eq!(back.current[1].to_string(), snap.current[1].to_string());
+
+        // A single-region snapshot is not silently accepted here.
+        let single = Snapshot {
+            rounds_done: 1,
+            initial: Json::Null,
+            current: Json::Null,
+            seed: 42,
+            workload: "paper".into(),
+        };
+        assert!(MultiSnapshot::from_json(&single.to_json())
+            .unwrap_err()
+            .contains("not a multi_service_snapshot"));
+
+        // Checkpoint arrays must cover every region.
+        let mut torn = snap.clone();
+        torn.current.pop();
+        assert!(MultiSnapshot::from_json(&torn.to_json()).unwrap_err().contains("current"));
+    }
+
+    #[test]
+    fn multi_journal_roundtrips_and_tolerates_a_torn_tail() {
+        let dir = std::env::temp_dir().join(format!("sptlb_multi_{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("journal.jsonl");
+        {
+            let mut f = fs::File::create(&path).unwrap();
+            append_multi_journal_round(&mut f, &[&events(), &[]]).unwrap();
+            append_multi_journal_round(&mut f, &[&[], &events()[..1]]).unwrap();
+            // Simulate a crash mid-append: a torn, unparseable tail.
+            write!(f, "[[{{\"kind\":\"demand_dr").unwrap();
+        }
+        let rounds = load_multi_journal(&path).unwrap().unwrap();
+        assert_eq!(rounds.len(), 2, "torn tail dropped");
+        assert_eq!(rounds[0], vec![events(), vec![]]);
+        assert_eq!(rounds[1][1], events()[..1]);
+        let err = load_multi_journal(&dir.join("missing.jsonl"));
+        assert!(err.is_err(), "missing file is an io error");
         fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -1,0 +1,237 @@
+//! The persistent channel fabric: a pool of long-lived worker threads,
+//! one per cell, driven by round barriers over bounded SPSC rings.
+//! This replaces the old spawn-per-round fan-out (`pool::par_map_mut`
+//! spawned and joined one OS thread per region every round): workers
+//! are spawned exactly once, own nothing between rounds, and receive
+//! their cell — the region's whole solver stack, boxed — *by value*
+//! through a command ring. Moving a `Box` is an 8-byte copy; the heap
+//! data behind it never moves, so each worker keeps its region's state
+//! hot in cache for the process lifetime while the coordinator retains
+//! full access to every cell between rounds (for the global planning
+//! phase, journaling, and snapshots).
+//!
+//! ```text
+//!   coordinator ──Run{cell,arg}──▶ cmd ring ──▶ worker i (parked)
+//!        ▲                                          │ f(&mut cell, arg)
+//!        └──── (cell, result) ◀── done ring ◀───────┘
+//! ```
+//!
+//! Round trip per worker per round: one ring push + unpark, one ring
+//! pop — no allocation, no thread spawn, no lock. Workers park after a
+//! short spin when idle, so an idle fabric costs nothing (and never
+//! starves the coordinator on small machines). [`Fabric::threads_spawned`]
+//! exposes the per-instance spawn count so tests can pin "no thread
+//! spawns after warm-up" directly.
+
+use crate::util::ring::Ring;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Total threads ever spawned by any fabric in this process
+/// (diagnostics; tests pin the per-instance counter instead).
+static TOTAL_SPAWNED: AtomicU64 = AtomicU64::new(0);
+
+/// Total fabric worker threads ever spawned process-wide.
+pub fn total_threads_spawned() -> u64 {
+    TOTAL_SPAWNED.load(Ordering::Relaxed)
+}
+
+enum Cmd<C, A> {
+    Run { cell: Box<C>, arg: A },
+    Stop,
+}
+
+struct Worker<C, A, R> {
+    cmd: Arc<Ring<Cmd<C, A>>>,
+    done: Arc<Ring<(Box<C>, R)>>,
+    thread: Option<JoinHandle<()>>,
+}
+
+/// A pool of persistent worker threads executing one shared function
+/// over by-value cells. `C` is the cell (moved to the worker and back
+/// each round), `A` the per-round argument, `R` the result frame.
+pub struct Fabric<C: Send + 'static, A: Send + 'static, R: Send + 'static> {
+    workers: Vec<Worker<C, A, R>>,
+    spawned: Arc<AtomicU64>,
+}
+
+/// Spins this many times on an empty command ring before parking.
+const IDLE_SPINS: u32 = 64;
+
+impl<C: Send + 'static, A: Send + 'static, R: Send + 'static> Fabric<C, A, R> {
+    /// Spawn `n` workers, all running `f`. The workers live until the
+    /// fabric is dropped; no further threads are ever spawned.
+    pub fn new(n: usize, f: impl Fn(&mut C, A) -> R + Send + Sync + 'static) -> Self {
+        assert!(n >= 1, "a fabric needs at least one worker");
+        let f: Arc<dyn Fn(&mut C, A) -> R + Send + Sync> = Arc::new(f);
+        let spawned = Arc::new(AtomicU64::new(0));
+        let workers = (0..n)
+            .map(|i| {
+                // Capacity 2: at most one in-flight Run plus one Stop.
+                let cmd: Arc<Ring<Cmd<C, A>>> = Arc::new(Ring::with_capacity(2));
+                let done: Arc<Ring<(Box<C>, R)>> = Arc::new(Ring::with_capacity(2));
+                let f = Arc::clone(&f);
+                let counter = Arc::clone(&spawned);
+                let (cmd_rx, done_tx) = (Arc::clone(&cmd), Arc::clone(&done));
+                let thread = std::thread::Builder::new()
+                    .name(format!("sptlb-fabric-{i}"))
+                    .spawn(move || {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                        TOTAL_SPAWNED.fetch_add(1, Ordering::Relaxed);
+                        let mut spins = 0u32;
+                        loop {
+                            match cmd_rx.try_pop() {
+                                Some(Cmd::Run { mut cell, arg }) => {
+                                    let result = f(&mut cell, arg);
+                                    // Capacity-2 ring with one in-flight
+                                    // round can never reject this push.
+                                    let _ = done_tx.try_push((cell, result));
+                                    spins = 0;
+                                }
+                                Some(Cmd::Stop) => break,
+                                None => {
+                                    spins += 1;
+                                    if spins < IDLE_SPINS {
+                                        std::hint::spin_loop();
+                                    } else {
+                                        // A missed unpark is bounded by the
+                                        // timeout; an early unpark just
+                                        // respins. Parking (not spinning)
+                                        // keeps idle workers off the CPU.
+                                        std::thread::park_timeout(
+                                            std::time::Duration::from_millis(1),
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawn fabric worker");
+                Worker { cmd, done, thread: Some(thread) }
+            })
+            .collect();
+        Self { workers, spawned }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Threads this fabric has spawned so far. Settles at
+    /// [`Fabric::n_workers`] once construction's spawns have started and
+    /// never changes again — the "no thread spawns after warm-up" pin.
+    pub fn threads_spawned(&self) -> u64 {
+        self.spawned.load(Ordering::Relaxed)
+    }
+
+    /// Hand worker `i` its cell and round argument. Non-blocking; the
+    /// matching [`Fabric::collect`] returns the cell with the result.
+    /// At most one round may be in flight per worker.
+    pub fn dispatch(&self, i: usize, cell: Box<C>, arg: A) {
+        let w = &self.workers[i];
+        if w.cmd.try_push(Cmd::Run { cell, arg }).is_err() {
+            panic!("fabric worker {i} already has a round in flight");
+        }
+        if let Some(t) = w.thread.as_ref() {
+            t.thread().unpark();
+        }
+    }
+
+    /// Wait for worker `i`'s round to finish and take back its cell and
+    /// result frame. Spins/yields — rounds are short and the caller is
+    /// the coordinator's barrier.
+    pub fn collect(&self, i: usize) -> (Box<C>, R) {
+        let w = &self.workers[i];
+        let mut spins = 0u32;
+        loop {
+            if let Some(out) = w.done.try_pop() {
+                return out;
+            }
+            spins += 1;
+            if spins < IDLE_SPINS {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+    }
+}
+
+impl<C: Send + 'static, A: Send + 'static, R: Send + 'static> Drop for Fabric<C, A, R> {
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            // A worker with a round still in flight drains it first; its
+            // cmd ring has a free slot for Stop either way.
+            let _ = w.cmd.try_push(Cmd::Stop);
+            if let Some(t) = w.thread.take() {
+                t.thread().unpark();
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounds_run_on_persistent_workers_and_cells_come_back() {
+        struct Cell {
+            id: usize,
+            total: u64,
+        }
+        let fabric: Fabric<Cell, u64, u64> = Fabric::new(3, |cell, arg| {
+            cell.total += arg;
+            cell.total
+        });
+        let mut cells: Vec<Option<Box<Cell>>> =
+            (0..3).map(|id| Some(Box::new(Cell { id, total: 0 }))).collect();
+        for round in 1..=5u64 {
+            for (i, slot) in cells.iter_mut().enumerate() {
+                fabric.dispatch(i, slot.take().unwrap(), round);
+            }
+            for (i, slot) in cells.iter_mut().enumerate() {
+                let (cell, result) = fabric.collect(i);
+                assert_eq!(cell.id, i, "each worker returns its own cell");
+                assert_eq!(result, cell.total);
+                *slot = Some(cell);
+            }
+        }
+        for slot in &cells {
+            assert_eq!(slot.as_ref().unwrap().total, 1 + 2 + 3 + 4 + 5);
+        }
+        assert_eq!(fabric.threads_spawned(), 3, "exactly one spawn per worker, ever");
+    }
+
+    #[test]
+    fn spawn_count_is_stable_across_many_rounds() {
+        let fabric: Fabric<u64, u64, u64> = Fabric::new(2, |cell, arg| {
+            *cell += arg;
+            *cell
+        });
+        let mut a = Some(Box::new(0u64));
+        let mut b = Some(Box::new(0u64));
+        // Let both workers start before pinning the count.
+        fabric.dispatch(0, a.take().unwrap(), 0);
+        fabric.dispatch(1, b.take().unwrap(), 0);
+        a = Some(fabric.collect(0).0);
+        b = Some(fabric.collect(1).0);
+        let warm = fabric.threads_spawned();
+        assert_eq!(warm, 2);
+        for round in 0..200u64 {
+            fabric.dispatch(0, a.take().unwrap(), round);
+            fabric.dispatch(1, b.take().unwrap(), round);
+            a = Some(fabric.collect(0).0);
+            b = Some(fabric.collect(1).0);
+        }
+        assert_eq!(fabric.threads_spawned(), warm, "no spawns after warm-up");
+    }
+
+    #[test]
+    fn drop_joins_workers_cleanly() {
+        let fabric: Fabric<(), (), ()> = Fabric::new(4, |_, _| {});
+        drop(fabric); // must not hang or leak threads
+    }
+}

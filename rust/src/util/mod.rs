@@ -2,10 +2,12 @@
 //! rand/serde/clap/tokio/criterion/proptest — see DESIGN.md §4).
 
 pub mod cli;
+pub mod fabric;
 pub mod json;
 pub mod logger;
 pub mod pool;
 pub mod prng;
 pub mod propcheck;
+pub mod ring;
 pub mod stats;
 pub mod timer;

@@ -102,33 +102,6 @@ pub fn par_map<T: Sync, R: Send>(items: &[T], chunks: usize, f: impl Fn(&T) -> R
     out.into_iter().map(|o| o.expect("par_map slot filled")).collect()
 }
 
-/// Parallel map over *mutable* items, one scoped thread per item —
-/// the multi-region coordinator's per-region round fan-out (regions are
-/// few and each owns an engine that must be `&mut`). Results are
-/// returned in input order; a panicking item propagates.
-pub fn par_map_mut<T: Send, R: Send>(
-    items: &mut [T],
-    f: impl Fn(usize, &mut T) -> R + Sync,
-) -> Vec<R> {
-    if items.len() <= 1 {
-        return items.iter_mut().enumerate().map(|(i, it)| f(i, it)).collect();
-    }
-    thread::scope(|s| {
-        let handles: Vec<_> = items
-            .iter_mut()
-            .enumerate()
-            .map(|(i, it)| {
-                let f = &f;
-                s.spawn(move || f(i, it))
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("par_map_mut worker panicked"))
-            .collect()
-    })
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,23 +161,5 @@ mod tests {
         let out = par_map(&items, 3, |&x| x + 1);
         assert_eq!(out.len(), 17);
         assert_eq!(out[16], 17);
-    }
-
-    #[test]
-    fn par_map_mut_mutates_and_preserves_order() {
-        let mut items: Vec<u64> = (0..9).collect();
-        let out = par_map_mut(&mut items, |i, x| {
-            *x += 100;
-            (i as u64, *x)
-        });
-        assert_eq!(items, (100..109).collect::<Vec<_>>());
-        for (i, (idx, v)) in out.iter().enumerate() {
-            assert_eq!(*idx, i as u64);
-            assert_eq!(*v, 100 + i as u64);
-        }
-        let mut single = vec![7u64];
-        assert_eq!(par_map_mut(&mut single, |_, x| *x * 2), vec![14]);
-        let mut empty: Vec<u64> = vec![];
-        assert!(par_map_mut(&mut empty, |_, x| *x).is_empty());
     }
 }

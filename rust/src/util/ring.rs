@@ -1,0 +1,169 @@
+//! Bounded, mutex-free MPMC ring buffer — the Vyukov sequence-counter
+//! design, generic over the element type. This is the one queue kernel
+//! behind the whole channel fabric: the ingest plane specializes it to
+//! `FleetEvent` ([`crate::service::IngestQueue`]) and the persistent
+//! region worker pool ([`crate::util::fabric`]) moves its round
+//! commands and result frames through it.
+//!
+//! No external crates: each slot carries an atomic sequence number that
+//! encodes whose turn it is (producer when `seq == pos`, consumer when
+//! `seq == pos + 1`), so push and pop synchronize through one
+//! acquire/release pair per transfer and never lock. Neither operation
+//! touches the allocator — elements move in and out by value — so the
+//! warm ingest round's zero-allocation contract extends through every
+//! ring in the fabric.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct Slot<T> {
+    /// Turn counter: `pos` ⇒ free for the producer claiming `pos`;
+    /// `pos + 1` ⇒ holds that producer's value, free for the consumer;
+    /// `pos + capacity` ⇒ recycled for the next lap.
+    seq: AtomicUsize,
+    value: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// Bounded lock-free multi-producer multi-consumer ring.
+pub struct Ring<T> {
+    slots: Box<[Slot<T>]>,
+    mask: usize,
+    push_pos: AtomicUsize,
+    pop_pos: AtomicUsize,
+}
+
+// The UnsafeCell contents are handed off with release/acquire ordering
+// on the slot sequence; a slot is only ever touched by the thread whose
+// claimed position matches the sequence.
+unsafe impl<T: Send> Send for Ring<T> {}
+unsafe impl<T: Send> Sync for Ring<T> {}
+
+impl<T> Ring<T> {
+    /// A ring holding at least `capacity` elements (rounded up to the
+    /// next power of two, minimum 2).
+    pub fn with_capacity(capacity: usize) -> Self {
+        let cap = capacity.max(2).next_power_of_two();
+        let slots: Box<[Slot<T>]> = (0..cap)
+            .map(|i| Slot {
+                seq: AtomicUsize::new(i),
+                value: UnsafeCell::new(MaybeUninit::uninit()),
+            })
+            .collect();
+        Self {
+            slots,
+            mask: cap - 1,
+            push_pos: AtomicUsize::new(0),
+            pop_pos: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Approximate occupancy (exact when no push/pop races the read).
+    pub fn len(&self) -> usize {
+        let push = self.push_pos.load(Ordering::Relaxed);
+        let pop = self.pop_pos.load(Ordering::Relaxed);
+        push.saturating_sub(pop)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue without blocking. On a full ring the value is handed
+    /// back untouched so the caller's backpressure policy (shed or
+    /// block-and-retry) owns it.
+    pub fn try_push(&self, value: T) -> Result<(), T> {
+        let mut pos = self.push_pos.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - pos as isize;
+            if diff == 0 {
+                match self.push_pos.compare_exchange_weak(
+                    pos,
+                    pos + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        unsafe { (*slot.value.get()).write(value) };
+                        slot.seq.store(pos + 1, Ordering::Release);
+                        return Ok(());
+                    }
+                    Err(current) => pos = current,
+                }
+            } else if diff < 0 {
+                // The slot is still occupied by a value from the
+                // previous lap: the ring is full.
+                return Err(value);
+            } else {
+                pos = self.push_pos.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Dequeue without blocking; `None` when the ring is empty.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut pos = self.pop_pos.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - (pos + 1) as isize;
+            if diff == 0 {
+                match self.pop_pos.compare_exchange_weak(
+                    pos,
+                    pos + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        let value = unsafe { (*slot.value.get()).assume_init_read() };
+                        slot.seq.store(pos + self.mask + 1, Ordering::Release);
+                        return Some(value);
+                    }
+                    Err(current) => pos = current,
+                }
+            } else if diff < 0 {
+                return None;
+            } else {
+                pos = self.pop_pos.load(Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+impl<T> Drop for Ring<T> {
+    fn drop(&mut self) {
+        // Elements may own heap (arrival names, boxed worker cells);
+        // drain what was never consumed.
+        while self.try_pop().is_some() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generic_ring_moves_owned_values() {
+        let ring: Ring<Box<u64>> = Ring::with_capacity(4);
+        ring.try_push(Box::new(7)).unwrap();
+        ring.try_push(Box::new(9)).unwrap();
+        assert_eq!(*ring.try_pop().unwrap(), 7);
+        assert_eq!(*ring.try_pop().unwrap(), 9);
+        assert!(ring.try_pop().is_none());
+    }
+
+    #[test]
+    fn drop_releases_unconsumed_owned_values() {
+        let ring: Ring<String> = Ring::with_capacity(8);
+        for i in 0..5 {
+            ring.try_push(format!("value-{i}")).unwrap();
+        }
+        drop(ring); // must not leak the five undelivered strings
+    }
+}

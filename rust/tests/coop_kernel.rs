@@ -271,7 +271,7 @@ fn golden_equivalence_workers_by_regions_with_kernel_in_the_loop() {
         let mut c = MultiRegionCoordinator::new(cfg, bed);
         match events {
             None => c.run(4),
-            Some(ev) => c.run_events(ev),
+            Some(ev) => c.run_events(ev.clone()),
         }
         c
     };

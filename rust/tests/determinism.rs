@@ -154,10 +154,11 @@ fn region_tagged_event_log_replay_is_worker_count_invariant() {
         base.run(5);
         for workers in [2usize, 8] {
             let mut replay = make(workers);
-            replay.run_events(&base.event_log);
+            replay.run_events(base.event_log.clone());
             // (Comparing replay.event_log to the input would be
-            // tautological — run_events stores clones of its input; the
-            // decision fields below are the real divergence detectors.)
+            // tautological — run_events re-logs the rounds it was fed;
+            // the decision fields below are the real divergence
+            // detectors.)
             assert_eq!(replay.log.len(), base.log.len());
             for (a, b) in base.log.iter().zip(&replay.log) {
                 for (r, (ra, rb)) in a.records.iter().zip(&b.records).enumerate() {
@@ -227,7 +228,7 @@ fn traces_are_bit_identical_across_worker_counts_and_nonperturbing() {
         let mut live = make(1);
         live.run(5);
         let mut control = make(1);
-        control.run_events(&live.event_log);
+        control.run_events(live.event_log.clone());
 
         let mut base_trace: Option<Vec<u8>> = None;
         for workers in [1usize, 2, 8] {
@@ -239,7 +240,7 @@ fn traces_are_bit_identical_across_worker_counts_and_nonperturbing() {
             traced.attach_obs(
                 ObsHub::new(TraceLevel::Decisions, Some(path.as_path())).unwrap(),
             );
-            traced.run_events(&live.event_log);
+            traced.run_events(live.event_log.clone());
 
             assert_eq!(traced.log.len(), control.log.len());
             for (a, b) in control.log.iter().zip(&traced.log) {

@@ -1,0 +1,157 @@
+//! Multi-region extension of the ingest zero-allocation contract: a
+//! warm drift-only *multi-region* round — per-region producer submit,
+//! fabric dispatch, per-region drain + admission + journal append +
+//! fast-path solve on the pinned workers, `Copy` summary frames back,
+//! metric folds — must not touch the global allocator, and must never
+//! spawn a thread after warm-up. This covers the full
+//! `serve --ingest --regions N` steady-state loop on top of the
+//! single-region window in tests/ingest_zero_alloc.rs.
+//!
+//! Same gated counting allocator; one `#[test]` in this binary so no
+//! parallel test bleeds allocations into the counting window. The
+//! global policy is `none` so warm rounds stay migration-free (a staged
+//! migration is an arrival, which rightly takes the allocating full
+//! path).
+
+use sptlb::model::FleetEvent;
+use sptlb::service::{MultiRegionService, ServiceConfig};
+use sptlb::util::prng::Pcg64;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Duration;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static COUNTING: AtomicBool = AtomicBool::new(false);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+const REGIONS: usize = 3;
+const WARM_ROUNDS: usize = 3;
+const MEASURED_ROUNDS: usize = 5;
+const BATCH: usize = 16;
+
+#[test]
+fn warm_multi_region_ingest_rounds_do_not_allocate() {
+    let config = ServiceConfig::builder()
+        .workload("small")
+        .events("drift")
+        .variant("no_cnst")
+        .timeout(Duration::from_millis(20))
+        .batch_budget(Duration::from_millis(1))
+        .max_batch(BATCH)
+        .queue_capacity(64)
+        .regions(REGIONS)
+        .global_policy("none".to_string())
+        .build()
+        .unwrap();
+    let mut service = MultiRegionService::new(config);
+    let handle = service.handle();
+
+    // Every per-(round, region) batch is pre-generated outside the
+    // counting window; drift events carry only Copy payloads (AppId +
+    // fixed ResourceVec array), so moving them through the per-region
+    // queues is allocation-free by type.
+    let mut rng = Pcg64::new(0x16E57);
+    let batches: Vec<Vec<Vec<FleetEvent>>> = (0..1 + WARM_ROUNDS + MEASURED_ROUNDS)
+        .map(|_| {
+            (0..REGIONS)
+                .map(|r| {
+                    (0..BATCH)
+                        .map(|_| {
+                            let apps = service.region_fleet(r).apps();
+                            let app = &apps[rng.range(0, apps.len())];
+                            FleetEvent::DemandDrift {
+                                app: app.id,
+                                demand: app.demand * (0.9 + rng.range(0, 21) as f64 / 100.0),
+                            }
+                        })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut batches = batches.into_iter();
+    // Round 0 primes every region's engine (full path) and spawns the
+    // fabric; warm rounds settle the fast path and every pre-reserved
+    // buffer.
+    for round in batches.by_ref().take(1 + WARM_ROUNDS) {
+        for (r, batch) in round.into_iter().enumerate() {
+            for ev in batch {
+                assert!(handle.submit(r, ev));
+            }
+        }
+        service.ingest_round().expect("queued events produce a round");
+    }
+    assert_eq!(service.metrics.ingest.fast_rounds as usize, REGIONS * WARM_ROUNDS);
+    let warm_spawns = service.fabric_threads_spawned();
+    assert_eq!(warm_spawns, REGIONS as u64, "one pinned worker per region");
+
+    ALLOCS.store(0, Ordering::Relaxed);
+    COUNTING.store(true, Ordering::Relaxed);
+    for round in batches {
+        for (r, batch) in round.into_iter().enumerate() {
+            for ev in batch {
+                handle.submit(r, ev);
+            }
+        }
+        service.ingest_round().expect("queued events produce a round");
+    }
+    COUNTING.store(false, Ordering::Relaxed);
+    let steady = ALLOCS.load(Ordering::Relaxed);
+
+    assert_eq!(
+        service.fabric_threads_spawned(),
+        warm_spawns,
+        "no thread spawns after warm-up"
+    );
+    assert_eq!(
+        service.metrics.ingest.fast_rounds as usize,
+        REGIONS * (WARM_ROUNDS + MEASURED_ROUNDS),
+        "every warm drift round must take the fast path in every region"
+    );
+    if cfg!(debug_assertions) {
+        // Debug builds allocate inside the engine's loads-equivalence
+        // debug_assert (see tests/zero_alloc.rs), once per region per
+        // round; allow that and nothing more.
+        assert!(
+            steady <= (4 * REGIONS * MEASURED_ROUNDS) as u64,
+            "debug ingest rounds allocated {steady} times over {MEASURED_ROUNDS} rounds"
+        );
+    } else {
+        assert_eq!(
+            steady, 0,
+            "warm multi-region rounds must be allocation-free (got {steady} over {MEASURED_ROUNDS} rounds)"
+        );
+    }
+}

@@ -303,7 +303,7 @@ fn replaying_the_region_tagged_journal_reproduces_decisions() {
     assert_eq!(journal, live.event_log, "JSON roundtrip preserves the journal");
 
     let mut replay = make();
-    replay.run_events(&journal);
+    replay.run_events(journal);
     for (a, b) in live.log.iter().zip(&replay.log) {
         for (ra, rb) in a.records.iter().zip(&b.records) {
             assert_eq!(ra.score.to_bits(), rb.score.to_bits(), "round {}", a.round);
